@@ -1,0 +1,86 @@
+//! Figure 7 companion: measure the accuracy-vs-latency point of EVERY
+//! exported variant of a dataset and print the Pareto table the router's
+//! SLA policy operates on. (The paper-formatted bench lives in
+//! `cargo bench --bench fig7`; this example is the interactive version.)
+//!
+//!   cargo run --release --example pareto_sweep -- --dataset cola
+
+use powerbert::bench::{fmt_time, BenchConfig, Table, time_fn};
+use powerbert::eval::Metric;
+use powerbert::runtime::{default_root, Engine, Registry, TestSplit};
+use powerbert::util::cli::Args;
+
+fn main() {
+    powerbert::util::log::init();
+    let args = Args::new("pareto_sweep", "accuracy vs latency for all variants")
+        .opt("dataset", Some("sst2"), "dataset to sweep")
+        .opt("batch", Some("32"), "inference batch size")
+        .parse()
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2)
+        });
+    let dataset = args.get("dataset").unwrap_or("sst2");
+    let batch = args.get_usize("batch").unwrap_or(32);
+
+    let registry = Registry::scan(&default_root()).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1)
+    });
+    let Some(ds) = registry.dataset(dataset) else {
+        eprintln!("no artifacts for {dataset}");
+        std::process::exit(1)
+    };
+    let split = TestSplit::load(&ds.test_npz()).expect("test split");
+    let mut engine = Engine::new().expect("pjrt");
+    let cfg = BenchConfig::from_env();
+
+    let mut table = Table::new(
+        &format!("{dataset}: accuracy vs inference time (batch {batch})"),
+        &["variant", "kind", "metric", "batch latency", "ex/s", "agg word-vectors"],
+    );
+    for (vname, meta) in &ds.variants {
+        if vname.ends_with("-debug") {
+            continue;
+        }
+        let model = match engine.load(meta) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("skip {vname}: {e}");
+                continue;
+            }
+        };
+        let seq = split.seq_len;
+        let n = batch.min(split.n);
+        let toks = &split.tokens[..n * seq];
+        let segs = &split.segments[..n * seq];
+        let s = time_fn(&cfg, || {
+            model.infer(toks, segs, n).expect("infer");
+        });
+        // Full-split metric.
+        let metric = Metric::parse(&meta.metric).unwrap_or(Metric::Accuracy);
+        let mut outputs = Vec::new();
+        let mut nc = meta.num_classes;
+        let mut i = 0;
+        while i < split.n {
+            let m = batch.min(split.n - i);
+            let l = model
+                .infer(&split.tokens[i * seq..(i + m) * seq], &split.segments[i * seq..(i + m) * seq], m)
+                .unwrap();
+            nc = l.num_classes;
+            outputs.extend_from_slice(&l.values);
+            i += m;
+        }
+        let mv = metric.compute(&outputs, nc, &split.labels);
+        table.row(vec![
+            vname.clone(),
+            meta.kind.clone(),
+            format!("{mv:.4}"),
+            fmt_time(s.p50),
+            format!("{:.0}", n as f64 / s.p50),
+            meta.aggregate_word_vectors().to_string(),
+        ]);
+    }
+    table.print();
+    println!("top-left of the paper's Figure 7 = high metric + low latency.");
+}

@@ -1,0 +1,85 @@
+//! Quickstart: start the coordinator over the AOT artifacts, classify a few
+//! sentences of the synthetic language, and show what PoWER-BERT eliminated.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (at minimum the sst2 dataset).
+
+use powerbert::coordinator::{Config, Coordinator, Input, Policy, Sla};
+use powerbert::workload::WorkloadGen;
+
+fn main() {
+    powerbert::util::log::init();
+    let cfg = Config {
+        datasets: vec!["sst2".into()],
+        policy: Policy::FastestAboveMetric,
+        ..Config::default()
+    };
+    let coordinator = match Coordinator::start(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\nhint: run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+
+    println!("== dataset stats (Table 1 analog) ==");
+    for meta in coordinator.router().variants("sst2") {
+        println!(
+            "  sst2/{:<20} N={} classes={} aggregate word-vectors={}{}",
+            meta.variant,
+            meta.seq_len,
+            meta.num_classes,
+            meta.aggregate_word_vectors(),
+            meta.retention
+                .as_ref()
+                .map(|r| format!("  retention={r:?}"))
+                .unwrap_or_default()
+        );
+    }
+
+    let vocab = coordinator.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 42);
+    println!("\n== classification under the default SLA (fastest within 1% of baseline) ==");
+    let mut correct = 0;
+    let n = 16;
+    for i in 0..n {
+        let (text, label) = gen.sentence(18);
+        let resp = coordinator
+            .classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default())
+            .expect("classify");
+        let ok = resp.label == label;
+        correct += ok as usize;
+        if i < 5 {
+            println!(
+                "  [{}] {:<60} -> {} (truth {}) via {} in {}us",
+                if ok { "ok" } else { "XX" },
+                text.chars().take(60).collect::<String>(),
+                resp.label,
+                label,
+                resp.variant,
+                resp.total_us
+            );
+        }
+    }
+    println!("  accuracy on fresh synthetic inputs: {correct}/{n}");
+
+    println!("\n== explicit variant pinning (the paper's Table 2 comparison) ==");
+    for variant in ["bert", "power-default"] {
+        let (text, _) = gen.sentence(18);
+        match coordinator.classify(
+            "sst2",
+            Input::Text { a: text, b: None },
+            Sla { variant: Some(variant.into()), ..Default::default() },
+        ) {
+            Ok(r) => println!(
+                "  {variant:<15} label={} exec={}us batch={}",
+                r.label, r.exec_us, r.batch_size
+            ),
+            Err(e) => println!("  {variant:<15} error: {e}"),
+        }
+    }
+
+    println!("\n== coordinator metrics ==");
+    print!("{}", coordinator.metrics().report());
+}

@@ -1,0 +1,139 @@
+//! End-to-end serving driver (the repo's E2E validation workload): starts
+//! the full coordinator stack, replays an open-loop Poisson workload
+//! against it at several request rates, and reports latency/throughput for
+//! baseline BERT vs PoWER-BERT serving — the paper's inference-time claim
+//! measured through the entire L3 path (tokenize -> route -> batch ->
+//! PJRT execute), not just the kernel.
+//!
+//!   cargo run --release --example serve_benchmark [-- --rate 200 --secs 10]
+//!
+//! The run recorded in EXPERIMENTS.md §E2E uses the defaults.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
+use powerbert::util::cli::Args;
+use powerbert::util::stats::Summary;
+use powerbert::workload::WorkloadGen;
+
+fn main() {
+    powerbert::util::log::init();
+    let args = Args::new("serve_benchmark", "open-loop serving benchmark")
+        .opt("rate", Some("150"), "request rate per second")
+        .opt("secs", Some("8"), "measurement duration per variant")
+        .opt("dataset", Some("sst2"), "dataset to serve")
+        .parse()
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2)
+        });
+    let rate: f64 = args.get_f64("rate").unwrap_or(150.0);
+    let secs: f64 = args.get_f64("secs").unwrap_or(8.0);
+    let dataset = args.get("dataset").unwrap_or("sst2").to_string();
+
+    let coordinator = Coordinator::start(Config {
+        datasets: vec![dataset.clone()],
+        policy: Policy::BestUnderLatency,
+        batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(4) },
+        ..Config::default()
+    })
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}\nhint: run `make artifacts`");
+        std::process::exit(1)
+    });
+
+    let variants: Vec<String> = coordinator
+        .router()
+        .variants(&dataset)
+        .into_iter()
+        .filter(|m| m.variant == "bert" || m.variant == "power-default")
+        .map(|m| m.variant.clone())
+        .collect();
+
+    println!("open-loop Poisson load: {rate} req/s for {secs}s per variant\n");
+    let mut rows = Vec::new();
+    for variant in &variants {
+        let client = coordinator.client();
+        let vocab = client.tokenizer().vocab.clone();
+        let mut gen = WorkloadGen::new(&vocab, 99);
+        // Warm the variant (lazy compile) outside the measurement window.
+        let (wtext, _) = gen.sentence(18);
+        let _ = client.classify(
+            &dataset,
+            Input::Text { a: wtext, b: None },
+            Sla { variant: Some(variant.clone()), ..Default::default() },
+        );
+        let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+        let shed = Arc::new(AtomicUsize::new(0));
+        let correct = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+
+        let t0 = Instant::now();
+        let mut sent = 0usize;
+        let mut waiters = Vec::new();
+        while t0.elapsed().as_secs_f64() < secs {
+            let (text, label) = gen.sentence(18);
+            let sla = Sla { variant: Some(variant.clone()), ..Default::default() };
+            let submit_t = Instant::now();
+            match client.submit(&dataset, Input::Text { a: text, b: None }, sla) {
+                Ok(rx) => {
+                    sent += 1;
+                    let latencies = latencies.clone();
+                    let correct = correct.clone();
+                    let done = done.clone();
+                    waiters.push(std::thread::spawn(move || {
+                        if let Ok(Ok(resp)) = rx.recv() {
+                            latencies
+                                .lock()
+                                .unwrap()
+                                .push(submit_t.elapsed().as_secs_f64() * 1e3);
+                            if resp.label == label {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }));
+                }
+                Err(_) => {
+                    shed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            std::thread::sleep(gen.arrival_gap(rate));
+        }
+        for w in waiters {
+            let _ = w.join();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let lat = latencies.lock().unwrap();
+        let s = Summary::of(&lat);
+        let n_done = done.load(Ordering::Relaxed);
+        rows.push((
+            variant.clone(),
+            n_done as f64 / wall,
+            s.clone(),
+            shed.load(Ordering::Relaxed),
+            correct.load(Ordering::Relaxed) as f64 / n_done.max(1) as f64,
+        ));
+        println!(
+            "{variant:<15} sent={sent} done={n_done} shed={} tput={:.1} req/s  \
+             lat p50/p90/p99 = {:.1}/{:.1}/{:.1} ms  acc={:.3}",
+            shed.load(Ordering::Relaxed),
+            n_done as f64 / wall,
+            s.p50,
+            s.p90,
+            s.p99,
+            correct.load(Ordering::Relaxed) as f64 / n_done.max(1) as f64,
+        );
+    }
+
+    if rows.len() == 2 {
+        let speedup = rows[0].2.p50 / rows[1].2.p50;
+        println!(
+            "\nPoWER-BERT p50 latency speedup over BERT at {rate} req/s: {:.2}x",
+            speedup
+        );
+    }
+    println!("\ncoordinator internals:\n{}", coordinator.metrics().report());
+}

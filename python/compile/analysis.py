@@ -1,0 +1,249 @@
+"""Analysis experiments from the paper that live on the Python side:
+
+* Figure 2 — mean pairwise cosine similarity of word-vectors per encoder
+  (diffusion of information).
+* Figure 5 — mutual information between the baseline model's predictions and
+  a model that eliminates the k-th-highest-scored word at encoder j.
+* §3.1 CLS study — accuracy when classifying from a non-CLS position.
+* Figure 8 — anecdotal progressive-elimination traces (which words survive
+  at each encoder) — the data is also exported for examples/anecdotes.rs.
+
+Each writes a small JSON report under artifacts/analysis/ that EXPERIMENTS.md
+and the Rust examples consume.
+
+Run:  python -m compile.analysis --fig2 --fig5 --cls-study --anecdotes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import layers as L
+from . import model as M
+from . import train as T
+from .config import TASKS, BertConfig, get_profile
+from .params_io import load_params
+from .tokenizer import Tokenizer, Vocab
+
+
+def cosine_similarity_by_encoder(params, cfg: BertConfig, tokens, segs,
+                                 batch_size: int = 32) -> List[float]:
+    """Figure 2: for each encoder, the cosine similarity between all pairs of
+    its output word-vectors, averaged over pairs and inputs (valid positions
+    only — PAD vectors would inflate the similarity)."""
+    fwd = M.make_forward(cfg, use_pallas=False, collect=True)
+    sums = np.zeros(cfg.num_layers)
+    counts = np.zeros(cfg.num_layers)
+    fwd_j = jax.jit(lambda p, t, s: fwd(p, t, s)[1]["hidden"])
+    for i in range(0, tokens.shape[0] - batch_size + 1, batch_size):
+        tok = tokens[i : i + batch_size]
+        sg = segs[i : i + batch_size]
+        hidden = fwd_j(params, tok, sg)
+        mask = (tok != 0)
+        for j, h in enumerate(hidden):              # h: [B, N, H]
+            h = np.asarray(h)
+            norm = h / (np.linalg.norm(h, axis=-1, keepdims=True) + 1e-8)
+            gram = norm @ norm.transpose(0, 2, 1)   # [B, N, N]
+            m = mask.astype(np.float64)
+            pair_mask = m[:, :, None] * m[:, None, :]
+            np.einsum("bii->bi", pair_mask)[:] = 0.0  # exclude self-pairs
+            sums[j] += float((gram * pair_mask).sum())
+            counts[j] += float(pair_mask.sum())
+    return list(sums / np.maximum(counts, 1.0))
+
+
+def mutual_information(px_y: np.ndarray) -> float:
+    """MI from a joint-count table (natural log, as in the paper)."""
+    p = px_y / px_y.sum()
+    px = p.sum(axis=1, keepdims=True)
+    py = p.sum(axis=0, keepdims=True)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = p * np.log(p / (px * py))
+    return float(np.nansum(t))
+
+
+def mi_single_elimination(params, cfg: BertConfig, tokens, segs,
+                          encoders: Sequence[int], ks: Sequence[int],
+                          batch_size: int = 32) -> Dict[str, Dict[str, float]]:
+    """Figure 5: MI(X; Y_k) where X = baseline predictions and Y_k =
+    predictions of a model that eliminates only the k-th-highest-scored
+    word-vector at encoder j (CLS excluded from elimination)."""
+    base_fwd = M.make_forward(cfg, use_pallas=False)
+    base_pred = T.predict_all(base_fwd, params, tokens, segs, batch_size).argmax(-1)
+    n = tokens.shape[1]
+    results: Dict[str, Dict[str, float]] = {}
+    for j in encoders:
+        row: Dict[str, float] = {}
+        for k in ks:
+            if k >= n:
+                continue
+            # Retention config: full everywhere except encoder j, where we
+            # keep all but one; the eliminated one is the k-th by score.
+            # Implemented via a dedicated forward below.
+            pred = _predict_eliminate_one(params, cfg, tokens, segs, j, k, batch_size)
+            joint = np.zeros((cfg.num_classes, cfg.num_classes))
+            for a, b in zip(base_pred, pred):
+                joint[int(a), int(b)] += 1
+            row[str(k)] = mutual_information(joint)
+        results[str(j)] = row
+    return results
+
+
+def _predict_eliminate_one(params, cfg, tokens, segs, enc_j, k, batch_size):
+    """Forward that removes exactly the k-th-highest-scored word-vector
+    (k is 0-based among non-CLS positions) at encoder ``enc_j``."""
+    from .kernels import get_kernels
+    kernels = get_kernels(False)
+
+    def one(tok, sg):
+        mask = (tok != 0).astype(jnp.float32)
+        x = L.embed(params, cfg, tok, sg)
+        for j in range(cfg.num_layers):
+            layer = L.layer_at(params, cfg, j)
+            x1, sig = L.attn_half(layer, cfg, kernels, x, mask)
+            if j == enc_j:
+                scores = M.selection_scores(sig, mask)
+                n_cur = x1.shape[0]
+                # Keep everything except the word with the (k+1)-th highest
+                # score (order[0] is CLS, pinned, never the victim).
+                _, order = jax.lax.top_k(scores, n_cur)
+                idx = jnp.sort(jnp.concatenate([order[: k + 1], order[k + 2 :]]))
+                x1 = x1[idx]
+                mask = mask[idx]
+            x = L.ffn_half(layer, cfg, kernels, x1)
+        return L.pool_and_classify(params, cfg, kernels, x)
+
+    fwd = jax.jit(jax.vmap(one))
+    outs = []
+    nb = tokens.shape[0] // batch_size
+    for i in range(nb):
+        o = np.asarray(fwd(tokens[i * batch_size : (i + 1) * batch_size],
+                           segs[i * batch_size : (i + 1) * batch_size]))
+        outs.append(o)
+    return np.concatenate(outs).argmax(-1)
+
+
+def cls_position_study(params, cfg: BertConfig, tokens, segs, labels,
+                       metric: str, positions: Sequence[int]) -> Dict[str, float]:
+    """§3.1: classify from word position p instead of CLS (no retraining of
+    the encoder stack; the pooler/head simply reads position p)."""
+    from .kernels import get_kernels
+    kernels = get_kernels(False)
+
+    def make(pos):
+        def one(tok, sg):
+            mask = (tok != 0).astype(jnp.float32)
+            x = L.embed(params, cfg, tok, sg)
+            for j in range(cfg.num_layers):
+                layer = L.layer_at(params, cfg, j)
+                x1, _ = L.attn_half(layer, cfg, kernels, x, mask)
+                x = L.ffn_half(layer, cfg, kernels, x1)
+            xn = kernels.layernorm_residual(x, jnp.zeros_like(x),
+                                            params["final_ln"]["g"],
+                                            params["final_ln"]["b"], cfg.ln_eps)
+            pooled = jnp.tanh(xn[pos] @ params["pooler"]["w"] + params["pooler"]["b"])
+            return pooled @ params["head"]["w"] + params["head"]["b"]
+        return lambda p, t, s: (jax.vmap(one)(t, s), None)
+
+    import dataclasses
+    task = dataclasses.replace(TASKS["sst2"], metric=metric)
+    out = {}
+    for pos in positions:
+        out[str(pos)] = T.evaluate(make(pos), params, (tokens, segs, labels), task)
+    return out
+
+
+def anecdote_traces(params, cfg: BertConfig, vocab: Vocab, retention,
+                    sentences: List[List[str]], seq_len: int) -> List[Dict]:
+    """Figure 8: per-encoder surviving words for hand-picked sentences."""
+    tok = Tokenizer(vocab)
+    fwd = M.make_forward(cfg, retention=retention, use_pallas=False, collect=True)
+    out = []
+    for words in sentences:
+        ids, sg = tok.encode(words, None, seq_len)
+        logits, aux = jax.jit(fwd)(params,
+                                   jnp.asarray([ids], jnp.int32),
+                                   jnp.asarray([sg], jnp.int32))
+        trace = []
+        for j, kept in enumerate(aux["kept"]):
+            positions = [int(p) for p in np.asarray(kept)[0]]
+            toks = [vocab.words[ids[p]] if ids[p] < len(vocab.words) else "?" for p in positions]
+            trace.append({"encoder": j + 1, "positions": positions, "tokens": toks})
+        out.append({
+            "sentence": words,
+            "prediction": int(np.asarray(logits).argmax()),
+            "trace": trace,
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", default="full")
+    ap.add_argument("--dataset", default="sst2")
+    ap.add_argument("--fig2", action="store_true")
+    ap.add_argument("--fig5", action="store_true")
+    ap.add_argument("--cls-study", action="store_true")
+    ap.add_argument("--anecdotes", action="store_true")
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--checkpoints", default="../checkpoints")
+    args = ap.parse_args()
+
+    prof = get_profile(args.profile)
+    cfg = prof.bert
+    task = TASKS[args.dataset]
+    import dataclasses
+    cfg = dataclasses.replace(cfg, num_classes=task.num_classes, max_len=max(cfg.max_len, task.seq_len))
+    vocab = Vocab.load(os.path.join(args.artifacts, "vocab.json"))
+    params = load_params(os.path.join(args.checkpoints, args.dataset, "bert.npz"))
+    tokens, segs, labels = D.generate(task, vocab, "test")
+    os.makedirs(os.path.join(args.artifacts, "analysis"), exist_ok=True)
+
+    def dump(name, obj):
+        path = os.path.join(args.artifacts, "analysis", name)
+        with open(path, "w") as f:
+            json.dump(obj, f, indent=1)
+        print(f"wrote {path}")
+
+    if args.fig2:
+        cos = cosine_similarity_by_encoder(params, cfg, tokens, segs)
+        dump("fig2_cosine.json", {"dataset": args.dataset, "cosine_by_encoder": cos})
+    if args.fig5:
+        L_ = cfg.num_layers
+        encoders = sorted(set([0, L_ // 4, L_ // 2, 3 * L_ // 4]))
+        ks = [0, 1, 2, 4, 8, 12, 16, 24, 30]
+        mi = mi_single_elimination(params, cfg, tokens[:256], segs[:256], encoders, ks)
+        dump("fig5_mutual_information.json",
+             {"dataset": args.dataset, "mi": mi,
+              "note": "encoders are 0-based; paper plots j=1,3,6,9 of 12"})
+    if args.cls_study:
+        res = cls_position_study(params, cfg, tokens, segs, labels, task.metric,
+                                 positions=[0, 1, 2, 4, 8, 12])
+        dump("cls_position_study.json", {"dataset": args.dataset, "metric_by_position": res})
+    if args.anecdotes:
+        meta_p = os.path.join(args.artifacts, args.dataset, "power-default", "meta.json")
+        with open(meta_p) as f:
+            retention = json.load(f)["retention"]
+        power = load_params(os.path.join(args.checkpoints, args.dataset, "power-default.npz"))
+        sentences = [
+            "filler_1 pos_3 filler_7 intens_0 pos_5 filler_2 neg_1 pos_8 filler_9".split(),
+            "filler_4 negation_0 pos_2 filler_3 neg_6 filler_8 neg_2 filler_5".split(),
+        ]
+        traces = anecdote_traces(power, cfg, vocab, retention, sentences, task.seq_len)
+        dump("fig8_anecdotes.json", {"dataset": args.dataset, "examples": traces})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""AOT export: lower inference graphs to HLO *text* + weights.npz + meta.json.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifact layout per (dataset, variant):
+    model.b{B}.hlo.txt   one compiled graph per batch size B
+    weights.npz          named parameter arrays
+    meta.json            kind, shapes, param order, retention config, metrics
+
+Graph signature (the Rust runtime contract):
+    parameters: (tokens i32[B,N], segs i32[B,N], w_0, ..., w_k)
+    result:     1-tuple (logits f32[B,C])
+and for debug variants a 2-tuple (logits, kept_positions i32[B,L,topN]).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import BertConfig
+from .params_io import flatten_params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassignment-safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_infer_fn(fwd: Callable, params, batch: int, seq_len: int,
+                   extra_outputs: bool = False) -> str:
+    """Lower ``fwd(params, tokens, segs)`` to HLO text with weights as
+    parameters (tokens/segs first, then the flattened weights)."""
+    named = flatten_params(params)
+    names = [n for n, _ in named]
+    arrs = [a for _, a in named]
+
+    import jax.tree_util as jtu
+    # Rebuild the params pytree inside the traced fn from the flat list so
+    # the lowered module's parameters are exactly [tokens, segs, *weights].
+    treedef = jtu.tree_structure(params)
+    flat_ref, _ = jtu.tree_flatten(params)
+    # flatten_params sorts dict keys — jax's tree_flatten also sorts dict
+    # keys, and list order is preserved by both, so the orders agree; assert.
+    assert len(flat_ref) == len(arrs)
+    for a, b in zip(flat_ref, arrs):
+        assert a.shape == b.shape, "param order mismatch between flatteners"
+
+    def infer(tokens, segs, *weights):
+        p = jtu.tree_unflatten(treedef, list(weights))
+        logits, aux = fwd(p, tokens, segs)
+        if extra_outputs:
+            # Per-encoder surviving original positions (Figure 8 trace),
+            # right-padded with -1 to the full N so the output is rectangular.
+            padded = [
+                jnp.pad(k, ((0, 0), (0, seq_len - k.shape[1])), constant_values=-1)
+                for k in aux["kept"]
+            ]
+            kept = jnp.stack(padded, axis=1).astype(jnp.int32)  # [B, L, N]
+            return (logits, kept)
+        return (logits,)
+
+    specs = [
+        jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+    ] + [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrs]
+    lowered = jax.jit(infer).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def export_variant(out_dir: str, fwd: Callable, params, cfg: BertConfig,
+                   seq_len: int, batch_sizes: Sequence[int],
+                   meta: Dict) -> Dict:
+    """Writes the full artifact for one model variant; returns its meta."""
+    os.makedirs(out_dir, exist_ok=True)
+    named = flatten_params(params)
+    np.savez(os.path.join(out_dir, "weights.npz"),
+             **{n: a for n, a in named})
+    hlo_files = {}
+    for b in batch_sizes:
+        text = lower_infer_fn(fwd, params, b, seq_len)
+        fname = f"model.b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        hlo_files[str(b)] = fname
+    meta = dict(meta)
+    meta.update({
+        "seq_len": seq_len,
+        "batch_sizes": list(batch_sizes),
+        "hlo": hlo_files,
+        "weights": "weights.npz",
+        "param_order": [n for n, _ in named],
+        "hidden_size": cfg.hidden_size,
+        "num_layers": cfg.num_layers,
+        "num_heads": cfg.num_heads,
+        "num_classes": cfg.num_classes,
+    })
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def export_test_split(out_dir: str, tokens: np.ndarray, segs: np.ndarray,
+                      labels: np.ndarray) -> None:
+    """Test split consumed by the Rust eval/bench side (Literal::read_npz)."""
+    os.makedirs(out_dir, exist_ok=True)
+    np.savez(os.path.join(out_dir, "test.npz"),
+             tokens=tokens.astype(np.int32),
+             segs=segs.astype(np.int32),
+             labels=np.asarray(labels, dtype=np.float32))

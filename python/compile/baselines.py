@@ -1,0 +1,145 @@
+"""Baseline inference-time-reduction methods the paper compares against
+(§4.1): DistilBERT and BERT-PKD (encoder elimination via distillation) and
+Head-Prune (attention-head pruning, Michel et al. 2019).
+
+Each produces a standard inference model (a BertConfig + params, possibly
+with head gates) that the AOT exporter treats identically to the others.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import model as M
+from . import train as T
+from .config import BertConfig, TaskSpec, TrainConfig
+
+
+# ---------------------------------------------------------------------------
+# Encoder-elimination students (DistilBERT / BERT-PKD)
+# ---------------------------------------------------------------------------
+
+def student_config(cfg: BertConfig, num_layers: int) -> BertConfig:
+    return dataclasses.replace(cfg, num_layers=num_layers)
+
+
+def init_student_from_teacher(teacher_params, cfg: BertConfig,
+                              num_layers: int) -> Dict:
+    """DistilBERT-style init: copy embeddings/pooler/head and every
+    ceil(L/k)-th encoder from the teacher."""
+    Lt = len(teacher_params["layers"])
+    take = np.linspace(0, Lt - 1, num_layers).round().astype(int)
+    return {
+        "embed": jax.tree.map(lambda x: x, teacher_params["embed"]),
+        "layers": [jax.tree.map(lambda x: x, teacher_params["layers"][i]) for i in take],
+        "final_ln": jax.tree.map(lambda x: x, teacher_params["final_ln"]),
+        "pooler": jax.tree.map(lambda x: x, teacher_params["pooler"]),
+        "head": jax.tree.map(lambda x: x, teacher_params["head"]),
+    }
+
+
+def pkd_layer_map(student_layers: int, teacher_layers: int) -> List[Tuple[int, int]]:
+    """PKD-skip mapping: student layer i supervises from evenly spaced
+    teacher layers (excluding the last, which the KL term covers)."""
+    ts = np.linspace(0, teacher_layers - 2, student_layers).round().astype(int)
+    return [(i, int(t)) for i, t in enumerate(ts)]
+
+
+def train_encoder_eliminated(kind: str, teacher_params, teacher_fwd,
+                             cfg: BertConfig, num_layers: int, data,
+                             task: TaskSpec, tc: TrainConfig,
+                             use_pallas: bool = True):
+    """Train a ``num_layers``-encoder student. kind: "distil" | "pkd".
+
+    Returns (student_cfg, student_params).
+    """
+    s_cfg = student_config(cfg, num_layers)
+    s_params = init_student_from_teacher(teacher_params, s_cfg, num_layers)
+    collect = kind == "pkd"
+    s_fwd = M.make_forward(s_cfg, use_pallas=use_pallas, collect=collect)
+    t_fwd = M.make_forward(cfg, use_pallas=use_pallas, collect=collect)
+    layer_map = pkd_layer_map(num_layers, cfg.num_layers) if kind == "pkd" else None
+    s_params, losses = T.train_distilled(
+        s_fwd, s_params, t_fwd, teacher_params, data, task, tc,
+        pkd_layer_map=layer_map)
+    return s_cfg, s_params, losses
+
+
+# ---------------------------------------------------------------------------
+# Head-Prune (Michel et al.): importance = E |d loss / d gate| at gate=1,
+# prune the globally least important heads, then fine-tune briefly.
+# ---------------------------------------------------------------------------
+
+def head_importance(params, cfg: BertConfig, data, task: TaskSpec,
+                    batch_size: int = 32, num_batches: int = 8,
+                    use_pallas: bool = True, seed: int = 0) -> np.ndarray:
+    """Returns [L, A] head-importance scores."""
+    fwd = M.make_forward(cfg, use_pallas=use_pallas, with_head_gates=True)
+    tokens, segs, labels = data
+    gates = jnp.ones((cfg.num_layers, cfg.num_heads))
+
+    @jax.jit
+    def grad_fn(g, tok, sg, y):
+        def loss_fn(g_):
+            logits, _ = fwd(params, tok, sg, g_)
+            return T.task_loss(logits, y, task.num_classes)
+        return jax.grad(loss_fn)(g)
+
+    rng = np.random.default_rng(seed)
+    acc = np.zeros((cfg.num_layers, cfg.num_heads))
+    for tok, sg, y in T.batches(rng, (tokens, segs, labels), batch_size, num_batches):
+        acc += np.abs(np.asarray(grad_fn(gates, tok, sg, y)))
+    return acc / num_batches
+
+
+def prune_heads(importance: np.ndarray, keep_fraction: float,
+                min_heads_per_layer: int = 1) -> np.ndarray:
+    """Globally prune to ``keep_fraction`` of heads; each layer keeps at
+    least ``min_heads_per_layer`` (an encoder with zero heads is degenerate).
+    Returns a {0,1} gate matrix [L, A]."""
+    LL, A = importance.shape
+    n_keep = max(LL * min_heads_per_layer, int(round(keep_fraction * LL * A)))
+    gates = np.zeros((LL, A))
+    # Guarantee per-layer minimum first...
+    for l in range(LL):
+        top = np.argsort(-importance[l])[:min_heads_per_layer]
+        gates[l, top] = 1.0
+    # ...then fill the rest globally by importance.
+    flat = [(-importance[l, a], l, a) for l in range(LL) for a in range(A) if gates[l, a] == 0]
+    for _, l, a in sorted(flat):
+        if gates.sum() >= n_keep:
+            break
+        gates[l, a] = 1.0
+    return gates
+
+
+def apply_head_gates_to_params(params, cfg: BertConfig, gates: np.ndarray) -> Dict:
+    """Bake {0,1} gates into the value/output projections so the pruned model
+    needs no gate input at inference (dead heads produce exact zeros)."""
+    out = jax.tree.map(lambda x: x, params)
+    d = cfg.head_dim
+    for j, layer in enumerate(out["layers"]):
+        g = np.repeat(gates[j], d)  # [H]
+        layer["wv"] = layer["wv"] * g[None, :]
+        layer["bv"] = layer["bv"] * g
+    return out
+
+
+def train_head_pruned(teacher_params, cfg: BertConfig, keep_fraction: float,
+                      data, task: TaskSpec, tc: TrainConfig,
+                      use_pallas: bool = True):
+    """Full Head-Prune pipeline: importance -> prune -> fine-tune."""
+    imp = head_importance(teacher_params, cfg, data, task, use_pallas=use_pallas)
+    gates = prune_heads(imp, keep_fraction)
+    fwd_g = M.make_forward(cfg, use_pallas=use_pallas, with_head_gates=True)
+    gates_j = jnp.asarray(gates)
+    fwd = lambda p, t, s: fwd_g(p, t, s, gates_j)
+    params, losses = T.train_classifier(fwd, teacher_params, data, task, tc)
+    pruned = apply_head_gates_to_params(params, cfg, gates)
+    return pruned, gates, losses

@@ -1,0 +1,182 @@
+"""Configuration dataclasses for the PoWER-BERT reproduction.
+
+Two reproduction profiles exist (`quick` for tests/CI, `full` for the
+EXPERIMENTS.md numbers). Both run the identical code path; `quick` only
+shrinks model depth, data size and step counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class BertConfig:
+    """Architecture of the (scaled-down) BERT used throughout.
+
+    The paper uses BERT_BASE: L=12, H=768, A=12, FFN=3072. We keep the
+    topology (notably all 12 encoders, so retention configurations have the
+    paper's length) and scale the width to stay trainable on one CPU core.
+    """
+
+    vocab_size: int = 1024
+    hidden_size: int = 64          # H (paper: 768)
+    num_layers: int = 6            # L (paper: 12; halved for the CPU budget —
+                                   #    retention configs have 6 entries)
+    num_heads: int = 4             # A (paper: 12)
+    ffn_size: int = 256            # 4*H, as in the paper
+    max_len: int = 128             # maximum N supported by position table
+    num_classes: int = 2           # output classes (1 => regression)
+    type_vocab: int = 2            # segment embeddings (sentence A/B)
+    # ALBERT-style variant knobs
+    share_params: bool = False     # share encoder weights across layers
+    embed_factor: int = 0          # >0 => factorized embedding vocab->E->H
+    dropout: float = 0.1
+    ln_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden_size % self.num_heads == 0
+        return self.hidden_size // self.num_heads
+
+    @property
+    def is_regression(self) -> bool:
+        return self.num_classes == 1
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    """One synthetic dataset mirroring a row of the paper's Table 1."""
+
+    name: str                      # e.g. "sst2"
+    task: str                      # ACCEPTABILITY | NLI | SIMILARITY | ...
+    num_classes: int               # 1 => regression (STS-B analog)
+    seq_len: int                   # N after padding (scaled from the paper)
+    paper_seq_len: int             # N the paper used
+    metric: str                    # accuracy | f1 | matthews | spearman
+    pair: bool                     # two-segment input (premise [SEP] hypothesis)
+    train_size: int = 2048
+    test_size: int = 512
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Hyper-parameters for one training phase (paper §4.1 ranges)."""
+
+    steps: int = 300
+    batch_size: int = 16
+    lr: float = 5e-4               # scaled-width model trains with larger lr
+    soft_extract_lr: float = 1e-2  # paper: higher lr for retention params
+    warmup_frac: float = 0.1
+    weight_decay: float = 0.01
+    lambda_reg: float = 3e-4       # paper's regularizer range [1e-4, 1e-3]
+    eval_every: int = 0            # 0 => only at end
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ReproProfile:
+    """Scale knobs binding everything together."""
+
+    name: str
+    bert: BertConfig
+    finetune: TrainConfig
+    config_search: TrainConfig
+    retrain: TrainConfig
+    datasets: Tuple[str, ...]
+    pareto_datasets: Tuple[str, ...]
+    pareto_lambdas: Tuple[float, ...]
+    batch_sizes: Tuple[int, ...] = (1, 8, 32)  # compiled batch sizes per artifact
+    data_scale: float = 1.0        # multiplies train/test sizes
+
+
+# ---------------------------------------------------------------------------
+# The synthetic task suite (Table 1 analog).
+#
+# Sequence lengths are scaled: paper 64 -> 32, 128 -> 64, 256/512 -> 128.
+# Task types, class counts and metrics match the paper's Table 1/2.
+# ---------------------------------------------------------------------------
+
+TASKS: Dict[str, TaskSpec] = {
+    s.name: s
+    for s in [
+        TaskSpec("sst2", "SENTIMENT", 2, 32, 64, "accuracy", False, train_size=8192, seed=15),
+        TaskSpec("cola", "ACCEPTABILITY", 2, 32, 64, "matthews", False, train_size=8192, seed=11),
+        TaskSpec("stsb", "SIMILARITY", 1, 32, 64, "spearman", True, train_size=8192, seed=19),
+        TaskSpec("mrpc", "PARAPHRASE", 2, 64, 128, "f1", True, train_size=6144, seed=14),
+        TaskSpec("qqp", "SIMILARITY", 2, 64, 128, "f1", True, train_size=6144, seed=13),
+        TaskSpec("mnli-m", "NLI", 3, 64, 128, "accuracy", True, train_size=6144, seed=16),
+        TaskSpec("mnli-mm", "NLI", 3, 64, 128, "accuracy", True, train_size=6144, seed=17),
+        TaskSpec("qnli", "QA_NLI", 2, 64, 128, "accuracy", True, train_size=6144, seed=18),
+        TaskSpec("rte", "NLI", 2, 128, 256, "accuracy", True, train_size=4096, seed=12),
+        TaskSpec("imdb", "SENTIMENT", 2, 128, 512, "accuracy", False, train_size=4096, seed=20),
+        TaskSpec("race", "QA", 2, 128, 512, "accuracy", True, train_size=4096, seed=21),
+    ]
+}
+
+GLUE_TASKS: Tuple[str, ...] = (
+    "cola", "rte", "qqp", "mrpc", "sst2", "mnli-m", "mnli-mm", "qnli", "stsb",
+)
+
+# The paper's Figure 7 shows six datasets; the single-CPU-core budget here
+# limits the sweep to the two the paper highlights in its headline numbers
+# (CoLA) plus SST-2 (the dataset used for all of the paper's case studies).
+PARETO_TASKS: Tuple[str, ...] = ("cola", "sst2")
+
+
+def quick_profile() -> ReproProfile:
+    bert = BertConfig(vocab_size=512, hidden_size=32, num_layers=4,
+                      num_heads=2, ffn_size=64, max_len=64)
+    tc = TrainConfig(steps=60, batch_size=16, eval_every=0)
+    return ReproProfile(
+        name="quick",
+        bert=bert,
+        finetune=tc,
+        config_search=dataclasses.replace(tc, steps=40),
+        retrain=dataclasses.replace(tc, steps=40),
+        datasets=("sst2", "cola"),
+        pareto_datasets=("sst2",),
+        pareto_lambdas=(1e-4, 1e-3),
+        batch_sizes=(1, 8),
+        data_scale=0.25,
+    )
+
+
+def full_profile() -> ReproProfile:
+    bert = BertConfig()
+    return ReproProfile(
+        name="full",
+        bert=bert,
+        finetune=TrainConfig(steps=320, batch_size=32, lr=1e-3),
+        config_search=TrainConfig(steps=160, batch_size=32, lr=1e-3),
+        retrain=TrainConfig(steps=200, batch_size=32, lr=1e-3),
+        datasets=tuple(TASKS.keys()),
+        pareto_datasets=PARETO_TASKS,
+        pareto_lambdas=(1e-4, 3e-4, 1e-3),
+        batch_sizes=(1, 8, 32),
+    )
+
+
+def get_profile(name: str) -> ReproProfile:
+    if name == "quick":
+        return quick_profile()
+    if name == "full":
+        return full_profile()
+    raise ValueError(f"unknown profile {name!r}")
+
+
+def config_hash(*objs) -> str:
+    """Stable hash of dataclass configs — used for artifact staleness checks."""
+
+    def enc(o):
+        if dataclasses.is_dataclass(o) and not isinstance(o, type):
+            return {"__cls__": type(o).__name__, **dataclasses.asdict(o)}
+        raise TypeError(o)
+
+    blob = json.dumps(objs, default=enc, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]

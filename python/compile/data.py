@@ -1,0 +1,244 @@
+"""Synthetic task suite mirroring the paper's Table 1.
+
+Each generator produces (tokens, segment_ids, labels) numpy arrays for a
+:class:`~compile.config.TaskSpec`. The generators are designed so that:
+
+* label evidence is carried by a *sparse, position-random* subset of tokens
+  (so attention-based selection Attn-WS beats positional Head-WS — Table 4);
+* inputs have *variable length* and are padded to N (so some elimination is
+  "free" PAD removal, like the paper's real datasets);
+* tasks require *contextual composition* (negation flips, premise/hypothesis
+  matching), not bag-of-words lookups, so the encoder stack is load-bearing.
+
+All generators are deterministic in (task.seed, split).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .config import TaskSpec
+from .tokenizer import Tokenizer, Vocab
+
+Arrays = Tuple[np.ndarray, np.ndarray, np.ndarray]  # tokens, segs, labels
+
+
+def _rng(task: TaskSpec, split: str) -> np.random.Generator:
+    return np.random.default_rng(abs(hash((task.seed, split))) % (2**32))
+
+
+def _words(rng, vocab: Vocab, family: str, n: int) -> List[str]:
+    ids = vocab.family_ids(family)
+    return [vocab.words[i] for i in rng.choice(ids, size=n)]
+
+
+def _fill(rng, vocab: Vocab, n: int) -> List[str]:
+    return _words(rng, vocab, "filler", n)
+
+
+def _scatter(rng, base: List[str], inserts: List[List[str]]) -> List[str]:
+    """Insert each multi-word chunk at a random position of ``base``,
+    keeping every chunk contiguous (insertion points are chosen in the base
+    only, so one chunk can never split another — splitting a
+    "negation + sentiment-word" pair would silently mislabel the example)."""
+    points = sorted((int(rng.integers(0, len(base) + 1)) for _ in inserts), reverse=True)
+    out = list(base)
+    for chunk, pos in zip(inserts, points):
+        out[pos:pos] = chunk
+    return out
+
+
+def _content_len(rng, task: TaskSpec, lo_frac=0.35, hi_frac=0.95) -> int:
+    budget = task.seq_len - (3 if task.pair else 2)
+    return int(rng.integers(max(4, int(lo_frac * budget)), max(5, int(hi_frac * budget))))
+
+
+# ---------------------------------------------------------------------------
+# Sentiment (SST-2 / IMDB analogs)
+# ---------------------------------------------------------------------------
+
+def _gen_sentiment(task: TaskSpec, vocab: Vocab, rng, n: int) -> List[Tuple]:
+    rows = []
+    for _ in range(n):
+        label = int(rng.integers(0, 2))
+        length = _content_len(rng, task)
+        n_signal = int(rng.integers(3, 6))
+        # Keep a clear majority margin (>= ceil(signal/2)) so the label is
+        # recoverable; single-word margins made the task needlessly noisy.
+        n_minority = int(rng.integers(0, max(1, n_signal // 2)))
+        chunks = []
+        for i in range(n_signal + n_minority):
+            # Majority polarity determines the label; negation flips a word's
+            # effective polarity, so surface family != evidence.
+            target_pos = (i >= n_minority) == (label == 1)
+            if rng.random() < 0.2:
+                # negated word of opposite surface polarity
+                fam = "neg" if target_pos else "pos"
+                chunk = _words(rng, vocab, "negation", 1) + _words(rng, vocab, fam, 1)
+            else:
+                fam = "pos" if target_pos else "neg"
+                chunk = _words(rng, vocab, fam, 1)
+            if rng.random() < 0.2:
+                chunk = _words(rng, vocab, "intens", 1) + chunk
+            chunks.append(chunk)
+        n_sig_tokens = sum(len(c) for c in chunks)
+        base = _fill(rng, vocab, max(1, length - n_sig_tokens))
+        sent = _scatter(rng, base, chunks)
+        rows.append((sent, None, label))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Acceptability (CoLA analog): the grammar is an alternating pattern of
+# (adj? noun verb) clauses; corruption (swap / duplicate verb) makes the
+# sentence unacceptable. Matthews correlation metric, like the paper.
+# ---------------------------------------------------------------------------
+
+def _gen_acceptability(task: TaskSpec, vocab: Vocab, rng, n: int) -> List[Tuple]:
+    rows = []
+    for _ in range(n):
+        label = int(rng.integers(0, 2))
+        clauses = int(rng.integers(2, max(3, (task.seq_len - 2) // 4)))
+        sent: List[str] = []
+        for _ in range(clauses):
+            if rng.random() < 0.4:
+                sent += _words(rng, vocab, "adj", 1)
+            sent += _words(rng, vocab, "noun", 1) + _words(rng, vocab, "verb", 1)
+        if label == 0:  # corrupt
+            kind = rng.random()
+            i = int(rng.integers(0, len(sent) - 1))
+            if kind < 0.5:
+                sent[i], sent[i + 1] = sent[i + 1], sent[i]
+                if vocab.family_of(vocab.id(sent[i])) == vocab.family_of(vocab.id(sent[i + 1])):
+                    sent.insert(i, _words(rng, vocab, "verb", 1)[0])  # force violation
+            else:
+                sent.insert(i, sent[i])  # duplicated word
+        rows.append((sent, None, label))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# NLI (RTE / MNLI / QNLI analogs): premise = fact triples "e1 rel e2"
+# scattered in filler; hypothesis = one triple. entail: present; contradict:
+# same (e1, rel) but different e2; neutral: unrelated entities.
+# ---------------------------------------------------------------------------
+
+def _gen_nli(task: TaskSpec, vocab: Vocab, rng, n: int, classes: int) -> List[Tuple]:
+    ents = list(vocab.family_ids("entity"))
+    rels = list(vocab.family_ids("relation"))
+    rows = []
+    for _ in range(n):
+        label = int(rng.integers(0, classes))
+        n_facts = int(rng.integers(2, 5))
+        facts = []
+        used_e = rng.choice(ents, size=2 * n_facts + 2, replace=False)
+        for i in range(n_facts):
+            e1, e2 = int(used_e[2 * i]), int(used_e[2 * i + 1])
+            r = int(rng.choice(rels))
+            facts.append((e1, r, e2))
+        f = facts[int(rng.integers(0, n_facts))]
+        if label == 1:  # entailment
+            hyp = f
+        elif label == 0:  # contradiction / not-entail
+            e_alt = int(used_e[-1])
+            hyp = (f[0], f[1], e_alt)
+        else:  # neutral (3-class only)
+            e_new1, e_new2 = int(used_e[-1]), int(used_e[-2])
+            hyp = (e_new1, int(rng.choice(rels)), e_new2)
+        chunks = [[vocab.words[a], vocab.words[r], vocab.words[b]] for a, r, b in facts]
+        length = _content_len(rng, task, 0.4, 0.9)
+        base = _fill(rng, vocab, max(1, length - 3 * len(chunks) - 3))
+        prem = _scatter(rng, base, chunks)
+        hyp_words = [vocab.words[hyp[0]], vocab.words[hyp[1]], vocab.words[hyp[2]]]
+        rows.append((prem, hyp_words, label))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Similarity / paraphrase (QQP / MRPC / STS-B analogs).
+# ---------------------------------------------------------------------------
+
+def _gen_pair_overlap(task: TaskSpec, vocab: Vocab, rng, n: int, regression: bool) -> List[Tuple]:
+    rows = []
+    for _ in range(n):
+        budget = (task.seq_len - 3) // 2
+        la = int(rng.integers(max(4, budget // 3), max(5, budget)))
+        a = _words(rng, vocab, "noun", max(1, la // 3)) + _fill(rng, vocab, la - max(1, la // 3))
+        rng.shuffle(a)
+        if regression:
+            frac = float(rng.random())
+        else:
+            label = int(rng.integers(0, 2))
+            frac = float(rng.uniform(0.65, 1.0)) if label == 1 else float(rng.uniform(0.0, 0.35))
+        keep = int(round(frac * len(a)))
+        idx = rng.permutation(len(a))[:keep]
+        b = [a[i] for i in sorted(idx)]
+        b += _fill(rng, vocab, len(a) - keep)
+        rng.shuffle(b)
+        y = 5.0 * frac if regression else label
+        rows.append((a, b, y))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# QA (RACE analog): passage of fact triples; candidate answer for a query —
+# binary "supported / unsupported", mirroring RACE's per-choice scoring
+# (the paper scores 4 choices and reports 2 classes; we keep 2 classes).
+# ---------------------------------------------------------------------------
+
+def _gen_qa(task: TaskSpec, vocab: Vocab, rng, n: int) -> List[Tuple]:
+    ents = list(vocab.family_ids("entity"))
+    rels = list(vocab.family_ids("relation"))
+    rows = []
+    for _ in range(n):
+        label = int(rng.integers(0, 2))
+        n_facts = int(rng.integers(3, 7))
+        used_e = rng.choice(ents, size=2 * n_facts + 1, replace=False)
+        facts = [(int(used_e[2 * i]), int(rng.choice(rels)), int(used_e[2 * i + 1]))
+                 for i in range(n_facts)]
+        q = facts[int(rng.integers(0, n_facts))]
+        answer = q[2] if label == 1 else int(used_e[-1])
+        chunks = [[vocab.words[a], vocab.words[r], vocab.words[b]] for a, r, b in facts]
+        length = _content_len(rng, task, 0.4, 0.9)
+        base = _fill(rng, vocab, max(1, length - 3 * len(chunks) - 4))
+        passage = _scatter(rng, base, chunks)
+        query = _words(rng, vocab, "query", 1) + [vocab.words[q[0]], vocab.words[q[1]], vocab.words[answer]]
+        rows.append((passage, query, label))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def generate_rows(task: TaskSpec, vocab: Vocab, split: str, n: int) -> List[Tuple]:
+    rng = _rng(task, split)
+    t = task.task
+    if t == "SENTIMENT":
+        return _gen_sentiment(task, vocab, rng, n)
+    if t == "ACCEPTABILITY":
+        return _gen_acceptability(task, vocab, rng, n)
+    if t in ("NLI", "QA_NLI"):
+        return _gen_nli(task, vocab, rng, n, task.num_classes if task.num_classes > 1 else 2)
+    if t in ("SIMILARITY", "PARAPHRASE"):
+        return _gen_pair_overlap(task, vocab, rng, n, regression=task.num_classes == 1)
+    if t == "QA":
+        return _gen_qa(task, vocab, rng, n)
+    raise ValueError(f"unknown task type {t}")
+
+
+def generate(task: TaskSpec, vocab: Vocab, split: str, n: Optional[int] = None) -> Arrays:
+    """Materialize a split as (tokens i32[n,N], segs i32[n,N], labels)."""
+    n = n if n is not None else (task.train_size if split == "train" else task.test_size)
+    tok = Tokenizer(vocab)
+    rows = generate_rows(task, vocab, split, n)
+    tokens = np.zeros((n, task.seq_len), dtype=np.int32)
+    segs = np.zeros((n, task.seq_len), dtype=np.int32)
+    labels = np.zeros((n,), dtype=np.float32 if task.num_classes == 1 else np.int32)
+    for i, (a, b, y) in enumerate(rows):
+        ids, sg = tok.encode(a, b, task.seq_len)
+        tokens[i], segs[i] = ids, sg
+        labels[i] = y
+    return tokens, segs, labels

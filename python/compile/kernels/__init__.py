@@ -1,0 +1,32 @@
+"""L1 Pallas kernels (interpret=True) and their pure-jnp oracles.
+
+``get_kernels(use_pallas)`` returns a namespace with a uniform interface so
+the L2 model can be built against either implementation; the AOT export uses
+the Pallas path, tests cross-check both.
+"""
+
+from types import SimpleNamespace
+
+from . import ref as _ref
+from .attention import mha_with_scores as mha_with_scores_pallas
+from .ffn import ffn as ffn_pallas
+from .layernorm import layernorm_residual as layernorm_residual_pallas
+from .soft_extract import soft_extract as soft_extract_pallas
+
+PALLAS = SimpleNamespace(
+    mha_with_scores=mha_with_scores_pallas,
+    ffn=ffn_pallas,
+    layernorm_residual=layernorm_residual_pallas,
+    soft_extract=soft_extract_pallas,
+)
+
+REF = SimpleNamespace(
+    mha_with_scores=_ref.mha_with_scores,
+    ffn=_ref.ffn,
+    layernorm_residual=_ref.layernorm_residual,
+    soft_extract=_ref.soft_extract,
+)
+
+
+def get_kernels(use_pallas: bool = True):
+    return PALLAS if use_pallas else REF

@@ -1,0 +1,74 @@
+"""Pallas kernel: fused position-wise feed-forward network.
+
+Computes GELU(x@W1+b1)@W2+b2 with both matmuls and the activation fused in a
+single VMEM-resident pass over a (row, intermediate-column) tile — the
+[bm, bi] activation slab never round-trips to HBM (in the unfused L2 graph
+the whole [N, 4H] tensor would be written and re-read per encoder).
+
+Grid: (row tiles, intermediate-column tiles). GELU is applied per-column
+slab (it is elementwise over the intermediate dimension, so column tiling is
+exact), and the output tile is *revisited* across the column grid dimension,
+accumulating partial products — the standard Pallas reduction pattern.
+
+The column tiling is what makes the kernel viable at paper scale: BERT_BASE
+(H=768, I=3072) weight panels are 2 x 9.4MB, which busts the ~16MB VMEM
+budget if held whole; with bi=512 the working set is ~3.3MB
+(see compile/kernels/perf.py and the §Perf log in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One (row-tile, column-tile) grid step with output accumulation."""
+    i = pl.program_id(1)
+    x = x_ref[...]                                     # [bm, H]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...][None, :]
+    h = jax.nn.gelu(h, approximate=True)               # [bm, bi]
+    partial = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)  # [bm, H]
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = b2_ref[...][None, :] + partial
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def _pick_block(n: int, target: int) -> int:
+    for b in range(min(n, target), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_i"))
+def ffn(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+        w2: jnp.ndarray, b2: jnp.ndarray, block_rows: int = 128,
+        block_i: int = 512) -> jnp.ndarray:
+    """x: [N, H]; w1: [H, I]; b1: [I]; w2: [I, H]; b2: [H] -> [N, H]."""
+    n, hdim = x.shape
+    idim = w1.shape[1]
+    bm = _pick_block(n, block_rows)
+    bi = _pick_block(idim, block_i)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(n // bm, idim // bi),
+        in_specs=[
+            pl.BlockSpec((bm, hdim), lambda r, i: (r, 0)),
+            pl.BlockSpec((hdim, bi), lambda r, i: (0, i)),
+            pl.BlockSpec((bi,), lambda r, i: (i,)),
+            pl.BlockSpec((bi, hdim), lambda r, i: (i, 0)),
+            pl.BlockSpec((hdim,), lambda r, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, hdim), lambda r, i: (r, 0)),  # revisited over i
+        out_shape=jax.ShapeDtypeStruct((n, hdim), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts the Pallas
+implementations (interpret=True) match these to tight tolerances across
+shape/dtype sweeps (see python/tests/). They are also usable as a drop-in
+slow path (`use_pallas=False` in the L2 model) to cross-check whole-model
+numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_with_scores(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    mask: jnp.ndarray):
+    """Multi-head attention + PoWER significance scores, one example.
+
+    Args:
+      q, k, v: [heads, N, d] projected query/key/value.
+      mask:    [N] 1.0 for valid positions, 0.0 for PAD.
+
+    Returns:
+      ctx: [heads, N, d] attention output per head.
+      sig: [N] significance scores  Sig(w) = sum_h sum_{w' valid} A_h[w', w]
+           (paper §3.2, attention *column* sums aggregated over heads).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    logits = jnp.where(mask[None, None, :] > 0, logits, jnp.asarray(-1e9, q.dtype))
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Exclude PAD query rows from the column sums: a PAD row's attention
+    # distribution is meaningless and must not contribute significance.
+    probs_for_sig = probs * mask[None, :, None]
+    sig = jnp.sum(probs_for_sig, axis=(0, 1))
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, v)
+    return ctx, sig
+
+
+def ffn(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+        w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Position-wise feed-forward: GELU(x@w1+b1)@w2+b2.  x: [N, H]."""
+    h = jax.nn.gelu(x @ w1 + b1[None, :], approximate=True)
+    return h @ w2 + b2[None, :]
+
+
+def layernorm_residual(x: jnp.ndarray, res: jnp.ndarray,
+                       gamma: jnp.ndarray, beta: jnp.ndarray,
+                       eps: float = 1e-6) -> jnp.ndarray:
+    """LayerNorm(x + res) over the last dim.  x, res: [N, H]."""
+    y = x + res
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(y - mu), axis=-1, keepdims=True)
+    return (y - mu) / jnp.sqrt(var + eps) * gamma[None, :] + beta[None, :]
+
+
+def soft_extract(x: jnp.ndarray, ranks: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Soft-extract (paper §3.3): multiply word-vector i by r[rank(i)].
+
+    x: [N, H]; ranks: i32 [N] — sorted position of each word-vector by
+    significance score (0 = most significant); r: [N] retention params.
+    """
+    return x * r[ranks][:, None]

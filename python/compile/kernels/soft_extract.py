@@ -1,0 +1,65 @@
+"""Pallas kernel: soft-extract layer (paper §3.3, training path only).
+
+Multiplies word-vector i by the retention parameter of its *sorted score
+position*: out[i, :] = r[rank[i]] * x[i, :]. The rank permutation is computed
+at the JAX level (sorting is an XLA strength and not profitably tiled at
+these sizes); the kernel fuses the gather r[rank] with the broadcast
+multiply so the gated activations are produced in one VMEM pass.
+
+Differentiability note: gradients flow to `r` through the multiply (the
+gather of `r` by integer ranks is differentiable in r), exactly what the
+configuration-search training needs. Ranks are stop-gradient by nature.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_extract_kernel(x_ref, ranks_ref, r_ref, o_ref):
+    gate = r_ref[...][ranks_ref[...]]          # [N] gather in VMEM
+    o_ref[...] = x_ref[...] * gate[:, None]
+
+
+def _soft_extract_call(x, ranks, r):
+    n, hdim = x.shape
+    return pl.pallas_call(
+        _soft_extract_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, hdim), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, hdim), x.dtype),
+        interpret=True,
+    )(x, ranks, r)
+
+
+# The in-kernel gather has no reverse-mode rule under interpret mode, so the
+# VJP is supplied explicitly (it is exact and cheap):
+#   d/dx   = g * r[ranks]            (the same kernel, applied to g)
+#   d/dr_k = sum_{i: ranks[i]=k} <g_i, x_i>   (segment-sum of row dots)
+@jax.custom_vjp
+def soft_extract(x: jnp.ndarray, ranks: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """x: [N, H]; ranks: i32 [N]; r: [N] -> [N, H]."""
+    return _soft_extract_call(x, ranks, r)
+
+
+def _fwd(x, ranks, r):
+    return _soft_extract_call(x, ranks, r), (x, ranks, r)
+
+
+def _bwd(res, g):
+    x, ranks, r = res
+    dx = _soft_extract_call(g, ranks, r)
+    rowdot = jnp.sum(g * x, axis=-1)
+    dr = jnp.zeros_like(r).at[ranks].add(rowdot)
+    return dx, None, dr
+
+
+soft_extract.defvjp(_fwd, _bwd)
+soft_extract = jax.jit(soft_extract)

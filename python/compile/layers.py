@@ -1,0 +1,127 @@
+"""Parameter initialization and encoder building blocks (L2).
+
+The model is a dict-pytree BERT. Every encoder is split in two halves so the
+PoWER extract / soft-extract layer can be inserted *between the self-attention
+module and the feed-forward network*, exactly where the paper places it
+(§3.2, Figure 4):
+
+    attn_half:  x -> x + proj(MHA(LN(x)))  and the significance scores
+    [extract / soft-extract here]
+    ffn_half:   y -> y + FFN(LN(y))
+
+Residual placement is pre-LN (final LN before the pooler): the original
+post-LN BERT only trains from scratch with very careful warmup at depth 12,
+while pre-LN is stable — and PoWER-BERT's mechanism (attention-derived
+significance, extract layers between attention and FFN) is unchanged by it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .config import BertConfig
+
+Params = Dict
+
+
+def _dense_init(key, shape, scale=0.02):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+def init_layer(key, cfg: BertConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    H, I = cfg.hidden_size, cfg.ffn_size
+    return {
+        "wq": _dense_init(ks[0], (H, H)), "bq": jnp.zeros((H,)),
+        "wk": _dense_init(ks[1], (H, H)), "bk": jnp.zeros((H,)),
+        "wv": _dense_init(ks[2], (H, H)), "bv": jnp.zeros((H,)),
+        "wo": _dense_init(ks[3], (H, H)), "bo": jnp.zeros((H,)),
+        "ln1_g": jnp.ones((H,)), "ln1_b": jnp.zeros((H,)),
+        "w1": _dense_init(ks[4], (H, I)), "b1": jnp.zeros((I,)),
+        "w2": _dense_init(ks[5], (I, H)), "b2": jnp.zeros((H,)),
+        "ln2_g": jnp.ones((H,)), "ln2_b": jnp.zeros((H,)),
+    }
+
+
+def init_params(key, cfg: BertConfig) -> Params:
+    n_layer_params = 1 if cfg.share_params else cfg.num_layers
+    keys = jax.random.split(key, n_layer_params + 4)
+    H = cfg.hidden_size
+    E = cfg.embed_factor if cfg.embed_factor > 0 else H
+    embed = {
+        "word": _dense_init(keys[0], (cfg.vocab_size, E)),
+        "pos": _dense_init(keys[1], (cfg.max_len, H)),
+        "type": _dense_init(keys[2], (cfg.type_vocab, H)),
+        "ln_g": jnp.ones((H,)), "ln_b": jnp.zeros((H,)),
+    }
+    if cfg.embed_factor > 0:
+        embed["word_proj"] = _dense_init(keys[3], (E, H))
+    params = {
+        "embed": embed,
+        "layers": [init_layer(k, cfg) for k in keys[4 : 4 + n_layer_params]],
+        "final_ln": {"g": jnp.ones((H,)), "b": jnp.zeros((H,))},
+        "pooler": {"w": _dense_init(keys[-1], (H, H)), "b": jnp.zeros((H,))},
+        "head": {"w": _dense_init(keys[-1], (H, max(cfg.num_classes, 1))),
+                 "b": jnp.zeros((max(cfg.num_classes, 1),))},
+    }
+    return params
+
+
+def layer_at(params: Params, cfg: BertConfig, j: int) -> Params:
+    """Encoder j's weights — index 0 for ALBERT-style shared parameters."""
+    return params["layers"][0 if cfg.share_params else j]
+
+
+def embed(params: Params, cfg: BertConfig, tokens: jnp.ndarray,
+          segs: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup for one example. tokens, segs: i32 [N] -> [N, H]."""
+    e = params["embed"]
+    w = e["word"][tokens]
+    if cfg.embed_factor > 0:
+        w = w @ e["word_proj"]
+    x = w + e["pos"][: tokens.shape[0]] + e["type"][segs]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + cfg.ln_eps) * e["ln_g"] + e["ln_b"]
+
+
+def attn_half(layer: Params, cfg: BertConfig, kernels, x: jnp.ndarray,
+              mask: jnp.ndarray, head_gates: jnp.ndarray | None = None):
+    """Self-attention module of one encoder, one example.
+
+    x: [n, H]; mask: [n] -> (x1 [n, H], sig [n]).
+    ``head_gates``: optional [A] multiplier on each head's context — the
+    Head-Prune baseline sets entries to 0 (Michel et al. gates).
+    """
+    n, H = x.shape
+    A, d = cfg.num_heads, cfg.head_dim
+    zeros = jnp.zeros_like(x)
+    h = kernels.layernorm_residual(x, zeros, layer["ln1_g"], layer["ln1_b"], cfg.ln_eps)
+
+    def proj(w, b):
+        return (h @ w + b).reshape(n, A, d).transpose(1, 0, 2)  # [A, n, d]
+
+    q, k, v = proj(layer["wq"], layer["bq"]), proj(layer["wk"], layer["bk"]), proj(layer["wv"], layer["bv"])
+    ctx, sig = kernels.mha_with_scores(q, k, v, mask)            # [A,n,d], [n]
+    if head_gates is not None:
+        ctx = ctx * head_gates[:, None, None]
+    ctx = ctx.transpose(1, 0, 2).reshape(n, H)
+    x1 = x + ctx @ layer["wo"] + layer["bo"]
+    return x1, sig
+
+
+def ffn_half(layer: Params, cfg: BertConfig, kernels, x1: jnp.ndarray) -> jnp.ndarray:
+    """FFN module of one encoder, one example. x1: [n, H] -> [n, H]."""
+    h = kernels.layernorm_residual(x1, jnp.zeros_like(x1), layer["ln2_g"], layer["ln2_b"], cfg.ln_eps)
+    return x1 + kernels.ffn(h, layer["w1"], layer["b1"], layer["w2"], layer["b2"])
+
+
+def pool_and_classify(params: Params, cfg: BertConfig, kernels, x: jnp.ndarray) -> jnp.ndarray:
+    """Final prediction from the CLS vector (position 0). x: [n, H] -> [C]."""
+    x = kernels.layernorm_residual(x, jnp.zeros_like(x), params["final_ln"]["g"],
+                                   params["final_ln"]["b"], cfg.ln_eps)
+    pooled = jnp.tanh(x[0] @ params["pooler"]["w"] + params["pooler"]["b"])
+    return pooled @ params["head"]["w"] + params["head"]["b"]

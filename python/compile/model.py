@@ -1,0 +1,202 @@
+"""L2: the BERT forward passes — baseline, PoWER extract (inference),
+PoWER soft-extract (configuration search), and the word-vector-selection
+ablation strategies (Head-WS / Rand-WS / Attn-WS).
+
+All forwards are written per-example and vmapped, so per-example dynamic
+word-vector selection (Attn-WS) is expressed with static shapes: encoder j
+outputs exactly ``l_j`` word-vectors, which is what makes the AOT-compiled
+HLO do strictly less work (the paper's Figure 1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import BertConfig
+from .kernels import get_kernels
+
+BIG = 1e6  # score pin for CLS (never eliminated, paper §3.4)
+
+
+# ---------------------------------------------------------------------------
+# Score post-processing and selection strategies
+# ---------------------------------------------------------------------------
+
+def selection_scores(sig: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Turn raw significance into selection scores: CLS pinned on top,
+    PAD pinned to the bottom (below any real word's score >= 0)."""
+    s = jnp.where(mask > 0, sig, -1.0)
+    return s.at[0].set(BIG)
+
+
+def topk_keep_indices(scores: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Indices of the ``keep`` highest-scored positions, in original order
+    (ascending index), so relative word order is preserved.
+
+    Scores are stop-gradiented: selection is a discrete decision; gradients
+    flow through the selected activations only (and this environment's
+    jaxlib rejects the batched gather that sort's JVP would emit).
+
+    Implemented with argsort (lowers to the standard `sort` HLO) rather than
+    ``lax.top_k``: jax emits the newer ``topk(..., largest=true)`` custom op
+    which the Rust side's XLA 0.5.1 HLO-text parser rejects.
+    """
+    order = jnp.argsort(-jax.lax.stop_gradient(scores))
+    return jnp.sort(order[:keep])
+
+
+def static_keep_indices(strategy: str, n_in: int, keep: int, layer_idx: int,
+                        seed: int = 1234) -> np.ndarray:
+    """Table-4 ablation strategies: fixed positions for the whole dataset.
+
+    Head-WS keeps the first ``keep`` positions (maximizing expected PAD
+    removal); Rand-WS keeps a fixed random subset. Both always keep 0 (CLS).
+    """
+    if strategy == "head":
+        return np.arange(keep, dtype=np.int32)
+    if strategy == "rand":
+        rng = np.random.default_rng(seed + layer_idx)
+        rest = 1 + rng.permutation(n_in - 1)[: keep - 1]
+        return np.sort(np.concatenate([[0], rest])).astype(np.int32)
+    raise ValueError(strategy)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (single example; vmap at the public entry points)
+# ---------------------------------------------------------------------------
+
+def _forward_one(params, cfg: BertConfig, kernels, tokens, segs,
+                 retention: Optional[Sequence[int]],
+                 strategy: str = "attn",
+                 head_gates: Optional[jnp.ndarray] = None,
+                 collect: bool = False):
+    """Shared forward. retention=None -> baseline (no elimination).
+
+    Returns (logits, aux) where aux optionally carries per-encoder hidden
+    states / scores / kept-index traces (analysis, distillation, Figure 8).
+    """
+    mask = (tokens != 0).astype(jnp.float32)
+    x = L.embed(params, cfg, tokens, segs)
+    aux: Dict = {"hidden": [], "sig": [], "kept": []}
+    # Track original positions of surviving word-vectors (Figure 8 trace).
+    positions = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+
+    for j in range(cfg.num_layers):
+        layer = L.layer_at(params, cfg, j)
+        gates = head_gates[j] if head_gates is not None else None
+        x1, sig = L.attn_half(layer, cfg, kernels, x, mask, gates)
+        if retention is not None and retention[j] < x1.shape[0]:
+            keep = int(retention[j])
+            if strategy == "attn":
+                idx = topk_keep_indices(selection_scores(sig, mask), keep)
+            else:
+                idx = jnp.asarray(
+                    static_keep_indices(strategy, x1.shape[0], keep, j))
+            x1 = x1[idx]
+            mask = mask[idx]
+            positions = positions[idx]
+        x = L.ffn_half(layer, cfg, kernels, x1)
+        if collect:
+            aux["hidden"].append(x)
+            aux["sig"].append(sig)
+            aux["kept"].append(positions)
+    logits = L.pool_and_classify(params, cfg, kernels, x)
+    return logits, aux
+
+
+def _soft_forward_one(params, r_params, cfg: BertConfig, kernels, tokens, segs):
+    """Configuration-search forward with soft-extract layers (paper §3.3).
+
+    r_params: [L, N] retention parameters (clipped to [0,1] here).
+    Returns (logits, mass [L]) with mass(j) = sum_k clip(r_j)[k].
+    """
+    mask = (tokens != 0).astype(jnp.float32)
+    x = L.embed(params, cfg, tokens, segs)
+    masses = []
+    r_clip = jnp.clip(r_params, 0.0, 1.0)
+    for j in range(cfg.num_layers):
+        layer = L.layer_at(params, cfg, j)
+        x1, sig = L.attn_half(layer, cfg, kernels, x, mask)
+        scores = jax.lax.stop_gradient(selection_scores(sig, mask))
+        # rank 0 = most significant; all word-vectors in sorted position k
+        # are multiplied by the same r_j[k]. Ranks are a discrete decision:
+        # gradients reach r only through the soft-extract multiply.
+        order = jnp.argsort(-scores)
+        ranks = jnp.argsort(order).astype(jnp.int32)
+        x1 = kernels.soft_extract(x1, ranks, r_clip[j])
+        masses.append(jnp.sum(r_clip[j]))
+        x = L.ffn_half(layer, cfg, kernels, x1)
+    logits = L.pool_and_classify(params, cfg, kernels, x)
+    return logits, jnp.stack(masses)
+
+
+# ---------------------------------------------------------------------------
+# Public, batched entry points
+# ---------------------------------------------------------------------------
+
+def make_forward(cfg: BertConfig,
+                 retention: Optional[Sequence[int]] = None,
+                 strategy: str = "attn",
+                 use_pallas: bool = True,
+                 collect: bool = False,
+                 with_head_gates: bool = False):
+    """Builds ``f(params, tokens [B,N], segs [B,N]) -> (logits, aux)``.
+
+    retention: monotone keep-counts per encoder, or None for the baseline.
+    strategy: "attn" (Attn-WS) | "head" (Head-WS) | "rand" (Rand-WS).
+    """
+    kernels = get_kernels(use_pallas)
+    if retention is not None:
+        retention = tuple(int(v) for v in retention)
+        assert len(retention) == cfg.num_layers
+
+    if with_head_gates:
+        def fwd(params, tokens, segs, head_gates):
+            f = functools.partial(_forward_one, params, cfg, kernels,
+                                  retention=retention, strategy=strategy,
+                                  head_gates=head_gates, collect=collect)
+            return jax.vmap(f)(tokens, segs)
+        return fwd
+
+    def fwd(params, tokens, segs):
+        f = functools.partial(_forward_one, params, cfg, kernels,
+                              retention=retention, strategy=strategy,
+                              collect=collect)
+        return jax.vmap(f)(tokens, segs)
+    return fwd
+
+
+def make_soft_forward(cfg: BertConfig, use_pallas: bool = True):
+    """Builds ``f(params, r [L,N], tokens, segs) -> (logits, mass [B,L])``."""
+    kernels = get_kernels(use_pallas)
+
+    def fwd(params, r_params, tokens, segs):
+        return jax.vmap(
+            lambda t, s: _soft_forward_one(params, r_params, cfg, kernels, t, s)
+        )(tokens, segs)
+    return fwd
+
+
+def derive_retention(masses: np.ndarray, seq_len: int) -> List[int]:
+    """Paper §3.3: l_j = ceil(mass(j)), made monotone non-increasing and
+    bounded by [1, N]. ``masses``: [L] learned aggregate mass per encoder."""
+    cfg = []
+    prev = seq_len
+    for m in masses:
+        l = int(np.ceil(float(m)))
+        l = max(1, min(l, prev))
+        cfg.append(l)
+        prev = l
+    return cfg
+
+
+def aggregate_word_vectors(retention: Sequence[int]) -> int:
+    """Total word-vectors processed across encoders (paper's RTE example:
+    baseline 12*256=3072 vs PoWER sum=868)."""
+    return int(sum(retention))

@@ -1,0 +1,60 @@
+"""Flatten/unflatten the dict-pytree params to named arrays.
+
+The naming scheme ("embed/word", "layers/3/wq", ...) is the contract between
+the AOT exporter (weights.npz + meta.json param order) and the Rust runtime,
+which feeds the arrays back as PJRT parameters in exactly this order.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flatten_params(params) -> List[Tuple[str, np.ndarray]]:
+    out: List[Tuple[str, np.ndarray]] = []
+
+    def walk(prefix: str, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}" if prefix else k, node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            out.append((prefix, np.asarray(node)))
+
+    walk("", params)
+    return out
+
+
+def unflatten_params(named: Dict[str, np.ndarray]):
+    """Inverse of :func:`flatten_params` (integer path segments -> lists)."""
+    root: Dict = {}
+    for name, arr in named.items():
+        parts = name.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return [fix(node[str(i)]) for i in range(len(keys))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_params(path: str, params) -> None:
+    np.savez(path, **{name: arr for name, arr in flatten_params(params)})
+
+
+def load_params(path: str):
+    with np.load(path) as z:
+        return unflatten_params({k: z[k] for k in z.files})

@@ -1,0 +1,470 @@
+"""Incremental training + export pipeline:  python -m compile.pipeline
+
+Orchestrates, per dataset:
+  1. fine-tune baseline BERT            -> artifacts/<ds>/bert/
+  2. PoWER 3-step training (paper §3.4) -> artifacts/<ds>/power-default/
+  3. (pareto datasets) lambda sweep + DistilBERT/PKD/Head-Prune baselines
+  4. (GLUE) ALBERT and PoWER-ALBERT
+  5. (sst2) Table-4 selection-strategy ablation + debug/anecdote artifact
+and writes artifacts/index.json for the Rust registry.
+
+Every (dataset, variant) step is skipped when its artifact already exists
+with a matching config hash, so the pipeline is safely re-runnable and can
+be extended incrementally (`make artifacts` is a cheap no-op when fresh).
+
+Checkpoints (trained weights, reusable across variants) live in
+checkpoints/; only AOT artifacts + test splits land in artifacts/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import aot
+from . import baselines as B
+from . import data as D
+from . import layers as L
+from . import model as M
+from . import train as T
+from .config import GLUE_TASKS, TASKS, BertConfig, ReproProfile, TaskSpec, config_hash, get_profile
+from .params_io import load_params, save_params
+from .tokenizer import Vocab, build_vocab
+
+# Bumped when the AOT exporter changes without a training change: lets the
+# pipeline re-export from checkpoints instead of retraining.
+EXPORT_VERSION = 3
+
+# Kernel path for AOT export. The Pallas kernels (use_pallas=True) are the
+# TPU-targeted implementation, verified against the pure-jnp oracles in
+# pytest; interpret=True lowering scalarizes their grids into loops that
+# XLA *CPU* executes ~6x slower at batch>=8 (EXPERIMENTS.md SPerf L2), so
+# CPU artifacts are exported through the numerically-identical oracle path.
+EXPORT_USE_PALLAS = False
+
+ART = os.environ.get("POWERBERT_ARTIFACTS", os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+CKPT = os.environ.get("POWERBERT_CHECKPOINTS", os.path.join(os.path.dirname(__file__), "..", "..", "checkpoints"))
+
+
+def log(msg: str) -> None:
+    print(f"[pipeline {time.strftime('%H:%M:%S')}] {msg}", flush=True)
+
+
+class Pipeline:
+    def __init__(self, profile: ReproProfile):
+        self.prof = profile
+        os.makedirs(ART, exist_ok=True)
+        os.makedirs(CKPT, exist_ok=True)
+        self.vocab = self._ensure_vocab()
+        self._data_cache: Dict = {}
+
+    # -- shared ---------------------------------------------------------
+
+    def _ensure_vocab(self) -> Vocab:
+        path = os.path.join(ART, "vocab.json")
+        if os.path.exists(path):
+            return Vocab.load(path)
+        v = build_vocab(self.prof.bert.vocab_size)
+        v.save(path)
+        log(f"vocab ({len(v)} words) -> {path}")
+        return v
+
+    def task(self, name: str) -> TaskSpec:
+        t = TASKS[name]
+        s = self.prof.data_scale
+        if s != 1.0:
+            t = dataclasses.replace(t, train_size=max(64, int(t.train_size * s)),
+                                    test_size=max(64, int(t.test_size * s)))
+        return t
+
+    def cfg_for(self, task: TaskSpec, **kw) -> BertConfig:
+        return dataclasses.replace(self.prof.bert, num_classes=task.num_classes,
+                                   max_len=max(self.prof.bert.max_len, task.seq_len), **kw)
+
+    def tc_for(self, task: TaskSpec, tc):
+        """Scale a TrainConfig for long-sequence datasets: smaller batches
+        and fewer steps keep the single-core wall time bounded."""
+        if task.seq_len >= 128:
+            # N=128 steps cost ~4x the N=32 ones on this single core; halve
+            # both batch and steps to keep the full-suite wall time bounded.
+            return dataclasses.replace(tc, batch_size=max(8, tc.batch_size // 4),
+                                       steps=max(40, int(tc.steps * 0.5)))
+        return tc
+
+    def data(self, task: TaskSpec, split: str):
+        key = (task.name, split)
+        if key not in self._data_cache:
+            self._data_cache[key] = D.generate(task, self.vocab, split)
+        return self._data_cache[key]
+
+    def _fresh(self, out_dir: str, chash: str) -> bool:
+        meta = os.path.join(out_dir, "meta.json")
+        if not os.path.exists(meta):
+            return False
+        try:
+            with open(meta) as f:
+                return json.load(f).get("config_hash") == chash
+        except Exception:
+            return False
+
+    def export(self, ds: str, variant: str, fwd, params, cfg, task, extra_meta: Dict):
+        out_dir = os.path.join(ART, ds, variant)
+        meta = {
+            "dataset": ds, "variant": variant, "metric": task.metric,
+            "task": task.task, "paper_seq_len": task.paper_seq_len,
+            "config_hash": extra_meta.pop("config_hash"), **extra_meta,
+        }
+        aot.export_variant(out_dir, fwd, params, cfg, task.seq_len,
+                           self.prof.batch_sizes, meta)
+        log(f"exported {ds}/{variant}")
+
+    def ensure_test_split(self, ds: str, task: TaskSpec):
+        path = os.path.join(ART, ds, "test.npz")
+        if os.path.exists(path):
+            # Guard against stale splits from a different profile scale.
+            try:
+                with np.load(path) as z:
+                    if z["tokens"].shape == (task.test_size, task.seq_len):
+                        return
+            except Exception:
+                pass
+        tok, sg, y = self.data(task, "test")
+        aot.export_test_split(os.path.join(ART, ds), tok, sg, y)
+
+    # -- steps ------------------------------------------------------------
+
+    def baseline(self, ds: str, albert: bool = False):
+        """Fine-tuned baseline (BERT or ALBERT)."""
+        task = self.task(ds)
+        name = "albert" if albert else "bert"
+        cfg = self.cfg_for(task, share_params=albert,
+                           embed_factor=16 if albert else 0)
+        ft = self.tc_for(task, self.prof.finetune)
+        train_hash = config_hash(cfg, task, ft)
+        chash = f"{train_hash}-v{EXPORT_VERSION}"
+        out_dir = os.path.join(ART, ds, name)
+        ckpt = os.path.join(CKPT, ds, f"{name}.npz")
+        self.ensure_test_split(ds, task)
+        if self._fresh(out_dir, chash):
+            return cfg, load_params(ckpt), None
+        # Re-export fast path: training inputs unchanged, exporter bumped.
+        meta_p = os.path.join(out_dir, "meta.json")
+        if os.path.exists(ckpt) and os.path.exists(meta_p):
+            try:
+                with open(meta_p) as f:
+                    old = json.load(f)
+            except Exception:
+                old = {}
+            if old.get("train_hash") == train_hash or old.get("config_hash") == train_hash:
+                params = load_params(ckpt)
+                dev = old.get("dev_metric")
+                log(f"{ds}: re-exporting {name} (exporter v{EXPORT_VERSION})")
+                self.export(ds, name, M.make_forward(cfg, use_pallas=EXPORT_USE_PALLAS),
+                            params, cfg, task,
+                            {"config_hash": chash, "train_hash": train_hash,
+                             "dev_metric": dev, "kind": name})
+                return cfg, params, dev
+        log(f"{ds}: fine-tuning {name} ...")
+        # mnli-mm evaluates the mnli-m model on a shifted test distribution
+        # (like the paper's matched/mismatched split) — reuse its weights.
+        if ds == "mnli-mm":
+            src = os.path.join(CKPT, "mnli-m", f"{name}.npz")
+            if os.path.exists(src):
+                params = load_params(src)
+                fwd = M.make_forward(cfg, use_pallas=EXPORT_USE_PALLAS)
+                dev = T.evaluate(M.make_forward(cfg, use_pallas=False), params,
+                                 self.data(task, "test"), task)
+                os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+                save_params(ckpt, params)
+                self.export(ds, name, fwd, params, cfg, task,
+                            {"config_hash": chash, "train_hash": train_hash,
+                             "dev_metric": dev, "kind": name})
+                return cfg, params, dev
+        params = L.init_params(jax.random.PRNGKey(task.seed), cfg)
+        fwd_train = M.make_forward(cfg, use_pallas=False)
+        params, _ = T.train_classifier(fwd_train, params, self.data(task, "train"),
+                                       task, ft)
+        dev = T.evaluate(fwd_train, params, self.data(task, "test"), task)
+        log(f"{ds}: {name} dev {task.metric} = {dev:.4f}")
+        os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+        save_params(ckpt, params)
+        self.export(ds, name, M.make_forward(cfg, use_pallas=EXPORT_USE_PALLAS), params, cfg,
+                    task, {"config_hash": chash, "train_hash": train_hash,
+                           "dev_metric": dev, "kind": name})
+        return cfg, params, dev
+
+    def power(self, ds: str, lam: float, variant: str, albert: bool = False,
+              base=None, export_debug: bool = False):
+        """PoWER 3-step training for one lambda; exports the artifact."""
+        task = self.task(ds)
+        cfg, params, _ = base if base is not None else self.baseline(ds, albert)
+        sc = self.tc_for(task, dataclasses.replace(self.prof.config_search, lambda_reg=lam))
+        rt = self.tc_for(task, self.prof.retrain)
+        train_hash = config_hash(cfg, task, sc, rt)
+        chash = f"{train_hash}-v{EXPORT_VERSION}"
+        out_dir = os.path.join(ART, ds, variant)
+        if self._fresh(out_dir, chash):
+            return
+        ckpt = os.path.join(CKPT, ds, f"{variant}.npz")
+        meta_p = os.path.join(out_dir, "meta.json")
+        # Re-export fast path: same training inputs, newer exporter version.
+        if os.path.exists(ckpt) and os.path.exists(meta_p):
+            try:
+                with open(meta_p) as f:
+                    old = json.load(f)
+            except Exception:
+                old = {}
+            if old.get("train_hash") == train_hash and old.get("retention"):
+                retention = old["retention"]
+                p3 = load_params(ckpt)
+                dev = old.get("dev_metric")
+                log(f"{ds}: re-exporting {variant} (exporter v{EXPORT_VERSION})")
+                fwd_ex = M.make_forward(cfg, retention=retention, use_pallas=EXPORT_USE_PALLAS)
+                self.export(ds, variant, fwd_ex, p3, cfg, task, {
+                    "config_hash": chash, "train_hash": train_hash,
+                    "dev_metric": dev, "kind": "power",
+                    "retention": retention, "lambda": lam,
+                    "aggregate_word_vectors": int(sum(retention)),
+                    "baseline_word_vectors": int(cfg.num_layers * task.seq_len),
+                })
+                if export_debug:
+                    self._export_debug(ds, variant, cfg, task, p3, retention, chash)
+                return
+        log(f"{ds}: PoWER config-search (lambda={lam}) ...")
+        fwd_soft = M.make_soft_forward(cfg, use_pallas=False)
+        r0 = jnp.ones((cfg.num_layers, task.seq_len))
+        p2, r, _ = T.train_soft_extract(fwd_soft, params, r0,
+                                        self.data(task, "train"), task, sc)
+        masses = np.asarray(jnp.sum(jnp.clip(r, 0, 1), axis=1))
+        retention = M.derive_retention(masses, task.seq_len)
+        log(f"{ds}: retention {retention} "
+            f"(agg {sum(retention)}/{cfg.num_layers * task.seq_len})")
+        fwd_ex_train = M.make_forward(cfg, retention=retention, use_pallas=False)
+        p3, _ = T.train_classifier(fwd_ex_train, p2, self.data(task, "train"),
+                                   task, rt)
+        dev = T.evaluate(fwd_ex_train, p3, self.data(task, "test"), task)
+        log(f"{ds}: {variant} dev {task.metric} = {dev:.4f}")
+        save_params(ckpt, p3)
+        fwd_ex = M.make_forward(cfg, retention=retention, use_pallas=EXPORT_USE_PALLAS)
+        self.export(ds, variant, fwd_ex, p3, cfg, task, {
+            "config_hash": chash, "train_hash": train_hash,
+            "dev_metric": dev, "kind": "power",
+            "retention": retention, "lambda": lam,
+            "aggregate_word_vectors": int(sum(retention)),
+            "baseline_word_vectors": int(cfg.num_layers * task.seq_len),
+        })
+        if export_debug:
+            self._export_debug(ds, variant, cfg, task, p3, retention, chash)
+
+    def _export_debug(self, ds, variant, cfg, task, p3, retention, chash):
+        """Debug artifact: also emits kept-position traces (Figure 8)."""
+        out_dbg = os.path.join(ART, ds, f"{variant}-debug")
+        fwd_dbg = M.make_forward(cfg, retention=retention,
+                                 use_pallas=EXPORT_USE_PALLAS, collect=True)
+        os.makedirs(out_dbg, exist_ok=True)
+        from .params_io import flatten_params
+        named = flatten_params(p3)
+        np.savez(os.path.join(out_dbg, "weights.npz"), **dict(named))
+        text = aot.lower_infer_fn(fwd_dbg, p3, 1, task.seq_len, extra_outputs=True)
+        with open(os.path.join(out_dbg, "model.b1.hlo.txt"), "w") as f:
+            f.write(text)
+        with open(os.path.join(out_dbg, "meta.json"), "w") as f:
+            json.dump({"dataset": ds, "variant": f"{variant}-debug",
+                       "kind": "power-debug", "seq_len": task.seq_len,
+                       "batch_sizes": [1], "hlo": {"1": "model.b1.hlo.txt"},
+                       "weights": "weights.npz", "retention": retention,
+                       "num_layers": cfg.num_layers,
+                       "num_classes": cfg.num_classes,
+                       "param_order": [n for n, _ in named],
+                       "metric": task.metric,
+                       "config_hash": chash}, f, indent=1)
+        log(f"exported {ds}/{variant}-debug")
+
+    def encoder_eliminated(self, ds: str, kind: str, keep_layers: int):
+        """DistilBERT / BERT-PKD baseline point."""
+        task = self.task(ds)
+        variant = f"{kind}{keep_layers}"
+        cfg, params, _ = self.baseline(ds)
+        tc = self.tc_for(task, self.prof.retrain)
+        chash = config_hash(cfg, task, tc, keep_layers)
+        if self._fresh(os.path.join(ART, ds, variant), chash):
+            return
+        log(f"{ds}: training {variant} ...")
+        s_cfg, s_params, _ = B.train_encoder_eliminated(
+            kind, params, None, cfg, keep_layers, self.data(task, "train"),
+            task, tc, use_pallas=False)
+        fwd = M.make_forward(s_cfg, use_pallas=False)
+        dev = T.evaluate(fwd, s_params, self.data(task, "test"), task)
+        log(f"{ds}: {variant} dev {task.metric} = {dev:.4f}")
+        self.export(ds, variant, M.make_forward(s_cfg, use_pallas=EXPORT_USE_PALLAS),
+                    s_params, s_cfg, task,
+                    {"config_hash": chash, "dev_metric": dev, "kind": kind,
+                     "kept_layers": keep_layers})
+
+    def head_pruned(self, ds: str, keep_fraction: float):
+        task = self.task(ds)
+        variant = f"headprune{int(keep_fraction * 100)}"
+        cfg, params, _ = self.baseline(ds)
+        tc = self.tc_for(task, dataclasses.replace(
+            self.prof.retrain, steps=max(50, self.prof.retrain.steps // 2)))
+        chash = config_hash(cfg, task, tc, keep_fraction)
+        if self._fresh(os.path.join(ART, ds, variant), chash):
+            return
+        log(f"{ds}: training {variant} ...")
+        pruned, gates, _ = B.train_head_pruned(params, cfg, keep_fraction,
+                                               self.data(task, "train"), task,
+                                               tc, use_pallas=False)
+        fwd = M.make_forward(cfg, use_pallas=False)
+        dev = T.evaluate(fwd, pruned, self.data(task, "test"), task)
+        log(f"{ds}: {variant} dev {task.metric} = {dev:.4f} "
+            f"(heads kept {int(gates.sum())}/{gates.size})")
+        self.export(ds, variant, M.make_forward(cfg, use_pallas=EXPORT_USE_PALLAS), pruned,
+                    cfg, task, {"config_hash": chash, "dev_metric": dev,
+                                "kind": "headprune",
+                                "keep_fraction": keep_fraction,
+                                "heads_kept": int(gates.sum())})
+
+    def strategy_ablation(self, ds: str = "sst2"):
+        """Table 4: Head-WS vs Rand-WS vs Attn-WS on a fixed retention
+        config (the paper's (64,32,16,...) scaled to our N and L)."""
+        task = self.task(ds)
+        cfg, params, _ = self.baseline(ds)
+        n = task.seq_len
+        # Elimination must bite from the first encoder (before attention has
+        # diffused the evidence) for the strategy gap to be observable —
+        # analog of the paper's (64,32,16,...) at their N=128 SST-2 scale.
+        fixed = [n // 2, n // 4] + [n // 8] * (cfg.num_layers - 2)
+        fixed = M.derive_retention(np.array(fixed, dtype=float), n)
+        for strategy in ("attn", "head", "rand"):
+            variant = f"power-{strategy}ws"
+            tc = self.tc_for(task, self.prof.retrain)
+            chash = f"{config_hash(cfg, task, tc, tuple(fixed), strategy)}-v{EXPORT_VERSION}zs"
+            if self._fresh(os.path.join(ART, ds, variant), chash):
+                continue
+            log(f"{ds}: ablation {variant} retention={fixed}")
+            fwd_tr = M.make_forward(cfg, retention=fixed, strategy=strategy,
+                                    use_pallas=False)
+            p, _ = T.train_classifier(fwd_tr, params, self.data(task, "train"), task, tc)
+            dev = T.evaluate(fwd_tr, p, self.data(task, "test"), task)
+            log(f"{ds}: {variant} dev {task.metric} = {dev:.4f}")
+            self.export(ds, variant,
+                        M.make_forward(cfg, retention=fixed, strategy=strategy,
+                                       use_pallas=EXPORT_USE_PALLAS),
+                        p, cfg, task,
+                        {"config_hash": chash, "dev_metric": dev,
+                         "kind": f"power-{strategy}ws", "retention": fixed,
+                         "strategy": strategy})
+            # Zero-shot variant: extraction strategy applied to the frozen
+            # fine-tuned baseline with NO re-training — isolates the scoring
+            # function's value (the paper's Attn-WS gap depends on limited
+            # adaptation; see EXPERIMENTS.md Table 4 discussion).
+            fwd_zs = M.make_forward(cfg, retention=fixed, strategy=strategy,
+                                    use_pallas=False)
+            dev_zs = T.evaluate(fwd_zs, params, self.data(task, "test"), task)
+            log(f"{ds}: {variant}-zeroshot dev {task.metric} = {dev_zs:.4f}")
+            self.export(ds, f"{variant}-zeroshot",
+                        M.make_forward(cfg, retention=fixed, strategy=strategy,
+                                       use_pallas=EXPORT_USE_PALLAS),
+                        params, cfg, task,
+                        {"config_hash": chash, "dev_metric": dev_zs,
+                         "kind": f"power-{strategy}ws-zeroshot",
+                         "retention": fixed, "strategy": strategy})
+
+    # -- index ------------------------------------------------------------
+
+    def write_index(self):
+        index: Dict[str, Dict] = {"profile": self.prof.name, "datasets": {}}
+        for ds in sorted(os.listdir(ART)):
+            ds_dir = os.path.join(ART, ds)
+            if not os.path.isdir(ds_dir) or ds == "analysis":
+                continue
+            variants = {}
+            for v in sorted(os.listdir(ds_dir)):
+                meta_p = os.path.join(ds_dir, v, "meta.json")
+                if os.path.exists(meta_p):
+                    with open(meta_p) as f:
+                        m = json.load(f)
+                    variants[v] = {"kind": m.get("kind"), "metric": m.get("metric"),
+                                   "dev_metric": m.get("dev_metric"),
+                                   "seq_len": m.get("seq_len"),
+                                   "retention": m.get("retention")}
+            if variants:
+                t = TASKS.get(ds)
+                index["datasets"][ds] = {
+                    "variants": variants,
+                    "task": t.task if t else None,
+                    "num_classes": t.num_classes if t else None,
+                    "seq_len": t.seq_len if t else None,
+                    "paper_seq_len": t.paper_seq_len if t else None,
+                    "test": "test.npz" if os.path.exists(os.path.join(ds_dir, "test.npz")) else None,
+                }
+        with open(os.path.join(ART, "index.json"), "w") as f:
+            json.dump(index, f, indent=1)
+        log("index.json updated")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", default="full", choices=["quick", "full"])
+    ap.add_argument("--datasets", default=None,
+                    help="comma list; default = profile's dataset set")
+    ap.add_argument("--stages", default="core",
+                    help="comma list of: core, pareto, albert, ablation, all")
+    args = ap.parse_args()
+
+    prof = get_profile(args.profile)
+    pipe = Pipeline(prof)
+    datasets = args.datasets.split(",") if args.datasets else list(prof.datasets)
+    stages = set(args.stages.split(","))
+    if "all" in stages:
+        stages = {"core", "pareto", "albert", "ablation"}
+
+    # Default lambda for the Table-2 "<1% accuracy loss" operating point; the
+    # pareto sweep refines it for the Figure-7 datasets.
+    default_lambda = prof.pareto_lambdas[len(prof.pareto_lambdas) // 2]
+
+    if "core" in stages:
+        for ds in datasets:
+            base = pipe.baseline(ds)
+            pipe.power(ds, default_lambda, "power-default", base=base,
+                       export_debug=(ds == "sst2"))
+            pipe.write_index()
+
+    if "ablation" in stages and "sst2" in datasets:
+        pipe.strategy_ablation("sst2")
+        pipe.write_index()
+
+    if "pareto" in stages:
+        for ds in [d for d in prof.pareto_datasets if d in datasets]:
+            base = pipe.baseline(ds)
+            for lam in prof.pareto_lambdas:
+                pipe.power(ds, lam, f"power-l{lam:g}", base=base)
+            # Paper keeps {3,4,6} of 12 encoders; scaled to our depth.
+            L_ = prof.bert.num_layers
+            for k in sorted({max(1, L_ // 3), L_ // 2, max(2, 2 * L_ // 3)}):
+                pipe.encoder_eliminated(ds, "distil", k)
+                pipe.encoder_eliminated(ds, "pkd", k)
+            for frac in (0.25, 0.5, 0.75):
+                pipe.head_pruned(ds, frac)
+            pipe.write_index()
+
+    if "albert" in stages:
+        for ds in [d for d in GLUE_TASKS if d in datasets]:
+            base = pipe.baseline(ds, albert=True)
+            pipe.power(ds, default_lambda, "albert-power", albert=True, base=base)
+            pipe.write_index()
+
+    pipe.write_index()
+    log("done")
+
+
+if __name__ == "__main__":
+    main()

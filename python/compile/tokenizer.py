@@ -1,0 +1,139 @@
+"""Word-level tokenizer over the synthetic vocabulary.
+
+Mirrored exactly by the Rust implementation in ``rust/src/tokenizer`` —
+both sides load the same ``artifacts/vocab.json``. Keep the two in sync:
+whitespace-split words, exact-match lookup, OOV -> [UNK], [CLS] prepended,
+[SEP] between segments and after the last one, [PAD] to ``seq_len``.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+PAD, UNK, CLS, SEP = "[PAD]", "[UNK]", "[CLS]", "[SEP]"
+PAD_ID, UNK_ID, CLS_ID, SEP_ID = 0, 1, 2, 3
+SPECIALS = [PAD, UNK, CLS, SEP]
+
+
+@dataclass
+class Vocab:
+    words: List[str]
+    families: Dict[str, Tuple[int, int]]  # family -> [start, end) id range
+
+    def __post_init__(self):
+        self.index = {w: i for i, w in enumerate(self.words)}
+
+    def __len__(self) -> int:
+        return len(self.words)
+
+    def id(self, word: str) -> int:
+        return self.index.get(word, UNK_ID)
+
+    def family_ids(self, family: str) -> range:
+        s, e = self.families[family]
+        return range(s, e)
+
+    def family_of(self, token_id: int) -> Optional[str]:
+        for fam, (s, e) in self.families.items():
+            if s <= token_id < e:
+                return fam
+        return None
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"words": self.words, "families": {k: list(v) for k, v in self.families.items()}}, f)
+
+    @staticmethod
+    def load(path: str) -> "Vocab":
+        with open(path) as f:
+            d = json.load(f)
+        return Vocab(d["words"], {k: (v[0], v[1]) for k, v in d["families"].items()})
+
+
+# Family mix (fractions of the non-special vocab budget). The synthetic
+# language needs: sentiment-bearing words, negations that flip them,
+# entities/relations for NLI-style tasks, word classes for the grammar
+# (CoLA-analog) task, and a large mass of filler so that label evidence is
+# sparse — the property that makes attention-based word-vector selection
+# (Attn-WS) genuinely better than positional heuristics (Head-WS).
+_FAMILY_MIX = [
+    ("pos", 0.06),
+    ("neg", 0.06),
+    ("negation", 0.01),
+    ("intens", 0.02),
+    ("entity", 0.22),
+    ("relation", 0.03),
+    ("noun", 0.08),
+    ("verb", 0.08),
+    ("adj", 0.06),
+    ("query", 0.01),
+    ("filler", 0.37),
+]
+
+
+def build_vocab(vocab_size: int) -> Vocab:
+    budget = vocab_size - len(SPECIALS)
+    assert budget >= 100, "vocab too small for the synthetic language"
+    words = list(SPECIALS)
+    families: Dict[str, Tuple[int, int]] = {}
+    sizes = {fam: max(2, int(frac * budget)) for fam, frac in _FAMILY_MIX}
+    # Give any rounding slack to filler.
+    slack = budget - sum(sizes.values())
+    sizes["filler"] += slack
+    for fam, _ in _FAMILY_MIX:
+        start = len(words)
+        words.extend(f"{fam}_{i}" for i in range(sizes[fam]))
+        families[fam] = (start, len(words))
+    assert len(words) == vocab_size
+    return Vocab(words, families)
+
+
+class Tokenizer:
+    """Encodes text (or pre-split word lists) into fixed-length id arrays."""
+
+    def __init__(self, vocab: Vocab):
+        self.vocab = vocab
+
+    def encode(
+        self,
+        segment_a: Sequence[str] | str,
+        segment_b: Optional[Sequence[str] | str] = None,
+        seq_len: int = 64,
+    ) -> Tuple[List[int], List[int]]:
+        """Returns (token_ids, segment_ids), both of length ``seq_len``.
+
+        Layout: [CLS] a... [SEP] (b... [SEP])? [PAD]*
+        Truncates segments right-first to fit, like BERT's simple strategy.
+        """
+        a = segment_a.split() if isinstance(segment_a, str) else list(segment_a)
+        b = (segment_b.split() if isinstance(segment_b, str) else list(segment_b)) if segment_b is not None else None
+        n_special = 2 + (1 if b is not None else 0)
+        # Truncate the longer segment first until the pair fits.
+        if b is None:
+            a = a[: seq_len - n_special]
+        else:
+            while len(a) + len(b) > seq_len - n_special:
+                if len(a) >= len(b):
+                    a = a[:-1]
+                else:
+                    b = b[:-1]
+        ids = [CLS_ID] + [self.vocab.id(w) for w in a] + [SEP_ID]
+        segs = [0] * len(ids)
+        if b is not None:
+            ids += [self.vocab.id(w) for w in b] + [SEP_ID]
+            segs += [1] * (len(b) + 1)
+        pad = seq_len - len(ids)
+        ids += [PAD_ID] * pad
+        segs += [0] * pad
+        return ids, segs
+
+    def decode(self, ids: Sequence[int], skip_special: bool = True) -> List[str]:
+        out = []
+        for i in ids:
+            w = self.vocab.words[i] if 0 <= int(i) < len(self.vocab.words) else UNK
+            if skip_special and w in SPECIALS:
+                continue
+            out.append(w)
+        return out

@@ -1,0 +1,313 @@
+"""Training: hand-rolled Adam, losses, metrics, and the training loops used
+by every phase (fine-tune, configuration-search, re-train, distillation).
+
+No optax/flax in this environment — the optimizer is a ~40-line Adam with
+decoupled weight decay, linear warmup/decay, and a per-leaf learning-rate
+multiplier tree (the paper trains the soft-extract retention parameters with
+a much higher learning rate than the BERT weights, §4.1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import TaskSpec, TrainConfig
+
+Pytree = object
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1))
+
+
+def mse(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.square(pred.squeeze(-1) - target))
+
+
+def task_loss(logits: jnp.ndarray, labels: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    if num_classes == 1:
+        return mse(logits, labels)
+    return cross_entropy(logits, labels)
+
+
+def kl_soft_targets(student_logits, teacher_logits, temperature=2.0):
+    """Distillation soft-target loss (Hinton et al.), used by DistilBERT/PKD."""
+    t = temperature
+    p_t = jax.nn.softmax(teacher_logits / t, axis=-1)
+    logp_s = jax.nn.log_softmax(student_logits / t, axis=-1)
+    return -jnp.mean(jnp.sum(p_t * logp_s, axis=-1)) * t * t
+
+
+# ---------------------------------------------------------------------------
+# Metrics (numpy; mirrored in rust/src/eval for the benches)
+# ---------------------------------------------------------------------------
+
+def accuracy(pred: np.ndarray, y: np.ndarray) -> float:
+    return float(np.mean(pred == y))
+
+
+def f1_binary(pred: np.ndarray, y: np.ndarray) -> float:
+    tp = float(np.sum((pred == 1) & (y == 1)))
+    fp = float(np.sum((pred == 1) & (y == 0)))
+    fn = float(np.sum((pred == 0) & (y == 1)))
+    denom = 2 * tp + fp + fn
+    return 2 * tp / denom if denom > 0 else 0.0
+
+
+def matthews(pred: np.ndarray, y: np.ndarray) -> float:
+    tp = float(np.sum((pred == 1) & (y == 1)))
+    tn = float(np.sum((pred == 0) & (y == 0)))
+    fp = float(np.sum((pred == 1) & (y == 0)))
+    fn = float(np.sum((pred == 0) & (y == 1)))
+    denom = np.sqrt((tp + fp) * (tp + fn) * (tn + fp) * (tn + fn))
+    return (tp * tn - fp * fn) / denom if denom > 0 else 0.0
+
+
+def _ranks(x: np.ndarray) -> np.ndarray:
+    order = np.argsort(x)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(len(x))
+    return ranks
+
+
+def spearman(pred: np.ndarray, y: np.ndarray) -> float:
+    rp, ry = _ranks(pred), _ranks(y)
+    rp, ry = rp - rp.mean(), ry - ry.mean()
+    denom = np.sqrt(np.sum(rp**2) * np.sum(ry**2))
+    return float(np.sum(rp * ry) / denom) if denom > 0 else 0.0
+
+
+def compute_metric(metric: str, outputs: np.ndarray, labels: np.ndarray) -> float:
+    """outputs: logits [n, C] (classification) or [n, 1] (regression)."""
+    if metric == "spearman":
+        return spearman(outputs[:, 0], labels)
+    pred = outputs.argmax(axis=-1)
+    if metric == "accuracy":
+        return accuracy(pred, labels)
+    if metric == "f1":
+        return f1_binary(pred, labels)
+    if metric == "matthews":
+        return matthews(pred, labels)
+    raise ValueError(metric)
+
+
+# ---------------------------------------------------------------------------
+# Adam with decoupled weight decay and per-leaf lr multipliers
+# ---------------------------------------------------------------------------
+
+def adam_init(params: Pytree):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def lr_schedule(step, total_steps, base_lr, warmup_frac):
+    warm = max(1, int(total_steps * warmup_frac))
+    lr = jnp.where(
+        step < warm,
+        base_lr * step / warm,
+        base_lr * jnp.maximum(0.0, (total_steps - step) / max(1, total_steps - warm)),
+    )
+    return lr
+
+
+def adam_step(params, grads, state, *, lr, lr_mult: Optional[Pytree] = None,
+              weight_decay=0.0, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+
+    if lr_mult is None:
+        lr_mult = jax.tree.map(lambda _: 1.0, params)
+
+    def upd(p, m_, v_, mult):
+        step_ = lr * mult * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        if weight_decay > 0:
+            step_ = step_ + lr * mult * weight_decay * p
+        return p - step_
+
+    new_params = jax.tree.map(upd, params, m, v, lr_mult)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Data iteration
+# ---------------------------------------------------------------------------
+
+def batches(rng: np.random.Generator, arrays: Tuple[np.ndarray, ...],
+            batch_size: int, steps: int):
+    """Yields ``steps`` shuffled batches, reshuffling each epoch."""
+    n = arrays[0].shape[0]
+    idx = rng.permutation(n)
+    at = 0
+    for _ in range(steps):
+        if at + batch_size > n:
+            idx = rng.permutation(n)
+            at = 0
+        sel = idx[at : at + batch_size]
+        at += batch_size
+        yield tuple(a[sel] for a in arrays)
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+def train_classifier(fwd: Callable, params: Pytree, data, task: TaskSpec,
+                     tc: TrainConfig, extra_loss: Optional[Callable] = None,
+                     lr_mult: Optional[Pytree] = None) -> Pytree:
+    """Generic supervised loop.
+
+    fwd(params, tokens, segs) -> (logits, aux).
+    extra_loss(params, aux) -> scalar added to the task loss (regularizers,
+    distillation terms get their own loops below).
+    """
+    tokens, segs, labels = data
+    state = adam_init(params)
+    rng = np.random.default_rng(tc.seed)
+
+    @jax.jit
+    def step_fn(params, state, t, tok, sg, y):
+        def loss_fn(p):
+            logits, aux = fwd(p, tok, sg)
+            loss = task_loss(logits, y, task.num_classes)
+            if extra_loss is not None:
+                loss = loss + extra_loss(p, aux)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = lr_schedule(t, tc.steps, tc.lr, tc.warmup_frac)
+        params, state = adam_step(params, grads, state, lr=lr,
+                                  lr_mult=lr_mult, weight_decay=tc.weight_decay)
+        return params, state, loss
+
+    losses = []
+    for t, (tok, sg, y) in enumerate(batches(rng, (tokens, segs, labels), tc.batch_size, tc.steps)):
+        params, state, loss = step_fn(params, state, jnp.asarray(t, jnp.float32), tok, sg, y)
+        losses.append(float(loss))
+    return params, losses
+
+
+def train_soft_extract(fwd_soft: Callable, params: Pytree, r0: jnp.ndarray,
+                       data, task: TaskSpec, tc: TrainConfig) -> Tuple[Pytree, jnp.ndarray, List[float]]:
+    """Configuration-search phase (paper §3.4 step 2).
+
+    Minimizes  L(theta, r) + lambda * sum_j j * mass(j; r)  with r in [0,1]
+    (projected after each step), retention params trained at
+    ``tc.soft_extract_lr`` while BERT weights use ``tc.lr``.
+    """
+    tokens, segs, labels = data
+    trainable = (params, r0)
+    state = adam_init(trainable)
+    rng = np.random.default_rng(tc.seed)
+    L = r0.shape[0]
+    j_scale = jnp.arange(1, L + 1, dtype=jnp.float32)  # paper scales mass by encoder index
+
+    lr_mult = (jax.tree.map(lambda _: 1.0, params), tc.soft_extract_lr / tc.lr)
+
+    @jax.jit
+    def step_fn(trainable, state, t, tok, sg, y):
+        def loss_fn(tr):
+            p, r = tr
+            logits, mass = fwd_soft(p, r, tok, sg)
+            base = task_loss(logits, y, task.num_classes)
+            reg = jnp.sum(j_scale * jnp.mean(mass, axis=0))
+            return base + tc.lambda_reg * reg, (base, reg)
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+        lr = lr_schedule(t, tc.steps, tc.lr, tc.warmup_frac)
+        trainable, state = adam_step(trainable, grads, state, lr=lr,
+                                     lr_mult=lr_mult, weight_decay=0.0)
+        p, r = trainable
+        trainable = (p, jnp.clip(r, 0.0, 1.0))  # projection onto [0,1]
+        return trainable, state, loss
+
+    losses = []
+    for t, (tok, sg, y) in enumerate(batches(rng, (tokens, segs, labels), tc.batch_size, tc.steps)):
+        trainable, state, loss = step_fn(trainable, state, jnp.asarray(t, jnp.float32), tok, sg, y)
+        losses.append(float(loss))
+    params, r = trainable
+    return params, r, losses
+
+
+def train_distilled(student_fwd: Callable, student_params: Pytree,
+                    teacher_fwd: Callable, teacher_params: Pytree,
+                    data, task: TaskSpec, tc: TrainConfig,
+                    alpha: float = 0.5, temperature: float = 2.0,
+                    pkd_layer_map: Optional[List[Tuple[int, int]]] = None,
+                    pkd_beta: float = 10.0) -> Pytree:
+    """DistilBERT-style (and, with ``pkd_layer_map``, BERT-PKD-style) training.
+
+    loss = alpha * CE(student, y) + (1-alpha) * KL(student || teacher)
+           [+ pkd_beta * mean ||norm(CLS_s^i) - norm(CLS_t^j)||^2]
+    """
+    tokens, segs, labels = data
+    state = adam_init(student_params)
+    rng = np.random.default_rng(tc.seed)
+
+    @jax.jit
+    def step_fn(params, state, t, tok, sg, y):
+        t_logits, t_aux = teacher_fwd(teacher_params, tok, sg)
+
+        def loss_fn(p):
+            s_logits, s_aux = student_fwd(p, tok, sg)
+            loss = alpha * task_loss(s_logits, y, task.num_classes)
+            loss = loss + (1 - alpha) * kl_soft_targets(s_logits, t_logits, temperature)
+            if pkd_layer_map is not None:
+                pkd = 0.0
+                for si, ti in pkd_layer_map:
+                    cs = s_aux["hidden"][si][:, 0, :]
+                    ct = t_aux["hidden"][ti][:, 0, :]
+                    cs = cs / (jnp.linalg.norm(cs, axis=-1, keepdims=True) + 1e-8)
+                    ct = ct / (jnp.linalg.norm(ct, axis=-1, keepdims=True) + 1e-8)
+                    pkd = pkd + jnp.mean(jnp.sum(jnp.square(cs - ct), axis=-1))
+                loss = loss + pkd_beta * pkd / max(1, len(pkd_layer_map))
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = lr_schedule(t, tc.steps, tc.lr, tc.warmup_frac)
+        params, state = adam_step(params, grads, state, lr=lr, weight_decay=tc.weight_decay)
+        return params, state, loss
+
+    losses = []
+    for t, (tok, sg, y) in enumerate(batches(rng, (tokens, segs, labels), tc.batch_size, tc.steps)):
+        student_params, state, loss = step_fn(student_params, state, jnp.asarray(t, jnp.float32), tok, sg, y)
+        losses.append(float(loss))
+    return student_params, losses
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def predict_all(fwd: Callable, params: Pytree, tokens, segs,
+                batch_size: int = 64) -> np.ndarray:
+    outs = []
+    n = tokens.shape[0]
+    fwd_j = jax.jit(lambda p, t, s: fwd(p, t, s)[0])
+    for i in range(0, n, batch_size):
+        tok, sg = tokens[i : i + batch_size], segs[i : i + batch_size]
+        pad = 0
+        if tok.shape[0] < batch_size:
+            pad = batch_size - tok.shape[0]
+            tok = np.pad(tok, ((0, pad), (0, 0)))
+            sg = np.pad(sg, ((0, pad), (0, 0)))
+        o = np.asarray(fwd_j(params, tok, sg))
+        outs.append(o[: batch_size - pad])
+    return np.concatenate(outs, axis=0)
+
+
+def evaluate(fwd: Callable, params: Pytree, data, task: TaskSpec,
+             batch_size: int = 64) -> float:
+    tokens, segs, labels = data
+    outputs = predict_all(fwd, params, tokens, segs, batch_size)
+    return compute_metric(task.metric, outputs, labels)

@@ -1,0 +1,46 @@
+"""Shared fixtures: a tiny BertConfig + vocab + dataset so every test runs in
+seconds on one CPU core. All tests use the same code paths as the full
+pipeline (only scaled down)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import data as D
+from compile import layers as L
+from compile.tokenizer import build_vocab
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return C.BertConfig(vocab_size=256, hidden_size=16, num_layers=3,
+                        num_heads=2, ffn_size=32, max_len=32)
+
+
+@pytest.fixture(scope="session")
+def vocab(tiny_cfg):
+    return build_vocab(tiny_cfg.vocab_size)
+
+
+@pytest.fixture(scope="session")
+def sst2_task():
+    return dataclasses.replace(C.TASKS["sst2"], train_size=96, test_size=48,
+                               seq_len=16)
+
+
+@pytest.fixture(scope="session")
+def sst2_data(sst2_task, vocab):
+    return D.generate(sst2_task, vocab, "train")
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return L.init_params(jax.random.PRNGKey(0), tiny_cfg)

@@ -1,0 +1,151 @@
+"""Synthetic task suite + tokenizer: label consistency (oracle checks),
+determinism, shapes, vocabulary structure."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import data as D
+from compile.tokenizer import CLS_ID, PAD_ID, SEP_ID, Tokenizer, Vocab, build_vocab
+
+
+def small(task_name, **kw):
+    base = {"train_size": 64, "test_size": 32}
+    base.update(kw)
+    return dataclasses.replace(C.TASKS[task_name], **base)
+
+
+# ---------------------------------------------------------------------------
+# Vocab / tokenizer
+# ---------------------------------------------------------------------------
+
+def test_vocab_structure(vocab):
+    assert vocab.words[PAD_ID] == "[PAD]"
+    assert vocab.words[CLS_ID] == "[CLS]"
+    for fam in ("pos", "neg", "negation", "entity", "relation", "filler"):
+        s, e = vocab.families[fam]
+        assert e > s
+        assert all(vocab.words[i].startswith(fam) for i in range(s, e))
+
+
+def test_vocab_roundtrip(tmp_path, vocab):
+    p = tmp_path / "vocab.json"
+    vocab.save(str(p))
+    v2 = Vocab.load(str(p))
+    assert v2.words == vocab.words
+    assert v2.families == vocab.families
+
+
+def test_tokenizer_single_layout(vocab):
+    t = Tokenizer(vocab)
+    ids, segs = t.encode(["filler_0", "filler_1"], None, 8)
+    assert ids[0] == CLS_ID
+    assert ids[3] == SEP_ID
+    assert ids[4:] == [PAD_ID] * 4
+    assert segs == [0] * 8
+
+
+def test_tokenizer_pair_layout(vocab):
+    t = Tokenizer(vocab)
+    ids, segs = t.encode(["filler_0"], ["filler_1", "filler_2"], 8)
+    assert ids[0] == CLS_ID
+    assert segs == [0, 0, 0, 1, 1, 1, 0, 0]
+    assert ids.count(SEP_ID) == 2
+
+
+def test_tokenizer_truncation(vocab):
+    t = Tokenizer(vocab)
+    ids, _ = t.encode(["filler_0"] * 50, ["filler_1"] * 50, 16)
+    assert len(ids) == 16
+    assert ids.count(PAD_ID) == 0
+
+
+def test_tokenizer_oov(vocab):
+    t = Tokenizer(vocab)
+    ids, _ = t.encode(["xyzzy"], None, 4)
+    assert ids[1] == 1  # UNK
+
+
+# ---------------------------------------------------------------------------
+# Generators: determinism + shapes + oracle label checks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(C.TASKS.keys()))
+def test_generator_shapes_and_determinism(name, vocab):
+    task = small(name)
+    a1 = D.generate(task, vocab, "test")
+    a2 = D.generate(task, vocab, "test")
+    np.testing.assert_array_equal(a1[0], a2[0])
+    np.testing.assert_array_equal(a1[2], a2[2])
+    assert a1[0].shape == (32, task.seq_len)
+    assert a1[0].dtype == np.int32
+    # CLS at position 0 everywhere.
+    assert np.all(a1[0][:, 0] == CLS_ID)
+
+
+def test_splits_differ(vocab):
+    task = small("sst2")
+    tr = D.generate(task, vocab, "train")
+    te = D.generate(task, vocab, "test")
+    assert not np.array_equal(tr[0][: len(te[0])], te[0])
+
+
+def test_sentiment_oracle_consistency(vocab):
+    """Labels must be recoverable by the generative rule (clean data)."""
+    task = small("sst2", test_size=256)
+    tok, _, y = D.generate(task, vocab, "test")
+    pos = set(vocab.family_ids("pos"))
+    neg = set(vocab.family_ids("neg"))
+    nega = set(vocab.family_ids("negation"))
+    correct = 0
+    for i in range(len(y)):
+        score = 0
+        ids = tok[i]
+        for j, t in enumerate(ids):
+            t = int(t)
+            flip = j > 0 and int(ids[j - 1]) in nega
+            if t in pos:
+                score += -1 if flip else 1
+            elif t in neg:
+                score += 1 if flip else -1
+        correct += (score > 0) == (y[i] == 1)
+    assert correct / len(y) == 1.0
+
+
+def test_nli_entailment_oracle(vocab):
+    """For NLI: label=1 (entail) iff the hypothesis triple appears verbatim
+    in the premise."""
+    task = small("rte", test_size=128, seq_len=64)
+    tok, segs, y = D.generate(task, vocab, "test")
+    for i in range(len(y)):
+        row = tok[i]
+        seg = segs[i]
+        hyp = [int(t) for t, s in zip(row, seg) if s == 1 and t > 3]
+        prem = [int(t) for t, s in zip(row, seg) if s == 0 and t > 3]
+        trip = tuple(hyp[:3])
+        found = any(tuple(prem[j : j + 3]) == trip for j in range(len(prem) - 2))
+        assert found == (y[i] == 1), f"row {i}"
+
+
+def test_regression_labels_in_range(vocab):
+    task = small("stsb")
+    _, _, y = D.generate(task, vocab, "test")
+    assert y.dtype == np.float32
+    assert np.all((y >= 0.0) & (y <= 5.0))
+
+
+def test_classes_are_balanced_enough(vocab):
+    task = small("mnli-m", test_size=300)
+    _, _, y = D.generate(task, vocab, "test")
+    counts = np.bincount(y.astype(int), minlength=3)
+    assert np.all(counts > 300 / 3 * 0.5), counts
+
+
+def test_variable_lengths_have_padding(vocab):
+    task = small("sst2", test_size=64)
+    tok, _, _ = D.generate(task, vocab, "test")
+    pad_counts = (tok == PAD_ID).sum(axis=1)
+    assert pad_counts.max() > 0
+    assert pad_counts.std() > 0  # lengths actually vary

@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+This is the CORE correctness signal of the compile path: if these pass, the
+AOT-exported HLO computes what ref.py defines. Hypothesis sweeps shapes and
+dtypes; fixed tests pin the paper-relevant invariants.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import PALLAS, REF
+
+ATOL = 2e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mha_with_scores
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([4, 8, 16, 32]),
+    d=st.sampled_from([4, 8, 16]),
+    valid_frac=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mha_matches_ref(heads, n, d, valid_frac, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, heads, n, d), rand(rng, heads, n, d), rand(rng, heads, n, d)
+    n_valid = max(1, int(valid_frac * n))
+    mask = jnp.asarray((np.arange(n) < n_valid).astype(np.float32))
+    ctx_p, sig_p = PALLAS.mha_with_scores(q, k, v, mask)
+    ctx_r, sig_r = REF.mha_with_scores(q, k, v, mask)
+    np.testing.assert_allclose(ctx_p, ctx_r, atol=ATOL)
+    np.testing.assert_allclose(sig_p, sig_r, atol=ATOL)
+
+
+def test_mha_blocked_grid_matches():
+    rng = np.random.default_rng(0)
+    q, k, v = (rand(rng, 4, 32, 8) for _ in range(3))
+    mask = jnp.ones(32)
+    ctx_full, sig_full = PALLAS.mha_with_scores(q, k, v, mask, block_q=32)
+    ctx_blk, sig_blk = PALLAS.mha_with_scores(q, k, v, mask, block_q=8)
+    np.testing.assert_allclose(ctx_full, ctx_blk, atol=ATOL)
+    np.testing.assert_allclose(sig_full, sig_blk, atol=ATOL)
+
+
+def test_sig_is_masked_column_sums():
+    """Sig(w) = sum over heads and VALID query rows of A_h[w', w]."""
+    rng = np.random.default_rng(1)
+    q, k, v = (rand(rng, 2, 8, 4) for _ in range(3))
+    mask = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
+    _, sig = PALLAS.mha_with_scores(q, k, v, mask)
+    sig = np.asarray(sig)
+    # PAD columns receive (almost) no attention -> near-zero significance.
+    assert np.all(sig[5:] < 1e-3)
+    # Valid columns: each valid row contributes a probability mass of 1
+    # split over valid columns; 2 heads * 5 rows = total mass 10.
+    assert abs(sig.sum() - 10.0) < 1e-2
+
+def test_mha_rows_sum_to_one_property():
+    """Softmax invariant: total significance mass == heads * valid rows."""
+    rng = np.random.default_rng(2)
+    for n_valid in [1, 3, 8]:
+        q, k, v = (rand(rng, 3, 8, 4) for _ in range(3))
+        mask = jnp.asarray((np.arange(8) < n_valid).astype(np.float32))
+        _, sig = PALLAS.mha_with_scores(q, k, v, mask)
+        assert abs(float(jnp.sum(sig)) - 3.0 * n_valid) < 1e-2
+
+
+def test_mha_vmap_batches():
+    rng = np.random.default_rng(3)
+    qb, kb, vb = (rand(rng, 4, 2, 8, 4) for _ in range(3))
+    mask = jnp.ones((4, 8))
+    ctx, sig = jax.vmap(PALLAS.mha_with_scores)(qb, kb, vb, mask)
+    ctx_r, sig_r = jax.vmap(REF.mha_with_scores)(qb, kb, vb, mask)
+    np.testing.assert_allclose(ctx, ctx_r, atol=ATOL)
+    np.testing.assert_allclose(sig, sig_r, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# ffn
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 16, 32, 64]),
+    h=st.sampled_from([8, 16]),
+    i=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(n, h, i, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, h)
+    w1, b1 = rand(rng, h, i) * 0.1, rand(rng, i) * 0.1
+    w2, b2 = rand(rng, i, h) * 0.1, rand(rng, h) * 0.1
+    np.testing.assert_allclose(
+        PALLAS.ffn(x, w1, b1, w2, b2), REF.ffn(x, w1, b1, w2, b2), atol=ATOL)
+
+
+def test_ffn_row_blocking_invariance():
+    rng = np.random.default_rng(4)
+    x = rand(rng, 32, 8)
+    w1, b1, w2, b2 = rand(rng, 8, 16), rand(rng, 16), rand(rng, 16, 8), rand(rng, 8)
+    full = PALLAS.ffn(x, w1, b1, w2, b2, block_rows=32)
+    blocked = PALLAS.ffn(x, w1, b1, w2, b2, block_rows=8)
+    np.testing.assert_allclose(full, blocked, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# layernorm_residual
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([1, 4, 16, 64]),
+    h=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(n, h, seed):
+    rng = np.random.default_rng(seed)
+    x, res = rand(rng, n, h), rand(rng, n, h)
+    g, b = rand(rng, h), rand(rng, h)
+    np.testing.assert_allclose(
+        PALLAS.layernorm_residual(x, res, g, b),
+        REF.layernorm_residual(x, res, g, b), atol=ATOL)
+
+
+def test_layernorm_output_is_normalized():
+    rng = np.random.default_rng(5)
+    x, res = rand(rng, 8, 32), rand(rng, 8, 32)
+    out = PALLAS.layernorm_residual(x, res, jnp.ones(32), jnp.zeros(32))
+    out = np.asarray(out)
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# soft_extract
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([2, 8, 32]), h=st.sampled_from([4, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_soft_extract_matches_ref(n, h, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, h)
+    ranks = jnp.asarray(rng.permutation(n).astype(np.int32))
+    r = jnp.asarray(rng.random(n), jnp.float32)
+    np.testing.assert_allclose(
+        PALLAS.soft_extract(x, ranks, r), REF.soft_extract(x, ranks, r), atol=ATOL)
+
+
+def test_soft_extract_all_ones_is_identity():
+    rng = np.random.default_rng(6)
+    x = rand(rng, 8, 4)
+    ranks = jnp.asarray(rng.permutation(8).astype(np.int32))
+    np.testing.assert_allclose(PALLAS.soft_extract(x, ranks, jnp.ones(8)), x, atol=1e-7)
+
+
+def test_soft_extract_grad_flows_to_r():
+    """The configuration search trains r through this multiply."""
+    rng = np.random.default_rng(7)
+    x = rand(rng, 6, 4)
+    ranks = jnp.asarray(rng.permutation(6).astype(np.int32))
+
+    def loss(r):
+        return jnp.sum(PALLAS.soft_extract(x, ranks, r) ** 2)
+
+    g = jax.grad(loss)(jnp.full((6,), 0.5))
+    assert np.all(np.abs(np.asarray(g)) > 0)

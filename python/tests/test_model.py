@@ -1,0 +1,159 @@
+"""L2 model semantics: extraction invariants, soft-extract behaviour,
+retention derivation, variant construction."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile import model as M
+from compile.config import BertConfig
+
+
+def toy_batch(cfg, n=4, seq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(4, cfg.vocab_size, size=(n, seq)).astype(np.int32)
+    tokens[:, 0] = 2  # CLS
+    # Variable-length: PAD the tails.
+    for i in range(n):
+        cut = rng.integers(seq // 2, seq)
+        tokens[i, cut:] = 0
+    segs = np.zeros((n, seq), dtype=np.int32)
+    return jnp.asarray(tokens), jnp.asarray(segs)
+
+
+def test_baseline_forward_shapes(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg)
+    fwd = M.make_forward(tiny_cfg, use_pallas=False)
+    logits, _ = fwd(tiny_params, tokens, segs)
+    assert logits.shape == (4, tiny_cfg.num_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_pallas_and_ref_models_agree(tiny_cfg, tiny_params):
+    """Whole-model cross-check: the exported (pallas) graph must equal the
+    oracle (ref) graph numerically."""
+    tokens, segs = toy_batch(tiny_cfg)
+    out_ref, _ = M.make_forward(tiny_cfg, use_pallas=False)(tiny_params, tokens, segs)
+    out_pal, _ = M.make_forward(tiny_cfg, use_pallas=True)(tiny_params, tokens, segs)
+    np.testing.assert_allclose(np.asarray(out_ref), np.asarray(out_pal), atol=3e-5)
+
+
+def test_extract_reduces_hidden_sizes(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg)
+    retention = [12, 8, 4]
+    fwd = M.make_forward(tiny_cfg, retention=retention, use_pallas=False, collect=True)
+    logits, aux = fwd(tiny_params, tokens, segs)
+    for j, h in enumerate(aux["hidden"]):
+        assert h.shape[1] == retention[j], f"encoder {j}: {h.shape}"
+    assert logits.shape == (4, tiny_cfg.num_classes)
+
+
+def test_cls_always_survives(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg)
+    fwd = M.make_forward(tiny_cfg, retention=[4, 2, 1], use_pallas=False, collect=True)
+    _, aux = fwd(tiny_params, tokens, segs)
+    for kept in aux["kept"]:
+        # original position 0 (CLS) must be in every survivor set
+        assert np.all(np.asarray(kept)[:, 0] == 0)
+
+
+def test_extract_prefers_real_tokens_over_pad(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg)
+    n_real = int(np.sum(np.asarray(tokens)[0] != 0))
+    keep = min(8, n_real)
+    fwd = M.make_forward(tiny_cfg, retention=[keep, keep, keep],
+                         use_pallas=False, collect=True)
+    _, aux = fwd(tiny_params, tokens, segs)
+    kept0 = np.asarray(aux["kept"][0])[0]
+    toks0 = np.asarray(tokens)[0]
+    assert np.all(toks0[kept0] != 0), "PAD selected while real tokens remain"
+
+
+def test_retention_monotone_enforced():
+    masses = np.array([5.2, 7.9, 3.1])
+    ret = M.derive_retention(masses, seq_len=16)
+    assert ret == [6, 6, 4]
+    assert all(a >= b for a, b in zip(ret, ret[1:]))
+
+
+def test_retention_bounds():
+    assert M.derive_retention(np.array([100.0, 0.0]), 8) == [8, 1]
+    assert M.aggregate_word_vectors([3, 2, 1]) == 6
+
+
+def test_static_strategies_fixed_positions():
+    head = M.static_keep_indices("head", 16, 4, 0)
+    assert list(head) == [0, 1, 2, 3]
+    r1 = M.static_keep_indices("rand", 16, 4, 1)
+    r2 = M.static_keep_indices("rand", 16, 4, 1)
+    np.testing.assert_array_equal(r1, r2)  # deterministic per layer
+    assert r1[0] == 0  # CLS pinned
+    assert len(set(r1.tolist())) == 4
+
+
+def test_strategy_changes_selection(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg, seed=3)
+    out = {}
+    for strat in ("attn", "head", "rand"):
+        fwd = M.make_forward(tiny_cfg, retention=[8, 6, 4], strategy=strat,
+                             use_pallas=False)
+        logits, _ = fwd(tiny_params, tokens, segs)
+        out[strat] = np.asarray(logits)
+    assert not np.allclose(out["attn"], out["head"])
+    assert not np.allclose(out["head"], out["rand"])
+
+
+def test_soft_forward_mass_and_shapes(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg)
+    seq = tokens.shape[1]
+    fwd = M.make_soft_forward(tiny_cfg, use_pallas=False)
+    r = jnp.full((tiny_cfg.num_layers, seq), 0.5)
+    logits, mass = fwd(tiny_params, r, tokens, segs)
+    assert logits.shape == (4, tiny_cfg.num_classes)
+    assert mass.shape == (4, tiny_cfg.num_layers)
+    np.testing.assert_allclose(np.asarray(mass), 0.5 * seq, atol=1e-4)
+
+
+def test_soft_forward_r_ones_equals_baseline(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg)
+    seq = tokens.shape[1]
+    base, _ = M.make_forward(tiny_cfg, use_pallas=False)(tiny_params, tokens, segs)
+    soft_fwd = M.make_soft_forward(tiny_cfg, use_pallas=False)
+    soft, _ = soft_fwd(tiny_params, jnp.ones((tiny_cfg.num_layers, seq)), tokens, segs)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(soft), atol=2e-5)
+
+
+def test_head_gates_zero_all_heads_changes_output(tiny_cfg, tiny_params):
+    tokens, segs = toy_batch(tiny_cfg)
+    fwd = M.make_forward(tiny_cfg, use_pallas=False, with_head_gates=True)
+    ones = jnp.ones((tiny_cfg.num_layers, tiny_cfg.num_heads))
+    half = ones.at[:, 0].set(0.0)
+    a, _ = fwd(tiny_params, tokens, segs, ones)
+    b, _ = fwd(tiny_params, tokens, segs, half)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_albert_param_sharing():
+    cfg = BertConfig(vocab_size=128, hidden_size=16, num_layers=4, num_heads=2,
+                     ffn_size=32, max_len=16, share_params=True, embed_factor=8)
+    params = L.init_params(jax.random.PRNGKey(1), cfg)
+    assert len(params["layers"]) == 1
+    assert params["embed"]["word"].shape == (128, 8)
+    assert params["embed"]["word_proj"].shape == (8, 16)
+    tokens = jnp.asarray(np.full((2, 16), 5, dtype=np.int32))
+    segs = jnp.zeros((2, 16), jnp.int32)
+    logits, _ = M.make_forward(cfg, use_pallas=False)(params, tokens, segs)
+    assert logits.shape == (2, 2)
+
+
+def test_regression_head():
+    cfg = BertConfig(vocab_size=128, hidden_size=16, num_layers=2, num_heads=2,
+                     ffn_size=32, max_len=16, num_classes=1)
+    params = L.init_params(jax.random.PRNGKey(2), cfg)
+    tokens = jnp.asarray(np.full((2, 16), 5, dtype=np.int32))
+    logits, _ = M.make_forward(cfg, use_pallas=False)(params, tokens, jnp.zeros_like(tokens))
+    assert logits.shape == (2, 1)

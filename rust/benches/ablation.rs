@@ -1,0 +1,126 @@
+//! Ablation benches beyond the paper's tables (DESIGN.md §4 extras):
+//!  1. batch-size scaling — how the PoWER speedup varies with batch size
+//!     (the paper reports batch 128 only);
+//!  2. retention-depth sensitivity — per-variant latency vs aggregate
+//!     word-vector count across the lambda sweep (linearity check of the
+//!     paper's cost model: time ~ word-vectors processed);
+//!  3. SLA routing policies — measured behaviour of the three router
+//!     policies on the same workload.
+
+use powerbert::bench::paper::measure_variant;
+use powerbert::bench::{fmt_time, BenchConfig, Table};
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
+use powerbert::runtime::{default_root, Engine, Registry};
+use powerbert::workload::WorkloadGen;
+use std::time::Duration;
+
+fn main() {
+    powerbert::util::log::init();
+    let registry = match Registry::scan(&default_root()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let mut engine = Engine::new().expect("pjrt");
+    let cfg = BenchConfig::from_env();
+
+    // 1. batch scaling on sst2.
+    if let Some(ds) = registry.dataset("sst2") {
+        let mut t = Table::new(
+            "Ablation 1 — PoWER speedup vs batch size (sst2)",
+            &["batch", "BERT", "PoWER", "speedup"],
+        );
+        for batch in [1usize, 8, 32] {
+            let Some(b) = measure_variant(&mut engine, ds, "bert", batch, &cfg) else { continue };
+            let Some(p) = measure_variant(&mut engine, ds, "power-default", batch, &cfg) else {
+                continue;
+            };
+            t.row(vec![
+                batch.to_string(),
+                fmt_time(b.latency.p50),
+                fmt_time(p.latency.p50),
+                format!("{:.2}x", b.latency.p50 / p.latency.p50),
+            ]);
+        }
+        t.print();
+    }
+
+    // 2. latency vs aggregate word-vectors across every power variant.
+    let mut t = Table::new(
+        "Ablation 2 — latency vs aggregate word-vectors (cost-model linearity)",
+        &["dataset", "variant", "agg wv", "batch latency", "us per word-vector"],
+    );
+    for (ds_name, ds) in &registry.datasets {
+        for vname in ds.variants.keys() {
+            if !(vname == "bert" || vname.starts_with("power-l") || vname == "power-default") {
+                continue;
+            }
+            if vname.ends_with("-debug") {
+                continue;
+            }
+            if let Some(p) = measure_variant(&mut engine, ds, vname, 32, &cfg) {
+                t.row(vec![
+                    ds_name.clone(),
+                    vname.clone(),
+                    p.aggregate_word_vectors.to_string(),
+                    fmt_time(p.latency.p50),
+                    format!(
+                        "{:.2}",
+                        p.latency.p50 * 1e6 / (p.aggregate_word_vectors as f64 * p.batch as f64)
+                    ),
+                ]);
+            }
+        }
+    }
+    t.print();
+    drop(engine);
+
+    // 3. router policy behaviour on one workload.
+    if registry.dataset("sst2").is_some() {
+        let mut t = Table::new(
+            "Ablation 3 — SLA routing policies (sst2, 64 requests each)",
+            &["policy", "variant chosen", "mean total us"],
+        );
+        for (name, policy, sla) in [
+            ("fixed bert", Policy::Fixed("bert".into()), Sla::default()),
+            ("fastest-above-metric (1% floor)", Policy::FastestAboveMetric, Sla::default()),
+            (
+                "best-under-latency 2ms",
+                Policy::BestUnderLatency,
+                Sla { max_latency_ms: Some(2.0), ..Default::default() },
+            ),
+        ] {
+            let coordinator = Coordinator::start(Config {
+                datasets: vec!["sst2".into()],
+                policy,
+                batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+                preload: true,
+                ..Config::default()
+            })
+            .expect("coordinator");
+            let vocab = coordinator.tokenizer().vocab.clone();
+            let mut gen = WorkloadGen::new(&vocab, 7);
+            let mut variants = std::collections::BTreeMap::new();
+            let mut total_us = 0u64;
+            let n = 64;
+            for _ in 0..n {
+                let (text, _) = gen.sentence(18);
+                if let Ok(r) =
+                    coordinator.classify("sst2", Input::Text { a: text, b: None }, sla.clone())
+                {
+                    *variants.entry(r.variant).or_insert(0) += 1;
+                    total_us += r.total_us;
+                }
+            }
+            let chosen = variants
+                .iter()
+                .map(|(v, c)| format!("{v}:{c}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            t.row(vec![name.to_string(), chosen, format!("{}", total_us / n)]);
+        }
+        t.print();
+    }
+}

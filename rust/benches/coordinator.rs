@@ -1,0 +1,146 @@
+//! Coordinator (L3) benchmarks: the serving-layer overhead on top of model
+//! execution. Measures (a) closed-loop single-request latency through the
+//! full submit->tokenize->route->batch->execute->reply path vs raw engine
+//! execution, and (b) throughput under concurrent load at several batcher
+//! settings. L3 must not be the bottleneck (paper's contribution is the
+//! model-side reduction; the coordinator exists to exploit it under load).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use powerbert::bench::{fmt_time, time_fn, BenchConfig, Table};
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
+use powerbert::runtime::{default_root, Engine, Registry, TestSplit};
+use powerbert::workload::WorkloadGen;
+
+fn main() {
+    powerbert::util::log::init();
+    let root = default_root();
+    let registry = match Registry::scan(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let Some(ds) = registry.dataset("sst2") else {
+        println!("sst2 artifacts missing");
+        return;
+    };
+    let Some(meta) = ds.variant("bert") else { return };
+    let cfg = BenchConfig::from_env();
+
+    // (a) raw engine single-example execution time (the floor).
+    let mut engine = Engine::new().expect("pjrt");
+    let model = engine.load(meta).expect("load");
+    let split = TestSplit::load(&ds.test_npz()).expect("split");
+    let seq = split.seq_len;
+    let raw = time_fn(&cfg, || {
+        model.infer(&split.tokens[..seq], &split.segments[..seq], 1).expect("infer");
+    });
+    drop(engine);
+
+    // (b) coordinator closed-loop single request (includes tokenize+route+
+    // batch wait+channel hops). max_wait=0 so the batcher never holds it.
+    let coordinator = Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy: Policy::Fixed("bert".into()),
+        batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(0) },
+        ..Config::default()
+    })
+    .expect("coordinator");
+    let vocab = coordinator.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 5);
+    let (text, _) = gen.sentence(18);
+    // Warm: first request pays the lazy compile; excluded from timing.
+    coordinator
+        .classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default())
+        .expect("warmup");
+    let closed = time_fn(&cfg, || {
+        coordinator
+            .classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default())
+            .expect("classify");
+    });
+
+    let mut t = Table::new(
+        "Coordinator overhead — single request (batch=1)",
+        &["path", "p50", "p99", "overhead vs raw"],
+    );
+    t.row(vec![
+        "raw engine".into(),
+        fmt_time(raw.p50),
+        fmt_time(raw.p99),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "full coordinator".into(),
+        fmt_time(closed.p50),
+        fmt_time(closed.p99),
+        format!("{:+.0}us ({:.1}%)", (closed.p50 - raw.p50) * 1e6, (closed.p50 / raw.p50 - 1.0) * 100.0),
+    ]);
+    t.print();
+    drop(coordinator);
+
+    // (c) throughput under concurrent closed-loop clients x batcher policy.
+    let mut t2 = Table::new(
+        "Dynamic batching throughput (16 closed-loop clients, sst2/bert)",
+        &["max_batch", "max_wait", "req/s", "mean occupancy", "p99 latency"],
+    );
+    for (max_batch, wait_ms) in [(1usize, 0u64), (8, 2), (32, 4), (32, 10)] {
+        let coordinator = Coordinator::start(Config {
+            datasets: vec!["sst2".into()],
+            policy: Policy::Fixed("bert".into()),
+            batch: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            ..Config::default()
+        })
+        .expect("coordinator");
+        {
+            // Warm the lazily-loaded variant before the measurement window.
+            let vocab = coordinator.tokenizer().vocab.clone();
+            let mut g = WorkloadGen::new(&vocab, 9);
+            let (text, _) = g.sentence(18);
+            coordinator
+                .classify("sst2", Input::Text { a: text, b: None }, Sla::default())
+                .expect("warmup");
+        }
+        let done = Arc::new(AtomicUsize::new(0));
+        let t0 = Instant::now();
+        let dur = Duration::from_secs(4);
+        let mut handles = Vec::new();
+        for c in 0..16 {
+            let client = coordinator.client();
+            let done = done.clone();
+            let vocab = client.tokenizer().vocab.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut gen = WorkloadGen::new(&vocab, 1000 + c);
+                while t0.elapsed() < dur {
+                    let (text, _) = gen.sentence(18);
+                    if client
+                        .classify("sst2", Input::Text { a: text, b: None }, Sla::default())
+                        .is_ok()
+                    {
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = coordinator.metrics().snapshot("sst2/bert").unwrap();
+        t2.row(vec![
+            max_batch.to_string(),
+            format!("{wait_ms}ms"),
+            format!("{:.1}", done.load(Ordering::Relaxed) as f64 / wall),
+            format!("{:.1}", stats.mean_batch_occupancy()),
+            format!("{}us", stats.total.quantile_us(0.99)),
+        ]);
+    }
+    t2.print();
+    println!("dynamic batching should raise req/s and occupancy together; p99 grows with max_wait.");
+}

@@ -1,0 +1,103 @@
+//! Figure 7: accuracy-vs-inference-time Pareto curves — PoWER-BERT (lambda
+//! sweep) against DistilBERT / BERT-PKD (encoder elimination) and Head-Prune,
+//! per dataset. Prints one series per method with (latency, metric) points,
+//! top-left best, exactly the data behind the paper's figure.
+
+use powerbert::bench::paper::{measure_variant, Point};
+use powerbert::bench::{fmt_time, BenchConfig, Table};
+use powerbert::runtime::{default_root, Engine, Registry};
+
+fn main() {
+    powerbert::util::log::init();
+    let registry = match Registry::scan(&default_root()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let mut engine = Engine::new().expect("pjrt");
+    let cfg = BenchConfig::from_env();
+    let batch = 32;
+
+    for (ds_name, ds) in &registry.datasets {
+        // Only datasets that actually have a pareto sweep.
+        let has_sweep = ds.variants.keys().any(|v| v.starts_with("power-l"));
+        if !has_sweep {
+            continue;
+        }
+        let mut series: Vec<(&str, Vec<Point>)> = vec![
+            ("PoWER-BERT", Vec::new()),
+            ("DistilBERT", Vec::new()),
+            ("BERT-PKD", Vec::new()),
+            ("Head-Prune", Vec::new()),
+            ("BERT (baseline)", Vec::new()),
+        ];
+        for vname in ds.variants.keys() {
+            if vname.ends_with("-debug") || vname.ends_with("ws") {
+                continue;
+            }
+            let idx = if vname.starts_with("power") {
+                0
+            } else if vname.starts_with("distil") {
+                1
+            } else if vname.starts_with("pkd") {
+                2
+            } else if vname.starts_with("headprune") {
+                3
+            } else if vname == "bert" {
+                4
+            } else {
+                continue;
+            };
+            if let Some(p) = measure_variant(&mut engine, ds, vname, batch, &cfg) {
+                series[idx].1.push(p);
+            }
+        }
+        let mut table = Table::new(
+            &format!("Figure 7 — {ds_name}: accuracy vs inference time (top-left best)"),
+            &["method", "variant", "batch latency", "metric", "agg word-vectors"],
+        );
+        for (method, points) in &mut series {
+            points.sort_by(|a, b| a.latency.p50.partial_cmp(&b.latency.p50).unwrap());
+            for p in points.iter() {
+                table.row(vec![
+                    method.to_string(),
+                    p.variant.clone(),
+                    fmt_time(p.latency.p50),
+                    format!("{:.4}", p.metric),
+                    p.aggregate_word_vectors.to_string(),
+                ]);
+            }
+        }
+        table.print();
+
+        // Dominance summary: at the fastest PoWER point, how much accuracy
+        // does the best same-or-slower baseline give up? (paper: up to 16%
+        // on CoLA, 6% on RTE)
+        let power = &series[0].1;
+        if let Some(pw) = power.iter().max_by(|a, b| a.metric.partial_cmp(&b.metric).unwrap()) {
+            let mut best_baseline: Option<&Point> = None;
+            for (_, pts) in series[1..4].iter() {
+                for p in pts {
+                    if p.latency.p50 <= pw.latency.p50 * 1.1 {
+                        if best_baseline.map(|b| p.metric > b.metric).unwrap_or(true) {
+                            best_baseline = Some(p);
+                        }
+                    }
+                }
+            }
+            if let Some(bb) = best_baseline {
+                println!(
+                    "at comparable latency ({} vs {}), PoWER metric {:.4} vs best baseline ({}) {:.4} -> gain {:+.1} points",
+                    fmt_time(pw.latency.p50),
+                    fmt_time(bb.latency.p50),
+                    pw.metric,
+                    bb.variant,
+                    bb.metric,
+                    (pw.metric - bb.metric) * 100.0
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Table 2: PoWER-BERT vs BERT_BASE — test metric, inference time, speedup —
+//! across the task suite, measured end-to-end through the PJRT runtime.
+//! Paper reference columns printed alongside for shape comparison
+//! (absolute times differ: paper = K80 GPU batch 128; here = CPU PJRT).
+
+use powerbert::bench::paper::{measure_variant, PAPER_TABLE2, TABLE_ORDER};
+use powerbert::bench::{fmt_time, BenchConfig, Table};
+use powerbert::runtime::{default_root, Engine, Registry};
+
+fn main() {
+    powerbert::util::log::init();
+    let registry = match Registry::scan(&default_root()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let mut engine = Engine::new().expect("pjrt");
+    let cfg = BenchConfig::from_env();
+    let batch = 32;
+
+    let mut table = Table::new(
+        "Table 2 — PoWER-BERT vs BERT (this testbed: CPU PJRT, batch 32 | paper: K80, batch 128)",
+        &[
+            "dataset", "metric", "BERT", "PoWER", "delta", "BERT ms", "PoWER ms",
+            "speedup", "paper speedup", "agg wv (B->P)",
+        ],
+    );
+    let mut gmean_num = 0.0;
+    let mut n_rows = 0;
+    for ds_name in TABLE_ORDER {
+        let Some(ds) = registry.dataset(ds_name) else { continue };
+        let Some(b) = measure_variant(&mut engine, ds, "bert", batch, &cfg) else { continue };
+        let Some(p) = measure_variant(&mut engine, ds, "power-default", batch, &cfg) else {
+            continue;
+        };
+        let speedup = b.latency.p50 / p.latency.p50;
+        let paper = PAPER_TABLE2.iter().find(|r| r.0 == *ds_name);
+        let paper_speedup = paper.map(|r| r.3 / r.4).unwrap_or(f64::NAN);
+        table.row(vec![
+            ds_name.to_string(),
+            b.metric_name.clone(),
+            format!("{:.4}", b.metric),
+            format!("{:.4}", p.metric),
+            format!("{:+.4}", p.metric - b.metric),
+            fmt_time(b.latency.p50),
+            fmt_time(p.latency.p50),
+            format!("{speedup:.2}x"),
+            format!("{paper_speedup:.1}x"),
+            format!("{}->{}", b.aggregate_word_vectors, p.aggregate_word_vectors),
+        ]);
+        gmean_num += speedup.ln();
+        n_rows += 1;
+    }
+    table.print();
+    if n_rows > 0 {
+        println!(
+            "geometric-mean speedup over {n_rows} datasets: {:.2}x (paper range: 2.0x-4.5x per dataset)",
+            (gmean_num / n_rows as f64).exp()
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 3: PoWER applied over ALBERT (parameter sharing + factorized
+//! embedding) — shows word-vector elimination composes with parameter
+//! compression, the paper's §4.2 "Accelerating ALBERT" claim.
+
+use powerbert::bench::paper::{measure_variant, PAPER_TABLE3, TABLE_ORDER};
+use powerbert::bench::{fmt_time, BenchConfig, Table};
+use powerbert::runtime::{default_root, Engine, Registry};
+
+fn main() {
+    powerbert::util::log::init();
+    let registry = match Registry::scan(&default_root()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let mut engine = Engine::new().expect("pjrt");
+    let cfg = BenchConfig::from_env();
+    let batch = 32;
+
+    let mut table = Table::new(
+        "Table 3 — PoWER-ALBERT vs ALBERT (this testbed | paper: K80 batch 128)",
+        &[
+            "dataset", "metric", "ALBERT", "PoWER", "delta", "ALBERT ms", "PoWER ms",
+            "speedup", "paper speedup",
+        ],
+    );
+    let mut any = false;
+    for ds_name in TABLE_ORDER {
+        let Some(ds) = registry.dataset(ds_name) else { continue };
+        let Some(a) = measure_variant(&mut engine, ds, "albert", batch, &cfg) else { continue };
+        let Some(p) = measure_variant(&mut engine, ds, "albert-power", batch, &cfg) else {
+            continue;
+        };
+        let speedup = a.latency.p50 / p.latency.p50;
+        let paper = PAPER_TABLE3.iter().find(|r| r.0 == *ds_name);
+        let paper_speedup = paper.map(|r| r.3 / r.4).unwrap_or(f64::NAN);
+        table.row(vec![
+            ds_name.to_string(),
+            a.metric_name.clone(),
+            format!("{:.4}", a.metric),
+            format!("{:.4}", p.metric),
+            format!("{:+.4}", p.metric - a.metric),
+            fmt_time(a.latency.p50),
+            fmt_time(p.latency.p50),
+            format!("{speedup:.2}x"),
+            format!("{paper_speedup:.1}x"),
+        ]);
+        any = true;
+    }
+    if !any {
+        println!("no ALBERT artifacts yet — run the pipeline's `albert` stage");
+    }
+    table.print();
+}

@@ -1,0 +1,158 @@
+//! Minimal bench harness (criterion is not vendored): warmup + timed runs +
+//! summary statistics, with a stable text output format shared by every
+//! paper-table bench under rust/benches/.
+
+pub mod paper;
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One measured case (a table row / figure point).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional derived quantities (throughput, metric value, ...).
+    pub extras: Vec<(String, f64)>,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // The paper averages over 100 runs; artifacts here are CPU-compiled,
+        // so fewer iterations keep bench wall-time sane while the Summary
+        // still reports dispersion.
+        BenchConfig { warmup_iters: 3, measure_iters: 20 }
+    }
+}
+
+impl BenchConfig {
+    pub fn from_env() -> BenchConfig {
+        let mut c = BenchConfig::default();
+        if let Ok(v) = std::env::var("PB_BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                c.measure_iters = n;
+            }
+        }
+        if let Ok(v) = std::env::var("PB_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                c.warmup_iters = n;
+            }
+        }
+        c
+    }
+}
+
+/// Time `f` (seconds per call) under the config.
+pub fn time_fn<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Summary {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    for _ in 0..cfg.measure_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Table printer: aligned columns, same shape as the paper's tables.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(String::len).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i] + 2))
+                .collect::<String>()
+        };
+        out.push_str(&fmt_row(&self.columns));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format seconds as adaptive ms/us.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.0}us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts() {
+        let mut calls = 0;
+        let cfg = BenchConfig { warmup_iters: 2, measure_iters: 5 };
+        let s = time_fn(&cfg, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "metric"]);
+        t.row(vec!["x".into(), "1.0".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("metric"));
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(0.002).ends_with("ms"));
+        assert!(fmt_time(2e-5).ends_with("us"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Shared logic for the paper-table benches (rust/benches/*.rs): measure a
+//! variant's inference latency and test metric the same way everywhere so
+//! Tables 2/3/4 and Figure 7 rows are directly comparable.
+
+use anyhow::Result;
+
+use super::{time_fn, BenchConfig};
+use crate::eval::Metric;
+use crate::runtime::{DatasetArtifacts, Engine, TestSplit, VariantMeta};
+use crate::util::stats::Summary;
+
+/// One measured (variant, batch) point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub dataset: String,
+    pub variant: String,
+    pub kind: String,
+    pub metric_name: String,
+    pub metric: f64,
+    /// Latency of one full batch (seconds).
+    pub latency: Summary,
+    pub batch: usize,
+    pub examples_per_sec: f64,
+    pub aggregate_word_vectors: usize,
+}
+
+/// Measure one variant: full-split metric + steady-state batch latency.
+pub fn measure(
+    engine: &mut Engine,
+    meta: &VariantMeta,
+    split: &TestSplit,
+    batch: usize,
+    cfg: &BenchConfig,
+) -> Result<Point> {
+    let model = engine.load(meta)?;
+    let seq = split.seq_len;
+    let n = batch.min(split.n);
+
+    // Metric over the whole split.
+    let metric = Metric::parse(&meta.metric).unwrap_or(Metric::Accuracy);
+    let mut outputs = Vec::new();
+    let mut nc = meta.num_classes;
+    let mut i = 0;
+    while i < split.n {
+        let m = n.min(split.n - i);
+        let l = model.infer(
+            &split.tokens[i * seq..(i + m) * seq],
+            &split.segments[i * seq..(i + m) * seq],
+            m,
+        )?;
+        nc = l.num_classes;
+        outputs.extend_from_slice(&l.values);
+        i += m;
+    }
+    let mv = metric.compute(&outputs, nc, &split.labels);
+
+    // Steady-state latency of one batch.
+    let toks = &split.tokens[..n * seq];
+    let segs = &split.segments[..n * seq];
+    let lat = time_fn(cfg, || {
+        model.infer(toks, segs, n).expect("infer");
+    });
+
+    Ok(Point {
+        dataset: meta.dataset.clone(),
+        variant: meta.variant.clone(),
+        kind: meta.kind.clone(),
+        metric_name: meta.metric.clone(),
+        metric: mv,
+        examples_per_sec: n as f64 / lat.p50,
+        latency: lat,
+        batch: n,
+        aggregate_word_vectors: meta.aggregate_word_vectors(),
+    })
+}
+
+/// Measure a named variant of a dataset, with artifact-missing tolerance.
+pub fn measure_variant(
+    engine: &mut Engine,
+    ds: &DatasetArtifacts,
+    variant: &str,
+    batch: usize,
+    cfg: &BenchConfig,
+) -> Option<Point> {
+    let meta = ds.variant(variant)?;
+    let split = TestSplit::load(&ds.test_npz()).ok()?;
+    match measure(engine, meta, &split, batch, cfg) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("  ({}/{variant} failed: {e:#})", ds.name);
+            None
+        }
+    }
+}
+
+/// The dataset order used by the paper's tables.
+pub const TABLE_ORDER: &[&str] = &[
+    "cola", "rte", "qqp", "mrpc", "sst2", "mnli-m", "mnli-mm", "qnli", "stsb",
+    "imdb", "race",
+];
+
+/// Paper reference numbers for Table 2 (BERT_BASE on K80, batch 128):
+/// (dataset, bert_metric, power_metric, bert_ms, power_ms).
+pub const PAPER_TABLE2: &[(&str, f64, f64, f64, f64)] = &[
+    ("cola", 52.5, 52.3, 898.0, 201.0),
+    ("rte", 68.1, 67.4, 3993.0, 1189.0),
+    ("qqp", 71.2, 70.2, 1833.0, 405.0),
+    ("mrpc", 88.7, 88.1, 1798.0, 674.0),
+    ("sst2", 93.0, 92.1, 905.0, 374.0),
+    ("mnli-m", 84.6, 83.8, 1867.0, 725.0),
+    ("mnli-mm", 84.0, 83.1, 1881.0, 908.0),
+    ("qnli", 91.0, 90.1, 1848.0, 916.0),
+    ("stsb", 85.8, 85.1, 881.0, 448.0),
+    ("imdb", 93.5, 92.5, 9110.0, 3419.0),
+    ("race", 66.9, 66.0, 20040.0, 10110.0),
+];
+
+/// Paper reference numbers for Table 3 (ALBERT vs PoWER-ALBERT).
+pub const PAPER_TABLE3: &[(&str, f64, f64, f64, f64)] = &[
+    ("cola", 42.8, 43.8, 940.0, 165.0),
+    ("rte", 65.6, 64.6, 4210.0, 1778.0),
+    ("qqp", 68.3, 67.4, 1950.0, 287.0),
+    ("mrpc", 89.0, 88.1, 1957.0, 813.0),
+    ("sst2", 93.7, 92.7, 922.0, 442.0),
+    ("mnli-m", 82.6, 81.8, 1960.0, 589.0),
+    ("mnli-mm", 82.5, 81.6, 1981.0, 922.0),
+    ("qnli", 89.2, 89.1, 1964.0, 1049.0),
+    ("stsb", 80.9, 80.0, 956.0, 604.0),
+];
+
+/// Paper Table 4 (SST-2 selection-strategy ablation, fixed config).
+pub const PAPER_TABLE4: &[(&str, f64)] =
+    &[("Head-WS", 85.4), ("Rand-WS", 85.7), ("Attn-WS", 88.3)];

@@ -1,0 +1,241 @@
+//! Dynamic batcher: groups requests for the same (dataset, variant) into
+//! batches, flushing when a batch reaches the target size or the oldest
+//! member has waited `max_wait` (size-or-deadline policy).
+//!
+//! The batcher itself is a pure data structure (no threads), which is what
+//! makes its invariants property-testable: the scheduler drives it from the
+//! coordinator's front loop.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::request::Job;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Flush as soon as a queue holds this many rows (usually the largest
+    /// compiled bucket of the variant).
+    pub max_batch: usize,
+    /// Flush any queue whose oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A flushed batch, ready for the executor.
+pub struct Batch {
+    pub key: String, // "dataset/variant"
+    pub jobs: Vec<Job>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    oldest: Option<Instant>,
+    max_batch: usize,
+}
+
+/// The dynamic batcher. `push` adds a job; `due` / `flush_due` yield batches.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queues: HashMap<String, Queue>,
+    /// Per-variant max batch override (largest compiled bucket).
+    bucket_caps: HashMap<String, usize>,
+    pending: usize,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, queues: HashMap::new(), bucket_caps: HashMap::new(), pending: 0 }
+    }
+
+    /// Register the largest compiled bucket for a variant key, capping its
+    /// batch size (padding past the largest bucket would waste compute).
+    pub fn set_bucket_cap(&mut self, key: &str, cap: usize) {
+        self.bucket_caps.insert(key.to_string(), cap);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    fn max_batch_for(&self, key: &str) -> usize {
+        self.bucket_caps
+            .get(key)
+            .copied()
+            .unwrap_or(self.policy.max_batch)
+            .min(self.policy.max_batch)
+            .max(1)
+    }
+
+    /// Add a job; returns a batch immediately if the queue reached capacity.
+    pub fn push(&mut self, key: String, job: Job, now: Instant) -> Option<Batch> {
+        let cap = self.max_batch_for(&key);
+        let q = self.queues.entry(key.clone()).or_insert_with(|| Queue {
+            jobs: VecDeque::new(),
+            oldest: None,
+            max_batch: cap,
+        });
+        q.max_batch = cap;
+        if q.jobs.is_empty() {
+            q.oldest = Some(now);
+        }
+        q.jobs.push_back(job);
+        self.pending += 1;
+        if q.jobs.len() >= cap {
+            return self.take(&key, cap);
+        }
+        None
+    }
+
+    fn take(&mut self, key: &str, n: usize) -> Option<Batch> {
+        let q = self.queues.get_mut(key)?;
+        let take = n.min(q.jobs.len());
+        if take == 0 {
+            return None;
+        }
+        let jobs: Vec<Job> = q.jobs.drain(..take).collect();
+        self.pending -= jobs.len();
+        q.oldest = if q.jobs.is_empty() { None } else { Some(Instant::now()) };
+        Some(Batch { key: key.to_string(), jobs })
+    }
+
+    /// Earliest deadline across queues (None when idle) — lets the caller
+    /// sleep exactly until the next flush is due.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.oldest)
+            .map(|t| t + self.policy.max_wait)
+            .min()
+    }
+
+    /// Flush every queue whose deadline has passed (or all non-empty queues
+    /// when `force`).
+    pub fn flush_due(&mut self, now: Instant, force: bool) -> Vec<Batch> {
+        let keys: Vec<String> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                !q.jobs.is_empty()
+                    && (force
+                        || q.oldest
+                            .map(|t| now.duration_since(t) >= self.policy.max_wait)
+                            .unwrap_or(false)
+                    || q.jobs.len() >= q.max_batch)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut out = Vec::new();
+        for k in keys {
+            // Drain the whole queue in bucket-sized chunks.
+            while let Some(b) = {
+                let cap = self.max_batch_for(&k);
+                let nonempty = self.queues.get(&k).map(|q| !q.jobs.is_empty()).unwrap_or(false);
+                if nonempty {
+                    self.take(&k, cap)
+                } else {
+                    None
+                }
+            } {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Input, Request, Sla};
+    use std::sync::mpsc::channel;
+
+    fn job(id: u64) -> Job {
+        let (tx, _rx) = channel();
+        Job {
+            req: Request {
+                id,
+                dataset: "sst2".into(),
+                input: Input::Text { a: String::new(), b: None },
+                sla: Sla::default(),
+                submitted: Instant::now(),
+            },
+            variant: "bert".into(),
+            tokens: vec![0; 4],
+            segments: vec![0; 4],
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn flushes_at_capacity() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        assert!(b.push("k".into(), job(1), now).is_none());
+        assert!(b.push("k".into(), job(2), now).is_none());
+        let batch = b.push("k".into(), job(3), now).expect("flush at cap");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) });
+        let t0 = Instant::now();
+        b.push("k".into(), job(1), t0);
+        assert!(b.flush_due(t0, false).is_empty(), "not due yet");
+        let later = t0 + Duration::from_millis(2);
+        let out = b.flush_due(later, false);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 1);
+    }
+
+    #[test]
+    fn force_flush_drains_everything() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        for i in 0..10 {
+            b.push("a".into(), job(i), now);
+        }
+        // 10 jobs: push flushed two full batches of 4 already (at i=3, i=7)
+        let out = b.flush_due(now, true);
+        let total: usize = out.iter().map(Batch::len).sum();
+        assert_eq!(total + 8, 10);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn respects_bucket_cap() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 32, max_wait: Duration::from_secs(1) });
+        b.set_bucket_cap("k", 2);
+        let now = Instant::now();
+        assert!(b.push("k".into(), job(1), now).is_none());
+        let batch = b.push("k".into(), job(2), now).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn deadline_tracking() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) });
+        assert!(b.next_deadline().is_none());
+        let now = Instant::now();
+        b.push("k".into(), job(1), now);
+        let d = b.next_deadline().unwrap();
+        assert!(d >= now + Duration::from_millis(5));
+    }
+}

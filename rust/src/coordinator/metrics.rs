@@ -1,0 +1,140 @@
+//! Serving metrics: per-variant latency histograms, throughput counters,
+//! batch-occupancy tracking. Shared between the executor thread (writer)
+//! and the router (reader — uses measured latency for SLA decisions).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Debug, Default, Clone)]
+pub struct VariantStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub errors: u64,
+    pub queue: LatencyHistogram,
+    pub exec: LatencyHistogram,
+    pub total: LatencyHistogram,
+    /// Mean model-execution time per *batch*, by bucket size.
+    pub exec_by_bucket: HashMap<usize, (u64 /*count*/, u64 /*sum_us*/)>,
+}
+
+impl VariantStats {
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_rows as f64 / self.batches as f64
+        }
+    }
+
+    /// Measured mean exec time for the bucket that would serve one request.
+    pub fn exec_estimate_us(&self, bucket: usize) -> Option<f64> {
+        self.exec_by_bucket
+            .get(&bucket)
+            .filter(|(c, _)| *c > 0)
+            .map(|(c, s)| *s as f64 / *c as f64)
+    }
+}
+
+/// Process-wide metrics hub.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    inner: Mutex<HashMap<String, VariantStats>>,
+    started: Option<Instant>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        MetricsHub { inner: Mutex::new(HashMap::new()), started: Some(Instant::now()) }
+    }
+
+    pub fn record_batch(&self, key: &str, bucket: usize, rows: usize, exec_us: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(key.to_string()).or_default();
+        s.batches += 1;
+        s.batched_rows += rows as u64;
+        s.exec.record_us(exec_us);
+        let e = s.exec_by_bucket.entry(bucket).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += exec_us;
+    }
+
+    pub fn record_request(&self, key: &str, queue_us: u64, total_us: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(key.to_string()).or_default();
+        s.requests += 1;
+        s.queue.record_us(queue_us);
+        s.total.record_us(total_us);
+    }
+
+    pub fn record_error(&self, key: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(key.to_string()).or_default().errors += 1;
+    }
+
+    pub fn snapshot(&self, key: &str) -> Option<VariantStats> {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn snapshot_all(&self) -> Vec<(String, VariantStats)> {
+        let m = self.inner.lock().unwrap();
+        let mut v: Vec<_> = m.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Human-readable report (the `powerbert stats` CLI output).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (key, s) in self.snapshot_all() {
+            out.push_str(&format!(
+                "{key}: {} reqs, {} batches (mean occupancy {:.1}), errors {}\n  \
+                 queue p50/p99: {}/{} us  exec p50/p99: {}/{} us  total p50/p99: {}/{} us\n",
+                s.requests,
+                s.batches,
+                s.mean_batch_occupancy(),
+                s.errors,
+                s.queue.quantile_us(0.5),
+                s.queue.quantile_us(0.99),
+                s.exec.quantile_us(0.5),
+                s.exec.quantile_us(0.99),
+                s.total.quantile_us(0.5),
+                s.total.quantile_us(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let h = MetricsHub::new();
+        h.record_batch("sst2/bert", 8, 5, 1200);
+        h.record_request("sst2/bert", 100, 1500);
+        h.record_request("sst2/bert", 200, 1700);
+        let s = h.snapshot("sst2/bert").unwrap();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch_occupancy() - 5.0).abs() < 1e-9);
+        assert!(s.exec_estimate_us(8).unwrap() > 0.0);
+        assert!(h.report().contains("sst2/bert"));
+    }
+
+    #[test]
+    fn errors_counted() {
+        let h = MetricsHub::new();
+        h.record_error("x/y");
+        assert_eq!(h.snapshot("x/y").unwrap().errors, 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator — the systems half of the PoWER-BERT reproduction.
+//!
+//! Components: request/response types, dynamic batcher (size-or-deadline),
+//! SLA-aware variant router (the paper's Pareto curve as runtime policy),
+//! the two-thread scheduler around the single PJRT engine owner, metrics,
+//! and a TCP line-protocol server.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use metrics::{MetricsHub, VariantStats};
+pub use request::{Input, Request, Response, ServeError, Sla};
+pub use router::{Policy, Router};
+pub use scheduler::{Client, Config, Coordinator};
+pub use server::Server;

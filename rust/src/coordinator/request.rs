@@ -1,0 +1,90 @@
+//! Request/response types of the serving coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// What the client wants classified.
+#[derive(Debug, Clone)]
+pub enum Input {
+    /// Raw text; the coordinator tokenizes (single or pair segment).
+    Text { a: String, b: Option<String> },
+    /// Pre-encoded fixed-length rows (tokens + segment ids).
+    Tokens { tokens: Vec<i32>, segments: Vec<i32> },
+}
+
+/// Per-request service-level objectives. The router uses these to pick a
+/// model variant: the paper's accuracy-vs-inference-time Pareto trade-off
+/// surfaced as a runtime policy.
+#[derive(Debug, Clone, Default)]
+pub struct Sla {
+    /// Upper bound on acceptable model latency (milliseconds).
+    pub max_latency_ms: Option<f64>,
+    /// Lower bound on acceptable dev-set metric of the serving variant.
+    pub min_metric: Option<f64>,
+    /// Pin a specific variant (overrides the policy).
+    pub variant: Option<String>,
+}
+
+/// A classification request submitted to the coordinator.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub dataset: String,
+    pub input: Input,
+    pub sla: Sla,
+    pub submitted: Instant,
+}
+
+/// The reply sent back through the per-request channel.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Winning class (classification) — regression tasks report 0.
+    pub label: usize,
+    /// Raw model outputs (logits, or the scalar for regression).
+    pub scores: Vec<f32>,
+    /// Variant that served the request.
+    pub variant: String,
+    /// Time spent waiting for a batch slot.
+    pub queue_us: u64,
+    /// Time spent in model execution (shared across the batch).
+    pub exec_us: u64,
+    /// End-to-end time inside the coordinator.
+    pub total_us: u64,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+}
+
+/// Error returned when the coordinator cannot serve a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Bounded queue full — backpressure; client should retry/shed.
+    Overloaded,
+    UnknownDataset(String),
+    UnknownVariant(String),
+    Shutdown,
+    Exec(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "coordinator overloaded (queue full)"),
+            ServeError::UnknownDataset(d) => write!(f, "unknown dataset {d:?}"),
+            ServeError::UnknownVariant(v) => write!(f, "unknown variant {v:?}"),
+            ServeError::Shutdown => write!(f, "coordinator shut down"),
+            ServeError::Exec(e) => write!(f, "execution failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Internal: a request bound to a chosen variant, carrying its reply pipe.
+pub struct Job {
+    pub req: Request,
+    pub variant: String,
+    pub tokens: Vec<i32>,
+    pub segments: Vec<i32>,
+    pub reply: Sender<Result<Response, ServeError>>,
+}

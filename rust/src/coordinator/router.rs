@@ -1,0 +1,261 @@
+//! Variant router: picks which model variant serves a request.
+//!
+//! This is where the paper's accuracy-vs-inference-time Pareto curve becomes
+//! a runtime policy: every dataset has a baseline (`bert`) plus PoWER points
+//! (`power-*`) with known dev metrics and FLOP footprints; the router selects
+//! under the request's SLA. Latency estimates start from the aggregate
+//! word-vector count (compute is proportional to word-vectors processed —
+//! the paper's own cost model, §4.2) and are refined online with measured
+//! execution times from the metrics hub.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::metrics::MetricsHub;
+use super::request::{ServeError, Sla};
+use crate::runtime::VariantMeta;
+
+/// Routing policy when the request's SLA does not pin a variant.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// Always use this variant (e.g. "bert" or "power-default").
+    Fixed(String),
+    /// Highest dev metric among variants whose latency estimate fits the
+    /// request's `max_latency_ms` (default: no bound -> best metric).
+    BestUnderLatency,
+    /// Cheapest variant whose dev metric is >= the request's `min_metric`
+    /// (default floor: within 1% of the baseline, the paper's operating point).
+    FastestAboveMetric,
+}
+
+/// Routing table for one dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetRoutes {
+    pub variants: BTreeMap<String, VariantMeta>,
+    pub baseline_metric: Option<f64>,
+}
+
+/// The router. Cheap to clone (shared metrics hub).
+#[derive(Clone)]
+pub struct Router {
+    datasets: BTreeMap<String, DatasetRoutes>,
+    policy: Policy,
+    metrics: Arc<MetricsHub>,
+}
+
+impl Router {
+    pub fn new(policy: Policy, metrics: Arc<MetricsHub>) -> Router {
+        Router { datasets: BTreeMap::new(), policy, metrics }
+    }
+
+    pub fn add_variant(&mut self, meta: VariantMeta) {
+        let d = self
+            .datasets
+            .entry(meta.dataset.clone())
+            .or_insert_with(|| DatasetRoutes { variants: BTreeMap::new(), baseline_metric: None });
+        if meta.kind == "bert" || meta.kind == "albert" {
+            d.baseline_metric = meta.dev_metric.or(d.baseline_metric);
+        }
+        d.variants.insert(meta.variant.clone(), meta);
+    }
+
+    pub fn datasets(&self) -> Vec<&str> {
+        self.datasets.keys().map(String::as_str).collect()
+    }
+
+    pub fn variants(&self, dataset: &str) -> Vec<&VariantMeta> {
+        self.datasets
+            .get(dataset)
+            .map(|d| d.variants.values().collect())
+            .unwrap_or_default()
+    }
+
+    /// Estimated per-request latency (us) of a variant: measured mean for
+    /// its serving bucket when available, otherwise FLOP-proportional to the
+    /// aggregate word-vector count (scaled to an arbitrary but consistent
+    /// unit — only the ordering matters before measurements exist).
+    pub fn latency_estimate_us(&self, meta: &VariantMeta) -> f64 {
+        let key = format!("{}/{}", meta.dataset, meta.variant);
+        let bucket = meta.batch_sizes.iter().max().copied().unwrap_or(1);
+        if let Some(s) = self.metrics.snapshot(&key) {
+            if let Some(e) = s.exec_estimate_us(bucket) {
+                return e;
+            }
+        }
+        // Word-vector-proportional prior (paper §4.2): ~25us per word-vector
+        // per batch row on this CPU — refined by measurements immediately.
+        meta.aggregate_word_vectors() as f64 * 25.0
+    }
+
+    /// Pick the serving variant for (dataset, SLA).
+    pub fn route(&self, dataset: &str, sla: &Sla) -> Result<VariantMeta, ServeError> {
+        let d = self
+            .datasets
+            .get(dataset)
+            .ok_or_else(|| ServeError::UnknownDataset(dataset.to_string()))?;
+        if let Some(v) = &sla.variant {
+            return d
+                .variants
+                .get(v)
+                .cloned()
+                .ok_or_else(|| ServeError::UnknownVariant(v.clone()));
+        }
+        // Candidates: anything with a dev metric; exclude debug artifacts.
+        let mut cands: Vec<&VariantMeta> = d
+            .variants
+            .values()
+            .filter(|m| !m.variant.ends_with("-debug"))
+            .collect();
+        if cands.is_empty() {
+            return Err(ServeError::UnknownDataset(dataset.to_string()));
+        }
+        let metric_of = |m: &VariantMeta| m.dev_metric.unwrap_or(0.0);
+
+        let chosen = match (&self.policy, sla.max_latency_ms, sla.min_metric) {
+            (Policy::Fixed(name), _, _) => d
+                .variants
+                .get(name)
+                .ok_or_else(|| ServeError::UnknownVariant(name.clone()))?,
+            (_, Some(budget_ms), _) => {
+                // Best metric under the latency budget; fall back to the
+                // fastest variant if nothing fits.
+                cands.sort_by(|a, b| {
+                    metric_of(b).partial_cmp(&metric_of(a)).unwrap()
+                });
+                cands
+                    .iter()
+                    .find(|m| self.latency_estimate_us(m) <= budget_ms * 1000.0)
+                    .copied()
+                    .unwrap_or_else(|| {
+                        *cands
+                            .iter()
+                            .min_by(|a, b| {
+                                self.latency_estimate_us(a)
+                                    .partial_cmp(&self.latency_estimate_us(b))
+                                    .unwrap()
+                            })
+                            .unwrap()
+                    })
+            }
+            (_, None, Some(floor)) => {
+                // Cheapest above the metric floor; fall back to best metric.
+                let mut ok: Vec<&VariantMeta> =
+                    cands.iter().filter(|m| metric_of(m) >= floor).copied().collect();
+                if ok.is_empty() {
+                    cands
+                        .iter()
+                        .max_by(|a, b| metric_of(a).partial_cmp(&metric_of(b)).unwrap())
+                        .copied()
+                        .unwrap()
+                } else {
+                    ok.sort_by(|a, b| {
+                        self.latency_estimate_us(a)
+                            .partial_cmp(&self.latency_estimate_us(b))
+                            .unwrap()
+                    });
+                    ok[0]
+                }
+            }
+            (Policy::FastestAboveMetric, None, None) => {
+                // Default floor: within 1% (absolute) of baseline — the
+                // paper's Table-2 operating point.
+                let floor = d.baseline_metric.map(|b| b - 0.01).unwrap_or(0.0);
+                let mut ok: Vec<&VariantMeta> =
+                    cands.iter().filter(|m| metric_of(m) >= floor).copied().collect();
+                if ok.is_empty() {
+                    ok = cands.clone();
+                }
+                ok.sort_by(|a, b| {
+                    self.latency_estimate_us(a)
+                        .partial_cmp(&self.latency_estimate_us(b))
+                        .unwrap()
+                });
+                ok[0]
+            }
+            (Policy::BestUnderLatency, None, None) => cands
+                .iter()
+                .max_by(|a, b| metric_of(a).partial_cmp(&metric_of(b)).unwrap())
+                .copied()
+                .unwrap(),
+        };
+        Ok(chosen.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn meta(variant: &str, kind: &str, dev: f64, agg: usize) -> VariantMeta {
+        VariantMeta {
+            dataset: "sst2".into(),
+            variant: variant.into(),
+            kind: kind.into(),
+            metric: "accuracy".into(),
+            seq_len: 32,
+            num_layers: 6,
+            num_classes: 2,
+            batch_sizes: vec![1, 8],
+            hlo: Default::default(),
+            weights: "weights.npz".into(),
+            param_order: vec![],
+            retention: Some(vec![agg / 6; 6]),
+            dev_metric: Some(dev),
+            dir: PathBuf::from("/tmp"),
+        }
+    }
+
+    fn router(policy: Policy) -> Router {
+        let mut r = Router::new(policy, Arc::new(MetricsHub::new()));
+        r.add_variant(meta("bert", "bert", 0.90, 192));
+        r.add_variant(meta("power-default", "power", 0.895, 60));
+        r.add_variant(meta("power-l0.001", "power", 0.85, 24));
+        r
+    }
+
+    #[test]
+    fn pinned_variant_wins() {
+        let r = router(Policy::BestUnderLatency);
+        let sla = Sla { variant: Some("power-l0.001".into()), ..Default::default() };
+        assert_eq!(r.route("sst2", &sla).unwrap().variant, "power-l0.001");
+    }
+
+    #[test]
+    fn best_metric_by_default() {
+        let r = router(Policy::BestUnderLatency);
+        assert_eq!(r.route("sst2", &Sla::default()).unwrap().variant, "bert");
+    }
+
+    #[test]
+    fn fastest_above_floor() {
+        let r = router(Policy::FastestAboveMetric);
+        // default floor = baseline - 1% = 0.89 -> power-default (cheaper than bert)
+        assert_eq!(r.route("sst2", &Sla::default()).unwrap().variant, "power-default");
+    }
+
+    #[test]
+    fn metric_floor_respected() {
+        let r = router(Policy::BestUnderLatency);
+        let sla = Sla { min_metric: Some(0.88), ..Default::default() };
+        let v = r.route("sst2", &sla).unwrap();
+        assert_eq!(v.variant, "power-default"); // cheapest with >= 0.88
+    }
+
+    #[test]
+    fn latency_budget_picks_cheap_variant() {
+        let r = router(Policy::BestUnderLatency);
+        // 24 agg word-vectors * 25us = 600us -> under 1ms; others over.
+        let sla = Sla { max_latency_ms: Some(1.0), ..Default::default() };
+        assert_eq!(r.route("sst2", &sla).unwrap().variant, "power-l0.001");
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        let r = router(Policy::BestUnderLatency);
+        assert!(matches!(
+            r.route("nope", &Sla::default()),
+            Err(ServeError::UnknownDataset(_))
+        ));
+    }
+}

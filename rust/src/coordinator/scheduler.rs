@@ -1,0 +1,405 @@
+//! The coordinator proper: front (batcher) thread + executor thread.
+//!
+//! Thread topology — PJRT objects are not Send, so exactly one executor
+//! thread owns the Engine (the analog of a single-device serving process):
+//!
+//!   client threads --submit()--> [bounded job queue] --> front thread
+//!        (tokenize + route)                               (dynamic batcher)
+//!                                                              |
+//!                                                   [bounded batch queue]
+//!                                                              |
+//!                                                       executor thread
+//!                                                    (PJRT engine, metrics)
+//!
+//! Backpressure: both queues are bounded; `submit` fails fast with
+//! `ServeError::Overloaded` when the job queue is full.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::metrics::MetricsHub;
+use super::request::{Input, Job, Request, Response, ServeError, Sla};
+use super::router::{Policy, Router};
+use crate::runtime::{Engine, Registry};
+use crate::tokenizer::{Tokenizer, Vocab};
+
+/// Coordinator configuration.
+pub struct Config {
+    pub artifacts: PathBuf,
+    /// Restrict serving to these datasets (empty = all discovered).
+    pub datasets: Vec<String>,
+    pub policy: Policy,
+    pub batch: BatchPolicy,
+    /// Bound of the submit queue (backpressure point).
+    pub queue_depth: usize,
+    /// Pipeline depth between batcher and executor.
+    pub inflight_batches: usize,
+    /// Load every variant at startup instead of lazily on first use.
+    pub preload: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts: crate::runtime::default_root(),
+            datasets: Vec::new(),
+            policy: Policy::FastestAboveMetric,
+            batch: BatchPolicy::default(),
+            queue_depth: 1024,
+            inflight_batches: 2,
+            preload: false,
+        }
+    }
+}
+
+enum ExecMsg {
+    Run(Batch),
+    Preload(String, String), // dataset, variant
+}
+
+/// Cloneable, Send submit handle — one per server connection thread.
+#[derive(Clone)]
+pub struct Client {
+    submit_tx: SyncSender<Job>,
+    router: Router,
+    tokenizer: Tokenizer,
+    metrics: Arc<MetricsHub>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+    ) -> Result<Receiver<Result<Response, ServeError>>, ServeError> {
+        let meta = self.router.route(dataset, &sla)?;
+        let (tokens, segments) = match &input {
+            Input::Text { a, b } => {
+                let e = self.tokenizer.encode(a, b.as_deref(), meta.seq_len);
+                (e.tokens, e.segments)
+            }
+            Input::Tokens { tokens, segments } => {
+                if tokens.len() != meta.seq_len || segments.len() != meta.seq_len {
+                    return Err(ServeError::Exec(format!(
+                        "expected {} tokens, got {}",
+                        meta.seq_len,
+                        tokens.len()
+                    )));
+                }
+                (tokens.clone(), segments.clone())
+            }
+        };
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let job = Job {
+            req: Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                dataset: dataset.to_string(),
+                input,
+                sla,
+                submitted: Instant::now(),
+            },
+            variant: meta.variant.clone(),
+            tokens,
+            segments,
+            reply: reply_tx,
+        };
+        match self.submit_tx.try_send(job) {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(_)) => Err(ServeError::Overloaded),
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::Shutdown),
+        }
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn classify(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+    ) -> Result<Response, ServeError> {
+        let rx = self.submit(dataset, input, sla)?;
+        rx.recv().map_err(|_| ServeError::Shutdown)?
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    pub fn metrics(&self) -> &Arc<MetricsHub> {
+        &self.metrics
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    client: Option<Client>,
+    registry: Registry,
+    front: Option<JoinHandle<()>>,
+    executor: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: Config) -> Result<Coordinator, String> {
+        let registry = Registry::scan(&cfg.artifacts)?;
+        let vocab = Arc::new(Vocab::load(&registry.vocab_path())?);
+        let tokenizer = Tokenizer::new(vocab);
+        let metrics = Arc::new(MetricsHub::new());
+
+        let mut router = Router::new(cfg.policy.clone(), metrics.clone());
+        for (name, ds) in &registry.datasets {
+            if !cfg.datasets.is_empty() && !cfg.datasets.contains(name) {
+                continue;
+            }
+            for meta in ds.variants.values() {
+                router.add_variant(meta.clone());
+            }
+        }
+
+        let (submit_tx, submit_rx) = sync_channel::<Job>(cfg.queue_depth);
+        let (exec_tx, exec_rx) = sync_channel::<ExecMsg>(cfg.inflight_batches);
+
+        // Executor thread: owns the PJRT engine (not Send -> created here).
+        let reg2 = registry.clone();
+        let metrics2 = metrics.clone();
+        let executor = std::thread::Builder::new()
+            .name("pb-executor".into())
+            .spawn(move || executor_loop(exec_rx, reg2, metrics2))
+            .map_err(|e| e.to_string())?;
+
+        // Front thread: dynamic batcher.
+        let batch_policy = cfg.batch.clone();
+        let mut bucket_caps: Vec<(String, usize)> = Vec::new();
+        for (dsname, ds) in &registry.datasets {
+            for meta in ds.variants.values() {
+                let cap = meta.batch_sizes.iter().max().copied().unwrap_or(1);
+                bucket_caps.push((format!("{}/{}", dsname, meta.variant), cap));
+            }
+        }
+        let exec_tx2 = exec_tx.clone();
+        let front = std::thread::Builder::new()
+            .name("pb-front".into())
+            .spawn(move || front_loop(submit_rx, exec_tx2, batch_policy, bucket_caps))
+            .map_err(|e| e.to_string())?;
+
+        if cfg.preload {
+            for (name, ds) in &registry.datasets {
+                if !cfg.datasets.is_empty() && !cfg.datasets.contains(name) {
+                    continue;
+                }
+                for v in ds.variants.keys() {
+                    let _ = exec_tx.send(ExecMsg::Preload(name.clone(), v.clone()));
+                }
+            }
+        }
+        drop(exec_tx);
+
+        Ok(Coordinator {
+            client: Some(Client {
+                submit_tx,
+                router,
+                tokenizer,
+                metrics,
+                next_id: Arc::new(AtomicU64::new(1)),
+            }),
+            registry,
+            front: Some(front),
+            executor: Some(executor),
+        })
+    }
+
+    /// A Send + Clone submit handle for server/benchmark threads.
+    pub fn client(&self) -> Client {
+        self.client.as_ref().expect("coordinator running").clone()
+    }
+
+    pub fn router(&self) -> &Router {
+        self.client.as_ref().expect("running").router()
+    }
+
+    pub fn metrics(&self) -> Arc<MetricsHub> {
+        self.client.as_ref().expect("running").metrics().clone()
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        self.client.as_ref().expect("running").tokenizer()
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+    ) -> Result<Receiver<Result<Response, ServeError>>, ServeError> {
+        self.client.as_ref().ok_or(ServeError::Shutdown)?.submit(dataset, input, sla)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn classify(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+    ) -> Result<Response, ServeError> {
+        self.client.as_ref().ok_or(ServeError::Shutdown)?.classify(dataset, input, sla)
+    }
+
+    /// Graceful shutdown: drain queues, join threads.
+    pub fn shutdown(&mut self) {
+        self.client.take(); // closes the job queue -> front exits -> executor exits
+        if let Some(h) = self.front.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn front_loop(
+    submit_rx: Receiver<Job>,
+    exec_tx: SyncSender<ExecMsg>,
+    policy: BatchPolicy,
+    bucket_caps: Vec<(String, usize)>,
+) {
+    let mut batcher = Batcher::new(policy);
+    for (k, cap) in bucket_caps {
+        batcher.set_bucket_cap(&k, cap);
+    }
+    loop {
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match submit_rx.recv_timeout(timeout) {
+            Ok(job) => {
+                let key = format!("{}/{}", job.req.dataset, job.variant);
+                let now = Instant::now();
+                if let Some(b) = batcher.push(key, job, now) {
+                    if exec_tx.send(ExecMsg::Run(b)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                for b in batcher.flush_due(Instant::now(), true) {
+                    let _ = exec_tx.send(ExecMsg::Run(b));
+                }
+                return;
+            }
+        }
+        for b in batcher.flush_due(Instant::now(), false) {
+            if exec_tx.send(ExecMsg::Run(b)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn executor_loop(exec_rx: Receiver<ExecMsg>, registry: Registry, metrics: Arc<MetricsHub>) {
+    let mut engine = match Engine::new() {
+        Ok(e) => e,
+        Err(e) => {
+            crate::warnln!("executor", "failed to create PJRT client: {e}");
+            return;
+        }
+    };
+    while let Ok(msg) = exec_rx.recv() {
+        match msg {
+            ExecMsg::Preload(ds, variant) => {
+                if let Some(meta) = registry.dataset(&ds).and_then(|d| d.variant(&variant)) {
+                    if let Err(e) = engine.load(meta) {
+                        crate::warnln!("executor", "preload {ds}/{variant}: {e}");
+                    }
+                }
+            }
+            ExecMsg::Run(batch) => run_batch(&mut engine, &registry, &metrics, batch),
+        }
+    }
+}
+
+fn run_batch(engine: &mut Engine, registry: &Registry, metrics: &Arc<MetricsHub>, batch: Batch) {
+    let key = batch.key.clone();
+    let (ds, variant) = key.split_once('/').unwrap_or((key.as_str(), ""));
+    let meta = match registry.dataset(ds).and_then(|d| d.variant(variant)) {
+        Some(m) => m.clone(),
+        None => {
+            for job in batch.jobs {
+                let _ = job.reply.send(Err(ServeError::UnknownVariant(variant.into())));
+            }
+            return;
+        }
+    };
+    let model = match engine.load(&meta) {
+        Ok(m) => m,
+        Err(e) => {
+            metrics.record_error(&key);
+            for job in batch.jobs {
+                let _ = job.reply.send(Err(ServeError::Exec(e.to_string())));
+            }
+            return;
+        }
+    };
+    let n = batch.jobs.len();
+    let seq = meta.seq_len;
+    let mut tokens = Vec::with_capacity(n * seq);
+    let mut segments = Vec::with_capacity(n * seq);
+    for job in &batch.jobs {
+        tokens.extend_from_slice(&job.tokens);
+        segments.extend_from_slice(&job.segments);
+    }
+    let t_exec = Instant::now();
+    match model.infer(&tokens, &segments, n) {
+        Ok(logits) => {
+            let exec_us = t_exec.elapsed().as_micros() as u64;
+            let bucket = model.bucket_for(n);
+            metrics.record_batch(&key, bucket, n, exec_us);
+            let done = Instant::now();
+            for (i, job) in batch.jobs.into_iter().enumerate() {
+                let total_us = done.duration_since(job.req.submitted).as_micros() as u64;
+                let queue_us = total_us.saturating_sub(exec_us);
+                metrics.record_request(&key, queue_us, total_us);
+                let resp = Response {
+                    id: job.req.id,
+                    label: logits.argmax(i),
+                    scores: logits.row(i).to_vec(),
+                    variant: variant.to_string(),
+                    queue_us,
+                    exec_us,
+                    total_us,
+                    batch_size: n,
+                };
+                let _ = job.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            metrics.record_error(&key);
+            for job in batch.jobs {
+                let _ = job.reply.send(Err(ServeError::Exec(e.to_string())));
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! TCP line-protocol front-end (tokio is not vendored; std::net + threads).
+//!
+//! One JSON object per line in, one per line out:
+//!   -> {"dataset": "sst2", "text": "pos_1 filler_2", "text_b": null,
+//!       "max_latency_ms": 5.0, "min_metric": 0.88, "variant": "power-default"}
+//!   <- {"id": 7, "label": 1, "scores": [..], "variant": "power-default",
+//!       "queue_us": 120, "exec_us": 900, "total_us": 1080, "batch_size": 4}
+//!   <- {"error": "coordinator overloaded (queue full)"}
+//!
+//! Special request {"cmd": "stats"} returns the metrics report;
+//! {"cmd": "variants", "dataset": "sst2"} lists routable variants.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::request::{Input, Response, ServeError, Sla};
+use super::scheduler::Client;
+use crate::util::json::Json;
+
+/// Serving front-end over a coordinator client.
+pub struct Server {
+    listener: TcpListener,
+    client: Client,
+    stop: Arc<AtomicBool>,
+    pub connections: Arc<AtomicUsize>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, client: Client) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            listener,
+            client,
+            stop: Arc::new(AtomicBool::new(false)),
+            connections: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Stop handle usable from another thread.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept loop; returns when the stop flag is set (checked between
+    /// accepts — pair with a wake-up connection, see `Server::shutdown`).
+    pub fn run(&self) -> std::io::Result<()> {
+        crate::info!("server", "listening on {}", self.listener.local_addr()?);
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let client = self.client.clone();
+                    let conns = self.connections.clone();
+                    conns.fetch_add(1, Ordering::Relaxed);
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(s, client);
+                        conns.fetch_sub(1, Ordering::Relaxed);
+                    });
+                }
+                Err(e) => crate::warnln!("server", "accept failed: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Set the stop flag and wake the accept loop.
+    pub fn shutdown(addr: std::net::SocketAddr, stop: &Arc<AtomicBool>) {
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr); // wake the blocking accept
+    }
+}
+
+fn handle_connection(stream: TcpStream, client: Client) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    crate::debugln!("server", "connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(&line, &client);
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn err_json(msg: &str) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m)
+}
+
+fn response_json(r: &Response) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("id".into(), Json::Num(r.id as f64));
+    m.insert("label".into(), Json::Num(r.label as f64));
+    m.insert(
+        "scores".into(),
+        Json::Arr(r.scores.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    m.insert("variant".into(), Json::Str(r.variant.clone()));
+    m.insert("queue_us".into(), Json::Num(r.queue_us as f64));
+    m.insert("exec_us".into(), Json::Num(r.exec_us as f64));
+    m.insert("total_us".into(), Json::Num(r.total_us as f64));
+    m.insert("batch_size".into(), Json::Num(r.batch_size as f64));
+    Json::Obj(m)
+}
+
+fn handle_line(line: &str, client: &Client) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(&format!("bad json: {e}")),
+    };
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("stats".into(), Json::Str(client.metrics().report()));
+                Json::Obj(m)
+            }
+            "variants" => {
+                let ds = req.get("dataset").and_then(Json::as_str).unwrap_or("");
+                let vs = client
+                    .router()
+                    .variants(ds)
+                    .into_iter()
+                    .map(|v| Json::Str(v.variant.clone()))
+                    .collect();
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("variants".into(), Json::Arr(vs));
+                Json::Obj(m)
+            }
+            other => err_json(&format!("unknown cmd {other:?}")),
+        };
+    }
+    let dataset = match req.get("dataset").and_then(Json::as_str) {
+        Some(d) => d.to_string(),
+        None => return err_json("missing dataset"),
+    };
+    let text = match req.get("text").and_then(Json::as_str) {
+        Some(t) => t.to_string(),
+        None => return err_json("missing text"),
+    };
+    let text_b = req.get("text_b").and_then(Json::as_str).map(String::from);
+    let sla = Sla {
+        max_latency_ms: req.get("max_latency_ms").and_then(Json::as_f64),
+        min_metric: req.get("min_metric").and_then(Json::as_f64),
+        variant: req.get("variant").and_then(Json::as_str).map(String::from),
+    };
+    match client.classify(&dataset, Input::Text { a: text, b: text_b }, sla) {
+        Ok(r) => response_json(&r),
+        Err(e @ ServeError::Overloaded) => err_json(&e.to_string()),
+        Err(e) => err_json(&e.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn err_json_shape() {
+        let j = err_json("boom");
+        assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn response_json_shape() {
+        let r = Response {
+            id: 3,
+            label: 1,
+            scores: vec![0.1, 0.9],
+            variant: "bert".into(),
+            queue_us: 10,
+            exec_us: 20,
+            total_us: 30,
+            batch_size: 4,
+        };
+        let j = response_json(&r);
+        assert_eq!(j.get("label").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("scores").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

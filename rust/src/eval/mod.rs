@@ -1,0 +1,189 @@
+//! Evaluation metrics, mirrored from `python/compile/train.py` so Tables 2-4
+//! are regenerated end-to-end from Rust (inference through the PJRT engine,
+//! metric computation here).
+
+/// Classification / regression metric kinds used across the task suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    F1,
+    Matthews,
+    Spearman,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "accuracy" => Some(Metric::Accuracy),
+            "f1" => Some(Metric::F1),
+            "matthews" => Some(Metric::Matthews),
+            "spearman" => Some(Metric::Spearman),
+            _ => None,
+        }
+    }
+
+    /// Compute the metric from per-row outputs.
+    /// `outputs` is row-major [n, num_classes] (num_classes == 1 => regression).
+    pub fn compute(&self, outputs: &[f32], num_classes: usize, labels: &[f32]) -> f64 {
+        let n = labels.len();
+        assert_eq!(outputs.len(), n * num_classes);
+        match self {
+            Metric::Spearman => {
+                let pred: Vec<f64> = (0..n).map(|i| outputs[i * num_classes] as f64).collect();
+                let lab: Vec<f64> = labels.iter().map(|&x| x as f64).collect();
+                spearman(&pred, &lab)
+            }
+            _ => {
+                let pred: Vec<u32> = (0..n).map(|i| argmax(&outputs[i * num_classes..(i + 1) * num_classes])).collect();
+                let lab: Vec<u32> = labels.iter().map(|&x| x as u32).collect();
+                match self {
+                    Metric::Accuracy => accuracy(&pred, &lab),
+                    Metric::F1 => f1_binary(&pred, &lab),
+                    Metric::Matthews => matthews(&pred, &lab),
+                    Metric::Spearman => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+pub fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+pub fn accuracy(pred: &[u32], labels: &[u32]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hit = pred.iter().zip(labels).filter(|(a, b)| a == b).count();
+    hit as f64 / pred.len() as f64
+}
+
+fn counts(pred: &[u32], labels: &[u32]) -> (f64, f64, f64, f64) {
+    let mut tp = 0.0;
+    let mut tn = 0.0;
+    let mut fp = 0.0;
+    let mut fnn = 0.0;
+    for (&p, &y) in pred.iter().zip(labels) {
+        match (p, y) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => {}
+        }
+    }
+    (tp, tn, fp, fnn)
+}
+
+/// Binary F1 with class 1 as positive (paper: QQP, MRPC).
+pub fn f1_binary(pred: &[u32], labels: &[u32]) -> f64 {
+    let (tp, _tn, fp, fnn) = counts(pred, labels);
+    let denom = 2.0 * tp + fp + fnn;
+    if denom > 0.0 {
+        2.0 * tp / denom
+    } else {
+        0.0
+    }
+}
+
+/// Matthews correlation coefficient (paper: CoLA).
+pub fn matthews(pred: &[u32], labels: &[u32]) -> f64 {
+    let (tp, tn, fp, fnn) = counts(pred, labels);
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom > 0.0 {
+        (tp * tn - fp * fnn) / denom
+    } else {
+        0.0
+    }
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut r = vec![0.0; xs.len()];
+    for (rank, &i) in idx.iter().enumerate() {
+        r[i] = rank as f64;
+    }
+    r
+}
+
+/// Spearman rank correlation (paper: STS-B).
+pub fn spearman(pred: &[f64], labels: &[f64]) -> f64 {
+    let rp = ranks(pred);
+    let ry = ranks(labels);
+    let n = pred.len() as f64;
+    let mp = rp.iter().sum::<f64>() / n;
+    let my = ry.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut dp = 0.0;
+    let mut dy = 0.0;
+    for i in 0..pred.len() {
+        let a = rp[i] - mp;
+        let b = ry[i] - my;
+        num += a * b;
+        dp += a * a;
+        dy += b * b;
+    }
+    let denom = (dp * dy).sqrt();
+    if denom > 0.0 {
+        num / denom
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_zero() {
+        assert_eq!(f1_binary(&[1, 0, 1], &[1, 0, 1]), 1.0);
+        assert_eq!(f1_binary(&[0, 0], &[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn matthews_range() {
+        // perfect prediction -> 1.0
+        assert!((matthews(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        // inverted prediction -> -1.0
+        assert!((matthews(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let up = [10.0, 20.0, 30.0, 40.0];
+        let down = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&x, &up) - 1.0).abs() < 1e-12);
+        assert!((spearman(&x, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_compute_dispatch() {
+        // 3 rows, 2 classes
+        let outputs = [0.1, 0.9, 0.8, 0.2, 0.3, 0.7];
+        let labels = [1.0, 0.0, 1.0];
+        let acc = Metric::Accuracy.compute(&outputs, 2, &labels);
+        assert!((acc - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_parse() {
+        assert_eq!(Metric::parse("f1"), Some(Metric::F1));
+        assert_eq!(Metric::parse("nope"), None);
+    }
+}

@@ -1,0 +1,38 @@
+//! # powerbert — PoWER-BERT (ICML 2020) reproduction
+//!
+//! Three-layer architecture:
+//! * **L1** Pallas kernels (build-time Python, `python/compile/kernels/`)
+//! * **L2** JAX model AOT-lowered to HLO text (`python/compile/`)
+//! * **L3** this crate: the serving coordinator + PJRT runtime. Python is
+//!   never on the request path — after `make artifacts` the binary is
+//!   self-contained.
+//!
+//! Public API tour:
+//! * [`runtime::Registry`] — discover AOT artifacts.
+//! * [`runtime::Engine`] — compile HLO, keep weights device-resident, run.
+//! * [`coordinator::Coordinator`] — dynamic batching + SLA-aware routing
+//!   (the paper's accuracy/latency Pareto as a runtime policy).
+//! * [`coordinator::Server`] — TCP line-protocol front-end.
+//! * [`eval`] — GLUE-style metrics, mirrored from the Python side.
+//! * [`bench`], [`util`] — measurement + substrate modules.
+//!
+//! ```no_run
+//! use powerbert::coordinator::{Config, Coordinator, Input, Sla};
+//! let mut c = Coordinator::start(Config::default()).unwrap();
+//! let resp = c.classify("sst2",
+//!     Input::Text { a: "pos_3 filler_1 neg_2 pos_9".into(), b: None },
+//!     Sla::default()).unwrap();
+//! println!("label={} via {}", resp.label, resp.variant);
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod eval;
+pub mod runtime;
+pub mod testutil;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use coordinator::{Client, Config, Coordinator, Input, Response, ServeError, Sla};
+pub use runtime::{Engine, Registry};

@@ -1,0 +1,218 @@
+//! powerbert CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve     start the TCP serving front-end
+//!   eval      run a dataset's test split through a variant, print metrics
+//!   info      list artifacts / variants / retention configs
+//!   stats     (with serve) print the metrics report on SIGTERM... (report
+//!             is also available via the {"cmd":"stats"} protocol message)
+
+use std::path::PathBuf;
+
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Policy, Server};
+use powerbert::runtime::{default_root, Engine, Registry, TestSplit};
+use powerbert::util::cli::Args;
+use powerbert::eval::Metric;
+
+fn main() {
+    powerbert::util::log::init();
+    let args = Args::new(
+        "powerbert",
+        "PoWER-BERT serving coordinator (ICML 2020 reproduction)",
+    )
+    .positional("command", "serve | eval | info")
+    .opt("artifacts", None, "artifacts directory (default: ./artifacts)")
+    .opt("addr", Some("127.0.0.1:7878"), "serve: listen address")
+    .opt("datasets", None, "serve: comma-separated dataset allowlist")
+    .opt("policy", Some("fastest-above-metric"), "serve: routing policy (fixed:<variant> | best-under-latency | fastest-above-metric)")
+    .opt("max-batch", Some("32"), "serve: dynamic batcher max batch")
+    .opt("max-wait-ms", Some("5"), "serve: dynamic batcher max wait")
+    .opt("dataset", None, "eval: dataset name")
+    .opt("variant", Some("bert"), "eval: variant name")
+    .opt("batch", Some("32"), "eval: batch size")
+    .flag("preload", "serve: load all variants at startup");
+
+    let parsed = match args.parse() {
+        Ok(p) => p,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    };
+    let root = parsed
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_root);
+
+    let cmd = parsed.positional.first().map(String::as_str).unwrap_or("info");
+    let code = match cmd {
+        "serve" => cmd_serve(&parsed, root),
+        "eval" => cmd_eval(&parsed, root),
+        "info" => cmd_info(root),
+        other => {
+            eprintln!("unknown command {other:?} (expected serve|eval|info)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_policy(s: &str) -> Policy {
+    if let Some(v) = s.strip_prefix("fixed:") {
+        Policy::Fixed(v.to_string())
+    } else if s == "best-under-latency" {
+        Policy::BestUnderLatency
+    } else {
+        Policy::FastestAboveMetric
+    }
+}
+
+fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
+    let cfg = Config {
+        artifacts: root,
+        datasets: parsed
+            .get("datasets")
+            .map(|d| d.split(',').map(String::from).collect())
+            .unwrap_or_default(),
+        policy: parse_policy(parsed.get("policy").unwrap_or_default()),
+        batch: BatchPolicy {
+            max_batch: parsed.get_usize("max-batch").unwrap_or(32),
+            max_wait: std::time::Duration::from_millis(
+                parsed.get_usize("max-wait-ms").unwrap_or(5) as u64,
+            ),
+        },
+        preload: parsed.has("preload"),
+        ..Config::default()
+    };
+    let coordinator = match Coordinator::start(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("failed to start coordinator: {e}");
+            return 1;
+        }
+    };
+    let addr = parsed.get("addr").unwrap_or("127.0.0.1:7878");
+    let server = match Server::bind(addr, coordinator.client()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = server.run() {
+        eprintln!("server error: {e}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_eval(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
+    let Some(dataset) = parsed.get("dataset") else {
+        eprintln!("--dataset required");
+        return 2;
+    };
+    let variant = parsed.get("variant").unwrap_or("bert");
+    let batch = parsed.get_usize("batch").unwrap_or(32);
+    let registry = match Registry::scan(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let Some(ds) = registry.dataset(dataset) else {
+        eprintln!("dataset {dataset} not in artifacts");
+        return 1;
+    };
+    let Some(meta) = ds.variant(variant) else {
+        eprintln!(
+            "variant {variant} not found; have: {:?}",
+            ds.variants.keys().collect::<Vec<_>>()
+        );
+        return 1;
+    };
+    let mut engine = Engine::new().expect("pjrt client");
+    let model = match engine.load(meta) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("load: {e:#}");
+            return 1;
+        }
+    };
+    let split = match TestSplit::load(&ds.test_npz()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("test split: {e}");
+            return 1;
+        }
+    };
+    let metric = Metric::parse(&meta.metric).unwrap_or(Metric::Accuracy);
+    let t0 = std::time::Instant::now();
+    let mut outputs: Vec<f32> = Vec::new();
+    let mut num_classes = meta.num_classes;
+    let seq = split.seq_len;
+    let mut i = 0;
+    while i < split.n {
+        let n = batch.min(split.n - i);
+        let toks = &split.tokens[i * seq..(i + n) * seq];
+        let segs = &split.segments[i * seq..(i + n) * seq];
+        match model.infer(toks, segs, n) {
+            Ok(l) => {
+                num_classes = l.num_classes;
+                outputs.extend_from_slice(&l.values);
+            }
+            Err(e) => {
+                eprintln!("infer: {e}");
+                return 1;
+            }
+        }
+        i += n;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let m = metric.compute(&outputs, num_classes, &split.labels);
+    println!(
+        "{dataset}/{variant}: {} = {:.4} over {} examples in {:.2}s ({:.1} ex/s)",
+        meta.metric,
+        m,
+        split.n,
+        secs,
+        split.n as f64 / secs
+    );
+    0
+}
+
+fn cmd_info(root: PathBuf) -> i32 {
+    let registry = match Registry::scan(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("artifacts root: {}", registry.root.display());
+    for (name, ds) in &registry.datasets {
+        println!("\n{name}:");
+        for (vname, v) in &ds.variants {
+            let dev = v
+                .dev_metric
+                .map(|d| format!("{d:.4}"))
+                .unwrap_or_else(|| "-".into());
+            let ret = v
+                .retention
+                .as_ref()
+                .map(|r| format!("{r:?}"))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "  {vname:<18} kind={:<10} {}={} N={} buckets={:?} agg-wv={} retention={}",
+                v.kind,
+                v.metric,
+                dev,
+                v.seq_len,
+                v.batch_sizes,
+                v.aggregate_word_vectors(),
+                ret
+            );
+        }
+    }
+    0
+}

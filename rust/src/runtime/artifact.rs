@@ -1,0 +1,178 @@
+//! Artifact registry: discovers and describes the AOT bundle produced by
+//! `make artifacts` (`python -m compile.pipeline`).
+//!
+//! Layout contract (see python/compile/aot.py):
+//!   artifacts/vocab.json
+//!   artifacts/index.json
+//!   artifacts/<dataset>/test.npz
+//!   artifacts/<dataset>/<variant>/{model.b{B}.hlo.txt, weights.npz, meta.json}
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Parsed `meta.json` of one model variant.
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub dataset: String,
+    pub variant: String,
+    /// "bert" | "power" | "albert" | "distil" | "pkd" | "headprune" | ...
+    pub kind: String,
+    pub metric: String,
+    pub seq_len: usize,
+    pub num_layers: usize,
+    pub num_classes: usize,
+    pub batch_sizes: Vec<usize>,
+    /// batch size -> HLO file name
+    pub hlo: BTreeMap<usize, String>,
+    pub weights: String,
+    pub param_order: Vec<String>,
+    /// PoWER retention configuration (absent for non-PoWER variants).
+    pub retention: Option<Vec<usize>>,
+    pub dev_metric: Option<f64>,
+    pub dir: PathBuf,
+}
+
+impl VariantMeta {
+    pub fn parse(dir: &Path) -> Result<VariantMeta, String> {
+        let j = Json::parse_file(&dir.join("meta.json")).map_err(|e| e.to_string())?;
+        let mut hlo = BTreeMap::new();
+        if let Some(o) = j.get("hlo").and_then(Json::as_obj) {
+            for (k, v) in o {
+                let b: usize = k.parse().map_err(|_| format!("bad batch key {k}"))?;
+                hlo.insert(b, v.as_str().unwrap_or_default().to_string());
+            }
+        }
+        let retention = j.get("retention").and_then(Json::as_arr).map(|a| {
+            a.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
+        });
+        let param_order = j
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        Ok(VariantMeta {
+            dataset: j.str_at("dataset").map_err(|e| e.to_string())?.to_string(),
+            variant: j.str_at("variant").map_err(|e| e.to_string())?.to_string(),
+            kind: j.get("kind").and_then(Json::as_str).unwrap_or("unknown").to_string(),
+            metric: j.str_at("metric").map_err(|e| e.to_string())?.to_string(),
+            seq_len: j.usize_at("seq_len").map_err(|e| e.to_string())?,
+            num_layers: j.get("num_layers").and_then(Json::as_usize).unwrap_or(0),
+            num_classes: j.get("num_classes").and_then(Json::as_usize).unwrap_or(2),
+            batch_sizes: j
+                .get("batch_sizes")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            hlo,
+            weights: j.get("weights").and_then(Json::as_str).unwrap_or("weights.npz").to_string(),
+            param_order,
+            retention,
+            dev_metric: j.get("dev_metric").and_then(Json::as_f64),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn hlo_path(&self, batch: usize) -> Option<PathBuf> {
+        self.hlo.get(&batch).map(|f| self.dir.join(f))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights)
+    }
+
+    /// Total word-vectors processed across encoders (the paper's aggregate;
+    /// e.g. RTE: BERT 12*256=3072 vs PoWER 868).
+    pub fn aggregate_word_vectors(&self) -> usize {
+        match &self.retention {
+            Some(r) => r.iter().sum(),
+            None => self.num_layers * self.seq_len,
+        }
+    }
+}
+
+/// One dataset's artifacts: test split + variants.
+#[derive(Debug, Clone)]
+pub struct DatasetArtifacts {
+    pub name: String,
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+impl DatasetArtifacts {
+    pub fn test_npz(&self) -> PathBuf {
+        self.dir.join("test.npz")
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.get(name)
+    }
+}
+
+/// Registry over the whole artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub root: PathBuf,
+    pub datasets: BTreeMap<String, DatasetArtifacts>,
+}
+
+impl Registry {
+    /// Scan `root` for datasets and variants (ignores incomplete dirs).
+    pub fn scan(root: &Path) -> Result<Registry, String> {
+        if !root.is_dir() {
+            return Err(format!("artifacts directory {} not found — run `make artifacts`", root.display()));
+        }
+        let mut datasets = BTreeMap::new();
+        for entry in std::fs::read_dir(root).map_err(|e| e.to_string())? {
+            let entry = entry.map_err(|e| e.to_string())?;
+            let path = entry.path();
+            if !path.is_dir() || path.file_name().is_some_and(|n| n == "analysis") {
+                continue;
+            }
+            let name = entry.file_name().to_string_lossy().to_string();
+            let mut variants = BTreeMap::new();
+            for v in std::fs::read_dir(&path).map_err(|e| e.to_string())? {
+                let vdir = v.map_err(|e| e.to_string())?.path();
+                if vdir.is_dir() && vdir.join("meta.json").exists() {
+                    match VariantMeta::parse(&vdir) {
+                        Ok(m) => {
+                            variants.insert(m.variant.clone(), m);
+                        }
+                        Err(e) => {
+                            crate::warnln!("registry", "skipping {}: {e}", vdir.display());
+                        }
+                    }
+                }
+            }
+            if !variants.is_empty() {
+                datasets.insert(name.clone(), DatasetArtifacts { name, dir: path, variants });
+            }
+        }
+        Ok(Registry { root: root.to_path_buf(), datasets })
+    }
+
+    pub fn dataset(&self, name: &str) -> Option<&DatasetArtifacts> {
+        self.datasets.get(name)
+    }
+
+    pub fn vocab_path(&self) -> PathBuf {
+        self.root.join("vocab.json")
+    }
+
+    /// All (dataset, variant) pairs of a given kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&VariantMeta> {
+        self.datasets
+            .values()
+            .flat_map(|d| d.variants.values())
+            .filter(|v| v.kind == kind)
+            .collect()
+    }
+}
+
+/// Default artifacts dir: $POWERBERT_ARTIFACTS or ./artifacts.
+pub fn default_root() -> PathBuf {
+    std::env::var("POWERBERT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

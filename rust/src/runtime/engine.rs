@@ -1,0 +1,297 @@
+//! PJRT execution engine: loads HLO-text artifacts, keeps model weights
+//! resident as device buffers, and runs batched inference.
+//!
+//! Weights are transferred to the device ONCE at load (`PjRtBuffer::read_npz`)
+//! and every request then goes through `execute_b`, so the hot path moves only
+//! the (tokens, segments) batch — this is the Rust analog of the paper's
+//! "model stays on the GPU" serving setup.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::VariantMeta;
+
+/// One compiled batch-size bucket of a variant.
+struct Compiled {
+    exe: PjRtLoadedExecutable,
+}
+
+/// A loaded model variant: compiled executables (one per batch size) plus
+/// device-resident weights in the lowered parameter order.
+pub struct LoadedModel {
+    pub meta: VariantMeta,
+    compiled: BTreeMap<usize, Compiled>,
+    weights: Vec<PjRtBuffer>,
+    client: Arc<PjRtClient>,
+}
+
+/// Output of one forward execution.
+#[derive(Debug, Clone)]
+pub struct Logits {
+    /// Row-major [batch, num_classes].
+    pub values: Vec<f32>,
+    pub batch: usize,
+    pub num_classes: usize,
+}
+
+impl Logits {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.values[i * self.num_classes..(i + 1) * self.num_classes]
+    }
+
+    pub fn argmax(&self, i: usize) -> usize {
+        let r = self.row(i);
+        r.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap_or(0)
+    }
+}
+
+impl LoadedModel {
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        self.compiled.keys().max().copied().unwrap_or(1)
+    }
+
+    /// Smallest compiled batch size that fits `n` rows (or the max bucket).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.compiled
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.compiled.keys().copied().collect()
+    }
+
+    /// Run a forward pass. `tokens`/`segments` are row-major [n, seq_len]
+    /// with n <= the chosen bucket; rows are zero-padded up to the bucket.
+    pub fn infer(&self, tokens: &[i32], segments: &[i32], n: usize) -> Result<Logits> {
+        let seq = self.meta.seq_len;
+        if tokens.len() != n * seq || segments.len() != n * seq {
+            bail!("infer: expected {}x{} tokens, got {}", n, seq, tokens.len());
+        }
+        let bucket = self.bucket_for(n);
+        let c = self
+            .compiled
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no compiled bucket {bucket}"))?;
+
+        // Pad the batch to the bucket size with PAD rows. NOTE: inputs go
+        // through buffer_from_host_buffer (synchronous copy,
+        // kImmutableOnlyDuringCall) — buffer_from_host_literal is an async
+        // copy that may outlive the source Literal and segfault.
+        let dims = [bucket, seq];
+        let (tok_buf, seg_buf) = if n == bucket {
+            (
+                self.client.buffer_from_host_buffer(tokens, &dims, None)?,
+                self.client.buffer_from_host_buffer(segments, &dims, None)?,
+            )
+        } else {
+            let mut t = tokens.to_vec();
+            let mut s = segments.to_vec();
+            t.resize(bucket * seq, 0);
+            s.resize(bucket * seq, 0);
+            (
+                self.client.buffer_from_host_buffer(&t, &dims, None)?,
+                self.client.buffer_from_host_buffer(&s, &dims, None)?,
+            )
+        };
+
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(2 + self.weights.len());
+        args.push(&tok_buf);
+        args.push(&seg_buf);
+        args.extend(self.weights.iter());
+
+        let result = c.exe.execute_b(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let mut tuple = out.to_tuple()?;
+        let logits_lit = tuple
+            .drain(..1)
+            .next()
+            .ok_or_else(|| anyhow!("empty result tuple"))?;
+        let all: Vec<f32> = logits_lit.to_vec()?;
+        let num_classes = all.len() / bucket;
+        Ok(Logits {
+            values: all[..n * num_classes].to_vec(),
+            batch: n,
+            num_classes,
+        })
+    }
+
+    /// Debug variants: returns (logits, kept positions [n, L, N] as i32).
+    pub fn infer_with_trace(&self, tokens: &[i32], segments: &[i32], n: usize)
+        -> Result<(Logits, Vec<i32>)> {
+        let seq = self.meta.seq_len;
+        let bucket = self.bucket_for(n);
+        let c = self
+            .compiled
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no compiled bucket {bucket}"))?;
+        let mut t = tokens.to_vec();
+        let mut s = segments.to_vec();
+        t.resize(bucket * seq, 0);
+        s.resize(bucket * seq, 0);
+        let dims = [bucket, seq];
+        let tok_buf = self.client.buffer_from_host_buffer(&t, &dims, None)?;
+        let seg_buf = self.client.buffer_from_host_buffer(&s, &dims, None)?;
+        let mut args: Vec<&PjRtBuffer> = vec![&tok_buf, &seg_buf];
+        args.extend(self.weights.iter());
+        let result = c.exe.execute_b(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let tuple = out.to_tuple()?;
+        if tuple.len() != 2 {
+            bail!("debug artifact must return (logits, kept), got {}-tuple", tuple.len());
+        }
+        let logits: Vec<f32> = tuple[0].to_vec()?;
+        let kept: Vec<i32> = tuple[1].to_vec()?;
+        let num_classes = logits.len() / bucket;
+        Ok((
+            Logits { values: logits[..n * num_classes].to_vec(), batch: n, num_classes },
+            kept,
+        ))
+    }
+}
+
+/// The engine owns the PJRT client and the set of loaded models.
+pub struct Engine {
+    client: Arc<PjRtClient>,
+    models: HashMap<String, Arc<LoadedModel>>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = Arc::new(PjRtClient::cpu().context("create PJRT CPU client")?);
+        Ok(Engine { client, models: HashMap::new() })
+    }
+
+    pub fn client(&self) -> &Arc<PjRtClient> {
+        &self.client
+    }
+
+    fn key(dataset: &str, variant: &str) -> String {
+        format!("{dataset}/{variant}")
+    }
+
+    /// Compile all batch-size buckets of a variant and upload its weights.
+    pub fn load(&mut self, meta: &VariantMeta) -> Result<Arc<LoadedModel>> {
+        let key = Self::key(&meta.dataset, &meta.variant);
+        if let Some(m) = self.models.get(&key) {
+            return Ok(m.clone());
+        }
+        let t0 = std::time::Instant::now();
+
+        // Weights as named literals -> device buffers, reordered to match
+        // the lowered module's parameter order from meta.json.
+        let named: Vec<(String, Literal)> =
+            Literal::read_npz(meta.weights_path(), &())
+                .with_context(|| format!("read {}", meta.weights_path().display()))?;
+        let mut by_name: HashMap<String, Literal> = named.into_iter().collect();
+        let mut weights = Vec::with_capacity(meta.param_order.len());
+        for name in &meta.param_order {
+            let lit = by_name
+                .remove(name)
+                .ok_or_else(|| anyhow!("weights.npz missing param {name}"))?;
+            // Synchronous host->device copy (see note in `infer`): raw f32
+            // data + dims instead of the async literal path.
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data: Vec<f32> = lit.to_vec()?;
+            weights.push(self.client.buffer_from_host_buffer(&data, &dims, None)?);
+        }
+
+        let mut compiled = BTreeMap::new();
+        for (&batch, file) in &meta.hlo {
+            let path = meta.dir.join(file);
+            let exe = self.compile_hlo(&path)?;
+            compiled.insert(batch, Compiled { exe });
+        }
+        if compiled.is_empty() {
+            bail!("variant {key} has no HLO files");
+        }
+        let model = Arc::new(LoadedModel {
+            meta: meta.clone(),
+            compiled,
+            weights,
+            client: self.client.clone(),
+        });
+        crate::info!(
+            "engine",
+            "loaded {key} ({} params, {} buckets) in {:.2}s",
+            model.weights.len(),
+            model.compiled.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        self.models.insert(key, model.clone());
+        Ok(model)
+    }
+
+    fn compile_hlo(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    pub fn get(&self, dataset: &str, variant: &str) -> Option<Arc<LoadedModel>> {
+        self.models.get(&Self::key(dataset, variant)).cloned()
+    }
+
+    pub fn loaded(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// Test-split arrays read from `test.npz`.
+pub struct TestSplit {
+    pub tokens: Vec<i32>,
+    pub segments: Vec<i32>,
+    pub labels: Vec<f32>,
+    pub n: usize,
+    pub seq_len: usize,
+}
+
+impl TestSplit {
+    pub fn load(path: &Path) -> Result<TestSplit> {
+        let named = Literal::read_npz(path, &())
+            .with_context(|| format!("read {}", path.display()))?;
+        let mut tokens = None;
+        let mut segments = None;
+        let mut labels = None;
+        let mut shape = (0usize, 0usize);
+        for (name, lit) in named {
+            match name.as_str() {
+                "tokens" => {
+                    let s = lit.array_shape()?;
+                    shape = (s.dims()[0] as usize, s.dims()[1] as usize);
+                    tokens = Some(lit.to_vec::<i32>()?);
+                }
+                "segs" => segments = Some(lit.to_vec::<i32>()?),
+                "labels" => labels = Some(lit.to_vec::<f32>()?),
+                _ => {}
+            }
+        }
+        Ok(TestSplit {
+            tokens: tokens.ok_or_else(|| anyhow!("test.npz missing tokens"))?,
+            segments: segments.ok_or_else(|| anyhow!("test.npz missing segs"))?,
+            labels: labels.ok_or_else(|| anyhow!("test.npz missing labels"))?,
+            n: shape.0,
+            seq_len: shape.1,
+        })
+    }
+
+    pub fn row(&self, i: usize) -> (&[i32], &[i32]) {
+        let s = self.seq_len;
+        (&self.tokens[i * s..(i + 1) * s], &self.segments[i * s..(i + 1) * s])
+    }
+}

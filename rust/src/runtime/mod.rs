@@ -1,0 +1,9 @@
+//! Runtime layer: PJRT client wrapper, artifact registry, model loading and
+//! batched execution. Python is never on this path — the Rust binary is
+//! self-contained once `make artifacts` has produced the AOT bundle.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{default_root, DatasetArtifacts, Registry, VariantMeta};
+pub use engine::{Engine, LoadedModel, Logits, TestSplit};

@@ -1,0 +1,6 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set): seeded random case generation with failure reporting. Shrinking is
+//! deliberately simple — on failure the harness re-runs the failing seed
+//! with progressively smaller size hints and reports the smallest failure.
+
+pub mod prop;

@@ -1,0 +1,82 @@
+//! `forall(cases, |rng, size| ...)` — seeded random property testing.
+//!
+//! Usage:
+//! ```no_run
+//! use powerbert::testutil::prop::forall;
+//! forall("sorted stays sorted", 200, |rng, size| {
+//!     let mut v: Vec<u64> = (0..size).map(|_| rng.below(1000)).collect();
+//!     v.sort();
+//!     assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Runs `prop` for `cases` seeded cases with growing size hints (1..=64).
+/// On panic, retries the same seed at smaller sizes to report the smallest
+/// failing size, then re-panics with the seed for reproduction.
+pub fn forall<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng, usize) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let size = 1 + (case as usize * 7) % 64;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng, size);
+        });
+        if result.is_err() {
+            // Simple shrink: find the smallest size that still fails.
+            let mut smallest = size;
+            for s in 1..size {
+                let r = std::panic::catch_unwind(|| {
+                    let mut rng = Rng::new(seed);
+                    prop(&mut rng, s);
+                });
+                if r.is_err() {
+                    smallest = s;
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed: seed={seed:#x} size={size} (smallest failing size {smallest})"
+            );
+        }
+    }
+}
+
+/// Random vector helper.
+pub fn vec_u64(rng: &mut Rng, len: usize, bound: u64) -> Vec<u64> {
+    (0..len).map(|_| rng.below(bound.max(1))).collect()
+}
+
+/// Random f64 vector in [0, bound).
+pub fn vec_f64(rng: &mut Rng, len: usize, bound: f64) -> Vec<f64> {
+    (0..len).map(|_| rng.f64() * bound).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("reverse twice is identity", 50, |rng, size| {
+            let v = vec_u64(rng, size, 100);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        forall("impossible", 10, |rng, size| {
+            let v = vec_u64(rng, size.max(3), 10);
+            assert!(v.iter().sum::<u64>() > 1000, "sums are small");
+        });
+    }
+}

@@ -1,0 +1,211 @@
+//! Word-level tokenizer over the synthetic vocabulary.
+//!
+//! Exact mirror of `python/compile/tokenizer.py` — both sides load the same
+//! `artifacts/vocab.json`: whitespace-split, exact-match lookup, OOV ->
+//! [UNK], layout `[CLS] a... [SEP] (b... [SEP])? [PAD]*`, pair truncation
+//! longest-segment-first. The Python test-suite cross-checks encodings.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub const PAD_ID: i32 = 0;
+pub const UNK_ID: i32 = 1;
+pub const CLS_ID: i32 = 2;
+pub const SEP_ID: i32 = 3;
+
+/// Vocabulary: id <-> word plus family id-ranges (used by workload
+/// generators to synthesize realistic requests in benches/examples).
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, i32>,
+    families: Vec<(String, (usize, usize))>,
+}
+
+impl Vocab {
+    pub fn load(path: &Path) -> Result<Vocab, String> {
+        let j = Json::parse_file(path).map_err(|e| e.to_string())?;
+        let words: Vec<String> = j
+            .get("words")
+            .and_then(Json::as_arr)
+            .ok_or("vocab.json: missing words")?
+            .iter()
+            .filter_map(|w| w.as_str().map(String::from))
+            .collect();
+        let mut families = Vec::new();
+        if let Some(f) = j.get("families").and_then(Json::as_obj) {
+            for (name, range) in f {
+                if let Some(r) = range.as_arr() {
+                    if r.len() == 2 {
+                        families.push((
+                            name.clone(),
+                            (r[0].as_usize().unwrap_or(0), r[1].as_usize().unwrap_or(0)),
+                        ));
+                    }
+                }
+            }
+        }
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Ok(Vocab { words, index, families })
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        *self.index.get(word).unwrap_or(&UNK_ID)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("[UNK]")
+    }
+
+    /// Id range `[start, end)` of a word family, e.g. "pos", "filler".
+    pub fn family(&self, name: &str) -> Option<(usize, usize)> {
+        self.families
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| *r)
+    }
+}
+
+/// Fixed-length encoding output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Encoded {
+    pub tokens: Vec<i32>,
+    pub segments: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: std::sync::Arc<Vocab>,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: std::sync::Arc<Vocab>) -> Tokenizer {
+        Tokenizer { vocab }
+    }
+
+    /// Encode one or two text segments to `seq_len` ids (+ segment ids).
+    pub fn encode(&self, a: &str, b: Option<&str>, seq_len: usize) -> Encoded {
+        let mut aw: Vec<&str> = a.split_whitespace().collect();
+        let mut bw: Vec<&str> = b.map(|s| s.split_whitespace().collect()).unwrap_or_default();
+        let n_special = if b.is_some() { 3 } else { 2 };
+        if b.is_none() {
+            aw.truncate(seq_len.saturating_sub(n_special));
+        } else {
+            // Truncate the longer segment first until the pair fits.
+            while aw.len() + bw.len() > seq_len.saturating_sub(n_special) {
+                if aw.len() >= bw.len() {
+                    aw.pop();
+                } else {
+                    bw.pop();
+                }
+            }
+        }
+        let mut tokens = Vec::with_capacity(seq_len);
+        let mut segments = Vec::with_capacity(seq_len);
+        tokens.push(CLS_ID);
+        segments.push(0);
+        for w in &aw {
+            tokens.push(self.vocab.id(w));
+            segments.push(0);
+        }
+        tokens.push(SEP_ID);
+        segments.push(0);
+        if b.is_some() {
+            for w in &bw {
+                tokens.push(self.vocab.id(w));
+                segments.push(1);
+            }
+            tokens.push(SEP_ID);
+            segments.push(1);
+        }
+        while tokens.len() < seq_len {
+            tokens.push(PAD_ID);
+            segments.push(0);
+        }
+        Encoded { tokens, segments }
+    }
+
+    /// Decode ids back to words, skipping specials.
+    pub fn decode(&self, ids: &[i32]) -> Vec<String> {
+        ids.iter()
+            .filter(|&&i| i > SEP_ID)
+            .map(|&i| self.vocab.word(i).to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn test_vocab() -> Arc<Vocab> {
+        let words = ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "pos_0", "neg_0", "filler_0", "filler_1"];
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.to_string(), i as i32))
+            .collect();
+        Arc::new(Vocab {
+            words: words.iter().map(|s| s.to_string()).collect(),
+            index,
+            families: vec![("pos".into(), (4, 5))],
+        })
+    }
+
+    #[test]
+    fn encodes_single_segment() {
+        let t = Tokenizer::new(test_vocab());
+        let e = t.encode("pos_0 filler_0", None, 8);
+        assert_eq!(e.tokens, vec![2, 4, 6, 3, 0, 0, 0, 0]);
+        assert_eq!(e.segments, vec![0; 8]);
+    }
+
+    #[test]
+    fn encodes_pair_with_segments() {
+        let t = Tokenizer::new(test_vocab());
+        let e = t.encode("pos_0", Some("neg_0 filler_1"), 8);
+        assert_eq!(e.tokens, vec![2, 4, 3, 5, 7, 3, 0, 0]);
+        assert_eq!(e.segments, vec![0, 0, 0, 1, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn oov_becomes_unk() {
+        let t = Tokenizer::new(test_vocab());
+        let e = t.encode("mystery", None, 4);
+        assert_eq!(e.tokens, vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn truncates_longest_first() {
+        let t = Tokenizer::new(test_vocab());
+        let e = t.encode("pos_0 pos_0 pos_0 pos_0", Some("neg_0"), 7);
+        // a gets truncated to fit: [CLS] a a a [SEP] b [SEP] -> 7 tokens
+        assert_eq!(e.tokens.len(), 7);
+        assert_eq!(e.tokens[0], CLS_ID);
+        assert_eq!(*e.tokens.last().unwrap(), SEP_ID);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = Tokenizer::new(test_vocab());
+        assert_eq!(t.decode(&[2, 4, 3, 0]), vec!["pos_0"]);
+    }
+}

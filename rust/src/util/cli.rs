@@ -1,0 +1,199 @@
+//! Tiny declarative CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument set: `Args::new("cmd").opt(...).flag(...).parse()`.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    positional_help: Vec<(String, String)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Args {
+        Args { program: program.into(), about: about.into(), specs: Vec::new(), positional_help: Vec::new() }
+    }
+
+    /// `--name <value>` option with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: default.map(String::from),
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), help: help.into(), takes_value: false, default: None });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional_help.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional_help {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for spec in &self.specs {
+            let arg = if spec.takes_value {
+                format!("--{} <v>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<24} {}{def}\n", spec.help));
+        }
+        for (p, h) in &self.positional_help {
+            s.push_str(&format!("  <{p:<22}> {h}\n"));
+        }
+        s
+    }
+
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Parsed, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    values.insert(key, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    flags.push(key);
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        for spec in &self.specs {
+            if spec.takes_value && !values.contains_key(&spec.name) {
+                if let Some(d) = &spec.default {
+                    values.insert(spec.name.clone(), d.clone());
+                }
+            }
+        }
+        Ok(Parsed { values, flags, positional })
+    }
+
+    pub fn parse(&self) -> Result<Parsed, String> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::new("t", "test")
+            .opt("batch", Some("8"), "batch size")
+            .opt("name", None, "a name")
+            .flag("verbose", "more output")
+            .positional("cmd", "subcommand")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = args().parse_from(sv(&[])).unwrap();
+        assert_eq!(p.get("batch"), Some("8"));
+        assert_eq!(p.get("name"), None);
+    }
+
+    #[test]
+    fn parses_forms() {
+        let p = args()
+            .parse_from(sv(&["serve", "--batch", "32", "--name=x", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get_usize("batch"), Some(32));
+        assert_eq!(p.get("name"), Some("x"));
+        assert!(p.has("verbose"));
+        assert_eq!(p.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(args().parse_from(sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_is_usage() {
+        let e = args().parse_from(sv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--batch"));
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch substrates: the offline vendor set ships only the `xla`
+//! crate's dependency closure, so JSON, CLI parsing, PRNG, statistics and
+//! logging are implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod stats;

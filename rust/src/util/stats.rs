@@ -1,0 +1,205 @@
+//! Descriptive statistics + latency histograms for the bench harness and
+//! the coordinator's metrics (criterion/hdrhistogram are not vendored).
+
+/// Summary of a sample of measurements (times in seconds or any unit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Log-bucketed latency histogram: ~4% relative precision from 1us to ~18h,
+/// constant memory, O(1) record. Good enough for p50/p90/p99 reporting.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+const BUCKETS_PER_OCTAVE: usize = 16;
+const NUM_BUCKETS: usize = 1024; // exact below 16us, ~6% buckets to 2^63 us
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; NUM_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // Exact buckets below 16; one bucket per 1/16 octave above.
+        if us < 16 {
+            return us as usize;
+        }
+        let log2 = 63 - us.leading_zeros() as usize;
+        let frac = ((us >> (log2 - 4)) & 0xF) as usize;
+        (16 + (log2 - 4) * BUCKETS_PER_OCTAVE + frac).min(NUM_BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> u64 {
+        if i < 16 {
+            return i as u64;
+        }
+        let log2 = (i - 16) / BUCKETS_PER_OCTAVE + 4;
+        let frac = ((i - 16) % BUCKETS_PER_OCTAVE) as u64;
+        (1u64 << log2) + (frac << (log2 - 4))
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile in microseconds.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_close() {
+        let mut h = LatencyHistogram::new();
+        for us in 1..=10_000u64 {
+            h.record_us(us);
+        }
+        let p50 = h.quantile_us(0.5) as f64;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.10, "p50 {p50}");
+        let p99 = h.quantile_us(0.99) as f64;
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.10, "p99 {p99}");
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_us(100);
+        b.record_us(200);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.mean_us() > 100.0);
+    }
+
+    #[test]
+    fn bucket_roundtrip_monotone() {
+        let mut prev = 0;
+        for us in [0u64, 1, 2, 3, 10, 100, 1000, 123456, 10_000_000] {
+            let b = LatencyHistogram::bucket_of(us);
+            assert!(b >= prev, "bucket must be monotone in value");
+            prev = b;
+            let v = LatencyHistogram::bucket_value(b);
+            if us > 4 {
+                let rel = (v as f64 - us as f64).abs() / us as f64;
+                assert!(rel < 0.07, "us={us} v={v} rel={rel}");
+            }
+        }
+    }
+}

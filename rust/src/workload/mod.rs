@@ -1,0 +1,106 @@
+//! Serving workload generator: synthesizes requests in the synthetic
+//! language (mirroring `python/compile/data.py`'s sentiment generator) and
+//! Poisson arrival processes for the latency/throughput benches.
+
+use std::time::Duration;
+
+use crate::tokenizer::Vocab;
+use crate::util::prng::Rng;
+
+/// Generates classification requests over the shared vocabulary.
+pub struct WorkloadGen {
+    rng: Rng,
+    pos: (usize, usize),
+    neg: (usize, usize),
+    negation: (usize, usize),
+    filler: (usize, usize),
+    words: Vec<String>,
+}
+
+impl WorkloadGen {
+    pub fn new(vocab: &Vocab, seed: u64) -> WorkloadGen {
+        let words = (0..vocab.len() as i32).map(|i| vocab.word(i).to_string()).collect();
+        WorkloadGen {
+            rng: Rng::new(seed),
+            pos: vocab.family("pos").unwrap_or((4, 5)),
+            neg: vocab.family("neg").unwrap_or((5, 6)),
+            negation: vocab.family("negation").unwrap_or((6, 7)),
+            filler: vocab.family("filler").unwrap_or((7, 8)),
+            words,
+        }
+    }
+
+    fn pick(&mut self, fam: (usize, usize)) -> String {
+        let i = self.rng.range(fam.0 as u64, fam.1 as u64) as usize;
+        self.words[i].clone()
+    }
+
+    /// One sentiment-style sentence + its ground-truth label.
+    pub fn sentence(&mut self, approx_len: usize) -> (String, usize) {
+        let label = self.rng.below(2) as usize;
+        let n_signal = 3 + self.rng.below(3) as usize;
+        let mut words: Vec<String> = Vec::new();
+        let fill_n = approx_len.saturating_sub(n_signal).max(1);
+        for _ in 0..fill_n {
+            words.push(self.pick(self.filler));
+        }
+        for _ in 0..n_signal {
+            let fam = if label == 1 { self.pos } else { self.neg };
+            let at = self.rng.below(words.len() as u64 + 1) as usize;
+            if self.rng.chance(0.2) {
+                // negated opposite-polarity word (same net evidence)
+                let opp = if label == 1 { self.neg } else { self.pos };
+                let w = self.pick(opp);
+                let neg = self.pick(self.negation);
+                words.splice(at..at, [neg, w]);
+            } else {
+                let w = self.pick(fam);
+                words.insert(at, w);
+            }
+        }
+        (words.join(" "), label)
+    }
+
+    /// Poisson inter-arrival gap for a target rate (requests/second).
+    pub fn arrival_gap(&mut self, rate_per_sec: f64) -> Duration {
+        Duration::from_secs_f64(self.rng.exp(1.0 / rate_per_sec.max(1e-9)))
+    }
+
+    /// Burst sizes for open-loop load: n requests at once.
+    pub fn burst(&mut self, mean: usize) -> usize {
+        1 + self.rng.below((2 * mean).max(1) as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn vocab() -> Option<Vocab> {
+        let p = crate::runtime::default_root().join("vocab.json");
+        if p.exists() {
+            Vocab::load(Path::new(&p)).ok()
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn sentences_are_nonempty_and_deterministic() {
+        let Some(v) = vocab() else { return };
+        let (s1, _) = WorkloadGen::new(&v, 7).sentence(20);
+        let (s2, _) = WorkloadGen::new(&v, 7).sentence(20);
+        assert_eq!(s1, s2);
+        assert!(s1.split_whitespace().count() >= 10);
+    }
+
+    #[test]
+    fn arrival_gaps_positive() {
+        let Some(v) = vocab() else { return };
+        let mut g = WorkloadGen::new(&v, 1);
+        for _ in 0..100 {
+            assert!(g.arrival_gap(100.0) > Duration::ZERO);
+        }
+    }
+}

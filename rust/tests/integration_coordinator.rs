@@ -1,0 +1,187 @@
+//! End-to-end coordinator tests: start the full serving stack over real
+//! artifacts, drive it from multiple client threads, check batching,
+//! routing, SLA behaviour and the TCP server protocol.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use powerbert::coordinator::{
+    BatchPolicy, Config, Coordinator, Input, Policy, Server, Sla,
+};
+use powerbert::runtime::default_root;
+use powerbert::util::json::Json;
+use powerbert::workload::WorkloadGen;
+
+fn have_artifacts() -> bool {
+    let ok = default_root().join("sst2").join("bert").join("meta.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn start(policy: Policy) -> Coordinator {
+    Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(3) },
+        ..Config::default()
+    })
+    .expect("coordinator")
+}
+
+#[test]
+fn classify_roundtrip_and_batching() {
+    if !have_artifacts() {
+        return;
+    }
+    let c = start(Policy::Fixed("bert".into()));
+    let client = c.client();
+    let vocab = client.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 1);
+
+    // Burst of requests from several threads -> should get batched.
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let cl = client.clone();
+        let (text, _) = gen.sentence(18);
+        handles.push(std::thread::spawn(move || {
+            let mut oks = 0;
+            for _ in 0..8 {
+                let r = cl
+                    .classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default())
+                    .unwrap_or_else(|e| panic!("thread {t}: {e}"));
+                assert_eq!(r.variant, "bert");
+                assert!(r.scores.len() >= 2);
+                oks += 1;
+            }
+            oks
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 32);
+    let stats = client.metrics().snapshot("sst2/bert").expect("stats");
+    assert_eq!(stats.requests, 32);
+    assert!(stats.batches < 32, "no batching happened: {} batches", stats.batches);
+    assert!(stats.mean_batch_occupancy() > 1.0);
+}
+
+#[test]
+fn sla_routes_to_power_variant() {
+    if !have_artifacts() {
+        return;
+    }
+    let c = start(Policy::FastestAboveMetric);
+    let vocab = c.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 2);
+    let (text, _) = gen.sentence(18);
+    // Default policy: fastest within 1% of baseline -> a power variant
+    // (strictly fewer aggregate word-vectors than bert).
+    let r = c
+        .classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default())
+        .expect("classify");
+    assert!(r.variant.starts_with("power"), "routed to {}", r.variant);
+    // Pinning overrides policy.
+    let r2 = c
+        .classify(
+            "sst2",
+            Input::Text { a: text, b: None },
+            Sla { variant: Some("bert".into()), ..Default::default() },
+        )
+        .expect("classify pinned");
+    assert_eq!(r2.variant, "bert");
+}
+
+#[test]
+fn pre_encoded_tokens_accepted_and_label_sane() {
+    if !have_artifacts() {
+        return;
+    }
+    let c = start(Policy::Fixed("bert".into()));
+    let meta = c.router().route("sst2", &Sla::default()).unwrap();
+    let vocab = c.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 3);
+    let mut agree = 0;
+    let n = 24;
+    for _ in 0..n {
+        let (text, label) = gen.sentence(18);
+        let enc = c.tokenizer().encode(&text, None, meta.seq_len);
+        let r = c
+            .classify(
+                "sst2",
+                Input::Tokens { tokens: enc.tokens, segments: enc.segments },
+                Sla::default(),
+            )
+            .expect("classify");
+        if r.label == label {
+            agree += 1;
+        }
+    }
+    // The trained model should beat coin-flip comfortably on its own task.
+    assert!(agree * 10 >= n * 6, "only {agree}/{n} correct");
+}
+
+#[test]
+fn unknown_dataset_is_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    let c = start(Policy::FastestAboveMetric);
+    let err = c
+        .classify("nope", Input::Text { a: "x".into(), b: None }, Sla::default())
+        .unwrap_err();
+    assert!(matches!(err, powerbert::ServeError::UnknownDataset(_)));
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let c = start(Policy::Fixed("bert".into()));
+    let server = Server::bind("127.0.0.1:0", c.client()).expect("bind");
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let vocab = c.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 4);
+    let (text, _) = gen.sentence(16);
+    writeln!(
+        stream,
+        "{}",
+        format!(r#"{{"dataset": "sst2", "text": "{text}"}}"#)
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).expect("json reply");
+    assert!(j.get("error").is_none(), "error: {line}");
+    assert!(j.get("label").is_some());
+    assert_eq!(j.get("variant").unwrap().as_str(), Some("bert"));
+
+    // Protocol commands.
+    writeln!(stream, r#"{{"cmd": "variants", "dataset": "sst2"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(!j.get("variants").unwrap().as_arr().unwrap().is_empty());
+
+    writeln!(stream, r#"{{"cmd": "stats"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("stats").is_some());
+
+    // Bad input handled gracefully.
+    writeln!(stream, "this is not json").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("error").is_some());
+
+    drop(stream);
+    Server::shutdown(addr, &stop);
+    let _ = handle.join();
+}

@@ -1,0 +1,155 @@
+//! Integration tests over real artifacts (skipped with a notice when
+//! `make artifacts` has not produced them yet — CI ordering).
+
+use powerbert::eval::Metric;
+use powerbert::runtime::{default_root, Engine, Registry, TestSplit};
+
+fn registry() -> Option<Registry> {
+    let root = default_root();
+    match Registry::scan(&root) {
+        Ok(r) if !r.datasets.is_empty() => Some(r),
+        _ => {
+            eprintln!("SKIP: no artifacts at {} — run `make artifacts`", root.display());
+            None
+        }
+    }
+}
+
+#[test]
+fn registry_metadata_is_consistent() {
+    let Some(reg) = registry() else { return };
+    for (name, ds) in &reg.datasets {
+        for (vname, v) in &ds.variants {
+            assert_eq!(&v.dataset, name);
+            assert_eq!(&v.variant, vname);
+            assert!(!v.batch_sizes.is_empty(), "{name}/{vname}: no batch sizes");
+            for (b, f) in &v.hlo {
+                assert!(v.dir.join(f).exists(), "{name}/{vname}: missing {f}");
+                assert!(v.batch_sizes.contains(b));
+            }
+            assert!(v.weights_path().exists());
+            if let Some(r) = &v.retention {
+                assert!(!r.is_empty());
+                assert!(r.windows(2).all(|w| w[0] >= w[1]), "retention must be monotone");
+                assert!(v.aggregate_word_vectors() <= v.num_layers * v.seq_len);
+            }
+        }
+    }
+}
+
+#[test]
+fn power_artifacts_have_fewer_word_vectors() {
+    let Some(reg) = registry() else { return };
+    let mut checked = 0;
+    for ds in reg.datasets.values() {
+        let (Some(bert), Some(power)) = (ds.variant("bert"), ds.variant("power-default"))
+        else {
+            continue;
+        };
+        assert!(
+            power.aggregate_word_vectors() < bert.aggregate_word_vectors(),
+            "{}: PoWER must process fewer word-vectors",
+            ds.name
+        );
+        checked += 1;
+    }
+    assert!(checked > 0, "no (bert, power) pairs to check");
+}
+
+#[test]
+fn engine_runs_baseline_and_power_and_metrics_match_meta() {
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let mut engine = Engine::new().expect("pjrt client");
+    let split = TestSplit::load(&ds.test_npz()).expect("test split");
+    assert!(split.n >= 32);
+    for vname in ["bert", "power-default"] {
+        let Some(meta) = ds.variant(vname) else { continue };
+        let model = engine.load(meta).expect("load");
+        let n = 32.min(split.n);
+        let seq = split.seq_len;
+        let logits = model
+            .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+            .expect("infer");
+        assert_eq!(logits.batch, n);
+        assert_eq!(logits.num_classes, meta.num_classes);
+        assert!(logits.values.iter().all(|v| v.is_finite()));
+        // Full-split metric should be within a few points of the python
+        // dev metric recorded at export time (same weights, same data).
+        let metric = Metric::parse(&meta.metric).unwrap();
+        let mut outputs = Vec::new();
+        let mut i = 0;
+        while i < split.n {
+            let m = 32.min(split.n - i);
+            let l = model
+                .infer(
+                    &split.tokens[i * seq..(i + m) * seq],
+                    &split.segments[i * seq..(i + m) * seq],
+                    m,
+                )
+                .unwrap();
+            outputs.extend_from_slice(&l.values);
+            i += m;
+        }
+        let v = metric.compute(&outputs, logits.num_classes, &split.labels);
+        if let Some(dev) = meta.dev_metric {
+            assert!(
+                (v - dev).abs() < 0.05,
+                "{vname}: rust metric {v:.4} vs exported dev {dev:.4}"
+            );
+        }
+    }
+}
+
+#[test]
+fn partial_batches_pad_correctly() {
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let Some(meta) = ds.variant("bert") else { return };
+    let mut engine = Engine::new().expect("pjrt client");
+    let model = engine.load(meta).expect("load");
+    let split = TestSplit::load(&ds.test_npz()).expect("split");
+    let seq = split.seq_len;
+    // Single row through every bucket must give identical logits.
+    let t = &split.tokens[..seq];
+    let s = &split.segments[..seq];
+    let l1 = model.infer(t, s, 1).unwrap();
+    // 3-row batch: first row must agree with the single-row result
+    // (padding rows cannot influence real rows).
+    let t3 = &split.tokens[..3 * seq];
+    let s3 = &split.segments[..3 * seq];
+    let l3 = model.infer(t3, s3, 3).unwrap();
+    for c in 0..l1.num_classes {
+        let a = l1.row(0)[c];
+        let b = l3.row(0)[c];
+        assert!((a - b).abs() < 1e-4, "bucket padding changed logits: {a} vs {b}");
+    }
+}
+
+#[test]
+fn debug_variant_traces_progressive_elimination() {
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let Some(meta) = ds.variant("power-default-debug") else {
+        eprintln!("SKIP: no debug artifact");
+        return;
+    };
+    let mut engine = Engine::new().expect("pjrt client");
+    let model = engine.load(meta).expect("load");
+    let split = TestSplit::load(&ds.test_npz()).expect("split");
+    let seq = split.seq_len;
+    let (logits, kept) = model
+        .infer_with_trace(&split.tokens[..seq], &split.segments[..seq], 1)
+        .expect("trace");
+    assert!(logits.values.iter().all(|v| v.is_finite()));
+    let l = meta.num_layers;
+    assert_eq!(kept.len(), l * seq);
+    let retention = meta.retention.as_ref().unwrap();
+    for (j, &keep) in retention.iter().enumerate() {
+        let row = &kept[j * seq..(j + 1) * seq];
+        let survivors: Vec<i32> = row.iter().copied().filter(|&p| p >= 0).collect();
+        assert_eq!(survivors.len(), keep, "encoder {j}");
+        assert_eq!(survivors[0], 0, "CLS eliminated at encoder {j}");
+        assert!(survivors.windows(2).all(|w| w[0] < w[1]), "order not preserved");
+    }
+}

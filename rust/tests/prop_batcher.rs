@@ -1,0 +1,130 @@
+//! Property tests on the dynamic batcher's invariants:
+//!  1. conservation — every pushed job comes out in exactly one batch;
+//!  2. capacity — no batch exceeds its variant's bucket cap;
+//!  3. ordering — jobs of one key leave in FIFO order;
+//!  4. deadline — after max_wait, nothing stays queued.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use powerbert::coordinator::batcher::{BatchPolicy, Batcher};
+use powerbert::coordinator::request::{Input, Job, Request, Sla};
+use powerbert::testutil::prop::forall;
+
+fn job(id: u64) -> Job {
+    let (tx, _rx) = channel();
+    Job {
+        req: Request {
+            id,
+            dataset: "d".into(),
+            input: Input::Text { a: String::new(), b: None },
+            sla: Sla::default(),
+            submitted: Instant::now(),
+        },
+        variant: "v".into(),
+        tokens: vec![0; 4],
+        segments: vec![0; 4],
+        reply: tx,
+    }
+}
+
+#[test]
+fn conservation_and_capacity() {
+    forall("batcher conserves jobs", 150, |rng, size| {
+        let max_batch = 1 + rng.below(8) as usize;
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_secs(100),
+        });
+        let keys = ["a", "b", "c"];
+        let n_jobs = size + 1;
+        let now = Instant::now();
+        let mut out_batches = Vec::new();
+        for i in 0..n_jobs {
+            let key = keys[rng.below(keys.len() as u64) as usize];
+            if let Some(batch) = b.push(key.to_string(), job(i as u64), now) {
+                out_batches.push(batch);
+            }
+        }
+        out_batches.extend(b.flush_due(now, true));
+        let mut ids: Vec<u64> = out_batches
+            .iter()
+            .flat_map(|batch| batch.jobs.iter().map(|j| j.req.id))
+            .collect();
+        // capacity
+        for batch in &out_batches {
+            assert!(batch.len() <= max_batch, "batch over capacity");
+            assert!(!batch.is_empty());
+        }
+        // conservation
+        ids.sort();
+        assert_eq!(ids, (0..n_jobs as u64).collect::<Vec<_>>());
+        assert_eq!(b.pending(), 0);
+    });
+}
+
+#[test]
+fn fifo_per_key() {
+    forall("batcher is FIFO per key", 100, |rng, size| {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1 + rng.below(5) as usize,
+            max_wait: Duration::from_secs(100),
+        });
+        let now = Instant::now();
+        let mut batches = Vec::new();
+        for i in 0..(size as u64 + 2) {
+            if let Some(batch) = b.push("k".into(), job(i), now) {
+                batches.push(batch);
+            }
+        }
+        batches.extend(b.flush_due(now, true));
+        let ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|batch| batch.jobs.iter().map(|j| j.req.id))
+            .collect();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "out of order: {ids:?}");
+    });
+}
+
+#[test]
+fn deadline_flushes_everything() {
+    forall("deadline flush leaves nothing", 100, |rng, size| {
+        let wait = Duration::from_millis(1 + rng.below(5));
+        let mut b = Batcher::new(BatchPolicy { max_batch: 64, max_wait: wait });
+        let t0 = Instant::now();
+        for i in 0..(size as u64) {
+            b.push(format!("k{}", i % 3), job(i), t0);
+        }
+        let later = t0 + wait + Duration::from_millis(1);
+        let _ = b.flush_due(later, false);
+        assert_eq!(b.pending(), 0, "jobs remained after deadline");
+        assert!(b.next_deadline().is_none());
+    });
+}
+
+#[test]
+fn bucket_caps_respected_per_key() {
+    forall("bucket caps bound batches", 100, |rng, size| {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_secs(100),
+        });
+        let cap_a = 1 + rng.below(4) as usize;
+        let cap_b = 1 + rng.below(16) as usize;
+        b.set_bucket_cap("a", cap_a);
+        b.set_bucket_cap("b", cap_b);
+        let now = Instant::now();
+        let mut batches = Vec::new();
+        for i in 0..(size as u64 + 4) {
+            let key = if rng.chance(0.5) { "a" } else { "b" };
+            if let Some(batch) = b.push(key.into(), job(i), now) {
+                batches.push(batch);
+            }
+        }
+        batches.extend(b.flush_due(now, true));
+        for batch in &batches {
+            let cap = if batch.key == "a" { cap_a } else { cap_b };
+            assert!(batch.len() <= cap, "{} > cap {cap} for {}", batch.len(), batch.key);
+        }
+    });
+}

@@ -1,0 +1,129 @@
+//! Property tests on the from-scratch substrates: JSON round-trips,
+//! histogram/percentile consistency, tokenizer length invariants, and
+//! router decision monotonicity.
+
+use std::collections::BTreeMap;
+
+use powerbert::eval;
+use powerbert::testutil::prop::{forall, vec_f64, vec_u64};
+use powerbert::util::json::Json;
+use powerbert::util::stats::{percentile_sorted, LatencyHistogram, Summary};
+
+fn random_json(rng: &mut powerbert::util::prng::Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+        3 => {
+            let len = rng.below(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    if c == b'\\' || c == b'"' { 'x' } else { c as char }
+                })
+                .collect();
+            Json::Str(format!("{s}\"\\\n\u{1F600}"))
+        }
+        4 => {
+            let len = rng.below(4) as usize;
+            Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.below(4) as usize;
+            let mut m = BTreeMap::new();
+            for i in 0..len {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn json_roundtrips() {
+    forall("json parse(to_string(v)) == v", 300, |rng, _| {
+        let v = random_json(rng, 3);
+        let compact = Json::parse(&v.to_string()).expect("compact reparse");
+        assert_eq!(compact, v);
+        let pretty = Json::parse(&v.to_string_pretty()).expect("pretty reparse");
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn summary_bounds_hold() {
+    forall("min <= p50 <= p90 <= p99 <= max", 200, |rng, size| {
+        let v = vec_f64(rng, size.max(1), 1000.0);
+        let s = Summary::of(&v);
+        assert!(s.min <= s.p50 + 1e-9);
+        assert!(s.p50 <= s.p90 + 1e-9);
+        assert!(s.p90 <= s.p99 + 1e-9);
+        assert!(s.p99 <= s.max + 1e-9);
+        assert!(s.mean >= s.min - 1e-9 && s.mean <= s.max + 1e-9);
+    });
+}
+
+#[test]
+fn histogram_approximates_exact_percentiles() {
+    forall("histogram q ~ exact q", 60, |rng, size| {
+        let n = (size * 50).max(100);
+        let us: Vec<u64> = vec_u64(rng, n, 1_000_000).iter().map(|v| v + 1).collect();
+        let mut h = LatencyHistogram::new();
+        for &u in &us {
+            h.record_us(u);
+        }
+        let mut sorted: Vec<f64> = us.iter().map(|&u| u as f64).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.99] {
+            let exact = percentile_sorted(&sorted, q);
+            let approx = h.quantile_us(q) as f64;
+            let rel = (approx - exact).abs() / exact.max(1.0);
+            assert!(rel < 0.15, "q={q} exact={exact} approx={approx}");
+        }
+        assert_eq!(h.count() as usize, n);
+    });
+}
+
+#[test]
+fn metrics_are_bounded() {
+    forall("metrics in range", 200, |rng, size| {
+        let n = size.max(2);
+        let pred: Vec<u32> = (0..n).map(|_| rng.below(2) as u32).collect();
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(2) as u32).collect();
+        let acc = eval::accuracy(&pred, &labels);
+        assert!((0.0..=1.0).contains(&acc));
+        let f1 = eval::f1_binary(&pred, &labels);
+        assert!((0.0..=1.0).contains(&f1));
+        let m = eval::matthews(&pred, &labels);
+        assert!((-1.0..=1.0).contains(&m));
+        // self-agreement is perfect
+        assert_eq!(eval::accuracy(&labels, &labels), 1.0);
+    });
+}
+
+#[test]
+fn spearman_invariant_under_monotone_transform() {
+    forall("spearman(x, f(x)) == 1 for increasing f", 100, |rng, size| {
+        let n = size.max(3);
+        let mut x = vec_f64(rng, n, 100.0);
+        x.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        x.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        if x.len() < 3 {
+            return;
+        }
+        let y: Vec<f64> = x.iter().map(|v| v * v + 3.0).collect();
+        let rho = eval::spearman(&x, &y);
+        assert!((rho - 1.0).abs() < 1e-9, "rho={rho}");
+    });
+}
+
+#[test]
+fn prng_below_uniformity_smoke() {
+    forall("below() covers range", 20, |rng, _| {
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            seen[rng.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "some bucket never hit");
+    });
+}

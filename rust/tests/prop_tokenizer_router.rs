@@ -1,0 +1,167 @@
+//! Property tests: tokenizer encoding invariants and router decision
+//! monotonicity (no artifacts required — synthetic vocab/meta fixtures).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use powerbert::coordinator::metrics::MetricsHub;
+use powerbert::coordinator::request::Sla;
+use powerbert::coordinator::router::{Policy, Router};
+use powerbert::runtime::VariantMeta;
+use powerbert::testutil::prop::forall;
+use powerbert::tokenizer::{Tokenizer, Vocab, CLS_ID, PAD_ID, SEP_ID};
+
+fn vocab_from_words(words: &[&str]) -> Arc<Vocab> {
+    // Build via JSON load to exercise the real constructor path.
+    let json = format!(
+        r#"{{"words": [{}], "families": {{}}}}"#,
+        words
+            .iter()
+            .map(|w| format!("\"{w}\""))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let tmp = std::env::temp_dir().join(format!("pb-vocab-{}.json", std::process::id()));
+    std::fs::write(&tmp, json).unwrap();
+    Arc::new(Vocab::load(&tmp).unwrap())
+}
+
+fn test_vocab() -> Arc<Vocab> {
+    let mut words = vec!["[PAD]", "[UNK]", "[CLS]", "[SEP]"];
+    let owned: Vec<String> = (0..40).map(|i| format!("w{i}")).collect();
+    words.extend(owned.iter().map(String::as_str));
+    vocab_from_words(&words)
+}
+
+#[test]
+fn tokenizer_output_always_well_formed() {
+    let tok = Tokenizer::new(test_vocab());
+    forall("tokenizer well-formed", 200, |rng, size| {
+        let seq_len = 8 + rng.below(56) as usize;
+        let n_a = rng.below(2 * size as u64 + 1) as usize;
+        let a: Vec<String> = (0..n_a).map(|_| format!("w{}", rng.below(50))).collect();
+        let pair = rng.chance(0.5);
+        let b: Option<String> = pair.then(|| {
+            (0..rng.below(2 * size as u64 + 1))
+                .map(|_| format!("w{}", rng.below(50)))
+                .collect::<Vec<_>>()
+                .join(" ")
+        });
+        let e = tok.encode(&a.join(" "), b.as_deref(), seq_len);
+        // Fixed length, CLS first, at least one SEP, PAD only as suffix.
+        assert_eq!(e.tokens.len(), seq_len);
+        assert_eq!(e.segments.len(), seq_len);
+        assert_eq!(e.tokens[0], CLS_ID);
+        assert!(e.tokens.contains(&SEP_ID));
+        let first_pad = e.tokens.iter().position(|&t| t == PAD_ID);
+        if let Some(p) = first_pad {
+            assert!(e.tokens[p..].iter().all(|&t| t == PAD_ID), "PAD must be a suffix");
+            assert!(p >= 2, "CLS + SEP always precede padding");
+        }
+        // Segment ids: 0s then 1s then 0s (pad), never interleaved backwards.
+        if !pair {
+            assert!(e.segments.iter().all(|&s| s == 0));
+        }
+    });
+}
+
+#[test]
+fn tokenizer_roundtrip_decode() {
+    let tok = Tokenizer::new(test_vocab());
+    forall("decode(encode(x)) == truncated x", 150, |rng, size| {
+        let seq_len = 16 + rng.below(48) as usize;
+        let n = rng.below(size as u64 + 1) as usize;
+        let words: Vec<String> = (0..n).map(|_| format!("w{}", rng.below(40))).collect();
+        let e = tok.encode(&words.join(" "), None, seq_len);
+        let decoded = tok.decode(&e.tokens);
+        let expect: Vec<String> = words.into_iter().take(seq_len - 2).collect();
+        assert_eq!(decoded, expect);
+    });
+}
+
+fn meta(variant: &str, kind: &str, dev: f64, agg: usize) -> VariantMeta {
+    VariantMeta {
+        dataset: "d".into(),
+        variant: variant.into(),
+        kind: kind.into(),
+        metric: "accuracy".into(),
+        seq_len: 32,
+        num_layers: 6,
+        num_classes: 2,
+        batch_sizes: vec![1, 8],
+        hlo: Default::default(),
+        weights: "weights.npz".into(),
+        param_order: vec![],
+        retention: Some(vec![agg / 6; 6]),
+        dev_metric: Some(dev),
+        dir: PathBuf::from("/tmp"),
+    }
+}
+
+#[test]
+fn router_respects_floor_and_never_panics() {
+    forall("router floor monotone", 200, |rng, size| {
+        let hub = Arc::new(MetricsHub::new());
+        let mut router = Router::new(Policy::FastestAboveMetric, hub);
+        let n_var = 1 + size.min(8);
+        let mut metas = Vec::new();
+        for i in 0..n_var {
+            let dev = 0.5 + rng.f64() * 0.5;
+            let agg = 12 + rng.below(360) as usize;
+            let kind = if i == 0 { "bert" } else { "power" };
+            let m = meta(&format!("v{i}"), kind, dev, agg);
+            router.add_variant(m.clone());
+            metas.push(m);
+        }
+        let floor = 0.5 + rng.f64() * 0.5;
+        let sla = Sla { min_metric: Some(floor), ..Default::default() };
+        let chosen = router.route("d", &sla).expect("route");
+        let any_above = metas.iter().any(|m| m.dev_metric.unwrap() >= floor);
+        if any_above {
+            // Must satisfy the floor, and be the cheapest that does.
+            assert!(chosen.dev_metric.unwrap() >= floor);
+            for m in &metas {
+                if m.dev_metric.unwrap() >= floor {
+                    assert!(
+                        chosen.aggregate_word_vectors() <= m.aggregate_word_vectors(),
+                        "not cheapest above floor"
+                    );
+                }
+            }
+        } else {
+            // Fallback: the best-metric variant.
+            let best = metas
+                .iter()
+                .map(|m| m.dev_metric.unwrap())
+                .fold(f64::MIN, f64::max);
+            assert_eq!(chosen.dev_metric.unwrap(), best);
+        }
+    });
+}
+
+#[test]
+fn router_latency_budget_monotone() {
+    forall("larger budget never picks worse metric", 150, |rng, size| {
+        let hub = Arc::new(MetricsHub::new());
+        let mut router = Router::new(Policy::BestUnderLatency, hub);
+        for i in 0..(2 + size.min(6)) {
+            router.add_variant(meta(
+                &format!("v{i}"),
+                "power",
+                0.5 + rng.f64() * 0.5,
+                12 + rng.below(360) as usize,
+            ));
+        }
+        let b1 = 0.5 + rng.f64() * 10.0;
+        let b2 = b1 * (1.0 + rng.f64()); // b2 >= b1
+        let m1 = router
+            .route("d", &Sla { max_latency_ms: Some(b1), ..Default::default() })
+            .unwrap();
+        let m2 = router
+            .route("d", &Sla { max_latency_ms: Some(b2), ..Default::default() })
+            .unwrap();
+        // A larger budget can only improve (or keep) the chosen metric.
+        assert!(m2.dev_metric.unwrap() >= m1.dev_metric.unwrap() - 1e-12);
+    });
+}

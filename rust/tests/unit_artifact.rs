@@ -1,0 +1,90 @@
+//! Unit tests for artifact manifest parsing (no PJRT, tmpdir fixtures).
+
+use std::fs;
+use std::path::PathBuf;
+
+use powerbert::runtime::{Registry, VariantMeta};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pb-test-{name}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_variant(root: &PathBuf, ds: &str, variant: &str, extra: &str) {
+    let dir = root.join(ds).join(variant);
+    fs::create_dir_all(&dir).unwrap();
+    fs::write(dir.join("model.b1.hlo.txt"), "HloModule x").unwrap();
+    fs::write(dir.join("weights.npz"), "").unwrap();
+    fs::write(
+        dir.join("meta.json"),
+        format!(
+            r#"{{"dataset": "{ds}", "variant": "{variant}", "kind": "power",
+                "metric": "accuracy", "seq_len": 32, "num_layers": 6,
+                "num_classes": 2, "batch_sizes": [1],
+                "hlo": {{"1": "model.b1.hlo.txt"}},
+                "weights": "weights.npz", "param_order": ["embed/word"]
+                {extra}}}"#
+        ),
+    )
+    .unwrap();
+}
+
+#[test]
+fn parses_minimal_manifest() {
+    let root = tmpdir("minimal");
+    write_variant(&root, "sst2", "power-default", r#", "retention": [20, 10, 5, 5, 5, 5], "dev_metric": 0.91"#);
+    let meta = VariantMeta::parse(&root.join("sst2").join("power-default")).unwrap();
+    assert_eq!(meta.dataset, "sst2");
+    assert_eq!(meta.retention.as_deref(), Some(&[20, 10, 5, 5, 5, 5][..]));
+    assert_eq!(meta.aggregate_word_vectors(), 50);
+    assert_eq!(meta.dev_metric, Some(0.91));
+    assert_eq!(meta.hlo_path(1).unwrap().file_name().unwrap(), "model.b1.hlo.txt");
+    assert!(meta.hlo_path(32).is_none());
+}
+
+#[test]
+fn aggregate_without_retention_is_full_grid() {
+    let root = tmpdir("noret");
+    write_variant(&root, "cola", "bert", "");
+    let meta = VariantMeta::parse(&root.join("cola").join("bert")).unwrap();
+    assert_eq!(meta.retention, None);
+    assert_eq!(meta.aggregate_word_vectors(), 6 * 32);
+}
+
+#[test]
+fn registry_scan_skips_incomplete_dirs() {
+    let root = tmpdir("scan");
+    write_variant(&root, "sst2", "bert", "");
+    // incomplete: directory without meta.json
+    fs::create_dir_all(root.join("sst2").join("half-baked")).unwrap();
+    // stray file at the top level
+    fs::write(root.join("vocab.json"), "{}").unwrap();
+    // analysis dir must be ignored
+    fs::create_dir_all(root.join("analysis")).unwrap();
+    let reg = Registry::scan(&root).unwrap();
+    assert_eq!(reg.datasets.len(), 1);
+    let ds = reg.dataset("sst2").unwrap();
+    assert_eq!(ds.variants.len(), 1);
+    assert!(ds.variant("bert").is_some());
+    assert_eq!(reg.by_kind("bert").len(), 0); // kind in fixture is "power"
+    assert_eq!(reg.by_kind("power").len(), 1);
+}
+
+#[test]
+fn registry_missing_root_errors() {
+    let err = Registry::scan(&PathBuf::from("/nonexistent-pb")).unwrap_err();
+    assert!(err.contains("make artifacts"));
+}
+
+#[test]
+fn malformed_meta_is_skipped_not_fatal() {
+    let root = tmpdir("malformed");
+    write_variant(&root, "sst2", "bert", "");
+    let bad = root.join("sst2").join("broken");
+    fs::create_dir_all(&bad).unwrap();
+    fs::write(bad.join("meta.json"), "{ not json").unwrap();
+    let reg = Registry::scan(&root).unwrap();
+    assert_eq!(reg.dataset("sst2").unwrap().variants.len(), 1);
+}
