@@ -24,6 +24,8 @@ fn main() {
         .opt("rate", Some("150"), "request rate per second")
         .opt("secs", Some("8"), "measurement duration per variant")
         .opt("dataset", Some("sst2"), "dataset to serve")
+        .opt("workers", Some("1"), "executor pool size")
+        .opt("seq-buckets", None, "comma-separated seq buckets (e.g. 16,32)")
         .parse()
         .unwrap_or_else(|u| {
             eprintln!("{u}");
@@ -32,11 +34,21 @@ fn main() {
     let rate: f64 = args.get_f64("rate").unwrap_or(150.0);
     let secs: f64 = args.get_f64("secs").unwrap_or(8.0);
     let dataset = args.get("dataset").unwrap_or("sst2").to_string();
+    let workers = args.get_usize("workers").unwrap_or(1).max(1);
+    let seq_buckets = match (args.get("seq-buckets"), args.get_usize_list("seq-buckets")) {
+        (Some(raw), None) if !raw.trim().is_empty() => {
+            eprintln!("--seq-buckets: expected comma-separated integers, got {raw:?}");
+            std::process::exit(2)
+        }
+        (_, list) => list.unwrap_or_default(),
+    };
 
     let coordinator = Coordinator::start(Config {
         datasets: vec![dataset.clone()],
         policy: Policy::BestUnderLatency,
         batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(4) },
+        workers,
+        seq_buckets,
         ..Config::default()
     })
     .unwrap_or_else(|e| {
@@ -135,5 +147,10 @@ fn main() {
             speedup
         );
     }
+    println!(
+        "\npadding waste (executed/real tokens): {:.2}x over {} worker(s)",
+        coordinator.metrics().total_padding_waste(),
+        workers,
+    );
     println!("\ncoordinator internals:\n{}", coordinator.metrics().report());
 }

@@ -6,9 +6,16 @@ xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text parser
 reassigns ids, so text round-trips cleanly. See /opt/xla-example/gen_hlo.py.
 
 Artifact layout per (dataset, variant):
-    model.b{B}.hlo.txt   one compiled graph per batch size B
-    weights.npz          named parameter arrays
-    meta.json            kind, shapes, param order, retention config, metrics
+    model.b{B}.hlo.txt        one compiled graph per batch size B (full seq)
+    model.s{S}.b{B}.hlo.txt   extra (batch, seq) grid cells, S < seq_len
+    weights.npz               named parameter arrays
+    meta.json                 kind, shapes, param order, retention, metrics
+
+Sequence buckets: the serving side batches requests by true token count, so
+each variant may also be lowered at shorter sequence lengths. meta.json then
+carries ``hlo_grid: {seq: {batch: file}}`` alongside the legacy flat
+``hlo`` map (the full-seq row); retention entries >= the bucket length
+simply skip elimination at that encoder (model.encoder_forward).
 
 Graph signature (the Rust runtime contract):
     parameters: (tokens i32[B,N], segs i32[B,N], w_0, ..., w_k)
@@ -84,8 +91,14 @@ def lower_infer_fn(fwd: Callable, params, batch: int, seq_len: int,
 
 def export_variant(out_dir: str, fwd: Callable, params, cfg: BertConfig,
                    seq_len: int, batch_sizes: Sequence[int],
-                   meta: Dict) -> Dict:
-    """Writes the full artifact for one model variant; returns its meta."""
+                   meta: Dict,
+                   seq_buckets: Optional[Sequence[int]] = None) -> Dict:
+    """Writes the full artifact for one model variant; returns its meta.
+
+    ``seq_buckets``: extra sequence lengths (< seq_len) to lower each batch
+    size at, forming the (batch, seq) execution grid the Rust pool serves
+    short requests from without full-length padding.
+    """
     os.makedirs(out_dir, exist_ok=True)
     named = flatten_params(params)
     np.savez(os.path.join(out_dir, "weights.npz"),
@@ -97,6 +110,18 @@ def export_variant(out_dir: str, fwd: Callable, params, cfg: BertConfig,
         with open(os.path.join(out_dir, fname), "w") as f:
             f.write(text)
         hlo_files[str(b)] = fname
+    hlo_grid = {str(seq_len): dict(hlo_files)}
+    for s in sorted(set(int(s) for s in (seq_buckets or []))):
+        if s >= seq_len or s < 8:
+            continue
+        row = {}
+        for b in batch_sizes:
+            text = lower_infer_fn(fwd, params, b, s)
+            fname = f"model.s{s}.b{b}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            row[str(b)] = fname
+        hlo_grid[str(s)] = row
     meta = dict(meta)
     meta.update({
         "seq_len": seq_len,
@@ -109,6 +134,8 @@ def export_variant(out_dir: str, fwd: Callable, params, cfg: BertConfig,
         "num_heads": cfg.num_heads,
         "num_classes": cfg.num_classes,
     })
+    if len(hlo_grid) > 1:
+        meta["hlo_grid"] = hlo_grid
     with open(os.path.join(out_dir, "meta.json"), "w") as f:
         json.dump(meta, f, indent=1)
     return meta

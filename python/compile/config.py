@@ -92,6 +92,10 @@ class ReproProfile:
     pareto_datasets: Tuple[str, ...]
     pareto_lambdas: Tuple[float, ...]
     batch_sizes: Tuple[int, ...] = (1, 8, 32)  # compiled batch sizes per artifact
+    # Extra seq buckets per artifact as fractions of the task seq_len (the
+    # serving side batches by true token count and executes short requests
+    # at the smallest compiled bucket that fits). () disables the grid.
+    seq_bucket_fracs: Tuple[float, ...] = (0.5,)
     data_scale: float = 1.0        # multiplies train/test sizes
 
 

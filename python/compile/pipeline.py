@@ -122,8 +122,11 @@ class Pipeline:
             "task": task.task, "paper_seq_len": task.paper_seq_len,
             "config_hash": extra_meta.pop("config_hash"), **extra_meta,
         }
+        seq_buckets = sorted({
+            max(8, int(task.seq_len * f)) for f in self.prof.seq_bucket_fracs
+        } - {task.seq_len})
         aot.export_variant(out_dir, fwd, params, cfg, task.seq_len,
-                           self.prof.batch_sizes, meta)
+                           self.prof.batch_sizes, meta, seq_buckets=seq_buckets)
         log(f"exported {ds}/{variant}")
 
     def ensure_test_split(self, ds: str, task: TaskSpec):

@@ -1,6 +1,11 @@
-//! Dynamic batcher: groups requests for the same (dataset, variant) into
+//! Dynamic batcher: groups requests by (dataset, variant, seq-bucket) into
 //! batches, flushing when a batch reaches the target size or the oldest
 //! member has waited `max_wait` (size-or-deadline policy).
+//!
+//! Keying on the seq bucket — the tokenizer's true token count rounded up
+//! to the nearest configured bucket — is what keeps a batch of tweets from
+//! being padded out to the one essay that arrived with them: each flushed
+//! batch executes at the smallest (batch, seq) cell that fits it.
 //!
 //! The batcher itself is a pure data structure (no threads), which is what
 //! makes its invariants property-testable: the scheduler drives it from the
@@ -27,9 +32,32 @@ impl Default for BatchPolicy {
     }
 }
 
+/// What a batch queue is keyed by: one model variant at one seq bucket.
+/// Jobs under different keys never share a batch, so a flushed batch is
+/// homogeneous in both the executable it needs and its row length.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchKey {
+    /// "dataset/variant"
+    pub variant: String,
+    /// Row length the member jobs are encoded to.
+    pub seq: usize,
+}
+
+impl BatchKey {
+    pub fn new(variant: impl Into<String>, seq: usize) -> BatchKey {
+        BatchKey { variant: variant.into(), seq }
+    }
+}
+
+impl std::fmt::Display for BatchKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@s{}", self.variant, self.seq)
+    }
+}
+
 /// A flushed batch, ready for the executor.
 pub struct Batch {
-    pub key: String, // "dataset/variant"
+    pub key: BatchKey,
     pub jobs: Vec<Job>,
 }
 
@@ -52,8 +80,9 @@ struct Queue {
 /// The dynamic batcher. `push` adds a job; `due` / `flush_due` yield batches.
 pub struct Batcher {
     policy: BatchPolicy,
-    queues: HashMap<String, Queue>,
-    /// Per-variant max batch override (largest compiled bucket).
+    queues: HashMap<BatchKey, Queue>,
+    /// Per-variant max batch override (largest compiled bucket) — shared by
+    /// every seq bucket of the variant.
     bucket_caps: HashMap<String, usize>,
     pending: usize,
 }
@@ -73,9 +102,9 @@ impl Batcher {
         self.pending
     }
 
-    fn max_batch_for(&self, key: &str) -> usize {
+    fn max_batch_for(&self, key: &BatchKey) -> usize {
         self.bucket_caps
-            .get(key)
+            .get(&key.variant)
             .copied()
             .unwrap_or(self.policy.max_batch)
             .min(self.policy.max_batch)
@@ -83,7 +112,7 @@ impl Batcher {
     }
 
     /// Add a job; returns a batch immediately if the queue reached capacity.
-    pub fn push(&mut self, key: String, job: Job, now: Instant) -> Option<Batch> {
+    pub fn push(&mut self, key: BatchKey, job: Job, now: Instant) -> Option<Batch> {
         let cap = self.max_batch_for(&key);
         let q = self.queues.entry(key.clone()).or_insert_with(|| Queue {
             jobs: VecDeque::new(),
@@ -102,7 +131,7 @@ impl Batcher {
         None
     }
 
-    fn take(&mut self, key: &str, n: usize) -> Option<Batch> {
+    fn take(&mut self, key: &BatchKey, n: usize) -> Option<Batch> {
         let q = self.queues.get_mut(key)?;
         let take = n.min(q.jobs.len());
         if take == 0 {
@@ -111,7 +140,7 @@ impl Batcher {
         let jobs: Vec<Job> = q.jobs.drain(..take).collect();
         self.pending -= jobs.len();
         q.oldest = if q.jobs.is_empty() { None } else { Some(Instant::now()) };
-        Some(Batch { key: key.to_string(), jobs })
+        Some(Batch { key: key.clone(), jobs })
     }
 
     /// Earliest deadline across queues (None when idle) — lets the caller
@@ -125,9 +154,10 @@ impl Batcher {
     }
 
     /// Flush every queue whose deadline has passed (or all non-empty queues
-    /// when `force`).
+    /// when `force`), oldest deadline first — under load the request that
+    /// has waited longest is the first onto an executor.
     pub fn flush_due(&mut self, now: Instant, force: bool) -> Vec<Batch> {
-        let keys: Vec<String> = self
+        let mut due: Vec<(Option<Instant>, BatchKey)> = self
             .queues
             .iter()
             .filter(|(_, q)| {
@@ -138,10 +168,11 @@ impl Batcher {
                             .unwrap_or(false)
                     || q.jobs.len() >= q.max_batch)
             })
-            .map(|(k, _)| k.clone())
+            .map(|(k, q)| (q.oldest, k.clone()))
             .collect();
+        due.sort();
         let mut out = Vec::new();
-        for k in keys {
+        for (_, k) in due {
             // Drain the whole queue in bucket-sized chunks.
             while let Some(b) = {
                 let cap = self.max_batch_for(&k);
@@ -178,17 +209,23 @@ mod tests {
             variant: "bert".into(),
             tokens: vec![0; 4],
             segments: vec![0; 4],
+            seq: 4,
+            real_len: 3,
             reply: tx,
         }
+    }
+
+    fn key(k: &str) -> BatchKey {
+        BatchKey::new(k, 4)
     }
 
     #[test]
     fn flushes_at_capacity() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
         let now = Instant::now();
-        assert!(b.push("k".into(), job(1), now).is_none());
-        assert!(b.push("k".into(), job(2), now).is_none());
-        let batch = b.push("k".into(), job(3), now).expect("flush at cap");
+        assert!(b.push(key("k"), job(1), now).is_none());
+        assert!(b.push(key("k"), job(2), now).is_none());
+        let batch = b.push(key("k"), job(3), now).expect("flush at cap");
         assert_eq!(batch.len(), 3);
         assert_eq!(b.pending(), 0);
     }
@@ -197,7 +234,7 @@ mod tests {
     fn flushes_on_deadline() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) });
         let t0 = Instant::now();
-        b.push("k".into(), job(1), t0);
+        b.push(key("k"), job(1), t0);
         assert!(b.flush_due(t0, false).is_empty(), "not due yet");
         let later = t0 + Duration::from_millis(2);
         let out = b.flush_due(later, false);
@@ -210,7 +247,7 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
         let now = Instant::now();
         for i in 0..10 {
-            b.push("a".into(), job(i), now);
+            b.push(key("a"), job(i), now);
         }
         // 10 jobs: push flushed two full batches of 4 already (at i=3, i=7)
         let out = b.flush_due(now, true);
@@ -224,8 +261,8 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy { max_batch: 32, max_wait: Duration::from_secs(1) });
         b.set_bucket_cap("k", 2);
         let now = Instant::now();
-        assert!(b.push("k".into(), job(1), now).is_none());
-        let batch = b.push("k".into(), job(2), now).unwrap();
+        assert!(b.push(key("k"), job(1), now).is_none());
+        let batch = b.push(key("k"), job(2), now).unwrap();
         assert_eq!(batch.len(), 2);
     }
 
@@ -234,8 +271,37 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) });
         assert!(b.next_deadline().is_none());
         let now = Instant::now();
-        b.push("k".into(), job(1), now);
+        b.push(key("k"), job(1), now);
         let d = b.next_deadline().unwrap();
         assert!(d >= now + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn seq_buckets_do_not_share_batches() {
+        // Same variant, two seq buckets: capacity fills independently and
+        // flushed batches stay homogeneous per bucket.
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        assert!(b.push(BatchKey::new("k", 16), job(1), now).is_none());
+        assert!(b.push(BatchKey::new("k", 64), job(2), now).is_none());
+        let full = b.push(BatchKey::new("k", 16), job(3), now).expect("seq-16 full");
+        assert_eq!(full.key.seq, 16);
+        assert_eq!(full.len(), 2);
+        assert_eq!(b.pending(), 1, "seq-64 job still queued");
+        let rest = b.flush_due(now, true);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].key.seq, 64);
+    }
+
+    #[test]
+    fn bucket_cap_applies_across_seq_buckets_of_a_variant() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 32, max_wait: Duration::from_secs(1) });
+        b.set_bucket_cap("k", 2);
+        let now = Instant::now();
+        assert!(b.push(BatchKey::new("k", 16), job(1), now).is_none());
+        assert!(b.push(BatchKey::new("k", 64), job(2), now).is_none());
+        let batch = b.push(BatchKey::new("k", 64), job(3), now).expect("seq-64 at cap");
+        assert_eq!(batch.key.seq, 64);
+        assert_eq!(batch.len(), 2);
     }
 }

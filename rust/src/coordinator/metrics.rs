@@ -1,6 +1,7 @@
 //! Serving metrics: per-variant latency histograms, throughput counters,
-//! batch-occupancy tracking. Shared between the executor thread (writer)
-//! and the router (reader — uses measured latency for SLA decisions).
+//! batch-occupancy and padding-waste tracking, per-worker utilisation.
+//! Shared between the executor workers (writers) and the router (reader —
+//! uses measured latency per (batch, seq) cell for SLA decisions).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -14,11 +15,17 @@ pub struct VariantStats {
     pub batches: u64,
     pub batched_rows: u64,
     pub errors: u64,
+    /// Tokens actually carried by requests (true lengths, pre-padding).
+    pub real_tokens: u64,
+    /// Tokens executed: Σ batch_bucket × seq_bucket over batches. The ratio
+    /// padded/real is the serving-side analog of the paper's word-vector
+    /// count — 1.0 means the hardware only ever saw real tokens.
+    pub padded_tokens: u64,
     pub queue: LatencyHistogram,
     pub exec: LatencyHistogram,
     pub total: LatencyHistogram,
-    /// Mean model-execution time per *batch*, by bucket size.
-    pub exec_by_bucket: HashMap<usize, (u64 /*count*/, u64 /*sum_us*/)>,
+    /// Mean model-execution time per *batch*, by (batch, seq) cell.
+    pub exec_by_cell: HashMap<(usize, usize), (u64 /*count*/, u64 /*sum_us*/)>,
 }
 
 impl VariantStats {
@@ -30,36 +37,102 @@ impl VariantStats {
         }
     }
 
-    /// Measured mean exec time for the bucket that would serve one request.
-    pub fn exec_estimate_us(&self, bucket: usize) -> Option<f64> {
-        self.exec_by_bucket
-            .get(&bucket)
+    /// Executed tokens per real token (>= 1.0; 1.0 = zero padding waste).
+    pub fn padding_waste(&self) -> f64 {
+        if self.real_tokens == 0 {
+            1.0
+        } else {
+            self.padded_tokens as f64 / self.real_tokens as f64
+        }
+    }
+
+    /// Measured mean exec time of one (batch, seq) cell.
+    pub fn exec_estimate_us(&self, batch: usize, seq: usize) -> Option<f64> {
+        self.exec_by_cell
+            .get(&(batch, seq))
             .filter(|(c, _)| *c > 0)
             .map(|(c, s)| *s as f64 / *c as f64)
     }
+
+    /// Measured exec time per executed token for a batch bucket, averaged
+    /// over every seq cell of that bucket it has run at. Lets the router
+    /// extrapolate an unmeasured (batch, seq) cell from measured siblings
+    /// by the token ratio (cost ∝ tokens processed, paper §4.2) instead of
+    /// letting cheap short-bucket batches masquerade as full-seq cost.
+    pub fn exec_us_per_token(&self, batch: usize) -> Option<f64> {
+        let (sum_us, tokens): (u64, u64) = self
+            .exec_by_cell
+            .iter()
+            .filter(|((b, _), _)| *b == batch)
+            .fold((0, 0), |(us, tok), ((_, s), (c, ss))| {
+                (us + ss, tok + c * (batch * s) as u64)
+            });
+        if tokens > 0 {
+            Some(sum_us as f64 / tokens as f64)
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-executor-worker counters (pool utilisation and skew).
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    pub batches: u64,
+    pub rows: u64,
+    pub busy_us: u64,
 }
 
 /// Process-wide metrics hub.
 #[derive(Debug, Default)]
 pub struct MetricsHub {
     inner: Mutex<HashMap<String, VariantStats>>,
+    workers: Mutex<Vec<WorkerStats>>,
     started: Option<Instant>,
 }
 
 impl MetricsHub {
     pub fn new() -> Self {
-        MetricsHub { inner: Mutex::new(HashMap::new()), started: Some(Instant::now()) }
+        MetricsHub {
+            inner: Mutex::new(HashMap::new()),
+            workers: Mutex::new(Vec::new()),
+            started: Some(Instant::now()),
+        }
     }
 
-    pub fn record_batch(&self, key: &str, bucket: usize, rows: usize, exec_us: u64) {
+    /// Record one executed batch: `cell` is the compiled (batch, seq) cell
+    /// it ran at, `rows` the real requests inside, `real_tokens` their
+    /// summed true lengths.
+    pub fn record_batch(
+        &self,
+        key: &str,
+        cell: (usize, usize),
+        rows: usize,
+        real_tokens: usize,
+        exec_us: u64,
+    ) {
         let mut m = self.inner.lock().unwrap();
         let s = m.entry(key.to_string()).or_default();
         s.batches += 1;
         s.batched_rows += rows as u64;
+        s.real_tokens += real_tokens as u64;
+        s.padded_tokens += (cell.0 * cell.1) as u64;
         s.exec.record_us(exec_us);
-        let e = s.exec_by_bucket.entry(bucket).or_insert((0, 0));
+        let e = s.exec_by_cell.entry(cell).or_insert((0, 0));
         e.0 += 1;
         e.1 += exec_us;
+    }
+
+    /// Credit an executed batch to a pool worker.
+    pub fn record_worker(&self, worker: usize, rows: usize, busy_us: u64) {
+        let mut w = self.workers.lock().unwrap();
+        if w.len() <= worker {
+            w.resize(worker + 1, WorkerStats::default());
+        }
+        let s = &mut w[worker];
+        s.batches += 1;
+        s.rows += rows as u64;
+        s.busy_us += busy_us;
     }
 
     pub fn record_request(&self, key: &str, queue_us: u64, total_us: u64) {
@@ -86,6 +159,23 @@ impl MetricsHub {
         v
     }
 
+    pub fn worker_snapshot(&self) -> Vec<WorkerStats> {
+        self.workers.lock().unwrap().clone()
+    }
+
+    /// Aggregate padding waste across every variant (padded/real tokens).
+    pub fn total_padding_waste(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        let (real, padded) = m
+            .values()
+            .fold((0u64, 0u64), |(r, p), s| (r + s.real_tokens, p + s.padded_tokens));
+        if real == 0 {
+            1.0
+        } else {
+            padded as f64 / real as f64
+        }
+    }
+
     pub fn uptime_secs(&self) -> f64 {
         self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
     }
@@ -95,11 +185,12 @@ impl MetricsHub {
         let mut out = String::new();
         for (key, s) in self.snapshot_all() {
             out.push_str(&format!(
-                "{key}: {} reqs, {} batches (mean occupancy {:.1}), errors {}\n  \
+                "{key}: {} reqs, {} batches (mean occupancy {:.1}, padding waste {:.2}x), errors {}\n  \
                  queue p50/p99: {}/{} us  exec p50/p99: {}/{} us  total p50/p99: {}/{} us\n",
                 s.requests,
                 s.batches,
                 s.mean_batch_occupancy(),
+                s.padding_waste(),
                 s.errors,
                 s.queue.quantile_us(0.5),
                 s.queue.quantile_us(0.99),
@@ -108,6 +199,18 @@ impl MetricsHub {
                 s.total.quantile_us(0.5),
                 s.total.quantile_us(0.99),
             ));
+        }
+        let workers = self.worker_snapshot();
+        if !workers.is_empty() {
+            let uptime = self.uptime_secs().max(1e-9);
+            for (i, w) in workers.iter().enumerate() {
+                out.push_str(&format!(
+                    "worker {i}: {} batches, {} rows, busy {:.1}% of uptime\n",
+                    w.batches,
+                    w.rows,
+                    100.0 * (w.busy_us as f64 / 1e6) / uptime,
+                ));
+            }
         }
         out
     }
@@ -120,15 +223,48 @@ mod tests {
     #[test]
     fn records_and_reports() {
         let h = MetricsHub::new();
-        h.record_batch("sst2/bert", 8, 5, 1200);
+        h.record_batch("sst2/bert", (8, 64), 5, 5 * 20, 1200);
         h.record_request("sst2/bert", 100, 1500);
         h.record_request("sst2/bert", 200, 1700);
         let s = h.snapshot("sst2/bert").unwrap();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
         assert!((s.mean_batch_occupancy() - 5.0).abs() < 1e-9);
-        assert!(s.exec_estimate_us(8).unwrap() > 0.0);
+        assert!(s.exec_estimate_us(8, 64).unwrap() > 0.0);
+        assert!(s.exec_estimate_us(8, 32).is_none());
+        // 1200us over an (8, 64) cell = 512 executed tokens.
+        assert!((s.exec_us_per_token(8).unwrap() - 1200.0 / 512.0).abs() < 1e-9);
+        assert!(s.exec_us_per_token(1).is_none());
         assert!(h.report().contains("sst2/bert"));
+    }
+
+    #[test]
+    fn padding_waste_tracks_cell_vs_real_tokens() {
+        let h = MetricsHub::new();
+        // 4 rows of ~10 real tokens executed at an (8, 64) cell: the
+        // hardware saw 512 tokens for 40 real ones.
+        h.record_batch("sst2/bert", (8, 64), 4, 40, 900);
+        let s = h.snapshot("sst2/bert").unwrap();
+        assert!((s.padding_waste() - 512.0 / 40.0).abs() < 1e-9);
+        // A snug (4, 16) cell for the same traffic is far cheaper.
+        h.record_batch("sst2/power", (4, 16), 4, 40, 300);
+        let p = h.snapshot("sst2/power").unwrap();
+        assert!((p.padding_waste() - 64.0 / 40.0).abs() < 1e-9);
+        assert!(h.total_padding_waste() > 1.0);
+    }
+
+    #[test]
+    fn worker_stats_accumulate() {
+        let h = MetricsHub::new();
+        h.record_worker(1, 8, 500);
+        h.record_worker(1, 4, 250);
+        h.record_worker(0, 2, 100);
+        let w = h.worker_snapshot();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[1].batches, 2);
+        assert_eq!(w[1].rows, 12);
+        assert_eq!(w[0].busy_us, 100);
+        assert!(h.report().contains("worker 0"));
     }
 
     #[test]

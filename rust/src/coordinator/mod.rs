@@ -1,9 +1,11 @@
 //! L3 serving coordinator — the systems half of the PoWER-BERT reproduction.
 //!
-//! Components: request/response types, dynamic batcher (size-or-deadline),
-//! SLA-aware variant router (the paper's Pareto curve as runtime policy),
-//! the two-thread scheduler around the single PJRT engine owner, metrics,
-//! and a TCP line-protocol server.
+//! Components: request/response types, seq-bucketed dynamic batcher
+//! (size-or-deadline, keyed by (dataset, variant, seq-bucket)), SLA-aware
+//! variant router (the paper's Pareto curve as runtime policy, with a
+//! seq-aware cost model), the scheduler's front thread + N-worker executor
+//! pool over a shared artifact store, metrics (incl. padding waste and
+//! per-worker utilisation), and a TCP line-protocol server.
 
 pub mod batcher;
 pub mod metrics;
@@ -12,8 +14,8 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batch, BatchPolicy, Batcher};
-pub use metrics::{MetricsHub, VariantStats};
+pub use batcher::{Batch, BatchKey, BatchPolicy, Batcher};
+pub use metrics::{MetricsHub, VariantStats, WorkerStats};
 pub use request::{Input, Request, Response, ServeError, Sla};
 pub use router::{Policy, Router};
 pub use scheduler::{Client, Config, Coordinator};

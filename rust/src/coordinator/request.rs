@@ -53,6 +53,9 @@ pub struct Response {
     pub total_us: u64,
     /// How many requests shared the executed batch.
     pub batch_size: usize,
+    /// Sequence bucket the batch executed at (== the variant's full
+    /// `seq_len` when seq bucketing is off).
+    pub seq_bucket: usize,
 }
 
 /// Error returned when the coordinator cannot serve a request.
@@ -81,10 +84,19 @@ impl std::fmt::Display for ServeError {
 impl std::error::Error for ServeError {}
 
 /// Internal: a request bound to a chosen variant, carrying its reply pipe.
+/// `tokens`/`segments` are encoded to `seq` ids — the smallest configured
+/// seq bucket that fits the input, not the variant's full `seq_len` — so
+/// batches of short requests never pay for word-vectors they don't carry.
 pub struct Job {
     pub req: Request,
     pub variant: String,
     pub tokens: Vec<i32>,
     pub segments: Vec<i32>,
+    /// Row length of `tokens`/`segments`: the seq bucket this job batches
+    /// under.
+    pub seq: usize,
+    /// True token count before bucket padding ([CLS]..[SEP] inclusive);
+    /// the numerator of the padding-waste metric.
+    pub real_len: usize,
     pub reply: Sender<Result<Response, ServeError>>,
 }

@@ -70,21 +70,43 @@ impl Router {
             .unwrap_or_default()
     }
 
-    /// Estimated per-request latency (us) of a variant: measured mean for
-    /// its serving bucket when available, otherwise FLOP-proportional to the
-    /// aggregate word-vector count (scaled to an arbitrary but consistent
-    /// unit — only the ordering matters before measurements exist).
+    /// Estimated per-request latency (us) of a variant at its full-seq
+    /// serving bucket: measured mean when available, otherwise the
+    /// word-vector-proportional prior.
     pub fn latency_estimate_us(&self, meta: &VariantMeta) -> f64 {
-        let key = format!("{}/{}", meta.dataset, meta.variant);
         let bucket = meta.batch_sizes.iter().max().copied().unwrap_or(1);
+        self.latency_estimate_cell_us(meta, bucket, meta.seq_len)
+    }
+
+    /// Estimated latency (us) of executing one (batch, seq) cell of a
+    /// variant. Resolution degrades gracefully: an online measurement of
+    /// the exact cell wins, then the batch bucket averaged over seqs, then
+    /// the FLOP prior — cost ∝ Σ retained word-vectors × seq-bucket ratio
+    /// (the paper's §4.2 cost model: compute is proportional to the
+    /// word-vectors actually processed, and a narrower seq bucket scales
+    /// every retention row down with it). The prior's unit is arbitrary but
+    /// consistent — only the ordering matters before measurements exist.
+    pub fn latency_estimate_cell_us(&self, meta: &VariantMeta, batch: usize, seq: usize) -> f64 {
+        let key = format!("{}/{}", meta.dataset, meta.variant);
         if let Some(s) = self.metrics.snapshot(&key) {
-            if let Some(e) = s.exec_estimate_us(bucket) {
+            if let Some(e) = s.exec_estimate_us(batch, seq) {
                 return e;
             }
+            // Extrapolate from measured sibling cells of the same batch
+            // bucket by the token ratio — a mean over raw batch times would
+            // let cheap short-seq measurements understate full-seq cost.
+            if let Some(per_token) = s.exec_us_per_token(batch) {
+                return per_token * (batch * seq) as f64;
+            }
         }
-        // Word-vector-proportional prior (paper §4.2): ~25us per word-vector
-        // per batch row on this CPU — refined by measurements immediately.
-        meta.aggregate_word_vectors() as f64 * 25.0
+        // ~25us per word-vector per batch row on this CPU — refined by
+        // measurements immediately.
+        let seq_ratio = if meta.seq_len == 0 {
+            1.0
+        } else {
+            seq.min(meta.seq_len) as f64 / meta.seq_len as f64
+        };
+        meta.aggregate_word_vectors() as f64 * seq_ratio * 25.0
     }
 
     /// Pick the serving variant for (dataset, SLA).
@@ -198,6 +220,7 @@ mod tests {
             num_classes: 2,
             batch_sizes: vec![1, 8],
             hlo: Default::default(),
+            grid: Default::default(),
             weights: "weights.npz".into(),
             param_order: vec![],
             retention: Some(vec![agg / 6; 6]),
@@ -248,6 +271,26 @@ mod tests {
         // 24 agg word-vectors * 25us = 600us -> under 1ms; others over.
         let sla = Sla { max_latency_ms: Some(1.0), ..Default::default() };
         assert_eq!(r.route("sst2", &sla).unwrap().variant, "power-l0.001");
+    }
+
+    #[test]
+    fn cell_estimate_scales_with_seq_bucket_and_prefers_measurements() {
+        let hub = Arc::new(MetricsHub::new());
+        let mut r = Router::new(Policy::BestUnderLatency, hub.clone());
+        let m = meta("bert", "bert", 0.90, 192);
+        r.add_variant(m.clone());
+        // Prior: a half-width seq bucket halves the estimate.
+        let full = r.latency_estimate_cell_us(&m, 8, 32);
+        let half = r.latency_estimate_cell_us(&m, 8, 16);
+        assert!((half - full / 2.0).abs() < 1e-9, "{half} vs {full}");
+        // An online measurement of the exact cell overrides the prior.
+        hub.record_batch("sst2/bert", (8, 16), 8, 8 * 10, 777);
+        assert!((r.latency_estimate_cell_us(&m, 8, 16) - 777.0).abs() < 1e-9);
+        // A different seq at the same batch extrapolates by the token
+        // ratio: twice the tokens -> twice the estimate.
+        assert!((r.latency_estimate_cell_us(&m, 8, 32) - 2.0 * 777.0).abs() < 1e-9);
+        // A different batch still uses the prior.
+        assert!((r.latency_estimate_cell_us(&m, 1, 32) - full).abs() < 1e-9);
     }
 
     #[test]

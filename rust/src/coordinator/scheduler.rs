@@ -1,19 +1,31 @@
-//! The coordinator proper: front (batcher) thread + executor thread.
+//! The coordinator proper: front (batcher) thread + an N-worker executor
+//! pool.
 //!
-//! Thread topology — PJRT objects are not Send, so exactly one executor
-//! thread owns the Engine (the analog of a single-device serving process):
+//! Thread topology — PJRT objects are not Send, so each executor worker
+//! owns its own PJRT client and device buffers; host artifacts (parsed
+//! manifests + weights) are shared through one `ArtifactStore`:
 //!
 //!   client threads --submit()--> [bounded job queue] --> front thread
-//!        (tokenize + route)                               (dynamic batcher)
-//!                                                              |
-//!                                                   [bounded batch queue]
-//!                                                              |
-//!                                                       executor thread
-//!                                                    (PJRT engine, metrics)
+//!     (tokenize to seq bucket + route)         (seq-bucketed dynamic batcher)
+//!                                                         |
+//!                                          variant-affine round-robin
+//!                                          |              |              |
+//!                                   [batch queue 0] [batch queue 1] .. [N-1]
+//!                                          |              |              |
+//!                                      worker 0       worker 1    ..  worker N-1
+//!                                   (EngineWorker: PJRT client + device
+//!                                    weights; shared ArtifactStore host-side)
 //!
-//! Backpressure: both queues are bounded; `submit` fails fast with
-//! `ServeError::Overloaded` when the job queue is full.
+//! A variant is pinned to one worker round-robin on first sight so its
+//! compiled executables and device weights stay warm on that worker instead
+//! of being duplicated N times; distinct variants spread across the pool.
+//! Backpressure: all queues are bounded; `submit` fails fast with
+//! `ServeError::Overloaded` when the job queue is full. Shutdown drains:
+//! closing the submit queue force-flushes the batcher, the per-worker
+//! queues close in turn, and every worker finishes its backlog before its
+//! thread is joined.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -21,12 +33,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::batcher::{Batch, BatchKey, BatchPolicy, Batcher};
 use super::metrics::MetricsHub;
 use super::request::{Input, Job, Request, Response, ServeError, Sla};
 use super::router::{Policy, Router};
-use crate::runtime::{Engine, Registry};
-use crate::tokenizer::{Tokenizer, Vocab};
+use crate::runtime::{ArtifactStore, EngineWorker, Registry};
+use crate::tokenizer::{Tokenizer, Vocab, PAD_ID};
 
 /// Coordinator configuration.
 pub struct Config {
@@ -37,10 +49,17 @@ pub struct Config {
     pub batch: BatchPolicy,
     /// Bound of the submit queue (backpressure point).
     pub queue_depth: usize,
-    /// Pipeline depth between batcher and executor.
+    /// Pipeline depth between the batcher and each executor worker.
     pub inflight_batches: usize,
     /// Load every variant at startup instead of lazily on first use.
     pub preload: bool,
+    /// Executor pool size. Each worker owns a PJRT client; 1 reproduces the
+    /// seed's single-executor behaviour exactly.
+    pub workers: usize,
+    /// Sequence buckets for length-aware batching, ascending (e.g.
+    /// [16, 32, 64]). Requests encode to the smallest bucket that fits
+    /// their true token count; empty = off (every request at full seq_len).
+    pub seq_buckets: Vec<usize>,
 }
 
 impl Default for Config {
@@ -53,6 +72,8 @@ impl Default for Config {
             queue_depth: 1024,
             inflight_batches: 2,
             preload: false,
+            workers: 1,
+            seq_buckets: Vec::new(),
         }
     }
 }
@@ -62,6 +83,50 @@ enum ExecMsg {
     Preload(String, String), // dataset, variant
 }
 
+/// Smallest configured seq bucket that fits `need` tokens; buckets at or
+/// above the variant's full `seq_len` are meaningless (the full row always
+/// exists), and an oversized input falls back to full length where the
+/// tokenizer truncates exactly as the seed did.
+fn pick_seq_bucket(buckets: &[usize], need: usize, seq_len: usize) -> usize {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b < seq_len)
+        .find(|&b| b >= need)
+        .unwrap_or(seq_len)
+}
+
+/// Round-robin variant->worker affinity: a variant is assigned a worker the
+/// first time it is seen and sticks to it (warm executables + weights);
+/// successive new variants go to successive workers.
+struct Affinity {
+    map: HashMap<String, usize>,
+    next: usize,
+    n: usize,
+}
+
+impl Affinity {
+    fn new(n: usize) -> Affinity {
+        Affinity { map: HashMap::new(), next: 0, n: n.max(1) }
+    }
+
+    fn worker_for(&mut self, variant_key: &str) -> usize {
+        if let Some(&w) = self.map.get(variant_key) {
+            return w;
+        }
+        let w = self.next % self.n;
+        self.next += 1;
+        self.map.insert(variant_key.to_string(), w);
+        w
+    }
+
+    /// Forget a variant's pin (its worker died); the next `worker_for`
+    /// re-pins it to the next rotation slot.
+    fn evict(&mut self, variant_key: &str) {
+        self.map.remove(variant_key);
+    }
+}
+
 /// Cloneable, Send submit handle — one per server connection thread.
 #[derive(Clone)]
 pub struct Client {
@@ -69,6 +134,7 @@ pub struct Client {
     router: Router,
     tokenizer: Tokenizer,
     metrics: Arc<MetricsHub>,
+    seq_buckets: Arc<Vec<usize>>,
     next_id: Arc<AtomicU64>,
 }
 
@@ -81,10 +147,12 @@ impl Client {
         sla: Sla,
     ) -> Result<Receiver<Result<Response, ServeError>>, ServeError> {
         let meta = self.router.route(dataset, &sla)?;
-        let (tokens, segments) = match &input {
+        let (tokens, segments, seq, real_len) = match &input {
             Input::Text { a, b } => {
-                let e = self.tokenizer.encode(a, b.as_deref(), meta.seq_len);
-                (e.tokens, e.segments)
+                let need = self.tokenizer.true_len(a, b.as_deref());
+                let bucket = pick_seq_bucket(&self.seq_buckets, need, meta.seq_len);
+                let e = self.tokenizer.encode(a, b.as_deref(), bucket);
+                (e.tokens, e.segments, bucket, need.min(bucket))
             }
             Input::Tokens { tokens, segments } => {
                 if tokens.len() != meta.seq_len || segments.len() != meta.seq_len {
@@ -94,7 +162,20 @@ impl Client {
                         tokens.len()
                     )));
                 }
-                (tokens.clone(), segments.clone())
+                // Pre-encoded rows arrive padded to full length; the true
+                // length is the non-pad prefix, and shrinking to a bucket
+                // only ever drops trailing [PAD]s.
+                let need = tokens
+                    .iter()
+                    .rposition(|&t| t != PAD_ID)
+                    .map(|p| p + 1)
+                    .unwrap_or(1);
+                let bucket = pick_seq_bucket(&self.seq_buckets, need, meta.seq_len);
+                let mut t = tokens.clone();
+                let mut s = segments.clone();
+                t.truncate(bucket);
+                s.truncate(bucket);
+                (t, s, bucket, need)
             }
         };
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
@@ -109,6 +190,8 @@ impl Client {
             variant: meta.variant.clone(),
             tokens,
             segments,
+            seq,
+            real_len,
             reply: reply_tx,
         };
         match self.submit_tx.try_send(job) {
@@ -147,7 +230,7 @@ pub struct Coordinator {
     client: Option<Client>,
     registry: Registry,
     front: Option<JoinHandle<()>>,
-    executor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -156,6 +239,9 @@ impl Coordinator {
         let vocab = Arc::new(Vocab::load(&registry.vocab_path())?);
         let tokenizer = Tokenizer::new(vocab);
         let metrics = Arc::new(MetricsHub::new());
+        let mut seq_buckets = cfg.seq_buckets.clone();
+        seq_buckets.sort_unstable();
+        seq_buckets.dedup();
 
         let mut router = Router::new(cfg.policy.clone(), metrics.clone());
         for (name, ds) in &registry.datasets {
@@ -168,17 +254,42 @@ impl Coordinator {
         }
 
         let (submit_tx, submit_rx) = sync_channel::<Job>(cfg.queue_depth);
-        let (exec_tx, exec_rx) = sync_channel::<ExecMsg>(cfg.inflight_batches);
 
-        // Executor thread: owns the PJRT engine (not Send -> created here).
-        let reg2 = registry.clone();
-        let metrics2 = metrics.clone();
-        let executor = std::thread::Builder::new()
-            .name("pb-executor".into())
-            .spawn(move || executor_loop(exec_rx, reg2, metrics2))
-            .map_err(|e| e.to_string())?;
+        // Executor pool: each worker thread owns its PJRT client (not Send
+        // -> created on the worker thread); host artifacts are shared.
+        let n_workers = cfg.workers.max(1);
+        let store = Arc::new(ArtifactStore::new());
+        let mut exec_txs: Vec<SyncSender<ExecMsg>> = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for id in 0..n_workers {
+            let (tx, rx) = sync_channel::<ExecMsg>(cfg.inflight_batches.max(1));
+            let reg = registry.clone();
+            let met = metrics.clone();
+            let st = store.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pb-worker-{id}"))
+                .spawn(move || worker_loop(id, rx, st, reg, met))
+                .map_err(|e| e.to_string())?;
+            exec_txs.push(tx);
+            workers.push(handle);
+        }
 
-        // Front thread: dynamic batcher.
+        // Variant->worker affinity; preload assignments made here carry over
+        // into the front loop so preloaded weights are the warm ones.
+        let mut affinity = Affinity::new(n_workers);
+        if cfg.preload {
+            for (name, ds) in &registry.datasets {
+                if !cfg.datasets.is_empty() && !cfg.datasets.contains(name) {
+                    continue;
+                }
+                for v in ds.variants.keys() {
+                    let w = affinity.worker_for(&format!("{name}/{v}"));
+                    let _ = exec_txs[w].send(ExecMsg::Preload(name.clone(), v.clone()));
+                }
+            }
+        }
+
+        // Front thread: seq-bucketed dynamic batcher + dispatch.
         let batch_policy = cfg.batch.clone();
         let mut bucket_caps: Vec<(String, usize)> = Vec::new();
         for (dsname, ds) in &registry.datasets {
@@ -187,23 +298,10 @@ impl Coordinator {
                 bucket_caps.push((format!("{}/{}", dsname, meta.variant), cap));
             }
         }
-        let exec_tx2 = exec_tx.clone();
         let front = std::thread::Builder::new()
             .name("pb-front".into())
-            .spawn(move || front_loop(submit_rx, exec_tx2, batch_policy, bucket_caps))
+            .spawn(move || front_loop(submit_rx, exec_txs, affinity, batch_policy, bucket_caps))
             .map_err(|e| e.to_string())?;
-
-        if cfg.preload {
-            for (name, ds) in &registry.datasets {
-                if !cfg.datasets.is_empty() && !cfg.datasets.contains(name) {
-                    continue;
-                }
-                for v in ds.variants.keys() {
-                    let _ = exec_tx.send(ExecMsg::Preload(name.clone(), v.clone()));
-                }
-            }
-        }
-        drop(exec_tx);
 
         Ok(Coordinator {
             client: Some(Client {
@@ -211,11 +309,12 @@ impl Coordinator {
                 router,
                 tokenizer,
                 metrics,
+                seq_buckets: Arc::new(seq_buckets),
                 next_id: Arc::new(AtomicU64::new(1)),
             }),
             registry,
             front: Some(front),
-            executor: Some(executor),
+            workers,
         })
     }
 
@@ -260,13 +359,15 @@ impl Coordinator {
         self.client.as_ref().ok_or(ServeError::Shutdown)?.classify(dataset, input, sla)
     }
 
-    /// Graceful shutdown: drain queues, join threads.
+    /// Graceful drain: close the submit queue, let the front force-flush
+    /// every pending batch to the pool, then join each worker after it has
+    /// finished its backlog.
     pub fn shutdown(&mut self) {
-        self.client.take(); // closes the job queue -> front exits -> executor exits
+        self.client.take(); // closes the job queue -> front exits -> workers exit
         if let Some(h) = self.front.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.executor.take() {
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -280,7 +381,8 @@ impl Drop for Coordinator {
 
 fn front_loop(
     submit_rx: Receiver<Job>,
-    exec_tx: SyncSender<ExecMsg>,
+    exec_txs: Vec<SyncSender<ExecMsg>>,
+    mut affinity: Affinity,
     policy: BatchPolicy,
     bucket_caps: Vec<(String, usize)>,
 ) {
@@ -288,6 +390,33 @@ fn front_loop(
     for (k, cap) in bucket_caps {
         batcher.set_bucket_cap(&k, cap);
     }
+    // A dead worker (exited thread, e.g. PJRT init failure) must not wedge
+    // the pool: its variants are evicted from the affinity map and re-pinned
+    // to the next rotation slot, so batches fail only when every worker is
+    // gone.
+    let dispatch = |mut b: Batch, affinity: &mut Affinity| {
+        for _ in 0..exec_txs.len() {
+            let w = affinity.worker_for(&b.key.variant);
+            match exec_txs[w].send(ExecMsg::Run(b)) {
+                Ok(()) => return,
+                Err(std::sync::mpsc::SendError(msg)) => {
+                    let ExecMsg::Run(back) = msg else { return };
+                    b = back;
+                    crate::warnln!(
+                        "front",
+                        "worker {w} is gone; re-pinning {}",
+                        b.key.variant
+                    );
+                    affinity.evict(&b.key.variant);
+                }
+            }
+        }
+        for job in b.jobs {
+            let _ = job
+                .reply
+                .send(Err(ServeError::Exec("no executor worker available".into())));
+        }
+    };
     loop {
         let timeout = batcher
             .next_deadline()
@@ -295,54 +424,78 @@ fn front_loop(
             .unwrap_or(Duration::from_millis(50));
         match submit_rx.recv_timeout(timeout) {
             Ok(job) => {
-                let key = format!("{}/{}", job.req.dataset, job.variant);
+                let key = BatchKey::new(format!("{}/{}", job.req.dataset, job.variant), job.seq);
                 let now = Instant::now();
                 if let Some(b) = batcher.push(key, job, now) {
-                    if exec_tx.send(ExecMsg::Run(b)).is_err() {
-                        return;
-                    }
+                    dispatch(b, &mut affinity);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 for b in batcher.flush_due(Instant::now(), true) {
-                    let _ = exec_tx.send(ExecMsg::Run(b));
+                    dispatch(b, &mut affinity);
                 }
                 return;
             }
         }
         for b in batcher.flush_due(Instant::now(), false) {
-            if exec_tx.send(ExecMsg::Run(b)).is_err() {
-                return;
-            }
+            dispatch(b, &mut affinity);
         }
     }
 }
 
-fn executor_loop(exec_rx: Receiver<ExecMsg>, registry: Registry, metrics: Arc<MetricsHub>) {
-    let mut engine = match Engine::new() {
-        Ok(e) => e,
+fn worker_loop(
+    id: usize,
+    exec_rx: Receiver<ExecMsg>,
+    store: Arc<ArtifactStore>,
+    registry: Registry,
+    metrics: Arc<MetricsHub>,
+) {
+    let mut worker = match EngineWorker::new(id, store) {
+        Ok(w) => w,
         Err(e) => {
-            crate::warnln!("executor", "failed to create PJRT client: {e}");
-            return;
+            crate::warnln!("executor", "worker {id}: failed to create PJRT client: {e}");
+            // Fail anything already queued, then exit: dropping the
+            // receiver closes the channel, so the front re-pins this
+            // worker's variants onto the healthy rest of the pool.
+            loop {
+                match exec_rx.try_recv() {
+                    Ok(ExecMsg::Run(batch)) => {
+                        for job in batch.jobs {
+                            let _ = job.reply.send(Err(ServeError::Exec(format!(
+                                "worker {id} has no PJRT client"
+                            ))));
+                        }
+                    }
+                    Ok(ExecMsg::Preload(..)) => {}
+                    Err(_) => return,
+                }
+            }
         }
     };
     while let Ok(msg) = exec_rx.recv() {
         match msg {
             ExecMsg::Preload(ds, variant) => {
                 if let Some(meta) = registry.dataset(&ds).and_then(|d| d.variant(&variant)) {
-                    if let Err(e) = engine.load(meta) {
-                        crate::warnln!("executor", "preload {ds}/{variant}: {e}");
+                    if let Err(e) = worker.load(meta) {
+                        crate::warnln!("executor", "worker {id} preload {ds}/{variant}: {e}");
                     }
                 }
             }
-            ExecMsg::Run(batch) => run_batch(&mut engine, &registry, &metrics, batch),
+            ExecMsg::Run(batch) => run_batch(&mut worker, &registry, &metrics, batch),
         }
     }
+    crate::debugln!("executor", "worker {id} drained and stopped");
 }
 
-fn run_batch(engine: &mut Engine, registry: &Registry, metrics: &Arc<MetricsHub>, batch: Batch) {
-    let key = batch.key.clone();
+fn run_batch(
+    worker: &mut EngineWorker,
+    registry: &Registry,
+    metrics: &Arc<MetricsHub>,
+    batch: Batch,
+) {
+    let key = batch.key.variant.clone();
+    let seq = batch.key.seq;
     let (ds, variant) = key.split_once('/').unwrap_or((key.as_str(), ""));
     let meta = match registry.dataset(ds).and_then(|d| d.variant(variant)) {
         Some(m) => m.clone(),
@@ -353,7 +506,7 @@ fn run_batch(engine: &mut Engine, registry: &Registry, metrics: &Arc<MetricsHub>
             return;
         }
     };
-    let model = match engine.load(&meta) {
+    let model = match worker.load(&meta) {
         Ok(m) => m,
         Err(e) => {
             metrics.record_error(&key);
@@ -364,19 +517,21 @@ fn run_batch(engine: &mut Engine, registry: &Registry, metrics: &Arc<MetricsHub>
         }
     };
     let n = batch.jobs.len();
-    let seq = meta.seq_len;
     let mut tokens = Vec::with_capacity(n * seq);
     let mut segments = Vec::with_capacity(n * seq);
+    let mut real_tokens = 0usize;
     for job in &batch.jobs {
         tokens.extend_from_slice(&job.tokens);
         segments.extend_from_slice(&job.segments);
+        real_tokens += job.real_len;
     }
     let t_exec = Instant::now();
-    match model.infer(&tokens, &segments, n) {
+    match model.infer_at(&tokens, &segments, n, seq) {
         Ok(logits) => {
             let exec_us = t_exec.elapsed().as_micros() as u64;
-            let bucket = model.bucket_for(n);
-            metrics.record_batch(&key, bucket, n, exec_us);
+            let cell = model.cell_for(n, seq).unwrap_or((n, seq));
+            metrics.record_batch(&key, cell, n, real_tokens, exec_us);
+            metrics.record_worker(worker.id(), n, exec_us);
             let done = Instant::now();
             for (i, job) in batch.jobs.into_iter().enumerate() {
                 let total_us = done.duration_since(job.req.submitted).as_micros() as u64;
@@ -391,15 +546,51 @@ fn run_batch(engine: &mut Engine, registry: &Registry, metrics: &Arc<MetricsHub>
                     exec_us,
                     total_us,
                     batch_size: n,
+                    seq_bucket: cell.1,
                 };
                 let _ = job.reply.send(Ok(resp));
             }
         }
         Err(e) => {
             metrics.record_error(&key);
+            metrics.record_worker(worker.id(), n, t_exec.elapsed().as_micros() as u64);
             for job in batch.jobs {
                 let _ = job.reply.send(Err(ServeError::Exec(e.to_string())));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_bucket_rounds_up_and_falls_back_to_full() {
+        let buckets = vec![16, 32, 64];
+        assert_eq!(pick_seq_bucket(&buckets, 10, 128), 16);
+        assert_eq!(pick_seq_bucket(&buckets, 16, 128), 16);
+        assert_eq!(pick_seq_bucket(&buckets, 17, 128), 32);
+        assert_eq!(pick_seq_bucket(&buckets, 100, 128), 128);
+        // No buckets configured: always the full seq_len (seed behaviour).
+        assert_eq!(pick_seq_bucket(&[], 10, 128), 128);
+        // Buckets at/above seq_len are ignored.
+        assert_eq!(pick_seq_bucket(&buckets, 10, 16), 16);
+        assert_eq!(pick_seq_bucket(&[64, 128], 10, 64), 64);
+    }
+
+    #[test]
+    fn affinity_is_sticky_and_round_robin() {
+        let mut a = Affinity::new(3);
+        let w1 = a.worker_for("d/v1");
+        let w2 = a.worker_for("d/v2");
+        let w3 = a.worker_for("d/v3");
+        let w4 = a.worker_for("d/v4");
+        assert_eq!(vec![w1, w2, w3, w4], vec![0, 1, 2, 0]);
+        assert_eq!(a.worker_for("d/v2"), w2, "assignment must be sticky");
+        // Degenerate pool of one.
+        let mut one = Affinity::new(0);
+        assert_eq!(one.worker_for("x"), 0);
+        assert_eq!(one.worker_for("y"), 0);
     }
 }

@@ -115,6 +115,7 @@ fn response_json(r: &Response) -> Json {
     m.insert("exec_us".into(), Json::Num(r.exec_us as f64));
     m.insert("total_us".into(), Json::Num(r.total_us as f64));
     m.insert("batch_size".into(), Json::Num(r.batch_size as f64));
+    m.insert("seq_bucket".into(), Json::Num(r.seq_bucket as f64));
     Json::Obj(m)
 }
 
@@ -187,9 +188,11 @@ mod tests {
             exec_us: 20,
             total_us: 30,
             batch_size: 4,
+            seq_bucket: 32,
         };
         let j = response_json(&r);
         assert_eq!(j.get("label").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("scores").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("seq_bucket").unwrap().as_f64(), Some(32.0));
     }
 }

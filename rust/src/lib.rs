@@ -8,11 +8,20 @@
 //!   self-contained.
 //!
 //! Public API tour:
-//! * [`runtime::Registry`] — discover AOT artifacts.
-//! * [`runtime::Engine`] — compile HLO, keep weights device-resident, run.
-//! * [`coordinator::Coordinator`] — dynamic batching + SLA-aware routing
-//!   (the paper's accuracy/latency Pareto as a runtime policy).
+//! * [`runtime::Registry`] — discover AOT artifacts, including each
+//!   variant's (batch, seq) execution grid.
+//! * [`runtime::ArtifactStore`] — host half of a loaded variant (parsed
+//!   manifests + weights), `Send`, shared across the worker pool.
+//! * [`runtime::EngineWorker`] — device half: one PJRT client + compiled
+//!   (batch, seq) cells per executor thread. [`runtime::Engine`] is the
+//!   single-worker facade.
+//! * [`coordinator::Coordinator`] — seq-bucketed dynamic batching over an
+//!   N-worker execution pool + SLA-aware routing (the paper's
+//!   accuracy/latency Pareto as a runtime policy, with cost ∝ retained
+//!   word-vectors × seq-bucket ratio).
 //! * [`coordinator::Server`] — TCP line-protocol front-end.
+//! * [`workload`] — synthetic request generators (incl. mixed-length
+//!   traffic for the padding-waste benches).
 //! * [`eval`] — GLUE-style metrics, mirrored from the Python side.
 //! * [`bench`], [`util`] — measurement + substrate modules.
 //!

@@ -27,6 +27,8 @@ fn main() {
     .opt("policy", Some("fastest-above-metric"), "serve: routing policy (fixed:<variant> | best-under-latency | fastest-above-metric)")
     .opt("max-batch", Some("32"), "serve: dynamic batcher max batch")
     .opt("max-wait-ms", Some("5"), "serve: dynamic batcher max wait")
+    .opt("workers", Some("1"), "serve: executor pool size (PJRT clients)")
+    .opt("seq-buckets", None, "serve: comma-separated seq buckets for length-aware batching (e.g. 16,32,64)")
     .opt("dataset", None, "eval: dataset name")
     .opt("variant", Some("bert"), "eval: variant name")
     .opt("batch", Some("32"), "eval: batch size")
@@ -82,6 +84,14 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
             ),
         },
         preload: parsed.has("preload"),
+        workers: parsed.get_usize("workers").unwrap_or(1).max(1),
+        seq_buckets: match (parsed.get("seq-buckets"), parsed.get_usize_list("seq-buckets")) {
+            (Some(raw), None) if !raw.trim().is_empty() => {
+                eprintln!("--seq-buckets: expected comma-separated integers, got {raw:?}");
+                return 2;
+            }
+            (_, list) => list.unwrap_or_default(),
+        },
         ..Config::default()
     };
     let coordinator = match Coordinator::start(cfg) {

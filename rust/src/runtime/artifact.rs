@@ -6,6 +6,11 @@
 //!   artifacts/index.json
 //!   artifacts/<dataset>/test.npz
 //!   artifacts/<dataset>/<variant>/{model.b{B}.hlo.txt, weights.npz, meta.json}
+//!
+//! A variant is compiled at one or more (batch, seq) cells. Legacy bundles
+//! carry a flat `"hlo": {batch: file}` map (every executable at the full
+//! `seq_len`); newer bundles may add `"hlo_grid": {seq: {batch: file}}` with
+//! extra sequence buckets. Both are normalized into `VariantMeta::grid`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -24,8 +29,12 @@ pub struct VariantMeta {
     pub num_layers: usize,
     pub num_classes: usize,
     pub batch_sizes: Vec<usize>,
-    /// batch size -> HLO file name
+    /// batch size -> HLO file name (legacy single-seq map, kept for tools
+    /// that only care about the full-`seq_len` row of the grid).
     pub hlo: BTreeMap<usize, String>,
+    /// seq bucket -> batch size -> HLO file name. Always contains at least
+    /// the `seq_len` row (populated from `hlo` when no grid is declared).
+    pub grid: BTreeMap<usize, BTreeMap<usize, String>>,
     pub weights: String,
     pub param_order: Vec<String>,
     /// PoWER retention configuration (absent for non-PoWER variants).
@@ -44,6 +53,28 @@ impl VariantMeta {
                 hlo.insert(b, v.as_str().unwrap_or_default().to_string());
             }
         }
+        let seq_len = j.usize_at("seq_len").map_err(|e| e.to_string())?;
+        let mut grid: BTreeMap<usize, BTreeMap<usize, String>> = BTreeMap::new();
+        if let Some(o) = j.get("hlo_grid").and_then(Json::as_obj) {
+            for (sk, row) in o {
+                let s: usize = sk.parse().map_err(|_| format!("bad seq key {sk}"))?;
+                let mut batches = BTreeMap::new();
+                if let Some(r) = row.as_obj() {
+                    for (bk, v) in r {
+                        let b: usize = bk.parse().map_err(|_| format!("bad batch key {bk}"))?;
+                        batches.insert(b, v.as_str().unwrap_or_default().to_string());
+                    }
+                }
+                if !batches.is_empty() {
+                    grid.insert(s, batches);
+                }
+            }
+        }
+        // The flat map is the full-seq row; merge rather than overwrite so a
+        // grid may refine it with extra cells at the same seq.
+        if !hlo.is_empty() {
+            grid.entry(seq_len).or_default().extend(hlo.clone());
+        }
         let retention = j.get("retention").and_then(Json::as_arr).map(|a| {
             a.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
         });
@@ -57,7 +88,7 @@ impl VariantMeta {
             variant: j.str_at("variant").map_err(|e| e.to_string())?.to_string(),
             kind: j.get("kind").and_then(Json::as_str).unwrap_or("unknown").to_string(),
             metric: j.str_at("metric").map_err(|e| e.to_string())?.to_string(),
-            seq_len: j.usize_at("seq_len").map_err(|e| e.to_string())?,
+            seq_len,
             num_layers: j.get("num_layers").and_then(Json::as_usize).unwrap_or(0),
             num_classes: j.get("num_classes").and_then(Json::as_usize).unwrap_or(2),
             batch_sizes: j
@@ -66,6 +97,7 @@ impl VariantMeta {
                 .map(|a| a.iter().filter_map(Json::as_usize).collect())
                 .unwrap_or_default(),
             hlo,
+            grid,
             weights: j.get("weights").and_then(Json::as_str).unwrap_or("weights.npz").to_string(),
             param_order,
             retention,
@@ -76,6 +108,40 @@ impl VariantMeta {
 
     pub fn hlo_path(&self, batch: usize) -> Option<PathBuf> {
         self.hlo.get(&batch).map(|f| self.dir.join(f))
+    }
+
+    /// Path of the executable compiled at one (batch, seq) cell.
+    pub fn grid_path(&self, batch: usize, seq: usize) -> Option<PathBuf> {
+        self.grid
+            .get(&seq)
+            .and_then(|row| row.get(&batch))
+            .map(|f| self.dir.join(f))
+    }
+
+    /// Compiled sequence buckets, ascending (always includes `seq_len` for
+    /// a well-formed bundle).
+    pub fn seq_buckets(&self) -> Vec<usize> {
+        self.grid.keys().copied().collect()
+    }
+
+    /// All compiled (batch, seq) cells, ascending by (seq, batch).
+    pub fn grid_cells(&self) -> Vec<(usize, usize)> {
+        self.grid
+            .iter()
+            .flat_map(|(&s, row)| row.keys().map(move |&b| (b, s)))
+            .collect()
+    }
+
+    /// Smallest compiled seq bucket that fits `need` tokens (falls back to
+    /// the largest bucket when nothing fits — the engine then truncates
+    /// nothing; oversized inputs are rejected upstream at encode time).
+    pub fn seq_bucket_for(&self, need: usize) -> usize {
+        self.grid
+            .keys()
+            .copied()
+            .find(|&s| s >= need)
+            .or_else(|| self.grid.keys().max().copied())
+            .unwrap_or(self.seq_len)
     }
 
     pub fn weights_path(&self) -> PathBuf {

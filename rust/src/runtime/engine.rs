@@ -1,30 +1,146 @@
 //! PJRT execution engine: loads HLO-text artifacts, keeps model weights
 //! resident as device buffers, and runs batched inference.
 //!
-//! Weights are transferred to the device ONCE at load (`PjRtBuffer::read_npz`)
-//! and every request then goes through `execute_b`, so the hot path moves only
-//! the (tokens, segments) batch — this is the Rust analog of the paper's
-//! "model stays on the GPU" serving setup.
+//! Split for the multi-worker execution pool:
+//! * [`ArtifactStore`] — host half, `Send + Sync`: weights read from npz
+//!   once (plain f32 tensors in lowered parameter order) plus the validated
+//!   `(batch, seq)` HLO grid. Shared by every worker behind an `Arc`.
+//! * [`EngineWorker`] — device half, pinned to one thread: PJRT client,
+//!   compiled executables and device-resident weight buffers. PJRT objects
+//!   are not `Send`, so each worker owns its own and only host artifacts
+//!   cross threads.
+//! * [`Engine`] — the seed's single-worker facade (CLI eval, benches): one
+//!   store + one worker behind the original `new`/`load`/`get` API.
+//!
+//! Weights are transferred to the device ONCE per worker at load, and every
+//! request then goes through `execute_b`, so the hot path moves only the
+//! (tokens, segments) batch — this is the Rust analog of the paper's
+//! "model stays on the GPU" serving setup. Executables are compiled per
+//! `(batch, seq)` cell: the serving layer picks the smallest cell that fits
+//! so padded word-vectors — the very thing PoWER-BERT eliminates inside the
+//! model — are not re-introduced at the batch boundary.
 
 use std::collections::{BTreeMap, HashMap};
-use std::path::Path;
-use std::sync::Arc;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifact::VariantMeta;
+use crate::tokenizer::PAD_ID;
 
-/// One compiled batch-size bucket of a variant.
+/// One compiled (batch, seq) cell of a variant.
 struct Compiled {
     exe: PjRtLoadedExecutable,
 }
 
-/// A loaded model variant: compiled executables (one per batch size) plus
-/// device-resident weights in the lowered parameter order.
+/// Smallest compiled cell that fits `n` rows of `seq` tokens. `cells` must
+/// be ascending `(seq, batch)` pairs; the search prefers the narrowest seq
+/// bucket, then the smallest batch bucket within it (falling through to
+/// wider seq rows when no batch there fits). Returns `(batch, seq)`.
+pub fn pick_cell(cells: &[(usize, usize)], n: usize, seq: usize) -> Option<(usize, usize)> {
+    cells
+        .iter()
+        .find(|&&(s, b)| s >= seq && b >= n)
+        .map(|&(s, b)| (b, s))
+}
+
+/// Host-resident half of a loaded variant (weights + validated HLO paths).
+pub struct ModelArtifact {
+    pub meta: VariantMeta,
+    /// (dims, f32 data) per parameter, lowered order.
+    weights: Vec<(Vec<usize>, Vec<f32>)>,
+    /// Ascending (seq, batch) -> HLO text path.
+    hlo: BTreeMap<(usize, usize), PathBuf>,
+}
+
+impl ModelArtifact {
+    fn load(meta: &VariantMeta) -> Result<ModelArtifact> {
+        // Weights as named literals -> host tensors, reordered to match the
+        // lowered module's parameter order from meta.json.
+        let named: Vec<(String, Literal)> = Literal::read_npz(meta.weights_path(), &())
+            .with_context(|| format!("read {}", meta.weights_path().display()))?;
+        let mut by_name: HashMap<String, Literal> = named.into_iter().collect();
+        let mut weights = Vec::with_capacity(meta.param_order.len());
+        for name in &meta.param_order {
+            let lit = by_name
+                .remove(name)
+                .ok_or_else(|| anyhow!("weights.npz missing param {name}"))?;
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data: Vec<f32> = lit.to_vec()?;
+            weights.push((dims, data));
+        }
+        let mut hlo = BTreeMap::new();
+        for (batch, seq) in meta.grid_cells() {
+            let path = meta
+                .grid_path(batch, seq)
+                .ok_or_else(|| anyhow!("grid cell (b{batch}, s{seq}) has no HLO file"))?;
+            if !path.exists() {
+                bail!("HLO file {} missing for cell (b{batch}, s{seq})", path.display());
+            }
+            hlo.insert((seq, batch), path);
+        }
+        if hlo.is_empty() {
+            bail!("variant {}/{} has no HLO files", meta.dataset, meta.variant);
+        }
+        Ok(ModelArtifact { meta: meta.clone(), weights, hlo })
+    }
+}
+
+/// Thread-safe store of host artifacts, shared by all workers: the weights
+/// npz is read and validated once per variant, however many workers serve it.
+#[derive(Default)]
+pub struct ArtifactStore {
+    models: Mutex<HashMap<String, Arc<ModelArtifact>>>,
+}
+
+impl ArtifactStore {
+    pub fn new() -> ArtifactStore {
+        ArtifactStore::default()
+    }
+
+    fn key(dataset: &str, variant: &str) -> String {
+        format!("{dataset}/{variant}")
+    }
+
+    /// Host artifact for a variant, loading (and caching) it on first use.
+    /// The lock is not held across the npz read, so workers loading
+    /// *different* variants proceed in parallel; two racing loads of the
+    /// same variant both succeed and the first insert wins (the loser's
+    /// copy is dropped — wasted IO, never wrong data).
+    pub fn fetch(&self, meta: &VariantMeta) -> Result<Arc<ModelArtifact>> {
+        let key = Self::key(&meta.dataset, &meta.variant);
+        if let Some(m) = self.models.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let art = Arc::new(ModelArtifact::load(meta)?);
+        crate::info!(
+            "store",
+            "loaded host artifact {key} ({} params, {} cells) in {:.2}s",
+            art.weights.len(),
+            art.hlo.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        let mut models = self.models.lock().unwrap();
+        Ok(models.entry(key).or_insert(art).clone())
+    }
+
+    pub fn loaded(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// A loaded model variant on one worker: compiled executables (one per
+/// (batch, seq) cell) plus device-resident weights in lowered order.
 pub struct LoadedModel {
     pub meta: VariantMeta,
-    compiled: BTreeMap<usize, Compiled>,
+    /// Ascending (seq, batch) -> executable.
+    compiled: BTreeMap<(usize, usize), Compiled>,
     weights: Vec<PjRtBuffer>,
     client: Arc<PjRtClient>,
 }
@@ -45,61 +161,101 @@ impl Logits {
 
     pub fn argmax(&self, i: usize) -> usize {
         let r = self.row(i);
+        // total_cmp: NaN logits (a poisoned model is a serving reality)
+        // must not panic the executor; NaN sorts below every real value.
         r.iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(j, _)| j)
             .unwrap_or(0)
     }
 }
 
 impl LoadedModel {
-    /// Largest compiled batch size.
+    /// Largest compiled batch size across all seq buckets.
     pub fn max_batch(&self) -> usize {
-        self.compiled.keys().max().copied().unwrap_or(1)
+        self.compiled.keys().map(|&(_, b)| b).max().unwrap_or(1)
     }
 
-    /// Smallest compiled batch size that fits `n` rows (or the max bucket).
-    pub fn bucket_for(&self, n: usize) -> usize {
-        self.compiled
-            .keys()
-            .copied()
-            .find(|&b| b >= n)
-            .unwrap_or_else(|| self.max_batch())
+    /// Ascending (seq, batch) cells as (batch, seq) pairs.
+    pub fn cells(&self) -> Vec<(usize, usize)> {
+        self.compiled.keys().map(|&(s, b)| (b, s)).collect()
     }
 
+    /// Smallest compiled (batch, seq) cell that fits `n` rows of `seq`
+    /// tokens; `None` when `n` exceeds every compiled batch bucket.
+    pub fn cell_for(&self, n: usize, seq: usize) -> Option<(usize, usize)> {
+        let cells: Vec<(usize, usize)> = self.compiled.keys().copied().collect();
+        pick_cell(&cells, n, seq)
+    }
+
+    /// Smallest compiled batch bucket that fits `n` rows at the full
+    /// sequence length (`None` when `n` is too large for every bucket).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.cell_for(n, self.meta.seq_len).map(|(b, _)| b)
+    }
+
+    /// Distinct compiled batch sizes, ascending.
     pub fn batch_sizes(&self) -> Vec<usize> {
-        self.compiled.keys().copied().collect()
+        let mut v: Vec<usize> = self.compiled.keys().map(|&(_, b)| b).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
     }
 
-    /// Run a forward pass. `tokens`/`segments` are row-major [n, seq_len]
-    /// with n <= the chosen bucket; rows are zero-padded up to the bucket.
+    /// Distinct compiled seq buckets, ascending.
+    pub fn seq_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.compiled.keys().map(|&(s, _)| s).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Run a forward pass over rows of the full sequence length (the seed's
+    /// original entry point — byte-identical on single-seq bundles).
     pub fn infer(&self, tokens: &[i32], segments: &[i32], n: usize) -> Result<Logits> {
-        let seq = self.meta.seq_len;
+        self.infer_at(tokens, segments, n, self.meta.seq_len)
+    }
+
+    /// Run a forward pass. `tokens`/`segments` are row-major [n, seq]; the
+    /// smallest compiled (batch, seq) cell that fits is chosen, rows are
+    /// padded to its batch bucket and columns to its seq bucket. Errors
+    /// (rather than silently truncating) when `n` exceeds every compiled
+    /// batch bucket or `seq` every compiled seq bucket.
+    pub fn infer_at(&self, tokens: &[i32], segments: &[i32], n: usize, seq: usize) -> Result<Logits> {
+        if n == 0 {
+            bail!("infer: empty batch");
+        }
         if tokens.len() != n * seq || segments.len() != n * seq {
             bail!("infer: expected {}x{} tokens, got {}", n, seq, tokens.len());
         }
-        let bucket = self.bucket_for(n);
+        let (bucket, seq_bucket) = self.cell_for(n, seq).ok_or_else(|| {
+            anyhow!(
+                "infer: batch of {n} rows at seq {seq} fits no compiled cell of {}/{} \
+                 (max batch {}, seq buckets {:?}) — split the batch upstream",
+                self.meta.dataset,
+                self.meta.variant,
+                self.max_batch(),
+                self.seq_buckets(),
+            )
+        })?;
         let c = self
             .compiled
-            .get(&bucket)
-            .ok_or_else(|| anyhow!("no compiled bucket {bucket}"))?;
+            .get(&(seq_bucket, bucket))
+            .ok_or_else(|| anyhow!("no compiled cell (b{bucket}, s{seq_bucket})"))?;
 
-        // Pad the batch to the bucket size with PAD rows. NOTE: inputs go
-        // through buffer_from_host_buffer (synchronous copy,
+        // Pad rows to the batch bucket and columns to the seq bucket. NOTE:
+        // inputs go through buffer_from_host_buffer (synchronous copy,
         // kImmutableOnlyDuringCall) — buffer_from_host_literal is an async
         // copy that may outlive the source Literal and segfault.
-        let dims = [bucket, seq];
-        let (tok_buf, seg_buf) = if n == bucket {
+        let dims = [bucket, seq_bucket];
+        let (tok_buf, seg_buf) = if n == bucket && seq == seq_bucket {
             (
                 self.client.buffer_from_host_buffer(tokens, &dims, None)?,
                 self.client.buffer_from_host_buffer(segments, &dims, None)?,
             )
         } else {
-            let mut t = tokens.to_vec();
-            let mut s = segments.to_vec();
-            t.resize(bucket * seq, 0);
-            s.resize(bucket * seq, 0);
+            let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
             (
                 self.client.buffer_from_host_buffer(&t, &dims, None)?,
                 self.client.buffer_from_host_buffer(&s, &dims, None)?,
@@ -128,19 +284,25 @@ impl LoadedModel {
     }
 
     /// Debug variants: returns (logits, kept positions [n, L, N] as i32).
+    /// Debug bundles are compiled at the full sequence length only.
     pub fn infer_with_trace(&self, tokens: &[i32], segments: &[i32], n: usize)
         -> Result<(Logits, Vec<i32>)> {
         let seq = self.meta.seq_len;
-        let bucket = self.bucket_for(n);
+        if tokens.len() != n * seq || segments.len() != n * seq {
+            bail!("infer_with_trace: expected {}x{} tokens, got {}", n, seq, tokens.len());
+        }
+        let (bucket, seq_bucket) = self.cell_for(n, seq).ok_or_else(|| {
+            anyhow!(
+                "infer_with_trace: batch of {n} rows exceeds the largest compiled bucket {}",
+                self.max_batch()
+            )
+        })?;
         let c = self
             .compiled
-            .get(&bucket)
-            .ok_or_else(|| anyhow!("no compiled bucket {bucket}"))?;
-        let mut t = tokens.to_vec();
-        let mut s = segments.to_vec();
-        t.resize(bucket * seq, 0);
-        s.resize(bucket * seq, 0);
-        let dims = [bucket, seq];
+            .get(&(seq_bucket, bucket))
+            .ok_or_else(|| anyhow!("no compiled cell (b{bucket}, s{seq_bucket})"))?;
+        let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
+        let dims = [bucket, seq_bucket];
         let tok_buf = self.client.buffer_from_host_buffer(&t, &dims, None)?;
         let seg_buf = self.client.buffer_from_host_buffer(&s, &dims, None)?;
         let mut args: Vec<&PjRtBuffer> = vec![&tok_buf, &seg_buf];
@@ -161,71 +323,84 @@ impl LoadedModel {
     }
 }
 
-/// The engine owns the PJRT client and the set of loaded models.
-pub struct Engine {
+/// Pad `n` rows of `seq` tokens/segments out to a [bucket, seq_bucket]
+/// rectangle: PAD tokens on the right of each row, PAD rows at the bottom.
+fn pad_rows(
+    tokens: &[i32],
+    segments: &[i32],
+    n: usize,
+    seq: usize,
+    bucket: usize,
+    seq_bucket: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut t = vec![PAD_ID; bucket * seq_bucket];
+    let mut s = vec![0i32; bucket * seq_bucket];
+    for i in 0..n {
+        t[i * seq_bucket..i * seq_bucket + seq].copy_from_slice(&tokens[i * seq..(i + 1) * seq]);
+        s[i * seq_bucket..i * seq_bucket + seq].copy_from_slice(&segments[i * seq..(i + 1) * seq]);
+    }
+    (t, s)
+}
+
+/// One worker of the execution pool: owns a PJRT client plus the device
+/// state (compiled cells, weight buffers) for every variant it has served.
+/// Not `Send` — it lives and dies on its executor thread; host artifacts
+/// come from the shared [`ArtifactStore`].
+pub struct EngineWorker {
+    id: usize,
     client: Arc<PjRtClient>,
+    store: Arc<ArtifactStore>,
     models: HashMap<String, Arc<LoadedModel>>,
 }
 
-impl Engine {
-    pub fn new() -> Result<Engine> {
+impl EngineWorker {
+    pub fn new(id: usize, store: Arc<ArtifactStore>) -> Result<EngineWorker> {
         let client = Arc::new(PjRtClient::cpu().context("create PJRT CPU client")?);
-        Ok(Engine { client, models: HashMap::new() })
+        Ok(EngineWorker { id, client, store, models: HashMap::new() })
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
     }
 
     pub fn client(&self) -> &Arc<PjRtClient> {
         &self.client
     }
 
-    fn key(dataset: &str, variant: &str) -> String {
-        format!("{dataset}/{variant}")
+    pub fn store(&self) -> &Arc<ArtifactStore> {
+        &self.store
     }
 
-    /// Compile all batch-size buckets of a variant and upload its weights.
+    /// Compile every (batch, seq) cell of a variant on this worker and
+    /// upload its weights to this worker's device.
     pub fn load(&mut self, meta: &VariantMeta) -> Result<Arc<LoadedModel>> {
-        let key = Self::key(&meta.dataset, &meta.variant);
+        let key = ArtifactStore::key(&meta.dataset, &meta.variant);
         if let Some(m) = self.models.get(&key) {
             return Ok(m.clone());
         }
+        let art = self.store.fetch(meta)?;
         let t0 = std::time::Instant::now();
-
-        // Weights as named literals -> device buffers, reordered to match
-        // the lowered module's parameter order from meta.json.
-        let named: Vec<(String, Literal)> =
-            Literal::read_npz(meta.weights_path(), &())
-                .with_context(|| format!("read {}", meta.weights_path().display()))?;
-        let mut by_name: HashMap<String, Literal> = named.into_iter().collect();
-        let mut weights = Vec::with_capacity(meta.param_order.len());
-        for name in &meta.param_order {
-            let lit = by_name
-                .remove(name)
-                .ok_or_else(|| anyhow!("weights.npz missing param {name}"))?;
-            // Synchronous host->device copy (see note in `infer`): raw f32
-            // data + dims instead of the async literal path.
-            let shape = lit.array_shape()?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data: Vec<f32> = lit.to_vec()?;
-            weights.push(self.client.buffer_from_host_buffer(&data, &dims, None)?);
+        // Synchronous host->device copy (see note in `infer_at`): raw f32
+        // data + dims instead of the async literal path.
+        let mut weights = Vec::with_capacity(art.weights.len());
+        for (dims, data) in &art.weights {
+            weights.push(self.client.buffer_from_host_buffer(data, dims, None)?);
         }
-
         let mut compiled = BTreeMap::new();
-        for (&batch, file) in &meta.hlo {
-            let path = meta.dir.join(file);
-            let exe = self.compile_hlo(&path)?;
-            compiled.insert(batch, Compiled { exe });
-        }
-        if compiled.is_empty() {
-            bail!("variant {key} has no HLO files");
+        for (&(seq, batch), path) in &art.hlo {
+            let exe = self.compile_hlo(path)?;
+            compiled.insert((seq, batch), Compiled { exe });
         }
         let model = Arc::new(LoadedModel {
-            meta: meta.clone(),
+            meta: art.meta.clone(),
             compiled,
             weights,
             client: self.client.clone(),
         });
         crate::info!(
             "engine",
-            "loaded {key} ({} params, {} buckets) in {:.2}s",
+            "worker {} loaded {key} ({} params, {} cells) in {:.2}s",
+            self.id,
             model.weights.len(),
             model.compiled.len(),
             t0.elapsed().as_secs_f64()
@@ -242,13 +417,49 @@ impl Engine {
     }
 
     pub fn get(&self, dataset: &str, variant: &str) -> Option<Arc<LoadedModel>> {
-        self.models.get(&Self::key(dataset, variant)).cloned()
+        self.models.get(&ArtifactStore::key(dataset, variant)).cloned()
     }
 
     pub fn loaded(&self) -> Vec<String> {
         let mut v: Vec<String> = self.models.keys().cloned().collect();
         v.sort();
         v
+    }
+}
+
+/// Single-worker facade over the pool pieces — the seed's original API for
+/// the CLI `eval` path, benches and examples.
+pub struct Engine {
+    store: Arc<ArtifactStore>,
+    worker: EngineWorker,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let store = Arc::new(ArtifactStore::new());
+        let worker = EngineWorker::new(0, store.clone())?;
+        Ok(Engine { store, worker })
+    }
+
+    pub fn client(&self) -> &Arc<PjRtClient> {
+        self.worker.client()
+    }
+
+    pub fn store(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
+    /// Compile all (batch, seq) cells of a variant and upload its weights.
+    pub fn load(&mut self, meta: &VariantMeta) -> Result<Arc<LoadedModel>> {
+        self.worker.load(meta)
+    }
+
+    pub fn get(&self, dataset: &str, variant: &str) -> Option<Arc<LoadedModel>> {
+        self.worker.get(dataset, variant)
+    }
+
+    pub fn loaded(&self) -> Vec<String> {
+        self.worker.loaded()
     }
 }
 
@@ -293,5 +504,52 @@ impl TestSplit {
     pub fn row(&self, i: usize) -> (&[i32], &[i32]) {
         let s = self.seq_len;
         (&self.tokens[i * s..(i + 1) * s], &self.segments[i * s..(i + 1) * s])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ignores_nan() {
+        // Row 0 has a NaN — must not panic, and the NaN must never win.
+        let l = Logits {
+            values: vec![f32::NAN, 0.2, 0.9, 0.7, 0.1, 0.3],
+            batch: 2,
+            num_classes: 3,
+        };
+        assert_eq!(l.argmax(0), 2);
+        assert_eq!(l.argmax(1), 0);
+        // An all-NaN row settles on a valid index rather than panicking.
+        let all_nan = Logits { values: vec![f32::NAN; 3], batch: 1, num_classes: 3 };
+        assert!(all_nan.argmax(0) < 3);
+    }
+
+    #[test]
+    fn pick_cell_prefers_narrow_seq_then_small_batch() {
+        // Grid: seq 16 with batches {1, 8}, seq 64 with batches {1, 8, 32}.
+        let cells = vec![(16, 1), (16, 8), (64, 1), (64, 8), (64, 32)];
+        assert_eq!(pick_cell(&cells, 1, 10), Some((1, 16)));
+        assert_eq!(pick_cell(&cells, 5, 16), Some((8, 16)));
+        // Batch 20 fits no seq-16 bucket -> falls through to the 64 row.
+        assert_eq!(pick_cell(&cells, 20, 10), Some((32, 64)));
+        assert_eq!(pick_cell(&cells, 8, 40), Some((8, 64)));
+        // Oversize in either dimension: no cell.
+        assert_eq!(pick_cell(&cells, 33, 10), None);
+        assert_eq!(pick_cell(&cells, 1, 100), None);
+    }
+
+    #[test]
+    fn pad_rows_pads_columns_and_rows() {
+        let tokens = vec![2, 5, 3, 2, 6, 3];
+        let segs = vec![0, 0, 0, 0, 1, 1];
+        let (t, s) = pad_rows(&tokens, &segs, 2, 3, 4, 5);
+        assert_eq!(t.len(), 20);
+        assert_eq!(&t[0..5], &[2, 5, 3, PAD_ID, PAD_ID]);
+        assert_eq!(&t[5..10], &[2, 6, 3, PAD_ID, PAD_ID]);
+        assert!(t[10..].iter().all(|&x| x == PAD_ID));
+        assert_eq!(&s[5..10], &[0, 1, 1, 0, 0]);
+        assert!(s[10..].iter().all(|&x| x == 0));
     }
 }

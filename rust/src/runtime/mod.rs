@@ -1,9 +1,14 @@
 //! Runtime layer: PJRT client wrapper, artifact registry, model loading and
 //! batched execution. Python is never on this path — the Rust binary is
 //! self-contained once `make artifacts` has produced the AOT bundle.
+//!
+//! Execution is split into a shared, `Send` [`ArtifactStore`] (parsed
+//! manifests + host weights) and per-thread [`EngineWorker`]s that own the
+//! non-`Send` PJRT state — the coordinator runs one worker per executor
+//! thread against the one store. [`Engine`] is the single-worker facade.
 
 pub mod artifact;
 pub mod engine;
 
 pub use artifact::{default_root, DatasetArtifacts, Registry, VariantMeta};
-pub use engine::{Engine, LoadedModel, Logits, TestSplit};
+pub use engine::{ArtifactStore, Engine, EngineWorker, LoadedModel, Logits, TestSplit};

@@ -4,3 +4,27 @@
 //! with progressively smaller size hints and reports the smallest failure.
 
 pub mod prop;
+
+/// Gate for PJRT/artifact-dependent integration tests: true when the AOT
+/// bundle is present, otherwise prints a visible SKIP notice and returns
+/// false so `cargo test -q` stays green on a fresh clone. Set
+/// `POWERBERT_REQUIRE_ARTIFACTS=1` (artifact-equipped CI) to turn a missing
+/// bundle into a panic instead of a skip.
+pub fn artifacts_available() -> bool {
+    let root = crate::runtime::default_root();
+    let ok = root.join("vocab.json").exists()
+        && crate::runtime::Registry::scan(&root)
+            .map(|r| !r.datasets.is_empty())
+            .unwrap_or(false);
+    if !ok {
+        let msg = format!(
+            "SKIP: no artifacts at {} — run `make artifacts` (or set POWERBERT_ARTIFACTS)",
+            root.display()
+        );
+        if std::env::var("POWERBERT_REQUIRE_ARTIFACTS").is_ok_and(|v| v == "1") {
+            panic!("POWERBERT_REQUIRE_ARTIFACTS=1 but artifacts are missing: {msg}");
+        }
+        eprintln!("{msg}");
+    }
+    ok
+}

@@ -100,6 +100,16 @@ impl Tokenizer {
         Tokenizer { vocab }
     }
 
+    /// Encoded length of the input before any padding or truncation:
+    /// words + specials ([CLS], [SEP] per segment). The serving layer uses
+    /// this true token count to pick the smallest seq bucket that fits.
+    pub fn true_len(&self, a: &str, b: Option<&str>) -> usize {
+        let aw = a.split_whitespace().count();
+        let bw = b.map(|s| s.split_whitespace().count()).unwrap_or(0);
+        let n_special = if b.is_some() { 3 } else { 2 };
+        aw + bw + n_special
+    }
+
     /// Encode one or two text segments to `seq_len` ids (+ segment ids).
     pub fn encode(&self, a: &str, b: Option<&str>, seq_len: usize) -> Encoded {
         let mut aw: Vec<&str> = a.split_whitespace().collect();
@@ -201,6 +211,17 @@ mod tests {
         assert_eq!(e.tokens.len(), 7);
         assert_eq!(e.tokens[0], CLS_ID);
         assert_eq!(*e.tokens.last().unwrap(), SEP_ID);
+    }
+
+    #[test]
+    fn true_len_counts_words_plus_specials() {
+        let t = Tokenizer::new(test_vocab());
+        assert_eq!(t.true_len("pos_0 filler_0", None), 4);
+        assert_eq!(t.true_len("pos_0", Some("neg_0 filler_1")), 6);
+        // Matches the non-pad prefix of an untruncated encoding.
+        let e = t.encode("pos_0 filler_0", None, 8);
+        let nonpad = e.tokens.iter().filter(|&&x| x != PAD_ID).count();
+        assert_eq!(t.true_len("pos_0 filler_0", None), nonpad);
     }
 
     #[test]

@@ -146,6 +146,19 @@ impl Parsed {
         self.get(name).and_then(|v| v.parse().ok())
     }
 
+    /// Comma-separated usize list, e.g. `--seq-buckets 16,32,64`. Empty
+    /// string (or an unset option) yields None; a malformed element yields
+    /// None so callers can reject rather than silently drop it.
+    pub fn get_usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        let raw = self.get(name)?.trim();
+        if raw.is_empty() {
+            return None;
+        }
+        raw.split(',')
+            .map(|p| p.trim().parse::<usize>().ok())
+            .collect::<Option<Vec<usize>>>()
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -183,6 +196,17 @@ mod tests {
         assert_eq!(p.get("name"), Some("x"));
         assert!(p.has("verbose"));
         assert_eq!(p.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn usize_list_parses_and_rejects_garbage() {
+        let a = Args::new("t", "test").opt("seq-buckets", None, "buckets");
+        let p = a.parse_from(sv(&["--seq-buckets", "16,32, 64"])).unwrap();
+        assert_eq!(p.get_usize_list("seq-buckets"), Some(vec![16, 32, 64]));
+        let p = a.parse_from(sv(&["--seq-buckets", "16,nope"])).unwrap();
+        assert_eq!(p.get_usize_list("seq-buckets"), None);
+        let p = a.parse_from(sv(&[])).unwrap();
+        assert_eq!(p.get_usize_list("seq-buckets"), None);
     }
 
     #[test]

@@ -7,6 +7,23 @@ use std::time::Duration;
 use crate::tokenizer::Vocab;
 use crate::util::prng::Rng;
 
+/// Shape of a mixed-length workload: `frac_long` of requests are essays of
+/// ~`long_words`, the rest are tweets of roughly `short_words` (±50%).
+#[derive(Debug, Clone)]
+pub struct LengthMix {
+    pub short_words: usize,
+    pub long_words: usize,
+    pub frac_long: f64,
+}
+
+impl Default for LengthMix {
+    fn default() -> Self {
+        // 85% short traffic is the serving regime the paper's cost model
+        // rewards: the mean true length sits far below the compiled seq_len.
+        LengthMix { short_words: 12, long_words: 48, frac_long: 0.15 }
+    }
+}
+
 /// Generates classification requests over the shared vocabulary.
 pub struct WorkloadGen {
     rng: Rng,
@@ -61,6 +78,23 @@ impl WorkloadGen {
         (words.join(" "), label)
     }
 
+    /// One sentence drawn from a mixed-length traffic profile: mostly short
+    /// requests with a heavy tail of long ones (the regime where padding to
+    /// one global seq_len wastes the most compute). Returns the sentence,
+    /// its ground-truth label, and the approximate word count drawn.
+    pub fn mixed_sentence(&mut self, mix: &LengthMix) -> (String, usize, usize) {
+        let approx = if self.rng.chance(mix.frac_long) {
+            mix.long_words
+        } else {
+            // Jitter short lengths so seq buckets see a spread, not a spike.
+            let lo = mix.short_words.saturating_sub(mix.short_words / 2).max(4);
+            let hi = mix.short_words.max(lo);
+            lo + self.rng.below((hi - lo + 1) as u64) as usize
+        };
+        let (text, label) = self.sentence(approx);
+        (text, label, approx)
+    }
+
     /// Poisson inter-arrival gap for a target rate (requests/second).
     pub fn arrival_gap(&mut self, rate_per_sec: f64) -> Duration {
         Duration::from_secs_f64(self.rng.exp(1.0 / rate_per_sec.max(1e-9)))
@@ -93,6 +127,21 @@ mod tests {
         let (s2, _) = WorkloadGen::new(&v, 7).sentence(20);
         assert_eq!(s1, s2);
         assert!(s1.split_whitespace().count() >= 10);
+    }
+
+    #[test]
+    fn mixed_lengths_are_bimodal_and_deterministic() {
+        let Some(v) = vocab() else { return };
+        let mix = LengthMix::default();
+        let mut g = WorkloadGen::new(&v, 11);
+        let lens: Vec<usize> = (0..200).map(|_| g.mixed_sentence(&mix).2).collect();
+        let n_long = lens.iter().filter(|&&l| l == mix.long_words).count();
+        assert!(n_long > 0, "no long requests drawn");
+        assert!(n_long < 100, "long tail dominates: {n_long}/200");
+        assert!(lens.iter().all(|&l| l >= 4 && l <= mix.long_words));
+        let mut g2 = WorkloadGen::new(&v, 11);
+        let lens2: Vec<usize> = (0..200).map(|_| g2.mixed_sentence(&mix).2).collect();
+        assert_eq!(lens, lens2);
     }
 
     #[test]

@@ -9,16 +9,12 @@ use std::time::Duration;
 use powerbert::coordinator::{
     BatchPolicy, Config, Coordinator, Input, Policy, Server, Sla,
 };
-use powerbert::runtime::default_root;
+use powerbert::testutil::artifacts_available;
 use powerbert::util::json::Json;
-use powerbert::workload::WorkloadGen;
+use powerbert::workload::{LengthMix, WorkloadGen};
 
 fn have_artifacts() -> bool {
-    let ok = default_root().join("sst2").join("bert").join("meta.json").exists();
-    if !ok {
-        eprintln!("SKIP: artifacts missing — run `make artifacts`");
-    }
-    ok
+    artifacts_available()
 }
 
 fn start(policy: Policy) -> Coordinator {
@@ -120,6 +116,67 @@ fn pre_encoded_tokens_accepted_and_label_sane() {
     }
     // The trained model should beat coin-flip comfortably on its own task.
     assert!(agree * 10 >= n * 6, "only {agree}/{n} correct");
+}
+
+#[test]
+fn worker_pool_with_seq_buckets_serves_mixed_lengths() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy: Policy::Fixed("bert".into()),
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        workers: 2,
+        seq_buckets: vec![16, 24],
+        ..Config::default()
+    })
+    .expect("coordinator");
+    let client = c.client();
+    let vocab = client.tokenizer().vocab.clone();
+    let meta = c.router().route("sst2", &Sla::default()).unwrap();
+    let seq_len = meta.seq_len;
+    // Bundles regenerated with seq buckets carry a multi-row grid; stale
+    // single-seq bundles still serve correctly but save no padding.
+    let grid_aware = meta.seq_buckets().len() > 1;
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let cl = client.clone();
+        let vocab = vocab.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut gen = WorkloadGen::new(&vocab, 40 + t);
+            let mix = LengthMix::default();
+            for _ in 0..8 {
+                let (text, _, _) = gen.mixed_sentence(&mix);
+                let r = cl
+                    .classify("sst2", Input::Text { a: text, b: None }, Sla::default())
+                    .unwrap_or_else(|e| panic!("thread {t}: {e}"));
+                assert!(r.seq_bucket <= seq_len, "bucket {} > seq_len", r.seq_bucket);
+                assert!(r.scores.len() >= 2);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let metrics = c.metrics();
+    let stats = metrics.snapshot("sst2/bert").expect("stats");
+    assert_eq!(stats.requests, 32);
+    // Seq bucketing must beat pad-everything-to-seq_len: executed tokens
+    // stay below requests * seq_len even with batch-bucket padding.
+    if grid_aware {
+        assert!(
+            stats.padded_tokens < 32 * seq_len as u64,
+            "no padding saved: {} executed tokens vs {} fully padded",
+            stats.padded_tokens,
+            32 * seq_len as u64
+        );
+    }
+    // Graceful drain: drop our submit handle first (a live Client clone
+    // keeps the front thread's queue open), then join the pool.
+    drop(client);
+    c.shutdown();
 }
 
 #[test]

@@ -3,16 +3,13 @@
 
 use powerbert::eval::Metric;
 use powerbert::runtime::{default_root, Engine, Registry, TestSplit};
+use powerbert::testutil::artifacts_available;
 
 fn registry() -> Option<Registry> {
-    let root = default_root();
-    match Registry::scan(&root) {
-        Ok(r) if !r.datasets.is_empty() => Some(r),
-        _ => {
-            eprintln!("SKIP: no artifacts at {} — run `make artifacts`", root.display());
-            None
-        }
+    if !artifacts_available() {
+        return None;
     }
+    Registry::scan(&default_root()).ok()
 }
 
 #[test]
@@ -123,6 +120,72 @@ fn partial_batches_pad_correctly() {
         let a = l1.row(0)[c];
         let b = l3.row(0)[c];
         assert!((a - b).abs() < 1e-4, "bucket padding changed logits: {a} vs {b}");
+    }
+}
+
+#[test]
+fn oversize_batch_is_rejected_not_truncated() {
+    // Regression: `infer` used to clamp to the largest compiled bucket and
+    // silently drop the rows past it; it must error instead.
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let Some(meta) = ds.variant("bert") else { return };
+    let mut engine = Engine::new().expect("pjrt client");
+    let model = engine.load(meta).expect("load");
+    let split = TestSplit::load(&ds.test_npz()).expect("split");
+    let seq = split.seq_len;
+    let max = model.max_batch();
+    let n = max + 1;
+    assert!(split.n >= n, "test split too small to overflow the bucket");
+    let err = model
+        .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+        .expect_err("batch larger than every compiled bucket must fail");
+    let msg = err.to_string();
+    assert!(msg.contains("split the batch"), "unhelpful error: {msg}");
+    // The largest bucket itself still works and returns every row.
+    let l = model
+        .infer(&split.tokens[..max * seq], &split.segments[..max * seq], max)
+        .expect("full bucket");
+    assert_eq!(l.batch, max);
+}
+
+#[test]
+fn seq_grid_cells_agree_on_short_inputs() {
+    // Bundles with a (batch, seq) grid must classify a short input the
+    // same whether it executes at a narrow bucket or padded to full seq.
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let Some(meta) = ds.variant("bert") else { return };
+    let mut engine = Engine::new().expect("pjrt client");
+    let model = engine.load(meta).expect("load");
+    let buckets = model.seq_buckets();
+    let Some(&small) = buckets.iter().find(|&&s| s < meta.seq_len) else {
+        eprintln!("SKIP: single-seq bundle (no grid rows below seq_len)");
+        return;
+    };
+    let split = TestSplit::load(&ds.test_npz()).expect("split");
+    let seq = split.seq_len;
+    // A row whose non-pad prefix fits the small bucket.
+    let Some(i) = (0..split.n).find(|&i| {
+        split.tokens[i * seq..(i + 1) * seq]
+            .iter()
+            .rposition(|&t| t != 0)
+            .map(|p| p + 1 <= small)
+            .unwrap_or(false)
+    }) else {
+        eprintln!("SKIP: no test row short enough for bucket {small}");
+        return;
+    };
+    let (t, s) = split.row(i);
+    let full = model.infer(t, s, 1).expect("full seq");
+    let short = model
+        .infer_at(&t[..small], &s[..small], 1, small)
+        .expect("short bucket");
+    assert_eq!(full.argmax(0), short.argmax(0), "grid cells disagree on label");
+    for c in 0..full.num_classes {
+        let a = full.row(0)[c];
+        let b = short.row(0)[c];
+        assert!((a - b).abs() < 1e-3, "class {c}: {a} vs {b}");
     }
 }
 

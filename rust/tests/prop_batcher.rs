@@ -2,16 +2,18 @@
 //!  1. conservation — every pushed job comes out in exactly one batch;
 //!  2. capacity — no batch exceeds its variant's bucket cap;
 //!  3. ordering — jobs of one key leave in FIFO order;
-//!  4. deadline — after max_wait, nothing stays queued.
+//!  4. deadline — after max_wait, nothing stays queued;
+//!  5. homogeneity — no batch ever mixes seq buckets (or variants);
+//!  6. flush order — overdue batches leave oldest-deadline first.
 
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
-use powerbert::coordinator::batcher::{BatchPolicy, Batcher};
+use powerbert::coordinator::batcher::{BatchKey, BatchPolicy, Batcher};
 use powerbert::coordinator::request::{Input, Job, Request, Sla};
 use powerbert::testutil::prop::forall;
 
-fn job(id: u64) -> Job {
+fn job_at(id: u64, seq: usize) -> Job {
     let (tx, _rx) = channel();
     Job {
         req: Request {
@@ -22,10 +24,16 @@ fn job(id: u64) -> Job {
             submitted: Instant::now(),
         },
         variant: "v".into(),
-        tokens: vec![0; 4],
-        segments: vec![0; 4],
+        tokens: vec![0; seq],
+        segments: vec![0; seq],
+        seq,
+        real_len: seq.saturating_sub(1).max(1),
         reply: tx,
     }
+}
+
+fn job(id: u64) -> Job {
+    job_at(id, 4)
 }
 
 #[test]
@@ -42,7 +50,7 @@ fn conservation_and_capacity() {
         let mut out_batches = Vec::new();
         for i in 0..n_jobs {
             let key = keys[rng.below(keys.len() as u64) as usize];
-            if let Some(batch) = b.push(key.to_string(), job(i as u64), now) {
+            if let Some(batch) = b.push(BatchKey::new(key, 4), job(i as u64), now) {
                 out_batches.push(batch);
             }
         }
@@ -73,7 +81,7 @@ fn fifo_per_key() {
         let now = Instant::now();
         let mut batches = Vec::new();
         for i in 0..(size as u64 + 2) {
-            if let Some(batch) = b.push("k".into(), job(i), now) {
+            if let Some(batch) = b.push(BatchKey::new("k", 4), job(i), now) {
                 batches.push(batch);
             }
         }
@@ -93,7 +101,7 @@ fn deadline_flushes_everything() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 64, max_wait: wait });
         let t0 = Instant::now();
         for i in 0..(size as u64) {
-            b.push(format!("k{}", i % 3), job(i), t0);
+            b.push(BatchKey::new(format!("k{}", i % 3), 4), job(i), t0);
         }
         let later = t0 + wait + Duration::from_millis(1);
         let _ = b.flush_due(later, false);
@@ -117,14 +125,94 @@ fn bucket_caps_respected_per_key() {
         let mut batches = Vec::new();
         for i in 0..(size as u64 + 4) {
             let key = if rng.chance(0.5) { "a" } else { "b" };
-            if let Some(batch) = b.push(key.into(), job(i), now) {
+            if let Some(batch) = b.push(BatchKey::new(key, 4), job(i), now) {
                 batches.push(batch);
             }
         }
         batches.extend(b.flush_due(now, true));
         for batch in &batches {
-            let cap = if batch.key == "a" { cap_a } else { cap_b };
+            let cap = if batch.key.variant == "a" { cap_a } else { cap_b };
             assert!(batch.len() <= cap, "{} > cap {cap} for {}", batch.len(), batch.key);
         }
+    });
+}
+
+#[test]
+fn no_batch_mixes_seq_buckets_and_none_lost_under_interleaving() {
+    // The serving invariant behind (variant, seq-bucket) keying: under a
+    // random interleaving of pushes (random variant, random seq bucket,
+    // advancing clock) and partial flushes, every flushed batch is
+    // homogeneous in both dimensions and every job leaves exactly once.
+    forall("seq-bucket homogeneity + conservation", 150, |rng, size| {
+        let max_batch = 1 + rng.below(6) as usize;
+        let wait = Duration::from_millis(3);
+        let mut b = Batcher::new(BatchPolicy { max_batch, max_wait: wait });
+        let variants = ["d/v1", "d/v2"];
+        let buckets = [16usize, 32, 64];
+        let t0 = Instant::now();
+        let mut now = t0;
+        let mut out = Vec::new();
+        let n_jobs = (size as u64) * 2 + 2;
+        for i in 0..n_jobs {
+            let v = variants[rng.below(2) as usize];
+            let s = buckets[rng.below(3) as usize];
+            if let Some(batch) = b.push(BatchKey::new(v, s), job_at(i, s), now) {
+                out.push(batch);
+            }
+            // Occasionally advance time past the deadline and flush mid-run.
+            if rng.chance(0.2) {
+                now += wait + Duration::from_millis(1);
+                out.extend(b.flush_due(now, false));
+            } else if rng.chance(0.3) {
+                out.extend(b.flush_due(now, false));
+            }
+        }
+        out.extend(b.flush_due(now, true));
+        for batch in &out {
+            assert!(batch.len() <= max_batch);
+            for j in &batch.jobs {
+                assert_eq!(j.seq, batch.key.seq, "batch mixed seq buckets");
+                assert_eq!(j.tokens.len(), batch.key.seq, "row length != key bucket");
+            }
+        }
+        let mut ids: Vec<u64> = out
+            .iter()
+            .flat_map(|batch| batch.jobs.iter().map(|j| j.req.id))
+            .collect();
+        ids.sort();
+        assert_eq!(ids, (0..n_jobs).collect::<Vec<_>>(), "jobs lost or duplicated");
+        assert_eq!(b.pending(), 0);
+    });
+}
+
+#[test]
+fn flush_order_respects_max_wait() {
+    // Queues that have waited longest flush first, and a queue that is not
+    // yet due never flushes before one that is.
+    forall("overdue queues flush oldest-first", 100, |rng, size| {
+        let wait = Duration::from_millis(10);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 64, max_wait: wait });
+        let t0 = Instant::now();
+        let n_keys = 2 + (size % 4);
+        // Stagger arrivals: key i arrives at t0 + i ms (key 0 is oldest).
+        for i in 0..n_keys {
+            let at = t0 + Duration::from_millis(i as u64);
+            b.push(BatchKey::new(format!("k{i}"), 16), job_at(i as u64, 16), at);
+        }
+        // Advance so that only the first `due` keys are overdue.
+        let due = 1 + rng.below(n_keys as u64) as usize;
+        let now = t0 + wait + Duration::from_millis(due as u64 - 1);
+        let out = b.flush_due(now, false);
+        assert_eq!(out.len(), due, "exactly the overdue queues flush");
+        let order: Vec<u64> = out.iter().map(|batch| batch.jobs[0].req.id).collect();
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(order, sorted, "not oldest-deadline-first: {order:?}");
+        assert_eq!(b.pending(), n_keys - due);
+        // Everyone flushes once fully overdue.
+        let later = t0 + wait + Duration::from_millis(n_keys as u64);
+        let rest = b.flush_due(later, false);
+        assert_eq!(rest.len(), n_keys - due);
+        assert_eq!(b.pending(), 0);
     });
 }

@@ -91,6 +91,7 @@ fn meta(variant: &str, kind: &str, dev: f64, agg: usize) -> VariantMeta {
         num_classes: 2,
         batch_sizes: vec![1, 8],
         hlo: Default::default(),
+        grid: Default::default(),
         weights: "weights.npz".into(),
         param_order: vec![],
         retention: Some(vec![agg / 6; 6]),

@@ -54,6 +54,47 @@ fn aggregate_without_retention_is_full_grid() {
 }
 
 #[test]
+fn legacy_manifest_grid_falls_back_to_single_seq() {
+    let root = tmpdir("legacy-grid");
+    write_variant(&root, "sst2", "bert", "");
+    let meta = VariantMeta::parse(&root.join("sst2").join("bert")).unwrap();
+    // No hlo_grid declared: the grid is exactly the full-seq row.
+    assert_eq!(meta.seq_buckets(), vec![32]);
+    assert_eq!(meta.grid_cells(), vec![(1, 32)]);
+    assert_eq!(
+        meta.grid_path(1, 32).unwrap().file_name().unwrap(),
+        "model.b1.hlo.txt"
+    );
+    assert!(meta.grid_path(1, 16).is_none());
+    assert_eq!(meta.seq_bucket_for(10), 32);
+    assert_eq!(meta.seq_bucket_for(999), 32);
+}
+
+#[test]
+fn hlo_grid_manifest_parses_cells() {
+    let root = tmpdir("grid");
+    write_variant(
+        &root,
+        "sst2",
+        "bert",
+        r#", "hlo_grid": {"16": {"1": "model.s16.b1.hlo.txt", "8": "model.s16.b8.hlo.txt"},
+                          "32": {"1": "model.b1.hlo.txt"}}"#,
+    );
+    let meta = VariantMeta::parse(&root.join("sst2").join("bert")).unwrap();
+    assert_eq!(meta.seq_buckets(), vec![16, 32]);
+    assert_eq!(meta.grid_cells(), vec![(1, 16), (8, 16), (1, 32)]);
+    // The legacy flat map still resolves at the full seq.
+    assert_eq!(meta.hlo_path(1).unwrap().file_name().unwrap(), "model.b1.hlo.txt");
+    assert_eq!(
+        meta.grid_path(8, 16).unwrap().file_name().unwrap(),
+        "model.s16.b8.hlo.txt"
+    );
+    assert_eq!(meta.seq_bucket_for(10), 16);
+    assert_eq!(meta.seq_bucket_for(17), 32);
+    assert_eq!(meta.seq_bucket_for(999), 32);
+}
+
+#[test]
 fn registry_scan_skips_incomplete_dirs() {
     let root = tmpdir("scan");
     write_variant(&root, "sst2", "bert", "");
