@@ -14,6 +14,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
+use powerbert::runtime::BackendKind;
 use powerbert::util::cli::Args;
 use powerbert::util::stats::Summary;
 use powerbert::workload::WorkloadGen;
@@ -25,6 +26,7 @@ fn main() {
         .opt("secs", Some("8"), "measurement duration per variant")
         .opt("dataset", Some("sst2"), "dataset to serve")
         .opt("workers", Some("1"), "executor pool size")
+        .opt("backend", None, "inference backend (pjrt | native | auto)")
         .opt("seq-buckets", None, "comma-separated seq buckets (e.g. 16,32)")
         .parse()
         .unwrap_or_else(|u| {
@@ -35,6 +37,13 @@ fn main() {
     let secs: f64 = args.get_f64("secs").unwrap_or(8.0);
     let dataset = args.get("dataset").unwrap_or("sst2").to_string();
     let workers = args.get_usize("workers").unwrap_or(1).max(1);
+    let backend = match args.get("backend") {
+        None => BackendKind::from_env(),
+        Some(raw) => BackendKind::parse(raw).unwrap_or_else(|| {
+            eprintln!("--backend: expected pjrt|native|auto, got {raw:?}");
+            std::process::exit(2)
+        }),
+    };
     let seq_buckets = match (args.get("seq-buckets"), args.get_usize_list("seq-buckets")) {
         (Some(raw), None) if !raw.trim().is_empty() => {
             eprintln!("--seq-buckets: expected comma-separated integers, got {raw:?}");
@@ -48,6 +57,7 @@ fn main() {
         policy: Policy::BestUnderLatency,
         batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(4) },
         workers,
+        backend,
         seq_buckets,
         ..Config::default()
     })
@@ -64,7 +74,9 @@ fn main() {
         .map(|m| m.variant.clone())
         .collect();
 
-    println!("open-loop Poisson load: {rate} req/s for {secs}s per variant\n");
+    println!(
+        "open-loop Poisson load: {rate} req/s for {secs}s per variant ({backend} backend)\n"
+    );
     let mut rows = Vec::new();
     for variant in &variants {
         let client = coordinator.client();

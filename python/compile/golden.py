@@ -1,0 +1,98 @@
+"""Golden-logit fixtures for the Rust native backend.
+
+For every exported variant that carries weights, run the reference (pure-jnp
+oracle) forward over the dataset's committed test split and save the logits
+to ``artifacts/<dataset>/golden.npz`` as ``<variant>/logits`` — the parity
+contract the Rust native backend's tests assert against (within 1e-4).
+
+The BertConfig is reconstructed from the exported weight shapes + meta.json,
+so the fixture stays correct even if the training profile changes: whatever
+was exported is what gets goldened.
+
+Usage:  python -m compile.golden [artifacts_dir]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .config import BertConfig
+from .params_io import unflatten_params
+
+
+def cfg_from_export(weights: dict, meta: dict) -> BertConfig:
+    """Reconstruct the architecture purely from exported artifacts."""
+    vocab, embed = weights["embed/word"].shape
+    hidden = weights["embed/ln_g"].shape[0]
+    max_len = weights["embed/pos"].shape[0]
+    ffn = weights["layers/0/w1"].shape[1]
+    return BertConfig(
+        vocab_size=vocab,
+        hidden_size=hidden,
+        num_layers=int(meta["num_layers"]),
+        num_heads=int(meta["num_heads"]),
+        ffn_size=ffn,
+        max_len=max_len,
+        num_classes=int(meta.get("num_classes", 2)),
+        type_vocab=weights["embed/type"].shape[0],
+        embed_factor=0 if embed == hidden else embed,
+    )
+
+
+def golden_for_dataset(ds_dir: str) -> dict:
+    """Compute ``{variant}/logits`` arrays for one dataset directory."""
+    test = np.load(os.path.join(ds_dir, "test.npz"))
+    tokens = jnp.asarray(test["tokens"], dtype=jnp.int32)
+    segs = jnp.asarray(test["segs"], dtype=jnp.int32)
+    out = {}
+    for variant in sorted(os.listdir(ds_dir)):
+        vdir = os.path.join(ds_dir, variant)
+        meta_path = os.path.join(vdir, "meta.json")
+        wpath = os.path.join(vdir, "weights.npz")
+        if not (os.path.isdir(vdir) and os.path.exists(meta_path) and os.path.exists(wpath)):
+            continue
+        with open(meta_path) as f:
+            meta = json.load(f)
+        if "num_heads" not in meta:
+            # Debug bundles reuse their parent's architecture fields.
+            parent = meta_path.replace(f"{variant}/", f"{variant.removesuffix('-debug')}/")
+            if os.path.exists(parent) and parent != meta_path:
+                with open(parent) as f:
+                    meta = {**json.load(f), **meta}
+            else:
+                continue
+        z = np.load(wpath)
+        weights = {k: z[k] for k in z.files}
+        cfg = cfg_from_export(weights, meta)
+        params = unflatten_params(weights)
+        retention = meta.get("retention")
+        fwd = jax.jit(
+            M.make_forward(cfg, retention=retention, use_pallas=False)
+        )
+        logits, _ = fwd(params, tokens, segs)
+        out[f"{variant}/logits"] = np.asarray(logits, dtype=np.float32)
+        print(f"  {variant}: logits {out[f'{variant}/logits'].shape}")
+    return out
+
+
+def main(root: str) -> None:
+    for ds in sorted(os.listdir(root)):
+        ds_dir = os.path.join(root, ds)
+        if not os.path.isdir(ds_dir) or not os.path.exists(os.path.join(ds_dir, "test.npz")):
+            continue
+        print(f"golden: {ds}")
+        arrays = golden_for_dataset(ds_dir)
+        if arrays:
+            np.savez(os.path.join(ds_dir, "golden.npz"), **arrays)
+            print(f"  wrote {os.path.join(ds_dir, 'golden.npz')}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "artifacts")

@@ -466,6 +466,12 @@ def main():
             pipe.write_index()
 
     pipe.write_index()
+
+    # Golden-logit fixtures for the Rust native backend: reference logits
+    # per variant over each dataset's test split (parity asserted at 1e-4
+    # by rust/tests/native_backend.rs).
+    from . import golden
+    golden.main(ART)
     log("done")
 
 

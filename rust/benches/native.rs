@@ -1,0 +1,86 @@
+//! Native backend bench: BERT vs PoWER on the pure-Rust forward pass —
+//! wall-clock speedup vs the retention config, and the measured per-layer
+//! word-vector counts (the paper's Figure 1 quantity, counted by the
+//! executor rather than derived from meta.json).
+//!
+//!   cargo bench --bench native [PB_BENCH_ITERS=40]
+
+use powerbert::bench::{fmt_time, paper::measure, BenchConfig, Table};
+use powerbert::runtime::{default_root, BackendKind, Engine, Registry, TestSplit};
+
+fn main() {
+    powerbert::util::log::init();
+    let cfg = BenchConfig::from_env();
+    let registry = match Registry::scan(&default_root()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("SKIP native bench: {e}");
+            return;
+        }
+    };
+
+    for (ds_name, ds) in &registry.datasets {
+        let split = match TestSplit::load(&ds.test_npz()) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("SKIP {ds_name}: {e:#}");
+                continue;
+            }
+        };
+        let mut engine = Engine::with_backend(BackendKind::Native).expect("native engine");
+        let mut table = Table::new(
+            &format!("native backend — {ds_name}: metric / latency / word-vectors per layer"),
+            &["variant", "metric", "batch", "p50", "speedup", "wv/layer (measured)"],
+        );
+        let mut bert_p50 = None;
+        for vname in ["bert", "power-default"] {
+            let Some(meta) = ds.variant(vname) else { continue };
+            let model = match engine.load(meta) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("  ({ds_name}/{vname} native load failed: {e:#})");
+                    continue;
+                }
+            };
+            // Per-layer counts of one timed batch: snapshot the cumulative
+            // telemetry around a single infer.
+            let n = 8.min(split.n);
+            let seq = split.seq_len;
+            let before = model.layer_tokens().unwrap_or_default();
+            model
+                .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+                .expect("infer");
+            let after = model.layer_tokens().unwrap_or_default();
+            let per_layer: Vec<u64> = after
+                .iter()
+                .zip(before.iter())
+                .map(|(a, b)| (a - b) / n as u64)
+                .collect();
+
+            let point = match measure(&mut engine, meta, &split, 32, &cfg) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("  ({ds_name}/{vname} failed: {e:#})");
+                    continue;
+                }
+            };
+            if vname == "bert" {
+                bert_p50 = Some(point.latency.p50);
+            }
+            let speedup = bert_p50
+                .map(|b| format!("{:.2}x", b / point.latency.p50))
+                .unwrap_or_else(|| "-".into());
+            table.row(vec![
+                vname.to_string(),
+                format!("{:.4}", point.metric),
+                point.batch.to_string(),
+                fmt_time(point.latency.p50),
+                speedup,
+                format!("{per_layer:?} (Σ {})", per_layer.iter().sum::<u64>()),
+            ]);
+        }
+        if !table.rows.is_empty() {
+            table.print();
+        }
+    }
+}

@@ -41,11 +41,26 @@ pub struct Router {
     datasets: BTreeMap<String, DatasetRoutes>,
     policy: Policy,
     metrics: Arc<MetricsHub>,
+    /// Cold-start cost prior (us per aggregate word-vector per batch row),
+    /// seeded per backend — the native scalar loop costs more per token
+    /// than compiled XLA kernels. Online measurements replace it quickly.
+    prior_us_per_word_vector: f64,
 }
 
 impl Router {
     pub fn new(policy: Policy, metrics: Arc<MetricsHub>) -> Router {
-        Router { datasets: BTreeMap::new(), policy, metrics }
+        Router {
+            datasets: BTreeMap::new(),
+            policy,
+            metrics,
+            prior_us_per_word_vector: crate::runtime::BackendKind::Auto
+                .latency_prior_us_per_word_vector(),
+        }
+    }
+
+    /// Seed the cold-start latency prior for the serving backend.
+    pub fn set_latency_prior(&mut self, us_per_word_vector: f64) {
+        self.prior_us_per_word_vector = us_per_word_vector;
     }
 
     pub fn add_variant(&mut self, meta: VariantMeta) {
@@ -99,14 +114,14 @@ impl Router {
                 return per_token * (batch * seq) as f64;
             }
         }
-        // ~25us per word-vector per batch row on this CPU — refined by
-        // measurements immediately.
+        // Backend-seeded prior (us per word-vector per batch row) —
+        // refined by measurements immediately.
         let seq_ratio = if meta.seq_len == 0 {
             1.0
         } else {
             seq.min(meta.seq_len) as f64 / meta.seq_len as f64
         };
-        meta.aggregate_word_vectors() as f64 * seq_ratio * 25.0
+        meta.aggregate_word_vectors() as f64 * seq_ratio * self.prior_us_per_word_vector
     }
 
     /// Pick the serving variant for (dataset, SLA).
@@ -218,6 +233,8 @@ mod tests {
             seq_len: 32,
             num_layers: 6,
             num_classes: 2,
+            hidden_size: 32,
+            num_heads: 2,
             batch_sizes: vec![1, 8],
             hlo: Default::default(),
             grid: Default::default(),
@@ -267,9 +284,19 @@ mod tests {
 
     #[test]
     fn latency_budget_picks_cheap_variant() {
-        let r = router(Policy::BestUnderLatency);
-        // 24 agg word-vectors * 25us = 600us -> under 1ms; others over.
+        let mut r = router(Policy::BestUnderLatency);
+        // With the pjrt prior, 24 agg word-vectors * 25us = 600us fits the
+        // 1ms budget; the other variants are over it.
+        r.set_latency_prior(
+            crate::runtime::BackendKind::Pjrt.latency_prior_us_per_word_vector(),
+        );
         let sla = Sla { max_latency_ms: Some(1.0), ..Default::default() };
+        assert_eq!(r.route("sst2", &sla).unwrap().variant, "power-l0.001");
+        // Under the conservative default (auto/native) prior nothing fits
+        // the budget, and the fallback is still the fastest variant.
+        r.set_latency_prior(
+            crate::runtime::BackendKind::Native.latency_prior_us_per_word_vector(),
+        );
         assert_eq!(r.route("sst2", &sla).unwrap().variant, "power-l0.001");
     }
 
@@ -291,6 +318,29 @@ mod tests {
         assert!((r.latency_estimate_cell_us(&m, 8, 32) - 2.0 * 777.0).abs() < 1e-9);
         // A different batch still uses the prior.
         assert!((r.latency_estimate_cell_us(&m, 1, 32) - full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backend_prior_scales_cold_start_estimates() {
+        use crate::runtime::BackendKind;
+        let mut r = router(Policy::BestUnderLatency);
+        let m = meta("bert", "bert", 0.90, 192);
+        r.set_latency_prior(BackendKind::Pjrt.latency_prior_us_per_word_vector());
+        let pjrt_est = r.latency_estimate_us(&m);
+        r.set_latency_prior(BackendKind::Native.latency_prior_us_per_word_vector());
+        let native_est = r.latency_estimate_us(&m);
+        assert!(
+            native_est > pjrt_est,
+            "native cold-start prior must exceed pjrt's: {native_est} vs {pjrt_est}"
+        );
+        // `auto` may resolve to native, so it seeds the conservative value.
+        assert_eq!(
+            BackendKind::Auto.latency_prior_us_per_word_vector(),
+            BackendKind::Native.latency_prior_us_per_word_vector()
+        );
+        // The ordering between variants is preserved under any prior.
+        let cheap = meta("power-l0.001", "power", 0.85, 24);
+        assert!(r.latency_estimate_us(&cheap) < native_est);
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! The coordinator proper: front (batcher) thread + an N-worker executor
 //! pool.
 //!
-//! Thread topology — PJRT objects are not Send, so each executor worker
-//! owns its own PJRT client and device buffers; host artifacts (parsed
-//! manifests + weights) are shared through one `ArtifactStore`:
+//! Thread topology — backend state is thread-pinned (PJRT objects are not
+//! Send; native models keep per-worker telemetry), so each executor worker
+//! owns its own backend instance; host artifacts (parsed manifests +
+//! weights) are shared through one `ArtifactStore`:
 //!
 //!   client threads --submit()--> [bounded job queue] --> front thread
 //!     (tokenize to seq bucket + route)         (seq-bucketed dynamic batcher)
@@ -13,8 +14,10 @@
 //!                                   [batch queue 0] [batch queue 1] .. [N-1]
 //!                                          |              |              |
 //!                                      worker 0       worker 1    ..  worker N-1
-//!                                   (EngineWorker: PJRT client + device
-//!                                    weights; shared ArtifactStore host-side)
+//!                                   (EngineWorker: one backend instance —
+//!                                    pjrt client + device weights, or the
+//!                                    native pure-Rust forward; shared
+//!                                    ArtifactStore host-side)
 //!
 //! A variant is pinned to one worker round-robin on first sight so its
 //! compiled executables and device weights stay warm on that worker instead
@@ -37,7 +40,7 @@ use super::batcher::{Batch, BatchKey, BatchPolicy, Batcher};
 use super::metrics::MetricsHub;
 use super::request::{Input, Job, Request, Response, ServeError, Sla};
 use super::router::{Policy, Router};
-use crate::runtime::{ArtifactStore, EngineWorker, Registry};
+use crate::runtime::{ArtifactStore, BackendKind, EngineWorker, Registry};
 use crate::tokenizer::{Tokenizer, Vocab, PAD_ID};
 
 /// Coordinator configuration.
@@ -53,9 +56,13 @@ pub struct Config {
     pub inflight_batches: usize,
     /// Load every variant at startup instead of lazily on first use.
     pub preload: bool,
-    /// Executor pool size. Each worker owns a PJRT client; 1 reproduces the
-    /// seed's single-executor behaviour exactly.
+    /// Executor pool size. Each worker owns its backend state (PJRT client
+    /// / native weights); 1 reproduces the seed's single-executor
+    /// behaviour exactly.
     pub workers: usize,
+    /// Inference backend every pool worker runs on (pjrt | native | auto).
+    /// Also seeds the router's cold-start latency priors.
+    pub backend: BackendKind,
     /// Sequence buckets for length-aware batching, ascending (e.g.
     /// [16, 32, 64]). Requests encode to the smallest bucket that fits
     /// their true token count; empty = off (every request at full seq_len).
@@ -73,6 +80,7 @@ impl Default for Config {
             inflight_batches: 2,
             preload: false,
             workers: 1,
+            backend: BackendKind::from_env(),
             seq_buckets: Vec::new(),
         }
     }
@@ -244,6 +252,7 @@ impl Coordinator {
         seq_buckets.dedup();
 
         let mut router = Router::new(cfg.policy.clone(), metrics.clone());
+        router.set_latency_prior(cfg.backend.latency_prior_us_per_word_vector());
         for (name, ds) in &registry.datasets {
             if !cfg.datasets.is_empty() && !cfg.datasets.contains(name) {
                 continue;
@@ -261,6 +270,7 @@ impl Coordinator {
         let store = Arc::new(ArtifactStore::new());
         let mut exec_txs: Vec<SyncSender<ExecMsg>> = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
+        let backend = cfg.backend;
         for id in 0..n_workers {
             let (tx, rx) = sync_channel::<ExecMsg>(cfg.inflight_batches.max(1));
             let reg = registry.clone();
@@ -268,7 +278,7 @@ impl Coordinator {
             let st = store.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("pb-worker-{id}"))
-                .spawn(move || worker_loop(id, rx, st, reg, met))
+                .spawn(move || worker_loop(id, rx, st, reg, met, backend))
                 .map_err(|e| e.to_string())?;
             exec_txs.push(tx);
             workers.push(handle);
@@ -450,11 +460,12 @@ fn worker_loop(
     store: Arc<ArtifactStore>,
     registry: Registry,
     metrics: Arc<MetricsHub>,
+    backend: BackendKind,
 ) {
-    let mut worker = match EngineWorker::new(id, store) {
+    let mut worker = match EngineWorker::with_backend(id, store, backend) {
         Ok(w) => w,
         Err(e) => {
-            crate::warnln!("executor", "worker {id}: failed to create PJRT client: {e}");
+            crate::warnln!("executor", "worker {id}: failed to create {backend} backend: {e}");
             // Fail anything already queued, then exit: dropping the
             // receiver closes the channel, so the front re-pins this
             // worker's variants onto the healthy rest of the pool.
@@ -463,7 +474,7 @@ fn worker_loop(
                     Ok(ExecMsg::Run(batch)) => {
                         for job in batch.jobs {
                             let _ = job.reply.send(Err(ServeError::Exec(format!(
-                                "worker {id} has no PJRT client"
+                                "worker {id} has no {backend} backend"
                             ))));
                         }
                     }

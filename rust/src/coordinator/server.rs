@@ -19,12 +19,18 @@ use super::request::{Input, Response, ServeError, Sla};
 use super::scheduler::Client;
 use crate::util::json::Json;
 
+/// Default bound on concurrent connections: each connection holds one
+/// handler thread, so an unbounded accept loop is an unbounded
+/// `thread::spawn` — a trivial resource-exhaustion vector.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
+
 /// Serving front-end over a coordinator client.
 pub struct Server {
     listener: TcpListener,
     client: Client,
     stop: Arc<AtomicBool>,
     pub connections: Arc<AtomicUsize>,
+    max_connections: usize,
 }
 
 impl Server {
@@ -35,7 +41,16 @@ impl Server {
             client,
             stop: Arc::new(AtomicBool::new(false)),
             connections: Arc::new(AtomicUsize::new(0)),
+            max_connections: DEFAULT_MAX_CONNECTIONS,
         })
+    }
+
+    /// Cap concurrent connections (0 refuses everything — useful in tests).
+    /// Over-limit connections receive one JSON error line and are closed
+    /// instead of spawning a handler thread.
+    pub fn with_max_connections(mut self, n: usize) -> Server {
+        self.max_connections = n;
+        self
     }
 
     pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
@@ -56,13 +71,30 @@ impl Server {
                 break;
             }
             match stream {
-                Ok(s) => {
+                Ok(mut s) => {
+                    // Bounded handler pool: shed over-limit connections
+                    // with a protocol-shaped error instead of an unbounded
+                    // thread::spawn.
+                    if self.connections.load(Ordering::Relaxed) >= self.max_connections {
+                        crate::warnln!(
+                            "server",
+                            "connection limit {} reached; shedding client",
+                            self.max_connections
+                        );
+                        let reply = err_json("server at connection capacity; retry later");
+                        let _ = s.write_all(reply.to_string().as_bytes());
+                        let _ = s.write_all(b"\n");
+                        continue;
+                    }
                     let client = self.client.clone();
-                    let conns = self.connections.clone();
-                    conns.fetch_add(1, Ordering::Relaxed);
+                    self.connections.fetch_add(1, Ordering::Relaxed);
+                    // Drop guard: with the cap enforcing admission, a
+                    // panicking handler must not leak its slot (256 leaks
+                    // would be a permanent full-capacity lockout).
+                    let guard = ConnGuard(self.connections.clone());
                     std::thread::spawn(move || {
+                        let _guard = guard;
                         let _ = handle_connection(s, client);
-                        conns.fetch_sub(1, Ordering::Relaxed);
                     });
                 }
                 Err(e) => crate::warnln!("server", "accept failed: {e}"),
@@ -75,6 +107,16 @@ impl Server {
     pub fn shutdown(addr: std::net::SocketAddr, stop: &Arc<AtomicBool>) {
         stop.store(true, Ordering::Relaxed);
         let _ = TcpStream::connect(addr); // wake the blocking accept
+    }
+}
+
+/// Decrements the live-connection counter when the handler thread exits,
+/// including by panic (unwinding drops locals).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }
 

@@ -11,9 +11,14 @@
 //! * [`runtime::Registry`] — discover AOT artifacts, including each
 //!   variant's (batch, seq) execution grid.
 //! * [`runtime::ArtifactStore`] — host half of a loaded variant (parsed
-//!   manifests + weights), `Send`, shared across the worker pool.
-//! * [`runtime::EngineWorker`] — device half: one PJRT client + compiled
-//!   (batch, seq) cells per executor thread. [`runtime::Engine`] is the
+//!   manifests + weights via the pure-Rust npz reader), `Send`, shared
+//!   across the worker pool.
+//! * [`runtime::BackendKind`] — pluggable inference backends: `pjrt`
+//!   (compiled HLO on an XLA device), `native` (pure-Rust PoWER-BERT
+//!   forward pass with progressive word-vector elimination — zero XLA
+//!   dependencies), or `auto` (PJRT with native fallback).
+//! * [`runtime::EngineWorker`] — backend half: one backend instance +
+//!   loaded models per executor thread. [`runtime::Engine`] is the
 //!   single-worker facade.
 //! * [`coordinator::Coordinator`] — seq-bucketed dynamic batching over an
 //!   N-worker execution pool + SLA-aware routing (the paper's

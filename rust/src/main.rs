@@ -10,7 +10,7 @@
 use std::path::PathBuf;
 
 use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Policy, Server};
-use powerbert::runtime::{default_root, Engine, Registry, TestSplit};
+use powerbert::runtime::{default_root, BackendKind, Engine, Registry, TestSplit};
 use powerbert::util::cli::Args;
 use powerbert::eval::Metric;
 
@@ -27,7 +27,8 @@ fn main() {
     .opt("policy", Some("fastest-above-metric"), "serve: routing policy (fixed:<variant> | best-under-latency | fastest-above-metric)")
     .opt("max-batch", Some("32"), "serve: dynamic batcher max batch")
     .opt("max-wait-ms", Some("5"), "serve: dynamic batcher max wait")
-    .opt("workers", Some("1"), "serve: executor pool size (PJRT clients)")
+    .opt("backend", None, "serve/eval: inference backend (pjrt | native | auto; default $POWERBERT_BACKEND or auto)")
+    .opt("workers", Some("1"), "serve: executor pool size (one backend instance each)")
     .opt("seq-buckets", None, "serve: comma-separated seq buckets for length-aware batching (e.g. 16,32,64)")
     .opt("dataset", None, "eval: dataset name")
     .opt("variant", Some("bert"), "eval: variant name")
@@ -59,6 +60,16 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Backend selection: explicit `--backend` wins, then `$POWERBERT_BACKEND`,
+/// then auto (PJRT with native fallback). `Err` carries the usage message.
+fn parse_backend(parsed: &powerbert::util::cli::Parsed) -> Result<BackendKind, String> {
+    match parsed.get("backend") {
+        None => Ok(BackendKind::from_env()),
+        Some(raw) => BackendKind::parse(raw)
+            .ok_or_else(|| format!("--backend: expected pjrt|native|auto, got {raw:?}")),
+    }
+}
+
 fn parse_policy(s: &str) -> Policy {
     if let Some(v) = s.strip_prefix("fixed:") {
         Policy::Fixed(v.to_string())
@@ -70,6 +81,13 @@ fn parse_policy(s: &str) -> Policy {
 }
 
 fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
+    let backend = match parse_backend(parsed) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let cfg = Config {
         artifacts: root,
         datasets: parsed
@@ -85,6 +103,7 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
         },
         preload: parsed.has("preload"),
         workers: parsed.get_usize("workers").unwrap_or(1).max(1),
+        backend,
         seq_buckets: match (parsed.get("seq-buckets"), parsed.get_usize_list("seq-buckets")) {
             (Some(raw), None) if !raw.trim().is_empty() => {
                 eprintln!("--seq-buckets: expected comma-separated integers, got {raw:?}");
@@ -141,7 +160,20 @@ fn cmd_eval(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
         );
         return 1;
     };
-    let mut engine = Engine::new().expect("pjrt client");
+    let backend = match parse_backend(parsed) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut engine = match Engine::with_backend(backend) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("backend {backend}: {e:#}");
+            return 1;
+        }
+    };
     let model = match engine.load(meta) {
         Ok(m) => m,
         Err(e) => {
@@ -181,7 +213,8 @@ fn cmd_eval(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
     let secs = t0.elapsed().as_secs_f64();
     let m = metric.compute(&outputs, num_classes, &split.labels);
     println!(
-        "{dataset}/{variant}: {} = {:.4} over {} examples in {:.2}s ({:.1} ex/s)",
+        "{dataset}/{variant} [{}]: {} = {:.4} over {} examples in {:.2}s ({:.1} ex/s)",
+        model.backend_name(),
         meta.metric,
         m,
         split.n,

@@ -28,6 +28,10 @@ pub struct VariantMeta {
     pub seq_len: usize,
     pub num_layers: usize,
     pub num_classes: usize,
+    /// Model width / head count (0 when an old manifest omits them; the
+    /// native backend requires both, the PJRT path never reads them).
+    pub hidden_size: usize,
+    pub num_heads: usize,
     pub batch_sizes: Vec<usize>,
     /// batch size -> HLO file name (legacy single-seq map, kept for tools
     /// that only care about the full-`seq_len` row of the grid).
@@ -91,6 +95,8 @@ impl VariantMeta {
             seq_len,
             num_layers: j.get("num_layers").and_then(Json::as_usize).unwrap_or(0),
             num_classes: j.get("num_classes").and_then(Json::as_usize).unwrap_or(2),
+            hidden_size: j.get("hidden_size").and_then(Json::as_usize).unwrap_or(0),
+            num_heads: j.get("num_heads").and_then(Json::as_usize).unwrap_or(0),
             batch_sizes: j
                 .get("batch_sizes")
                 .and_then(Json::as_arr)

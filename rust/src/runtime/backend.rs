@@ -1,0 +1,450 @@
+//! Pluggable inference backends.
+//!
+//! A backend turns a host [`ModelArtifact`](super::engine::ModelArtifact)
+//! into something that can execute `(batch, seq)` cells with the variant's
+//! weights resident per worker. Two implementations exist:
+//!
+//! * [`pjrt`](super::pjrt) — compiles the exported HLO text through a PJRT
+//!   client and keeps weights as device buffers (the seed path; requires
+//!   the real xla-rs bindings, the vendored stub returns `Unavailable`).
+//! * [`native`](super::native) — a pure-Rust BERT encoder with the paper's
+//!   progressive word-vector elimination, reading `weights.npz` directly.
+//!   Zero XLA dependencies: the whole serving stack runs on a bare
+//!   toolchain, and `cargo test` exercises real inference on the committed
+//!   artifacts.
+//!
+//! [`LoadedModel`] is the backend-agnostic handle the rest of the stack
+//! (scheduler, eval, benches) talks to: it owns cell selection and batch
+//! padding and delegates raw execution to a [`CellExecutor`].
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::VariantMeta;
+use crate::tokenizer::PAD_ID;
+
+/// Which inference backend to run a worker on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Prefer PJRT, fall back to the native backend when the XLA runtime
+    /// is unavailable (e.g. the vendored stub) — the default.
+    Auto,
+    /// XLA PJRT: compile exported HLO, execute on the PJRT device.
+    Pjrt,
+    /// Pure-Rust forward pass with progressive word-vector elimination.
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "auto" => Some(BackendKind::Auto),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            "native" | "rust" => Some(BackendKind::Native),
+            _ => None,
+        }
+    }
+
+    /// Session default: `$POWERBERT_BACKEND` when set (and valid), else
+    /// `Auto`. Lets CI pin `native` without threading a flag through every
+    /// test binary.
+    pub fn from_env() -> BackendKind {
+        std::env::var("POWERBERT_BACKEND")
+            .ok()
+            .and_then(|v| BackendKind::parse(&v))
+            .unwrap_or(BackendKind::Auto)
+    }
+
+    /// Cold-start latency prior for the router, in microseconds per
+    /// aggregate word-vector per batch row (paper §4.2: compute is
+    /// proportional to word-vectors processed). Measured execution times
+    /// replace this within a few batches; only the per-backend ordering
+    /// matters. The native scalar loop is slower per token than the
+    /// XLA-compiled kernels, so it starts from a higher prior — and `auto`
+    /// may resolve to native at load time, so it seeds the conservative
+    /// value (overestimating cold-start latency keeps SLA routing safe;
+    /// measurements correct it either way).
+    pub fn latency_prior_us_per_word_vector(self) -> f64 {
+        match self {
+            BackendKind::Pjrt => 25.0,
+            BackendKind::Native | BackendKind::Auto => 60.0,
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        })
+    }
+}
+
+/// Raw output of executing one cell.
+pub struct ExecOutput {
+    /// Row-major [batch, num_classes] over the *executed* batch (padding
+    /// rows included; the caller slices to the real row count).
+    pub logits: Vec<f32>,
+    pub num_classes: usize,
+    /// Kept-position trace [batch, num_layers, seq], -1-padded — present
+    /// when the executor can trace elimination (native power variants and
+    /// PJRT debug bundles).
+    pub kept: Option<Vec<i32>>,
+}
+
+/// One variant loaded on one backend worker: executes rectangular
+/// (batch, seq) token grids. Deliberately not `Send` — PJRT state is
+/// thread-pinned, and workers own their models.
+pub trait CellExecutor {
+    /// Execute `tokens`/`segments` of shape [batch, seq].
+    fn execute(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        batch: usize,
+        seq: usize,
+        want_trace: bool,
+    ) -> Result<ExecOutput>;
+
+    /// Cumulative word-vectors processed per encoder layer since load
+    /// (native backend only): the paper's aggregate word-vector count,
+    /// measured rather than derived from the retention config.
+    fn layer_tokens(&self) -> Option<Vec<u64>> {
+        None
+    }
+}
+
+/// How a backend maps a requested (rows, seq) onto executable shapes.
+pub enum CellPlan {
+    /// Fixed compiled cells, ascending `(seq, batch)`; requests are padded
+    /// up to the smallest cell that fits (PJRT: one executable per cell).
+    Grid(Vec<(usize, usize)>),
+    /// Any shape up to the caps executes exactly — no padding at all
+    /// (native: the forward loop takes its shapes at runtime).
+    Exact { max_batch: usize, max_seq: usize },
+}
+
+/// Smallest compiled cell that fits `n` rows of `seq` tokens. `cells` must
+/// be ascending `(seq, batch)` pairs; the search prefers the narrowest seq
+/// bucket, then the smallest batch bucket within it (falling through to
+/// wider seq rows when no batch there fits). Returns `(batch, seq)`.
+pub fn pick_cell(cells: &[(usize, usize)], n: usize, seq: usize) -> Option<(usize, usize)> {
+    cells
+        .iter()
+        .find(|&&(s, b)| s >= seq && b >= n)
+        .map(|&(s, b)| (b, s))
+}
+
+/// Output of one forward execution.
+#[derive(Debug, Clone)]
+pub struct Logits {
+    /// Row-major [batch, num_classes].
+    pub values: Vec<f32>,
+    pub batch: usize,
+    pub num_classes: usize,
+}
+
+impl Logits {
+    /// Row `i`'s scores, or `None` when `i` is out of range.
+    pub fn try_row(&self, i: usize) -> Option<&[f32]> {
+        let start = i.checked_mul(self.num_classes)?;
+        let end = start.checked_add(self.num_classes)?;
+        if i >= self.batch || end > self.values.len() {
+            return None;
+        }
+        Some(&self.values[start..end])
+    }
+
+    /// Row `i`'s scores; an out-of-range index yields an empty slice
+    /// rather than panicking a worker thread.
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.try_row(i).unwrap_or(&[])
+    }
+
+    pub fn argmax(&self, i: usize) -> usize {
+        // total_cmp: NaN logits (a poisoned model is a serving reality)
+        // must not panic the executor; NaN sorts below every real value.
+        // An out-of-range row is empty and settles on class 0.
+        self.row(i)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap_or(0)
+    }
+}
+
+/// A loaded model variant on one worker, backend-agnostic: cell selection
+/// and padding here, raw execution behind the [`CellExecutor`].
+pub struct LoadedModel {
+    pub meta: VariantMeta,
+    backend: &'static str,
+    plan: CellPlan,
+    exec: Box<dyn CellExecutor>,
+}
+
+impl LoadedModel {
+    pub fn new(
+        meta: VariantMeta,
+        backend: &'static str,
+        plan: CellPlan,
+        exec: Box<dyn CellExecutor>,
+    ) -> LoadedModel {
+        LoadedModel { meta, backend, plan, exec }
+    }
+
+    /// Which backend executes this model ("pjrt" | "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Largest executable batch size across all seq buckets.
+    pub fn max_batch(&self) -> usize {
+        match &self.plan {
+            CellPlan::Grid(cells) => cells.iter().map(|&(_, b)| b).max().unwrap_or(1),
+            CellPlan::Exact { max_batch, .. } => *max_batch,
+        }
+    }
+
+    /// Executable (batch, seq) cells. For an exact-shape backend this is
+    /// the artifact's declared grid (the shapes the serving layer batches
+    /// to), not an enumeration of every runnable shape.
+    pub fn cells(&self) -> Vec<(usize, usize)> {
+        match &self.plan {
+            CellPlan::Grid(cells) => cells.iter().map(|&(s, b)| (b, s)).collect(),
+            CellPlan::Exact { .. } => self.meta.grid_cells(),
+        }
+    }
+
+    /// Smallest executable (batch, seq) cell that fits `n` rows of `seq`
+    /// tokens; `None` when `n` exceeds every batch bucket. Exact-shape
+    /// backends return `(n, seq)` itself — nothing is ever padded.
+    pub fn cell_for(&self, n: usize, seq: usize) -> Option<(usize, usize)> {
+        match &self.plan {
+            CellPlan::Grid(cells) => pick_cell(cells, n, seq),
+            CellPlan::Exact { max_batch, max_seq } => {
+                (n > 0 && n <= *max_batch && seq <= *max_seq).then_some((n, seq))
+            }
+        }
+    }
+
+    /// Smallest batch bucket that fits `n` rows at the full sequence
+    /// length (`None` when `n` is too large for every bucket).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.cell_for(n, self.meta.seq_len).map(|(b, _)| b)
+    }
+
+    /// Distinct compiled batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.cells().iter().map(|&(b, _)| b).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Distinct compiled seq buckets, ascending.
+    pub fn seq_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.cells().iter().map(|&(_, s)| s).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Cumulative per-layer word-vector counts (native backend only).
+    pub fn layer_tokens(&self) -> Option<Vec<u64>> {
+        self.exec.layer_tokens()
+    }
+
+    /// Run a forward pass over rows of the full sequence length (the seed's
+    /// original entry point — byte-identical on single-seq bundles).
+    pub fn infer(&self, tokens: &[i32], segments: &[i32], n: usize) -> Result<Logits> {
+        self.infer_at(tokens, segments, n, self.meta.seq_len)
+    }
+
+    /// Run a forward pass. `tokens`/`segments` are row-major [n, seq]; the
+    /// smallest executable (batch, seq) cell that fits is chosen, rows are
+    /// padded to its batch bucket and columns to its seq bucket (exact
+    /// backends execute the shape as-is). Errors (rather than silently
+    /// truncating) when `n` exceeds every batch bucket or `seq` every seq
+    /// bucket.
+    pub fn infer_at(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        n: usize,
+        seq: usize,
+    ) -> Result<Logits> {
+        if n == 0 {
+            bail!("infer: empty batch");
+        }
+        if tokens.len() != n * seq || segments.len() != n * seq {
+            bail!("infer: expected {}x{} tokens, got {}", n, seq, tokens.len());
+        }
+        let (bucket, seq_bucket) = self.cell_for(n, seq).ok_or_else(|| {
+            anyhow!(
+                "infer: batch of {n} rows at seq {seq} fits no executable cell of {}/{} \
+                 (max batch {}, seq buckets {:?}) — split the batch upstream",
+                self.meta.dataset,
+                self.meta.variant,
+                self.max_batch(),
+                self.seq_buckets(),
+            )
+        })?;
+        let out = if n == bucket && seq == seq_bucket {
+            self.exec.execute(tokens, segments, bucket, seq_bucket, false)?
+        } else {
+            let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
+            self.exec.execute(&t, &s, bucket, seq_bucket, false)?
+        };
+        let nc = out.num_classes;
+        if out.logits.len() < n * nc {
+            bail!(
+                "backend returned {} logits for a {bucket}x{nc} batch",
+                out.logits.len()
+            );
+        }
+        Ok(Logits { values: out.logits[..n * nc].to_vec(), batch: n, num_classes: nc })
+    }
+
+    /// Forward pass plus the kept-positions trace [n, L, N] (i32, rows
+    /// right-padded with -1). Served natively for any variant with a
+    /// retention config, and by PJRT debug bundles (2-tuple graphs).
+    pub fn infer_with_trace(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        n: usize,
+    ) -> Result<(Logits, Vec<i32>)> {
+        let seq = self.meta.seq_len;
+        if tokens.len() != n * seq || segments.len() != n * seq {
+            bail!("infer_with_trace: expected {}x{} tokens, got {}", n, seq, tokens.len());
+        }
+        let (bucket, seq_bucket) = self.cell_for(n, seq).ok_or_else(|| {
+            anyhow!(
+                "infer_with_trace: batch of {n} rows exceeds the largest bucket {}",
+                self.max_batch()
+            )
+        })?;
+        let out = if n == bucket && seq == seq_bucket {
+            self.exec.execute(tokens, segments, bucket, seq_bucket, true)?
+        } else {
+            let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
+            self.exec.execute(&t, &s, bucket, seq_bucket, true)?
+        };
+        let kept = out.kept.ok_or_else(|| {
+            anyhow!(
+                "{}/{} provides no elimination trace on the {} backend \
+                 (need a retention config or a debug bundle)",
+                self.meta.dataset,
+                self.meta.variant,
+                self.backend
+            )
+        })?;
+        let nc = out.num_classes;
+        if out.logits.len() < n * nc {
+            bail!(
+                "backend returned {} logits for a {bucket}x{nc} batch",
+                out.logits.len()
+            );
+        }
+        Ok((
+            Logits { values: out.logits[..n * nc].to_vec(), batch: n, num_classes: nc },
+            kept,
+        ))
+    }
+}
+
+/// Pad `n` rows of `seq` tokens/segments out to a [bucket, seq_bucket]
+/// rectangle: PAD tokens on the right of each row, PAD rows at the bottom.
+pub(crate) fn pad_rows(
+    tokens: &[i32],
+    segments: &[i32],
+    n: usize,
+    seq: usize,
+    bucket: usize,
+    seq_bucket: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut t = vec![PAD_ID; bucket * seq_bucket];
+    let mut s = vec![0i32; bucket * seq_bucket];
+    for i in 0..n {
+        t[i * seq_bucket..i * seq_bucket + seq].copy_from_slice(&tokens[i * seq..(i + 1) * seq]);
+        s[i * seq_bucket..i * seq_bucket + seq].copy_from_slice(&segments[i * seq..(i + 1) * seq]);
+    }
+    (t, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ignores_nan() {
+        // Row 0 has a NaN — must not panic, and the NaN must never win.
+        let l = Logits {
+            values: vec![f32::NAN, 0.2, 0.9, 0.7, 0.1, 0.3],
+            batch: 2,
+            num_classes: 3,
+        };
+        assert_eq!(l.argmax(0), 2);
+        assert_eq!(l.argmax(1), 0);
+        // An all-NaN row settles on a valid index rather than panicking.
+        let all_nan = Logits { values: vec![f32::NAN; 3], batch: 1, num_classes: 3 };
+        assert!(all_nan.argmax(0) < 3);
+    }
+
+    #[test]
+    fn out_of_range_row_is_empty_not_panic() {
+        let l = Logits { values: vec![0.1, 0.9], batch: 1, num_classes: 2 };
+        assert_eq!(l.try_row(0), Some(&[0.1, 0.9][..]));
+        assert_eq!(l.try_row(1), None);
+        assert_eq!(l.row(1), &[] as &[f32]);
+        assert_eq!(l.row(usize::MAX), &[] as &[f32]);
+        assert_eq!(l.argmax(7), 0);
+        // A short values buffer (malformed executor output) is also caught.
+        let short = Logits { values: vec![0.5], batch: 2, num_classes: 2 };
+        assert_eq!(short.row(0), &[] as &[f32]);
+    }
+
+    #[test]
+    fn pick_cell_prefers_narrow_seq_then_small_batch() {
+        // Grid: seq 16 with batches {1, 8}, seq 64 with batches {1, 8, 32}.
+        let cells = vec![(16, 1), (16, 8), (64, 1), (64, 8), (64, 32)];
+        assert_eq!(pick_cell(&cells, 1, 10), Some((1, 16)));
+        assert_eq!(pick_cell(&cells, 5, 16), Some((8, 16)));
+        // Batch 20 fits no seq-16 bucket -> falls through to the 64 row.
+        assert_eq!(pick_cell(&cells, 20, 10), Some((32, 64)));
+        assert_eq!(pick_cell(&cells, 8, 40), Some((8, 64)));
+        // Oversize in either dimension: no cell.
+        assert_eq!(pick_cell(&cells, 33, 10), None);
+        assert_eq!(pick_cell(&cells, 1, 100), None);
+    }
+
+    #[test]
+    fn pad_rows_pads_columns_and_rows() {
+        let tokens = vec![2, 5, 3, 2, 6, 3];
+        let segs = vec![0, 0, 0, 0, 1, 1];
+        let (t, s) = pad_rows(&tokens, &segs, 2, 3, 4, 5);
+        assert_eq!(t.len(), 20);
+        assert_eq!(&t[0..5], &[2, 5, 3, PAD_ID, PAD_ID]);
+        assert_eq!(&t[5..10], &[2, 6, 3, PAD_ID, PAD_ID]);
+        assert!(t[10..].iter().all(|&x| x == PAD_ID));
+        assert_eq!(&s[5..10], &[0, 1, 1, 0, 0]);
+        assert!(s[10..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn backend_kind_parses_and_displays() {
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("auto"), Some(BackendKind::Auto));
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::Native.to_string(), "native");
+        assert!(
+            BackendKind::Native.latency_prior_us_per_word_vector()
+                > BackendKind::Pjrt.latency_prior_us_per_word_vector()
+        );
+    }
+}

@@ -1,50 +1,30 @@
-//! PJRT execution engine: loads HLO-text artifacts, keeps model weights
-//! resident as device buffers, and runs batched inference.
+//! Execution engine: host artifact store + backend-agnostic workers.
 //!
 //! Split for the multi-worker execution pool:
 //! * [`ArtifactStore`] — host half, `Send + Sync`: weights read from npz
-//!   once (plain f32 tensors in lowered parameter order) plus the validated
-//!   `(batch, seq)` HLO grid. Shared by every worker behind an `Arc`.
-//! * [`EngineWorker`] — device half, pinned to one thread: PJRT client,
-//!   compiled executables and device-resident weight buffers. PJRT objects
-//!   are not `Send`, so each worker owns its own and only host artifacts
-//!   cross threads.
+//!   once (plain f32 tensors in lowered parameter order, via the pure-Rust
+//!   `util::npz` reader — no XLA involved) plus the validated `(batch,
+//!   seq)` HLO grid. Shared by every worker behind an `Arc`.
+//! * [`EngineWorker`] — backend half, pinned to one thread: resolves a
+//!   [`BackendKind`] into loaded models. The `pjrt` backend owns a PJRT
+//!   client and device buffers (not `Send`); the `native` backend runs the
+//!   pure-Rust forward pass. `auto` prefers PJRT and falls back to native
+//!   when the XLA runtime is unavailable (e.g. the vendored stub), so the
+//!   stack serves real logits on any machine.
 //! * [`Engine`] — the seed's single-worker facade (CLI eval, benches): one
 //!   store + one worker behind the original `new`/`load`/`get` API.
-//!
-//! Weights are transferred to the device ONCE per worker at load, and every
-//! request then goes through `execute_b`, so the hot path moves only the
-//! (tokens, segments) batch — this is the Rust analog of the paper's
-//! "model stays on the GPU" serving setup. Executables are compiled per
-//! `(batch, seq)` cell: the serving layer picks the smallest cell that fits
-//! so padded word-vectors — the very thing PoWER-BERT eliminates inside the
-//! model — are not re-introduced at the batch boundary.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
-use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifact::VariantMeta;
-use crate::tokenizer::PAD_ID;
-
-/// One compiled (batch, seq) cell of a variant.
-struct Compiled {
-    exe: PjRtLoadedExecutable,
-}
-
-/// Smallest compiled cell that fits `n` rows of `seq` tokens. `cells` must
-/// be ascending `(seq, batch)` pairs; the search prefers the narrowest seq
-/// bucket, then the smallest batch bucket within it (falling through to
-/// wider seq rows when no batch there fits). Returns `(batch, seq)`.
-pub fn pick_cell(cells: &[(usize, usize)], n: usize, seq: usize) -> Option<(usize, usize)> {
-    cells
-        .iter()
-        .find(|&&(s, b)| s >= seq && b >= n)
-        .map(|&(s, b)| (b, s))
-}
+use super::backend::{BackendKind, LoadedModel};
+use super::native::NativeBackend;
+use super::pjrt::PjrtBackend;
+use crate::util::npz;
 
 /// Host-resident half of a loaded variant (weights + validated HLO paths).
 pub struct ModelArtifact {
@@ -57,20 +37,19 @@ pub struct ModelArtifact {
 
 impl ModelArtifact {
     fn load(meta: &VariantMeta) -> Result<ModelArtifact> {
-        // Weights as named literals -> host tensors, reordered to match the
-        // lowered module's parameter order from meta.json.
-        let named: Vec<(String, Literal)> = Literal::read_npz(meta.weights_path(), &())
+        // Weights -> host tensors, reordered to match the lowered module's
+        // parameter order from meta.json.
+        let entries = npz::read_npz(&meta.weights_path())
             .with_context(|| format!("read {}", meta.weights_path().display()))?;
-        let mut by_name: HashMap<String, Literal> = named.into_iter().collect();
+        let mut by_name: HashMap<String, npz::NpzEntry> =
+            entries.into_iter().map(|e| (e.name.clone(), e)).collect();
         let mut weights = Vec::with_capacity(meta.param_order.len());
         for name in &meta.param_order {
-            let lit = by_name
+            let e = by_name
                 .remove(name)
                 .ok_or_else(|| anyhow!("weights.npz missing param {name}"))?;
-            let shape = lit.array_shape()?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data: Vec<f32> = lit.to_vec()?;
-            weights.push((dims, data));
+            let data = e.data.to_f32();
+            weights.push((e.dims, data));
         }
         let mut hlo = BTreeMap::new();
         for (batch, seq) in meta.grid_cells() {
@@ -87,6 +66,25 @@ impl ModelArtifact {
         }
         Ok(ModelArtifact { meta: meta.clone(), weights, hlo })
     }
+
+    /// Parameters as (dims, data), in lowered order.
+    pub fn weights(&self) -> &[(Vec<usize>, Vec<f32>)] {
+        &self.weights
+    }
+
+    /// Parameter lookup by exported name (e.g. "layers/2/wq").
+    pub fn weight(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.meta
+            .param_order
+            .iter()
+            .position(|n| n == name)
+            .map(|i| (&self.weights[i].0[..], &self.weights[i].1[..]))
+    }
+
+    /// Validated (seq, batch) -> HLO text path map.
+    pub fn hlo(&self) -> &BTreeMap<(usize, usize), PathBuf> {
+        &self.hlo
+    }
 }
 
 /// Thread-safe store of host artifacts, shared by all workers: the weights
@@ -101,7 +99,7 @@ impl ArtifactStore {
         ArtifactStore::default()
     }
 
-    fn key(dataset: &str, variant: &str) -> String {
+    pub(crate) fn key(dataset: &str, variant: &str) -> String {
         format!("{dataset}/{variant}")
     }
 
@@ -135,244 +133,72 @@ impl ArtifactStore {
     }
 }
 
-/// A loaded model variant on one worker: compiled executables (one per
-/// (batch, seq) cell) plus device-resident weights in lowered order.
-pub struct LoadedModel {
-    pub meta: VariantMeta,
-    /// Ascending (seq, batch) -> executable.
-    compiled: BTreeMap<(usize, usize), Compiled>,
-    weights: Vec<PjRtBuffer>,
-    client: Arc<PjRtClient>,
-}
-
-/// Output of one forward execution.
-#[derive(Debug, Clone)]
-pub struct Logits {
-    /// Row-major [batch, num_classes].
-    pub values: Vec<f32>,
-    pub batch: usize,
-    pub num_classes: usize,
-}
-
-impl Logits {
-    pub fn row(&self, i: usize) -> &[f32] {
-        &self.values[i * self.num_classes..(i + 1) * self.num_classes]
-    }
-
-    pub fn argmax(&self, i: usize) -> usize {
-        let r = self.row(i);
-        // total_cmp: NaN logits (a poisoned model is a serving reality)
-        // must not panic the executor; NaN sorts below every real value.
-        r.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(j, _)| j)
-            .unwrap_or(0)
-    }
-}
-
-impl LoadedModel {
-    /// Largest compiled batch size across all seq buckets.
-    pub fn max_batch(&self) -> usize {
-        self.compiled.keys().map(|&(_, b)| b).max().unwrap_or(1)
-    }
-
-    /// Ascending (seq, batch) cells as (batch, seq) pairs.
-    pub fn cells(&self) -> Vec<(usize, usize)> {
-        self.compiled.keys().map(|&(s, b)| (b, s)).collect()
-    }
-
-    /// Smallest compiled (batch, seq) cell that fits `n` rows of `seq`
-    /// tokens; `None` when `n` exceeds every compiled batch bucket.
-    pub fn cell_for(&self, n: usize, seq: usize) -> Option<(usize, usize)> {
-        let cells: Vec<(usize, usize)> = self.compiled.keys().copied().collect();
-        pick_cell(&cells, n, seq)
-    }
-
-    /// Smallest compiled batch bucket that fits `n` rows at the full
-    /// sequence length (`None` when `n` is too large for every bucket).
-    pub fn bucket_for(&self, n: usize) -> Option<usize> {
-        self.cell_for(n, self.meta.seq_len).map(|(b, _)| b)
-    }
-
-    /// Distinct compiled batch sizes, ascending.
-    pub fn batch_sizes(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.compiled.keys().map(|&(_, b)| b).collect();
-        v.sort_unstable();
-        v.dedup();
-        v
-    }
-
-    /// Distinct compiled seq buckets, ascending.
-    pub fn seq_buckets(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.compiled.keys().map(|&(s, _)| s).collect();
-        v.sort_unstable();
-        v.dedup();
-        v
-    }
-
-    /// Run a forward pass over rows of the full sequence length (the seed's
-    /// original entry point — byte-identical on single-seq bundles).
-    pub fn infer(&self, tokens: &[i32], segments: &[i32], n: usize) -> Result<Logits> {
-        self.infer_at(tokens, segments, n, self.meta.seq_len)
-    }
-
-    /// Run a forward pass. `tokens`/`segments` are row-major [n, seq]; the
-    /// smallest compiled (batch, seq) cell that fits is chosen, rows are
-    /// padded to its batch bucket and columns to its seq bucket. Errors
-    /// (rather than silently truncating) when `n` exceeds every compiled
-    /// batch bucket or `seq` every compiled seq bucket.
-    pub fn infer_at(&self, tokens: &[i32], segments: &[i32], n: usize, seq: usize) -> Result<Logits> {
-        if n == 0 {
-            bail!("infer: empty batch");
-        }
-        if tokens.len() != n * seq || segments.len() != n * seq {
-            bail!("infer: expected {}x{} tokens, got {}", n, seq, tokens.len());
-        }
-        let (bucket, seq_bucket) = self.cell_for(n, seq).ok_or_else(|| {
-            anyhow!(
-                "infer: batch of {n} rows at seq {seq} fits no compiled cell of {}/{} \
-                 (max batch {}, seq buckets {:?}) — split the batch upstream",
-                self.meta.dataset,
-                self.meta.variant,
-                self.max_batch(),
-                self.seq_buckets(),
-            )
-        })?;
-        let c = self
-            .compiled
-            .get(&(seq_bucket, bucket))
-            .ok_or_else(|| anyhow!("no compiled cell (b{bucket}, s{seq_bucket})"))?;
-
-        // Pad rows to the batch bucket and columns to the seq bucket. NOTE:
-        // inputs go through buffer_from_host_buffer (synchronous copy,
-        // kImmutableOnlyDuringCall) — buffer_from_host_literal is an async
-        // copy that may outlive the source Literal and segfault.
-        let dims = [bucket, seq_bucket];
-        let (tok_buf, seg_buf) = if n == bucket && seq == seq_bucket {
-            (
-                self.client.buffer_from_host_buffer(tokens, &dims, None)?,
-                self.client.buffer_from_host_buffer(segments, &dims, None)?,
-            )
-        } else {
-            let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
-            (
-                self.client.buffer_from_host_buffer(&t, &dims, None)?,
-                self.client.buffer_from_host_buffer(&s, &dims, None)?,
-            )
-        };
-
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(2 + self.weights.len());
-        args.push(&tok_buf);
-        args.push(&seg_buf);
-        args.extend(self.weights.iter());
-
-        let result = c.exe.execute_b(&args)?;
-        let out = result[0][0].to_literal_sync()?;
-        let mut tuple = out.to_tuple()?;
-        let logits_lit = tuple
-            .drain(..1)
-            .next()
-            .ok_or_else(|| anyhow!("empty result tuple"))?;
-        let all: Vec<f32> = logits_lit.to_vec()?;
-        let num_classes = all.len() / bucket;
-        Ok(Logits {
-            values: all[..n * num_classes].to_vec(),
-            batch: n,
-            num_classes,
-        })
-    }
-
-    /// Debug variants: returns (logits, kept positions [n, L, N] as i32).
-    /// Debug bundles are compiled at the full sequence length only.
-    pub fn infer_with_trace(&self, tokens: &[i32], segments: &[i32], n: usize)
-        -> Result<(Logits, Vec<i32>)> {
-        let seq = self.meta.seq_len;
-        if tokens.len() != n * seq || segments.len() != n * seq {
-            bail!("infer_with_trace: expected {}x{} tokens, got {}", n, seq, tokens.len());
-        }
-        let (bucket, seq_bucket) = self.cell_for(n, seq).ok_or_else(|| {
-            anyhow!(
-                "infer_with_trace: batch of {n} rows exceeds the largest compiled bucket {}",
-                self.max_batch()
-            )
-        })?;
-        let c = self
-            .compiled
-            .get(&(seq_bucket, bucket))
-            .ok_or_else(|| anyhow!("no compiled cell (b{bucket}, s{seq_bucket})"))?;
-        let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
-        let dims = [bucket, seq_bucket];
-        let tok_buf = self.client.buffer_from_host_buffer(&t, &dims, None)?;
-        let seg_buf = self.client.buffer_from_host_buffer(&s, &dims, None)?;
-        let mut args: Vec<&PjRtBuffer> = vec![&tok_buf, &seg_buf];
-        args.extend(self.weights.iter());
-        let result = c.exe.execute_b(&args)?;
-        let out = result[0][0].to_literal_sync()?;
-        let tuple = out.to_tuple()?;
-        if tuple.len() != 2 {
-            bail!("debug artifact must return (logits, kept), got {}-tuple", tuple.len());
-        }
-        let logits: Vec<f32> = tuple[0].to_vec()?;
-        let kept: Vec<i32> = tuple[1].to_vec()?;
-        let num_classes = logits.len() / bucket;
-        Ok((
-            Logits { values: logits[..n * num_classes].to_vec(), batch: n, num_classes },
-            kept,
-        ))
-    }
-}
-
-/// Pad `n` rows of `seq` tokens/segments out to a [bucket, seq_bucket]
-/// rectangle: PAD tokens on the right of each row, PAD rows at the bottom.
-fn pad_rows(
-    tokens: &[i32],
-    segments: &[i32],
-    n: usize,
-    seq: usize,
-    bucket: usize,
-    seq_bucket: usize,
-) -> (Vec<i32>, Vec<i32>) {
-    let mut t = vec![PAD_ID; bucket * seq_bucket];
-    let mut s = vec![0i32; bucket * seq_bucket];
-    for i in 0..n {
-        t[i * seq_bucket..i * seq_bucket + seq].copy_from_slice(&tokens[i * seq..(i + 1) * seq]);
-        s[i * seq_bucket..i * seq_bucket + seq].copy_from_slice(&segments[i * seq..(i + 1) * seq]);
-    }
-    (t, s)
-}
-
-/// One worker of the execution pool: owns a PJRT client plus the device
-/// state (compiled cells, weight buffers) for every variant it has served.
-/// Not `Send` — it lives and dies on its executor thread; host artifacts
-/// come from the shared [`ArtifactStore`].
+/// One worker of the execution pool: resolves the configured backend into
+/// loaded models and keeps them warm for every variant it has served.
+/// Not `Send` — it lives and dies on its executor thread (PJRT state is
+/// thread-pinned); host artifacts come from the shared [`ArtifactStore`].
 pub struct EngineWorker {
     id: usize,
-    client: Arc<PjRtClient>,
+    kind: BackendKind,
+    /// `None` when the selection is native-only, or `auto` could not
+    /// create a PJRT client at all.
+    pjrt: Option<PjrtBackend>,
+    native: NativeBackend,
     store: Arc<ArtifactStore>,
     models: HashMap<String, Arc<LoadedModel>>,
 }
 
 impl EngineWorker {
+    /// Worker on the session-default backend (`$POWERBERT_BACKEND` or auto).
     pub fn new(id: usize, store: Arc<ArtifactStore>) -> Result<EngineWorker> {
-        let client = Arc::new(PjRtClient::cpu().context("create PJRT CPU client")?);
-        Ok(EngineWorker { id, client, store, models: HashMap::new() })
+        EngineWorker::with_backend(id, store, BackendKind::from_env())
+    }
+
+    pub fn with_backend(
+        id: usize,
+        store: Arc<ArtifactStore>,
+        kind: BackendKind,
+    ) -> Result<EngineWorker> {
+        let pjrt = match kind {
+            BackendKind::Native => None,
+            BackendKind::Pjrt => Some(PjrtBackend::new()?),
+            BackendKind::Auto => match PjrtBackend::new() {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    crate::warnln!(
+                        "engine",
+                        "worker {id}: no PJRT client ({e:#}); native backend only"
+                    );
+                    None
+                }
+            },
+        };
+        Ok(EngineWorker {
+            id,
+            kind,
+            pjrt,
+            native: NativeBackend::new(),
+            store,
+            models: HashMap::new(),
+        })
     }
 
     pub fn id(&self) -> usize {
         self.id
     }
 
-    pub fn client(&self) -> &Arc<PjRtClient> {
-        &self.client
+    /// The configured backend selection (not necessarily what `auto`
+    /// resolved to — see [`LoadedModel::backend_name`] for the outcome).
+    pub fn backend(&self) -> BackendKind {
+        self.kind
     }
 
     pub fn store(&self) -> &Arc<ArtifactStore> {
         &self.store
     }
 
-    /// Compile every (batch, seq) cell of a variant on this worker and
-    /// upload its weights to this worker's device.
+    /// Load a variant on this worker's backend: compile + upload (pjrt) or
+    /// bind the weights into the pure-Rust forward pass (native).
     pub fn load(&mut self, meta: &VariantMeta) -> Result<Arc<LoadedModel>> {
         let key = ArtifactStore::key(&meta.dataset, &meta.variant);
         if let Some(m) = self.models.get(&key) {
@@ -380,40 +206,47 @@ impl EngineWorker {
         }
         let art = self.store.fetch(meta)?;
         let t0 = std::time::Instant::now();
-        // Synchronous host->device copy (see note in `infer_at`): raw f32
-        // data + dims instead of the async literal path.
-        let mut weights = Vec::with_capacity(art.weights.len());
-        for (dims, data) in &art.weights {
-            weights.push(self.client.buffer_from_host_buffer(data, dims, None)?);
-        }
-        let mut compiled = BTreeMap::new();
-        for (&(seq, batch), path) in &art.hlo {
-            let exe = self.compile_hlo(path)?;
-            compiled.insert((seq, batch), Compiled { exe });
-        }
-        let model = Arc::new(LoadedModel {
-            meta: art.meta.clone(),
-            compiled,
-            weights,
-            client: self.client.clone(),
-        });
+        let model = match self.kind {
+            BackendKind::Native => self.native.load(&art)?,
+            BackendKind::Pjrt => {
+                let backend = self
+                    .pjrt
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("worker {} has no PJRT client", self.id))?;
+                backend.load(&art)?
+            }
+            BackendKind::Auto => {
+                // Per-variant fallback: one variant's broken HLO must not
+                // latch PJRT off for variants that would compile fine (the
+                // stub fails instantly anyway, so retrying is cheap).
+                let via_pjrt = self.pjrt.as_ref().map(|backend| backend.load(&art));
+                match via_pjrt {
+                    Some(Ok(m)) => m,
+                    Some(Err(e)) => {
+                        crate::info!(
+                            "engine",
+                            "worker {}: PJRT unavailable for {key} ({e:#}); \
+                             falling back to the native backend",
+                            self.id
+                        );
+                        self.native.load(&art)?
+                    }
+                    None => self.native.load(&art)?,
+                }
+            }
+        };
+        let model = Arc::new(model);
         crate::info!(
             "engine",
-            "worker {} loaded {key} ({} params, {} cells) in {:.2}s",
+            "worker {} loaded {key} on {} ({} params, {} cells) in {:.2}s",
             self.id,
-            model.weights.len(),
-            model.compiled.len(),
+            model.backend_name(),
+            art.weights.len(),
+            model.cells().len(),
             t0.elapsed().as_secs_f64()
         );
         self.models.insert(key, model.clone());
         Ok(model)
-    }
-
-    fn compile_hlo(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
     }
 
     pub fn get(&self, dataset: &str, variant: &str) -> Option<Arc<LoadedModel>> {
@@ -435,21 +268,26 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Engine on the session-default backend (`$POWERBERT_BACKEND` or auto).
     pub fn new() -> Result<Engine> {
-        let store = Arc::new(ArtifactStore::new());
-        let worker = EngineWorker::new(0, store.clone())?;
-        Ok(Engine { store, worker })
+        Engine::with_backend(BackendKind::from_env())
     }
 
-    pub fn client(&self) -> &Arc<PjRtClient> {
-        self.worker.client()
+    pub fn with_backend(kind: BackendKind) -> Result<Engine> {
+        let store = Arc::new(ArtifactStore::new());
+        let worker = EngineWorker::with_backend(0, store.clone(), kind)?;
+        Ok(Engine { store, worker })
     }
 
     pub fn store(&self) -> &Arc<ArtifactStore> {
         &self.store
     }
 
-    /// Compile all (batch, seq) cells of a variant and upload its weights.
+    pub fn backend(&self) -> BackendKind {
+        self.worker.backend()
+    }
+
+    /// Load a variant on the configured backend.
     pub fn load(&mut self, meta: &VariantMeta) -> Result<Arc<LoadedModel>> {
         self.worker.load(meta)
     }
@@ -474,21 +312,22 @@ pub struct TestSplit {
 
 impl TestSplit {
     pub fn load(path: &Path) -> Result<TestSplit> {
-        let named = Literal::read_npz(path, &())
-            .with_context(|| format!("read {}", path.display()))?;
+        let entries = npz::read_npz(path)?;
         let mut tokens = None;
         let mut segments = None;
         let mut labels = None;
         let mut shape = (0usize, 0usize);
-        for (name, lit) in named {
-            match name.as_str() {
+        for e in entries {
+            match e.name.as_str() {
                 "tokens" => {
-                    let s = lit.array_shape()?;
-                    shape = (s.dims()[0] as usize, s.dims()[1] as usize);
-                    tokens = Some(lit.to_vec::<i32>()?);
+                    if e.dims.len() != 2 {
+                        bail!("test.npz tokens: shape {:?}, expected rank 2", e.dims);
+                    }
+                    shape = (e.dims[0], e.dims[1]);
+                    tokens = Some(e.data.to_i32());
                 }
-                "segs" => segments = Some(lit.to_vec::<i32>()?),
-                "labels" => labels = Some(lit.to_vec::<f32>()?),
+                "segs" => segments = Some(e.data.to_i32()),
+                "labels" => labels = Some(e.data.to_f32()),
                 _ => {}
             }
         }
@@ -504,52 +343,5 @@ impl TestSplit {
     pub fn row(&self, i: usize) -> (&[i32], &[i32]) {
         let s = self.seq_len;
         (&self.tokens[i * s..(i + 1) * s], &self.segments[i * s..(i + 1) * s])
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_ignores_nan() {
-        // Row 0 has a NaN — must not panic, and the NaN must never win.
-        let l = Logits {
-            values: vec![f32::NAN, 0.2, 0.9, 0.7, 0.1, 0.3],
-            batch: 2,
-            num_classes: 3,
-        };
-        assert_eq!(l.argmax(0), 2);
-        assert_eq!(l.argmax(1), 0);
-        // An all-NaN row settles on a valid index rather than panicking.
-        let all_nan = Logits { values: vec![f32::NAN; 3], batch: 1, num_classes: 3 };
-        assert!(all_nan.argmax(0) < 3);
-    }
-
-    #[test]
-    fn pick_cell_prefers_narrow_seq_then_small_batch() {
-        // Grid: seq 16 with batches {1, 8}, seq 64 with batches {1, 8, 32}.
-        let cells = vec![(16, 1), (16, 8), (64, 1), (64, 8), (64, 32)];
-        assert_eq!(pick_cell(&cells, 1, 10), Some((1, 16)));
-        assert_eq!(pick_cell(&cells, 5, 16), Some((8, 16)));
-        // Batch 20 fits no seq-16 bucket -> falls through to the 64 row.
-        assert_eq!(pick_cell(&cells, 20, 10), Some((32, 64)));
-        assert_eq!(pick_cell(&cells, 8, 40), Some((8, 64)));
-        // Oversize in either dimension: no cell.
-        assert_eq!(pick_cell(&cells, 33, 10), None);
-        assert_eq!(pick_cell(&cells, 1, 100), None);
-    }
-
-    #[test]
-    fn pad_rows_pads_columns_and_rows() {
-        let tokens = vec![2, 5, 3, 2, 6, 3];
-        let segs = vec![0, 0, 0, 0, 1, 1];
-        let (t, s) = pad_rows(&tokens, &segs, 2, 3, 4, 5);
-        assert_eq!(t.len(), 20);
-        assert_eq!(&t[0..5], &[2, 5, 3, PAD_ID, PAD_ID]);
-        assert_eq!(&t[5..10], &[2, 6, 3, PAD_ID, PAD_ID]);
-        assert!(t[10..].iter().all(|&x| x == PAD_ID));
-        assert_eq!(&s[5..10], &[0, 1, 1, 0, 0]);
-        assert!(s[10..].iter().all(|&x| x == 0));
     }
 }

@@ -1,14 +1,23 @@
-//! Runtime layer: PJRT client wrapper, artifact registry, model loading and
-//! batched execution. Python is never on this path — the Rust binary is
-//! self-contained once `make artifacts` has produced the AOT bundle.
+//! Runtime layer: artifact registry, pluggable inference backends, model
+//! loading and batched execution. Python is never on this path — the Rust
+//! binary is self-contained once `make artifacts` has produced the AOT
+//! bundle, and with the `native` backend it needs no XLA runtime either.
 //!
 //! Execution is split into a shared, `Send` [`ArtifactStore`] (parsed
-//! manifests + host weights) and per-thread [`EngineWorker`]s that own the
-//! non-`Send` PJRT state — the coordinator runs one worker per executor
-//! thread against the one store. [`Engine`] is the single-worker facade.
+//! manifests + host weights) and per-thread [`EngineWorker`]s that resolve
+//! a [`BackendKind`] — `pjrt` (compiled HLO on an XLA device, non-`Send`),
+//! `native` (pure-Rust PoWER-BERT forward pass with progressive word-vector
+//! elimination) or `auto` (PJRT with native fallback). [`Engine`] is the
+//! single-worker facade.
 
 pub mod artifact;
+pub mod backend;
 pub mod engine;
+pub mod native;
+pub mod pjrt;
 
 pub use artifact::{default_root, DatasetArtifacts, Registry, VariantMeta};
-pub use engine::{ArtifactStore, Engine, EngineWorker, LoadedModel, Logits, TestSplit};
+pub use backend::{BackendKind, CellExecutor, CellPlan, ExecOutput, LoadedModel, Logits};
+pub use engine::{ArtifactStore, Engine, EngineWorker, ModelArtifact, TestSplit};
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;

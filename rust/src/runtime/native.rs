@@ -1,0 +1,592 @@
+//! Native backend: the PoWER-BERT forward pass in pure Rust.
+//!
+//! Mirrors `python/compile/model.py` / `layers.py` / `kernels/ref.py`
+//! operation-for-operation (pre-LN encoder halves, tanh-approximate GELU,
+//! attention-column significance, stable top-k extraction between the
+//! attention and FFN halves — paper §3.2, Figure 4), reading the exported
+//! `weights.npz` directly. Golden-logit fixtures exported by
+//! `python -m compile.golden` pin the parity to within 1e-4.
+//!
+//! The paper's mechanism is implemented literally:
+//! * significance of word-vector `w` at encoder `j` is the attention mass
+//!   flowing *into* it — the column sum of the softmax matrix over heads
+//!   and non-PAD query rows (§3.2);
+//! * between the attention module and the FFN, only the `retention[j]`
+//!   highest-scored positions survive, CLS pinned on top and PAD below any
+//!   real word, original order preserved (§3.4);
+//! * a retention entry at or above the current width skips elimination
+//!   (short seq buckets execute without it, as in the AOT grid).
+//!
+//! Execution shapes are exact — a (batch, seq) request runs as-is, so the
+//! native path never re-introduces padding word-vectors at the batch
+//! boundary, and every eliminated vector is compute actually saved.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::backend::{CellExecutor, CellPlan, ExecOutput, LoadedModel};
+use super::engine::ModelArtifact;
+use crate::tokenizer::PAD_ID;
+
+/// Largest batch the native executor accepts in one call. Generous — the
+/// loop is O(batch) with no compiled-shape constraint — but finite, so the
+/// serving layer keeps splitting absurd batches instead of wedging one
+/// worker on a megabatch.
+pub const NATIVE_MAX_BATCH: usize = 64;
+
+/// Score pin for CLS (never eliminated, paper §3.4) — matches model.py BIG.
+const BIG: f32 = 1e6;
+/// Additive mask for PAD key columns, matching kernels/ref.py.
+const NEG_INF: f32 = -1e9;
+const LN_EPS: f32 = 1e-6;
+
+/// The native backend: stateless — per-variant state lives in the
+/// [`NativeModel`] it loads.
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+
+    /// Build a ready-to-execute model from the host artifact.
+    pub fn load(&self, art: &ModelArtifact) -> Result<LoadedModel> {
+        let model = NativeModel::from_artifact(art)
+            .with_context(|| format!("native load {}/{}", art.meta.dataset, art.meta.variant))?;
+        Ok(LoadedModel::new(
+            art.meta.clone(),
+            "native",
+            CellPlan::Exact { max_batch: NATIVE_MAX_BATCH, max_seq: art.meta.seq_len },
+            Box::new(model),
+        ))
+    }
+}
+
+/// One encoder layer's weights, all row-major.
+struct LayerWeights {
+    wq: Vec<f32>,
+    bq: Vec<f32>,
+    wk: Vec<f32>,
+    bk: Vec<f32>,
+    wv: Vec<f32>,
+    bv: Vec<f32>,
+    wo: Vec<f32>,
+    bo: Vec<f32>,
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    ffn_size: usize,
+}
+
+/// A variant's weights in forward-pass form plus its processed-token
+/// telemetry.
+pub struct NativeModel {
+    hidden: usize,
+    heads: usize,
+    num_classes: usize,
+    vocab: usize,
+    type_vocab: usize,
+    max_pos: usize,
+    retention: Option<Vec<usize>>,
+    word: Vec<f32>,
+    word_proj: Option<(usize, Vec<f32>)>, // (embed_factor, [E, H])
+    pos: Vec<f32>,
+    type_: Vec<f32>,
+    embed_ln_g: Vec<f32>,
+    embed_ln_b: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    final_g: Vec<f32>,
+    final_b: Vec<f32>,
+    pooler_w: Vec<f32>,
+    pooler_b: Vec<f32>,
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+    /// Word-vectors processed per encoder (FFN width after extraction),
+    /// accumulated across every executed row.
+    layer_tokens: Vec<AtomicU64>,
+}
+
+impl NativeModel {
+    fn from_artifact(art: &ModelArtifact) -> Result<NativeModel> {
+        let meta = &art.meta;
+        let hidden = meta.hidden_size;
+        let heads = meta.num_heads;
+        if hidden == 0 || heads == 0 {
+            bail!(
+                "meta.json lacks hidden_size/num_heads (re-export with a current \
+                 python/compile; got hidden_size={hidden}, num_heads={heads})"
+            );
+        }
+        if hidden % heads != 0 {
+            bail!("hidden_size {hidden} not divisible by num_heads {heads}");
+        }
+        let w = |name: &str| -> Result<(Vec<usize>, Vec<f32>)> {
+            let (dims, data) = art
+                .weight(name)
+                .ok_or_else(|| anyhow!("weights.npz missing {name}"))?;
+            Ok((dims.to_vec(), data.to_vec()))
+        };
+        let expect = |name: &str, dims: &[usize], want: &[usize]| -> Result<()> {
+            if dims != want {
+                bail!("{name}: shape {dims:?}, expected {want:?}");
+            }
+            Ok(())
+        };
+
+        let (word_dims, word) = w("embed/word")?;
+        if word_dims.len() != 2 {
+            bail!("embed/word: shape {word_dims:?}, expected rank 2");
+        }
+        let (vocab, embed_width) = (word_dims[0], word_dims[1]);
+        let word_proj = match art.weight("embed/word_proj") {
+            Some((dims, data)) => {
+                expect("embed/word_proj", dims, &[embed_width, hidden])?;
+                Some((embed_width, data.to_vec()))
+            }
+            None => {
+                expect("embed/word", &word_dims, &[vocab, hidden])?;
+                None
+            }
+        };
+        let (pos_dims, pos) = w("embed/pos")?;
+        if pos_dims.len() != 2 || pos_dims[1] != hidden {
+            bail!("embed/pos: shape {pos_dims:?}, expected [max_len, {hidden}]");
+        }
+        let max_pos = pos_dims[0];
+        if meta.seq_len > max_pos {
+            bail!("seq_len {} exceeds position table {max_pos}", meta.seq_len);
+        }
+        let (type_dims, type_) = w("embed/type")?;
+        if type_dims.len() != 2 || type_dims[1] != hidden {
+            bail!("embed/type: shape {type_dims:?}, expected [type_vocab, {hidden}]");
+        }
+        let type_vocab = type_dims[0];
+        let (g_dims, embed_ln_g) = w("embed/ln_g")?;
+        expect("embed/ln_g", &g_dims, &[hidden])?;
+        let (b_dims, embed_ln_b) = w("embed/ln_b")?;
+        expect("embed/ln_b", &b_dims, &[hidden])?;
+
+        let mut layers = Vec::with_capacity(meta.num_layers);
+        for j in 0..meta.num_layers {
+            // ALBERT-style shared parameters export only layers/0.
+            let jj = if art.weight(&format!("layers/{j}/wq")).is_some() { j } else { 0 };
+            let lw = |suffix: &str, want: &[usize]| -> Result<Vec<f32>> {
+                let name = format!("layers/{jj}/{suffix}");
+                let (dims, data) = w(&name)?;
+                expect(&name, &dims, want)?;
+                Ok(data)
+            };
+            let (w1_dims, w1) = w(&format!("layers/{jj}/w1"))?;
+            if w1_dims.len() != 2 || w1_dims[0] != hidden {
+                bail!("layers/{jj}/w1: shape {w1_dims:?}, expected [{hidden}, ffn]");
+            }
+            let ffn_size = w1_dims[1];
+            layers.push(LayerWeights {
+                wq: lw("wq", &[hidden, hidden])?,
+                bq: lw("bq", &[hidden])?,
+                wk: lw("wk", &[hidden, hidden])?,
+                bk: lw("bk", &[hidden])?,
+                wv: lw("wv", &[hidden, hidden])?,
+                bv: lw("bv", &[hidden])?,
+                wo: lw("wo", &[hidden, hidden])?,
+                bo: lw("bo", &[hidden])?,
+                ln1_g: lw("ln1_g", &[hidden])?,
+                ln1_b: lw("ln1_b", &[hidden])?,
+                w1,
+                b1: lw("b1", &[ffn_size])?,
+                w2: lw("w2", &[ffn_size, hidden])?,
+                b2: lw("b2", &[hidden])?,
+                ln2_g: lw("ln2_g", &[hidden])?,
+                ln2_b: lw("ln2_b", &[hidden])?,
+                ffn_size,
+            });
+        }
+        if layers.is_empty() {
+            bail!("meta.json declares no encoder layers");
+        }
+
+        let (fg_dims, final_g) = w("final_ln/g")?;
+        expect("final_ln/g", &fg_dims, &[hidden])?;
+        let (fb_dims, final_b) = w("final_ln/b")?;
+        expect("final_ln/b", &fb_dims, &[hidden])?;
+        let (pw_dims, pooler_w) = w("pooler/w")?;
+        expect("pooler/w", &pw_dims, &[hidden, hidden])?;
+        let (pb_dims, pooler_b) = w("pooler/b")?;
+        expect("pooler/b", &pb_dims, &[hidden])?;
+        let (hw_dims, head_w) = w("head/w")?;
+        if hw_dims.len() != 2 || hw_dims[0] != hidden {
+            bail!("head/w: shape {hw_dims:?}, expected [{hidden}, classes]");
+        }
+        let num_classes = hw_dims[1];
+        let (hb_dims, head_b) = w("head/b")?;
+        expect("head/b", &hb_dims, &[num_classes])?;
+
+        let n_layers = layers.len();
+        Ok(NativeModel {
+            hidden,
+            heads,
+            num_classes,
+            vocab,
+            type_vocab,
+            max_pos,
+            retention: meta.retention.clone(),
+            word,
+            word_proj,
+            pos,
+            type_,
+            embed_ln_g,
+            embed_ln_b,
+            layers,
+            final_g,
+            final_b,
+            pooler_w,
+            pooler_b,
+            head_w,
+            head_b,
+            layer_tokens: (0..n_layers).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    /// Forward one example of `seq` tokens. Returns the logits and, when
+    /// `want_trace`, the per-layer surviving original positions
+    /// ([L, seq], -1-padded).
+    fn forward_one(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        seq: usize,
+        want_trace: bool,
+    ) -> Result<(Vec<f32>, Option<Vec<i32>>)> {
+        let h = self.hidden;
+        let heads = self.heads;
+        let d = h / heads;
+        let n_layers = self.layers.len();
+        if seq > self.max_pos {
+            bail!("seq {seq} exceeds position table {}", self.max_pos);
+        }
+
+        // Valid-position mask: 1.0 for real tokens, 0.0 for PAD.
+        let mut mask: Vec<f32> = tokens
+            .iter()
+            .map(|&t| if t == PAD_ID { 0.0 } else { 1.0 })
+            .collect();
+
+        // Embedding lookup + LN.
+        let mut x = vec![0f32; seq * h];
+        for i in 0..seq {
+            let tok = tokens[i];
+            if tok < 0 || tok as usize >= self.vocab {
+                bail!("token id {tok} outside vocab of {}", self.vocab);
+            }
+            let seg = segments[i];
+            if seg < 0 || seg as usize >= self.type_vocab {
+                bail!("segment id {seg} outside type vocab of {}", self.type_vocab);
+            }
+            let row = &mut x[i * h..(i + 1) * h];
+            match &self.word_proj {
+                None => {
+                    let wrow = &self.word[tok as usize * h..(tok as usize + 1) * h];
+                    row.copy_from_slice(wrow);
+                }
+                Some((e, proj)) => {
+                    // Factorized embedding: word[tok] (E) @ proj (E x H).
+                    let wrow = &self.word[tok as usize * e..(tok as usize + 1) * e];
+                    for (k, &wv) in wrow.iter().enumerate() {
+                        let prow = &proj[k * h..(k + 1) * h];
+                        for (c, &pv) in prow.iter().enumerate() {
+                            row[c] += wv * pv;
+                        }
+                    }
+                }
+            }
+            let prow = &self.pos[i * h..(i + 1) * h];
+            let trow = &self.type_[seg as usize * h..(seg as usize + 1) * h];
+            for c in 0..h {
+                row[c] += prow[c] + trow[c];
+            }
+        }
+        layer_norm(&mut x, h, &self.embed_ln_g, &self.embed_ln_b);
+
+        // Original positions of surviving word-vectors (Figure 8 trace).
+        let mut positions: Vec<i32> = (0..seq as i32).collect();
+        let mut trace = want_trace.then(|| vec![-1i32; n_layers * seq]);
+
+        for (j, layer) in self.layers.iter().enumerate() {
+            let n = x.len() / h;
+            // --- attention half: x1 = x + proj(MHA(LN(x))), plus scores.
+            let mut hx = x.clone();
+            layer_norm(&mut hx, h, &layer.ln1_g, &layer.ln1_b);
+            let q = matmul_bias(&hx, n, h, &layer.wq, h, &layer.bq);
+            let k = matmul_bias(&hx, n, h, &layer.wk, h, &layer.bk);
+            let v = matmul_bias(&hx, n, h, &layer.wv, h, &layer.bv);
+
+            let scale = 1.0 / (d as f32).sqrt();
+            let mut sig = vec![0f32; n];
+            let mut ctx = vec![0f32; n * h];
+            let mut probs = vec![0f32; n];
+            for a in 0..heads {
+                let off = a * d;
+                for i in 0..n {
+                    let qi = &q[i * h + off..i * h + off + d];
+                    // Scaled dot-product logits with PAD keys masked out.
+                    let mut maxv = f32::NEG_INFINITY;
+                    for jj in 0..n {
+                        let kj = &k[jj * h + off..jj * h + off + d];
+                        let mut dot = 0f32;
+                        for t in 0..d {
+                            dot += qi[t] * kj[t];
+                        }
+                        let logit = if mask[jj] > 0.0 { dot * scale } else { NEG_INF };
+                        probs[jj] = logit;
+                        if logit > maxv {
+                            maxv = logit;
+                        }
+                    }
+                    let mut denom = 0f32;
+                    for p in probs.iter_mut() {
+                        *p = (*p - maxv).exp();
+                        denom += *p;
+                    }
+                    let inv = 1.0 / denom;
+                    let qmask = mask[i];
+                    let crow = &mut ctx[i * h + off..i * h + off + d];
+                    for jj in 0..n {
+                        let p = probs[jj] * inv;
+                        // Column sums over heads and non-PAD query rows:
+                        // the paper's significance score (§3.2).
+                        sig[jj] += qmask * p;
+                        let vj = &v[jj * h + off..jj * h + off + d];
+                        for t in 0..d {
+                            crow[t] += p * vj[t];
+                        }
+                    }
+                }
+            }
+            let proj = matmul_bias(&ctx, n, h, &layer.wo, h, &layer.bo);
+            let mut x1 = x;
+            for (xv, pv) in x1.iter_mut().zip(proj.iter()) {
+                *xv += pv;
+            }
+
+            // --- extract layer (between attention and FFN, §3.2/Fig 4).
+            if let Some(keep) = self.retention.as_ref().and_then(|r| r.get(j)).copied() {
+                // Guard a malformed manifest: at least CLS always survives
+                // (derive_retention clamps to >= 1 on the export side).
+                let keep = keep.max(1);
+                if keep < n {
+                    let idx = topk_keep_indices(&sig, &mask, keep);
+                    let mut nx = vec![0f32; keep * h];
+                    let mut nmask = vec![0f32; keep];
+                    let mut npos = vec![0i32; keep];
+                    for (slot, &src) in idx.iter().enumerate() {
+                        nx[slot * h..(slot + 1) * h]
+                            .copy_from_slice(&x1[src * h..(src + 1) * h]);
+                        nmask[slot] = mask[src];
+                        npos[slot] = positions[src];
+                    }
+                    x1 = nx;
+                    mask = nmask;
+                    positions = npos;
+                }
+            }
+            let n = x1.len() / h;
+            self.layer_tokens[j].fetch_add(n as u64, Ordering::Relaxed);
+            if let Some(tr) = trace.as_mut() {
+                tr[j * seq..j * seq + n].copy_from_slice(&positions);
+            }
+
+            // --- FFN half: x = x1 + FFN(LN(x1)).
+            let mut h2 = x1.clone();
+            layer_norm(&mut h2, h, &layer.ln2_g, &layer.ln2_b);
+            let mut a1 = matmul_bias(&h2, n, h, &layer.w1, layer.ffn_size, &layer.b1);
+            for vv in a1.iter_mut() {
+                *vv = gelu(*vv);
+            }
+            let a2 = matmul_bias(&a1, n, layer.ffn_size, &layer.w2, h, &layer.b2);
+            x = x1;
+            for (xv, av) in x.iter_mut().zip(a2.iter()) {
+                *xv += av;
+            }
+        }
+
+        // --- pooler + classifier head from the CLS vector.
+        layer_norm(&mut x, h, &self.final_g, &self.final_b);
+        let cls = &x[..h];
+        let mut pooled = vec![0f32; h];
+        for (c, p) in pooled.iter_mut().enumerate() {
+            let mut acc = self.pooler_b[c];
+            for (kk, &xv) in cls.iter().enumerate() {
+                acc += xv * self.pooler_w[kk * h + c];
+            }
+            *p = acc.tanh();
+        }
+        let mut logits = vec![0f32; self.num_classes];
+        for (c, l) in logits.iter_mut().enumerate() {
+            let mut acc = self.head_b[c];
+            for (kk, &pv) in pooled.iter().enumerate() {
+                acc += pv * self.head_w[kk * self.num_classes + c];
+            }
+            *l = acc;
+        }
+        Ok((logits, trace))
+    }
+}
+
+impl CellExecutor for NativeModel {
+    fn execute(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        batch: usize,
+        seq: usize,
+        want_trace: bool,
+    ) -> Result<ExecOutput> {
+        if tokens.len() != batch * seq || segments.len() != batch * seq {
+            bail!("native execute: expected {batch}x{seq} tokens, got {}", tokens.len());
+        }
+        let n_layers = self.layers.len();
+        let mut logits = Vec::with_capacity(batch * self.num_classes);
+        let mut kept = want_trace.then(|| Vec::with_capacity(batch * n_layers * seq));
+        for r in 0..batch {
+            let (row_logits, row_trace) = self.forward_one(
+                &tokens[r * seq..(r + 1) * seq],
+                &segments[r * seq..(r + 1) * seq],
+                seq,
+                want_trace,
+            )?;
+            logits.extend_from_slice(&row_logits);
+            if let (Some(acc), Some(tr)) = (kept.as_mut(), row_trace) {
+                acc.extend_from_slice(&tr);
+            }
+        }
+        Ok(ExecOutput { logits, num_classes: self.num_classes, kept })
+    }
+
+    fn layer_tokens(&self) -> Option<Vec<u64>> {
+        Some(
+            self.layer_tokens
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+        )
+    }
+}
+
+/// Indices of the `keep` highest-scored positions in original (ascending)
+/// order. Scores: significance for real words, -1.0 for PAD (below any
+/// real column sum, which is >= 0), CLS pinned to the top. The sort is
+/// stable, so ties (e.g. between PAD columns) resolve to the lowest
+/// original index — matching jnp.argsort in model.py exactly, which the
+/// golden-logit parity fixtures depend on.
+fn topk_keep_indices(sig: &[f32], mask: &[f32], keep: usize) -> Vec<usize> {
+    let n = sig.len();
+    let mut scores: Vec<f32> = (0..n)
+        .map(|i| if mask[i] > 0.0 { sig[i] } else { -1.0 })
+        .collect();
+    scores[0] = BIG;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+    order.truncate(keep);
+    order.sort_unstable();
+    order
+}
+
+/// Row-wise LayerNorm over `h`-wide rows, in place.
+fn layer_norm(x: &mut [f32], h: usize, gamma: &[f32], beta: &[f32]) {
+    for row in x.chunks_exact_mut(h) {
+        let mut mean = 0f32;
+        for &v in row.iter() {
+            mean += v;
+        }
+        mean /= h as f32;
+        let mut var = 0f32;
+        for &v in row.iter() {
+            let dv = v - mean;
+            var += dv * dv;
+        }
+        var /= h as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (c, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gamma[c] + beta[c];
+        }
+    }
+}
+
+/// `x [n, k] @ w [k, m] + b [m]`, row-major.
+fn matmul_bias(x: &[f32], n: usize, k: usize, w: &[f32], m: usize, b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; n * m];
+    for i in 0..n {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        orow.copy_from_slice(b);
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * m..(kk + 1) * m];
+            for (c, &wv) in wrow.iter().enumerate() {
+                orow[c] += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Tanh-approximate GELU, matching `jax.nn.gelu(..., approximate=True)`.
+fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_pins_cls_and_sinks_pad() {
+        // 6 positions, PADs at 4/5; keep 3 -> CLS + the two best real.
+        let sig = vec![0.1, 2.0, 0.5, 1.5, 9.0, 9.0];
+        let mask = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        assert_eq!(topk_keep_indices(&sig, &mask, 3), vec![0, 1, 3]);
+        // Keep beyond the real count: PAD ties resolve to ascending index.
+        assert_eq!(topk_keep_indices(&sig, &mask, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn layer_norm_normalizes_rows() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        layer_norm(&mut x, 4, &g, &b);
+        for row in x.chunks_exact(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn matmul_bias_small_case() {
+        // [1,2;3,4] @ [1,0;0,1] + [10, 20]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![10.0, 20.0];
+        assert_eq!(matmul_bias(&x, 2, 2, &w, 2, &b), vec![11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-4);
+        assert!((gelu(3.0) - 2.995_9).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT backend: compiles the exported HLO text through an XLA PJRT client
+//! and keeps model weights resident as device buffers.
+//!
+//! This is the seed's execution path, now behind the [`CellExecutor`]
+//! abstraction. PJRT objects are not `Send`, so a backend instance (and
+//! every model it loads) is pinned to its worker thread; host artifacts
+//! come from the shared `ArtifactStore`. Weights are transferred to the
+//! device ONCE per worker at load, and every request then moves only the
+//! (tokens, segments) batch — the Rust analog of the paper's "model stays
+//! on the GPU" serving setup.
+//!
+//! With the vendored `xla` stub, compilation returns `Unavailable`; the
+//! `auto` backend selection catches that and falls back to the native
+//! backend instead.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::backend::{CellExecutor, CellPlan, ExecOutput, LoadedModel};
+use super::engine::ModelArtifact;
+
+/// A PJRT client wrapper that loads artifacts into compiled executables.
+pub struct PjrtBackend {
+    client: Arc<PjRtClient>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = Arc::new(PjRtClient::cpu().context("create PJRT CPU client")?);
+        Ok(PjrtBackend { client })
+    }
+
+    pub fn client(&self) -> &Arc<PjRtClient> {
+        &self.client
+    }
+
+    /// Compile every (batch, seq) cell of a variant on this worker's client
+    /// and upload its weights to the device.
+    pub fn load(&self, art: &ModelArtifact) -> Result<LoadedModel> {
+        // Synchronous host->device copy (see note in `execute`): raw f32
+        // data + dims instead of the async literal path.
+        let mut weights = Vec::new();
+        for (dims, data) in art.weights() {
+            weights.push(self.client.buffer_from_host_buffer(data, dims, None)?);
+        }
+        let mut compiled = BTreeMap::new();
+        for ((seq, batch), path) in art.hlo() {
+            let exe = self.compile_hlo(path)?;
+            compiled.insert((*seq, *batch), exe);
+        }
+        if compiled.is_empty() {
+            bail!(
+                "variant {}/{} has no HLO files",
+                art.meta.dataset,
+                art.meta.variant
+            );
+        }
+        let cells: Vec<(usize, usize)> = compiled.keys().copied().collect();
+        let exec = PjrtModel { client: self.client.clone(), compiled, weights };
+        Ok(LoadedModel::new(
+            art.meta.clone(),
+            "pjrt",
+            CellPlan::Grid(cells),
+            Box::new(exec),
+        ))
+    }
+
+    fn compile_hlo(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// One variant on one PJRT device: executables per (batch, seq) cell plus
+/// device-resident weights in lowered parameter order.
+struct PjrtModel {
+    client: Arc<PjRtClient>,
+    /// Ascending (seq, batch) -> executable.
+    compiled: BTreeMap<(usize, usize), PjRtLoadedExecutable>,
+    weights: Vec<PjRtBuffer>,
+}
+
+impl CellExecutor for PjrtModel {
+    fn execute(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        batch: usize,
+        seq: usize,
+        _want_trace: bool,
+    ) -> Result<ExecOutput> {
+        let exe = self
+            .compiled
+            .get(&(seq, batch))
+            .ok_or_else(|| anyhow!("no compiled cell (b{batch}, s{seq})"))?;
+        // NOTE: inputs go through buffer_from_host_buffer (synchronous
+        // copy, kImmutableOnlyDuringCall) — buffer_from_host_literal is an
+        // async copy that may outlive the source and segfault.
+        let dims = [batch, seq];
+        let tok_buf = self.client.buffer_from_host_buffer(tokens, &dims, None)?;
+        let seg_buf = self.client.buffer_from_host_buffer(segments, &dims, None)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(2 + self.weights.len());
+        args.push(&tok_buf);
+        args.push(&seg_buf);
+        args.extend(self.weights.iter());
+        let result = exe.execute_b(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let tuple = out.to_tuple()?;
+        if tuple.is_empty() {
+            bail!("empty result tuple");
+        }
+        let logits: Vec<f32> = tuple[0].to_vec()?;
+        // Debug bundles return (logits, kept_positions i32[B, L, N]).
+        let kept = if tuple.len() >= 2 {
+            Some(tuple[1].to_vec::<i32>()?)
+        } else {
+            None
+        };
+        if logits.is_empty() || logits.len() % batch != 0 {
+            bail!("logits of {} values for batch {batch}", logits.len());
+        }
+        Ok(ExecOutput { num_classes: logits.len() / batch, logits, kept })
+    }
+}

@@ -1,9 +1,10 @@
 //! From-scratch substrates: the offline vendor set ships only the `xla`
-//! crate's dependency closure, so JSON, CLI parsing, PRNG, statistics and
-//! logging are implemented here.
+//! crate's dependency closure, so JSON, CLI parsing, PRNG, statistics,
+//! logging and npz/npy IO are implemented here.
 
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod npz;
 pub mod prng;
 pub mod stats;

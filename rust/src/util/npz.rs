@@ -1,0 +1,388 @@
+//! Pure-Rust `.npz` / `.npy` reader — no zip or numpy crates in the offline
+//! vendor set, and (since the native backend) no XLA runtime either.
+//!
+//! Scope is exactly what `np.savez` (uncompressed) emits and the artifact
+//! contract needs: stored (method 0) zip members holding little-endian
+//! C-order `.npy` arrays of f32/f64/i32/i64. Deflated members and Fortran
+//! order are rejected with a clear error rather than mis-read. Zip64 size /
+//! offset extensions (numpy writes members with `force_zip64`) are handled.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element payload of one array, in file dtype.
+#[derive(Debug, Clone)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl NpyData {
+    pub fn len(&self) -> usize {
+        match self {
+            NpyData::F32(v) => v.len(),
+            NpyData::F64(v) => v.len(),
+            NpyData::I32(v) => v.len(),
+            NpyData::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lossy widening/narrowing view as f32 (weights are stored as f32;
+    /// this tolerates f64 exports).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            NpyData::F32(v) => v.clone(),
+            NpyData::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// View as i32 (token / segment / kept-position arrays).
+    pub fn to_i32(&self) -> Vec<i32> {
+        match self {
+            NpyData::F32(v) => v.iter().map(|&x| x as i32).collect(),
+            NpyData::F64(v) => v.iter().map(|&x| x as i32).collect(),
+            NpyData::I32(v) => v.clone(),
+            NpyData::I64(v) => v.iter().map(|&x| x as i32).collect(),
+        }
+    }
+}
+
+/// One named array out of an npz archive.
+#[derive(Debug, Clone)]
+pub struct NpzEntry {
+    /// Member name with the `.npy` suffix stripped (numpy's key).
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: NpyData,
+}
+
+fn rd_u16(b: &[u8], off: usize) -> Result<u16> {
+    let s = b
+        .get(off..off + 2)
+        .ok_or_else(|| anyhow!("npz: truncated at offset {off}"))?;
+    Ok(u16::from_le_bytes([s[0], s[1]]))
+}
+
+fn rd_u32(b: &[u8], off: usize) -> Result<u32> {
+    let s = b
+        .get(off..off + 4)
+        .ok_or_else(|| anyhow!("npz: truncated at offset {off}"))?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+fn rd_u64(b: &[u8], off: usize) -> Result<u64> {
+    let s = b
+        .get(off..off + 8)
+        .ok_or_else(|| anyhow!("npz: truncated at offset {off}"))?;
+    Ok(u64::from_le_bytes([
+        s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+    ]))
+}
+
+/// Last occurrence of `sig` in `b`, searching backwards.
+fn rfind_sig(b: &[u8], sig: [u8; 4]) -> Option<usize> {
+    if b.len() < 4 {
+        return None;
+    }
+    (0..=b.len() - 4).rev().find(|&i| b[i..i + 4] == sig)
+}
+
+/// Read every array of an uncompressed npz archive.
+pub fn read_npz(path: &Path) -> Result<Vec<NpzEntry>> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    parse_npz(&bytes).with_context(|| format!("parse {}", path.display()))
+}
+
+fn parse_npz(b: &[u8]) -> Result<Vec<NpzEntry>> {
+    // End-of-central-directory record -> central directory walk. The EOCD
+    // comment is empty for numpy archives, so the record sits at the tail;
+    // scanning backwards also tolerates a short trailing comment.
+    let eocd = rfind_sig(b, [0x50, 0x4b, 0x05, 0x06])
+        .ok_or_else(|| anyhow!("npz: no end-of-central-directory record (not a zip?)"))?;
+    let mut n_entries = rd_u16(b, eocd + 10)? as u64;
+    let mut cd_off = rd_u32(b, eocd + 16)? as u64;
+    if n_entries == 0xFFFF || cd_off == 0xFFFF_FFFF {
+        // Zip64: the EOCD64 record carries the real values.
+        let eocd64 = rfind_sig(b, [0x50, 0x4b, 0x06, 0x06])
+            .ok_or_else(|| anyhow!("npz: zip64 sizes but no EOCD64 record"))?;
+        n_entries = rd_u64(b, eocd64 + 32)?;
+        cd_off = rd_u64(b, eocd64 + 48)?;
+    }
+
+    let mut entries = Vec::with_capacity(n_entries as usize);
+    let mut pos = cd_off as usize;
+    for _ in 0..n_entries {
+        if rd_u32(b, pos)? != 0x0201_4b50 {
+            bail!("npz: bad central-directory signature at {pos}");
+        }
+        let method = rd_u16(b, pos + 10)?;
+        let mut usize_ = rd_u32(b, pos + 24)? as u64;
+        let name_len = rd_u16(b, pos + 28)? as usize;
+        let extra_len = rd_u16(b, pos + 30)? as usize;
+        let comment_len = rd_u16(b, pos + 32)? as usize;
+        let mut lho = rd_u32(b, pos + 42)? as u64;
+        let name_bytes = b
+            .get(pos + 46..pos + 46 + name_len)
+            .ok_or_else(|| anyhow!("npz: truncated member name"))?;
+        let name = String::from_utf8_lossy(name_bytes).to_string();
+        // Zip64 extra field (id 0x0001): 64-bit values for exactly those
+        // header fields that saturated, in usize/csize/offset order.
+        if usize_ == 0xFFFF_FFFF || lho == 0xFFFF_FFFF {
+            let csize = rd_u32(b, pos + 20)? as u64;
+            let mut e = pos + 46 + name_len;
+            let extra_end = e + extra_len;
+            while e + 4 <= extra_end {
+                let id = rd_u16(b, e)?;
+                let sz = rd_u16(b, e + 2)? as usize;
+                if id == 0x0001 {
+                    let mut f = e + 4;
+                    if usize_ == 0xFFFF_FFFF {
+                        usize_ = rd_u64(b, f)?;
+                        f += 8;
+                    }
+                    if csize == 0xFFFF_FFFF {
+                        f += 8;
+                    }
+                    if lho == 0xFFFF_FFFF {
+                        lho = rd_u64(b, f)?;
+                    }
+                    break;
+                }
+                e += 4 + sz;
+            }
+        }
+        if method != 0 {
+            bail!(
+                "npz member {name:?} uses compression method {method}; only stored \
+                 members are supported — write with np.savez, not np.savez_compressed"
+            );
+        }
+        // Local header gives the data offset (its name/extra lengths can
+        // differ from the central copy).
+        let l = lho as usize;
+        if rd_u32(b, l)? != 0x0403_4b50 {
+            bail!("npz: bad local-header signature for {name:?}");
+        }
+        let l_name = rd_u16(b, l + 26)? as usize;
+        let l_extra = rd_u16(b, l + 28)? as usize;
+        let data_off = l + 30 + l_name + l_extra;
+        let data = b
+            .get(data_off..data_off + usize_ as usize)
+            .ok_or_else(|| anyhow!("npz: member {name:?} data out of bounds"))?;
+        let (dims, payload) = parse_npy(data).with_context(|| format!("npz member {name:?}"))?;
+        entries.push(NpzEntry {
+            name: name.strip_suffix(".npy").unwrap_or(&name).to_string(),
+            dims,
+            data: payload,
+        });
+        pos += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(entries)
+}
+
+/// Parse one `.npy` payload (version 1.x/2.x header, C order).
+fn parse_npy(b: &[u8]) -> Result<(Vec<usize>, NpyData)> {
+    if b.len() < 10 || &b[..6] != b"\x93NUMPY" {
+        bail!("not an npy payload");
+    }
+    let major = b[6];
+    let (header_len, header_start) = match major {
+        1 => (rd_u16(b, 8)? as usize, 10),
+        2 | 3 => (rd_u32(b, 8)? as usize, 12),
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header = b
+        .get(header_start..header_start + header_len)
+        .ok_or_else(|| anyhow!("npy: truncated header"))?;
+    let header = std::str::from_utf8(header).context("npy header not utf-8")?;
+    let descr = dict_str_value(header, "descr")
+        .ok_or_else(|| anyhow!("npy header missing descr: {header}"))?;
+    if header.contains("'fortran_order': True") {
+        bail!("npy: fortran_order arrays are not supported");
+    }
+    let dims = parse_shape(header)?;
+    let count: usize = dims.iter().product();
+    let data = &b[header_start + header_len..];
+    let payload = match descr.as_str() {
+        "<f4" => NpyData::F32(read_scalars(data, count, f32::from_le_bytes)?),
+        "<f8" => NpyData::F64(read_scalars(data, count, f64::from_le_bytes)?),
+        "<i4" => NpyData::I32(read_scalars(data, count, i32::from_le_bytes)?),
+        "<i8" => NpyData::I64(read_scalars(data, count, i64::from_le_bytes)?),
+        other => bail!("npy dtype {other:?} not supported (need <f4/<f8/<i4/<i8)"),
+    };
+    Ok((dims, payload))
+}
+
+/// `'key': 'value'` lookup inside the npy header dict literal.
+fn dict_str_value(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)? + pat.len();
+    let rest = header[at..].trim_start();
+    let rest = rest.strip_prefix('\'')?;
+    let end = rest.find('\'')?;
+    Some(rest[..end].to_string())
+}
+
+/// `'shape': (128, 32),` -> [128, 32]. `()` is a scalar (one element).
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let at = header
+        .find("'shape':")
+        .ok_or_else(|| anyhow!("npy header missing shape: {header}"))?;
+    let rest = &header[at..];
+    let open = rest.find('(').ok_or_else(|| anyhow!("npy shape: no '('"))?;
+    let close = rest[open..]
+        .find(')')
+        .ok_or_else(|| anyhow!("npy shape: no ')'"))?
+        + open;
+    rest[open + 1..close]
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<usize>().map_err(|_| anyhow!("npy shape: bad dim {p:?}")))
+        .collect()
+}
+
+fn read_scalars<T, const W: usize>(
+    data: &[u8],
+    count: usize,
+    decode: fn([u8; W]) -> T,
+) -> Result<Vec<T>> {
+    let need = count * W;
+    let data = data
+        .get(..need)
+        .ok_or_else(|| anyhow!("npy: payload holds {} bytes, need {need}", data.len()))?;
+    Ok(data
+        .chunks_exact(W)
+        .map(|c| decode(c.try_into().expect("chunk width")))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Hand-roll a stored zip holding one npy member (crc is not checked).
+    fn fake_npz(name: &str, npy: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let name_b = name.as_bytes();
+        // local header
+        out.extend_from_slice(&0x0403_4b50u32.to_le_bytes());
+        out.extend_from_slice(&[20, 0, 0, 0, 0, 0, 0, 0, 0, 0]); // ver, flags, method, time, date
+        out.extend_from_slice(&0u32.to_le_bytes()); // crc
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes()); // csize
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes()); // usize
+        out.extend_from_slice(&(name_b.len() as u16).to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        out.extend_from_slice(name_b);
+        out.extend_from_slice(npy);
+        let cd_off = out.len();
+        // central directory entry
+        out.extend_from_slice(&0x0201_4b50u32.to_le_bytes());
+        out.extend_from_slice(&[20, 0, 20, 0, 0, 0, 0, 0, 0, 0, 0, 0]); // vers/flags/method/dates
+        out.extend_from_slice(&0u32.to_le_bytes()); // crc
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(name_b.len() as u16).to_le_bytes());
+        out.extend_from_slice(&[0u8; 8]); // extra, comment, disk, int attrs
+        out.extend_from_slice(&0u32.to_le_bytes()); // ext attrs
+        out.extend_from_slice(&0u32.to_le_bytes()); // local header offset
+        out.extend_from_slice(name_b);
+        let cd_size = out.len() - cd_off;
+        // EOCD
+        out.extend_from_slice(&0x0605_4b50u32.to_le_bytes());
+        out.extend_from_slice(&[0, 0, 0, 0]); // disk numbers
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(&(cd_size as u32).to_le_bytes());
+        out.extend_from_slice(&(cd_off as u32).to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // comment len
+        out
+    }
+
+    fn fake_npy_f32(dims: &[usize], values: &[f32]) -> Vec<u8> {
+        let shape = dims
+            .iter()
+            .map(|d| format!("{d},"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let mut header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': ({shape}), }}"
+        );
+        while (header.len() + 11) % 16 != 0 {
+            header.push(' ');
+        }
+        header.push('\n');
+        let mut out = Vec::new();
+        out.extend_from_slice(b"\x93NUMPY\x01\x00");
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrips_hand_rolled_archive() {
+        let npy = fake_npy_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let zip = fake_npz("w.npy", &npy);
+        let dir = std::env::temp_dir().join(format!("pb-npz-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.npz");
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&zip)
+            .unwrap();
+        let entries = read_npz(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].name, "w");
+        assert_eq!(entries[0].dims, vec![2, 3]);
+        assert_eq!(entries[0].data.to_f32(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scalar_shape_parses() {
+        assert_eq!(parse_shape("{'shape': (), }").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_shape("{'shape': (7,), }").unwrap(), vec![7]);
+        assert_eq!(parse_shape("{'shape': (128, 32), }").unwrap(), vec![128, 32]);
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(parse_npy(b"not numpy at all").is_err());
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("pb-npz-bad-{}", std::process::id()));
+        std::fs::write(&path, b"PK garbage without directory").unwrap();
+        assert!(read_npz(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn committed_artifacts_parse_if_present() {
+        let root = crate::runtime::default_root().join("sst2");
+        let test = root.join("test.npz");
+        if !test.exists() {
+            eprintln!("SKIP: no committed artifacts for npz smoke test");
+            return;
+        }
+        let entries = read_npz(&test).unwrap();
+        let names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+        assert!(names.contains(&"tokens"));
+        assert!(names.contains(&"segs"));
+        assert!(names.contains(&"labels"));
+        let tokens = entries.iter().find(|e| e.name == "tokens").unwrap();
+        assert_eq!(tokens.dims.len(), 2);
+        assert_eq!(tokens.data.len(), tokens.dims[0] * tokens.dims[1]);
+    }
+}

@@ -180,6 +180,37 @@ fn worker_pool_with_seq_buckets_serves_mixed_lengths() {
 }
 
 #[test]
+fn connection_cap_sheds_with_json_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let c = start(Policy::Fixed("bert".into()));
+    // Cap 0: every connection is shed with one JSON error line instead of
+    // spawning a handler thread.
+    let server = Server::bind("127.0.0.1:0", c.client())
+        .expect("bind")
+        .with_max_connections(0);
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).expect("json error line");
+    let msg = j.get("error").and_then(Json::as_str).expect("error field");
+    assert!(msg.contains("capacity"), "unexpected shed message: {msg}");
+    // The shed connection is closed after the error line.
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection not closed");
+
+    drop(reader);
+    Server::shutdown(addr, &stop);
+    let _ = handle.join();
+}
+
+#[test]
 fn unknown_dataset_is_rejected() {
     if !have_artifacts() {
         return;

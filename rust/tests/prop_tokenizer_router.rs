@@ -89,6 +89,8 @@ fn meta(variant: &str, kind: &str, dev: f64, agg: usize) -> VariantMeta {
         seq_len: 32,
         num_layers: 6,
         num_classes: 2,
+        hidden_size: 32,
+        num_heads: 2,
         batch_sizes: vec![1, 8],
         hlo: Default::default(),
         grid: Default::default(),
