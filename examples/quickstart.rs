@@ -1,52 +1,115 @@
-//! Quickstart: start the coordinator over the AOT artifacts, classify a few
-//! sentences of the synthetic language, and show what PoWER-BERT eliminated.
+//! Quickstart: drive a PoWER-BERT server through the typed `PowerClient`
+//! — hello/capabilities, SLA-routed classification, explicit variant
+//! pinning, a batch submission, and structured stats.
 //!
-//!   cargo run --release --example quickstart
+//!   cargo run --release --example quickstart [-- --addr 127.0.0.1:7878]
+//!
+//! With `--addr` it connects to a running `powerbert serve`; without, it
+//! self-hosts the full stack (coordinator + TCP server on an ephemeral
+//! port) in-process and talks to itself over the real wire path.
 //!
 //! Requires `make artifacts` (at minimum the sst2 dataset).
 
-use powerbert::coordinator::{Config, Coordinator, Input, Policy, Sla};
+use powerbert::client::PowerClient;
+use powerbert::coordinator::{Config, Coordinator, Input, Policy, Server, ServerHandle, Sla};
+use powerbert::tokenizer::Vocab;
+use powerbert::util::cli::Args;
 use powerbert::workload::WorkloadGen;
 
-fn main() {
-    powerbert::util::log::init();
-    let cfg = Config {
+/// The in-process serving stack when no `--addr` was given. Field order
+/// is drop order: the server stops before the coordinator drains.
+struct SelfHost {
+    server: ServerHandle,
+    coordinator: Coordinator,
+}
+
+fn self_host() -> (PowerClient, SelfHost) {
+    let coordinator = Coordinator::start(Config {
         datasets: vec!["sst2".into()],
         policy: Policy::FastestAboveMetric,
         ..Config::default()
-    };
-    let coordinator = match Coordinator::start(cfg) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("error: {e}\nhint: run `make artifacts` first");
-            std::process::exit(1);
+    })
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}\nhint: run `make artifacts` first");
+        std::process::exit(1);
+    });
+    let server = Server::bind("127.0.0.1:0", coordinator.client())
+        .expect("bind")
+        .spawn()
+        .expect("spawn");
+    let client = PowerClient::connect(server.addr()).expect("connect to self-hosted server");
+    (client, SelfHost { server, coordinator })
+}
+
+fn main() {
+    powerbert::util::log::init();
+    let args = Args::new("quickstart", "PowerClient quickstart against a powerbert server")
+        .opt("addr", None, "server address (default: self-host in-process)")
+        .parse()
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2)
+        });
+
+    let (client, stack) = match args.get("addr") {
+        Some(addr) => (
+            PowerClient::connect(addr).unwrap_or_else(|e| {
+                eprintln!("connect {addr}: {e}");
+                std::process::exit(1)
+            }),
+            None,
+        ),
+        None => {
+            let (c, s) = self_host();
+            (c, Some(s))
         }
     };
 
-    println!("== dataset stats (Table 1 analog) ==");
-    for meta in coordinator.router().variants("sst2") {
-        println!(
-            "  sst2/{:<20} N={} classes={} aggregate word-vectors={}{}",
-            meta.variant,
-            meta.seq_len,
-            meta.num_classes,
-            meta.aggregate_word_vectors(),
-            meta.retention
-                .as_ref()
-                .map(|r| format!("  retention={r:?}"))
-                .unwrap_or_default()
-        );
+    let info = client.hello().clone();
+    println!(
+        "== hello: {} proto {} backend {} ({} datasets, cap {} connections) ==",
+        info.server,
+        info.proto,
+        info.backend,
+        info.datasets.len(),
+        info.max_connections,
+    );
+    for (ds, variants) in &info.variants {
+        for v in variants {
+            println!(
+                "  {ds}/{:<20} N={} classes={} aggregate word-vectors={}{}{}",
+                v.variant,
+                v.seq_len,
+                v.num_classes,
+                v.aggregate_word_vectors,
+                v.dev_metric
+                    .map(|m| format!("  {}={m:.4}", v.metric))
+                    .unwrap_or_default(),
+                v.retention
+                    .as_ref()
+                    .map(|r| format!("  retention={r:?}"))
+                    .unwrap_or_default(),
+            );
+        }
     }
+    let dataset = info.datasets.first().cloned().unwrap_or_else(|| "sst2".into());
 
-    let vocab = coordinator.tokenizer().vocab.clone();
+    // The synthetic-language generator needs the shared vocabulary, which
+    // lives next to the artifacts (clients and server read the same dir).
+    let root = powerbert::runtime::default_root();
+    let vocab = Vocab::load(&root.join("vocab.json")).unwrap_or_else(|e| {
+        eprintln!("vocab: {e}\nhint: run `make artifacts` first");
+        std::process::exit(1)
+    });
     let mut gen = WorkloadGen::new(&vocab, 42);
+
     println!("\n== classification under the default SLA (fastest within 1% of baseline) ==");
     let mut correct = 0;
     let n = 16;
     for i in 0..n {
         let (text, label) = gen.sentence(18);
-        let resp = coordinator
-            .classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default())
+        let resp = client
+            .classify(&dataset, Input::Text { a: text.clone(), b: None }, Sla::default())
             .expect("classify");
         let ok = resp.label == label;
         correct += ok as usize;
@@ -67,8 +130,8 @@ fn main() {
     println!("\n== explicit variant pinning (the paper's Table 2 comparison) ==");
     for variant in ["bert", "power-default"] {
         let (text, _) = gen.sentence(18);
-        match coordinator.classify(
-            "sst2",
+        match client.classify(
+            &dataset,
             Input::Text { a: text, b: None },
             Sla { variant: Some(variant.into()), ..Default::default() },
         ) {
@@ -80,6 +143,34 @@ fn main() {
         }
     }
 
-    println!("\n== coordinator metrics ==");
-    print!("{}", coordinator.metrics().report());
+    println!("\n== batch submission (one wire frame, batcher sees it as a unit) ==");
+    let inputs: Vec<Input> = (0..8)
+        .map(|_| {
+            let (text, _) = gen.sentence(18);
+            Input::Text { a: text, b: None }
+        })
+        .collect();
+    match client.classify_batch(&dataset, inputs, &Sla::default()) {
+        Ok(rs) => {
+            let max_batch = rs.iter().map(|r| r.batch_size).max().unwrap_or(0);
+            println!("  {} responses, largest executed batch: {max_batch}", rs.len());
+        }
+        Err(e) => println!("  batch error: {e}"),
+    }
+
+    println!("\n== structured stats ==");
+    match client.stats() {
+        Ok(s) => println!(
+            "  uptime {:.1}s  padding waste {:.2}x  connections {}/{}",
+            s.uptime_secs, s.padding_waste, s.connections_current, s.connections_max
+        ),
+        Err(e) => println!("  stats error: {e}"),
+    }
+
+    drop(client);
+    if let Some(mut stack) = stack {
+        stack.server.stop();
+        stack.coordinator.shutdown();
+    }
+    println!("\nclean shutdown");
 }

@@ -1,40 +1,64 @@
-//! End-to-end serving driver (the repo's E2E validation workload): starts
-//! the full coordinator stack, replays an open-loop Poisson workload
-//! against it at several request rates, and reports latency/throughput for
-//! baseline BERT vs PoWER-BERT serving — the paper's inference-time claim
-//! measured through the entire L3 path (tokenize -> route -> batch ->
-//! PJRT execute), not just the kernel.
+//! End-to-end serving benchmark over the real wire (the repo's E2E
+//! validation workload): starts the full stack — coordinator, executor
+//! pool, TCP server — then drives it two ways per variant:
 //!
-//!   cargo run --release --example serve_benchmark [-- --rate 200 --secs 10]
+//!   v1  a legacy line-protocol client, one request in flight (the v1
+//!       dialect is synchronous by construction);
+//!   v2  a single pipelined `PowerClient` connection holding `--depth`
+//!       requests in flight, completions matched by id.
 //!
-//! The run recorded in EXPERIMENTS.md §E2E uses the defaults.
+//! The v2-vs-v1 throughput delta is the value of protocol multiplexing:
+//! one pipelined connection keeps the (batch, seq) buckets of the dynamic
+//! batcher full, where depth-1 traffic executes batches of one. Both
+//! clients replay the same mixed-length synthetic workload (via the shared
+//! `powerbert::bench::wire` drivers) and check ground-truth labels, so the
+//! run also validates correctness of both dialects against one server
+//! process.
+//!
+//!   cargo run --release --example serve_benchmark [-- --secs 5 --depth 16]
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
-
-use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
+use powerbert::bench::wire::{closed_loop_v1, closed_loop_v2, WireRun};
+use powerbert::client::PowerClient;
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Server, Sla};
 use powerbert::runtime::BackendKind;
+use powerbert::tokenizer::Vocab;
 use powerbert::util::cli::Args;
-use powerbert::util::stats::Summary;
-use powerbert::workload::WorkloadGen;
+use powerbert::workload::{LengthMix, WorkloadGen};
+
+fn print_row(variant: &str, name: &str, r: &WireRun) {
+    let s = r.latency_summary();
+    println!(
+        "{variant:<15} {name:<12} done={:<6} err={:<3} tput={:>8.1} req/s  \
+         lat p50/p90/p99 = {:.1}/{:.1}/{:.1} ms  acc={:.3}",
+        r.done,
+        r.errors,
+        r.throughput(),
+        s.p50,
+        s.p90,
+        s.p99,
+        r.accuracy(),
+    );
+}
 
 fn main() {
     powerbert::util::log::init();
-    let args = Args::new("serve_benchmark", "open-loop serving benchmark")
-        .opt("rate", Some("150"), "request rate per second")
-        .opt("secs", Some("8"), "measurement duration per variant")
-        .opt("dataset", Some("sst2"), "dataset to serve")
-        .opt("workers", Some("1"), "executor pool size")
-        .opt("backend", None, "inference backend (pjrt | native | auto)")
-        .opt("seq-buckets", None, "comma-separated seq buckets (e.g. 16,32)")
-        .parse()
-        .unwrap_or_else(|u| {
-            eprintln!("{u}");
-            std::process::exit(2)
-        });
-    let rate: f64 = args.get_f64("rate").unwrap_or(150.0);
-    let secs: f64 = args.get_f64("secs").unwrap_or(8.0);
+    let args = Args::new(
+        "serve_benchmark",
+        "closed-loop wire benchmark: v1 depth-1 vs pipelined v2 PowerClient",
+    )
+    .opt("secs", Some("5"), "measurement duration per client per variant")
+    .opt("depth", Some("16"), "v2 pipeline depth (requests in flight)")
+    .opt("dataset", Some("sst2"), "dataset to serve")
+    .opt("workers", Some("1"), "executor pool size")
+    .opt("backend", None, "inference backend (pjrt | native | auto)")
+    .opt("seq-buckets", None, "comma-separated seq buckets (e.g. 16,32)")
+    .parse()
+    .unwrap_or_else(|u| {
+        eprintln!("{u}");
+        std::process::exit(2)
+    });
+    let secs: f64 = args.get_f64("secs").unwrap_or(5.0);
+    let depth = args.get_usize("depth").unwrap_or(16).max(1);
     let dataset = args.get("dataset").unwrap_or("sst2").to_string();
     let workers = args.get_usize("workers").unwrap_or(1).max(1);
     let backend = match args.get("backend") {
@@ -52,10 +76,13 @@ fn main() {
         (_, list) => list.unwrap_or_default(),
     };
 
-    let coordinator = Coordinator::start(Config {
+    let mut coordinator = Coordinator::start(Config {
         datasets: vec![dataset.clone()],
         policy: Policy::BestUnderLatency,
-        batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(4) },
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(4),
+        },
         workers,
         backend,
         seq_buckets,
@@ -66,6 +93,12 @@ fn main() {
         std::process::exit(1)
     });
 
+    let server = Server::bind("127.0.0.1:0", coordinator.client())
+        .expect("bind")
+        .spawn()
+        .expect("spawn");
+    let addr = server.addr();
+
     let variants: Vec<String> = coordinator
         .router()
         .variants(&dataset)
@@ -74,95 +107,57 @@ fn main() {
         .map(|m| m.variant.clone())
         .collect();
 
+    let root = powerbert::runtime::default_root();
+    let vocab = Vocab::load(&root.join("vocab.json")).expect("vocab");
+    let mix = LengthMix::default();
+
     println!(
-        "open-loop Poisson load: {rate} req/s for {secs}s per variant ({backend} backend)\n"
+        "closed-loop wire benchmark: {secs}s per client per variant, v2 depth={depth} \
+         ({backend} backend, {workers} worker(s))\n"
     );
+    let warm_client = PowerClient::connect(addr).expect("warm connect");
     let mut rows = Vec::new();
     for variant in &variants {
-        let client = coordinator.client();
-        let vocab = client.tokenizer().vocab.clone();
-        let mut gen = WorkloadGen::new(&vocab, 99);
-        // Warm the variant (lazy compile) outside the measurement window.
+        // Warm the variant (lazy load/compile) outside measurement.
+        let mut gen = WorkloadGen::new(&vocab, 7);
         let (wtext, _) = gen.sentence(18);
-        let _ = client.classify(
+        let _ = warm_client.classify(
             &dataset,
             Input::Text { a: wtext, b: None },
             Sla { variant: Some(variant.clone()), ..Default::default() },
         );
-        let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
-        let shed = Arc::new(AtomicUsize::new(0));
-        let correct = Arc::new(AtomicUsize::new(0));
-        let done = Arc::new(AtomicUsize::new(0));
 
-        let t0 = Instant::now();
-        let mut sent = 0usize;
-        let mut waiters = Vec::new();
-        while t0.elapsed().as_secs_f64() < secs {
-            let (text, label) = gen.sentence(18);
-            let sla = Sla { variant: Some(variant.clone()), ..Default::default() };
-            let submit_t = Instant::now();
-            match client.submit(&dataset, Input::Text { a: text, b: None }, sla) {
-                Ok(rx) => {
-                    sent += 1;
-                    let latencies = latencies.clone();
-                    let correct = correct.clone();
-                    let done = done.clone();
-                    waiters.push(std::thread::spawn(move || {
-                        if let Ok(Ok(resp)) = rx.recv() {
-                            latencies
-                                .lock()
-                                .unwrap()
-                                .push(submit_t.elapsed().as_secs_f64() * 1e3);
-                            if resp.label == label {
-                                correct.fetch_add(1, Ordering::Relaxed);
-                            }
-                            done.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }));
-                }
-                Err(_) => {
-                    shed.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-            std::thread::sleep(gen.arrival_gap(rate));
-        }
-        for w in waiters {
-            let _ = w.join();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let lat = latencies.lock().unwrap();
-        let s = Summary::of(&lat);
-        let n_done = done.load(Ordering::Relaxed);
-        rows.push((
-            variant.clone(),
-            n_done as f64 / wall,
-            s.clone(),
-            shed.load(Ordering::Relaxed),
-            correct.load(Ordering::Relaxed) as f64 / n_done.max(1) as f64,
-        ));
+        let v1 = closed_loop_v1(addr, &dataset, variant, secs, &mix, &vocab, 99);
+        let v2 = closed_loop_v2(addr, &dataset, variant, secs, depth, &mix, &vocab, 101);
+        print_row(variant, "v1 depth-1", &v1);
+        print_row(variant, &format!("v2 depth-{depth}"), &v2);
         println!(
-            "{variant:<15} sent={sent} done={n_done} shed={} tput={:.1} req/s  \
-             lat p50/p90/p99 = {:.1}/{:.1}/{:.1} ms  acc={:.3}",
-            shed.load(Ordering::Relaxed),
-            n_done as f64 / wall,
-            s.p50,
-            s.p90,
-            s.p99,
-            correct.load(Ordering::Relaxed) as f64 / n_done.max(1) as f64,
+            "{variant:<15} pipelining throughput gain: {:.2}x\n",
+            v2.throughput() / v1.throughput().max(1e-9)
         );
+        rows.push((variant.clone(), v1, v2));
     }
 
-    if rows.len() == 2 {
-        let speedup = rows[0].2.p50 / rows[1].2.p50;
-        println!(
-            "\nPoWER-BERT p50 latency speedup over BERT at {rate} req/s: {:.2}x",
-            speedup
-        );
+    if let Some((_, _, v2_power)) = rows.iter().find(|(v, _, _)| v == "power-default") {
+        if let Some((_, _, v2_bert)) = rows.iter().find(|(v, _, _)| v == "bert") {
+            println!(
+                "PoWER-BERT pipelined throughput over BERT: {:.2}x",
+                v2_power.throughput() / v2_bert.throughput().max(1e-9)
+            );
+        }
     }
-    println!(
-        "\npadding waste (executed/real tokens): {:.2}x over {} worker(s)",
-        coordinator.metrics().total_padding_waste(),
-        workers,
-    );
+
+    match warm_client.stats() {
+        Ok(s) => println!(
+            "\nserver stats: uptime {:.1}s  padding waste {:.2}x  connections {}/{}",
+            s.uptime_secs, s.padding_waste, s.connections_current, s.connections_max
+        ),
+        Err(e) => println!("\nstats error: {e}"),
+    }
+    drop(warm_client);
+
     println!("\ncoordinator internals:\n{}", coordinator.metrics().report());
+
+    server.stop();
+    coordinator.shutdown();
 }

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use powerbert::bench::{fmt_time, time_fn, BenchConfig, Table};
-use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Server, Sla};
 use powerbert::runtime::{default_root, Engine, Registry, TestSplit};
 use powerbert::workload::{LengthMix, WorkloadGen};
 
@@ -230,4 +230,63 @@ fn main() {
          padding waste (executed/real tokens) — the serving-side analog of the paper's\n\
          word-vector elimination."
     );
+
+    // (e) wire protocol: one v1 connection (depth-1 by construction) vs one
+    // pipelined protocol-v2 PowerClient connection at several depths —
+    // the serving value of multiplexing at equal connection counts.
+    let coordinator = Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy: Policy::Fixed("bert".into()),
+        batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(4) },
+        ..Config::default()
+    })
+    .expect("coordinator");
+    let server = Server::bind("127.0.0.1:0", coordinator.client())
+        .expect("bind")
+        .spawn()
+        .expect("spawn");
+    let addr = server.addr();
+    {
+        let vocab = coordinator.tokenizer().vocab.clone();
+        let mut g = WorkloadGen::new(&vocab, 33);
+        let (text, _) = g.sentence(18);
+        let _ = coordinator.classify("sst2", Input::Text { a: text, b: None }, Sla::default());
+    }
+    let vocab = coordinator.tokenizer().vocab.clone();
+    let secs = 3.0;
+    let mix = LengthMix::default();
+    let mut t4 = Table::new(
+        "Wire protocol — one connection, closed loop (sst2/bert)",
+        &["client", "req/s", "p99 latency"],
+    );
+    let v1 = powerbert::bench::wire::closed_loop_v1(addr, "sst2", "bert", secs, &mix, &vocab, 71);
+    t4.row(vec![
+        "v1 depth-1".into(),
+        format!("{:.1}", v1.throughput()),
+        format!("{:.1}ms", v1.latency_summary().p99),
+    ]);
+    for depth in [4usize, 16, 64] {
+        let r = powerbert::bench::wire::closed_loop_v2(
+            addr,
+            "sst2",
+            "bert",
+            secs,
+            depth,
+            &mix,
+            &vocab,
+            100 + depth as u64,
+        );
+        t4.row(vec![
+            format!("v2 depth-{depth}"),
+            format!("{:.1}", r.throughput()),
+            format!("{:.1}ms", r.latency_summary().p99),
+        ]);
+    }
+    t4.print();
+    println!(
+        "pipelining should raise req/s monotonically with depth at equal connection\n\
+         counts — depth-1 pays the full batcher deadline + round-trip per request."
+    );
+    server.stop();
+    drop(coordinator);
 }

@@ -3,6 +3,7 @@
 //! paper-table bench under rust/benches/.
 
 pub mod paper;
+pub mod wire;
 
 use std::time::Instant;
 

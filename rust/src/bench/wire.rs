@@ -1,0 +1,180 @@
+//! Shared closed-loop wire-protocol drivers for benches and examples: a
+//! legacy v1 line client (depth-1 by construction) and a pipelined
+//! protocol-v2 `PowerClient` window. One implementation, so the
+//! v1-vs-v2 comparison in `examples/serve_benchmark.rs` and
+//! `rust/benches/coordinator.rs` measures the same loop with the same
+//! instrumentation points (latency clock starts before the wire write in
+//! both dialects).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use crate::client::{PowerClient, Ticket};
+use crate::coordinator::{Input, Sla};
+use crate::tokenizer::Vocab;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workload::{LengthMix, WorkloadGen};
+
+/// Outcome of one closed-loop run.
+#[derive(Debug, Clone, Default)]
+pub struct WireRun {
+    /// Completed (successful) requests.
+    pub done: usize,
+    /// Error replies / failed tickets.
+    pub errors: usize,
+    /// Responses whose label matched the generator's ground truth.
+    pub correct: usize,
+    /// Per-request latencies in milliseconds, clocked from just before
+    /// the wire write to response receipt.
+    pub latencies_ms: Vec<f64>,
+    /// Wall-clock seconds from first request to last response.
+    pub wall_secs: f64,
+}
+
+impl WireRun {
+    pub fn throughput(&self) -> f64 {
+        self.done as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.done.max(1) as f64
+    }
+
+    /// Latency summary in milliseconds; all-zeros when nothing completed
+    /// (`Summary::of` refuses empty samples). The one empty-safe
+    /// percentile implementation for every consumer of these runs.
+    pub fn latency_summary(&self) -> Summary {
+        if self.latencies_ms.is_empty() {
+            Summary::of(&[0.0])
+        } else {
+            Summary::of(&self.latencies_ms)
+        }
+    }
+}
+
+/// Closed-loop v1 line client: write one request, block for its reply,
+/// repeat — one request in flight, ever, which is all the v1 dialect can
+/// express on a single connection.
+pub fn closed_loop_v1(
+    addr: SocketAddr,
+    dataset: &str,
+    variant: &str,
+    secs: f64,
+    mix: &LengthMix,
+    vocab: &Vocab,
+    seed: u64,
+) -> WireRun {
+    let stream = TcpStream::connect(addr).expect("v1 connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut gen = WorkloadGen::new(vocab, seed);
+    let mut run = WireRun::default();
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < secs {
+        let (text, label, _) = gen.mixed_sentence(mix);
+        let mut m = BTreeMap::new();
+        m.insert("dataset".to_string(), Json::Str(dataset.to_string()));
+        m.insert("text".to_string(), Json::Str(text));
+        m.insert("variant".to_string(), Json::Str(variant.to_string()));
+        let sent = Instant::now();
+        writeln!(writer, "{}", Json::Obj(m)).expect("v1 write");
+        let mut line = String::new();
+        if reader.read_line(&mut line).expect("v1 read") == 0 {
+            break;
+        }
+        let reply = Json::parse(line.trim()).expect("v1 reply json");
+        if reply.get("error").is_some() {
+            run.errors += 1;
+            continue;
+        }
+        run.latencies_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+        if reply.get("label").and_then(Json::as_usize) == Some(label) {
+            run.correct += 1;
+        }
+        run.done += 1;
+    }
+    run.wall_secs = t0.elapsed().as_secs_f64();
+    run
+}
+
+/// Closed-loop pipelined v2 client: keep `depth` tickets outstanding on
+/// one `PowerClient` connection, harvesting completions as they arrive,
+/// then drain.
+pub fn closed_loop_v2(
+    addr: SocketAddr,
+    dataset: &str,
+    variant: &str,
+    secs: f64,
+    depth: usize,
+    mix: &LengthMix,
+    vocab: &Vocab,
+    seed: u64,
+) -> WireRun {
+    let client = PowerClient::connect(addr).expect("v2 connect");
+    let mut gen = WorkloadGen::new(vocab, seed);
+    let mut run = WireRun::default();
+    let mut window: VecDeque<(Instant, usize, Ticket)> = VecDeque::new();
+
+    fn record(run: &mut WireRun, sent: Instant, label: usize, r: Result<crate::coordinator::Response, crate::client::ClientError>) {
+        match r {
+            Ok(resp) => {
+                run.latencies_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+                if resp.label == label {
+                    run.correct += 1;
+                }
+                run.done += 1;
+            }
+            Err(_) => run.errors += 1,
+        }
+    }
+
+    /// Drain every ticket whose response has already arrived — polled in
+    /// submission order but non-blocking, so a fast response is never
+    /// clocked behind a slow head-of-line ticket.
+    fn harvest_ready(window: &mut VecDeque<(Instant, usize, Ticket)>, run: &mut WireRun) {
+        let mut i = 0;
+        while i < window.len() {
+            if let Some(result) = window[i].2.poll() {
+                let (sent, label, _) = window.remove(i).expect("indexed entry");
+                record(run, sent, label, result);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    let t0 = Instant::now();
+    'run: while t0.elapsed().as_secs_f64() < secs {
+        harvest_ready(&mut window, &mut run);
+        // Window full and nothing ready: block on the oldest ticket.
+        if window.len() >= depth.max(1) {
+            let (sent, label, ticket) = window.pop_front().expect("full window");
+            record(&mut run, sent, label, ticket.wait());
+            continue;
+        }
+        let (text, label, _) = gen.mixed_sentence(mix);
+        let sla = Sla { variant: Some(variant.to_string()), ..Default::default() };
+        // Clock starts before the submit so v2 latency includes the wire
+        // write, exactly like the v1 driver — the comparison is between
+        // dialects, not instrumentation points.
+        let sent = Instant::now();
+        match client.submit(dataset, Input::Text { a: text, b: None }, sla) {
+            Ok(t) => window.push_back((sent, label, t)),
+            Err(_) => {
+                // A failed submit means the connection died (the driver
+                // never exceeds the server's in-flight cap): bail like the
+                // v1 driver does on EOF instead of spinning out the clock.
+                run.errors += 1;
+                break 'run;
+            }
+        }
+    }
+    while let Some((sent, label, ticket)) = window.pop_front() {
+        record(&mut run, sent, label, ticket.wait());
+    }
+    run.wall_secs = t0.elapsed().as_secs_f64();
+    run
+}

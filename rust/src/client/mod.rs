@@ -1,0 +1,602 @@
+//! `PowerClient` — first-class typed client for wire protocol v2.
+//!
+//! Speaks the multiplexed dialect of [`crate::coordinator::protocol`] over
+//! one TCP connection: client-assigned request ids, any number of requests
+//! in flight, completions matched by id in whatever order the server
+//! finishes them. A background reader thread parses incoming frames and
+//! routes them through a pending map to per-request channels; [`Ticket`]
+//! is the await handle. The request vocabulary ([`Input`], [`Sla`],
+//! [`Response`]) is exactly the coordinator's own — what you'd pass to
+//! [`crate::coordinator::Client::classify`] in process, you pass here over
+//! the wire.
+//!
+//! ```no_run
+//! use powerbert::client::PowerClient;
+//! use powerbert::coordinator::{Input, Sla};
+//!
+//! let client = PowerClient::connect("127.0.0.1:7878").unwrap();
+//! println!("serving {:?} on {}", client.hello().datasets, client.hello().backend);
+//! // Blocking call:
+//! let resp = client
+//!     .classify("sst2", Input::Text { a: "pos_1 filler_2".into(), b: None }, Sla::default())
+//!     .unwrap();
+//! // Pipelined: submit many, then wait — responses stream back out of order.
+//! let tickets: Vec<_> = (0..32)
+//!     .map(|_| {
+//!         client
+//!             .submit("sst2", Input::Text { a: "pos_1".into(), b: None }, Sla::default())
+//!             .unwrap()
+//!     })
+//!     .collect();
+//! for t in tickets {
+//!     println!("label {}", t.wait().unwrap().label);
+//! }
+//! # let _ = resp;
+//! ```
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::protocol::{self, ErrorCode, PROTOCOL_VERSION};
+use crate::coordinator::{Input, Response, Sla};
+use crate::util::json::Json;
+
+/// Client-side error, mirroring the wire protocol's structured codes.
+#[derive(Debug, Clone)]
+pub enum ClientError {
+    /// Socket-level failure (connect, read, write).
+    Io(String),
+    /// The server sent something this client cannot interpret.
+    Protocol(String),
+    /// The server answered with a structured v2 error frame.
+    Server { code: ErrorCode, message: String },
+    /// The connection closed with requests still in flight.
+    Disconnected,
+}
+
+impl ClientError {
+    /// The wire error code, when the server reported one.
+    pub fn code(&self) -> Option<ErrorCode> {
+        match self {
+            ClientError::Server { code, .. } => Some(*code),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+            ClientError::Protocol(e) => write!(f, "protocol error: {e}"),
+            ClientError::Server { code, message } => write!(f, "server error [{code}]: {message}"),
+            ClientError::Disconnected => write!(f, "connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// One variant as advertised in the hello frame / `variants` command.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub variant: String,
+    pub kind: String,
+    pub metric: String,
+    pub dev_metric: Option<f64>,
+    pub seq_len: usize,
+    pub num_classes: usize,
+    /// Σ word-vectors kept across layers — the paper's cost proxy; lower
+    /// is faster at equal seq_len.
+    pub aggregate_word_vectors: usize,
+    pub retention: Option<Vec<usize>>,
+}
+
+impl VariantInfo {
+    fn parse(j: &Json) -> Result<VariantInfo, ClientError> {
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| ClientError::Protocol(format!("variant entry missing {k:?}")))
+        };
+        Ok(VariantInfo {
+            variant: s("variant")?,
+            kind: s("kind")?,
+            metric: s("metric")?,
+            dev_metric: j.get("dev_metric").and_then(Json::as_f64),
+            seq_len: j.get("seq_len").and_then(Json::as_usize).unwrap_or(0),
+            num_classes: j.get("num_classes").and_then(Json::as_usize).unwrap_or(0),
+            aggregate_word_vectors: j
+                .get("aggregate_word_vectors")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            retention: j.get("retention").and_then(Json::as_arr).map(|a| {
+                a.iter().filter_map(Json::as_usize).collect()
+            }),
+        })
+    }
+}
+
+/// Server capabilities from the hello frame: everything needed to pick a
+/// dataset, variant, and SLA without out-of-band knowledge.
+#[derive(Debug, Clone)]
+pub struct ServerInfo {
+    pub proto: u64,
+    pub server: String,
+    /// The server's *configured* backend selection (`pjrt`, `native`, or
+    /// `auto`). `auto` resolves per variant at load time on the server, so
+    /// it is reported as-is rather than as a guessed resolution.
+    pub backend: String,
+    pub datasets: Vec<String>,
+    pub variants: BTreeMap<String, Vec<VariantInfo>>,
+    pub seq_buckets: Vec<usize>,
+    pub max_connections: usize,
+    /// Requests the server allows in flight on one connection before it
+    /// answers `overloaded`; the useful ceiling for pipeline depth.
+    pub max_inflight_per_connection: usize,
+}
+
+impl ServerInfo {
+    fn parse(j: &Json) -> Result<ServerInfo, ClientError> {
+        let proto = j
+            .get("proto")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| ClientError::Protocol("hello missing proto".into()))?;
+        let datasets = j
+            .get("datasets")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|d| d.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        let mut variants = BTreeMap::new();
+        if let Some(m) = j.get("variants").and_then(Json::as_obj) {
+            for (ds, list) in m {
+                let parsed = list
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(VariantInfo::parse)
+                    .collect::<Result<Vec<_>, _>>()?;
+                variants.insert(ds.clone(), parsed);
+            }
+        }
+        Ok(ServerInfo {
+            proto,
+            server: j.get("server").and_then(Json::as_str).unwrap_or("").to_string(),
+            backend: j.get("backend").and_then(Json::as_str).unwrap_or("").to_string(),
+            datasets,
+            variants,
+            seq_buckets: j
+                .get("seq_buckets")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            max_connections: j.get("max_connections").and_then(Json::as_usize).unwrap_or(0),
+            max_inflight_per_connection: j
+                .get("max_inflight_per_connection")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+        })
+    }
+}
+
+/// Structured server statistics (`stats` command). Headline figures are
+/// typed; the full per-variant breakdown stays available as JSON.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub uptime_secs: f64,
+    /// Executed tokens per real token across all variants (1.0 = none).
+    pub padding_waste: f64,
+    pub connections_current: usize,
+    pub connections_max: usize,
+    /// The complete stats object (per-variant histograms, workers, ...).
+    pub raw: Json,
+}
+
+/// Routing state shared between the caller side and the reader thread.
+struct Shared {
+    /// In-flight request id -> reply channel. The reader thread removes
+    /// and fulfils entries as frames arrive, in any order.
+    pending: Mutex<HashMap<u64, Sender<Result<Json, ClientError>>>>,
+    /// Set once when the connection dies; every later call fails fast.
+    dead: Mutex<Option<ClientError>>,
+}
+
+impl Shared {
+    /// Fail every in-flight request and remember why.
+    fn poison(&self, err: ClientError) {
+        {
+            let mut dead = self.dead.lock().unwrap();
+            if dead.is_none() {
+                *dead = Some(err.clone());
+            }
+        }
+        for (_, tx) in self.pending.lock().unwrap().drain() {
+            let _ = tx.send(Err(err.clone()));
+        }
+    }
+}
+
+/// Await handle for one pipelined request.
+pub struct Ticket {
+    id: u64,
+    rx: Receiver<Result<Json, ClientError>>,
+}
+
+impl Ticket {
+    /// The client-assigned request id (echoed by the server).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until this request's frame arrives, in completion order —
+    /// other tickets of the same connection resolve independently.
+    pub fn wait(self) -> Result<Response, ClientError> {
+        let frame = self.rx.recv().map_err(|_| ClientError::Disconnected)?;
+        decode_reply(self.id, frame)
+    }
+
+    /// Non-blocking poll: `Some` once the response has arrived (consume
+    /// the ticket's result without waiting behind older tickets), `None`
+    /// while still in flight. After `Some`, the ticket is spent — drop it.
+    pub fn poll(&mut self) -> Option<Result<Response, ClientError>> {
+        match self.rx.try_recv() {
+            Ok(frame) => Some(decode_reply(self.id, frame)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Err(ClientError::Disconnected))
+            }
+        }
+    }
+}
+
+/// Decode a routed reply frame into the typed response.
+fn decode_reply(id: u64, frame: Result<Json, ClientError>) -> Result<Response, ClientError> {
+    let frame = frame?;
+    reply_error(&frame)?;
+    let result = frame
+        .get("result")
+        .ok_or_else(|| ClientError::Protocol("reply frame has no result".into()))?;
+    protocol::response_from_payload(id, result).map_err(ClientError::Protocol)
+}
+
+/// Extract a structured error from a reply frame, if it carries one.
+fn reply_error(frame: &Json) -> Result<(), ClientError> {
+    let Some(e) = frame.get("error") else { return Ok(()) };
+    // v2 shape: {"code": ..., "message": ...}; v1 shape: a bare string.
+    if let Some(msg) = e.as_str() {
+        let code = frame
+            .get("code")
+            .and_then(Json::as_str)
+            .map(ErrorCode::parse)
+            .unwrap_or(ErrorCode::Other);
+        return Err(ClientError::Server { code, message: msg.to_string() });
+    }
+    let code = e
+        .get("code")
+        .and_then(Json::as_str)
+        .map(ErrorCode::parse)
+        .unwrap_or(ErrorCode::Other);
+    let message = e.get("message").and_then(Json::as_str).unwrap_or("").to_string();
+    Err(ClientError::Server { code, message })
+}
+
+/// Typed client for a PoWER-BERT serving endpoint (wire protocol v2).
+pub struct PowerClient {
+    writer: Mutex<TcpStream>,
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    info: ServerInfo,
+}
+
+impl PowerClient {
+    /// Connect, perform the hello handshake, and start the background
+    /// reader. Fails if the endpoint does not speak protocol v2.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<PowerClient, ClientError> {
+        let stream = TcpStream::connect(addr).map_err(|e| ClientError::Io(e.to_string()))?;
+        let mut read_half =
+            BufReader::new(stream.try_clone().map_err(|e| ClientError::Io(e.to_string()))?);
+
+        // Handshake runs synchronously before the reader thread exists:
+        // id 0 is reserved for it and never reused.
+        let mut writer = stream;
+        let hello = protocol::cmd_frame(0, "hello", None).to_string();
+        writer
+            .write_all(hello.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+            .and_then(|()| writer.flush())
+            .map_err(|e| ClientError::Io(e.to_string()))?;
+        let mut line = String::new();
+        read_half
+            .read_line(&mut line)
+            .map_err(|e| ClientError::Io(e.to_string()))?;
+        if line.is_empty() {
+            return Err(ClientError::Disconnected);
+        }
+        let frame = Json::parse(line.trim())
+            .map_err(|e| ClientError::Protocol(format!("bad hello reply: {e}")))?;
+        reply_error(&frame)?;
+        let info = ServerInfo::parse(
+            frame
+                .get("hello")
+                .ok_or_else(|| ClientError::Protocol("hello reply has no hello payload".into()))?,
+        )?;
+        if info.proto != PROTOCOL_VERSION {
+            return Err(ClientError::Protocol(format!(
+                "server speaks protocol {} (want {PROTOCOL_VERSION})",
+                info.proto
+            )));
+        }
+
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(HashMap::new()),
+            dead: Mutex::new(None),
+        });
+        let reader_shared = shared.clone();
+        std::thread::Builder::new()
+            .name("pb-client-reader".into())
+            .spawn(move || reader_loop(read_half, reader_shared))
+            .map_err(|e| ClientError::Io(e.to_string()))?;
+
+        Ok(PowerClient {
+            writer: Mutex::new(writer),
+            shared,
+            next_id: AtomicU64::new(1),
+            info,
+        })
+    }
+
+    /// Server capabilities captured during the connect handshake.
+    pub fn hello(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    /// Submit one request; returns immediately with a [`Ticket`]. Any
+    /// number of tickets may be outstanding — this is what fills the
+    /// server's `(batch, seq)` buckets from a single connection.
+    pub fn submit(&self, dataset: &str, input: Input, sla: Sla) -> Result<Ticket, ClientError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let rx = self.register(id)?;
+        let frame = protocol::request_frame(id, dataset, &input, &sla, true);
+        if let Err(e) = self.send_line(&frame.to_string()) {
+            self.unregister(id);
+            return Err(e);
+        }
+        Ok(Ticket { id, rx })
+    }
+
+    /// Submit and block for the response.
+    pub fn classify(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+    ) -> Result<Response, ClientError> {
+        self.submit(dataset, input, sla)?.wait()
+    }
+
+    /// Submit many inputs as one `{"v":2,"batch":[...]}` frame — the
+    /// server enqueues them back-to-back so the dynamic batcher sees them
+    /// as a unit — and block until all have resolved. Responses come back
+    /// in input order; the first error wins.
+    pub fn classify_batch(
+        &self,
+        dataset: &str,
+        inputs: Vec<Input>,
+        sla: &Sla,
+    ) -> Result<Vec<Response>, ClientError> {
+        let mut entries = Vec::with_capacity(inputs.len());
+        let mut tickets = Vec::with_capacity(inputs.len());
+        for input in &inputs {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let rx = self.register(id)?;
+            entries.push(protocol::request_frame(id, dataset, input, sla, false));
+            tickets.push(Ticket { id, rx });
+        }
+        if let Err(e) = self.send_line(&protocol::batch_frame(entries).to_string()) {
+            for t in &tickets {
+                self.unregister(t.id);
+            }
+            return Err(e);
+        }
+        tickets.into_iter().map(Ticket::wait).collect()
+    }
+
+    /// Structured server statistics, including connection counts.
+    pub fn stats(&self) -> Result<ServerStats, ClientError> {
+        let frame = self.command("stats", None)?;
+        let stats = frame
+            .get("stats")
+            .ok_or_else(|| ClientError::Protocol("stats reply has no stats payload".into()))?;
+        let f = |k: &str| stats.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let conn = |k: &str| {
+            stats
+                .get("connections")
+                .and_then(|c| c.get(k))
+                .and_then(Json::as_usize)
+                .unwrap_or(0)
+        };
+        Ok(ServerStats {
+            uptime_secs: f("uptime_secs"),
+            padding_waste: f("padding_waste"),
+            connections_current: conn("current"),
+            connections_max: conn("max"),
+            raw: stats.clone(),
+        })
+    }
+
+    /// Routable variants of a dataset, with their dev metrics and costs.
+    pub fn variants(&self, dataset: &str) -> Result<Vec<VariantInfo>, ClientError> {
+        let frame = self.command("variants", Some(dataset))?;
+        frame
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ClientError::Protocol("variants reply has no list".into()))?
+            .iter()
+            .map(VariantInfo::parse)
+            .collect()
+    }
+
+    fn command(&self, cmd: &str, dataset: Option<&str>) -> Result<Json, ClientError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let rx = self.register(id)?;
+        let frame = protocol::cmd_frame(id, cmd, dataset);
+        if let Err(e) = self.send_line(&frame.to_string()) {
+            self.unregister(id);
+            return Err(e);
+        }
+        let frame = rx.recv().map_err(|_| ClientError::Disconnected)??;
+        reply_error(&frame)?;
+        Ok(frame)
+    }
+
+    /// Register a pending entry *before* writing the request — the reply
+    /// could otherwise race the bookkeeping. Insert-then-check ordering
+    /// closes the race against `Shared::poison`: a poison that runs after
+    /// the insert drains our entry (the ticket resolves to the error), and
+    /// one that ran before it is observed by the dead-check here.
+    fn register(&self, id: u64) -> Result<Receiver<Result<Json, ClientError>>, ClientError> {
+        let (tx, rx) = channel();
+        self.shared.pending.lock().unwrap().insert(id, tx);
+        if let Some(e) = self.shared.dead.lock().unwrap().clone() {
+            self.shared.pending.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        Ok(rx)
+    }
+
+    fn unregister(&self, id: u64) {
+        self.shared.pending.lock().unwrap().remove(&id);
+    }
+
+    fn send_line(&self, line: &str) -> Result<(), ClientError> {
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(line.as_bytes())
+            .and_then(|()| w.write_all(b"\n"))
+            .and_then(|()| w.flush())
+            .map_err(|e| ClientError::Io(e.to_string()))
+    }
+}
+
+impl Drop for PowerClient {
+    fn drop(&mut self) {
+        // Unblock the reader thread; in-flight tickets resolve to
+        // Disconnected rather than hanging.
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+fn reader_loop(mut reader: BufReader<TcpStream>, shared: Arc<Shared>) {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                shared.poison(ClientError::Disconnected);
+                return;
+            }
+            Ok(_) => {}
+            Err(e) => {
+                shared.poison(ClientError::Io(e.to_string()));
+                return;
+            }
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let frame = match Json::parse(trimmed) {
+            Ok(j) => j,
+            Err(e) => {
+                shared.poison(ClientError::Protocol(format!("unparseable frame: {e}")));
+                return;
+            }
+        };
+        match frame.get("id").and_then(Json::as_u64) {
+            Some(id) => {
+                if let Some(tx) = shared.pending.lock().unwrap().remove(&id) {
+                    let _ = tx.send(Ok(frame));
+                }
+                // No pending entry: a reply to an abandoned request; drop.
+            }
+            None => {
+                // A frame without an id cannot be routed: it is a
+                // connection-level error (e.g. the capacity shed notice or
+                // a bad_json verdict on something this client sent).
+                if let Err(e) = reply_error(&frame) {
+                    shared.poison(e);
+                    return;
+                }
+                // Anything else unroutable is ignored for forward compat.
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_error_reads_both_shapes() {
+        let v2 = Json::parse(r#"{"v":2,"id":1,"error":{"code":"overloaded","message":"q"}}"#)
+            .unwrap();
+        match reply_error(&v2).unwrap_err() {
+            ClientError::Server { code, message } => {
+                assert_eq!(code, ErrorCode::Overloaded);
+                assert_eq!(message, "q");
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        let v1 = Json::parse(r#"{"error":"server at connection capacity","code":"overloaded"}"#)
+            .unwrap();
+        match reply_error(&v1).unwrap_err() {
+            ClientError::Server { code, .. } => assert_eq!(code, ErrorCode::Overloaded),
+            other => panic!("wrong error: {other:?}"),
+        }
+        let ok = Json::parse(r#"{"v":2,"id":1,"result":{}}"#).unwrap();
+        assert!(reply_error(&ok).is_ok());
+    }
+
+    #[test]
+    fn server_info_parses_hello_payload() {
+        let j = Json::parse(
+            r#"{"proto":2,"server":"powerbert/0.1.0","backend":"native",
+                "datasets":["sst2"],
+                "variants":{"sst2":[{"variant":"bert","kind":"bert","metric":"accuracy",
+                  "dev_metric":0.91,"seq_len":64,"num_classes":2,
+                  "aggregate_word_vectors":768}]},
+                "seq_buckets":[16,32],"max_connections":256}"#,
+        )
+        .unwrap();
+        let info = ServerInfo::parse(&j).unwrap();
+        assert_eq!(info.proto, 2);
+        assert_eq!(info.datasets, vec!["sst2".to_string()]);
+        assert_eq!(info.seq_buckets, vec![16, 32]);
+        assert_eq!(info.max_connections, 256);
+        let vs = &info.variants["sst2"];
+        assert_eq!(vs[0].variant, "bert");
+        assert_eq!(vs[0].dev_metric, Some(0.91));
+        assert!(vs[0].retention.is_none());
+    }
+
+    #[test]
+    fn poison_fails_pending_and_future() {
+        let shared = Shared {
+            pending: Mutex::new(HashMap::new()),
+            dead: Mutex::new(None),
+        };
+        let (tx, rx) = channel();
+        shared.pending.lock().unwrap().insert(7, tx);
+        shared.poison(ClientError::Disconnected);
+        assert!(matches!(rx.recv().unwrap(), Err(ClientError::Disconnected)));
+        assert!(shared.dead.lock().unwrap().is_some());
+        assert!(shared.pending.lock().unwrap().is_empty());
+    }
+}

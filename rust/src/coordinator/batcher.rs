@@ -193,7 +193,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{Input, Request, Sla};
+    use crate::coordinator::request::{Input, ReplySink, Request, Sla};
     use std::sync::mpsc::channel;
 
     fn job(id: u64) -> Job {
@@ -211,7 +211,7 @@ mod tests {
             segments: vec![0; 4],
             seq: 4,
             real_len: 3,
-            reply: tx,
+            reply: ReplySink::Oneshot(tx),
         }
     }
 

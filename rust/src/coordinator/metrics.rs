@@ -3,10 +3,11 @@
 //! Shared between the executor workers (writers) and the router (reader —
 //! uses measured latency per (batch, seq) cell for SLA decisions).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 
 #[derive(Debug, Default, Clone)]
@@ -178,6 +179,52 @@ impl MetricsHub {
 
     pub fn uptime_secs(&self) -> f64 {
         self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Structured snapshot for the protocol v2 `stats` command — the same
+    /// numbers as [`MetricsHub::report`], machine-readable instead of a
+    /// preformatted blob.
+    pub fn to_json(&self) -> Json {
+        let hist = |h: &LatencyHistogram| {
+            let mut m = BTreeMap::new();
+            m.insert("p50_us".to_string(), Json::UInt(h.quantile_us(0.5)));
+            m.insert("p90_us".to_string(), Json::UInt(h.quantile_us(0.9)));
+            m.insert("p99_us".to_string(), Json::UInt(h.quantile_us(0.99)));
+            m.insert("mean_us".to_string(), Json::Num(h.mean_us()));
+            Json::Obj(m)
+        };
+        let mut variants = BTreeMap::new();
+        for (key, s) in self.snapshot_all() {
+            let mut v = BTreeMap::new();
+            v.insert("requests".to_string(), Json::UInt(s.requests));
+            v.insert("batches".to_string(), Json::UInt(s.batches));
+            v.insert("errors".to_string(), Json::UInt(s.errors));
+            v.insert("mean_batch_occupancy".to_string(), Json::Num(s.mean_batch_occupancy()));
+            v.insert("padding_waste".to_string(), Json::Num(s.padding_waste()));
+            v.insert("real_tokens".to_string(), Json::UInt(s.real_tokens));
+            v.insert("padded_tokens".to_string(), Json::UInt(s.padded_tokens));
+            v.insert("queue".to_string(), hist(&s.queue));
+            v.insert("exec".to_string(), hist(&s.exec));
+            v.insert("total".to_string(), hist(&s.total));
+            variants.insert(key, Json::Obj(v));
+        }
+        let workers = self
+            .worker_snapshot()
+            .into_iter()
+            .map(|w| {
+                let mut m = BTreeMap::new();
+                m.insert("batches".to_string(), Json::UInt(w.batches));
+                m.insert("rows".to_string(), Json::UInt(w.rows));
+                m.insert("busy_us".to_string(), Json::UInt(w.busy_us));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("uptime_secs".to_string(), Json::Num(self.uptime_secs()));
+        top.insert("padding_waste".to_string(), Json::Num(self.total_padding_waste()));
+        top.insert("variants".to_string(), Json::Obj(variants));
+        top.insert("workers".to_string(), Json::Arr(workers));
+        Json::Obj(top)
     }
 
     /// Human-readable report (the `powerbert stats` CLI output).

@@ -1,14 +1,18 @@
 //! L3 serving coordinator — the systems half of the PoWER-BERT reproduction.
 //!
-//! Components: request/response types, seq-bucketed dynamic batcher
+//! Components: request/response types (`Input`/`Sla`/`Response` — the one
+//! request vocabulary shared by in-process callers, the wire protocol and
+//! [`crate::client::PowerClient`]), seq-bucketed dynamic batcher
 //! (size-or-deadline, keyed by (dataset, variant, seq-bucket)), SLA-aware
 //! variant router (the paper's Pareto curve as runtime policy, with a
 //! seq-aware cost model), the scheduler's front thread + N-worker executor
 //! pool over a shared artifact store, metrics (incl. padding waste and
-//! per-worker utilisation), and a TCP line-protocol server.
+//! per-worker utilisation), the versioned wire protocol (`protocol`), and
+//! a multiplexed TCP server with a v1 compat shim.
 
 pub mod batcher;
 pub mod metrics;
+pub mod protocol;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -16,7 +20,8 @@ pub mod server;
 
 pub use batcher::{Batch, BatchKey, BatchPolicy, Batcher};
 pub use metrics::{MetricsHub, VariantStats, WorkerStats};
+pub use protocol::{ErrorCode, PROTOCOL_VERSION};
 pub use request::{Input, Request, Response, ServeError, Sla};
 pub use router::{Policy, Router};
 pub use scheduler::{Client, Config, Coordinator};
-pub use server::Server;
+pub use server::{Server, ServerHandle, DEFAULT_MAX_CONNECTIONS, MAX_INFLIGHT_PER_CONNECTION};

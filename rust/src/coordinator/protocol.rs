@@ -1,0 +1,549 @@
+//! Wire protocol v2 — the one schema shared by the TCP server and the
+//! typed [`crate::client::PowerClient`].
+//!
+//! One JSON object per line in each direction. Version negotiation is per
+//! frame: any object carrying `"v": 2` speaks this dialect; a line without
+//! `v` is a legacy v1 request and is answered in the v1 shape (see
+//! `coordinator::server`). v2 frames:
+//!
+//! Client -> server:
+//!   {"v":2, "id":7, "dataset":"sst2", "text":"...", "text_b":"...",
+//!    "max_latency_ms":5.0, "min_metric":0.88, "variant":"power-default"}
+//!   {"v":2, "id":8, "dataset":"sst2", "tokens":[...], "segments":[...]}
+//!   {"v":2, "batch":[{...}, {...}]}              // entries as above, sans "v"
+//!   {"v":2, "id":1, "cmd":"hello" | "stats" | "variants"}
+//!
+//! Server -> client (ids echoed verbatim, completion may be out of order):
+//!   {"v":2, "id":7, "result":{"label":1, "scores":[...], "variant":"...",
+//!     "queue_us":120, "exec_us":900, "total_us":1080, "batch_size":4,
+//!     "seq_bucket":32}}
+//!   {"v":2, "id":7, "error":{"code":"overloaded", "message":"..."}}
+//!   {"v":2, "id":1, "hello":{...}} / {"stats":{...}} / {"variants":[...]}
+//!
+//! Request ids are client-assigned u64s; the server never reinterprets
+//! them (no f64 round-trip — `Json::UInt` keeps ids >= 2^53 exact) and a
+//! connection may have any number of requests in flight. Unknown fields in
+//! a v2 frame are a `bad_request` error, not silently ignored: silent
+//! tolerance is how typos in SLA field names turn into SLA-less requests.
+
+use std::collections::BTreeMap;
+
+use super::request::{Input, Response, ServeError, Sla};
+use crate::util::json::Json;
+
+/// Version advertised in the hello frame and stamped on every v2 frame.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// Structured error codes of the v2 dialect. Stable strings on the wire;
+/// `Other` is the client-side catch-all for codes this build doesn't know
+/// (a newer server), never sent by this server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line was not valid JSON.
+    BadJson,
+    /// Valid JSON, but not a valid v2 frame (missing/mistyped/unknown fields).
+    BadRequest,
+    /// Unknown `cmd` value.
+    UnknownCmd,
+    /// Bounded queue full — backpressure; retry later.
+    Overloaded,
+    UnknownDataset,
+    UnknownVariant,
+    /// Coordinator is shutting down.
+    Shutdown,
+    /// Model execution failed.
+    ExecFailed,
+    /// Unrecognized wire code (forward compatibility).
+    Other,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadJson => "bad_json",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownCmd => "unknown_cmd",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::UnknownDataset => "unknown_dataset",
+            ErrorCode::UnknownVariant => "unknown_variant",
+            ErrorCode::Shutdown => "shutdown",
+            ErrorCode::ExecFailed => "exec_failed",
+            ErrorCode::Other => "other",
+        }
+    }
+
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "bad_json" => ErrorCode::BadJson,
+            "bad_request" => ErrorCode::BadRequest,
+            "unknown_cmd" => ErrorCode::UnknownCmd,
+            "overloaded" => ErrorCode::Overloaded,
+            "unknown_dataset" => ErrorCode::UnknownDataset,
+            "unknown_variant" => ErrorCode::UnknownVariant,
+            "shutdown" => ErrorCode::Shutdown,
+            "exec_failed" => ErrorCode::ExecFailed,
+            _ => ErrorCode::Other,
+        }
+    }
+
+    /// `ServeError::code` is the one ServeError→wire-code table; this is
+    /// just its typed view, so the two can never drift.
+    pub fn from_serve(e: &ServeError) -> ErrorCode {
+        ErrorCode::parse(e.code())
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A parse/validation failure, carrying the offending frame's id when it
+/// could still be recovered so the error frame can be routed client-side.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub id: Option<u64>,
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(id: Option<u64>, code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError { id, code, message: message.into() }
+    }
+}
+
+/// A fully validated v2 classification request.
+#[derive(Debug)]
+pub struct WireRequest {
+    pub id: u64,
+    pub dataset: String,
+    pub input: Input,
+    pub sla: Sla,
+}
+
+fn frame(id: Option<u64>) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::UInt(PROTOCOL_VERSION));
+    if let Some(id) = id {
+        m.insert("id".to_string(), Json::UInt(id));
+    }
+    m
+}
+
+/// `{"v":2,"id":...,"error":{"code":...,"message":...}}`; id omitted when
+/// the request was too mangled to recover one.
+pub fn error_frame(id: Option<u64>, code: ErrorCode, message: &str) -> Json {
+    let mut e = BTreeMap::new();
+    e.insert("code".to_string(), Json::Str(code.as_str().to_string()));
+    e.insert("message".to_string(), Json::Str(message.to_string()));
+    let mut m = frame(id);
+    m.insert("error".to_string(), Json::Obj(e));
+    Json::Obj(m)
+}
+
+/// `{"v":2,"id":...,"result":{...}}`.
+pub fn result_frame(id: u64, r: &Response) -> Json {
+    let mut m = frame(Some(id));
+    m.insert("result".to_string(), response_payload(r));
+    Json::Obj(m)
+}
+
+/// The `result` payload of a completed classification.
+pub fn response_payload(r: &Response) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("label".into(), Json::UInt(r.label as u64));
+    m.insert(
+        "scores".into(),
+        Json::Arr(r.scores.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    m.insert("variant".into(), Json::Str(r.variant.clone()));
+    m.insert("queue_us".into(), Json::UInt(r.queue_us));
+    m.insert("exec_us".into(), Json::UInt(r.exec_us));
+    m.insert("total_us".into(), Json::UInt(r.total_us));
+    m.insert("batch_size".into(), Json::UInt(r.batch_size as u64));
+    m.insert("seq_bucket".into(), Json::UInt(r.seq_bucket as u64));
+    Json::Obj(m)
+}
+
+/// Client-side inverse of [`response_payload`]. `id` is the frame-level id
+/// (the payload itself carries none).
+pub fn response_from_payload(id: u64, j: &Json) -> Result<Response, String> {
+    let label = j
+        .get("label")
+        .and_then(Json::as_u64)
+        .ok_or("result missing label")? as usize;
+    let scores = j
+        .get("scores")
+        .and_then(Json::as_arr)
+        .ok_or("result missing scores")?
+        .iter()
+        .map(|s| s.as_f64().map(|f| f as f32).ok_or("non-numeric score"))
+        .collect::<Result<Vec<f32>, _>>()?;
+    let variant = j.get("variant").and_then(Json::as_str).ok_or("result missing variant")?;
+    let u = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+    Ok(Response {
+        id,
+        label,
+        scores,
+        variant: variant.to_string(),
+        queue_us: u("queue_us"),
+        exec_us: u("exec_us"),
+        total_us: u("total_us"),
+        batch_size: u("batch_size") as usize,
+        seq_bucket: u("seq_bucket") as usize,
+    })
+}
+
+/// Serialize one classification request (the client side). With
+/// `versioned` the frame carries `"v":2` (top-level request); batch
+/// entries leave it off — the enclosing batch frame already declared it.
+pub fn request_frame(
+    id: u64,
+    dataset: &str,
+    input: &Input,
+    sla: &Sla,
+    versioned: bool,
+) -> Json {
+    let mut m = if versioned { frame(Some(id)) } else { BTreeMap::new() };
+    if !versioned {
+        m.insert("id".to_string(), Json::UInt(id));
+    }
+    m.insert("dataset".to_string(), Json::Str(dataset.to_string()));
+    match input {
+        Input::Text { a, b } => {
+            m.insert("text".to_string(), Json::Str(a.clone()));
+            if let Some(b) = b {
+                m.insert("text_b".to_string(), Json::Str(b.clone()));
+            }
+        }
+        Input::Tokens { tokens, segments } => {
+            m.insert(
+                "tokens".to_string(),
+                Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            );
+            m.insert(
+                "segments".to_string(),
+                Json::Arr(segments.iter().map(|&s| Json::Num(s as f64)).collect()),
+            );
+        }
+    }
+    if let Some(ms) = sla.max_latency_ms {
+        m.insert("max_latency_ms".to_string(), Json::Num(ms));
+    }
+    if let Some(metric) = sla.min_metric {
+        m.insert("min_metric".to_string(), Json::Num(metric));
+    }
+    if let Some(v) = &sla.variant {
+        m.insert("variant".to_string(), Json::Str(v.clone()));
+    }
+    Json::Obj(m)
+}
+
+/// `{"v":2,"batch":[...]}` over entries from [`request_frame`].
+pub fn batch_frame(entries: Vec<Json>) -> Json {
+    let mut m = frame(None);
+    m.insert("batch".to_string(), Json::Arr(entries));
+    Json::Obj(m)
+}
+
+/// `{"v":2,"id":...,"cmd":...}` (+ optional dataset for `variants`).
+pub fn cmd_frame(id: u64, cmd: &str, dataset: Option<&str>) -> Json {
+    let mut m = frame(Some(id));
+    m.insert("cmd".to_string(), Json::Str(cmd.to_string()));
+    if let Some(d) = dataset {
+        m.insert("dataset".to_string(), Json::Str(d.to_string()));
+    }
+    Json::Obj(m)
+}
+
+fn parse_i32_array(j: &Json, what: &str) -> Result<Vec<i32>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|v| {
+            // Range-checked: `as i32` would silently saturate 2^32 to
+            // i32::MAX, turning garbage into a plausible-looking token id.
+            v.as_f64()
+                .filter(|f| f.fract() == 0.0 && (0.0..=i32::MAX as f64).contains(f))
+                .map(|f| f as i32)
+                .ok_or_else(|| format!("{what} must contain integers in 0..=2^31-1"))
+        })
+        .collect()
+}
+
+/// Validate one v2 classification request object. `in_batch` entries have
+/// no `v` field of their own. Strict by design: an unknown field is a
+/// `bad_request`, because a silently dropped `max_latncy_ms` typo is an
+/// SLA violation waiting to be paged about.
+pub fn parse_request(j: &Json, in_batch: bool) -> Result<WireRequest, WireError> {
+    let obj = match j.as_obj() {
+        Some(o) => o,
+        None => return Err(WireError::new(None, ErrorCode::BadRequest, "frame must be an object")),
+    };
+    // The id is recovered first so every later error can be routed.
+    let id = match obj.get("id") {
+        Some(v) => match v.as_u64() {
+            Some(id) => id,
+            None => {
+                return Err(WireError::new(
+                    None,
+                    ErrorCode::BadRequest,
+                    "id must be a non-negative integer",
+                ))
+            }
+        },
+        None => return Err(WireError::new(None, ErrorCode::BadRequest, "missing id")),
+    };
+    let fail = |code, msg: String| Err(WireError::new(Some(id), code, msg));
+
+    for key in obj.keys() {
+        let known = matches!(
+            key.as_str(),
+            "id" | "dataset"
+                | "text"
+                | "text_b"
+                | "tokens"
+                | "segments"
+                | "max_latency_ms"
+                | "min_metric"
+                | "variant"
+        ) || (!in_batch && key == "v");
+        if !known {
+            return fail(ErrorCode::BadRequest, format!("unknown field {key:?}"));
+        }
+    }
+
+    let dataset = match obj.get("dataset").map(|d| (d, d.as_str())) {
+        Some((_, Some(d))) => d.to_string(),
+        Some((_, None)) => return fail(ErrorCode::BadRequest, "dataset must be a string".into()),
+        None => return fail(ErrorCode::BadRequest, "missing dataset".into()),
+    };
+
+    let text = obj.get("text");
+    let tokens = obj.get("tokens");
+    // Cross-kind fields are rejected, not dropped: `segments` does nothing
+    // for a text request and `text_b` nothing for a token request, and the
+    // whole point of v2 strictness is that ignored fields fail loudly.
+    if text.is_some() && obj.contains_key("segments") {
+        return fail(ErrorCode::BadRequest, "segments is only valid with tokens".into());
+    }
+    if tokens.is_some() && obj.contains_key("text_b") {
+        return fail(ErrorCode::BadRequest, "text_b is only valid with text".into());
+    }
+    let input = match (text, tokens) {
+        (Some(_), Some(_)) => {
+            return fail(ErrorCode::BadRequest, "text and tokens are mutually exclusive".into())
+        }
+        (Some(t), None) => {
+            let a = match t.as_str() {
+                Some(a) => a.to_string(),
+                None => return fail(ErrorCode::BadRequest, "text must be a string".into()),
+            };
+            let b = match obj.get("text_b") {
+                None | Some(Json::Null) => None,
+                Some(v) => match v.as_str() {
+                    Some(b) => Some(b.to_string()),
+                    None => {
+                        return fail(
+                            ErrorCode::BadRequest,
+                            "text_b must be a string or null".into(),
+                        )
+                    }
+                },
+            };
+            Input::Text { a, b }
+        }
+        (None, Some(t)) => {
+            let tokens = match parse_i32_array(t, "tokens") {
+                Ok(v) => v,
+                Err(e) => return fail(ErrorCode::BadRequest, e),
+            };
+            let segments = match obj.get("segments") {
+                Some(s) => match parse_i32_array(s, "segments") {
+                    Ok(v) => v,
+                    Err(e) => return fail(ErrorCode::BadRequest, e),
+                },
+                None => vec![0; tokens.len()],
+            };
+            Input::Tokens { tokens, segments }
+        }
+        (None, None) => return fail(ErrorCode::BadRequest, "missing text or tokens".into()),
+    };
+
+    let num = |key: &str| -> Result<Option<f64>, WireError> {
+        match obj.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+                WireError::new(Some(id), ErrorCode::BadRequest, format!("{key} must be a number"))
+            }),
+        }
+    };
+    let sla = Sla {
+        max_latency_ms: num("max_latency_ms")?,
+        min_metric: num("min_metric")?,
+        variant: match obj.get("variant") {
+            None | Some(Json::Null) => None,
+            Some(v) => match v.as_str() {
+                Some(s) => Some(s.to_string()),
+                None => return fail(ErrorCode::BadRequest, "variant must be a string".into()),
+            },
+        },
+    };
+    Ok(WireRequest { id, dataset, input, sla })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips_through_parse() {
+        let sla = Sla {
+            max_latency_ms: Some(4.5),
+            min_metric: None,
+            variant: Some("power-default".into()),
+        };
+        let input = Input::Text { a: "pos_1 filler_2".into(), b: None };
+        let j = request_frame(9007199254740993, "sst2", &input, &sla, true);
+        let r = parse_request(&j, false).expect("parse");
+        assert_eq!(r.id, 9007199254740993, "id must not round-trip through f64");
+        assert_eq!(r.dataset, "sst2");
+        assert_eq!(r.sla.max_latency_ms, Some(4.5));
+        assert_eq!(r.sla.variant.as_deref(), Some("power-default"));
+        assert!(matches!(r.input, Input::Text { .. }));
+    }
+
+    #[test]
+    fn tokens_request_roundtrips() {
+        let input = Input::Tokens { tokens: vec![2, 7, 9, 3, 0], segments: vec![0; 5] };
+        let j = request_frame(1, "sst2", &input, &Sla::default(), true);
+        let r = parse_request(&j, false).expect("parse");
+        match r.input {
+            Input::Tokens { tokens, segments } => {
+                assert_eq!(tokens, vec![2, 7, 9, 3, 0]);
+                assert_eq!(segments.len(), 5);
+            }
+            other => panic!("wrong input kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_with_id() {
+        let j = Json::parse(r#"{"v":2,"id":3,"dataset":"sst2","text":"x","max_latncy_ms":5}"#)
+            .unwrap();
+        let e = parse_request(&j, false).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(e.id, Some(3), "error must still carry the id");
+        assert!(e.message.contains("max_latncy_ms"), "{}", e.message);
+    }
+
+    #[test]
+    fn missing_and_mistyped_fields_are_bad_request() {
+        for (line, needle) in [
+            (r#"{"v":2,"dataset":"sst2","text":"x"}"#, "missing id"),
+            (r#"{"v":2,"id":-1,"dataset":"sst2","text":"x"}"#, "id must"),
+            (r#"{"v":2,"id":1.5,"dataset":"sst2","text":"x"}"#, "id must"),
+            (r#"{"v":2,"id":1,"text":"x"}"#, "missing dataset"),
+            (r#"{"v":2,"id":1,"dataset":"sst2"}"#, "missing text or tokens"),
+            (r#"{"v":2,"id":1,"dataset":"sst2","text":7}"#, "text must"),
+            (
+                r#"{"v":2,"id":1,"dataset":"sst2","text":"x","tokens":[1]}"#,
+                "mutually exclusive",
+            ),
+            (
+                r#"{"v":2,"id":1,"dataset":"sst2","text":"x","segments":[0]}"#,
+                "segments is only valid",
+            ),
+            (
+                r#"{"v":2,"id":1,"dataset":"sst2","tokens":[1],"text_b":"y"}"#,
+                "text_b is only valid",
+            ),
+            (
+                r#"{"v":2,"id":1,"dataset":"sst2","tokens":[4294967296]}"#,
+                "tokens must contain integers",
+            ),
+            (
+                r#"{"v":2,"id":1,"dataset":"sst2","tokens":[-3]}"#,
+                "tokens must contain integers",
+            ),
+            (
+                r#"{"v":2,"id":1,"dataset":"sst2","text":"x","max_latency_ms":"soon"}"#,
+                "must be a number",
+            ),
+        ] {
+            let e = parse_request(&Json::parse(line).unwrap(), false).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{line}");
+            assert!(e.message.contains(needle), "{line}: {}", e.message);
+        }
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::BadJson,
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownCmd,
+            ErrorCode::Overloaded,
+            ErrorCode::UnknownDataset,
+            ErrorCode::UnknownVariant,
+            ErrorCode::Shutdown,
+            ErrorCode::ExecFailed,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), code);
+        }
+        assert_eq!(ErrorCode::parse("from_the_future"), ErrorCode::Other);
+        assert_eq!(
+            ErrorCode::from_serve(&ServeError::Overloaded),
+            ErrorCode::Overloaded
+        );
+        // Every ServeError must map to a real wire code, never Other —
+        // from_serve goes through ServeError::code + parse, so this pins
+        // both tables in sync.
+        for e in [
+            ServeError::Overloaded,
+            ServeError::UnknownDataset("x".into()),
+            ServeError::UnknownVariant("x".into()),
+            ServeError::BadInput("x".into()),
+            ServeError::Shutdown,
+            ServeError::Exec("x".into()),
+        ] {
+            assert_ne!(ErrorCode::from_serve(&e), ErrorCode::Other, "{e}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let r = Response {
+            id: 42,
+            label: 1,
+            scores: vec![0.25, 0.75],
+            variant: "power-default".into(),
+            queue_us: 120,
+            exec_us: 900,
+            total_us: 1080,
+            batch_size: 4,
+            seq_bucket: 32,
+        };
+        let frame = result_frame(r.id, &r);
+        assert_eq!(frame.get("v").and_then(Json::as_u64), Some(PROTOCOL_VERSION));
+        let id = frame.get("id").and_then(Json::as_u64).unwrap();
+        let back = response_from_payload(id, frame.get("result").unwrap()).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.label, 1);
+        assert_eq!(back.scores, r.scores);
+        assert_eq!(back.seq_bucket, 32);
+    }
+
+    #[test]
+    fn error_frame_shape() {
+        let j = error_frame(Some(7), ErrorCode::Overloaded, "queue full");
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(7));
+        let e = j.get("error").unwrap();
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(e.get("message").and_then(Json::as_str), Some("queue full"));
+        // No recoverable id: the field is absent, not null.
+        assert!(error_frame(None, ErrorCode::BadJson, "x").get("id").is_none());
+    }
+}

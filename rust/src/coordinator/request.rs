@@ -65,8 +65,26 @@ pub enum ServeError {
     Overloaded,
     UnknownDataset(String),
     UnknownVariant(String),
+    /// The request itself is malformed (wrong token-row length, token id
+    /// outside the vocabulary, ...). Rejected at submit, before batching,
+    /// so one bad row can never fail co-batched requests.
+    BadInput(String),
     Shutdown,
     Exec(String),
+}
+
+impl ServeError {
+    /// Stable wire-protocol error code (protocol v2 `error.code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded => "overloaded",
+            ServeError::UnknownDataset(_) => "unknown_dataset",
+            ServeError::UnknownVariant(_) => "unknown_variant",
+            ServeError::BadInput(_) => "bad_request",
+            ServeError::Shutdown => "shutdown",
+            ServeError::Exec(_) => "exec_failed",
+        }
+    }
 }
 
 impl std::fmt::Display for ServeError {
@@ -75,6 +93,7 @@ impl std::fmt::Display for ServeError {
             ServeError::Overloaded => write!(f, "coordinator overloaded (queue full)"),
             ServeError::UnknownDataset(d) => write!(f, "unknown dataset {d:?}"),
             ServeError::UnknownVariant(v) => write!(f, "unknown variant {v:?}"),
+            ServeError::BadInput(e) => write!(f, "bad input: {e}"),
             ServeError::Shutdown => write!(f, "coordinator shut down"),
             ServeError::Exec(e) => write!(f, "execution failed: {e}"),
         }
@@ -82,6 +101,34 @@ impl std::fmt::Display for ServeError {
 }
 
 impl std::error::Error for ServeError {}
+
+/// Where a request's result is delivered. In-process callers get a
+/// dedicated one-shot channel per request; the multiplexed TCP front-end
+/// funnels every in-flight request of a connection into one shared channel,
+/// tagged with the client-assigned id, so a single pump thread can write
+/// out-of-order completions back to the socket.
+pub enum ReplySink {
+    /// Per-request channel (`Client::submit`); the id tag is implicit.
+    Oneshot(Sender<Result<Response, ServeError>>),
+    /// Shared per-connection channel; results are tagged with the request
+    /// id so the receiver can route frames without one thread per request.
+    Tagged(Sender<(u64, Result<Response, ServeError>)>),
+}
+
+impl ReplySink {
+    /// Deliver a result. A closed receiver (client went away) is not an
+    /// error — the result is simply dropped, like the seed's `let _ =`.
+    pub fn send(&self, id: u64, result: Result<Response, ServeError>) {
+        match self {
+            ReplySink::Oneshot(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplySink::Tagged(tx) => {
+                let _ = tx.send((id, result));
+            }
+        }
+    }
+}
 
 /// Internal: a request bound to a chosen variant, carrying its reply pipe.
 /// `tokens`/`segments` are encoded to `seq` ids — the smallest configured
@@ -98,5 +145,12 @@ pub struct Job {
     /// True token count before bucket padding ([CLS]..[SEP] inclusive);
     /// the numerator of the padding-waste metric.
     pub real_len: usize,
-    pub reply: Sender<Result<Response, ServeError>>,
+    pub reply: ReplySink,
+}
+
+impl Job {
+    /// Deliver this job's result through its sink, tagged with its id.
+    pub fn respond(&self, result: Result<Response, ServeError>) {
+        self.reply.send(self.req.id, result);
+    }
 }

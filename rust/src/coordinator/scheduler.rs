@@ -31,14 +31,14 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, BatchKey, BatchPolicy, Batcher};
 use super::metrics::MetricsHub;
-use super::request::{Input, Job, Request, Response, ServeError, Sla};
+use super::request::{Input, Job, ReplySink, Request, Response, ServeError, Sla};
 use super::router::{Policy, Router};
 use crate::runtime::{ArtifactStore, BackendKind, EngineWorker, Registry};
 use crate::tokenizer::{Tokenizer, Vocab, PAD_ID};
@@ -144,6 +144,7 @@ pub struct Client {
     metrics: Arc<MetricsHub>,
     seq_buckets: Arc<Vec<usize>>,
     next_id: Arc<AtomicU64>,
+    backend: BackendKind,
 }
 
 impl Client {
@@ -154,6 +155,35 @@ impl Client {
         input: Input,
         sla: Sla,
     ) -> Result<Receiver<Result<Response, ServeError>>, ServeError> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_with_sink(dataset, input, sla, id, ReplySink::Oneshot(reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// Submit with a caller-assigned id and a shared, tagged reply channel:
+    /// the multiplexed protocol front-end funnels every in-flight request
+    /// of a connection into one channel and routes completions by id, so a
+    /// pipelined connection costs one pump thread, not one per request.
+    pub fn submit_tagged(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+        id: u64,
+        reply: Sender<(u64, Result<Response, ServeError>)>,
+    ) -> Result<(), ServeError> {
+        self.submit_with_sink(dataset, input, sla, id, ReplySink::Tagged(reply))
+    }
+
+    fn submit_with_sink(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+        id: u64,
+        reply: ReplySink,
+    ) -> Result<(), ServeError> {
         let meta = self.router.route(dataset, &sla)?;
         let (tokens, segments, seq, real_len) = match &input {
             Input::Text { a, b } => {
@@ -164,10 +194,25 @@ impl Client {
             }
             Input::Tokens { tokens, segments } => {
                 if tokens.len() != meta.seq_len || segments.len() != meta.seq_len {
-                    return Err(ServeError::Exec(format!(
+                    return Err(ServeError::BadInput(format!(
                         "expected {} tokens, got {}",
                         meta.seq_len,
                         tokens.len()
+                    )));
+                }
+                // Pre-encoded rows arrive from the wire: validate against
+                // the vocabulary HERE, per request, because by execution
+                // time the row is batched with innocent neighbours and a
+                // single out-of-range id would fail them all.
+                let vocab_len = self.tokenizer.vocab.len() as i32;
+                if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t >= vocab_len) {
+                    return Err(ServeError::BadInput(format!(
+                        "token id {t} outside vocabulary (0..{vocab_len})"
+                    )));
+                }
+                if let Some(&s) = segments.iter().find(|&&s| !(0..=1).contains(&s)) {
+                    return Err(ServeError::BadInput(format!(
+                        "segment id {s} invalid (expected 0 or 1)"
                     )));
                 }
                 // Pre-encoded rows arrive padded to full length; the true
@@ -186,10 +231,9 @@ impl Client {
                 (t, s, bucket, need)
             }
         };
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         let job = Job {
             req: Request {
-                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                id,
                 dataset: dataset.to_string(),
                 input,
                 sla,
@@ -200,10 +244,10 @@ impl Client {
             segments,
             seq,
             real_len,
-            reply: reply_tx,
+            reply,
         };
         match self.submit_tx.try_send(job) {
-            Ok(()) => Ok(reply_rx),
+            Ok(()) => Ok(()),
             Err(TrySendError::Full(_)) => Err(ServeError::Overloaded),
             Err(TrySendError::Disconnected(_)) => Err(ServeError::Shutdown),
         }
@@ -230,6 +274,18 @@ impl Client {
 
     pub fn metrics(&self) -> &Arc<MetricsHub> {
         &self.metrics
+    }
+
+    /// Backend every pool worker runs on (advertised in the protocol v2
+    /// hello frame).
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// Configured seq buckets for length-aware batching (ascending; empty
+    /// when bucketing is off).
+    pub fn seq_buckets(&self) -> &[usize] {
+        &self.seq_buckets
     }
 }
 
@@ -321,6 +377,7 @@ impl Coordinator {
                 metrics,
                 seq_buckets: Arc::new(seq_buckets),
                 next_id: Arc::new(AtomicU64::new(1)),
+                backend,
             }),
             registry,
             front: Some(front),
@@ -422,9 +479,7 @@ fn front_loop(
             }
         }
         for job in b.jobs {
-            let _ = job
-                .reply
-                .send(Err(ServeError::Exec("no executor worker available".into())));
+            job.respond(Err(ServeError::Exec("no executor worker available".into())));
         }
     };
     loop {
@@ -473,7 +528,7 @@ fn worker_loop(
                 match exec_rx.try_recv() {
                     Ok(ExecMsg::Run(batch)) => {
                         for job in batch.jobs {
-                            let _ = job.reply.send(Err(ServeError::Exec(format!(
+                            job.respond(Err(ServeError::Exec(format!(
                                 "worker {id} has no {backend} backend"
                             ))));
                         }
@@ -512,7 +567,7 @@ fn run_batch(
         Some(m) => m.clone(),
         None => {
             for job in batch.jobs {
-                let _ = job.reply.send(Err(ServeError::UnknownVariant(variant.into())));
+                job.respond(Err(ServeError::UnknownVariant(variant.into())));
             }
             return;
         }
@@ -522,7 +577,7 @@ fn run_batch(
         Err(e) => {
             metrics.record_error(&key);
             for job in batch.jobs {
-                let _ = job.reply.send(Err(ServeError::Exec(e.to_string())));
+                job.respond(Err(ServeError::Exec(e.to_string())));
             }
             return;
         }
@@ -559,14 +614,14 @@ fn run_batch(
                     batch_size: n,
                     seq_bucket: cell.1,
                 };
-                let _ = job.reply.send(Ok(resp));
+                job.respond(Ok(resp));
             }
         }
         Err(e) => {
             metrics.record_error(&key);
             metrics.record_worker(worker.id(), n, t_exec.elapsed().as_micros() as u64);
             for job in batch.jobs {
-                let _ = job.reply.send(Err(ServeError::Exec(e.to_string())));
+                job.respond(Err(ServeError::Exec(e.to_string())));
             }
         }
     }

@@ -1,28 +1,54 @@
-//! TCP line-protocol front-end (tokio is not vendored; std::net + threads).
+//! TCP front-end speaking wire protocol v2 (tokio is not vendored;
+//! std::net + threads), with a v1 compat shim.
 //!
-//! One JSON object per line in, one per line out:
-//!   -> {"dataset": "sst2", "text": "pos_1 filler_2", "text_b": null,
-//!       "max_latency_ms": 5.0, "min_metric": 0.88, "variant": "power-default"}
-//!   <- {"id": 7, "label": 1, "scores": [..], "variant": "power-default",
-//!       "queue_us": 120, "exec_us": 900, "total_us": 1080, "batch_size": 4}
-//!   <- {"error": "coordinator overloaded (queue full)"}
+//! One JSON object per line in each direction. Frames carrying `"v": 2`
+//! speak the multiplexed v2 dialect of [`super::protocol`]: client-assigned
+//! request ids, any number of requests in flight per connection, replies in
+//! completion order (matched by id), `{"v":2,"batch":[...]}` submissions,
+//! structured `{"error":{"code","message"}}` errors, and `cmd` frames
+//! (`hello` advertises capabilities, `stats` returns structured metrics,
+//! `variants` lists routable variants). A line without `v` is a legacy v1
+//! request — `{"dataset","text",...}` in, `{"id","label","scores",...}` or
+//! `{"error":"<string>"}` out, handled synchronously exactly like the seed
+//! — so v1 scripts keep working against a v2 server unchanged.
 //!
-//! Special request {"cmd": "stats"} returns the metrics report;
-//! {"cmd": "variants", "dataset": "sst2"} lists routable variants.
+//! Per connection: the handler thread reads frames; v2 classifications are
+//! submitted with a shared tagged reply channel, and a single pump thread
+//! writes completions back as they finish — pipelining costs one thread,
+//! not one per in-flight request. A writer thread serializes all socket
+//! writes (v1 replies, v2 completions, command replies).
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Sender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
+use super::protocol::{self, ErrorCode, PROTOCOL_VERSION};
 use super::request::{Input, Response, ServeError, Sla};
 use super::scheduler::Client;
 use crate::util::json::Json;
 
-/// Default bound on concurrent connections: each connection holds one
-/// handler thread, so an unbounded accept loop is an unbounded
+/// Default bound on concurrent connections: each connection holds a small
+/// fixed set of threads, so an unbounded accept loop is an unbounded
 /// `thread::spawn` — a trivial resource-exhaustion vector.
 pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
+
+/// Cap on requests in flight per connection. Together with the bounded
+/// per-connection write queue this bounds server memory against a client
+/// that submits but never reads its replies: completed-but-unread results
+/// can't exceed the in-flight cap, and further submissions are refused
+/// with `overloaded` until the client drains. Far above any sane pipeline
+/// depth (the batcher caps batches at tens of rows).
+pub const MAX_INFLIGHT_PER_CONNECTION: usize = 1024;
+
+/// Bound of the per-connection write queue (serialized reply lines). When
+/// the peer stops reading, the writer thread stalls on the socket, this
+/// queue fills, and the reader thread blocks on its next reply — stalling
+/// intake exactly like the seed's synchronous write-in-reader-loop did.
+const WRITE_QUEUE_DEPTH: usize = 256;
 
 /// Serving front-end over a coordinator client.
 pub struct Server {
@@ -30,6 +56,13 @@ pub struct Server {
     client: Client,
     stop: Arc<AtomicBool>,
     pub connections: Arc<AtomicUsize>,
+    max_connections: usize,
+}
+
+/// Connection bookkeeping shared with every handler (current/max counts
+/// are reported by the v2 `stats` command).
+struct ConnInfo {
+    connections: Arc<AtomicUsize>,
     max_connections: usize,
 }
 
@@ -66,6 +99,10 @@ impl Server {
     /// accepts — pair with a wake-up connection, see `Server::shutdown`).
     pub fn run(&self) -> std::io::Result<()> {
         crate::info!("server", "listening on {}", self.listener.local_addr()?);
+        let info = Arc::new(ConnInfo {
+            connections: self.connections.clone(),
+            max_connections: self.max_connections,
+        });
         for stream in self.listener.incoming() {
             if self.stop.load(Ordering::Relaxed) {
                 break;
@@ -74,19 +111,25 @@ impl Server {
                 Ok(mut s) => {
                     // Bounded handler pool: shed over-limit connections
                     // with a protocol-shaped error instead of an unbounded
-                    // thread::spawn.
+                    // thread::spawn. The reply is v1-shaped (a string
+                    // `error`) with the v2 code alongside, readable by both
+                    // dialects.
                     if self.connections.load(Ordering::Relaxed) >= self.max_connections {
                         crate::warnln!(
                             "server",
                             "connection limit {} reached; shedding client",
                             self.max_connections
                         );
-                        let reply = err_json("server at connection capacity; retry later");
+                        let reply = coded_err_json(
+                            ErrorCode::Overloaded,
+                            "server at connection capacity; retry later",
+                        );
                         let _ = s.write_all(reply.to_string().as_bytes());
                         let _ = s.write_all(b"\n");
                         continue;
                     }
                     let client = self.client.clone();
+                    let info = info.clone();
                     self.connections.fetch_add(1, Ordering::Relaxed);
                     // Drop guard: with the cap enforcing admission, a
                     // panicking handler must not leak its slot (256 leaks
@@ -94,7 +137,7 @@ impl Server {
                     let guard = ConnGuard(self.connections.clone());
                     std::thread::spawn(move || {
                         let _guard = guard;
-                        let _ = handle_connection(s, client);
+                        let _ = handle_connection(s, client, info);
                     });
                 }
                 Err(e) => crate::warnln!("server", "accept failed: {e}"),
@@ -108,6 +151,50 @@ impl Server {
         stop.store(true, Ordering::Relaxed);
         let _ = TcpStream::connect(addr); // wake the blocking accept
     }
+
+    /// Run the accept loop on a background thread, returning a handle that
+    /// knows the bound address and how to stop it. This is the one place
+    /// the bind/spawn/stop/join lifecycle lives — tests, examples and
+    /// benches that need an in-process server should use it rather than
+    /// hand-rolling the stop-flag + wake-connection dance.
+    pub fn spawn(self) -> std::io::Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let stop = self.stop_handle();
+        let thread = std::thread::Builder::new()
+            .name("pb-server".into())
+            .spawn(move || self.run())?;
+        Ok(ServerHandle { addr, stop, thread: Some(thread) })
+    }
+}
+
+/// A [`Server`] running on a background thread (see [`Server::spawn`]).
+/// Dropping the handle stops the accept loop and joins it; connection
+/// handler threads drain their in-flight work independently.
+pub struct ServerHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<std::io::Result<()>>>,
+}
+
+impl ServerHandle {
+    /// The address the server is accepting on (resolves `127.0.0.1:0`).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn stop(self) {
+        drop(self);
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if let Some(thread) = self.thread.take() {
+            Server::shutdown(self.addr, &self.stop);
+            let _ = thread.join();
+        }
+    }
 }
 
 /// Decrements the live-connection counter when the handler thread exits,
@@ -120,56 +207,378 @@ impl Drop for ConnGuard {
     }
 }
 
-fn handle_connection(stream: TcpStream, client: Client) -> std::io::Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    client: Client,
+    info: Arc<ConnInfo>,
+) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     crate::debugln!("server", "connection from {peer}");
-    let mut writer = stream.try_clone()?;
+
+    // Writer thread: the single owner of socket writes, fed by every
+    // producer (reader replies and the completion pump) through a BOUNDED
+    // channel, so interleaved frames never tear mid-line and a peer that
+    // stops reading exerts backpressure instead of growing a queue.
+    let mut write_half = stream.try_clone()?;
+    let (out_tx, out_rx) = sync_channel::<String>(WRITE_QUEUE_DEPTH);
+    let writer = std::thread::spawn(move || {
+        for line in out_rx {
+            if write_half.write_all(line.as_bytes()).is_err()
+                || write_half.write_all(b"\n").is_err()
+                || write_half.flush().is_err()
+            {
+                break;
+            }
+        }
+    });
+
+    // Completion pump: every in-flight v2 request of this connection
+    // reports to this one tagged channel; completions are framed and
+    // written in whatever order the executor pool finishes them. The
+    // channel is unbounded so executor workers never block on a slow
+    // client — its size is instead bounded by the in-flight cap enforced
+    // at submit time.
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let (done_tx, done_rx) = channel::<(u64, Result<Response, ServeError>)>();
+    let pump_out = out_tx.clone();
+    let pump_inflight = inflight.clone();
+    let pump = std::thread::spawn(move || {
+        for (id, result) in done_rx {
+            pump_inflight.fetch_sub(1, Ordering::Relaxed);
+            let frame = match result {
+                Ok(r) => protocol::result_frame(id, &r),
+                Err(e) => {
+                    protocol::error_frame(Some(id), ErrorCode::from_serve(&e), &e.to_string())
+                }
+            };
+            if pump_out.send(frame.to_string()).is_err() {
+                break;
+            }
+        }
+    });
+
     let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    'conn: for line in reader.lines() {
+        let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(&line, &client);
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        for reply in handle_line(&line, &client, &info, &done_tx, &inflight) {
+            if out_tx.send(reply.to_string()).is_err() {
+                break 'conn; // writer died (peer gone)
+            }
+        }
     }
+    // Graceful per-connection drain: jobs still in flight hold their own
+    // clones of `done_tx`, so the pump keeps delivering until the last one
+    // completes, then the writer flushes and both exit.
+    drop(done_tx);
+    drop(out_tx);
+    let _ = pump.join();
+    let _ = writer.join();
     Ok(())
 }
 
+/// v1-shaped error reply: `{"error": "<message>"}`.
 fn err_json(msg: &str) -> Json {
-    let mut m = std::collections::BTreeMap::new();
+    let mut m = BTreeMap::new();
     m.insert("error".to_string(), Json::Str(msg.to_string()));
     Json::Obj(m)
 }
 
-fn response_json(r: &Response) -> Json {
-    let mut m = std::collections::BTreeMap::new();
-    m.insert("id".into(), Json::Num(r.id as f64));
-    m.insert("label".into(), Json::Num(r.label as f64));
-    m.insert(
-        "scores".into(),
-        Json::Arr(r.scores.iter().map(|&s| Json::Num(s as f64)).collect()),
-    );
-    m.insert("variant".into(), Json::Str(r.variant.clone()));
-    m.insert("queue_us".into(), Json::Num(r.queue_us as f64));
-    m.insert("exec_us".into(), Json::Num(r.exec_us as f64));
-    m.insert("total_us".into(), Json::Num(r.total_us as f64));
-    m.insert("batch_size".into(), Json::Num(r.batch_size as f64));
-    m.insert("seq_bucket".into(), Json::Num(r.seq_bucket as f64));
+/// Dialect-agnostic error: the v1 string `error` with the v2 `code`
+/// alongside. Used when the sender's dialect is unknowable (unparseable
+/// line, connection shed before any frame) — v1 scripts read the string,
+/// the typed client reads the code.
+fn coded_err_json(code: ErrorCode, msg: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    m.insert("code".to_string(), Json::Str(code.as_str().to_string()));
     Json::Obj(m)
 }
 
-fn handle_line(line: &str, client: &Client) -> Json {
+/// v1-shaped success reply: the v2 result payload flattened to the top
+/// level plus the coordinator-assigned id — one serializer for both
+/// dialects, so a new `Response` field can't drift between them.
+fn response_json(r: &Response) -> Json {
+    let mut m = match protocol::response_payload(r) {
+        Json::Obj(m) => m,
+        other => unreachable!("response payload is always an object, got {other:?}"),
+    };
+    m.insert("id".into(), Json::UInt(r.id));
+    Json::Obj(m)
+}
+
+/// Submit one validated v2 request, maintaining the connection's in-flight
+/// count and enforcing [`MAX_INFLIGHT_PER_CONNECTION`]. Returns an error
+/// frame to write immediately, or None on successful async submission.
+fn submit_v2(
+    client: &Client,
+    w: protocol::WireRequest,
+    done: &Sender<(u64, Result<Response, ServeError>)>,
+    inflight: &AtomicUsize,
+) -> Option<Json> {
+    if inflight.load(Ordering::Relaxed) >= MAX_INFLIGHT_PER_CONNECTION {
+        return Some(protocol::error_frame(
+            Some(w.id),
+            ErrorCode::Overloaded,
+            &format!(
+                "more than {MAX_INFLIGHT_PER_CONNECTION} requests in flight on this connection"
+            ),
+        ));
+    }
+    inflight.fetch_add(1, Ordering::Relaxed);
+    match client.submit_tagged(&w.dataset, w.input, w.sla, w.id, done.clone()) {
+        Ok(()) => None,
+        Err(e) => {
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            Some(protocol::error_frame(
+                Some(w.id),
+                ErrorCode::from_serve(&e),
+                &e.to_string(),
+            ))
+        }
+    }
+}
+
+/// Dispatch one input line. Returns the frames to write immediately —
+/// v2 classification successes return nothing here (they arrive through
+/// the tagged `done` channel in completion order).
+fn handle_line(
+    line: &str,
+    client: &Client,
+    info: &ConnInfo,
+    done: &Sender<(u64, Result<Response, ServeError>)>,
+    inflight: &AtomicUsize,
+) -> Vec<Json> {
     let req = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return err_json(&format!("bad json: {e}")),
+        // An unparseable line has no recoverable dialect; reply in the
+        // shape both can read — v1 string `error` plus the v2 `code` (the
+        // client library treats an id-less error frame as
+        // connection-level and surfaces the code).
+        Err(e) => return vec![coded_err_json(ErrorCode::BadJson, &format!("bad json: {e}"))],
     };
+    if req.get("v").is_none() {
+        return vec![handle_v1(&req, client)];
+    }
+    if req.get("v").and_then(Json::as_u64) != Some(PROTOCOL_VERSION) {
+        return vec![protocol::error_frame(
+            req.get("id").and_then(Json::as_u64),
+            ErrorCode::BadRequest,
+            &format!("unsupported protocol version (want {PROTOCOL_VERSION})"),
+        )];
+    }
+    if req.get("cmd").is_some() {
+        return vec![handle_v2_cmd(&req, client, info)];
+    }
+    if req.get("batch").is_some() {
+        return handle_v2_batch(&req, client, done, inflight);
+    }
+    match protocol::parse_request(&req, false) {
+        Ok(w) => submit_v2(client, w, done, inflight).into_iter().collect(),
+        Err(we) => vec![protocol::error_frame(we.id, we.code, &we.message)],
+    }
+}
+
+/// `{"v":2,"batch":[...]}`: all entries are validated before any is
+/// submitted, then submitted back-to-back so the front thread's batcher
+/// sees them as one contiguous unit. Invalid entries fail individually
+/// with their own error frames; valid siblings still run.
+fn handle_v2_batch(
+    req: &Json,
+    client: &Client,
+    done: &Sender<(u64, Result<Response, ServeError>)>,
+    inflight: &AtomicUsize,
+) -> Vec<Json> {
+    for key in req.as_obj().expect("batch frame is an object").keys() {
+        if key != "v" && key != "batch" {
+            return vec![protocol::error_frame(
+                None,
+                ErrorCode::BadRequest,
+                &format!("unknown field {key:?} in batch frame"),
+            )];
+        }
+    }
+    let Some(entries) = req.get("batch").and_then(Json::as_arr) else {
+        return vec![protocol::error_frame(
+            None,
+            ErrorCode::BadRequest,
+            "batch must be an array",
+        )];
+    };
+    let mut replies = Vec::new();
+    let mut parsed = Vec::with_capacity(entries.len());
+    for e in entries {
+        match protocol::parse_request(e, true) {
+            Ok(w) => parsed.push(w),
+            Err(we) => replies.push(protocol::error_frame(we.id, we.code, &we.message)),
+        }
+    }
+    for w in parsed {
+        if let Some(err) = submit_v2(client, w, done, inflight) {
+            replies.push(err);
+        }
+    }
+    replies
+}
+
+fn variant_payload(meta: &crate::runtime::VariantMeta) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("variant".to_string(), Json::Str(meta.variant.clone()));
+    m.insert("kind".to_string(), Json::Str(meta.kind.clone()));
+    m.insert("metric".to_string(), Json::Str(meta.metric.clone()));
+    m.insert(
+        "dev_metric".to_string(),
+        meta.dev_metric.map(Json::Num).unwrap_or(Json::Null),
+    );
+    m.insert("seq_len".to_string(), Json::UInt(meta.seq_len as u64));
+    m.insert("num_classes".to_string(), Json::UInt(meta.num_classes as u64));
+    m.insert(
+        "aggregate_word_vectors".to_string(),
+        Json::UInt(meta.aggregate_word_vectors() as u64),
+    );
+    if let Some(r) = &meta.retention {
+        m.insert(
+            "retention".to_string(),
+            Json::Arr(r.iter().map(|&x| Json::UInt(x as u64)).collect()),
+        );
+    }
+    Json::Obj(m)
+}
+
+/// The capability payload of the `hello` reply: everything a client needs
+/// to pick a dataset/variant/SLA without out-of-band knowledge.
+///
+/// `backend` is the *configured* selection: `auto` is reported as `auto`
+/// because it resolves pjrt-vs-native lazily per variant at load time — a
+/// single "resolved" value here would be a guess, not a fact.
+fn hello_payload(client: &Client, info: &ConnInfo) -> Json {
+    let mut variants = BTreeMap::new();
+    let mut datasets = Vec::new();
+    for ds in client.router().datasets() {
+        datasets.push(Json::Str(ds.to_string()));
+        variants.insert(
+            ds.to_string(),
+            Json::Arr(client.router().variants(ds).into_iter().map(variant_payload).collect()),
+        );
+    }
+    let mut m = BTreeMap::new();
+    m.insert("proto".to_string(), Json::UInt(PROTOCOL_VERSION));
+    m.insert(
+        "server".to_string(),
+        Json::Str(format!("powerbert/{}", env!("CARGO_PKG_VERSION"))),
+    );
+    m.insert("backend".to_string(), Json::Str(client.backend().to_string()));
+    m.insert("datasets".to_string(), Json::Arr(datasets));
+    m.insert("variants".to_string(), Json::Obj(variants));
+    m.insert(
+        "seq_buckets".to_string(),
+        Json::Arr(client.seq_buckets().iter().map(|&b| Json::UInt(b as u64)).collect()),
+    );
+    m.insert(
+        "max_connections".to_string(),
+        Json::UInt(info.max_connections as u64),
+    );
+    m.insert(
+        "max_inflight_per_connection".to_string(),
+        Json::UInt(MAX_INFLIGHT_PER_CONNECTION as u64),
+    );
+    Json::Obj(m)
+}
+
+fn handle_v2_cmd(req: &Json, client: &Client, info: &ConnInfo) -> Json {
+    let Some(id) = req.get("id").and_then(Json::as_u64) else {
+        return protocol::error_frame(
+            None,
+            ErrorCode::BadRequest,
+            "cmd frames require a non-negative integer id",
+        );
+    };
+    let Some(cmd) = req.get("cmd").and_then(Json::as_str) else {
+        return protocol::error_frame(Some(id), ErrorCode::BadRequest, "cmd must be a string");
+    };
+    // Strictness is per command: `dataset` means something only to
+    // `variants` — on hello/stats it would be silently ignored, which is
+    // the exact failure mode v2 strictness exists to prevent.
+    for key in req.as_obj().expect("cmd frame is an object").keys() {
+        let known = matches!(key.as_str(), "v" | "id" | "cmd")
+            || (cmd == "variants" && key == "dataset");
+        if !known {
+            return protocol::error_frame(
+                Some(id),
+                ErrorCode::BadRequest,
+                &format!("unknown field {key:?} in {cmd:?} cmd frame"),
+            );
+        }
+    }
+    let mut reply = BTreeMap::new();
+    reply.insert("v".to_string(), Json::UInt(PROTOCOL_VERSION));
+    reply.insert("id".to_string(), Json::UInt(id));
+    match cmd {
+        "hello" => {
+            reply.insert("hello".to_string(), hello_payload(client, info));
+        }
+        "stats" => {
+            let mut stats = match client.metrics().to_json() {
+                Json::Obj(m) => m,
+                other => {
+                    let mut m = BTreeMap::new();
+                    m.insert("metrics".to_string(), other);
+                    m
+                }
+            };
+            let mut conns = BTreeMap::new();
+            conns.insert(
+                "current".to_string(),
+                Json::UInt(info.connections.load(Ordering::Relaxed) as u64),
+            );
+            conns.insert("max".to_string(), Json::UInt(info.max_connections as u64));
+            stats.insert("connections".to_string(), Json::Obj(conns));
+            reply.insert("stats".to_string(), Json::Obj(stats));
+        }
+        "variants" => {
+            let Some(ds) = req.get("dataset").and_then(Json::as_str) else {
+                return protocol::error_frame(
+                    Some(id),
+                    ErrorCode::BadRequest,
+                    "variants requires a dataset",
+                );
+            };
+            // An unknown dataset is a structured error, not an empty list
+            // (an empty list is what a real dataset with nothing routable
+            // would return).
+            if !client.router().datasets().contains(&ds) {
+                return protocol::error_frame(
+                    Some(id),
+                    ErrorCode::UnknownDataset,
+                    &format!("unknown dataset {ds:?}"),
+                );
+            }
+            reply.insert(
+                "variants".to_string(),
+                Json::Arr(client.router().variants(ds).into_iter().map(variant_payload).collect()),
+            );
+        }
+        other => {
+            return protocol::error_frame(
+                Some(id),
+                ErrorCode::UnknownCmd,
+                &format!("unknown cmd {other:?}"),
+            )
+        }
+    }
+    Json::Obj(reply)
+}
+
+/// The legacy v1 dialect, unchanged from the seed: synchronous, one reply
+/// per line, stringly errors. Unknown extra fields are still tolerated
+/// here — v1 never promised strictness and its scripts depend on that.
+fn handle_v1(req: &Json, client: &Client) -> Json {
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "stats" => {
-                let mut m = std::collections::BTreeMap::new();
+                let mut m = BTreeMap::new();
                 m.insert("stats".into(), Json::Str(client.metrics().report()));
                 Json::Obj(m)
             }
@@ -181,7 +590,7 @@ fn handle_line(line: &str, client: &Client) -> Json {
                     .into_iter()
                     .map(|v| Json::Str(v.variant.clone()))
                     .collect();
-                let mut m = std::collections::BTreeMap::new();
+                let mut m = BTreeMap::new();
                 m.insert("variants".into(), Json::Arr(vs));
                 Json::Obj(m)
             }
@@ -204,7 +613,6 @@ fn handle_line(line: &str, client: &Client) -> Json {
     };
     match client.classify(&dataset, Input::Text { a: text, b: text_b }, sla) {
         Ok(r) => response_json(&r),
-        Err(e @ ServeError::Overloaded) => err_json(&e.to_string()),
         Err(e) => err_json(&e.to_string()),
     }
 }
@@ -236,5 +644,7 @@ mod tests {
         assert_eq!(j.get("label").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("scores").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.get("seq_bucket").unwrap().as_f64(), Some(32.0));
+        // v1 replies never carry a protocol version marker.
+        assert!(j.get("v").is_none());
     }
 }

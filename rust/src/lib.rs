@@ -24,7 +24,12 @@
 //!   N-worker execution pool + SLA-aware routing (the paper's
 //!   accuracy/latency Pareto as a runtime policy, with cost ∝ retained
 //!   word-vectors × seq-bucket ratio).
-//! * [`coordinator::Server`] — TCP line-protocol front-end.
+//! * [`coordinator::Server`] — multiplexed TCP front-end speaking wire
+//!   protocol v2 ([`coordinator::protocol`]) with a v1 compat shim.
+//! * [`client::PowerClient`] — typed remote client: hello/capabilities,
+//!   blocking `classify`, batch submission, and pipelined tickets over a
+//!   single connection. Shares [`coordinator::Input`]/[`coordinator::Sla`]/
+//!   [`coordinator::Response`] with the in-process API.
 //! * [`workload`] — synthetic request generators (incl. mixed-length
 //!   traffic for the padding-waste benches).
 //! * [`eval`] — GLUE-style metrics, mirrored from the Python side.
@@ -40,6 +45,7 @@
 //! ```
 
 pub mod bench;
+pub mod client;
 pub mod coordinator;
 pub mod eval;
 pub mod runtime;
@@ -48,5 +54,6 @@ pub mod tokenizer;
 pub mod util;
 pub mod workload;
 
+pub use client::{ClientError, PowerClient, ServerInfo, Ticket};
 pub use coordinator::{Client, Config, Coordinator, Input, Response, ServeError, Sla};
 pub use runtime::{Engine, Registry};

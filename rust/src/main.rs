@@ -1,11 +1,13 @@
 //! powerbert CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   serve     start the TCP serving front-end
+//!   serve     start the TCP serving front-end (wire protocol v2 + v1
+//!             compat). SIGINT/SIGTERM stops accepting, drains the
+//!             coordinator, and prints the final metrics report; the same
+//!             numbers are available live via the v2 {"cmd":"stats"}
+//!             protocol message (structured JSON).
 //!   eval      run a dataset's test split through a variant, print metrics
 //!   info      list artifacts / variants / retention configs
-//!   stats     (with serve) print the metrics report on SIGTERM... (report
-//!             is also available via the {"cmd":"stats"} protocol message)
 
 use std::path::PathBuf;
 
@@ -30,6 +32,7 @@ fn main() {
     .opt("backend", None, "serve/eval: inference backend (pjrt | native | auto; default $POWERBERT_BACKEND or auto)")
     .opt("workers", Some("1"), "serve: executor pool size (one backend instance each)")
     .opt("seq-buckets", None, "serve: comma-separated seq buckets for length-aware batching (e.g. 16,32,64)")
+    .opt("max-connections", None, "serve: concurrent connection cap (default 256)")
     .opt("dataset", None, "eval: dataset name")
     .opt("variant", Some("bert"), "eval: variant name")
     .opt("batch", Some("32"), "eval: batch size")
@@ -113,7 +116,7 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
         },
         ..Config::default()
     };
-    let coordinator = match Coordinator::start(cfg) {
+    let mut coordinator = match Coordinator::start(cfg) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("failed to start coordinator: {e}");
@@ -128,10 +131,51 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
             return 1;
         }
     };
+    let server = match parsed.get_usize("max-connections") {
+        Some(n) => server.with_max_connections(n),
+        None => server,
+    };
+
+    // SIGINT/SIGTERM: the handler only flips an atomic; this watcher turns
+    // the flip into a stop-flag store plus a wake-up connection so the
+    // blocking accept loop actually returns.
+    powerbert::util::signal::install_shutdown_handler();
+    let stop = server.stop_handle();
+    let local = match server.local_addr() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("local_addr: {e}");
+            return 1;
+        }
+    };
+    std::thread::spawn(move || loop {
+        if powerbert::util::signal::shutdown_requested() {
+            Server::shutdown(local, &stop);
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    });
+
     if let Err(e) = server.run() {
         eprintln!("server error: {e}");
         return 1;
     }
+    drop(server); // release the accept socket + the server's Client clone
+
+    // Drain what is already queued, bounded: a lingering idle connection
+    // holds a Client clone and would otherwise block the join forever.
+    eprintln!("shutdown signal received; draining coordinator");
+    let metrics = coordinator.metrics();
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        coordinator.shutdown();
+        let _ = done_tx.send(());
+    });
+    if done_rx.recv_timeout(std::time::Duration::from_secs(10)).is_err() {
+        eprintln!("drain timed out (connections still open?); exiting without full drain");
+    }
+    println!("== final metrics ==");
+    print!("{}", metrics.report());
     0
 }
 

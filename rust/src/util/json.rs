@@ -1,22 +1,51 @@
 //! Minimal but complete JSON parser + writer.
 //!
 //! serde is not part of the offline vendor set, so artifact manifests
-//! (`meta.json`, `index.json`, `vocab.json`) are handled by this module.
-//! Supports the full JSON grammar (objects, arrays, strings with escapes,
-//! numbers, bool, null); numbers are stored as f64 (adequate for manifests).
+//! (`meta.json`, `index.json`, `vocab.json`) and the wire protocol are
+//! handled by this module. Supports the full JSON grammar (objects,
+//! arrays, strings with escapes, numbers, bool, null). Non-negative
+//! integers are kept exact as `UInt` (protocol request ids are u64 and
+//! must not round-trip through f64); every other number is an f64 `Num`.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
 /// A parsed JSON value.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Non-negative integer, kept exact (f64 loses precision above 2^53).
+    UInt(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+/// `UInt` and `Num` compare numerically (`UInt(5) == Num(5.0)`): which
+/// variant a number parses into is a precision detail, not a semantic one.
+/// The cross comparison is exact — equal only when both denote the same
+/// real number — so distinct u64 ids above 2^53 never collide with a
+/// rounded f64 and equality stays transitive.
+impl PartialEq for Json {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            (Json::UInt(a), Json::UInt(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::UInt(a), Json::Num(b)) | (Json::Num(b), Json::UInt(a)) => {
+                // Both directions must hold: `a as f64` alone rounds ids
+                // above 2^53 onto nearby floats they do not equal.
+                *a as f64 == *b && *b as u64 == *a
+            }
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -58,6 +87,20 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::UInt(u) => Some(*u as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned integer value: `UInt` verbatim, or a `Num` that is a
+    /// non-negative whole number small enough for f64 to have kept exact
+    /// (below 2^53).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(u) => Some(*u),
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9007199254740992.0 => {
+                Some(*n as u64)
+            }
             _ => None,
         }
     }
@@ -119,6 +162,7 @@ impl Json {
                     out.push_str(&format!("{n}"));
                 }
             }
+            Json::UInt(u) => out.push_str(&format!("{u}")),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) => {
                 out.push('[');
@@ -284,6 +328,13 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.at]).unwrap();
+        // Plain non-negative integers stay exact: f64 silently rounds
+        // anything above 2^53, and protocol ids are full-range u64.
+        if !text.starts_with('-') && !text.contains(['.', 'e', 'E']) {
+            if let Ok(u) = text.parse::<u64>() {
+                return Ok(Json::UInt(u));
+            }
+        }
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -443,6 +494,36 @@ mod tests {
         assert_eq!(Json::parse(&out).unwrap(), v);
         let pretty = v.to_string_pretty();
         assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn u64_ids_survive_exactly() {
+        // 2^53 + 1 is the first integer f64 cannot represent.
+        let big = "9007199254740993";
+        let v = Json::parse(big).unwrap();
+        assert_eq!(v, Json::UInt(9007199254740993));
+        assert_eq!(v.as_u64(), Some(9007199254740993));
+        assert_eq!(v.to_string(), big);
+        let max = Json::parse("18446744073709551615").unwrap();
+        assert_eq!(max.as_u64(), Some(u64::MAX));
+        assert_eq!(max.to_string(), "18446744073709551615");
+        // Floats and negatives never masquerade as exact ids...
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("-3").unwrap().as_u64(), None);
+        // ...but a small whole Num still qualifies.
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(9.1e15).as_u64(), None);
+    }
+
+    #[test]
+    fn uint_and_num_compare_numerically() {
+        assert_eq!(Json::UInt(5), Json::Num(5.0));
+        assert_eq!(Json::parse("7").unwrap(), Json::Num(7.0));
+        assert_ne!(Json::UInt(5), Json::Num(5.5));
+        assert_ne!(Json::UInt(5), Json::Str("5".into()));
+        // Exactness above 2^53: a rounded float is NOT the id next to it.
+        assert_ne!(Json::UInt(9007199254740993), Json::Num(9007199254740992.0));
+        assert_eq!(Json::UInt(9007199254740992), Json::Num(9007199254740992.0));
     }
 
     #[test]

@@ -7,4 +7,5 @@ pub mod json;
 pub mod log;
 pub mod npz;
 pub mod prng;
+pub mod signal;
 pub mod stats;

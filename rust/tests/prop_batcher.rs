@@ -10,7 +10,7 @@ use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use powerbert::coordinator::batcher::{BatchKey, BatchPolicy, Batcher};
-use powerbert::coordinator::request::{Input, Job, Request, Sla};
+use powerbert::coordinator::request::{Input, Job, ReplySink, Request, Sla};
 use powerbert::testutil::prop::forall;
 
 fn job_at(id: u64, seq: usize) -> Job {
@@ -28,7 +28,7 @@ fn job_at(id: u64, seq: usize) -> Job {
         segments: vec![0; seq],
         seq,
         real_len: seq.saturating_sub(1).max(1),
-        reply: tx,
+        reply: ReplySink::Oneshot(tx),
     }
 }
 

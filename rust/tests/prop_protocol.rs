@@ -1,0 +1,118 @@
+//! Property test: malformed, truncated, or otherwise hostile frames must
+//! always be answered with a structured JSON error — one reply line per
+//! offending line — and must never kill the connection loop: a valid
+//! request afterwards on the same socket still classifies.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Policy, Server};
+use powerbert::testutil::artifacts_available;
+use powerbert::testutil::prop::forall;
+use powerbert::util::json::Json;
+use powerbert::util::prng::Rng;
+use powerbert::workload::WorkloadGen;
+
+/// One hostile line. Every shape here is structurally invalid, so the
+/// server's reply is synchronous (valid classifications would resolve
+/// asynchronously and desynchronize the lockstep read below).
+fn hostile_line(rng: &mut Rng, valid_request: &str) -> String {
+    match rng.below(8) {
+        // Truncated frame: any proper prefix of an object is unparseable.
+        0 => {
+            let cut = 1 + rng.below(valid_request.len().max(2) as u64 - 1) as usize;
+            valid_request[..cut].to_string()
+        }
+        // Printable garbage. Non-space (33..=126) so the line is never
+        // whitespace-only — the server skips blank lines without replying
+        // and the lockstep read below would hang.
+        1 => {
+            let len = 1 + rng.below(40) as usize;
+            (0..len).map(|_| (33 + rng.below(94) as u8) as char).collect()
+        }
+        // Valid JSON, wrong shape for a frame.
+        2 => "[1, 2, 3]".to_string(),
+        // v2 with a non-integer id.
+        3 => r#"{"v":2,"id":"seven","dataset":"sst2","text":"x"}"#.to_string(),
+        // v2 missing the input entirely.
+        4 => format!(r#"{{"v":2,"id":{},"dataset":"sst2"}}"#, rng.below(1 << 60)),
+        // v2 with an unknown field (strictness is part of the contract).
+        5 => format!(
+            r#"{{"v":2,"id":{},"dataset":"sst2","text":"x","fld_{}":1}}"#,
+            rng.below(1000),
+            rng.below(1000)
+        ),
+        // Unsupported version.
+        6 => r#"{"v":9,"id":1,"dataset":"sst2","text":"x"}"#.to_string(),
+        // Batch that is not an array / unknown cmd.
+        _ => {
+            if rng.chance(0.5) {
+                r#"{"v":2,"batch":{"not":"an array"}}"#.to_string()
+            } else {
+                format!(r#"{{"v":2,"id":{},"cmd":"frobnicate"}}"#, rng.below(1000))
+            }
+        }
+    }
+}
+
+/// A reply counts as a structured error iff it is parseable JSON carrying
+/// either the v1 string `error` or the v2 `error` object with a code.
+fn assert_structured_error(line: &str) {
+    let j = Json::parse(line.trim()).unwrap_or_else(|e| panic!("unparseable reply {line:?}: {e}"));
+    let e = j.get("error").unwrap_or_else(|| panic!("no error field in reply {line:?}"));
+    let ok = e.as_str().is_some()
+        || e.get("code").and_then(Json::as_str).is_some();
+    assert!(ok, "error is neither v1 string nor v2 coded object: {line:?}");
+}
+
+#[test]
+fn hostile_frames_get_errors_and_never_kill_the_connection() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut coordinator = Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy: Policy::Fixed("bert".into()),
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        ..Config::default()
+    })
+    .expect("coordinator");
+    let server = Server::bind("127.0.0.1:0", coordinator.client())
+        .expect("bind")
+        .spawn()
+        .expect("spawn");
+    let addr = server.addr();
+
+    let vocab = coordinator.tokenizer().vocab.clone();
+    let valid_text = WorkloadGen::new(&vocab, 5).sentence(12).0;
+    let valid_v1 = format!(r#"{{"dataset":"sst2","text":"{valid_text}"}}"#);
+    let valid_v2 = format!(r#"{{"v":2,"id":1,"dataset":"sst2","text":"{valid_text}"}}"#);
+
+    forall("hostile frames never kill the connection", 60, |rng, size| {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        let hostiles = 1 + size % 3;
+        for _ in 0..hostiles {
+            let hostile = hostile_line(rng, &valid_v2);
+            writeln!(stream, "{hostile}").expect("write");
+            line.clear();
+            let n = reader.read_line(&mut line).expect("read");
+            assert!(n > 0, "connection closed after hostile frame {hostile:?}");
+            assert_structured_error(&line);
+        }
+        // The connection loop must still serve real traffic.
+        writeln!(stream, "{valid_v1}").expect("write valid");
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("read valid") > 0, "connection dead");
+        let j = Json::parse(line.trim()).expect("valid reply json");
+        assert!(
+            j.get("label").is_some(),
+            "valid request failed after hostile frames: {line}"
+        );
+    });
+
+    server.stop();
+    coordinator.shutdown();
+}

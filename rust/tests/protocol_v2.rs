@@ -1,0 +1,301 @@
+//! Wire protocol v2 integration tests: v1 compat shim, pipelined
+//! out-of-order completion matched by id, batch frames, structured error
+//! codes, u64-exact id echo, hello capabilities, and structured stats —
+//! all against the full serving stack over real artifacts.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use powerbert::client::PowerClient;
+use powerbert::coordinator::{
+    BatchPolicy, Config, Coordinator, ErrorCode, Input, Policy, Server, ServerHandle, Sla,
+};
+use powerbert::testutil::artifacts_available;
+use powerbert::util::json::Json;
+use powerbert::workload::{LengthMix, WorkloadGen};
+
+fn start(policy: Policy) -> Coordinator {
+    Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(3) },
+        seq_buckets: vec![16, 24],
+        ..Config::default()
+    })
+    .expect("coordinator")
+}
+
+/// Field order is the drop order: the server handle stops (and joins the
+/// accept loop) before the coordinator drains.
+struct Stack {
+    server: ServerHandle,
+    coordinator: Coordinator,
+}
+
+impl Stack {
+    fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+}
+
+fn serve(policy: Policy) -> Stack {
+    let coordinator = start(policy);
+    let server = Server::bind("127.0.0.1:0", coordinator.client())
+        .expect("bind")
+        .spawn()
+        .expect("spawn");
+    Stack { server, coordinator }
+}
+
+#[test]
+fn v1_line_gets_v1_shaped_reply_from_v2_server() {
+    if !artifacts_available() {
+        return;
+    }
+    let stack = serve(Policy::Fixed("bert".into()));
+    let mut stream = TcpStream::connect(stack.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let vocab = stack.coordinator.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 11);
+    let (text, _) = gen.sentence(16);
+    writeln!(stream, r#"{{"dataset": "sst2", "text": "{text}"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).expect("v1 reply json");
+    assert!(j.get("error").is_none(), "error: {line}");
+    assert!(j.get("label").is_some(), "v1 reply must be flat: {line}");
+    assert!(j.get("v").is_none(), "v1 reply must not carry a version: {line}");
+    assert!(j.get("result").is_none(), "v1 reply must not be v2-framed: {line}");
+    assert_eq!(j.get("variant").unwrap().as_str(), Some("bert"));
+
+    // v1 commands still answer in the v1 shape (stats is a string blob).
+    writeln!(stream, r#"{{"cmd": "stats"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert!(j.get("stats").unwrap().as_str().is_some(), "v1 stats is a string");
+
+    // v1 tolerance for unknown extra fields is preserved.
+    writeln!(
+        stream,
+        r#"{{"dataset": "sst2", "text": "{text}", "bogus_field": 1}}"#
+    )
+    .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(line.trim()).unwrap().get("label").is_some());
+}
+
+#[test]
+fn pipelined_requests_resolve_by_id_regardless_of_order() {
+    if !artifacts_available() {
+        return;
+    }
+    let stack = serve(Policy::Fixed("bert".into()));
+    let client = PowerClient::connect(stack.addr()).expect("connect");
+    let vocab = stack.coordinator.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 21);
+    // Deliberately uneven lengths: different seq buckets mean different
+    // batches and genuinely out-of-order completion on the server side.
+    let mix = LengthMix { short_words: 6, long_words: 40, frac_long: 0.4 };
+
+    let n = 24;
+    let mut tickets = Vec::new();
+    let mut ids = std::collections::HashSet::new();
+    for _ in 0..n {
+        let (text, label, _) = gen.mixed_sentence(&mix);
+        let t = client
+            .submit("sst2", Input::Text { a: text, b: None }, Sla::default())
+            .expect("submit");
+        assert!(ids.insert(t.id()), "ids must be unique");
+        tickets.push((t, label));
+    }
+    // Await in reverse submission order: every ticket must resolve to its
+    // own response no matter when the server finished it. (No accuracy
+    // gate here — the committed quick-profile bert sits near coin-flip on
+    // long inputs; crossed replies are caught deterministically by the id
+    // echo, not statistically by labels.)
+    for (t, _label) in tickets.into_iter().rev() {
+        let id = t.id();
+        let r = t.wait().expect("response");
+        assert_eq!(r.id, id, "response must carry the ticket's id");
+        assert_eq!(r.variant, "bert");
+        assert!(r.scores.len() >= 2);
+    }
+
+    // The single pipelined connection must have actually filled batches.
+    let stats = stack.coordinator.metrics().snapshot("sst2/bert").expect("stats");
+    assert!(
+        stats.batches < stats.requests,
+        "no batching from one pipelined connection: {} batches for {} requests",
+        stats.batches,
+        stats.requests
+    );
+}
+
+#[test]
+fn batch_frame_resolves_every_entry() {
+    if !artifacts_available() {
+        return;
+    }
+    let stack = serve(Policy::Fixed("bert".into()));
+    let client = PowerClient::connect(stack.addr()).expect("connect");
+    let vocab = stack.coordinator.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 31);
+    let inputs: Vec<Input> = (0..6)
+        .map(|_| {
+            let (text, _) = gen.sentence(14);
+            Input::Text { a: text, b: None }
+        })
+        .collect();
+    let rs = client.classify_batch("sst2", inputs, &Sla::default()).expect("batch");
+    assert_eq!(rs.len(), 6);
+    for r in &rs {
+        assert_eq!(r.variant, "bert");
+        assert!(r.scores.len() >= 2);
+    }
+}
+
+#[test]
+fn structured_error_codes_over_the_wire() {
+    if !artifacts_available() {
+        return;
+    }
+    let stack = serve(Policy::FastestAboveMetric);
+    let client = PowerClient::connect(stack.addr()).expect("connect");
+
+    // Typed errors through the client library.
+    let err = client
+        .classify("nope", Input::Text { a: "x".into(), b: None }, Sla::default())
+        .unwrap_err();
+    assert_eq!(err.code(), Some(ErrorCode::UnknownDataset), "{err}");
+    let err = client
+        .classify(
+            "sst2",
+            Input::Text { a: "x".into(), b: None },
+            Sla { variant: Some("no-such-variant".into()), ..Default::default() },
+        )
+        .unwrap_err();
+    assert_eq!(err.code(), Some(ErrorCode::UnknownVariant), "{err}");
+    let err = client.variants("nope").unwrap_err();
+    assert_eq!(err.code(), Some(ErrorCode::UnknownDataset), "{err}");
+    // Out-of-vocabulary pre-encoded tokens are rejected per-request at
+    // submit — they must never reach a batch and fail innocent neighbours.
+    let seq_len = client.hello().variants["sst2"]
+        .iter()
+        .find(|v| v.variant == "bert")
+        .expect("bert advertised")
+        .seq_len;
+    let err = client
+        .classify(
+            "sst2",
+            Input::Tokens { tokens: vec![9_999_999; seq_len], segments: vec![0; seq_len] },
+            Sla { variant: Some("bert".into()), ..Default::default() },
+        )
+        .unwrap_err();
+    assert_eq!(err.code(), Some(ErrorCode::BadRequest), "{err}");
+
+    // Raw frames: unknown cmd and unknown fields answer with codes and
+    // echo the id.
+    let mut stream = TcpStream::connect(stack.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    for (frame, want_code, want_id) in [
+        (r#"{"v":2,"id":5,"cmd":"frobnicate"}"#, "unknown_cmd", Some(5)),
+        (
+            r#"{"v":2,"id":6,"dataset":"sst2","text":"x","max_latncy_ms":4}"#,
+            "bad_request",
+            Some(6),
+        ),
+        (r#"{"v":3,"id":7,"dataset":"sst2","text":"x"}"#, "bad_request", Some(7)),
+    ] {
+        writeln!(stream, "{frame}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).expect("error frame json");
+        let e = j.get("error").expect("error object");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some(want_code), "{line}");
+        assert_eq!(
+            j.get("id").and_then(Json::as_u64),
+            want_id.map(|i| i as u64),
+            "{line}"
+        );
+    }
+}
+
+#[test]
+fn ids_beyond_f64_precision_echo_verbatim() {
+    if !artifacts_available() {
+        return;
+    }
+    let stack = serve(Policy::Fixed("bert".into()));
+    let vocab = stack.coordinator.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 41);
+    let (text, _) = gen.sentence(12);
+
+    let mut stream = TcpStream::connect(stack.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // u64::MAX and 2^53+1 both round if they ever touch an f64.
+    for id in [18446744073709551615u64, 9007199254740993u64] {
+        writeln!(
+            stream,
+            r#"{{"v":2,"id":{id},"dataset":"sst2","text":"{text}"}}"#
+        )
+        .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains(&id.to_string()),
+            "id {id} not echoed verbatim in {line}"
+        );
+        let j = Json::parse(line.trim()).expect("reply json");
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(id), "{line}");
+        assert!(j.get("result").is_some(), "expected a result frame: {line}");
+    }
+}
+
+#[test]
+fn hello_advertises_capabilities_and_stats_counts_connections() {
+    if !artifacts_available() {
+        return;
+    }
+    let coordinator = start(Policy::FastestAboveMetric);
+    let server = Server::bind("127.0.0.1:0", coordinator.client())
+        .expect("bind")
+        .with_max_connections(7)
+        .spawn()
+        .expect("spawn");
+
+    {
+        let client = PowerClient::connect(server.addr()).expect("connect");
+        let info = client.hello();
+        assert_eq!(info.proto, 2);
+        assert!(info.datasets.contains(&"sst2".to_string()));
+        assert!(!info.backend.is_empty());
+        assert_eq!(info.seq_buckets, vec![16, 24]);
+        assert_eq!(info.max_connections, 7);
+        let variants = &info.variants["sst2"];
+        assert!(variants.iter().any(|v| v.variant == "bert"));
+        assert!(
+            variants.iter().any(|v| v.retention.is_some()),
+            "power variants advertise their retention schedule"
+        );
+
+        let stats = client.stats().expect("stats");
+        assert_eq!(stats.connections_max, 7);
+        assert!(
+            stats.connections_current >= 1,
+            "our own connection must be counted, got {}",
+            stats.connections_current
+        );
+        assert!(stats.uptime_secs >= 0.0);
+
+        let listed = client.variants("sst2").expect("variants");
+        assert!(listed.iter().any(|v| v.variant == "bert"));
+    }
+
+    server.stop();
+    drop(coordinator);
+}
