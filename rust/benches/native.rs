@@ -1,12 +1,26 @@
-//! Native backend bench: BERT vs PoWER on the pure-Rust forward pass —
-//! wall-clock speedup vs the retention config, and the measured per-layer
-//! word-vector counts (the paper's Figure 1 quantity, counted by the
-//! executor rather than derived from meta.json).
+//! Native backend bench: the kernel layer and the end-to-end forward.
+//!
+//! Three sections per dataset:
+//! 1. **kernels** — the blocked, packed `matmul_bias` against the naive
+//!    reference on the bundle's real GEMM shapes (QKV projection, FFN up,
+//!    FFN down), single-threaded, in GFLOP/s — old-vs-new for the exact
+//!    loops the forward pass runs;
+//! 2. **thread scaling** — the same blocked kernel on the FFN-up shape at
+//!    1/2/4 intra-op threads;
+//! 3. **bert vs power** — wall-clock speedup vs the retention config plus
+//!    the measured per-layer word-vector counts (the paper's Figure 1
+//!    quantity, counted by the executor rather than derived from
+//!    meta.json).
 //!
 //!   cargo bench --bench native [PB_BENCH_ITERS=40]
 
-use powerbert::bench::{fmt_time, paper::measure, BenchConfig, Table};
-use powerbert::runtime::{default_root, BackendKind, Engine, Registry, TestSplit};
+use powerbert::bench::{fmt_time, paper::measure, time_fn, BenchConfig, Table};
+use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm};
+use powerbert::runtime::kernels::KernelConfig;
+use powerbert::runtime::{
+    default_root, ArtifactStore, BackendKind, Engine, Registry, TestSplit, VariantMeta,
+};
+use powerbert::util::prng::Rng;
 
 fn main() {
     powerbert::util::log::init();
@@ -20,67 +34,171 @@ fn main() {
     };
 
     for (ds_name, ds) in &registry.datasets {
-        let split = match TestSplit::load(&ds.test_npz()) {
-            Ok(s) => s,
+        if let Some(meta) = ds.variant("bert").or_else(|| ds.variants.values().next()) {
+            if let Err(e) = bench_kernels(ds_name, meta, &cfg) {
+                eprintln!("  ({ds_name} kernel bench failed: {e:#})");
+            }
+        }
+        bench_end_to_end(ds_name, ds, &cfg);
+    }
+}
+
+/// Old-vs-new on the bundle's real GEMM shapes, plus thread scaling on the
+/// FFN-up shape. `rows` is a full batch at full width (8 × seq) — the
+/// shape the first encoder runs before elimination shrinks it.
+fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow::Result<()> {
+    let store = ArtifactStore::new();
+    let art = store.fetch(meta)?;
+    let h = meta.hidden_size;
+    let take = |name: &str| -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
+        let (dims, data) = art
+            .weight(name)
+            .ok_or_else(|| anyhow::anyhow!("weights.npz missing {name}"))?;
+        Ok((dims.to_vec(), data.to_vec()))
+    };
+    let (_, wq) = take("layers/0/wq")?;
+    let (w1_dims, w1) = take("layers/0/w1")?;
+    let ffn = w1_dims[1];
+    let (_, w2) = take("layers/0/w2")?;
+    let rows = 8 * meta.seq_len;
+
+    let mut rng = Rng::new(0xBE7C);
+    let shapes: [(&str, usize, usize, &[f32]); 3] =
+        [("qkv proj", h, h, &wq), ("ffn up", h, ffn, &w1), ("ffn down", ffn, h, &w2)];
+    let mut table = Table::new(
+        &format!("native kernels — {ds_name}: blocked+packed vs naive matmul_bias (1 thread)"),
+        &["shape", "n x k x m", "naive", "blocked", "GFLOP/s (naive -> blocked)", "speedup"],
+    );
+    let single = KernelConfig::default().with_threads(1);
+    let mut ffn_speedup = None;
+    for (name, k, m, w) in shapes {
+        let x: Vec<f32> = (0..rows * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let bias: Vec<f32> = (0..m).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let naive = time_fn(cfg, || {
+            std::hint::black_box(matmul_bias_ref(&x, rows, k, w, m, &bias));
+        });
+        let packed = PackedGemm::pack(w, k, m);
+        let mut out = vec![0f32; rows * m];
+        let blocked = time_fn(cfg, || {
+            packed.matmul_bias(&x, rows, &bias, &single, &mut out);
+            std::hint::black_box(&out);
+        });
+        let flops = (2 * rows * k * m) as f64;
+        let speedup = naive.p50 / blocked.p50;
+        if name == "ffn up" {
+            ffn_speedup = Some(speedup);
+        }
+        table.row(vec![
+            name.to_string(),
+            format!("{rows} x {k} x {m}"),
+            fmt_time(naive.p50),
+            fmt_time(blocked.p50),
+            format!("{:.2} -> {:.2}", flops / naive.p50 / 1e9, flops / blocked.p50 / 1e9),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    table.print();
+    if let Some(s) = ffn_speedup {
+        // The acceptance number: single-thread blocked-vs-naive on the
+        // bundle's FFN shape.
+        println!("ffn-shape single-thread speedup (blocked vs naive): {s:.2}x");
+    }
+
+    let mut scaling = Table::new(
+        &format!("native kernels — {ds_name}: blocked matmul thread scaling (ffn up shape)"),
+        &["threads", "p50", "GFLOP/s", "vs 1 thread"],
+    );
+    let x: Vec<f32> = (0..rows * h).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let bias: Vec<f32> = (0..ffn).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let packed = PackedGemm::pack(&w1, h, ffn);
+    let mut out = vec![0f32; rows * ffn];
+    let flops = (2 * rows * h * ffn) as f64;
+    let mut base = None;
+    for threads in [1usize, 2, 4] {
+        // mc small enough that `rows` splits across every thread count.
+        let kcfg = KernelConfig { threads, kc: 256, mc: 16 };
+        let t = time_fn(cfg, || {
+            packed.matmul_bias(&x, rows, &bias, &kcfg, &mut out);
+            std::hint::black_box(&out);
+        });
+        if threads == 1 {
+            base = Some(t.p50);
+        }
+        let rel = base.map(|b| format!("{:.2}x", b / t.p50)).unwrap_or_else(|| "-".into());
+        scaling.row(vec![
+            threads.to_string(),
+            fmt_time(t.p50),
+            format!("{:.2}", flops / t.p50 / 1e9),
+            rel,
+        ]);
+    }
+    scaling.print();
+    Ok(())
+}
+
+/// bert vs power end-to-end on the native backend: metric, latency,
+/// speedup-vs-retention, measured word-vectors per layer.
+fn bench_end_to_end(ds_name: &str, ds: &powerbert::runtime::DatasetArtifacts, cfg: &BenchConfig) {
+    let split = match TestSplit::load(&ds.test_npz()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP {ds_name}: {e:#}");
+            return;
+        }
+    };
+    let mut engine = Engine::with_backend(BackendKind::Native).expect("native engine");
+    let mut table = Table::new(
+        &format!("native backend — {ds_name}: metric / latency / word-vectors per layer"),
+        &["variant", "metric", "batch", "p50", "speedup", "wv/layer (measured)"],
+    );
+    let mut bert_p50 = None;
+    for vname in ["bert", "power-default"] {
+        let Some(meta) = ds.variant(vname) else { continue };
+        let model = match engine.load(meta) {
+            Ok(m) => m,
             Err(e) => {
-                eprintln!("SKIP {ds_name}: {e:#}");
+                eprintln!("  ({ds_name}/{vname} native load failed: {e:#})");
                 continue;
             }
         };
-        let mut engine = Engine::with_backend(BackendKind::Native).expect("native engine");
-        let mut table = Table::new(
-            &format!("native backend — {ds_name}: metric / latency / word-vectors per layer"),
-            &["variant", "metric", "batch", "p50", "speedup", "wv/layer (measured)"],
-        );
-        let mut bert_p50 = None;
-        for vname in ["bert", "power-default"] {
-            let Some(meta) = ds.variant(vname) else { continue };
-            let model = match engine.load(meta) {
-                Ok(m) => m,
-                Err(e) => {
-                    eprintln!("  ({ds_name}/{vname} native load failed: {e:#})");
-                    continue;
-                }
-            };
-            // Per-layer counts of one timed batch: snapshot the cumulative
-            // telemetry around a single infer.
-            let n = 8.min(split.n);
-            let seq = split.seq_len;
-            let before = model.layer_tokens().unwrap_or_default();
-            model
-                .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
-                .expect("infer");
-            let after = model.layer_tokens().unwrap_or_default();
-            let per_layer: Vec<u64> = after
-                .iter()
-                .zip(before.iter())
-                .map(|(a, b)| (a - b) / n as u64)
-                .collect();
+        // Per-layer counts of one timed batch: snapshot the cumulative
+        // telemetry around a single infer.
+        let n = 8.min(split.n);
+        let seq = split.seq_len;
+        let before = model.layer_tokens().unwrap_or_default();
+        model
+            .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+            .expect("infer");
+        let after = model.layer_tokens().unwrap_or_default();
+        let per_layer: Vec<u64> = after
+            .iter()
+            .zip(before.iter())
+            .map(|(a, b)| (a - b) / n as u64)
+            .collect();
 
-            let point = match measure(&mut engine, meta, &split, 32, &cfg) {
-                Ok(p) => p,
-                Err(e) => {
-                    eprintln!("  ({ds_name}/{vname} failed: {e:#})");
-                    continue;
-                }
-            };
-            if vname == "bert" {
-                bert_p50 = Some(point.latency.p50);
+        let point = match measure(&mut engine, meta, &split, 32, cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("  ({ds_name}/{vname} failed: {e:#})");
+                continue;
             }
-            let speedup = bert_p50
-                .map(|b| format!("{:.2}x", b / point.latency.p50))
-                .unwrap_or_else(|| "-".into());
-            table.row(vec![
-                vname.to_string(),
-                format!("{:.4}", point.metric),
-                point.batch.to_string(),
-                fmt_time(point.latency.p50),
-                speedup,
-                format!("{per_layer:?} (Σ {})", per_layer.iter().sum::<u64>()),
-            ]);
+        };
+        if vname == "bert" {
+            bert_p50 = Some(point.latency.p50);
         }
-        if !table.rows.is_empty() {
-            table.print();
-        }
+        let speedup = bert_p50
+            .map(|b| format!("{:.2}x", b / point.latency.p50))
+            .unwrap_or_else(|| "-".into());
+        table.row(vec![
+            vname.to_string(),
+            format!("{:.4}", point.metric),
+            point.batch.to_string(),
+            fmt_time(point.latency.p50),
+            speedup,
+            format!("{per_layer:?} (Σ {})", per_layer.iter().sum::<u64>()),
+        ]);
+    }
+    if !table.rows.is_empty() {
+        table.print();
     }
 }

@@ -142,7 +142,7 @@ pub struct Job {
     /// Row length of `tokens`/`segments`: the seq bucket this job batches
     /// under.
     pub seq: usize,
-    /// True token count before bucket padding ([CLS]..[SEP] inclusive);
+    /// True token count before bucket padding (`[CLS]`..`[SEP]` inclusive);
     /// the numerator of the padding-waste metric.
     pub real_len: usize,
     pub reply: ReplySink,

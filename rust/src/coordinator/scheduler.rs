@@ -40,7 +40,7 @@ use super::batcher::{Batch, BatchKey, BatchPolicy, Batcher};
 use super::metrics::MetricsHub;
 use super::request::{Input, Job, ReplySink, Request, Response, ServeError, Sla};
 use super::router::{Policy, Router};
-use crate::runtime::{ArtifactStore, BackendKind, EngineWorker, Registry};
+use crate::runtime::{ArtifactStore, BackendKind, EngineWorker, KernelConfig, Registry};
 use crate::tokenizer::{Tokenizer, Vocab, PAD_ID};
 
 /// Coordinator configuration.
@@ -63,6 +63,11 @@ pub struct Config {
     /// Inference backend every pool worker runs on (pjrt | native | auto).
     /// Also seeds the router's cold-start latency priors.
     pub backend: BackendKind,
+    /// Native-kernel tuning (block sizes, intra-op threads) handed to
+    /// every pool worker. The default keeps kernels single-threaded —
+    /// the pool already parallelizes across workers; intra-op threads
+    /// are for wide models or low-`workers` deployments.
+    pub kernel: KernelConfig,
     /// Sequence buckets for length-aware batching, ascending (e.g.
     /// [16, 32, 64]). Requests encode to the smallest bucket that fits
     /// their true token count; empty = off (every request at full seq_len).
@@ -81,6 +86,7 @@ impl Default for Config {
             preload: false,
             workers: 1,
             backend: BackendKind::from_env(),
+            kernel: KernelConfig::from_env(),
             seq_buckets: Vec::new(),
         }
     }
@@ -332,9 +338,10 @@ impl Coordinator {
             let reg = registry.clone();
             let met = metrics.clone();
             let st = store.clone();
+            let kernel = cfg.kernel.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("pb-worker-{id}"))
-                .spawn(move || worker_loop(id, rx, st, reg, met, backend))
+                .spawn(move || worker_loop(id, rx, st, reg, met, backend, kernel))
                 .map_err(|e| e.to_string())?;
             exec_txs.push(tx);
             workers.push(handle);
@@ -516,8 +523,9 @@ fn worker_loop(
     registry: Registry,
     metrics: Arc<MetricsHub>,
     backend: BackendKind,
+    kernel: KernelConfig,
 ) {
-    let mut worker = match EngineWorker::with_backend(id, store, backend) {
+    let mut worker = match EngineWorker::with_config(id, store, backend, kernel) {
         Ok(w) => w,
         Err(e) => {
             crate::warnln!("executor", "worker {id}: failed to create {backend} backend: {e}");

@@ -17,6 +17,11 @@
 //!   (compiled HLO on an XLA device), `native` (pure-Rust PoWER-BERT
 //!   forward pass with progressive word-vector elimination — zero XLA
 //!   dependencies), or `auto` (PJRT with native fallback).
+//! * [`runtime::kernels`] — the native backend's microkernels: blocked,
+//!   weight-pretransposed GEMM with fused epilogues and a parallel masked
+//!   attention kernel, tuned via [`runtime::KernelConfig`]. Elimination
+//!   shrinks these kernels' shapes layer by layer — see
+//!   `docs/ARCHITECTURE.md` for the cost model.
 //! * [`runtime::EngineWorker`] — backend half: one backend instance +
 //!   loaded models per executor thread. [`runtime::Engine`] is the
 //!   single-worker facade.
@@ -43,6 +48,10 @@
 //!     Sla::default()).unwrap();
 //! println!("label={} via {}", resp.label, resp.variant);
 //! ```
+//!
+//! `docs/ARCHITECTURE.md` is the one-page map of how these layers connect,
+//! including the performance model that ties word-vector elimination to
+//! the kernel shapes.
 
 pub mod bench;
 pub mod client;

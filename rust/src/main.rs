@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 
 use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Policy, Server};
-use powerbert::runtime::{default_root, BackendKind, Engine, Registry, TestSplit};
+use powerbert::runtime::{default_root, BackendKind, Engine, KernelConfig, Registry, TestSplit};
 use powerbert::util::cli::Args;
 use powerbert::eval::Metric;
 
@@ -30,6 +30,9 @@ fn main() {
     .opt("max-batch", Some("32"), "serve: dynamic batcher max batch")
     .opt("max-wait-ms", Some("5"), "serve: dynamic batcher max wait")
     .opt("backend", None, "serve/eval: inference backend (pjrt | native | auto; default $POWERBERT_BACKEND or auto)")
+    .opt("kernel-threads", None, "serve/eval: native kernel threads per op (0 = one per core; default $POWERBERT_KERNEL_THREADS or 1)")
+    .opt("kernel-kc", None, "serve/eval: native kernel depth-block size (default $POWERBERT_KERNEL_KC or 256)")
+    .opt("kernel-mc", None, "serve/eval: native kernel row-block size (default $POWERBERT_KERNEL_MC or 64)")
     .opt("workers", Some("1"), "serve: executor pool size (one backend instance each)")
     .opt("seq-buckets", None, "serve: comma-separated seq buckets for length-aware batching (e.g. 16,32,64)")
     .opt("max-connections", None, "serve: concurrent connection cap (default 256)")
@@ -73,6 +76,22 @@ fn parse_backend(parsed: &powerbert::util::cli::Parsed) -> Result<BackendKind, S
     }
 }
 
+/// Kernel tuning: explicit `--kernel-*` flags override `$POWERBERT_KERNEL_*`
+/// env vars, which override the built-in defaults.
+fn parse_kernel(parsed: &powerbert::util::cli::Parsed) -> KernelConfig {
+    let mut k = KernelConfig::from_env();
+    if let Some(t) = parsed.get_usize("kernel-threads") {
+        k.threads = t;
+    }
+    if let Some(kc) = parsed.get_usize("kernel-kc") {
+        k.kc = kc.max(1);
+    }
+    if let Some(mc) = parsed.get_usize("kernel-mc") {
+        k.mc = mc.max(1);
+    }
+    k
+}
+
 fn parse_policy(s: &str) -> Policy {
     if let Some(v) = s.strip_prefix("fixed:") {
         Policy::Fixed(v.to_string())
@@ -107,6 +126,7 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
         preload: parsed.has("preload"),
         workers: parsed.get_usize("workers").unwrap_or(1).max(1),
         backend,
+        kernel: parse_kernel(parsed),
         seq_buckets: match (parsed.get("seq-buckets"), parsed.get_usize_list("seq-buckets")) {
             (Some(raw), None) if !raw.trim().is_empty() => {
                 eprintln!("--seq-buckets: expected comma-separated integers, got {raw:?}");
@@ -211,7 +231,7 @@ fn cmd_eval(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
             return 2;
         }
     };
-    let mut engine = match Engine::with_backend(backend) {
+    let mut engine = match Engine::with_backend_config(backend, parse_kernel(parsed)) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("backend {backend}: {e:#}");

@@ -25,6 +25,21 @@ use super::artifact::VariantMeta;
 use crate::tokenizer::PAD_ID;
 
 /// Which inference backend to run a worker on.
+///
+/// Selected per deployment via `--backend` / `$POWERBERT_BACKEND`; the
+/// coordinator hands the choice to every pool worker and seeds the
+/// router's latency priors from it. Native-kernel tuning rides alongside
+/// in [`KernelConfig`](super::kernels::KernelConfig).
+///
+/// # Examples
+///
+/// ```
+/// use powerbert::runtime::BackendKind;
+///
+/// assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+/// assert_eq!(BackendKind::parse("tpu"), None);
+/// assert_eq!(BackendKind::Auto.to_string(), "auto");
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
     /// Prefer PJRT, fall back to the native backend when the XLA runtime

@@ -22,6 +22,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::VariantMeta;
 use super::backend::{BackendKind, LoadedModel};
+use super::kernels::KernelConfig;
 use super::native::NativeBackend;
 use super::pjrt::PjrtBackend;
 use crate::util::npz;
@@ -154,10 +155,24 @@ impl EngineWorker {
         EngineWorker::with_backend(id, store, BackendKind::from_env())
     }
 
+    /// Worker on an explicit backend, with the session-default kernel
+    /// config (`$POWERBERT_KERNEL_*` or defaults).
     pub fn with_backend(
         id: usize,
         store: Arc<ArtifactStore>,
         kind: BackendKind,
+    ) -> Result<EngineWorker> {
+        EngineWorker::with_config(id, store, kind, KernelConfig::from_env())
+    }
+
+    /// Worker on an explicit backend and kernel config. The kernel config
+    /// only tunes the native path (block sizes, intra-op threads); PJRT
+    /// ignores it.
+    pub fn with_config(
+        id: usize,
+        store: Arc<ArtifactStore>,
+        kind: BackendKind,
+        kernel: KernelConfig,
     ) -> Result<EngineWorker> {
         let pjrt = match kind {
             BackendKind::Native => None,
@@ -177,7 +192,7 @@ impl EngineWorker {
             id,
             kind,
             pjrt,
-            native: NativeBackend::new(),
+            native: NativeBackend::with_config(kernel),
             store,
             models: HashMap::new(),
         })
@@ -274,8 +289,14 @@ impl Engine {
     }
 
     pub fn with_backend(kind: BackendKind) -> Result<Engine> {
+        Engine::with_backend_config(kind, KernelConfig::from_env())
+    }
+
+    /// Engine with an explicit backend and kernel config — what the bench
+    /// and parity tests use to pin thread counts and block sizes.
+    pub fn with_backend_config(kind: BackendKind, kernel: KernelConfig) -> Result<Engine> {
         let store = Arc::new(ArtifactStore::new());
-        let worker = EngineWorker::with_backend(0, store.clone(), kind)?;
+        let worker = EngineWorker::with_config(0, store.clone(), kind, kernel)?;
         Ok(Engine { store, worker })
     }
 

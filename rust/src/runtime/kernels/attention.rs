@@ -1,0 +1,265 @@
+//! Masked multi-head attention + attention-column significance, parallel
+//! across `(batch row, head)` tasks.
+//!
+//! # Shape contract
+//!
+//! `q`/`k`/`v` are row-major `[batch * n, h]` (already projected; heads
+//! live in `h = heads * d` interleaved column blocks, head `a` at columns
+//! `[a*d, (a+1)*d)`). `mask` is `[batch * n]` with `1.0` for real tokens
+//! and `0.0` for PAD. Outputs: `ctx` (`[batch * n, h]`, overwritten) and
+//! `sig` (`[batch * n]`, overwritten) — `sig[b, j]` is the paper's §3.2
+//! significance of word-vector `j` in example `b`: the softmax column sum
+//! over all heads and non-PAD query rows, exactly what the extract layer
+//! ranks by.
+//!
+//! # Parallel structure
+//!
+//! The natural unit is one `(example, head)` pair: its softmax rows and
+//! its `[n, d]` slice of the context are independent of every other pair.
+//! Under `threads > 1`, each task writes a private contiguous `ctx`/`sig`
+//! slab (so tasks can be handed to scoped threads with plain
+//! `split_at_mut`, no locks and no unsafe), and a serial merge then
+//! interleaves the head slabs back into `[n, h]` rows and sums
+//! significance **in ascending head order**. The serial path (the serving
+//! default) skips the slabs and writes head stripes in place, folding
+//! per-head significance partials in the same ascending-head association
+//! — so results are bit-identical for any [`KernelConfig::threads`].
+
+use super::{task_ranges, KernelConfig};
+
+/// Additive mask for PAD key columns, matching `python/compile/kernels`.
+const NEG_INF: f32 = -1e9;
+
+/// Scaled-dot-product attention with PAD masking over `batch` independent
+/// examples of `n` word-vectors; accumulates the attention-column
+/// significance scores alongside the context. See the module docs for the
+/// shape contract.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    batch: usize,
+    n: usize,
+    heads: usize,
+    d: usize,
+    cfg: &KernelConfig,
+    ctx: &mut [f32],
+    sig: &mut [f32],
+) {
+    let h = heads * d;
+    let rows = batch * n;
+    assert_eq!(q.len(), rows * h, "attention: q is not [batch*n, h]");
+    assert_eq!(k.len(), rows * h, "attention: k is not [batch*n, h]");
+    assert_eq!(v.len(), rows * h, "attention: v is not [batch*n, h]");
+    assert_eq!(mask.len(), rows, "attention: mask is not [batch*n]");
+    assert_eq!(ctx.len(), rows * h, "attention: ctx is not [batch*n, h]");
+    assert_eq!(sig.len(), rows, "attention: sig is not [batch*n]");
+    if rows == 0 {
+        return;
+    }
+
+    let tasks = batch * heads;
+    let threads = cfg.effective_threads(tasks);
+    if threads <= 1 {
+        // Serial fast path — the serving default (`threads: 1`): write
+        // each head's context stripe straight into `ctx` (heads touch
+        // disjoint columns) and fold per-head significance partials into
+        // `sig` in ascending head order. The fold association matches the
+        // parallel merge below exactly, so serial and parallel results
+        // stay bit-identical.
+        ctx.fill(0.0);
+        sig.fill(0.0);
+        let mut probs = vec![0f32; n];
+        let mut head_sig = vec![0f32; n];
+        for b in 0..batch {
+            let ctx_ex = &mut ctx[b * n * h..(b + 1) * n * h];
+            for a in 0..heads {
+                head_sig.fill(0.0);
+                let off = a * d;
+                attend_one(q, k, v, mask, b, a, n, h, d, ctx_ex, h, off, &mut head_sig, &mut probs);
+                for (sv, &pv) in sig[b * n..(b + 1) * n].iter_mut().zip(head_sig.iter()) {
+                    *sv += pv;
+                }
+            }
+        }
+        return;
+    }
+
+    // Per-task private slabs: ctx_heads[t] is [n, d] for task t = b*heads+a,
+    // sig_heads[t] is [n]. Same total footprint as ctx itself.
+    let nd = n * d;
+    let mut ctx_heads = vec![0f32; tasks * nd];
+    let mut sig_heads = vec![0f32; tasks * n];
+    let run_task = |t: usize, ctx_part: &mut [f32], sig_part: &mut [f32], probs: &mut [f32]| {
+        let (b, a) = (t / heads, t % heads);
+        attend_one(q, k, v, mask, b, a, n, h, d, ctx_part, d, 0, sig_part, probs);
+    };
+    let ranges = task_ranges(tasks, threads);
+    std::thread::scope(|s| {
+        let mut ctx_rest = &mut ctx_heads[..];
+        let mut sig_rest = &mut sig_heads[..];
+        for r in ranges {
+            let take = r.len();
+            let (ctx_chunk, ct) = std::mem::take(&mut ctx_rest).split_at_mut(take * nd);
+            ctx_rest = ct;
+            let (sig_chunk, st) = std::mem::take(&mut sig_rest).split_at_mut(take * n);
+            sig_rest = st;
+            let run = &run_task;
+            s.spawn(move || {
+                let mut probs = vec![0f32; n];
+                let slabs = ctx_chunk.chunks_exact_mut(nd).zip(sig_chunk.chunks_exact_mut(n));
+                for (i, (ctx_part, sig_part)) in slabs.enumerate() {
+                    run(r.start + i, ctx_part, sig_part, &mut probs);
+                }
+            });
+        }
+    });
+
+    // Serial merge in fixed (example, head) order: interleave the head
+    // slabs into [n, h] rows and sum significance head-ascending.
+    sig.fill(0.0);
+    for b in 0..batch {
+        for a in 0..heads {
+            let t = b * heads + a;
+            let part = &ctx_heads[t * nd..(t + 1) * nd];
+            let off = a * d;
+            for i in 0..n {
+                ctx[(b * n + i) * h + off..(b * n + i) * h + off + d]
+                    .copy_from_slice(&part[i * d..(i + 1) * d]);
+            }
+            let spart = &sig_heads[t * n..(t + 1) * n];
+            for (sv, &pv) in sig[b * n..(b + 1) * n].iter_mut().zip(spart) {
+                *sv += pv;
+            }
+        }
+    }
+}
+
+/// One `(example, head)` task: softmax over the example's keys for every
+/// query row. The head's context goes to `ctx_out` — `n` rows of
+/// `ctx_stride` floats, this head's `d`-wide stripe starting at `ctx_off`
+/// (a private `[n, d]` slab has stride `d`, offset 0; in-place writing
+/// into a full `[n, h]` block has stride `h`, offset `a * d`).
+/// Significance column sums are **accumulated** into `sig_part` (`[n]`,
+/// caller-zeroed); `probs` is an `[n]` scratch row.
+#[allow(clippy::too_many_arguments)]
+fn attend_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    b: usize,
+    a: usize,
+    n: usize,
+    h: usize,
+    d: usize,
+    ctx_out: &mut [f32],
+    ctx_stride: usize,
+    ctx_off: usize,
+    sig_part: &mut [f32],
+    probs: &mut [f32],
+) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let base = b * n;
+    let off = a * d;
+    let emask = &mask[base..base + n];
+    for i in 0..n {
+        let qi = &q[(base + i) * h + off..(base + i) * h + off + d];
+        // Scaled dot-product logits with PAD keys masked out; running max
+        // for the numerically-stable softmax.
+        let mut maxv = f32::NEG_INFINITY;
+        for jj in 0..n {
+            let kj = &k[(base + jj) * h + off..(base + jj) * h + off + d];
+            let mut dot = 0f32;
+            for t in 0..d {
+                dot += qi[t] * kj[t];
+            }
+            let logit = if emask[jj] > 0.0 { dot * scale } else { NEG_INF };
+            probs[jj] = logit;
+            if logit > maxv {
+                maxv = logit;
+            }
+        }
+        let mut denom = 0f32;
+        for p in probs.iter_mut() {
+            *p = (*p - maxv).exp();
+            denom += *p;
+        }
+        let inv = 1.0 / denom;
+        // Column sums over non-PAD query rows only: PAD queries must not
+        // vote on which word-vectors survive (paper §3.2).
+        let qmask = emask[i];
+        let crow = &mut ctx_out[i * ctx_stride + ctx_off..i * ctx_stride + ctx_off + d];
+        for jj in 0..n {
+            let p = probs[jj] * inv;
+            sig_part[jj] += qmask * p;
+            let vj = &v[(base + jj) * h + off..(base + jj) * h + off + d];
+            for t in 0..d {
+                crow[t] += p * vj[t];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn pad_keys_get_zero_significance_and_probs_sum_to_one() {
+        let (batch, n, heads, d) = (2usize, 5usize, 2usize, 4usize);
+        let h = heads * d;
+        let q = rand_vec(batch * n * h, 1);
+        let k = rand_vec(batch * n * h, 2);
+        let v = rand_vec(batch * n * h, 3);
+        // Example 0: last two positions PAD; example 1: all real.
+        let mut mask = vec![1f32; batch * n];
+        mask[3] = 0.0;
+        mask[4] = 0.0;
+        let mut ctx = vec![0f32; batch * n * h];
+        let mut sig = vec![0f32; batch * n];
+        let cfg = KernelConfig::default();
+        masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx, &mut sig);
+        // PAD keys receive (numerically) zero attention mass.
+        assert!(sig[3].abs() < 1e-6 && sig[4].abs() < 1e-6, "PAD sig {sig:?}");
+        // Per example, total significance = heads * (# real query rows):
+        // each real query row distributes probability mass 1 per head.
+        let real0: f32 = sig[..n].iter().sum();
+        assert!((real0 - (heads * 3) as f32).abs() < 1e-4, "example 0 mass {real0}");
+        let real1: f32 = sig[n..].iter().sum();
+        assert!((real1 - (heads * n) as f32).abs() < 1e-4, "example 1 mass {real1}");
+        assert!(ctx.iter().all(|c| c.is_finite()));
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        let (batch, n, heads, d) = (3usize, 7usize, 2usize, 3usize);
+        let h = heads * d;
+        let q = rand_vec(batch * n * h, 10);
+        let k = rand_vec(batch * n * h, 11);
+        let v = rand_vec(batch * n * h, 12);
+        let mut mask = vec![1f32; batch * n];
+        mask[6] = 0.0;
+        mask[13] = 0.0;
+        let mut ctx1 = vec![0f32; batch * n * h];
+        let mut sig1 = vec![0f32; batch * n];
+        let cfg1 = KernelConfig::default().with_threads(1);
+        masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg1, &mut ctx1, &mut sig1);
+        for threads in [2usize, 4, 5] {
+            let mut ctx_t = vec![0f32; batch * n * h];
+            let mut sig_t = vec![0f32; batch * n];
+            let cfg = KernelConfig::default().with_threads(threads);
+            masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx_t, &mut sig_t);
+            assert_eq!(ctx1, ctx_t, "ctx differs at threads={threads}");
+            assert_eq!(sig1, sig_t, "sig differs at threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! Blocked, weight-pretransposed `x @ w + bias` — the kernel behind every
+//! projection in the native forward pass (QKV, attention output, both FFN
+//! halves, pooler, classifier head).
+//!
+//! # Shape contract
+//!
+//! `x` is row-major `[n, k]`, the weight is row-major `[k, m]` at pack
+//! time, `bias` is `[m]`, `out` is row-major `[n, m]` and fully
+//! overwritten. `n` varies per call (it is `batch * surviving
+//! word-vectors`, so elimination shrinks it layer by layer); `k`/`m` are
+//! fixed per weight and validated on every call.
+//!
+//! # Why blocked + packed
+//!
+//! The naive loop ([`matmul_bias_ref`]) walks `w` row-major and
+//! read-modify-writes the whole `out` row once per `k` step — `O(k · m)`
+//! memory traffic per row of `x` against registers doing one multiply per
+//! load. This kernel restructures the loop nest three ways:
+//!
+//! * **Pack once, at load time**: the weight is repacked into column
+//!   panels of [`NR`] — `panel[p][kk*NR + j] = w[kk, p*NR + j]` — so the
+//!   inner loop streams the panel contiguously regardless of `m`, and the
+//!   transpose cost is paid once per model load, not per call.
+//! * **Register tiling**: an [`MR`]`×`[`NR`] accumulator tile lives in
+//!   registers across the whole depth loop; `out` is touched exactly once
+//!   per `kc` block instead of once per `k` step.
+//! * **Depth blocking** ([`KernelConfig::kc`]): the panel slab reused
+//!   across every row tile is bounded to stay L1-resident when `k` is
+//!   large (BERT-base FFN: `k = 3072`).
+//!
+//! Epilogues (bias, GELU, tanh) are fused into the tile writeback, so the
+//! FFN's activation never materializes a separate pre-activation pass.
+//!
+//! Accumulation order is `k`-ascending within a block and blocks ascending
+//! — the same order for every thread count (rows are data-parallel), so
+//! results are deterministic under [`KernelConfig::threads`].
+
+use super::{gelu, task_ranges, KernelConfig};
+
+/// Rows of `x` per register tile.
+pub const MR: usize = 4;
+/// Columns of `w` per packed panel (and per register tile).
+pub const NR: usize = 8;
+
+/// What the tile writeback applies after adding the bias.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Epilogue {
+    /// `out = x @ w + bias`
+    None,
+    /// `out = gelu(x @ w + bias)` — the FFN's fused activation.
+    Gelu,
+    /// `out = tanh(x @ w + bias)` — the pooler's fused activation.
+    Tanh,
+}
+
+/// A weight matrix packed for the blocked kernel: column panels of [`NR`],
+/// built once at model-load time (see module docs for the layout).
+pub struct PackedGemm {
+    k: usize,
+    m: usize,
+    /// `ceil(m / NR)` panels of `k * NR` floats each; the last panel is
+    /// zero-padded past column `m`, so ragged widths run the full-speed
+    /// tile and the writeback simply drops the padding columns.
+    panels: Vec<f32>,
+}
+
+impl PackedGemm {
+    /// Pack a row-major `[k, m]` weight. Panics if `w.len() != k * m`.
+    pub fn pack(w: &[f32], k: usize, m: usize) -> PackedGemm {
+        assert_eq!(w.len(), k * m, "pack: weight is not [k={k}, m={m}]");
+        let np = m.div_ceil(NR);
+        let mut panels = vec![0f32; np * k * NR];
+        for p in 0..np {
+            let cols = (m - p * NR).min(NR);
+            let panel = &mut panels[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                let src = &w[kk * m + p * NR..kk * m + p * NR + cols];
+                panel[kk * NR..kk * NR + cols].copy_from_slice(src);
+            }
+        }
+        PackedGemm { k, m, panels }
+    }
+
+    /// Input width (`k`) this weight contracts over.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output width (`m`).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// `out = x @ w + bias` over `n` rows.
+    pub fn matmul_bias(
+        &self,
+        x: &[f32],
+        n: usize,
+        bias: &[f32],
+        cfg: &KernelConfig,
+        out: &mut [f32],
+    ) {
+        self.run(x, n, bias, cfg, Epilogue::None, out);
+    }
+
+    /// `out = gelu(x @ w + bias)` — fused FFN half.
+    pub fn matmul_bias_gelu(
+        &self,
+        x: &[f32],
+        n: usize,
+        bias: &[f32],
+        cfg: &KernelConfig,
+        out: &mut [f32],
+    ) {
+        self.run(x, n, bias, cfg, Epilogue::Gelu, out);
+    }
+
+    /// `out = tanh(x @ w + bias)` — fused pooler.
+    pub fn matmul_bias_tanh(
+        &self,
+        x: &[f32],
+        n: usize,
+        bias: &[f32],
+        cfg: &KernelConfig,
+        out: &mut [f32],
+    ) {
+        self.run(x, n, bias, cfg, Epilogue::Tanh, out);
+    }
+
+    fn run(
+        &self,
+        x: &[f32],
+        n: usize,
+        bias: &[f32],
+        cfg: &KernelConfig,
+        ep: Epilogue,
+        out: &mut [f32],
+    ) {
+        let (k, m) = (self.k, self.m);
+        assert_eq!(x.len(), n * k, "matmul: x is not [n={n}, k={k}]");
+        assert_eq!(bias.len(), m, "matmul: bias is not [m={m}]");
+        assert_eq!(out.len(), n * m, "matmul: out is not [n={n}, m={m}]");
+        if n == 0 {
+            return;
+        }
+        // Parallel split over rows: each thread owns a contiguous row range
+        // of x and out, at mc-row task granularity. Row results never
+        // depend on the split, so any thread count is deterministic.
+        let mc = cfg.mc.max(1);
+        let tasks = n.div_ceil(mc);
+        let threads = cfg.effective_threads(tasks);
+        if threads <= 1 {
+            self.rows(x, n, bias, cfg.kc, ep, out);
+            return;
+        }
+        let ranges = task_ranges(tasks, threads);
+        std::thread::scope(|s| {
+            let mut rest = out;
+            let mut handles = Vec::with_capacity(ranges.len());
+            for r in &ranges {
+                let row0 = r.start * mc;
+                let rows = (r.end * mc).min(n) - row0;
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * m);
+                rest = tail;
+                let xs = &x[row0 * k..(row0 + rows) * k];
+                handles.push(s.spawn(move || self.rows(xs, rows, bias, cfg.kc, ep, chunk)));
+            }
+            // Propagate panics out of the scope deterministically.
+            for h in handles {
+                h.join().expect("gemm worker panicked");
+            }
+        });
+    }
+
+    /// Serial blocked kernel over a contiguous row range.
+    fn rows(&self, x: &[f32], n: usize, bias: &[f32], kc: usize, ep: Epilogue, out: &mut [f32]) {
+        let (k, m) = (self.k, self.m);
+        let kc = kc.max(1);
+        let np = m.div_ceil(NR);
+        let mut kb = 0;
+        while kb < k {
+            let kb_end = (kb + kc).min(k);
+            let first = kb == 0;
+            let last = kb_end == k;
+            let mut rb = 0;
+            while rb < n {
+                let rm = (n - rb).min(MR);
+                for p in 0..np {
+                    let panel = &self.panels[p * k * NR + kb * NR..p * k * NR + kb_end * NR];
+                    let mut acc = [[0f32; NR]; MR];
+                    if rm == MR {
+                        // Full tile: fixed-trip loops so the accumulators
+                        // stay in registers and the NR loop vectorizes.
+                        for (kk, wrow) in panel.chunks_exact(NR).enumerate() {
+                            let kabs = kb + kk;
+                            for (r, accr) in acc.iter_mut().enumerate() {
+                                let xv = x[(rb + r) * k + kabs];
+                                for c in 0..NR {
+                                    accr[c] += xv * wrow[c];
+                                }
+                            }
+                        }
+                    } else {
+                        for (kk, wrow) in panel.chunks_exact(NR).enumerate() {
+                            let kabs = kb + kk;
+                            for (r, accr) in acc.iter_mut().enumerate().take(rm) {
+                                let xv = x[(rb + r) * k + kabs];
+                                for c in 0..NR {
+                                    accr[c] += xv * wrow[c];
+                                }
+                            }
+                        }
+                    }
+                    let cols = (m - p * NR).min(NR);
+                    for (r, accr) in acc.iter().enumerate().take(rm) {
+                        let orow = &mut out[(rb + r) * m + p * NR..(rb + r) * m + p * NR + cols];
+                        for (c, o) in orow.iter_mut().enumerate() {
+                            let mut v = accr[c] + if first { bias[p * NR + c] } else { *o };
+                            if last {
+                                v = match ep {
+                                    Epilogue::None => v,
+                                    Epilogue::Gelu => gelu(v),
+                                    Epilogue::Tanh => v.tanh(),
+                                };
+                            }
+                            *o = v;
+                        }
+                    }
+                }
+                rb += rm;
+            }
+            kb = kb_end;
+        }
+    }
+}
+
+/// The naive reference `x [n, k] @ w [k, m] + b [m]` (row-major) — the
+/// pre-kernel implementation, kept as the correctness oracle for the
+/// property tests and the "old" side of the bench's old-vs-new table.
+pub fn matmul_bias_ref(x: &[f32], n: usize, k: usize, w: &[f32], m: usize, b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; n * m];
+    for i in 0..n {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        orow.copy_from_slice(b);
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * m..(kk + 1) * m];
+            for (c, &wv) in wrow.iter().enumerate() {
+                orow[c] += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "[{i}] {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_on_identity() {
+        // [1,2;3,4] @ I + [10, 20]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![10.0, 20.0];
+        let packed = PackedGemm::pack(&w, 2, 2);
+        let mut out = vec![0f32; 4];
+        packed.matmul_bias(&x, 2, &b, &KernelConfig::default(), &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 13.0, 24.0]);
+        assert_eq!(out, matmul_bias_ref(&x, 2, 2, &w, 2, &b));
+    }
+
+    #[test]
+    fn ragged_shapes_match_reference() {
+        // Deliberately not multiples of MR/NR, with kc forcing two blocks.
+        let (n, k, m) = (5usize, 7usize, 11usize);
+        let x: Vec<f32> = (0..n * k).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.1).collect();
+        let w: Vec<f32> = (0..k * m).map(|i| ((i * 53 % 23) as f32 - 11.0) * 0.05).collect();
+        let b: Vec<f32> = (0..m).map(|i| i as f32 * 0.01).collect();
+        let cfg = KernelConfig { threads: 1, kc: 3, mc: 2 };
+        let packed = PackedGemm::pack(&w, k, m);
+        let mut out = vec![0f32; n * m];
+        packed.matmul_bias(&x, n, &b, &cfg, &mut out);
+        close(&out, &matmul_bias_ref(&x, n, k, &w, m, &b), 1e-6);
+    }
+
+    #[test]
+    fn threads_are_bit_identical() {
+        let (n, k, m) = (13usize, 9usize, 17usize);
+        let x: Vec<f32> = (0..n * k).map(|i| (i as f32).sin()).collect();
+        let w: Vec<f32> = (0..k * m).map(|i| (i as f32).cos()).collect();
+        let b = vec![0.25f32; m];
+        let packed = PackedGemm::pack(&w, k, m);
+        let mut serial = vec![0f32; n * m];
+        packed.matmul_bias(&x, n, &b, &KernelConfig { threads: 1, kc: 4, mc: 3 }, &mut serial);
+        for threads in [2usize, 4, 7] {
+            let mut par = vec![0f32; n * m];
+            packed.matmul_bias(&x, n, &b, &KernelConfig { threads, kc: 4, mc: 3 }, &mut par);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_epilogues_match_mapped_reference() {
+        let (n, k, m) = (3usize, 6usize, 10usize);
+        let x: Vec<f32> = (0..n * k).map(|i| ((i % 7) as f32 - 3.0) * 0.3).collect();
+        let w: Vec<f32> = (0..k * m).map(|i| ((i % 5) as f32 - 2.0) * 0.2).collect();
+        let b = vec![0.1f32; m];
+        let cfg = KernelConfig::default();
+        let packed = PackedGemm::pack(&w, k, m);
+        let plain = matmul_bias_ref(&x, n, k, &w, m, &b);
+        let mut out = vec![0f32; n * m];
+        packed.matmul_bias_gelu(&x, n, &b, &cfg, &mut out);
+        close(&out, &plain.iter().map(|&v| gelu(v)).collect::<Vec<_>>(), 1e-6);
+        packed.matmul_bias_tanh(&x, n, &b, &cfg, &mut out);
+        close(&out, &plain.iter().map(|v| v.tanh()).collect::<Vec<_>>(), 1e-6);
+    }
+
+    #[test]
+    fn degenerate_blocks_are_clamped_not_zero_output() {
+        // mc = 0 / kc = 0 must clamp to 1, not silently leave `out` all
+        // zeros (every parallel range would otherwise cover zero rows).
+        let (n, k, m) = (9usize, 5usize, 6usize);
+        let x: Vec<f32> = (0..n * k).map(|i| (i as f32).sin()).collect();
+        let w: Vec<f32> = (0..k * m).map(|i| (i as f32).cos()).collect();
+        let b = vec![1.0f32; m];
+        let packed = PackedGemm::pack(&w, k, m);
+        let want = matmul_bias_ref(&x, n, k, &w, m, &b);
+        for cfg in [
+            KernelConfig { threads: 4, kc: 256, mc: 0 },
+            KernelConfig { threads: 1, kc: 0, mc: 0 },
+        ] {
+            let mut out = vec![0f32; n * m];
+            packed.matmul_bias(&x, n, &b, &cfg, &mut out);
+            close(&out, &want, 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_a_no_op() {
+        let packed = PackedGemm::pack(&[1.0, 2.0], 1, 2);
+        let mut out = vec![];
+        packed.matmul_bias(&[], 0, &[0.0, 0.0], &KernelConfig::default(), &mut out);
+        assert!(out.is_empty());
+        assert_eq!((packed.k(), packed.m()), (1, 2));
+    }
+}

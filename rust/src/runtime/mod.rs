@@ -13,11 +13,13 @@
 pub mod artifact;
 pub mod backend;
 pub mod engine;
+pub mod kernels;
 pub mod native;
 pub mod pjrt;
 
 pub use artifact::{default_root, DatasetArtifacts, Registry, VariantMeta};
 pub use backend::{BackendKind, CellExecutor, CellPlan, ExecOutput, LoadedModel, Logits};
 pub use engine::{ArtifactStore, Engine, EngineWorker, ModelArtifact, TestSplit};
+pub use kernels::KernelConfig;
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;

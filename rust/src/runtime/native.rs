@@ -20,6 +20,16 @@
 //! Execution shapes are exact — a (batch, seq) request runs as-is, so the
 //! native path never re-introduces padding word-vectors at the batch
 //! boundary, and every eliminated vector is compute actually saved.
+//!
+//! The hot loops live in [`kernels`](super::kernels): weights are packed
+//! into column panels once at [`NativeBackend::load`] time, and the whole
+//! batch flows through **batch-level** kernel calls — every projection is
+//! one `[batch * n_j, k]` GEMM where `n_j` is the per-layer surviving
+//! word-vector count, so elimination literally shrinks the GEMM shapes
+//! layer by layer (the paper's compute-∝-word-vectors claim, visible in
+//! the kernel shapes themselves). See `benches/native.rs` for the measured
+//! kernel and end-to-end numbers, and `docs/ARCHITECTURE.md` for the cost
+//! model.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -27,6 +37,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::backend::{CellExecutor, CellPlan, ExecOutput, LoadedModel};
 use super::engine::ModelArtifact;
+use super::kernels::{attention::masked_attention, gemm::PackedGemm, layer_norm, KernelConfig};
 use crate::tokenizer::PAD_ID;
 
 /// Largest batch the native executor accepts in one call. Generous — the
@@ -35,25 +46,42 @@ use crate::tokenizer::PAD_ID;
 /// worker on a megabatch.
 pub const NATIVE_MAX_BATCH: usize = 64;
 
+/// Examples per internal `forward_batch` call: `execute` chunks larger
+/// batches so the per-layer transient buffers (`[chunk * n_j, ffn]` for
+/// the FFN activation and `[chunk * n_j, h]` for QKV/ctx/proj) stay
+/// bounded by the chunk, not by [`NATIVE_MAX_BATCH`] — on a BERT-base
+/// scale export that is tens of MB instead of ~1 GB per worker. Eight
+/// examples give the GEMMs hundreds of rows at full width, enough to
+/// amortize packing and blocking.
+const NATIVE_EXEC_CHUNK: usize = 8;
+
 /// Score pin for CLS (never eliminated, paper §3.4) — matches model.py BIG.
 const BIG: f32 = 1e6;
-/// Additive mask for PAD key columns, matching kernels/ref.py.
-const NEG_INF: f32 = -1e9;
-const LN_EPS: f32 = 1e-6;
 
-/// The native backend: stateless — per-variant state lives in the
-/// [`NativeModel`] it loads.
+/// The native backend: stateless per request — per-variant state lives in
+/// the [`NativeModel`] it loads, kernel tuning in its [`KernelConfig`].
 #[derive(Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    cfg: KernelConfig,
+}
 
 impl NativeBackend {
+    /// Backend on the session-default kernel config
+    /// (`$POWERBERT_KERNEL_*` or defaults).
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend::with_config(KernelConfig::from_env())
     }
 
-    /// Build a ready-to-execute model from the host artifact.
+    /// Backend with an explicit kernel config (thread count, block sizes).
+    pub fn with_config(cfg: KernelConfig) -> NativeBackend {
+        NativeBackend { cfg }
+    }
+
+    /// Build a ready-to-execute model from the host artifact. This is
+    /// where the weight matrices are packed into the blocked kernel's
+    /// panel layout — once per load, not per call.
     pub fn load(&self, art: &ModelArtifact) -> Result<LoadedModel> {
-        let model = NativeModel::from_artifact(art)
+        let model = NativeModel::from_artifact(art, self.cfg.clone())
             .with_context(|| format!("native load {}/{}", art.meta.dataset, art.meta.variant))?;
         Ok(LoadedModel::new(
             art.meta.clone(),
@@ -64,21 +92,22 @@ impl NativeBackend {
     }
 }
 
-/// One encoder layer's weights, all row-major.
+/// One encoder layer's weights: projections packed for the blocked GEMM,
+/// biases and LayerNorm parameters raw.
 struct LayerWeights {
-    wq: Vec<f32>,
+    wq: PackedGemm,
     bq: Vec<f32>,
-    wk: Vec<f32>,
+    wk: PackedGemm,
     bk: Vec<f32>,
-    wv: Vec<f32>,
+    wv: PackedGemm,
     bv: Vec<f32>,
-    wo: Vec<f32>,
+    wo: PackedGemm,
     bo: Vec<f32>,
     ln1_g: Vec<f32>,
     ln1_b: Vec<f32>,
-    w1: Vec<f32>,
+    w1: PackedGemm,
     b1: Vec<f32>,
-    w2: Vec<f32>,
+    w2: PackedGemm,
     b2: Vec<f32>,
     ln2_g: Vec<f32>,
     ln2_b: Vec<f32>,
@@ -88,6 +117,7 @@ struct LayerWeights {
 /// A variant's weights in forward-pass form plus its processed-token
 /// telemetry.
 pub struct NativeModel {
+    cfg: KernelConfig,
     hidden: usize,
     heads: usize,
     num_classes: usize,
@@ -104,9 +134,9 @@ pub struct NativeModel {
     layers: Vec<LayerWeights>,
     final_g: Vec<f32>,
     final_b: Vec<f32>,
-    pooler_w: Vec<f32>,
+    pooler_w: PackedGemm,
     pooler_b: Vec<f32>,
-    head_w: Vec<f32>,
+    head_w: PackedGemm,
     head_b: Vec<f32>,
     /// Word-vectors processed per encoder (FFN width after extraction),
     /// accumulated across every executed row.
@@ -114,7 +144,7 @@ pub struct NativeModel {
 }
 
 impl NativeModel {
-    fn from_artifact(art: &ModelArtifact) -> Result<NativeModel> {
+    fn from_artifact(art: &ModelArtifact, cfg: KernelConfig) -> Result<NativeModel> {
         let meta = &art.meta;
         let hidden = meta.hidden_size;
         let heads = meta.num_heads;
@@ -183,25 +213,29 @@ impl NativeModel {
                 expect(&name, &dims, want)?;
                 Ok(data)
             };
+            // Square [h, h] projection, packed for the blocked kernel.
+            let proj = |suffix: &str| -> Result<PackedGemm> {
+                Ok(PackedGemm::pack(&lw(suffix, &[hidden, hidden])?, hidden, hidden))
+            };
             let (w1_dims, w1) = w(&format!("layers/{jj}/w1"))?;
             if w1_dims.len() != 2 || w1_dims[0] != hidden {
                 bail!("layers/{jj}/w1: shape {w1_dims:?}, expected [{hidden}, ffn]");
             }
             let ffn_size = w1_dims[1];
             layers.push(LayerWeights {
-                wq: lw("wq", &[hidden, hidden])?,
+                wq: proj("wq")?,
                 bq: lw("bq", &[hidden])?,
-                wk: lw("wk", &[hidden, hidden])?,
+                wk: proj("wk")?,
                 bk: lw("bk", &[hidden])?,
-                wv: lw("wv", &[hidden, hidden])?,
+                wv: proj("wv")?,
                 bv: lw("bv", &[hidden])?,
-                wo: lw("wo", &[hidden, hidden])?,
+                wo: proj("wo")?,
                 bo: lw("bo", &[hidden])?,
                 ln1_g: lw("ln1_g", &[hidden])?,
                 ln1_b: lw("ln1_b", &[hidden])?,
-                w1,
+                w1: PackedGemm::pack(&w1, hidden, ffn_size),
                 b1: lw("b1", &[ffn_size])?,
-                w2: lw("w2", &[ffn_size, hidden])?,
+                w2: PackedGemm::pack(&lw("w2", &[ffn_size, hidden])?, ffn_size, hidden),
                 b2: lw("b2", &[hidden])?,
                 ln2_g: lw("ln2_g", &[hidden])?,
                 ln2_b: lw("ln2_b", &[hidden])?,
@@ -230,6 +264,7 @@ impl NativeModel {
 
         let n_layers = layers.len();
         Ok(NativeModel {
+            cfg,
             hidden,
             heads,
             num_classes,
@@ -246,21 +281,26 @@ impl NativeModel {
             layers,
             final_g,
             final_b,
-            pooler_w,
+            pooler_w: PackedGemm::pack(&pooler_w, hidden, hidden),
             pooler_b,
-            head_w,
+            head_w: PackedGemm::pack(&head_w, hidden, num_classes),
             head_b,
             layer_tokens: (0..n_layers).map(|_| AtomicU64::new(0)).collect(),
         })
     }
 
-    /// Forward one example of `seq` tokens. Returns the logits and, when
-    /// `want_trace`, the per-layer surviving original positions
-    /// ([L, seq], -1-padded).
-    fn forward_one(
+    /// Forward `batch` examples of `seq` tokens through batch-level kernel
+    /// calls: every projection is one `[batch * n_j, k]` GEMM, where `n_j`
+    /// starts at `seq` and shrinks at each extract layer — all rows of a
+    /// batch keep the same count (`retention[j]`), so the batch stays
+    /// rectangular through every layer. Returns the logits and, when
+    /// `want_trace`, the per-example surviving original positions
+    /// (`[batch, L, seq]`, -1-padded).
+    fn forward_batch(
         &self,
         tokens: &[i32],
         segments: &[i32],
+        batch: usize,
         seq: usize,
         want_trace: bool,
     ) -> Result<(Vec<f32>, Option<Vec<i32>>)> {
@@ -268,6 +308,7 @@ impl NativeModel {
         let heads = self.heads;
         let d = h / heads;
         let n_layers = self.layers.len();
+        let cfg = &self.cfg;
         if seq > self.max_pos {
             bail!("seq {seq} exceeds position table {}", self.max_pos);
         }
@@ -278,98 +319,71 @@ impl NativeModel {
             .map(|&t| if t == PAD_ID { 0.0 } else { 1.0 })
             .collect();
 
-        // Embedding lookup + LN.
-        let mut x = vec![0f32; seq * h];
-        for i in 0..seq {
-            let tok = tokens[i];
-            if tok < 0 || tok as usize >= self.vocab {
-                bail!("token id {tok} outside vocab of {}", self.vocab);
-            }
-            let seg = segments[i];
-            if seg < 0 || seg as usize >= self.type_vocab {
-                bail!("segment id {seg} outside type vocab of {}", self.type_vocab);
-            }
-            let row = &mut x[i * h..(i + 1) * h];
-            match &self.word_proj {
-                None => {
-                    let wrow = &self.word[tok as usize * h..(tok as usize + 1) * h];
-                    row.copy_from_slice(wrow);
+        // Embedding lookup + LN over all batch rows.
+        let mut x = vec![0f32; batch * seq * h];
+        for b in 0..batch {
+            for i in 0..seq {
+                let tok = tokens[b * seq + i];
+                if tok < 0 || tok as usize >= self.vocab {
+                    bail!("token id {tok} outside vocab of {}", self.vocab);
                 }
-                Some((e, proj)) => {
-                    // Factorized embedding: word[tok] (E) @ proj (E x H).
-                    let wrow = &self.word[tok as usize * e..(tok as usize + 1) * e];
-                    for (k, &wv) in wrow.iter().enumerate() {
-                        let prow = &proj[k * h..(k + 1) * h];
-                        for (c, &pv) in prow.iter().enumerate() {
-                            row[c] += wv * pv;
+                let seg = segments[b * seq + i];
+                if seg < 0 || seg as usize >= self.type_vocab {
+                    bail!("segment id {seg} outside type vocab of {}", self.type_vocab);
+                }
+                let row = &mut x[(b * seq + i) * h..(b * seq + i + 1) * h];
+                match &self.word_proj {
+                    None => {
+                        let wrow = &self.word[tok as usize * h..(tok as usize + 1) * h];
+                        row.copy_from_slice(wrow);
+                    }
+                    Some((e, proj)) => {
+                        // Factorized embedding: word[tok] (E) @ proj (E x H).
+                        let wrow = &self.word[tok as usize * e..(tok as usize + 1) * e];
+                        for (kk, &wv) in wrow.iter().enumerate() {
+                            let prow = &proj[kk * h..(kk + 1) * h];
+                            for (c, &pv) in prow.iter().enumerate() {
+                                row[c] += wv * pv;
+                            }
                         }
                     }
                 }
-            }
-            let prow = &self.pos[i * h..(i + 1) * h];
-            let trow = &self.type_[seg as usize * h..(seg as usize + 1) * h];
-            for c in 0..h {
-                row[c] += prow[c] + trow[c];
+                let prow = &self.pos[i * h..(i + 1) * h];
+                let trow = &self.type_[seg as usize * h..(seg as usize + 1) * h];
+                for c in 0..h {
+                    row[c] += prow[c] + trow[c];
+                }
             }
         }
         layer_norm(&mut x, h, &self.embed_ln_g, &self.embed_ln_b);
 
-        // Original positions of surviving word-vectors (Figure 8 trace).
-        let mut positions: Vec<i32> = (0..seq as i32).collect();
-        let mut trace = want_trace.then(|| vec![-1i32; n_layers * seq]);
+        // Original positions of surviving word-vectors (Figure 8 trace),
+        // per example.
+        let mut positions: Vec<i32> = (0..batch).flat_map(|_| 0..seq as i32).collect();
+        let mut trace = want_trace.then(|| vec![-1i32; batch * n_layers * seq]);
+        // Extract-layer scratch, reused across every layer and example
+        // (rather than two fresh allocations per (row, layer)).
+        let mut topk = TopK::with_capacity(seq);
 
+        // Surviving word-vectors per example — uniform across the batch.
+        let mut n = seq;
         for (j, layer) in self.layers.iter().enumerate() {
-            let n = x.len() / h;
+            let rows = batch * n;
             // --- attention half: x1 = x + proj(MHA(LN(x))), plus scores.
             let mut hx = x.clone();
             layer_norm(&mut hx, h, &layer.ln1_g, &layer.ln1_b);
-            let q = matmul_bias(&hx, n, h, &layer.wq, h, &layer.bq);
-            let k = matmul_bias(&hx, n, h, &layer.wk, h, &layer.bk);
-            let v = matmul_bias(&hx, n, h, &layer.wv, h, &layer.bv);
+            let mut q = vec![0f32; rows * h];
+            layer.wq.matmul_bias(&hx, rows, &layer.bq, cfg, &mut q);
+            let mut k = vec![0f32; rows * h];
+            layer.wk.matmul_bias(&hx, rows, &layer.bk, cfg, &mut k);
+            let mut v = vec![0f32; rows * h];
+            layer.wv.matmul_bias(&hx, rows, &layer.bv, cfg, &mut v);
 
-            let scale = 1.0 / (d as f32).sqrt();
-            let mut sig = vec![0f32; n];
-            let mut ctx = vec![0f32; n * h];
-            let mut probs = vec![0f32; n];
-            for a in 0..heads {
-                let off = a * d;
-                for i in 0..n {
-                    let qi = &q[i * h + off..i * h + off + d];
-                    // Scaled dot-product logits with PAD keys masked out.
-                    let mut maxv = f32::NEG_INFINITY;
-                    for jj in 0..n {
-                        let kj = &k[jj * h + off..jj * h + off + d];
-                        let mut dot = 0f32;
-                        for t in 0..d {
-                            dot += qi[t] * kj[t];
-                        }
-                        let logit = if mask[jj] > 0.0 { dot * scale } else { NEG_INF };
-                        probs[jj] = logit;
-                        if logit > maxv {
-                            maxv = logit;
-                        }
-                    }
-                    let mut denom = 0f32;
-                    for p in probs.iter_mut() {
-                        *p = (*p - maxv).exp();
-                        denom += *p;
-                    }
-                    let inv = 1.0 / denom;
-                    let qmask = mask[i];
-                    let crow = &mut ctx[i * h + off..i * h + off + d];
-                    for jj in 0..n {
-                        let p = probs[jj] * inv;
-                        // Column sums over heads and non-PAD query rows:
-                        // the paper's significance score (§3.2).
-                        sig[jj] += qmask * p;
-                        let vj = &v[jj * h + off..jj * h + off + d];
-                        for t in 0..d {
-                            crow[t] += p * vj[t];
-                        }
-                    }
-                }
-            }
-            let proj = matmul_bias(&ctx, n, h, &layer.wo, h, &layer.bo);
+            let mut ctx = vec![0f32; rows * h];
+            let mut sig = vec![0f32; rows];
+            masked_attention(&q, &k, &v, &mask, batch, n, heads, d, cfg, &mut ctx, &mut sig);
+            let mut proj = vec![0f32; rows * h];
+            layer.wo.matmul_bias(&ctx, rows, &layer.bo, cfg, &mut proj);
             let mut x1 = x;
             for (xv, pv) in x1.iter_mut().zip(proj.iter()) {
                 *xv += pv;
@@ -381,60 +395,63 @@ impl NativeModel {
                 // (derive_retention clamps to >= 1 on the export side).
                 let keep = keep.max(1);
                 if keep < n {
-                    let idx = topk_keep_indices(&sig, &mask, keep);
-                    let mut nx = vec![0f32; keep * h];
-                    let mut nmask = vec![0f32; keep];
-                    let mut npos = vec![0i32; keep];
-                    for (slot, &src) in idx.iter().enumerate() {
-                        nx[slot * h..(slot + 1) * h]
-                            .copy_from_slice(&x1[src * h..(src + 1) * h]);
-                        nmask[slot] = mask[src];
-                        npos[slot] = positions[src];
+                    let mut nx = vec![0f32; batch * keep * h];
+                    let mut nmask = vec![0f32; batch * keep];
+                    let mut npos = vec![0i32; batch * keep];
+                    for b in 0..batch {
+                        let idx = topk.keep_indices(
+                            &sig[b * n..(b + 1) * n],
+                            &mask[b * n..(b + 1) * n],
+                            keep,
+                        );
+                        for (slot, &src) in idx.iter().enumerate() {
+                            let dst = b * keep + slot;
+                            let s = b * n + src;
+                            nx[dst * h..(dst + 1) * h].copy_from_slice(&x1[s * h..(s + 1) * h]);
+                            nmask[dst] = mask[s];
+                            npos[dst] = positions[s];
+                        }
                     }
                     x1 = nx;
                     mask = nmask;
                     positions = npos;
+                    n = keep;
                 }
             }
-            let n = x1.len() / h;
-            self.layer_tokens[j].fetch_add(n as u64, Ordering::Relaxed);
+            self.layer_tokens[j].fetch_add((batch * n) as u64, Ordering::Relaxed);
             if let Some(tr) = trace.as_mut() {
-                tr[j * seq..j * seq + n].copy_from_slice(&positions);
+                for b in 0..batch {
+                    tr[(b * n_layers + j) * seq..(b * n_layers + j) * seq + n]
+                        .copy_from_slice(&positions[b * n..(b + 1) * n]);
+                }
             }
 
-            // --- FFN half: x = x1 + FFN(LN(x1)).
+            // --- FFN half: x = x1 + FFN(LN(x1)), GELU fused into the
+            // first GEMM's epilogue.
+            let rows = batch * n;
             let mut h2 = x1.clone();
             layer_norm(&mut h2, h, &layer.ln2_g, &layer.ln2_b);
-            let mut a1 = matmul_bias(&h2, n, h, &layer.w1, layer.ffn_size, &layer.b1);
-            for vv in a1.iter_mut() {
-                *vv = gelu(*vv);
-            }
-            let a2 = matmul_bias(&a1, n, layer.ffn_size, &layer.w2, h, &layer.b2);
+            let mut a1 = vec![0f32; rows * layer.ffn_size];
+            layer.w1.matmul_bias_gelu(&h2, rows, &layer.b1, cfg, &mut a1);
+            let mut a2 = vec![0f32; rows * h];
+            layer.w2.matmul_bias(&a1, rows, &layer.b2, cfg, &mut a2);
             x = x1;
             for (xv, av) in x.iter_mut().zip(a2.iter()) {
                 *xv += av;
             }
         }
 
-        // --- pooler + classifier head from the CLS vector.
+        // --- pooler + classifier head from each example's CLS vector
+        // (row 0 of its block — pinned there by the extract layer).
         layer_norm(&mut x, h, &self.final_g, &self.final_b);
-        let cls = &x[..h];
-        let mut pooled = vec![0f32; h];
-        for (c, p) in pooled.iter_mut().enumerate() {
-            let mut acc = self.pooler_b[c];
-            for (kk, &xv) in cls.iter().enumerate() {
-                acc += xv * self.pooler_w[kk * h + c];
-            }
-            *p = acc.tanh();
+        let mut cls = vec![0f32; batch * h];
+        for b in 0..batch {
+            cls[b * h..(b + 1) * h].copy_from_slice(&x[b * n * h..b * n * h + h]);
         }
-        let mut logits = vec![0f32; self.num_classes];
-        for (c, l) in logits.iter_mut().enumerate() {
-            let mut acc = self.head_b[c];
-            for (kk, &pv) in pooled.iter().enumerate() {
-                acc += pv * self.head_w[kk * self.num_classes + c];
-            }
-            *l = acc;
-        }
+        let mut pooled = vec![0f32; batch * h];
+        self.pooler_w.matmul_bias_tanh(&cls, batch, &self.pooler_b, cfg, &mut pooled);
+        let mut logits = vec![0f32; batch * self.num_classes];
+        self.head_w.matmul_bias(&pooled, batch, &self.head_b, cfg, &mut logits);
         Ok((logits, trace))
     }
 }
@@ -454,17 +471,21 @@ impl CellExecutor for NativeModel {
         let n_layers = self.layers.len();
         let mut logits = Vec::with_capacity(batch * self.num_classes);
         let mut kept = want_trace.then(|| Vec::with_capacity(batch * n_layers * seq));
-        for r in 0..batch {
-            let (row_logits, row_trace) = self.forward_one(
-                &tokens[r * seq..(r + 1) * seq],
-                &segments[r * seq..(r + 1) * seq],
+        let mut r = 0;
+        while r < batch {
+            let chunk = NATIVE_EXEC_CHUNK.min(batch - r);
+            let (chunk_logits, chunk_trace) = self.forward_batch(
+                &tokens[r * seq..(r + chunk) * seq],
+                &segments[r * seq..(r + chunk) * seq],
+                chunk,
                 seq,
                 want_trace,
             )?;
-            logits.extend_from_slice(&row_logits);
-            if let (Some(acc), Some(tr)) = (kept.as_mut(), row_trace) {
+            logits.extend_from_slice(&chunk_logits);
+            if let (Some(acc), Some(tr)) = (kept.as_mut(), chunk_trace) {
                 acc.extend_from_slice(&tr);
             }
+            r += chunk;
         }
         Ok(ExecOutput { logits, num_classes: self.num_classes, kept })
     }
@@ -479,70 +500,49 @@ impl CellExecutor for NativeModel {
     }
 }
 
-/// Indices of the `keep` highest-scored positions in original (ascending)
-/// order. Scores: significance for real words, -1.0 for PAD (below any
-/// real column sum, which is >= 0), CLS pinned to the top. The sort is
-/// stable, so ties (e.g. between PAD columns) resolve to the lowest
-/// original index — matching jnp.argsort in model.py exactly, which the
-/// golden-logit parity fixtures depend on.
-fn topk_keep_indices(sig: &[f32], mask: &[f32], keep: usize) -> Vec<usize> {
-    let n = sig.len();
-    let mut scores: Vec<f32> = (0..n)
-        .map(|i| if mask[i] > 0.0 { sig[i] } else { -1.0 })
-        .collect();
-    scores[0] = BIG;
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
-    order.truncate(keep);
-    order.sort_unstable();
-    order
+/// Scratch for the extract layer's top-k selection: the score and index
+/// buffers persist across every (layer, example) of a forward pass instead
+/// of being reallocated per call.
+struct TopK {
+    scores: Vec<f32>,
+    order: Vec<usize>,
 }
 
-/// Row-wise LayerNorm over `h`-wide rows, in place.
-fn layer_norm(x: &mut [f32], h: usize, gamma: &[f32], beta: &[f32]) {
-    for row in x.chunks_exact_mut(h) {
-        let mut mean = 0f32;
-        for &v in row.iter() {
-            mean += v;
-        }
-        mean /= h as f32;
-        let mut var = 0f32;
-        for &v in row.iter() {
-            let dv = v - mean;
-            var += dv * dv;
-        }
-        var /= h as f32;
-        let inv = 1.0 / (var + LN_EPS).sqrt();
-        for (c, v) in row.iter_mut().enumerate() {
-            *v = (*v - mean) * inv * gamma[c] + beta[c];
-        }
+impl TopK {
+    fn with_capacity(cap: usize) -> TopK {
+        TopK { scores: Vec::with_capacity(cap), order: Vec::with_capacity(cap) }
     }
-}
 
-/// `x [n, k] @ w [k, m] + b [m]`, row-major.
-fn matmul_bias(x: &[f32], n: usize, k: usize, w: &[f32], m: usize, b: &[f32]) -> Vec<f32> {
-    let mut out = vec![0f32; n * m];
-    for i in 0..n {
-        let xrow = &x[i * k..(i + 1) * k];
-        let orow = &mut out[i * m..(i + 1) * m];
-        orow.copy_from_slice(b);
-        for (kk, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * m..(kk + 1) * m];
-            for (c, &wv) in wrow.iter().enumerate() {
-                orow[c] += xv * wv;
-            }
+    /// Indices of the `keep` highest-scored positions, returned in
+    /// original (ascending) order.
+    ///
+    /// This is the enforcement site of the paper's §3.4 pinning invariant
+    /// (the property `rust/tests` asserts is *established here*):
+    /// * **CLS survives every extract layer**: position 0's score is
+    ///   overwritten with `BIG` = 1e6, above any attainable column sum
+    ///   (significance is bounded by `heads × seq`), so the classifier's
+    ///   readout vector can never be eliminated.
+    /// * **PAD sinks below any real word**: masked positions score -1.0,
+    ///   strictly below every real column sum (those are ≥ 0), so a PAD
+    ///   survives only when `keep` exceeds the number of real tokens.
+    /// * The sort is stable, so ties (e.g. between PAD columns) resolve to
+    ///   the lowest original index — matching `jnp.argsort` in `model.py`
+    ///   exactly, which the golden-logit parity fixtures depend on.
+    fn keep_indices(&mut self, sig: &[f32], mask: &[f32], keep: usize) -> &[usize] {
+        let n = sig.len();
+        self.scores.clear();
+        for (i, &s) in sig.iter().enumerate() {
+            self.scores.push(if mask[i] > 0.0 { s } else { -1.0 });
         }
+        self.scores[0] = BIG;
+        self.order.clear();
+        self.order.extend(0..n);
+        let scores = &self.scores;
+        self.order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+        self.order.truncate(keep);
+        self.order.sort_unstable();
+        &self.order
     }
-    out
-}
-
-/// Tanh-approximate GELU, matching `jax.nn.gelu(..., approximate=True)`.
-fn gelu(x: f32) -> f32 {
-    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
-    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
 }
 
 #[cfg(test)]
@@ -554,39 +554,21 @@ mod tests {
         // 6 positions, PADs at 4/5; keep 3 -> CLS + the two best real.
         let sig = vec![0.1, 2.0, 0.5, 1.5, 9.0, 9.0];
         let mask = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
-        assert_eq!(topk_keep_indices(&sig, &mask, 3), vec![0, 1, 3]);
+        let mut topk = TopK::with_capacity(sig.len());
+        assert_eq!(topk.keep_indices(&sig, &mask, 3), &[0, 1, 3]);
         // Keep beyond the real count: PAD ties resolve to ascending index.
-        assert_eq!(topk_keep_indices(&sig, &mask, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(topk.keep_indices(&sig, &mask, 5), &[0, 1, 2, 3, 4]);
     }
 
     #[test]
-    fn layer_norm_normalizes_rows() {
-        let mut x = vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
-        let g = vec![1.0; 4];
-        let b = vec![0.0; 4];
-        layer_norm(&mut x, 4, &g, &b);
-        for row in x.chunks_exact(4) {
-            let mean: f32 = row.iter().sum::<f32>() / 4.0;
-            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
-            assert!(mean.abs() < 1e-5, "mean {mean}");
-            assert!((var - 1.0).abs() < 1e-3, "var {var}");
-        }
-    }
-
-    #[test]
-    fn matmul_bias_small_case() {
-        // [1,2;3,4] @ [1,0;0,1] + [10, 20]
-        let x = vec![1.0, 2.0, 3.0, 4.0];
-        let w = vec![1.0, 0.0, 0.0, 1.0];
-        let b = vec![10.0, 20.0];
-        assert_eq!(matmul_bias(&x, 2, 2, &w, 2, &b), vec![11.0, 22.0, 13.0, 24.0]);
-    }
-
-    #[test]
-    fn gelu_matches_reference_points() {
-        assert!(gelu(0.0).abs() < 1e-7);
-        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
-        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-4);
-        assert!((gelu(3.0) - 2.995_9).abs() < 1e-3);
+    fn topk_scratch_is_reusable_across_widths() {
+        let mut topk = TopK::with_capacity(8);
+        let sig = vec![0.0, 3.0, 1.0, 2.0];
+        let mask = vec![1.0; 4];
+        assert_eq!(topk.keep_indices(&sig, &mask, 2), &[0, 1]);
+        // Narrower follow-up call (as after an extract layer) still works.
+        let sig2 = vec![0.0, 0.5];
+        let mask2 = vec![1.0; 2];
+        assert_eq!(topk.keep_indices(&sig2, &mask2, 1), &[0]);
     }
 }

@@ -2,7 +2,7 @@
 //!
 //! Exact mirror of `python/compile/tokenizer.py` — both sides load the same
 //! `artifacts/vocab.json`: whitespace-split, exact-match lookup, OOV ->
-//! [UNK], layout `[CLS] a... [SEP] (b... [SEP])? [PAD]*`, pair truncation
+//! `[UNK]`, layout `[CLS] a... [SEP] (b... [SEP])? [PAD]*`, pair truncation
 //! longest-segment-first. The Python test-suite cross-checks encodings.
 
 use std::collections::HashMap;
@@ -101,7 +101,7 @@ impl Tokenizer {
     }
 
     /// Encoded length of the input before any padding or truncation:
-    /// words + specials ([CLS], [SEP] per segment). The serving layer uses
+    /// words + specials (`[CLS]`, `[SEP]` per segment). The serving layer uses
     /// this true token count to pick the smallest seq bucket that fits.
     pub fn true_len(&self, a: &str, b: Option<&str>) -> usize {
         let aw = a.split_whitespace().count();

@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
 use powerbert::eval::Metric;
-use powerbert::runtime::{default_root, BackendKind, Engine, Registry, TestSplit};
+use powerbert::runtime::{default_root, BackendKind, Engine, KernelConfig, Registry, TestSplit};
 use powerbert::testutil::{artifacts_available, prop::forall};
 use powerbert::tokenizer::{CLS_ID, PAD_ID, SEP_ID};
 use powerbert::util::npz;
@@ -26,52 +26,60 @@ fn native_engine() -> Engine {
 }
 
 /// Every variant with a golden fixture must reproduce the python reference
-/// logits to within 1e-4 — the parity contract of the pure-Rust forward.
+/// logits to within 1e-4 — the parity contract of the pure-Rust forward —
+/// under the blocked + parallel kernels at 1, 2 and 4 intra-op threads
+/// (the kernels are deterministic per thread count; parity must hold at
+/// every one). `mc` is shrunk so multi-thread runs genuinely split rows.
 #[test]
 fn golden_logit_parity() {
     let Some(reg) = registry() else { return };
     let mut checked = 0;
-    for ds in reg.datasets.values() {
-        let golden_path = ds.dir.join("golden.npz");
-        if !golden_path.exists() {
-            continue;
-        }
-        let entries = npz::read_npz(&golden_path).expect("golden.npz");
-        let split = TestSplit::load(&ds.test_npz()).expect("test split");
-        let seq = split.seq_len;
-        let mut engine = native_engine();
-        for e in &entries {
-            let Some(variant) = e.name.strip_suffix("/logits") else { continue };
-            let Some(meta) = ds.variant(variant) else { continue };
-            assert_eq!(e.dims.len(), 2, "golden {variant}: bad shape {:?}", e.dims);
-            assert_eq!(e.dims[0], split.n, "golden {variant}: row count");
-            let nc = e.dims[1];
-            let golden = e.data.to_f32();
-            let model = engine.load(meta).expect("native load");
-            assert_eq!(model.backend_name(), "native");
-            let mut max_diff = 0f32;
-            let mut i = 0;
-            while i < split.n {
-                let m = 32.min(split.n - i);
-                let l = model
-                    .infer(
-                        &split.tokens[i * seq..(i + m) * seq],
-                        &split.segments[i * seq..(i + m) * seq],
-                        m,
-                    )
-                    .expect("native infer");
-                assert_eq!(l.num_classes, nc);
-                for (a, b) in l.values.iter().zip(&golden[i * nc..(i + m) * nc]) {
-                    max_diff = max_diff.max((a - b).abs());
-                }
-                i += m;
+    for threads in [1usize, 2, 4] {
+        let kernel = KernelConfig { threads, kc: 256, mc: 16 };
+        for ds in reg.datasets.values() {
+            let golden_path = ds.dir.join("golden.npz");
+            if !golden_path.exists() {
+                continue;
             }
-            assert!(
-                max_diff < 1e-4,
-                "{}/{variant}: native logits deviate from the python golden by {max_diff}",
-                ds.name
-            );
-            checked += 1;
+            let entries = npz::read_npz(&golden_path).expect("golden.npz");
+            let split = TestSplit::load(&ds.test_npz()).expect("test split");
+            let seq = split.seq_len;
+            let mut engine = Engine::with_backend_config(BackendKind::Native, kernel.clone())
+                .expect("native engine");
+            for e in &entries {
+                let Some(variant) = e.name.strip_suffix("/logits") else { continue };
+                let Some(meta) = ds.variant(variant) else { continue };
+                assert_eq!(e.dims.len(), 2, "golden {variant}: bad shape {:?}", e.dims);
+                assert_eq!(e.dims[0], split.n, "golden {variant}: row count");
+                let nc = e.dims[1];
+                let golden = e.data.to_f32();
+                let model = engine.load(meta).expect("native load");
+                assert_eq!(model.backend_name(), "native");
+                let mut max_diff = 0f32;
+                let mut i = 0;
+                while i < split.n {
+                    let m = 32.min(split.n - i);
+                    let l = model
+                        .infer(
+                            &split.tokens[i * seq..(i + m) * seq],
+                            &split.segments[i * seq..(i + m) * seq],
+                            m,
+                        )
+                        .expect("native infer");
+                    assert_eq!(l.num_classes, nc);
+                    for (a, b) in l.values.iter().zip(&golden[i * nc..(i + m) * nc]) {
+                        max_diff = max_diff.max((a - b).abs());
+                    }
+                    i += m;
+                }
+                assert!(
+                    max_diff < 1e-4,
+                    "{}/{variant} at {threads} kernel threads: native logits deviate \
+                     from the python golden by {max_diff}",
+                    ds.name
+                );
+                checked += 1;
+            }
         }
     }
     assert!(checked > 0, "no golden fixtures — run `python -m compile.golden`");

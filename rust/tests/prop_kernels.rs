@@ -1,0 +1,167 @@
+//! Property tests for the native microkernels: the blocked, packed GEMM
+//! must agree with the naive reference on arbitrary shapes (including
+//! ragged non-multiple-of-block sizes), fused epilogues must equal
+//! epilogue-after-matmul, and every kernel must be bit-deterministic
+//! across thread counts. No artifacts required — these run everywhere.
+
+use powerbert::runtime::kernels::attention::masked_attention;
+use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm};
+use powerbert::runtime::kernels::{gelu, KernelConfig};
+use powerbert::testutil::prop::forall;
+use powerbert::util::prng::Rng;
+
+fn rand_f32(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+/// Random kernel config exercising ragged blocking: kc/mc deliberately
+/// small and unaligned so block boundaries fall mid-shape.
+fn rand_cfg(rng: &mut Rng, k: usize) -> KernelConfig {
+    KernelConfig {
+        threads: 1 + rng.below(4) as usize,
+        kc: 1 + rng.below(k as u64 + 7) as usize,
+        mc: 1 + rng.below(9) as usize,
+    }
+}
+
+#[test]
+fn blocked_matmul_matches_naive_reference() {
+    forall("blocked matmul == naive", 96, |rng, size| {
+        // Shapes straddle the MR=4 / NR=8 tile sizes: 1..~68 in each dim,
+        // never rounded to a block multiple.
+        let n = 1 + rng.below(size as u64 + 4) as usize;
+        let k = 1 + rng.below(64) as usize;
+        let m = 1 + rng.below(64) as usize;
+        let x = rand_f32(rng, n * k);
+        let w = rand_f32(rng, k * m);
+        let b = rand_f32(rng, m);
+        let cfg = rand_cfg(rng, k);
+        let packed = PackedGemm::pack(&w, k, m);
+        let mut out = vec![0f32; n * m];
+        packed.matmul_bias(&x, n, &b, &cfg, &mut out);
+        let want = matmul_bias_ref(&x, n, k, &w, m, &b);
+        for (i, (got, want)) in out.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "({n},{k},{m}) cfg {cfg:?} elem {i}: blocked {got} vs naive {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn identity_weight_is_exact() {
+    // With w = I the blocked kernel adds only exact zeros, so the result
+    // must be bit-exactly x + bias — any deviation is a packing/layout bug,
+    // not floating-point noise.
+    forall("identity weight passes through", 48, |rng, size| {
+        let n = 1 + rng.below(size as u64 + 2) as usize;
+        let k = 1 + rng.below(33) as usize;
+        let x = rand_f32(rng, n * k);
+        let b = rand_f32(rng, k);
+        let mut w = vec![0f32; k * k];
+        for i in 0..k {
+            w[i * k + i] = 1.0;
+        }
+        let packed = PackedGemm::pack(&w, k, k);
+        let mut out = vec![0f32; n * k];
+        packed.matmul_bias(&x, n, &b, &rand_cfg(rng, k), &mut out);
+        for i in 0..n {
+            for c in 0..k {
+                assert_eq!(out[i * k + c], x[i * k + c] + b[c], "row {i} col {c}");
+            }
+        }
+    });
+}
+
+#[test]
+fn fused_gelu_equals_gelu_after_matmul() {
+    forall("fused gelu == gelu(matmul)", 48, |rng, size| {
+        let n = 1 + rng.below(size as u64 + 2) as usize;
+        let k = 1 + rng.below(48) as usize;
+        let m = 1 + rng.below(48) as usize;
+        let x = rand_f32(rng, n * k);
+        let w = rand_f32(rng, k * m);
+        let b = rand_f32(rng, m);
+        let packed = PackedGemm::pack(&w, k, m);
+        let mut fused = vec![0f32; n * m];
+        packed.matmul_bias_gelu(&x, n, &b, &rand_cfg(rng, k), &mut fused);
+        let want = matmul_bias_ref(&x, n, k, &w, m, &b);
+        for (i, (got, want)) in fused.iter().zip(want.iter()).enumerate() {
+            let want = gelu(*want);
+            assert!(
+                (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "({n},{k},{m}) elem {i}: fused {got} vs mapped {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn gemm_is_bit_deterministic_across_thread_counts() {
+    forall("gemm threads bit-identical", 32, |rng, size| {
+        let n = 1 + rng.below(size as u64 + 8) as usize;
+        let k = 1 + rng.below(48) as usize;
+        let m = 1 + rng.below(48) as usize;
+        let x = rand_f32(rng, n * k);
+        let w = rand_f32(rng, k * m);
+        let b = rand_f32(rng, m);
+        let kc = 1 + rng.below(k as u64 + 7) as usize;
+        let mc = 1 + rng.below(9) as usize;
+        let packed = PackedGemm::pack(&w, k, m);
+        let mut serial = vec![0f32; n * m];
+        packed.matmul_bias(&x, n, &b, &KernelConfig { threads: 1, kc, mc }, &mut serial);
+        for threads in [2usize, 4] {
+            let mut par = vec![0f32; n * m];
+            packed.matmul_bias(&x, n, &b, &KernelConfig { threads, kc, mc }, &mut par);
+            assert_eq!(serial, par, "threads={threads} kc={kc} mc={mc}");
+        }
+    });
+}
+
+#[test]
+fn attention_masks_pads_and_is_thread_deterministic() {
+    forall("attention mask + determinism", 24, |rng, size| {
+        let batch = 1 + rng.below(3) as usize;
+        let n = 2 + (size % 9);
+        let heads = 1 + rng.below(3) as usize;
+        let d = 1 + rng.below(8) as usize;
+        let h = heads * d;
+        let q = rand_f32(rng, batch * n * h);
+        let k = rand_f32(rng, batch * n * h);
+        let v = rand_f32(rng, batch * n * h);
+        // Random PAD tails per example; position 0 (CLS) always real.
+        let mut mask = vec![1f32; batch * n];
+        let mut real = vec![0usize; batch];
+        for (b, r) in real.iter_mut().enumerate() {
+            *r = 1 + rng.below(n as u64) as usize;
+            for i in *r..n {
+                mask[b * n + i] = 0.0;
+            }
+        }
+        let mut ctx = vec![0f32; batch * n * h];
+        let mut sig = vec![0f32; batch * n];
+        let cfg = KernelConfig::default();
+        masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx, &mut sig);
+        for b in 0..batch {
+            // PAD key columns receive (numerically) zero attention mass —
+            // the significance the extract layer ranks by cannot resurrect
+            // an eliminated-by-construction position.
+            for i in real[b]..n {
+                assert!(sig[b * n + i].abs() < 1e-6, "PAD sig {}", sig[b * n + i]);
+            }
+            // Each real query row distributes softmax mass 1 per head.
+            let mass: f32 = sig[b * n..(b + 1) * n].iter().sum();
+            let want = (heads * real[b]) as f32;
+            assert!((mass - want).abs() < 1e-3, "example {b}: mass {mass} vs {want}");
+        }
+        for threads in [2usize, 4] {
+            let mut ctx_t = vec![0f32; batch * n * h];
+            let mut sig_t = vec![0f32; batch * n];
+            let cfg = KernelConfig::default().with_threads(threads);
+            masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx_t, &mut sig_t);
+            assert_eq!(ctx, ctx_t, "ctx differs at threads={threads}");
+            assert_eq!(sig, sig_t, "sig differs at threads={threads}");
+        }
+    });
+}
