@@ -1,13 +1,19 @@
 //! Native backend bench: the kernel layer and the end-to-end forward.
 //!
-//! Three sections per dataset:
+//! Sections per dataset:
 //! 1. **kernels** — the blocked, packed `matmul_bias` against the naive
 //!    reference on the bundle's real GEMM shapes (QKV projection, FFN up,
 //!    FFN down), single-threaded, in GFLOP/s — old-vs-new for the exact
-//!    loops the forward pass runs;
+//!    loops the forward pass runs, plus per-call allocation bytes (the
+//!    naive path allocates its output; the blocked path is
+//!    allocation-free);
 //! 2. **thread scaling** — the same blocked kernel on the FFN-up shape at
 //!    1/2/4 intra-op threads;
-//! 3. **bert vs power** — wall-clock speedup vs the retention config plus
+//! 3. **dispatch (small shape)** — serial vs per-call scoped spawns vs
+//!    the persistent pool on a batch=1, 64-row slice of the FFN-up shape:
+//!    the regime where spawn cost used to dominate. Reports p50 latency,
+//!    allocation bytes/call and thread spawns/call for each path;
+//! 4. **bert vs power** — wall-clock speedup vs the retention config plus
 //!    the measured per-layer word-vector counts (the paper's Figure 1
 //!    quantity, counted by the executor rather than derived from
 //!    meta.json).
@@ -16,11 +22,17 @@
 
 use powerbert::bench::{fmt_time, paper::measure, time_fn, BenchConfig, Table};
 use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm};
-use powerbert::runtime::kernels::KernelConfig;
+use powerbert::runtime::kernels::{thread_spawns, KernelConfig, KernelExec};
 use powerbert::runtime::{
     default_root, ArtifactStore, BackendKind, Engine, Registry, TestSplit, VariantMeta,
 };
+use powerbert::testutil::alloc;
 use powerbert::util::prng::Rng;
+
+// Count every heap allocation so the kernels table can report bytes/call
+// — the steady-state claim, measured rather than asserted.
+#[global_allocator]
+static ALLOC: alloc::CountingAlloc = alloc::CountingAlloc::new();
 
 fn main() {
     powerbert::util::log::init();
@@ -43,9 +55,20 @@ fn main() {
     }
 }
 
-/// Old-vs-new on the bundle's real GEMM shapes, plus thread scaling on the
-/// FFN-up shape. `rows` is a full batch at full width (8 × seq) — the
-/// shape the first encoder runs before elimination shrinks it.
+/// Allocation bytes + thread spawns of one `f()` call.
+fn cost_of_call(f: &mut dyn FnMut()) -> (u64, u64) {
+    let before_alloc = alloc::snapshot();
+    let before_spawns = thread_spawns();
+    f();
+    let da = alloc::snapshot().since(&before_alloc);
+    (da.bytes, thread_spawns() - before_spawns)
+}
+
+/// Old-vs-new on the bundle's real GEMM shapes (plus per-call allocation
+/// bytes), thread scaling on the FFN-up shape, and the dispatch-path
+/// comparison on the small shape the spawn cost used to dominate. `rows`
+/// is a full batch at full width (8 × seq) — the shape the first encoder
+/// runs before elimination shrinks it.
 fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow::Result<()> {
     let store = ArtifactStore::new();
     let art = store.fetch(meta)?;
@@ -67,9 +90,17 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
         [("qkv proj", h, h, &wq), ("ffn up", h, ffn, &w1), ("ffn down", ffn, h, &w2)];
     let mut table = Table::new(
         &format!("native kernels — {ds_name}: blocked+packed vs naive matmul_bias (1 thread)"),
-        &["shape", "n x k x m", "naive", "blocked", "GFLOP/s (naive -> blocked)", "speedup"],
+        &[
+            "shape",
+            "n x k x m",
+            "naive",
+            "blocked",
+            "GFLOP/s (naive -> blocked)",
+            "speedup",
+            "alloc B/call (naive -> blocked)",
+        ],
     );
-    let single = KernelConfig::default().with_threads(1);
+    let single = KernelExec::new(KernelConfig::default().with_threads(1));
     let mut ffn_speedup = None;
     for (name, k, m, w) in shapes {
         let x: Vec<f32> = (0..rows * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
@@ -77,9 +108,16 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
         let naive = time_fn(cfg, || {
             std::hint::black_box(matmul_bias_ref(&x, rows, k, w, m, &bias));
         });
+        let (naive_bytes, _) = cost_of_call(&mut || {
+            std::hint::black_box(matmul_bias_ref(&x, rows, k, w, m, &bias));
+        });
         let packed = PackedGemm::pack(w, k, m);
         let mut out = vec![0f32; rows * m];
         let blocked = time_fn(cfg, || {
+            packed.matmul_bias(&x, rows, &bias, &single, &mut out);
+            std::hint::black_box(&out);
+        });
+        let (blocked_bytes, _) = cost_of_call(&mut || {
             packed.matmul_bias(&x, rows, &bias, &single, &mut out);
             std::hint::black_box(&out);
         });
@@ -95,6 +133,7 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
             fmt_time(blocked.p50),
             format!("{:.2} -> {:.2}", flops / naive.p50 / 1e9, flops / blocked.p50 / 1e9),
             format!("{speedup:.2}x"),
+            format!("{naive_bytes} -> {blocked_bytes}"),
         ]);
     }
     table.print();
@@ -116,9 +155,9 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
     let mut base = None;
     for threads in [1usize, 2, 4] {
         // mc small enough that `rows` splits across every thread count.
-        let kcfg = KernelConfig { threads, kc: 256, mc: 16 };
+        let exec = KernelExec::new(KernelConfig { threads, kc: 256, mc: 16 });
         let t = time_fn(cfg, || {
-            packed.matmul_bias(&x, rows, &bias, &kcfg, &mut out);
+            packed.matmul_bias(&x, rows, &bias, &exec, &mut out);
             std::hint::black_box(&out);
         });
         if threads == 1 {
@@ -133,11 +172,94 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
         ]);
     }
     scaling.print();
+
+    bench_dispatch(ds_name, &w1, h, ffn, cfg);
     Ok(())
 }
 
+/// Dispatch-path comparison on the small shape the per-call spawn cost
+/// used to dominate: batch=1 × 64 rows (the seq-64 bucket) of the FFN-up
+/// GEMM, split at mc=16 so two lanes genuinely share the work. Serial vs
+/// per-call scoped spawns vs the persistent pool — the pooled line should
+/// sit at (or below) serial and clearly below scoped.
+fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchConfig) {
+    const DISPATCH_ROWS: usize = 64; // batch=1 at a seq-64 bucket
+    const DISPATCH_THREADS: usize = 2;
+    let mut rng = Rng::new(0xD15F);
+    let x: Vec<f32> = (0..DISPATCH_ROWS * h).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let bias: Vec<f32> = (0..ffn).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let packed = PackedGemm::pack(w1, h, ffn);
+    let mut out = vec![0f32; DISPATCH_ROWS * ffn];
+    let kcfg = KernelConfig { threads: DISPATCH_THREADS, kc: 256, mc: 16 };
+    let serial_exec = KernelExec::new(kcfg.clone().with_threads(1));
+    // Built once — the pool's workers are parked between calls, exactly
+    // as an EngineWorker holds them for its lifetime.
+    let pooled_exec = KernelExec::new(kcfg.clone());
+
+    let mut table = Table::new(
+        &format!(
+            "native kernels — {ds_name}: dispatch on the small shape \
+             (batch=1, {DISPATCH_ROWS} rows x {h} x {ffn}, {DISPATCH_THREADS} threads)"
+        ),
+        &["path", "p50", "alloc B/call", "spawns/call", "vs serial"],
+    );
+
+    let serial = time_fn(cfg, || {
+        packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &serial_exec, &mut out);
+        std::hint::black_box(&out);
+    });
+    let (serial_bytes, serial_spawns) = cost_of_call(&mut || {
+        packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &serial_exec, &mut out);
+        std::hint::black_box(&out);
+    });
+    table.row(vec![
+        "serial (1 thread)".into(),
+        fmt_time(serial.p50),
+        serial_bytes.to_string(),
+        serial_spawns.to_string(),
+        "1.00x".into(),
+    ]);
+
+    let scoped = time_fn(cfg, || {
+        packed.matmul_bias_scoped(&x, DISPATCH_ROWS, &bias, &kcfg, &mut out);
+        std::hint::black_box(&out);
+    });
+    let (scoped_bytes, scoped_spawns) = cost_of_call(&mut || {
+        packed.matmul_bias_scoped(&x, DISPATCH_ROWS, &bias, &kcfg, &mut out);
+        std::hint::black_box(&out);
+    });
+    table.row(vec![
+        "scoped spawns (old)".into(),
+        fmt_time(scoped.p50),
+        scoped_bytes.to_string(),
+        scoped_spawns.to_string(),
+        format!("{:.2}x", serial.p50 / scoped.p50),
+    ]);
+
+    let pooled = time_fn(cfg, || {
+        packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &pooled_exec, &mut out);
+        std::hint::black_box(&out);
+    });
+    let (pooled_bytes, pooled_spawns) = cost_of_call(&mut || {
+        packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &pooled_exec, &mut out);
+        std::hint::black_box(&out);
+    });
+    table.row(vec![
+        "kernel pool (new)".into(),
+        fmt_time(pooled.p50),
+        pooled_bytes.to_string(),
+        pooled_spawns.to_string(),
+        format!("{:.2}x", serial.p50 / pooled.p50),
+    ]);
+    table.print();
+    println!(
+        "small-shape dispatch: pooled spawns 0 threads/call vs scoped's \
+         per-call spawns — the pool pays its {DISPATCH_THREADS} spawns once at worker start"
+    );
+}
+
 /// bert vs power end-to-end on the native backend: metric, latency,
-/// speedup-vs-retention, measured word-vectors per layer.
+/// speedup-vs-retention, measured word-vectors per layer, arena footprint.
 fn bench_end_to_end(ds_name: &str, ds: &powerbert::runtime::DatasetArtifacts, cfg: &BenchConfig) {
     let split = match TestSplit::load(&ds.test_npz()) {
         Ok(s) => s,
@@ -149,7 +271,7 @@ fn bench_end_to_end(ds_name: &str, ds: &powerbert::runtime::DatasetArtifacts, cf
     let mut engine = Engine::with_backend(BackendKind::Native).expect("native engine");
     let mut table = Table::new(
         &format!("native backend — {ds_name}: metric / latency / word-vectors per layer"),
-        &["variant", "metric", "batch", "p50", "speedup", "wv/layer (measured)"],
+        &["variant", "metric", "batch", "p50", "speedup", "wv/layer (measured)", "arena peak"],
     );
     let mut bert_p50 = None;
     for vname in ["bert", "power-default"] {
@@ -189,6 +311,13 @@ fn bench_end_to_end(ds_name: &str, ds: &powerbert::runtime::DatasetArtifacts, cf
         let speedup = bert_p50
             .map(|b| format!("{:.2}x", b / point.latency.p50))
             .unwrap_or_else(|| "-".into());
+        let arena = model
+            .memory_stats()
+            .map(|m| {
+                let kib = m.arena_peak_bytes as f64 / 1024.0;
+                format!("{kib:.1} KiB / {} bucket(s)", m.arena_buckets)
+            })
+            .unwrap_or_else(|| "-".into());
         table.row(vec![
             vname.to_string(),
             format!("{:.4}", point.metric),
@@ -196,6 +325,7 @@ fn bench_end_to_end(ds_name: &str, ds: &powerbert::runtime::DatasetArtifacts, cf
             fmt_time(point.latency.p50),
             speedup,
             format!("{per_layer:?} (Σ {})", per_layer.iter().sum::<u64>()),
+            arena,
         ]);
     }
     if !table.rows.is_empty() {

@@ -7,6 +7,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::runtime::MemoryStats;
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 
@@ -76,12 +77,26 @@ impl VariantStats {
     }
 }
 
-/// Per-executor-worker counters (pool utilisation and skew).
+/// Per-executor-worker counters (pool utilisation and skew), plus the
+/// steady-state memory gauges: the scratch-arena footprint and kernel-pool
+/// occupancy `stats`/`cmd:hello` consumers read to confirm the worker has
+/// stopped allocating and spawning per request.
 #[derive(Debug, Default, Clone)]
 pub struct WorkerStats {
     pub batches: u64,
     pub rows: u64,
     pub busy_us: u64,
+    /// Largest per-bucket scratch arena resident on this worker (bytes),
+    /// max over every model it serves.
+    pub arena_peak_bytes: u64,
+    /// Largest arena count of any one model on this worker (≈ distinct
+    /// `(batch, seq)` buckets that model has served) — a gauge of bucket
+    /// spread, not a total across co-loaded models.
+    pub arena_buckets: u64,
+    /// Kernel-pool lanes (persistent workers + the dispatching thread).
+    pub pool_threads: u64,
+    /// Parallel kernel jobs dispatched to the pool since worker start.
+    pub pool_jobs: u64,
 }
 
 /// Process-wide metrics hub.
@@ -134,6 +149,21 @@ impl MetricsHub {
         s.batches += 1;
         s.rows += rows as u64;
         s.busy_us += busy_us;
+    }
+
+    /// Record a worker's steady-state memory/dispatch gauges. Arena peak
+    /// and bucket counts are max'd across the worker's model snapshots;
+    /// pool counters take the newest reading (monotonic at the source).
+    pub fn record_worker_memory(&self, worker: usize, mem: &MemoryStats) {
+        let mut w = self.workers.lock().unwrap();
+        if w.len() <= worker {
+            w.resize(worker + 1, WorkerStats::default());
+        }
+        let s = &mut w[worker];
+        s.arena_peak_bytes = s.arena_peak_bytes.max(mem.arena_peak_bytes);
+        s.arena_buckets = s.arena_buckets.max(mem.arena_buckets);
+        s.pool_threads = mem.pool_threads;
+        s.pool_jobs = s.pool_jobs.max(mem.pool_jobs);
     }
 
     pub fn record_request(&self, key: &str, queue_us: u64, total_us: u64) {
@@ -216,6 +246,10 @@ impl MetricsHub {
                 m.insert("batches".to_string(), Json::UInt(w.batches));
                 m.insert("rows".to_string(), Json::UInt(w.rows));
                 m.insert("busy_us".to_string(), Json::UInt(w.busy_us));
+                m.insert("arena_peak_bytes".to_string(), Json::UInt(w.arena_peak_bytes));
+                m.insert("arena_buckets".to_string(), Json::UInt(w.arena_buckets));
+                m.insert("pool_threads".to_string(), Json::UInt(w.pool_threads));
+                m.insert("pool_jobs".to_string(), Json::UInt(w.pool_jobs));
                 Json::Obj(m)
             })
             .collect();
@@ -252,10 +286,15 @@ impl MetricsHub {
             let uptime = self.uptime_secs().max(1e-9);
             for (i, w) in workers.iter().enumerate() {
                 out.push_str(&format!(
-                    "worker {i}: {} batches, {} rows, busy {:.1}% of uptime\n",
+                    "worker {i}: {} batches, {} rows, busy {:.1}% of uptime, \
+                     arena peak {:.1} KiB over {} bucket(s), pool {} lane(s) / {} jobs\n",
                     w.batches,
                     w.rows,
                     100.0 * (w.busy_us as f64 / 1e6) / uptime,
+                    w.arena_peak_bytes as f64 / 1024.0,
+                    w.arena_buckets,
+                    w.pool_threads,
+                    w.pool_jobs,
                 ));
             }
         }
@@ -312,6 +351,41 @@ mod tests {
         assert_eq!(w[1].rows, 12);
         assert_eq!(w[0].busy_us, 100);
         assert!(h.report().contains("worker 0"));
+    }
+
+    #[test]
+    fn worker_memory_gauges_track_peak_and_latest() {
+        let h = MetricsHub::new();
+        h.record_worker_memory(
+            0,
+            &MemoryStats {
+                arena_peak_bytes: 4096,
+                arena_buckets: 1,
+                pool_threads: 4,
+                pool_jobs: 10,
+            },
+        );
+        // A smaller later snapshot must not shrink the peak; pool jobs
+        // advance to the newest reading.
+        h.record_worker_memory(
+            0,
+            &MemoryStats {
+                arena_peak_bytes: 1024,
+                arena_buckets: 3,
+                pool_threads: 4,
+                pool_jobs: 25,
+            },
+        );
+        let w = h.worker_snapshot();
+        assert_eq!(w[0].arena_peak_bytes, 4096);
+        assert_eq!(w[0].arena_buckets, 3);
+        assert_eq!(w[0].pool_threads, 4);
+        assert_eq!(w[0].pool_jobs, 25);
+        // Surfaced both in the human report and the structured stats.
+        h.record_worker(0, 1, 10);
+        assert!(h.report().contains("pool 4 lane(s)"));
+        let json = h.to_json().to_string();
+        assert!(json.contains("arena_peak_bytes"), "stats json lacks arena gauge: {json}");
     }
 
     #[test]

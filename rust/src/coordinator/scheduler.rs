@@ -66,7 +66,13 @@ pub struct Config {
     /// Native-kernel tuning (block sizes, intra-op threads) handed to
     /// every pool worker. The default keeps kernels single-threaded —
     /// the pool already parallelizes across workers; intra-op threads
-    /// are for wide models or low-`workers` deployments.
+    /// are for wide models or low-`workers` deployments. `threads > 1`
+    /// sizes each worker's **persistent** kernel pool, spawned once (at
+    /// worker start for `native`; on the first fallback load for `auto`)
+    /// and parked between kernel calls; on drain the pool's threads are
+    /// joined after the worker finishes its backlog (the queues close
+    /// first, then the models — and the pool with them — drop with the
+    /// `EngineWorker`).
     pub kernel: KernelConfig,
     /// Sequence buckets for length-aware batching, ascending (e.g.
     /// [16, 32, 64]). Requests encode to the smallest bucket that fits
@@ -600,7 +606,14 @@ fn run_batch(
         real_tokens += job.real_len;
     }
     let t_exec = Instant::now();
-    match model.infer_at(&tokens, &segments, n, seq) {
+    let result = model.infer_at(&tokens, &segments, n, seq);
+    // Steady-state gauges (arena footprint, pool occupancy) for the
+    // structured `stats` output — refreshed per batch so consumers see
+    // memory reach its plateau.
+    if let Some(mem) = model.memory_stats() {
+        metrics.record_worker_memory(worker.id(), &mem);
+    }
+    match result {
         Ok(logits) => {
             let exec_us = t_exec.elapsed().as_micros() as u64;
             let cell = model.cell_for(n, seq).unwrap_or((n, seq));

@@ -19,9 +19,14 @@
 //!   dependencies), or `auto` (PJRT with native fallback).
 //! * [`runtime::kernels`] — the native backend's microkernels: blocked,
 //!   weight-pretransposed GEMM with fused epilogues and a parallel masked
-//!   attention kernel, tuned via [`runtime::KernelConfig`]. Elimination
-//!   shrinks these kernels' shapes layer by layer — see
-//!   `docs/ARCHITECTURE.md` for the cost model.
+//!   attention kernel, tuned via [`runtime::KernelConfig`] and dispatched
+//!   to a persistent per-worker [`runtime::kernels::pool::KernelPool`]
+//!   (via [`runtime::KernelExec`]). Elimination shrinks these kernels'
+//!   shapes layer by layer — see `docs/ARCHITECTURE.md` for the cost
+//!   model.
+//! * [`runtime::arena`] — preplanned per-`(batch, seq)`-bucket scratch
+//!   slabs: peak bytes derive from the retention schedule at load time,
+//!   and the steady-state forward pass allocates nothing.
 //! * [`runtime::EngineWorker`] — backend half: one backend instance +
 //!   loaded models per executor thread. [`runtime::Engine`] is the
 //!   single-worker facade.

@@ -30,7 +30,7 @@ fn main() {
     .opt("max-batch", Some("32"), "serve: dynamic batcher max batch")
     .opt("max-wait-ms", Some("5"), "serve: dynamic batcher max wait")
     .opt("backend", None, "serve/eval: inference backend (pjrt | native | auto; default $POWERBERT_BACKEND or auto)")
-    .opt("kernel-threads", None, "serve/eval: native kernel threads per op (0 = one per core; default $POWERBERT_KERNEL_THREADS or 1)")
+    .opt("kernel-threads", None, "serve/eval: native kernel threads per op, sizing each worker's persistent kernel pool (0 = one per core; default $POWERBERT_KERNEL_THREADS or 1)")
     .opt("kernel-kc", None, "serve/eval: native kernel depth-block size (default $POWERBERT_KERNEL_KC or 256)")
     .opt("kernel-mc", None, "serve/eval: native kernel row-block size (default $POWERBERT_KERNEL_MC or 64)")
     .opt("workers", Some("1"), "serve: executor pool size (one backend instance each)")

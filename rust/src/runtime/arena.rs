@@ -1,0 +1,382 @@
+//! Preplanned scratch arenas for the native forward pass.
+//!
+//! `NativeModel::forward_batch` used to allocate every transient buffer —
+//! QKV projections, attention context, significance scores, the FFN
+//! activation, extraction targets — as a fresh `Vec` per layer per call.
+//! None of that cost shrinks with elimination, so on small `(batch, seq)`
+//! buckets the allocator could rival the arithmetic. This module replaces
+//! all of it with **one reusable slab per `(batch, seq)` bucket**, planned
+//! once from quantities known a priori:
+//!
+//! * the widths `n_j` every layer runs at follow deterministically from
+//!   the retention schedule (`n_0 = seq`, then
+//!   `n_j = min(n_{j-1}, max(retention[j], 1))` — elimination never grows
+//!   a batch), so
+//! * the peak bytes of a bucket are computable **at model-load time**, and
+//! * within a forward pass the live region of the slab shrinks layer by
+//!   layer exactly as elimination does — the arena's occupancy curve *is*
+//!   the paper's word-vector curve.
+//!
+//! An [`ArenaPlan`] records the region layout; a [`ForwardArena`] owns the
+//! backing slabs and hands the forward pass a set of disjoint named
+//! [`Regions`] carved by `split_at_mut` — no per-call allocation, no
+//! unsafe. Regions are returned **dirty**: every consumer fully overwrites
+//! the prefix it uses (a property `tests/prop_kernels.rs` and the
+//! back-to-back determinism tests in `tests/native_backend.rs` pin down).
+//!
+//! # Peak-bytes formula
+//!
+//! With `B = batch`, `S = seq`, `h = hidden`, `H = heads`, `F = ffn`,
+//! `L = lanes` (kernel pool size) and `P = max_j n_j^post` (the widest
+//! post-extraction layer):
+//!
+//! ```text
+//! f32s = B·S·(7h + 2)            x, hx, q, k, v, ctx, proj; mask, sig
+//!      + B·P·F                   FFN activation
+//!      + [lanes > 1] · B·S·h     private attention head slabs
+//!      + B·H·S (or S serial)     per-head significance partials
+//!      + L·S                     per-lane softmax rows
+//!      + 2·B·h + S               pooler tails + top-k scores
+//! i32s = B·S + S                 surviving positions + top-k order
+//! peak_bytes = 4 · (f32s + i32s)
+//! ```
+//!
+//! For a power variant `P = max(retention[0], 1)` (clamped by `S`); for a
+//! bert variant `P = S`. The committed sst2 quick bundle at its (8, 32)
+//! execution chunk plans ~330 KiB; a BERT-base-scale export at (8, 128)
+//! plans tens of MiB — either way a constant per worker per bucket,
+//! instead of per-layer churn.
+
+use super::kernels::KernelConfig;
+
+/// The model-architecture inputs of an [`ArenaPlan`] — everything about
+/// buffer sizing that is not per-request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaDims {
+    pub hidden: usize,
+    pub heads: usize,
+    /// Widest FFN across layers (layers share one slab region).
+    pub ffn: usize,
+    pub layers: usize,
+}
+
+/// Region layout of one `(batch, seq)` bucket's arena, planned from the
+/// retention schedule. All lengths are in elements, not bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArenaPlan {
+    pub batch: usize,
+    pub seq: usize,
+    /// Kernel-pool lanes the attention scratch is provisioned for.
+    pub lanes: usize,
+    // f32 regions, in carve order.
+    x: usize,
+    mask: usize,
+    sig: usize,
+    hx: usize,
+    q: usize,
+    k: usize,
+    v: usize,
+    ctx: usize,
+    proj: usize,
+    a1: usize,
+    attn_ctx: usize,
+    attn_sig: usize,
+    attn_probs: usize,
+    cls: usize,
+    pooled: usize,
+    topk_scores: usize,
+    // i32 regions, in carve order.
+    positions: usize,
+    topk_order: usize,
+}
+
+impl ArenaPlan {
+    /// Plan a `(batch, seq)` bucket for a model with `dims` and the given
+    /// retention schedule, provisioning attention scratch for `lanes`
+    /// kernel-pool lanes.
+    pub fn plan(
+        dims: &ArenaDims,
+        retention: Option<&[usize]>,
+        batch: usize,
+        seq: usize,
+        lanes: usize,
+    ) -> ArenaPlan {
+        let h = dims.hidden;
+        let lanes = lanes.max(1);
+        // Post-extraction width per layer: n_j = min(n_{j-1}, keep_j).
+        // The FFN region must fit the widest of them.
+        let mut n = seq;
+        let mut post_max = 0usize;
+        for j in 0..dims.layers {
+            if let Some(keep) = retention.and_then(|r| r.get(j)).copied() {
+                let keep = keep.max(1);
+                if keep < n {
+                    n = keep;
+                }
+            }
+            post_max = post_max.max(n);
+        }
+        if dims.layers == 0 {
+            post_max = seq;
+        }
+        let rows = batch * seq;
+        ArenaPlan {
+            batch,
+            seq,
+            lanes,
+            x: rows * h,
+            mask: rows,
+            sig: rows,
+            hx: rows * h,
+            q: rows * h,
+            k: rows * h,
+            v: rows * h,
+            ctx: rows * h,
+            proj: rows * h,
+            a1: batch * post_max * dims.ffn,
+            // Private head slabs exist only on the pooled path; the serial
+            // path folds per head through the sig region's first row.
+            attn_ctx: if lanes > 1 { rows * h } else { 0 },
+            attn_sig: if lanes > 1 { batch * dims.heads * seq } else { seq },
+            attn_probs: lanes * seq,
+            cls: batch * h,
+            pooled: batch * h,
+            topk_scores: seq,
+            positions: rows,
+            topk_order: seq,
+        }
+    }
+
+    /// Total f32 elements in the slab.
+    pub fn f32_len(&self) -> usize {
+        self.x
+            + self.mask
+            + self.sig
+            + self.hx
+            + self.q
+            + self.k
+            + self.v
+            + self.ctx
+            + self.proj
+            + self.a1
+            + self.attn_ctx
+            + self.attn_sig
+            + self.attn_probs
+            + self.cls
+            + self.pooled
+            + self.topk_scores
+    }
+
+    /// Total i32 elements in the slab.
+    pub fn i32_len(&self) -> usize {
+        self.positions + self.topk_order
+    }
+
+    /// The bucket's steady-state footprint: what one warm arena holds
+    /// resident, and the number `stats` reports per worker.
+    pub fn peak_bytes(&self) -> u64 {
+        4 * (self.f32_len() as u64 + self.i32_len() as u64)
+    }
+}
+
+/// Named mutable views over one arena, pairwise disjoint. Lifetimes tie
+/// every region to one `&mut ForwardArena` borrow, so a forward pass
+/// cannot alias regions and the arena cannot be checked back in while any
+/// region is live.
+pub struct Regions<'a> {
+    /// Hidden states `[B*S, h]`; the live prefix shrinks as elimination
+    /// proceeds (surviving rows are compacted in place).
+    pub x: &'a mut [f32],
+    /// Validity mask `[B*S]`, compacted alongside `x`.
+    pub mask: &'a mut [f32],
+    /// Attention-column significance `[B*S]` (paper §3.2).
+    pub sig: &'a mut [f32],
+    /// LayerNorm input of either encoder half `[B*S, h]`.
+    pub hx: &'a mut [f32],
+    pub q: &'a mut [f32],
+    pub k: &'a mut [f32],
+    pub v: &'a mut [f32],
+    pub ctx: &'a mut [f32],
+    /// Attention output projection, reused as the FFN down-projection.
+    pub proj: &'a mut [f32],
+    /// FFN activation `[B*P, ffn]`.
+    pub a1: &'a mut [f32],
+    /// Private attention head slabs (pooled path only).
+    pub attn_ctx: &'a mut [f32],
+    pub attn_sig: &'a mut [f32],
+    pub attn_probs: &'a mut [f32],
+    pub cls: &'a mut [f32],
+    pub pooled: &'a mut [f32],
+    pub topk_scores: &'a mut [f32],
+    /// Original positions of surviving word-vectors `[B*S]`.
+    pub positions: &'a mut [i32],
+    pub topk_order: &'a mut [i32],
+}
+
+/// One `(batch, seq)` bucket's reusable scratch slab. Created on a
+/// bucket's first request (the plan itself is computable at load time),
+/// then checked out/in per forward pass with zero further allocation.
+pub struct ForwardArena {
+    plan: ArenaPlan,
+    f32s: Vec<f32>,
+    i32s: Vec<i32>,
+}
+
+impl ForwardArena {
+    pub fn new(plan: ArenaPlan) -> ForwardArena {
+        let f32s = vec![0f32; plan.f32_len()];
+        let i32s = vec![0i32; plan.i32_len()];
+        ForwardArena { plan, f32s, i32s }
+    }
+
+    pub fn plan(&self) -> &ArenaPlan {
+        &self.plan
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.plan.peak_bytes()
+    }
+
+    /// Carve the slab into its disjoint named regions. Regions come back
+    /// **dirty** (previous request's contents); consumers overwrite every
+    /// prefix they read — see the leak tests.
+    pub fn regions(&mut self) -> Regions<'_> {
+        let p = &self.plan;
+        let s = self.f32s.as_mut_slice();
+        let (x, s) = s.split_at_mut(p.x);
+        let (mask, s) = s.split_at_mut(p.mask);
+        let (sig, s) = s.split_at_mut(p.sig);
+        let (hx, s) = s.split_at_mut(p.hx);
+        let (q, s) = s.split_at_mut(p.q);
+        let (k, s) = s.split_at_mut(p.k);
+        let (v, s) = s.split_at_mut(p.v);
+        let (ctx, s) = s.split_at_mut(p.ctx);
+        let (proj, s) = s.split_at_mut(p.proj);
+        let (a1, s) = s.split_at_mut(p.a1);
+        let (attn_ctx, s) = s.split_at_mut(p.attn_ctx);
+        let (attn_sig, s) = s.split_at_mut(p.attn_sig);
+        let (attn_probs, s) = s.split_at_mut(p.attn_probs);
+        let (cls, s) = s.split_at_mut(p.cls);
+        let (pooled, s) = s.split_at_mut(p.pooled);
+        let (topk_scores, _s) = s.split_at_mut(p.topk_scores);
+        let si = self.i32s.as_mut_slice();
+        let (positions, si) = si.split_at_mut(p.positions);
+        let (topk_order, _si) = si.split_at_mut(p.topk_order);
+        Regions {
+            x,
+            mask,
+            sig,
+            hx,
+            q,
+            k,
+            v,
+            ctx,
+            proj,
+            a1,
+            attn_ctx,
+            attn_sig,
+            attn_probs,
+            cls,
+            pooled,
+            topk_scores,
+            positions,
+            topk_order,
+        }
+    }
+
+    /// Fill both slabs with a sentinel — lets leak tests hand a forward
+    /// pass the *worst-case* dirty arena and assert outputs still match a
+    /// fresh one bit-for-bit.
+    pub fn scribble(&mut self, f: f32, i: i32) {
+        self.f32s.fill(f);
+        self.i32s.fill(i);
+    }
+}
+
+/// Convenience: plan a bucket straight from a kernel config (lanes =
+/// resolved thread count).
+pub fn plan_for(
+    dims: &ArenaDims,
+    retention: Option<&[usize]>,
+    batch: usize,
+    seq: usize,
+    kernel: &KernelConfig,
+) -> ArenaPlan {
+    ArenaPlan::plan(dims, retention, batch, seq, kernel.resolved_threads())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ArenaDims {
+        ArenaDims { hidden: 8, heads: 2, ffn: 32, layers: 4 }
+    }
+
+    #[test]
+    fn retention_shrinks_the_ffn_region() {
+        let full = ArenaPlan::plan(&dims(), None, 2, 16, 1);
+        let power = ArenaPlan::plan(&dims(), Some(&[8, 8, 4, 4]), 2, 16, 1);
+        // bert: FFN sized for the full width; power: for retention[0].
+        assert_eq!(full.a1, 2 * 16 * 32);
+        assert_eq!(power.a1, 2 * 8 * 32);
+        assert!(power.peak_bytes() < full.peak_bytes());
+        // A retention entry at/above the width must not grow anything.
+        let wide = ArenaPlan::plan(&dims(), Some(&[99, 8, 4, 4]), 2, 16, 1);
+        assert_eq!(wide.a1, full.a1);
+    }
+
+    #[test]
+    fn serial_plans_skip_the_head_slabs() {
+        let serial = ArenaPlan::plan(&dims(), None, 2, 16, 1);
+        let pooled = ArenaPlan::plan(&dims(), None, 2, 16, 4);
+        assert_eq!(serial.attn_ctx, 0);
+        assert_eq!(pooled.attn_ctx, 2 * 16 * 8);
+        assert!(pooled.peak_bytes() > serial.peak_bytes());
+        assert_eq!(pooled.lanes, 4);
+    }
+
+    #[test]
+    fn regions_partition_the_slab_exactly() {
+        let plan = ArenaPlan::plan(&dims(), Some(&[8, 8, 4, 4]), 3, 16, 2);
+        let f32_len = plan.f32_len();
+        let i32_len = plan.i32_len();
+        let mut arena = ForwardArena::new(plan);
+        assert_eq!(arena.peak_bytes(), 4 * (f32_len as u64 + i32_len as u64));
+        let r = arena.regions();
+        let total: usize = [
+            r.x.len(),
+            r.mask.len(),
+            r.sig.len(),
+            r.hx.len(),
+            r.q.len(),
+            r.k.len(),
+            r.v.len(),
+            r.ctx.len(),
+            r.proj.len(),
+            r.a1.len(),
+            r.attn_ctx.len(),
+            r.attn_sig.len(),
+            r.attn_probs.len(),
+            r.cls.len(),
+            r.pooled.len(),
+            r.topk_scores.len(),
+        ]
+        .iter()
+        .sum();
+        assert_eq!(total, f32_len);
+        assert_eq!(r.positions.len() + r.topk_order.len(), i32_len);
+        assert_eq!(r.x.len(), 3 * 16 * 8);
+        assert_eq!(r.attn_probs.len(), 2 * 16);
+    }
+
+    #[test]
+    fn scribble_reaches_every_element() {
+        let plan = ArenaPlan::plan(&dims(), None, 1, 4, 1);
+        let mut arena = ForwardArena::new(plan);
+        arena.scribble(7.25, -3);
+        let r = arena.regions();
+        assert!(r.x.iter().all(|&v| v == 7.25));
+        assert!(r.positions.iter().all(|&v| v == -3));
+    }
+}

@@ -110,6 +110,23 @@ pub struct ExecOutput {
     pub kept: Option<Vec<i32>>,
 }
 
+/// Steady-state memory/dispatch counters of one loaded model's executor
+/// (native backend): what `stats` consumers read to confirm the runtime
+/// has stopped allocating and spawning per request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoryStats {
+    /// Largest per-bucket scratch arena materialized, in bytes (the
+    /// per-bucket peak is planned from the retention schedule at load;
+    /// see `docs/ARCHITECTURE.md` for the formula).
+    pub arena_peak_bytes: u64,
+    /// Arenas materialized — ≈ distinct `(batch, seq)` buckets served.
+    pub arena_buckets: u64,
+    /// Kernel-pool lanes (persistent workers + the calling thread).
+    pub pool_threads: u64,
+    /// Parallel kernel jobs dispatched to the pool since worker start.
+    pub pool_jobs: u64,
+}
+
 /// One variant loaded on one backend worker: executes rectangular
 /// (batch, seq) token grids. Deliberately not `Send` — PJRT state is
 /// thread-pinned, and workers own their models.
@@ -130,6 +147,11 @@ pub trait CellExecutor {
     fn layer_tokens(&self) -> Option<Vec<u64>> {
         None
     }
+
+    /// Steady-state memory/dispatch counters (native backend only).
+    fn memory_stats(&self) -> Option<MemoryStats> {
+        None
+    }
 }
 
 /// How a backend maps a requested (rows, seq) onto executable shapes.
@@ -138,8 +160,21 @@ pub enum CellPlan {
     /// up to the smallest cell that fits (PJRT: one executable per cell).
     Grid(Vec<(usize, usize)>),
     /// Any shape up to the caps executes exactly — no padding at all
-    /// (native: the forward loop takes its shapes at runtime).
-    Exact { max_batch: usize, max_seq: usize },
+    /// (native: the forward loop takes its shapes at runtime). The plan
+    /// carries the scratch-arena peak bytes of every declared `(batch,
+    /// seq)` cell, computed from the retention schedule at load time —
+    /// the memory the steady-state executor will hold resident per
+    /// bucket, known before the first request arrives (logged per worker
+    /// at load; see [`LoadedModel::arena_cells`]).
+    Exact {
+        max_batch: usize,
+        max_seq: usize,
+        /// `((batch, seq), peak_bytes)` per declared grid cell, where
+        /// `peak_bytes` is what *executing* that cell keeps resident —
+        /// the native executor chunks batches internally, so this is the
+        /// peak of the chunked plan, not of a monolithic `batch` slab.
+        arena: Vec<((usize, usize), u64)>,
+    },
 }
 
 /// Smallest compiled cell that fits `n` rows of `seq` tokens. `cells` must
@@ -240,10 +275,27 @@ impl LoadedModel {
     pub fn cell_for(&self, n: usize, seq: usize) -> Option<(usize, usize)> {
         match &self.plan {
             CellPlan::Grid(cells) => pick_cell(cells, n, seq),
-            CellPlan::Exact { max_batch, max_seq } => {
+            CellPlan::Exact { max_batch, max_seq, .. } => {
                 (n > 0 && n <= *max_batch && seq <= *max_seq).then_some((n, seq))
             }
         }
+    }
+
+    /// Planned scratch-arena peak bytes per declared `(batch, seq)` cell
+    /// (exact-shape backends; empty for grid backends). Computed from the
+    /// retention schedule at load time, before any request has run — the
+    /// number a capacity planner multiplies by workers × buckets.
+    pub fn arena_cells(&self) -> &[((usize, usize), u64)] {
+        match &self.plan {
+            CellPlan::Grid(_) => &[],
+            CellPlan::Exact { arena, .. } => arena,
+        }
+    }
+
+    /// Steady-state memory/dispatch counters of the underlying executor
+    /// (native backend only).
+    pub fn memory_stats(&self) -> Option<MemoryStats> {
+        self.exec.memory_stats()
     }
 
     /// Smallest batch bucket that fits `n` rows at the full sequence

@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::VariantMeta;
 use super::backend::{BackendKind, LoadedModel};
-use super::kernels::KernelConfig;
+use super::kernels::{KernelConfig, KernelExec};
 use super::native::NativeBackend;
 use super::pjrt::PjrtBackend;
 use crate::util::npz;
@@ -144,7 +144,12 @@ pub struct EngineWorker {
     /// `None` when the selection is native-only, or `auto` could not
     /// create a PJRT client at all.
     pjrt: Option<PjrtBackend>,
-    native: NativeBackend,
+    kernel: KernelConfig,
+    /// Created eagerly for `native` workers (steady state from worker
+    /// start), lazily on the first fallback load for `auto`, and never
+    /// for pure-`pjrt` workers — so a PJRT deployment doesn't park a
+    /// kernel pool it can never dispatch to.
+    native: Option<NativeBackend>,
     store: Arc<ArtifactStore>,
     models: HashMap<String, Arc<LoadedModel>>,
 }
@@ -167,7 +172,13 @@ impl EngineWorker {
 
     /// Worker on an explicit backend and kernel config. The kernel config
     /// only tunes the native path (block sizes, intra-op threads); PJRT
-    /// ignores it.
+    /// ignores it. For a `native` worker, `kernel.threads > 1` spawns the
+    /// worker's persistent kernel pool here, once — every parallel kernel
+    /// call for the rest of the worker's life dispatches to those parked
+    /// threads (`auto` workers spawn it on their first native fallback
+    /// load instead, and pure-`pjrt` workers never do). The pool is
+    /// joined when the last model sharing it drops (after coordinator
+    /// drain has flushed this worker's backlog).
     pub fn with_config(
         id: usize,
         store: Arc<ArtifactStore>,
@@ -188,14 +199,26 @@ impl EngineWorker {
                 }
             },
         };
+        let native = matches!(kind, BackendKind::Native)
+            .then(|| NativeBackend::with_config(kernel.clone()));
         Ok(EngineWorker {
             id,
             kind,
             pjrt,
-            native: NativeBackend::with_config(kernel),
+            kernel,
+            native,
             store,
             models: HashMap::new(),
         })
+    }
+
+    /// The native backend, created on first use (see the field docs for
+    /// when that happens per [`BackendKind`]).
+    fn native_backend(&mut self) -> &NativeBackend {
+        if self.native.is_none() {
+            self.native = Some(NativeBackend::with_config(self.kernel.clone()));
+        }
+        self.native.as_ref().expect("just initialized")
     }
 
     pub fn id(&self) -> usize {
@@ -212,6 +235,13 @@ impl EngineWorker {
         &self.store
     }
 
+    /// The steady-state kernel execution resources (config + persistent
+    /// pool) this worker's native models dispatch to; `None` until the
+    /// native backend exists (pure-PJRT workers never create it).
+    pub fn kernel_exec(&self) -> Option<&Arc<KernelExec>> {
+        self.native.as_ref().map(|n| n.exec())
+    }
+
     /// Load a variant on this worker's backend: compile + upload (pjrt) or
     /// bind the weights into the pure-Rust forward pass (native).
     pub fn load(&mut self, meta: &VariantMeta) -> Result<Arc<LoadedModel>> {
@@ -222,7 +252,7 @@ impl EngineWorker {
         let art = self.store.fetch(meta)?;
         let t0 = std::time::Instant::now();
         let model = match self.kind {
-            BackendKind::Native => self.native.load(&art)?,
+            BackendKind::Native => self.native_backend().load(&art)?,
             BackendKind::Pjrt => {
                 let backend = self
                     .pjrt
@@ -244,16 +274,26 @@ impl EngineWorker {
                              falling back to the native backend",
                             self.id
                         );
-                        self.native.load(&art)?
+                        self.native_backend().load(&art)?
                     }
-                    None => self.native.load(&art)?,
+                    None => self.native_backend().load(&art)?,
                 }
             }
         };
         let model = Arc::new(model);
+        // Planned arena footprint (native): largest per-cell slab this
+        // worker will hold resident for the variant, known before any
+        // request runs.
+        let arena_note = model
+            .arena_cells()
+            .iter()
+            .map(|&(_, bytes)| bytes)
+            .max()
+            .map(|peak| format!(", arena ≤ {:.1} KiB/bucket", peak as f64 / 1024.0))
+            .unwrap_or_default();
         crate::info!(
             "engine",
-            "worker {} loaded {key} on {} ({} params, {} cells) in {:.2}s",
+            "worker {} loaded {key} on {} ({} params, {} cells{arena_note}) in {:.2}s",
             self.id,
             model.backend_name(),
             art.weights.len(),
@@ -306,6 +346,12 @@ impl Engine {
 
     pub fn backend(&self) -> BackendKind {
         self.worker.backend()
+    }
+
+    /// The worker's steady-state kernel execution resources (`None` until
+    /// the native backend exists — see [`EngineWorker::kernel_exec`]).
+    pub fn kernel_exec(&self) -> Option<&Arc<KernelExec>> {
+        self.worker.kernel_exec()
     }
 
     /// Load a variant on the configured backend.

@@ -17,25 +17,224 @@
 //! The natural unit is one `(example, head)` pair: its softmax rows and
 //! its `[n, d]` slice of the context are independent of every other pair.
 //! Under `threads > 1`, each task writes a private contiguous `ctx`/`sig`
-//! slab (so tasks can be handed to scoped threads with plain
-//! `split_at_mut`, no locks and no unsafe), and a serial merge then
-//! interleaves the head slabs back into `[n, h]` rows and sums
-//! significance **in ascending head order**. The serial path (the serving
-//! default) skips the slabs and writes head stripes in place, folding
-//! per-head significance partials in the same ascending-head association
-//! — so results are bit-identical for any [`KernelConfig::threads`].
+//! slab, and a serial merge then interleaves the head slabs back into
+//! `[n, h]` rows and sums significance **in ascending head order**. The
+//! serial path (the serving default) skips the slabs and writes head
+//! stripes in place, folding per-head significance partials in the same
+//! ascending-head association — so results are bit-identical for any
+//! [`KernelConfig::threads`].
+//!
+//! # Steady state
+//!
+//! Parallel tasks dispatch to the engine worker's persistent
+//! [`pool::KernelPool`](super::pool::KernelPool) (not per-call scoped
+//! threads), and every scratch buffer — the private head slabs and the
+//! per-lane softmax rows — comes from a caller-provided [`AttnScratch`],
+//! carved out of the forward pass's
+//! [`ForwardArena`](crate::runtime::arena::ForwardArena). After warmup
+//! the kernel allocates nothing. The pre-pool implementation survives as
+//! [`masked_attention_scoped`]: the dispatch-cost baseline for
+//! `benches/native.rs` and the bit-exactness oracle for
+//! `tests/prop_kernels.rs`.
 
-use super::{task_ranges, KernelConfig};
+use super::pool::Shards;
+use super::{task_ranges, KernelConfig, KernelExec};
 
 /// Additive mask for PAD key columns, matching `python/compile/kernels`.
 const NEG_INF: f32 = -1e9;
 
+/// Borrowed scratch for one [`masked_attention`] call, usually carved out
+/// of the forward pass's arena (see
+/// [`ForwardArena`](crate::runtime::arena::ForwardArena)); tests and
+/// standalone callers can borrow one from an [`AttnScratchBuf`].
+///
+/// Capacity contract for a `(batch, n, heads, d)` call under `lanes`
+/// pool lanes (asserted at the call):
+/// * serial (`threads <= 1`): `sig_heads.len() >= n`, `probs.len() >= n`
+///   (`ctx_heads` unused, may be empty);
+/// * pooled: `ctx_heads.len() >= batch*heads*n*d`,
+///   `sig_heads.len() >= batch*heads*n`, `probs.len() >= lanes*n`.
+pub struct AttnScratch<'a> {
+    /// Private per-task context slabs (`[n, d]` per `(example, head)`).
+    pub ctx_heads: &'a mut [f32],
+    /// Private per-task significance partials (serial path: the single
+    /// per-head fold buffer).
+    pub sig_heads: &'a mut [f32],
+    /// Per-lane softmax row.
+    pub probs: &'a mut [f32],
+}
+
+/// Owned backing store for an [`AttnScratch`] — the standalone-caller
+/// (tests, benches) counterpart of the arena's carved regions.
+pub struct AttnScratchBuf {
+    ctx_heads: Vec<f32>,
+    sig_heads: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+impl AttnScratchBuf {
+    /// Buffers sized for a `(batch, n, heads, d)` call at up to `lanes`
+    /// pool lanes (1 = serial).
+    pub fn for_shape(batch: usize, n: usize, heads: usize, d: usize, lanes: usize) -> Self {
+        AttnScratchBuf {
+            ctx_heads: vec![0.0; batch * heads * n * d],
+            sig_heads: vec![0.0; (batch * heads * n).max(n)],
+            probs: vec![0.0; lanes.max(1) * n],
+        }
+    }
+
+    pub fn scratch(&mut self) -> AttnScratch<'_> {
+        AttnScratch {
+            ctx_heads: &mut self.ctx_heads,
+            sig_heads: &mut self.sig_heads,
+            probs: &mut self.probs,
+        }
+    }
+}
+
 /// Scaled-dot-product attention with PAD masking over `batch` independent
 /// examples of `n` word-vectors; accumulates the attention-column
 /// significance scores alongside the context. See the module docs for the
-/// shape contract.
+/// shape contract and [`AttnScratch`] for the scratch contract.
 #[allow(clippy::too_many_arguments)]
 pub fn masked_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    batch: usize,
+    n: usize,
+    heads: usize,
+    d: usize,
+    exec: &KernelExec,
+    scratch: AttnScratch<'_>,
+    ctx: &mut [f32],
+    sig: &mut [f32],
+) {
+    let h = heads * d;
+    let rows = batch * n;
+    assert_eq!(q.len(), rows * h, "attention: q is not [batch*n, h]");
+    assert_eq!(k.len(), rows * h, "attention: k is not [batch*n, h]");
+    assert_eq!(v.len(), rows * h, "attention: v is not [batch*n, h]");
+    assert_eq!(mask.len(), rows, "attention: mask is not [batch*n]");
+    assert_eq!(ctx.len(), rows * h, "attention: ctx is not [batch*n, h]");
+    assert_eq!(sig.len(), rows, "attention: sig is not [batch*n]");
+    if rows == 0 {
+        return;
+    }
+
+    let tasks = batch * heads;
+    let threads = exec.threads_for(tasks);
+    if threads <= 1 {
+        // Serial fast path — the serving default (`threads: 1`): write
+        // each head's context stripe straight into `ctx` (heads touch
+        // disjoint columns) and fold per-head significance partials into
+        // `sig` in ascending head order. The fold association matches the
+        // parallel merge below exactly, so serial and parallel results
+        // stay bit-identical.
+        assert!(scratch.probs.len() >= n, "attention scratch: probs < n");
+        assert!(scratch.sig_heads.len() >= n, "attention scratch: sig_heads < n");
+        ctx.fill(0.0);
+        sig.fill(0.0);
+        let probs = &mut scratch.probs[..n];
+        let head_sig = &mut scratch.sig_heads[..n];
+        for b in 0..batch {
+            let ctx_ex = &mut ctx[b * n * h..(b + 1) * n * h];
+            for a in 0..heads {
+                head_sig.fill(0.0);
+                let off = a * d;
+                attend_one(q, k, v, mask, b, a, n, h, d, ctx_ex, h, off, head_sig, probs);
+                for (sv, &pv) in sig[b * n..(b + 1) * n].iter_mut().zip(head_sig.iter()) {
+                    *sv += pv;
+                }
+            }
+        }
+        return;
+    }
+
+    // Per-task private slabs: ctx_heads[t] is [n, d] for task t = b*heads+a,
+    // sig_heads[t] is [n]. Same total footprint as ctx itself. Both
+    // accumulate, so the used prefixes are re-zeroed every call (the
+    // arena hands them back dirty by design).
+    let nd = n * d;
+    // The same fixed-order (batch row, head) range list the scoped path
+    // built via `task_ranges`, in closed form: lane chunk t covers tasks
+    // [t*per, (t+1)*per).
+    let per = tasks.div_ceil(threads);
+    let chunks = tasks.div_ceil(per);
+    assert!(scratch.ctx_heads.len() >= tasks * nd, "attention scratch: ctx_heads too small");
+    assert!(scratch.sig_heads.len() >= tasks * n, "attention scratch: sig_heads too small");
+    assert!(scratch.probs.len() >= chunks * n, "attention scratch: probs < lanes * n");
+    let ctx_heads = &mut scratch.ctx_heads[..tasks * nd];
+    let sig_heads = &mut scratch.sig_heads[..tasks * n];
+    ctx_heads.fill(0.0);
+    sig_heads.fill(0.0);
+    let ctx_shards = Shards::new(ctx_heads);
+    let sig_shards = Shards::new(sig_heads);
+    let probs_shards = Shards::new(&mut scratch.probs[..chunks * n]);
+    exec.pool().run(chunks, &|t| {
+        let t0 = t * per;
+        let t1 = ((t + 1) * per).min(tasks);
+        // SAFETY: chunk t exclusively owns tasks [t0, t1) — slab ranges
+        // are pairwise disjoint across chunks — and probs lane t.
+        let probs = unsafe { probs_shards.slice(t * n, n) };
+        for task in t0..t1 {
+            let (b, a) = (task / heads, task % heads);
+            let ctx_part = unsafe { ctx_shards.slice(task * nd, nd) };
+            let sig_part = unsafe { sig_shards.slice(task * n, n) };
+            attend_one(q, k, v, mask, b, a, n, h, d, ctx_part, d, 0, sig_part, probs);
+        }
+    });
+
+    // Serial merge in fixed (example, head) order: interleave the head
+    // slabs into [n, h] rows and sum significance head-ascending.
+    let ctx_heads = &scratch.ctx_heads[..tasks * nd];
+    let sig_heads = &scratch.sig_heads[..tasks * n];
+    merge_head_slabs(ctx_heads, sig_heads, batch, n, heads, d, ctx, sig);
+}
+
+/// The fixed-order merge shared by the pooled and scoped drivers:
+/// interleaves private `[n, d]` head slabs into `[n, h]` context rows and
+/// folds significance partials head-ascending (the association that keeps
+/// every thread count bit-identical to the serial path).
+#[allow(clippy::too_many_arguments)]
+fn merge_head_slabs(
+    ctx_heads: &[f32],
+    sig_heads: &[f32],
+    batch: usize,
+    n: usize,
+    heads: usize,
+    d: usize,
+    ctx: &mut [f32],
+    sig: &mut [f32],
+) {
+    let h = heads * d;
+    let nd = n * d;
+    sig.fill(0.0);
+    for b in 0..batch {
+        for a in 0..heads {
+            let t = b * heads + a;
+            let part = &ctx_heads[t * nd..(t + 1) * nd];
+            let off = a * d;
+            for i in 0..n {
+                ctx[(b * n + i) * h + off..(b * n + i) * h + off + d]
+                    .copy_from_slice(&part[i * d..(i + 1) * d]);
+            }
+            let spart = &sig_heads[t * n..(t + 1) * n];
+            for (sv, &pv) in sig[b * n..(b + 1) * n].iter_mut().zip(spart) {
+                *sv += pv;
+            }
+        }
+    }
+}
+
+/// The pre-pool driver: scoped threads spawned per call over the identical
+/// `(batch row, head)` range list, with self-allocated slabs. Kept as the
+/// dispatch-cost baseline for `benches/native.rs` and the bit-exactness
+/// oracle for `tests/prop_kernels.rs` — results must equal
+/// [`masked_attention`] bit-for-bit at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_attention_scoped(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -63,12 +262,6 @@ pub fn masked_attention(
     let tasks = batch * heads;
     let threads = cfg.effective_threads(tasks);
     if threads <= 1 {
-        // Serial fast path — the serving default (`threads: 1`): write
-        // each head's context stripe straight into `ctx` (heads touch
-        // disjoint columns) and fold per-head significance partials into
-        // `sig` in ascending head order. The fold association matches the
-        // parallel merge below exactly, so serial and parallel results
-        // stay bit-identical.
         ctx.fill(0.0);
         sig.fill(0.0);
         let mut probs = vec![0f32; n];
@@ -87,8 +280,6 @@ pub fn masked_attention(
         return;
     }
 
-    // Per-task private slabs: ctx_heads[t] is [n, d] for task t = b*heads+a,
-    // sig_heads[t] is [n]. Same total footprint as ctx itself.
     let nd = n * d;
     let mut ctx_heads = vec![0f32; tasks * nd];
     let mut sig_heads = vec![0f32; tasks * n];
@@ -97,6 +288,7 @@ pub fn masked_attention(
         attend_one(q, k, v, mask, b, a, n, h, d, ctx_part, d, 0, sig_part, probs);
     };
     let ranges = task_ranges(tasks, threads);
+    super::note_spawns(ranges.len() as u64);
     std::thread::scope(|s| {
         let mut ctx_rest = &mut ctx_heads[..];
         let mut sig_rest = &mut sig_heads[..];
@@ -117,24 +309,7 @@ pub fn masked_attention(
         }
     });
 
-    // Serial merge in fixed (example, head) order: interleave the head
-    // slabs into [n, h] rows and sum significance head-ascending.
-    sig.fill(0.0);
-    for b in 0..batch {
-        for a in 0..heads {
-            let t = b * heads + a;
-            let part = &ctx_heads[t * nd..(t + 1) * nd];
-            let off = a * d;
-            for i in 0..n {
-                ctx[(b * n + i) * h + off..(b * n + i) * h + off + d]
-                    .copy_from_slice(&part[i * d..(i + 1) * d]);
-            }
-            let spart = &sig_heads[t * n..(t + 1) * n];
-            for (sv, &pv) in sig[b * n..(b + 1) * n].iter_mut().zip(spart) {
-                *sv += pv;
-            }
-        }
-    }
+    merge_head_slabs(&ctx_heads, &sig_heads, batch, n, heads, d, ctx, sig);
 }
 
 /// One `(example, head)` task: softmax over the example's keys for every
@@ -226,8 +401,22 @@ mod tests {
         mask[4] = 0.0;
         let mut ctx = vec![0f32; batch * n * h];
         let mut sig = vec![0f32; batch * n];
-        let cfg = KernelConfig::default();
-        masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx, &mut sig);
+        let exec = KernelExec::default();
+        let mut buf = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
+        masked_attention(
+            &q,
+            &k,
+            &v,
+            &mask,
+            batch,
+            n,
+            heads,
+            d,
+            &exec,
+            buf.scratch(),
+            &mut ctx,
+            &mut sig,
+        );
         // PAD keys receive (numerically) zero attention mass.
         assert!(sig[3].abs() < 1e-6 && sig[4].abs() < 1e-6, "PAD sig {sig:?}");
         // Per example, total significance = heads * (# real query rows):
@@ -240,7 +429,7 @@ mod tests {
     }
 
     #[test]
-    fn thread_counts_are_bit_identical() {
+    fn pooled_and_scoped_thread_counts_are_bit_identical() {
         let (batch, n, heads, d) = (3usize, 7usize, 2usize, 3usize);
         let h = heads * d;
         let q = rand_vec(batch * n * h, 10);
@@ -251,15 +440,106 @@ mod tests {
         mask[13] = 0.0;
         let mut ctx1 = vec![0f32; batch * n * h];
         let mut sig1 = vec![0f32; batch * n];
-        let cfg1 = KernelConfig::default().with_threads(1);
-        masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg1, &mut ctx1, &mut sig1);
+        let exec1 = KernelExec::new(KernelConfig::default().with_threads(1));
+        let mut buf1 = AttnScratchBuf::for_shape(batch, n, heads, d, 1);
+        masked_attention(
+            &q,
+            &k,
+            &v,
+            &mask,
+            batch,
+            n,
+            heads,
+            d,
+            &exec1,
+            buf1.scratch(),
+            &mut ctx1,
+            &mut sig1,
+        );
         for threads in [2usize, 4, 5] {
+            let cfg = KernelConfig::default().with_threads(threads);
+            let exec = KernelExec::new(cfg.clone());
+            let mut buf = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
             let mut ctx_t = vec![0f32; batch * n * h];
             let mut sig_t = vec![0f32; batch * n];
-            let cfg = KernelConfig::default().with_threads(threads);
-            masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx_t, &mut sig_t);
-            assert_eq!(ctx1, ctx_t, "ctx differs at threads={threads}");
-            assert_eq!(sig1, sig_t, "sig differs at threads={threads}");
+            masked_attention(
+                &q,
+                &k,
+                &v,
+                &mask,
+                batch,
+                n,
+                heads,
+                d,
+                &exec,
+                buf.scratch(),
+                &mut ctx_t,
+                &mut sig_t,
+            );
+            assert_eq!(ctx1, ctx_t, "pooled ctx differs at threads={threads}");
+            assert_eq!(sig1, sig_t, "pooled sig differs at threads={threads}");
+            let mut ctx_s = vec![0f32; batch * n * h];
+            let mut sig_s = vec![0f32; batch * n];
+            masked_attention_scoped(
+                &q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx_s, &mut sig_s,
+            );
+            assert_eq!(ctx1, ctx_s, "scoped ctx differs at threads={threads}");
+            assert_eq!(sig1, sig_s, "scoped sig differs at threads={threads}");
         }
+    }
+
+    #[test]
+    fn dirty_scratch_does_not_leak_into_results() {
+        // The arena hands attention its scratch without zeroing — the
+        // kernel must fully re-initialize whatever prefixes it uses.
+        let (batch, n, heads, d) = (2usize, 5usize, 3usize, 2usize);
+        let h = heads * d;
+        let q = rand_vec(batch * n * h, 21);
+        let k = rand_vec(batch * n * h, 22);
+        let v = rand_vec(batch * n * h, 23);
+        let mask = vec![1f32; batch * n];
+        let exec = KernelExec::new(KernelConfig::default().with_threads(3));
+        let mut clean = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
+        let mut ctx_a = vec![0f32; batch * n * h];
+        let mut sig_a = vec![0f32; batch * n];
+        masked_attention(
+            &q,
+            &k,
+            &v,
+            &mask,
+            batch,
+            n,
+            heads,
+            d,
+            &exec,
+            clean.scratch(),
+            &mut ctx_a,
+            &mut sig_a,
+        );
+        let mut dirty = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
+        {
+            let s = dirty.scratch();
+            s.ctx_heads.fill(f32::NAN);
+            s.sig_heads.fill(-7.5);
+            s.probs.fill(f32::INFINITY);
+        }
+        let mut ctx_b = vec![f32::NAN; batch * n * h];
+        let mut sig_b = vec![f32::NAN; batch * n];
+        masked_attention(
+            &q,
+            &k,
+            &v,
+            &mask,
+            batch,
+            n,
+            heads,
+            d,
+            &exec,
+            dirty.scratch(),
+            &mut ctx_b,
+            &mut sig_b,
+        );
+        assert_eq!(ctx_a, ctx_b, "dirty scratch leaked into ctx");
+        assert_eq!(sig_a, sig_b, "dirty scratch leaked into sig");
     }
 }

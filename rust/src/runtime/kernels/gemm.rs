@@ -34,8 +34,15 @@
 //! Accumulation order is `k`-ascending within a block and blocks ascending
 //! — the same order for every thread count (rows are data-parallel), so
 //! results are deterministic under [`KernelConfig::threads`].
+//!
+//! Parallel calls dispatch the same fixed-order row-chunk task list to the
+//! engine worker's persistent [`pool::KernelPool`](super::pool::KernelPool)
+//! instead of spawning scoped threads per invocation; the old scoped path
+//! is kept as [`PackedGemm::matmul_bias_scoped`] — the bench's old-vs-new
+//! dispatch baseline and the property tests' bit-exactness oracle.
 
-use super::{gelu, task_ranges, KernelConfig};
+use super::pool::Shards;
+use super::{gelu, task_ranges, KernelConfig, KernelExec};
 
 /// Rows of `x` per register tile.
 pub const MR: usize = 4;
@@ -97,10 +104,10 @@ impl PackedGemm {
         x: &[f32],
         n: usize,
         bias: &[f32],
-        cfg: &KernelConfig,
+        exec: &KernelExec,
         out: &mut [f32],
     ) {
-        self.run(x, n, bias, cfg, Epilogue::None, out);
+        self.run(x, n, bias, exec, Epilogue::None, out);
     }
 
     /// `out = gelu(x @ w + bias)` — fused FFN half.
@@ -109,10 +116,10 @@ impl PackedGemm {
         x: &[f32],
         n: usize,
         bias: &[f32],
-        cfg: &KernelConfig,
+        exec: &KernelExec,
         out: &mut [f32],
     ) {
-        self.run(x, n, bias, cfg, Epilogue::Gelu, out);
+        self.run(x, n, bias, exec, Epilogue::Gelu, out);
     }
 
     /// `out = tanh(x @ w + bias)` — fused pooler.
@@ -121,10 +128,10 @@ impl PackedGemm {
         x: &[f32],
         n: usize,
         bias: &[f32],
-        cfg: &KernelConfig,
+        exec: &KernelExec,
         out: &mut [f32],
     ) {
-        self.run(x, n, bias, cfg, Epilogue::Tanh, out);
+        self.run(x, n, bias, exec, Epilogue::Tanh, out);
     }
 
     fn run(
@@ -132,7 +139,7 @@ impl PackedGemm {
         x: &[f32],
         n: usize,
         bias: &[f32],
-        cfg: &KernelConfig,
+        exec: &KernelExec,
         ep: Epilogue,
         out: &mut [f32],
     ) {
@@ -143,17 +150,65 @@ impl PackedGemm {
         if n == 0 {
             return;
         }
-        // Parallel split over rows: each thread owns a contiguous row range
+        let cfg = exec.config();
+        // Parallel split over rows: each lane owns contiguous row ranges
         // of x and out, at mc-row task granularity. Row results never
         // depend on the split, so any thread count is deterministic.
         let mc = cfg.mc.max(1);
         let tasks = n.div_ceil(mc);
-        let threads = cfg.effective_threads(tasks);
+        let threads = exec.threads_for(tasks);
         if threads <= 1 {
+            // Serial fast path — the serving default; untouched by the
+            // pool machinery.
             self.rows(x, n, bias, cfg.kc, ep, out);
             return;
         }
+        // The same fixed-order row-chunk list the scoped path built via
+        // `task_ranges`, expressed in closed form so dispatch allocates
+        // nothing: chunk t covers mc-tasks [t*per, (t+1)*per).
+        let per = tasks.div_ceil(threads);
+        let chunks = tasks.div_ceil(per);
+        let out_shards = Shards::new(out);
+        exec.pool().run(chunks, &|t| {
+            let row0 = t * per * mc;
+            let rows = ((t + 1) * per * mc).min(n) - row0;
+            // SAFETY: chunk ranges [row0*m, (row0+rows)*m) partition `out`
+            // pairwise-disjointly by construction.
+            let chunk = unsafe { out_shards.slice(row0 * m, rows * m) };
+            self.rows(&x[row0 * k..(row0 + rows) * k], rows, bias, cfg.kc, ep, chunk);
+        });
+    }
+
+    /// The pre-pool parallel driver: scoped threads spawned per call over
+    /// the identical row-chunk list (bias epilogue only). Kept as the
+    /// dispatch-cost baseline for `benches/native.rs` and the bit-exactness
+    /// oracle for `tests/prop_kernels.rs` — results must equal
+    /// [`PackedGemm::matmul_bias`] bit-for-bit at any thread count.
+    pub fn matmul_bias_scoped(
+        &self,
+        x: &[f32],
+        n: usize,
+        bias: &[f32],
+        cfg: &KernelConfig,
+        out: &mut [f32],
+    ) {
+        let (k, m) = (self.k, self.m);
+        assert_eq!(x.len(), n * k, "matmul: x is not [n={n}, k={k}]");
+        assert_eq!(bias.len(), m, "matmul: bias is not [m={m}]");
+        assert_eq!(out.len(), n * m, "matmul: out is not [n={n}, m={m}]");
+        if n == 0 {
+            return;
+        }
+        let mc = cfg.mc.max(1);
+        let tasks = n.div_ceil(mc);
+        let threads = cfg.effective_threads(tasks);
+        if threads <= 1 {
+            self.rows(x, n, bias, cfg.kc, Epilogue::None, out);
+            return;
+        }
         let ranges = task_ranges(tasks, threads);
+        super::note_spawns(ranges.len() as u64);
+        let ep = Epilogue::None;
         std::thread::scope(|s| {
             let mut rest = out;
             let mut handles = Vec::with_capacity(ranges.len());
@@ -275,7 +330,7 @@ mod tests {
         let b = vec![10.0, 20.0];
         let packed = PackedGemm::pack(&w, 2, 2);
         let mut out = vec![0f32; 4];
-        packed.matmul_bias(&x, 2, &b, &KernelConfig::default(), &mut out);
+        packed.matmul_bias(&x, 2, &b, &KernelExec::default(), &mut out);
         assert_eq!(out, vec![11.0, 22.0, 13.0, 24.0]);
         assert_eq!(out, matmul_bias_ref(&x, 2, 2, &w, 2, &b));
     }
@@ -287,26 +342,31 @@ mod tests {
         let x: Vec<f32> = (0..n * k).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.1).collect();
         let w: Vec<f32> = (0..k * m).map(|i| ((i * 53 % 23) as f32 - 11.0) * 0.05).collect();
         let b: Vec<f32> = (0..m).map(|i| i as f32 * 0.01).collect();
-        let cfg = KernelConfig { threads: 1, kc: 3, mc: 2 };
+        let exec = KernelExec::new(KernelConfig { threads: 1, kc: 3, mc: 2 });
         let packed = PackedGemm::pack(&w, k, m);
         let mut out = vec![0f32; n * m];
-        packed.matmul_bias(&x, n, &b, &cfg, &mut out);
+        packed.matmul_bias(&x, n, &b, &exec, &mut out);
         close(&out, &matmul_bias_ref(&x, n, k, &w, m, &b), 1e-6);
     }
 
     #[test]
-    fn threads_are_bit_identical() {
+    fn pooled_and_scoped_threads_are_bit_identical() {
         let (n, k, m) = (13usize, 9usize, 17usize);
         let x: Vec<f32> = (0..n * k).map(|i| (i as f32).sin()).collect();
         let w: Vec<f32> = (0..k * m).map(|i| (i as f32).cos()).collect();
         let b = vec![0.25f32; m];
         let packed = PackedGemm::pack(&w, k, m);
         let mut serial = vec![0f32; n * m];
-        packed.matmul_bias(&x, n, &b, &KernelConfig { threads: 1, kc: 4, mc: 3 }, &mut serial);
+        let serial_exec = KernelExec::new(KernelConfig { threads: 1, kc: 4, mc: 3 });
+        packed.matmul_bias(&x, n, &b, &serial_exec, &mut serial);
         for threads in [2usize, 4, 7] {
-            let mut par = vec![0f32; n * m];
-            packed.matmul_bias(&x, n, &b, &KernelConfig { threads, kc: 4, mc: 3 }, &mut par);
-            assert_eq!(serial, par, "threads={threads}");
+            let cfg = KernelConfig { threads, kc: 4, mc: 3 };
+            let mut pooled = vec![0f32; n * m];
+            packed.matmul_bias(&x, n, &b, &KernelExec::new(cfg.clone()), &mut pooled);
+            assert_eq!(serial, pooled, "pooled differs at threads={threads}");
+            let mut scoped = vec![0f32; n * m];
+            packed.matmul_bias_scoped(&x, n, &b, &cfg, &mut scoped);
+            assert_eq!(serial, scoped, "scoped differs at threads={threads}");
         }
     }
 
@@ -316,13 +376,13 @@ mod tests {
         let x: Vec<f32> = (0..n * k).map(|i| ((i % 7) as f32 - 3.0) * 0.3).collect();
         let w: Vec<f32> = (0..k * m).map(|i| ((i % 5) as f32 - 2.0) * 0.2).collect();
         let b = vec![0.1f32; m];
-        let cfg = KernelConfig::default();
+        let exec = KernelExec::default();
         let packed = PackedGemm::pack(&w, k, m);
         let plain = matmul_bias_ref(&x, n, k, &w, m, &b);
         let mut out = vec![0f32; n * m];
-        packed.matmul_bias_gelu(&x, n, &b, &cfg, &mut out);
+        packed.matmul_bias_gelu(&x, n, &b, &exec, &mut out);
         close(&out, &plain.iter().map(|&v| gelu(v)).collect::<Vec<_>>(), 1e-6);
-        packed.matmul_bias_tanh(&x, n, &b, &cfg, &mut out);
+        packed.matmul_bias_tanh(&x, n, &b, &exec, &mut out);
         close(&out, &plain.iter().map(|v| v.tanh()).collect::<Vec<_>>(), 1e-6);
     }
 
@@ -341,7 +401,7 @@ mod tests {
             KernelConfig { threads: 1, kc: 0, mc: 0 },
         ] {
             let mut out = vec![0f32; n * m];
-            packed.matmul_bias(&x, n, &b, &cfg, &mut out);
+            packed.matmul_bias(&x, n, &b, &KernelExec::new(cfg), &mut out);
             close(&out, &want, 1e-6);
         }
     }
@@ -350,7 +410,7 @@ mod tests {
     fn zero_rows_is_a_no_op() {
         let packed = PackedGemm::pack(&[1.0, 2.0], 1, 2);
         let mut out = vec![];
-        packed.matmul_bias(&[], 0, &[0.0, 0.0], &KernelConfig::default(), &mut out);
+        packed.matmul_bias(&[], 0, &[0.0, 0.0], &KernelExec::default(), &mut out);
         assert!(out.is_empty());
         assert_eq!((packed.k(), packed.m()), (1, 2));
     }

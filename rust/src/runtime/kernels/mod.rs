@@ -13,31 +13,42 @@
 //!   and pooler never materialize a pre-activation buffer).
 //! * [`attention::masked_attention`] — the scaled-dot-product attention +
 //!   attention-column significance accumulation (paper §3.2), parallel
-//!   across `(batch row, head)` tasks via scoped threads.
+//!   across `(batch row, head)` tasks on the persistent pool.
 //! * [`layer_norm`] / [`gelu`] — the row-wise epilogue primitives, shared
 //!   with the kernels' fused paths.
+//! * [`pool::KernelPool`] — the persistent worker pool parallel kernels
+//!   dispatch to. Workers are spawned once per [`KernelExec`] (i.e. once
+//!   per engine worker) and parked between jobs, so `threads > 1` no
+//!   longer pays a per-call spawn — the cost that used to dominate small
+//!   `(batch, seq)` buckets.
 //!
 //! Every kernel is **deterministic for any thread count**: parallel tasks
 //! write disjoint output ranges and reductions run serially in a fixed
 //! order, so logits are bit-identical at `threads = 1, 2, 4, …` — which is
-//! what lets the golden-parity fixtures pin the parallel path too.
+//! what lets the golden-parity fixtures pin the parallel path too. The
+//! pooled, scoped-reference and serial paths are additionally pinned
+//! bit-identical to *each other* by `tests/prop_kernels.rs`.
 //!
 //! # Examples
 //!
 //! ```
-//! use powerbert::runtime::kernels::{gemm::PackedGemm, KernelConfig};
+//! use powerbert::runtime::kernels::{gemm::PackedGemm, KernelConfig, KernelExec};
 //!
 //! // w is row-major [k=2, m=3]; packing happens once, at model load.
 //! let w = PackedGemm::pack(&[1., 0., 2., 0., 1., 3.], 2, 3);
-//! let cfg = KernelConfig::default();
+//! // The exec (config + persistent pool) is built once per engine worker.
+//! let exec = KernelExec::new(KernelConfig::default());
 //! let mut out = vec![0f32; 3];
 //! // x is one row of k=2: [10, 100] @ w + bias.
-//! w.matmul_bias(&[10., 100.], 1, &[0.5, 0.5, 0.5], &cfg, &mut out);
+//! w.matmul_bias(&[10., 100.], 1, &[0.5, 0.5, 0.5], &exec, &mut out);
 //! assert_eq!(out, vec![10.5, 100.5, 320.5]);
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 pub mod attention;
 pub mod gemm;
+pub mod pool;
 
 /// Tuning knobs for the native microkernels, threaded from the CLI /
 /// coordinator [`Config`](crate::coordinator::Config) down to every kernel
@@ -50,11 +61,12 @@ pub struct KernelConfig {
     /// execution pool already parallelizes across workers, so intra-op
     /// threads are opt-in); `0` resolves to one per available core.
     ///
-    /// Parallel calls use scoped threads spawned per kernel invocation —
-    /// cheap relative to wide-model GEMMs, but on tiny bundles (like the
-    /// committed sst2 quick profile) the spawn cost can exceed the win;
-    /// the bench's thread-scaling table shows the break-even honestly. A
-    /// persistent pool is a noted follow-up in ROADMAP.md.
+    /// `threads > 1` sizes the engine worker's persistent
+    /// [`pool::KernelPool`]: its `threads - 1` workers are spawned once,
+    /// at [`KernelExec`] construction, and parked between kernel calls —
+    /// parallel invocations dispatch task lists instead of spawning
+    /// threads, so the old per-call spawn cost (which dominated small
+    /// `(batch, seq)` buckets) is paid once per worker lifetime.
     pub threads: usize,
     /// Depth (k) block: how many rows of a packed weight panel stream
     /// through the registers per pass. A panel slab of `kc * 8` floats
@@ -98,17 +110,89 @@ impl KernelConfig {
         self
     }
 
-    /// The thread count a kernel actually uses for `tasks` independent
-    /// units of work: `threads` resolved (`0` → core count) and clamped so
-    /// no thread is spawned without a task.
-    pub fn effective_threads(&self, tasks: usize) -> usize {
-        let t = if self.threads == 0 {
+    /// The configured thread count with `0` resolved to one lane per
+    /// available core — the size of the persistent pool a [`KernelExec`]
+    /// builds from this config.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             self.threads
-        };
-        t.clamp(1, tasks.max(1))
+        }
     }
+
+    /// The thread count a kernel actually uses for `tasks` independent
+    /// units of work: `threads` resolved (`0` → core count) and clamped so
+    /// no lane is engaged without a task.
+    pub fn effective_threads(&self, tasks: usize) -> usize {
+        self.resolved_threads().clamp(1, tasks.max(1))
+    }
+}
+
+/// Steady-state execution resources of one engine worker: the kernel
+/// tuning knobs plus the persistent [`pool::KernelPool`] sized from them.
+/// Built once per [`EngineWorker`](crate::runtime::EngineWorker) (by its
+/// `NativeBackend`) and shared via `Arc` with every model the worker
+/// loads, so the pool's threads live exactly as long as the last model
+/// that can dispatch to them — kernel calls can never observe a dead
+/// pool, and coordinator drain joins the pool after the backlog finishes.
+pub struct KernelExec {
+    cfg: KernelConfig,
+    pool: pool::KernelPool,
+}
+
+impl KernelExec {
+    /// Exec on an explicit config; spawns (and parks) the pool workers.
+    pub fn new(cfg: KernelConfig) -> KernelExec {
+        let pool = pool::KernelPool::new(cfg.resolved_threads());
+        KernelExec { cfg, pool }
+    }
+
+    /// Exec on the session-default config (`$POWERBERT_KERNEL_*` or
+    /// defaults — single-threaded unless overridden).
+    pub fn from_env() -> KernelExec {
+        KernelExec::new(KernelConfig::from_env())
+    }
+
+    pub fn config(&self) -> &KernelConfig {
+        &self.cfg
+    }
+
+    pub fn pool(&self) -> &pool::KernelPool {
+        &self.pool
+    }
+
+    /// Total lanes (pool workers + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Lanes a kernel should split `tasks` units of work across — the
+    /// same clamp the scoped path applied, so pooled chunking (and hence
+    /// bit-exact results) matches it for any config.
+    pub fn threads_for(&self, tasks: usize) -> usize {
+        self.cfg.effective_threads(tasks).min(self.pool.size())
+    }
+}
+
+impl Default for KernelExec {
+    fn default() -> Self {
+        KernelExec::new(KernelConfig::default())
+    }
+}
+
+/// Cumulative OS threads spawned by the kernel layer (pool workers at
+/// construction + every scoped-path thread). `benches/native.rs` reports
+/// the per-call delta — the number the pool exists to drive to zero.
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn note_spawns(n: u64) {
+    THREAD_SPAWNS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total kernel-layer thread spawns since process start (stats/bench).
+pub fn thread_spawns() -> u64 {
+    THREAD_SPAWNS.load(Ordering::Relaxed)
 }
 
 /// Row-wise LayerNorm over `h`-wide rows, in place. `x.len()` must be a

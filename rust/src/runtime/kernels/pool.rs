@@ -1,0 +1,473 @@
+//! Persistent kernel worker pool: the steady-state replacement for
+//! per-call scoped thread spawns.
+//!
+//! `--kernel-threads > 1` used to spawn OS threads on **every** kernel
+//! invocation. The spawn + join cost (~tens of µs per thread) is invariant
+//! to elimination, so on the small `(batch, seq)` buckets the coordinator
+//! produces it could exceed the arithmetic it parallelized — exactly the
+//! regime PoWER-BERT shrinks layers into. A [`KernelPool`] spawns its
+//! workers **once**, when its owning [`KernelExec`](super::KernelExec) is
+//! created (at [`EngineWorker`](crate::runtime::EngineWorker) creation
+//! for native workers), and parks them on a condvar between jobs, with a
+//! short spin phase so back-to-back kernel calls hand off fast.
+//!
+//! # Execution model
+//!
+//! [`KernelPool::run`]`(tasks, f)` executes `f(0), f(1), …, f(tasks - 1)`
+//! exactly once each and returns when all are done. The calling thread is
+//! lane 0 and participates; parked workers claim task indices from a
+//! shared atomic counter. Kernels submit the **same fixed-order task lists
+//! the scoped-thread paths use** — contiguous row chunks for the GEMM,
+//! `(batch row, head)` ranges for attention — and every task writes a
+//! disjoint output range, so results are bit-identical whichever lane runs
+//! which task (and identical to the scoped and serial paths; the property
+//! tests in `tests/prop_kernels.rs` pin all three against each other).
+//!
+//! # Lifecycle and shutdown ordering
+//!
+//! The pool lives inside a [`KernelExec`](super::KernelExec) owned by the
+//! worker's `NativeBackend` and shared (via `Arc`) with every
+//! [`NativeModel`](crate::runtime::native::NativeModel) it loads. On
+//! coordinator drain the executor queues close first, each worker finishes
+//! its backlog, and the pool's threads are joined by [`Drop`] when the
+//! last model holding the `Arc` goes away — so no kernel can ever observe
+//! a dead pool.
+//!
+//! # Examples
+//!
+//! ```
+//! use powerbert::runtime::kernels::pool::KernelPool;
+//! use std::sync::atomic::{AtomicU64, Ordering};
+//!
+//! let pool = KernelPool::new(2); // caller lane + 1 parked worker
+//! let hits: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+//! pool.run(8, &|i| {
+//!     hits[i].fetch_add(1, Ordering::Relaxed);
+//! });
+//! assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+//! ```
+
+use std::any::Any;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Iterations a parked worker spins watching for a new job before it
+/// blocks on the condvar, and the caller spins waiting for stragglers
+/// before it blocks. Sized for "another kernel call is coming right
+/// behind this one" — the steady serving state — while still parking
+/// within a few tens of microseconds when the pool goes idle.
+const SPIN: u32 = 4_096;
+
+/// One published job: a type-erased borrow of the caller's task closure.
+///
+/// The `'static` here is a lie told to the type system only: `run` does
+/// not return until every lane has finished with the job and the slot is
+/// cleared, so the reference never outlives the frame that owns the
+/// closure (same containment argument as `std::thread::scope`).
+#[derive(Clone, Copy)]
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    tasks: usize,
+}
+
+struct State {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Wakes parked workers (new job or shutdown).
+    work: Condvar,
+    /// Wakes a caller waiting for straggler lanes.
+    done: Condvar,
+    /// Bumped (under the state lock) for every published job and at
+    /// shutdown; workers spin on it before parking.
+    epoch: AtomicU64,
+    /// Next unclaimed task index of the current job.
+    next: AtomicUsize,
+    /// Tasks of the current job not yet completed.
+    pending: AtomicUsize,
+    /// Pool workers currently inside a job's claim loop.
+    active: AtomicUsize,
+    /// Cumulative parallel jobs dispatched (stats; serial fast-path runs
+    /// are not counted — they never touch the pool machinery).
+    jobs: AtomicU64,
+    /// Cumulative tasks executed across all lanes (stats).
+    tasks_done: AtomicU64,
+    /// A task of the current job panicked: remaining tasks are skipped
+    /// (still drained through `pending`) and the caller re-raises after
+    /// the job is fully retired — so an unwinding task can neither wedge
+    /// the pool nor leave the erased closure borrow published.
+    job_panicked: AtomicBool,
+    /// First panic payload of the current job, re-thrown by the caller.
+    panic_payload: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+impl Shared {
+    /// Run task `i`, catching an unwind: every claimed task must retire
+    /// through `pending` exactly once — the invariant both the caller's
+    /// completion wait and the closure's borrow containment rest on —
+    /// so panics are parked and re-raised by the caller, never unwound
+    /// through the claim loop.
+    fn run_task(&self, task: &(dyn Fn(usize) + Sync), i: usize) {
+        if !self.job_panicked.load(Ordering::Relaxed) {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(i))) {
+                self.job_panicked.store(true, Ordering::Relaxed);
+                let mut slot = self.panic_payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+        self.tasks_done.fetch_add(1, Ordering::Relaxed);
+        self.pending.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// A fixed-size pool of parked kernel workers. See the module docs for
+/// the execution model; construction spawns `threads - 1` OS threads (the
+/// caller is always lane 0), `Drop` joins them.
+pub struct KernelPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+    /// One job at a time: concurrent `run` calls (two models sharing one
+    /// worker's pool) serialize at job granularity, which is what makes
+    /// the next/pending counters single-job state.
+    run_lock: Mutex<()>,
+}
+
+impl KernelPool {
+    /// Pool with `threads` lanes total (clamped to at least 1). `threads
+    /// - 1` workers are spawned and parked; lane 0 is whoever calls
+    /// [`KernelPool::run`].
+    pub fn new(threads: usize) -> KernelPool {
+        let size = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            jobs: AtomicU64::new(0),
+            tasks_done: AtomicU64::new(0),
+            job_panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
+        });
+        let mut workers = Vec::with_capacity(size - 1);
+        for i in 1..size {
+            let sh = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pb-kernel-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn kernel pool worker");
+            workers.push(handle);
+        }
+        super::note_spawns(workers.len() as u64);
+        KernelPool { shared, workers, size, run_lock: Mutex::new(()) }
+    }
+
+    /// Lanes including the calling thread.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Parallel jobs dispatched since construction (stats).
+    pub fn jobs(&self) -> u64 {
+        self.shared.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Tasks executed since construction, across all lanes (stats).
+    pub fn tasks_done(&self) -> u64 {
+        self.shared.tasks_done.load(Ordering::Relaxed)
+    }
+
+    /// Execute `f(0) .. f(tasks - 1)`, each exactly once, across the
+    /// caller and the parked workers; returns when every task completed.
+    /// Tasks must be safe to run concurrently (in the kernels: each task
+    /// writes a disjoint output range). With no pool workers (`size` 1)
+    /// or a single task this degenerates to a serial loop on the caller.
+    ///
+    /// # Panics
+    ///
+    /// If a task panics — on any lane — remaining tasks are skipped, the
+    /// job is still fully retired (so the pool stays healthy and the
+    /// closure borrow stays contained), and the first panic payload is
+    /// re-raised here on the caller, mirroring `std::thread::scope`.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            self.shared.tasks_done.fetch_add(tasks as u64, Ordering::Relaxed);
+            return;
+        }
+        let _job_guard = self.run_lock.lock().unwrap();
+        // SAFETY: lifetime erasure only — the reference is dereferenced
+        // exclusively between the publish below and the job-slot clear at
+        // the bottom of this function, and we do not return until
+        // `pending` and `active` are both zero with the slot cleared
+        // under the lock. Task panics cannot break the containment:
+        // every lane runs tasks through `Shared::run_task`, which catches
+        // unwinds and always retires the claim, and the caller's own
+        // claim loop cannot unwind before the completion wait.
+        #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+        let task: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+        self.shared.job_panicked.store(false, Ordering::Relaxed);
+        *self.shared.panic_payload.lock().unwrap() = None;
+        self.shared.next.store(0, Ordering::Relaxed);
+        self.shared.pending.store(tasks, Ordering::Relaxed);
+        self.shared.jobs.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Job { task, tasks });
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+        }
+        self.shared.work.notify_all();
+
+        // Lane 0: claim and run tasks like any worker.
+        loop {
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            self.shared.run_task(f, i);
+        }
+
+        // Wait for straggler lanes: spin first (tasks are typically tens
+        // of microseconds), then park on `done`. The final re-check runs
+        // under the state lock, which also serializes against late worker
+        // pick-ups (workers gate on `pending > 0` under the same lock),
+        // so the job slot is never cleared while a lane can still claim.
+        let finished = || {
+            self.shared.pending.load(Ordering::Acquire) == 0
+                && self.shared.active.load(Ordering::Acquire) == 0
+        };
+        let mut spins = 0u32;
+        while !finished() && spins < SPIN {
+            std::hint::spin_loop();
+            spins += 1;
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while !finished() {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        // The job is fully retired and the slot cleared; now (and only
+        // now) a task panic may propagate to the caller. Release the job
+        // lock *before* unwinding — dropping it mid-panic would poison
+        // the mutex and wedge every later `run` (the state is clean: the
+        // next job fully re-initializes the counters and slots).
+        if self.shared.job_panicked.load(Ordering::Relaxed) {
+            let payload = self.shared.panic_payload.lock().unwrap().take();
+            if let Some(payload) = payload {
+                drop(_job_guard);
+                resume_unwind(payload);
+            }
+        }
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+        }
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        // Spin briefly for a new epoch before parking: back-to-back
+        // kernel calls (the steady serving state) hand off without a
+        // futex round-trip.
+        let mut spins = 0u32;
+        while shared.epoch.load(Ordering::Acquire) == seen && spins < SPIN {
+            std::hint::spin_loop();
+            spins += 1;
+        }
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let e = shared.epoch.load(Ordering::Acquire);
+                if e != seen {
+                    seen = e;
+                    // Only join jobs that still have unfinished work: once
+                    // `pending` hits zero the caller may clear the slot
+                    // and return, so joining a finished job (and touching
+                    // its closure) would race the borrow it erases.
+                    if let Some(j) = st.job {
+                        if shared.pending.load(Ordering::Acquire) > 0 {
+                            shared.active.fetch_add(1, Ordering::AcqRel);
+                            break j;
+                        }
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        loop {
+            let i = shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.tasks {
+                break;
+            }
+            // run_task catches task panics, so a worker always retires
+            // its claims and survives to serve the next job.
+            shared.run_task(job.task, i);
+        }
+        shared.active.fetch_sub(1, Ordering::AcqRel);
+        let _st = shared.state.lock().unwrap();
+        shared.done.notify_all();
+    }
+}
+
+/// Shared-access view of a mutable slice for lanes writing **disjoint**
+/// ranges: the pool hands every lane the same `Fn` closure, so the
+/// closure cannot hold `&mut` state — disjointness is structural (task
+/// index → fixed output range) and this wrapper carries the pointer
+/// across the `Sync` boundary.
+pub(crate) struct Shards<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for Shards<'_, T> {}
+unsafe impl<T: Send> Sync for Shards<'_, T> {}
+
+impl<'a, T> Shards<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Shards<'a, T> {
+        Shards { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// The sub-slice `[start, start + len)`.
+    ///
+    /// # Safety
+    ///
+    /// Concurrent callers must use pairwise-disjoint ranges; the range
+    /// must lie within the original slice (checked, panics otherwise).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        assert!(
+            start.checked_add(len).is_some_and(|end| end <= self.len),
+            "shard [{start}, {start}+{len}) outside slab of {}",
+            self.len
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = KernelPool::new(threads);
+            for tasks in [0usize, 1, 3, 17, 64] {
+                let hits: Vec<AtomicU64> = (0..tasks).map(|_| AtomicU64::new(0)).collect();
+                pool.run(tasks, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} at {threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_jobs_reuse_the_same_workers() {
+        let pool = KernelPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 400);
+        assert_eq!(pool.tasks_done(), 400);
+        assert_eq!(pool.jobs(), 50);
+        assert_eq!(pool.size(), 3);
+    }
+
+    #[test]
+    fn disjoint_writes_land_in_order() {
+        let pool = KernelPool::new(4);
+        let mut out = vec![0u64; 257];
+        let shards = Shards::new(&mut out[..]);
+        pool.run(257, &|i| {
+            let cell = unsafe { shards.slice(i, 1) };
+            cell[0] = i as u64 * 3;
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = KernelPool::new(1);
+        let mut out = vec![0u8; 5];
+        let shards = Shards::new(&mut out[..]);
+        pool.run(5, &|i| unsafe { shards.slice(i, 1)[0] = 1 });
+        assert!(out.iter().all(|&v| v == 1));
+        assert_eq!(pool.jobs(), 0, "inline runs never touch the pool machinery");
+    }
+
+    #[test]
+    fn panicking_task_propagates_without_wedging_the_pool() {
+        let pool = KernelPool::new(3);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 3 {
+                    panic!("task 3 exploded");
+                }
+            });
+        }));
+        let payload = caught.expect_err("task panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("task 3 exploded"), "wrong payload: {msg:?}");
+        // The pool survives: workers retired their claims and serve the
+        // next job normally.
+        let hits: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        pool.run(8, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside slab")]
+    fn shards_bounds_are_checked() {
+        let mut out = vec![0u8; 4];
+        let shards = Shards::new(&mut out[..]);
+        unsafe {
+            let _ = shards.slice(3, 2);
+        }
+    }
+}

@@ -9,7 +9,14 @@
 //! `native` (pure-Rust PoWER-BERT forward pass with progressive word-vector
 //! elimination) or `auto` (PJRT with native fallback). [`Engine`] is the
 //! single-worker facade.
+//!
+//! The native path executes in **steady state**: each worker owns a
+//! persistent [`kernels::pool::KernelPool`] (via [`KernelExec`]) and
+//! per-bucket [`arena::ForwardArena`] scratch slabs planned from the
+//! retention schedule, so the per-request hot path neither spawns threads
+//! nor allocates after warmup.
 
+pub mod arena;
 pub mod artifact;
 pub mod backend;
 pub mod engine;
@@ -17,9 +24,12 @@ pub mod kernels;
 pub mod native;
 pub mod pjrt;
 
+pub use arena::{ArenaDims, ArenaPlan, ForwardArena};
 pub use artifact::{default_root, DatasetArtifacts, Registry, VariantMeta};
-pub use backend::{BackendKind, CellExecutor, CellPlan, ExecOutput, LoadedModel, Logits};
+pub use backend::{
+    BackendKind, CellExecutor, CellPlan, ExecOutput, LoadedModel, Logits, MemoryStats,
+};
 pub use engine::{ArtifactStore, Engine, EngineWorker, ModelArtifact, TestSplit};
-pub use kernels::KernelConfig;
-pub use native::NativeBackend;
+pub use kernels::{KernelConfig, KernelExec};
+pub use native::{NativeBackend, NativeModel};
 pub use pjrt::PjrtBackend;

@@ -21,23 +21,46 @@
 //! native path never re-introduces padding word-vectors at the batch
 //! boundary, and every eliminated vector is compute actually saved.
 //!
+//! # Steady-state execution
+//!
 //! The hot loops live in [`kernels`](super::kernels): weights are packed
-//! into column panels once at [`NativeBackend::load`] time, and the whole
+//! into column panels once at [`NativeBackend::load`], and the whole
 //! batch flows through **batch-level** kernel calls — every projection is
 //! one `[batch * n_j, k]` GEMM where `n_j` is the per-layer surviving
 //! word-vector count, so elimination literally shrinks the GEMM shapes
-//! layer by layer (the paper's compute-∝-word-vectors claim, visible in
-//! the kernel shapes themselves). See `benches/native.rs` for the measured
-//! kernel and end-to-end numbers, and `docs/ARCHITECTURE.md` for the cost
-//! model.
+//! layer by layer. Two further pieces make the per-request path
+//! steady-state:
+//!
+//! * parallel kernels dispatch to the worker's persistent
+//!   [`KernelPool`](super::kernels::pool::KernelPool) (shared via the
+//!   backend's [`KernelExec`]) instead of spawning threads per call;
+//! * every transient buffer comes from a per-`(batch, seq)`-bucket
+//!   [`ForwardArena`](super::arena::ForwardArena), planned from the
+//!   retention schedule and reused across requests — after a bucket's
+//!   first request, `forward_batch` performs **zero heap allocations**
+//!   (`tests/alloc_steady_state.rs` enforces this with a counting
+//!   allocator; the kept-trace debug path is exempt). Surviving rows are
+//!   compacted in place, so the arena's live region shrinks layer by
+//!   layer exactly as elimination does.
+//!
+//! See `benches/native.rs` for the measured kernel, dispatch and
+//! allocation numbers, and `docs/ARCHITECTURE.md` for the cost model and
+//! the per-bucket peak-bytes formula.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::backend::{CellExecutor, CellPlan, ExecOutput, LoadedModel};
+use super::arena::{ArenaDims, ArenaPlan, ForwardArena};
+use super::backend::{CellExecutor, CellPlan, ExecOutput, LoadedModel, MemoryStats};
 use super::engine::ModelArtifact;
-use super::kernels::{attention::masked_attention, gemm::PackedGemm, layer_norm, KernelConfig};
+use super::kernels::{
+    attention::{masked_attention, AttnScratch},
+    gemm::PackedGemm,
+    layer_norm, KernelConfig, KernelExec,
+};
 use crate::tokenizer::PAD_ID;
 
 /// Largest batch the native executor accepts in one call. Generous — the
@@ -47,22 +70,28 @@ use crate::tokenizer::PAD_ID;
 pub const NATIVE_MAX_BATCH: usize = 64;
 
 /// Examples per internal `forward_batch` call: `execute` chunks larger
-/// batches so the per-layer transient buffers (`[chunk * n_j, ffn]` for
-/// the FFN activation and `[chunk * n_j, h]` for QKV/ctx/proj) stay
-/// bounded by the chunk, not by [`NATIVE_MAX_BATCH`] — on a BERT-base
-/// scale export that is tens of MB instead of ~1 GB per worker. Eight
-/// examples give the GEMMs hundreds of rows at full width, enough to
-/// amortize packing and blocking.
+/// batches so each arena stays bounded by the chunk, not by
+/// [`NATIVE_MAX_BATCH`] — on a BERT-base scale export that is tens of MB
+/// instead of ~1 GB per worker. Eight examples give the GEMMs hundreds of
+/// rows at full width, enough to amortize packing and blocking; it also
+/// keeps the set of distinct arena buckets (and hence resident slabs)
+/// small.
 const NATIVE_EXEC_CHUNK: usize = 8;
 
 /// Score pin for CLS (never eliminated, paper §3.4) — matches model.py BIG.
 const BIG: f32 = 1e6;
 
 /// The native backend: stateless per request — per-variant state lives in
-/// the [`NativeModel`] it loads, kernel tuning in its [`KernelConfig`].
-#[derive(Default)]
+/// the [`NativeModel`] it loads; the kernel config and the persistent
+/// kernel pool live in a [`KernelExec`] shared with every loaded model.
 pub struct NativeBackend {
-    cfg: KernelConfig,
+    exec: Arc<KernelExec>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
 }
 
 impl NativeBackend {
@@ -73,20 +102,57 @@ impl NativeBackend {
     }
 
     /// Backend with an explicit kernel config (thread count, block sizes).
+    /// Spawns (and parks) the persistent kernel pool sized from it.
     pub fn with_config(cfg: KernelConfig) -> NativeBackend {
-        NativeBackend { cfg }
+        NativeBackend { exec: Arc::new(KernelExec::new(cfg)) }
+    }
+
+    /// Backend sharing an existing exec (pool + config).
+    pub fn with_exec(exec: Arc<KernelExec>) -> NativeBackend {
+        NativeBackend { exec }
+    }
+
+    /// The steady-state execution resources this backend hands to every
+    /// model it loads.
+    pub fn exec(&self) -> &Arc<KernelExec> {
+        &self.exec
     }
 
     /// Build a ready-to-execute model from the host artifact. This is
     /// where the weight matrices are packed into the blocked kernel's
-    /// panel layout — once per load, not per call.
+    /// panel layout — once per load, not per call — and where the arena
+    /// peak bytes of every declared `(batch, seq)` cell are planned from
+    /// the retention schedule.
     pub fn load(&self, art: &ModelArtifact) -> Result<LoadedModel> {
-        let model = NativeModel::from_artifact(art, self.cfg.clone())
+        let model = NativeModel::load(art, self.exec.clone())
             .with_context(|| format!("native load {}/{}", art.meta.dataset, art.meta.variant))?;
+        let dims = model.arena_dims();
+        let lanes = self.exec.lanes();
+        let arena: Vec<((usize, usize), u64)> = art
+            .meta
+            .grid_cells()
+            .iter()
+            .map(|&(b, s)| {
+                let chunk = b.min(NATIVE_EXEC_CHUNK);
+                let plan = ArenaPlan::plan(&dims, model.retention.as_deref(), chunk, s, lanes);
+                ((b, s), plan.peak_bytes())
+            })
+            .collect();
+        if let Some(peak) = arena.iter().map(|&(_, b)| b).max() {
+            crate::debugln!(
+                "native",
+                "{}/{}: planned {} arena cell(s), peak {} KiB per bucket at {} lane(s)",
+                art.meta.dataset,
+                art.meta.variant,
+                arena.len(),
+                peak / 1024,
+                lanes
+            );
+        }
         Ok(LoadedModel::new(
             art.meta.clone(),
             "native",
-            CellPlan::Exact { max_batch: NATIVE_MAX_BATCH, max_seq: art.meta.seq_len },
+            CellPlan::Exact { max_batch: NATIVE_MAX_BATCH, max_seq: art.meta.seq_len, arena },
             Box::new(model),
         ))
     }
@@ -115,9 +181,9 @@ struct LayerWeights {
 }
 
 /// A variant's weights in forward-pass form plus its processed-token
-/// telemetry.
+/// telemetry and per-bucket arena cache.
 pub struct NativeModel {
-    cfg: KernelConfig,
+    exec: Arc<KernelExec>,
     hidden: usize,
     heads: usize,
     num_classes: usize,
@@ -141,10 +207,23 @@ pub struct NativeModel {
     /// Word-vectors processed per encoder (FFN width after extraction),
     /// accumulated across every executed row.
     layer_tokens: Vec<AtomicU64>,
+    /// Parked arenas by `(batch, seq)` bucket: a bucket's first request
+    /// plans and allocates its slab, every later request reuses it. The
+    /// slot is `None` while a request has the arena checked out, so
+    /// concurrent callers degrade to a fresh (dropped-after) arena rather
+    /// than blocking each other.
+    arenas: Mutex<HashMap<(usize, usize), Option<Box<ForwardArena>>>>,
+    /// Largest per-bucket slab this model has materialized (bytes).
+    arena_peak: AtomicU64,
+    /// Arenas materialized (≈ distinct buckets served).
+    arenas_planned: AtomicU64,
 }
 
 impl NativeModel {
-    fn from_artifact(art: &ModelArtifact, cfg: KernelConfig) -> Result<NativeModel> {
+    /// Bind a host artifact's weights into forward-pass form (packing
+    /// every projection for the blocked kernel) on the given execution
+    /// resources.
+    pub fn load(art: &ModelArtifact, exec: Arc<KernelExec>) -> Result<NativeModel> {
         let meta = &art.meta;
         let hidden = meta.hidden_size;
         let heads = meta.num_heads;
@@ -264,7 +343,7 @@ impl NativeModel {
 
         let n_layers = layers.len();
         Ok(NativeModel {
-            cfg,
+            exec,
             hidden,
             heads,
             num_classes,
@@ -286,173 +365,302 @@ impl NativeModel {
             head_w: PackedGemm::pack(&head_w, hidden, num_classes),
             head_b,
             layer_tokens: (0..n_layers).map(|_| AtomicU64::new(0)).collect(),
+            arenas: Mutex::new(HashMap::new()),
+            arena_peak: AtomicU64::new(0),
+            arenas_planned: AtomicU64::new(0),
         })
+    }
+
+    /// Output classes of the classifier head.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Architecture quantities the arena planner needs.
+    fn arena_dims(&self) -> ArenaDims {
+        ArenaDims {
+            hidden: self.hidden,
+            heads: self.heads,
+            ffn: self.layers.iter().map(|l| l.ffn_size).max().unwrap_or(0),
+            layers: self.layers.len(),
+        }
+    }
+
+    /// Take the bucket's parked arena, or plan + allocate one on the
+    /// bucket's first request (or while a concurrent request holds it).
+    fn checkout_arena(&self, batch: usize, seq: usize) -> Box<ForwardArena> {
+        if let Some(slot) = self.arenas.lock().unwrap().get_mut(&(batch, seq)) {
+            if let Some(arena) = slot.take() {
+                return arena;
+            }
+        }
+        let plan = ArenaPlan::plan(
+            &self.arena_dims(),
+            self.retention.as_deref(),
+            batch,
+            seq,
+            self.exec.lanes(),
+        );
+        let arena = Box::new(ForwardArena::new(plan));
+        self.arenas_planned.fetch_add(1, Ordering::Relaxed);
+        self.arena_peak.fetch_max(arena.peak_bytes(), Ordering::Relaxed);
+        arena
+    }
+
+    /// Park the arena for the next request of its bucket (keeping the
+    /// incumbent if a concurrent request already parked one).
+    fn checkin_arena(&self, arena: Box<ForwardArena>) {
+        let key = (arena.plan().batch, arena.plan().seq);
+        let mut map = self.arenas.lock().unwrap();
+        let slot = map.entry(key).or_insert(None);
+        if slot.is_none() {
+            *slot = Some(arena);
+        }
+    }
+
+    /// Forward `batch` examples of `seq` tokens, **appending** the
+    /// `[batch, num_classes]` logits to `logits_out` — the steady-state
+    /// entry point: after a `(batch, seq)` bucket's first call (which
+    /// plans and allocates its arena) this performs zero heap allocations,
+    /// provided `logits_out` has capacity (`tests/alloc_steady_state.rs`
+    /// pins this with a counting allocator).
+    pub fn forward_into(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        batch: usize,
+        seq: usize,
+        logits_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.forward_batch(tokens, segments, batch, seq, logits_out, None)
     }
 
     /// Forward `batch` examples of `seq` tokens through batch-level kernel
     /// calls: every projection is one `[batch * n_j, k]` GEMM, where `n_j`
     /// starts at `seq` and shrinks at each extract layer — all rows of a
     /// batch keep the same count (`retention[j]`), so the batch stays
-    /// rectangular through every layer. Returns the logits and, when
-    /// `want_trace`, the per-example surviving original positions
-    /// (`[batch, L, seq]`, -1-padded).
+    /// rectangular through every layer. Appends the logits to
+    /// `logits_out`; when `trace_out` is given, appends the per-example
+    /// surviving original positions (`[batch, L, seq]`, -1-padded — the
+    /// debug path, exempt from the zero-allocation contract).
+    ///
+    /// Every transient lives in the bucket's [`ForwardArena`]: surviving
+    /// rows are compacted **in place** at each extract layer (destination
+    /// row index never exceeds source row index when `keep < n`, so
+    /// ascending copies never clobber unread rows), and the arena's live
+    /// region shrinks layer by layer with elimination.
     fn forward_batch(
         &self,
         tokens: &[i32],
         segments: &[i32],
         batch: usize,
         seq: usize,
-        want_trace: bool,
-    ) -> Result<(Vec<f32>, Option<Vec<i32>>)> {
+        logits_out: &mut Vec<f32>,
+        mut trace_out: Option<&mut Vec<i32>>,
+    ) -> Result<()> {
         let h = self.hidden;
         let heads = self.heads;
         let d = h / heads;
         let n_layers = self.layers.len();
-        let cfg = &self.cfg;
+        let exec = &*self.exec;
         if seq > self.max_pos {
             bail!("seq {seq} exceeds position table {}", self.max_pos);
         }
+        if tokens.len() != batch * seq || segments.len() != batch * seq {
+            bail!("native forward: expected {batch}x{seq} tokens, got {}", tokens.len());
+        }
+        // Validate ids before checking out the arena: the only fallible
+        // steps happen up front, so an error can never strand a bucket's
+        // slab outside the cache.
+        for (&tok, &seg) in tokens.iter().zip(segments.iter()) {
+            if tok < 0 || tok as usize >= self.vocab {
+                bail!("token id {tok} outside vocab of {}", self.vocab);
+            }
+            if seg < 0 || seg as usize >= self.type_vocab {
+                bail!("segment id {seg} outside type vocab of {}", self.type_vocab);
+            }
+        }
 
-        // Valid-position mask: 1.0 for real tokens, 0.0 for PAD.
-        let mut mask: Vec<f32> = tokens
-            .iter()
-            .map(|&t| if t == PAD_ID { 0.0 } else { 1.0 })
-            .collect();
+        let trace_base = trace_out.as_deref().map_or(0, |t| t.len());
+        if let Some(tr) = trace_out.as_deref_mut() {
+            tr.resize(trace_base + batch * n_layers * seq, -1);
+        }
 
-        // Embedding lookup + LN over all batch rows.
-        let mut x = vec![0f32; batch * seq * h];
-        for b in 0..batch {
-            for i in 0..seq {
-                let tok = tokens[b * seq + i];
-                if tok < 0 || tok as usize >= self.vocab {
-                    bail!("token id {tok} outside vocab of {}", self.vocab);
-                }
-                let seg = segments[b * seq + i];
-                if seg < 0 || seg as usize >= self.type_vocab {
-                    bail!("segment id {seg} outside type vocab of {}", self.type_vocab);
-                }
-                let row = &mut x[(b * seq + i) * h..(b * seq + i + 1) * h];
-                match &self.word_proj {
-                    None => {
-                        let wrow = &self.word[tok as usize * h..(tok as usize + 1) * h];
-                        row.copy_from_slice(wrow);
-                    }
-                    Some((e, proj)) => {
-                        // Factorized embedding: word[tok] (E) @ proj (E x H).
-                        let wrow = &self.word[tok as usize * e..(tok as usize + 1) * e];
-                        for (kk, &wv) in wrow.iter().enumerate() {
-                            let prow = &proj[kk * h..(kk + 1) * h];
-                            for (c, &pv) in prow.iter().enumerate() {
-                                row[c] += wv * pv;
+        let mut arena = self.checkout_arena(batch, seq);
+        {
+            let super::arena::Regions {
+                x,
+                mask,
+                sig,
+                hx,
+                q,
+                k,
+                v,
+                ctx,
+                proj,
+                a1,
+                attn_ctx,
+                attn_sig,
+                attn_probs,
+                cls,
+                pooled,
+                topk_scores,
+                positions,
+                topk_order,
+            } = arena.regions();
+
+            // Embedding lookup + mask + original positions. Arena regions
+            // arrive dirty: every row is fully written here (the
+            // factorized path zeroes before accumulating).
+            for b in 0..batch {
+                for i in 0..seq {
+                    let idx = b * seq + i;
+                    let tok = tokens[idx];
+                    let seg = segments[idx];
+                    mask[idx] = if tok == PAD_ID { 0.0 } else { 1.0 };
+                    positions[idx] = i as i32;
+                    let row = &mut x[idx * h..(idx + 1) * h];
+                    match &self.word_proj {
+                        None => {
+                            let wrow = &self.word[tok as usize * h..(tok as usize + 1) * h];
+                            row.copy_from_slice(wrow);
+                        }
+                        Some((e, proj_w)) => {
+                            // Factorized embedding: word[tok] (E) @ proj (E x H).
+                            row.fill(0.0);
+                            let wrow = &self.word[tok as usize * e..(tok as usize + 1) * e];
+                            for (kk, &wv) in wrow.iter().enumerate() {
+                                let prow = &proj_w[kk * h..(kk + 1) * h];
+                                for (c, &pv) in prow.iter().enumerate() {
+                                    row[c] += wv * pv;
+                                }
                             }
                         }
                     }
-                }
-                let prow = &self.pos[i * h..(i + 1) * h];
-                let trow = &self.type_[seg as usize * h..(seg as usize + 1) * h];
-                for c in 0..h {
-                    row[c] += prow[c] + trow[c];
-                }
-            }
-        }
-        layer_norm(&mut x, h, &self.embed_ln_g, &self.embed_ln_b);
-
-        // Original positions of surviving word-vectors (Figure 8 trace),
-        // per example.
-        let mut positions: Vec<i32> = (0..batch).flat_map(|_| 0..seq as i32).collect();
-        let mut trace = want_trace.then(|| vec![-1i32; batch * n_layers * seq]);
-        // Extract-layer scratch, reused across every layer and example
-        // (rather than two fresh allocations per (row, layer)).
-        let mut topk = TopK::with_capacity(seq);
-
-        // Surviving word-vectors per example — uniform across the batch.
-        let mut n = seq;
-        for (j, layer) in self.layers.iter().enumerate() {
-            let rows = batch * n;
-            // --- attention half: x1 = x + proj(MHA(LN(x))), plus scores.
-            let mut hx = x.clone();
-            layer_norm(&mut hx, h, &layer.ln1_g, &layer.ln1_b);
-            let mut q = vec![0f32; rows * h];
-            layer.wq.matmul_bias(&hx, rows, &layer.bq, cfg, &mut q);
-            let mut k = vec![0f32; rows * h];
-            layer.wk.matmul_bias(&hx, rows, &layer.bk, cfg, &mut k);
-            let mut v = vec![0f32; rows * h];
-            layer.wv.matmul_bias(&hx, rows, &layer.bv, cfg, &mut v);
-
-            let mut ctx = vec![0f32; rows * h];
-            let mut sig = vec![0f32; rows];
-            masked_attention(&q, &k, &v, &mask, batch, n, heads, d, cfg, &mut ctx, &mut sig);
-            let mut proj = vec![0f32; rows * h];
-            layer.wo.matmul_bias(&ctx, rows, &layer.bo, cfg, &mut proj);
-            let mut x1 = x;
-            for (xv, pv) in x1.iter_mut().zip(proj.iter()) {
-                *xv += pv;
-            }
-
-            // --- extract layer (between attention and FFN, §3.2/Fig 4).
-            if let Some(keep) = self.retention.as_ref().and_then(|r| r.get(j)).copied() {
-                // Guard a malformed manifest: at least CLS always survives
-                // (derive_retention clamps to >= 1 on the export side).
-                let keep = keep.max(1);
-                if keep < n {
-                    let mut nx = vec![0f32; batch * keep * h];
-                    let mut nmask = vec![0f32; batch * keep];
-                    let mut npos = vec![0i32; batch * keep];
-                    for b in 0..batch {
-                        let idx = topk.keep_indices(
-                            &sig[b * n..(b + 1) * n],
-                            &mask[b * n..(b + 1) * n],
-                            keep,
-                        );
-                        for (slot, &src) in idx.iter().enumerate() {
-                            let dst = b * keep + slot;
-                            let s = b * n + src;
-                            nx[dst * h..(dst + 1) * h].copy_from_slice(&x1[s * h..(s + 1) * h]);
-                            nmask[dst] = mask[s];
-                            npos[dst] = positions[s];
-                        }
+                    let prow = &self.pos[i * h..(i + 1) * h];
+                    let trow = &self.type_[seg as usize * h..(seg as usize + 1) * h];
+                    for c in 0..h {
+                        row[c] += prow[c] + trow[c];
                     }
-                    x1 = nx;
-                    mask = nmask;
-                    positions = npos;
-                    n = keep;
                 }
             }
-            self.layer_tokens[j].fetch_add((batch * n) as u64, Ordering::Relaxed);
-            if let Some(tr) = trace.as_mut() {
-                for b in 0..batch {
-                    tr[(b * n_layers + j) * seq..(b * n_layers + j) * seq + n]
-                        .copy_from_slice(&positions[b * n..(b + 1) * n]);
+            layer_norm(&mut x[..batch * seq * h], h, &self.embed_ln_g, &self.embed_ln_b);
+
+            // Surviving word-vectors per example — uniform across the batch.
+            let mut n = seq;
+            for (j, layer) in self.layers.iter().enumerate() {
+                let rows = batch * n;
+                let rh = rows * h;
+                // --- attention half: x = x + proj(MHA(LN(x))), plus scores.
+                hx[..rh].copy_from_slice(&x[..rh]);
+                layer_norm(&mut hx[..rh], h, &layer.ln1_g, &layer.ln1_b);
+                layer.wq.matmul_bias(&hx[..rh], rows, &layer.bq, exec, &mut q[..rh]);
+                layer.wk.matmul_bias(&hx[..rh], rows, &layer.bk, exec, &mut k[..rh]);
+                layer.wv.matmul_bias(&hx[..rh], rows, &layer.bv, exec, &mut v[..rh]);
+
+                let scratch = AttnScratch {
+                    ctx_heads: &mut attn_ctx[..],
+                    sig_heads: &mut attn_sig[..],
+                    probs: &mut attn_probs[..],
+                };
+                masked_attention(
+                    &q[..rh],
+                    &k[..rh],
+                    &v[..rh],
+                    &mask[..rows],
+                    batch,
+                    n,
+                    heads,
+                    d,
+                    exec,
+                    scratch,
+                    &mut ctx[..rh],
+                    &mut sig[..rows],
+                );
+                layer.wo.matmul_bias(&ctx[..rh], rows, &layer.bo, exec, &mut proj[..rh]);
+                for (xv, pv) in x[..rh].iter_mut().zip(proj[..rh].iter()) {
+                    *xv += pv;
+                }
+
+                // --- extract layer (between attention and FFN, §3.2/Fig 4):
+                // in-place compaction of the surviving rows.
+                if let Some(keep) = self.retention.as_ref().and_then(|r| r.get(j)).copied() {
+                    // Guard a malformed manifest: at least CLS always survives
+                    // (derive_retention clamps to >= 1 on the export side).
+                    let keep = keep.max(1);
+                    if keep < n {
+                        for b in 0..batch {
+                            let kept = keep_indices(
+                                &sig[b * n..(b + 1) * n],
+                                &mask[b * n..(b + 1) * n],
+                                keep,
+                                &mut topk_scores[..],
+                                &mut topk_order[..],
+                            );
+                            for (slot, &src_i) in kept.iter().enumerate() {
+                                let dst = b * keep + slot;
+                                let src = b * n + src_i as usize;
+                                // dst <= src always (keep < n and kept
+                                // indices ascend), so ascending copies
+                                // never clobber an unread source row.
+                                if dst != src {
+                                    x.copy_within(src * h..(src + 1) * h, dst * h);
+                                    mask[dst] = mask[src];
+                                    positions[dst] = positions[src];
+                                }
+                            }
+                        }
+                        n = keep;
+                    }
+                }
+                self.layer_tokens[j].fetch_add((batch * n) as u64, Ordering::Relaxed);
+                if let Some(tr) = trace_out.as_deref_mut() {
+                    for b in 0..batch {
+                        let row = trace_base + (b * n_layers + j) * seq;
+                        tr[row..row + n].copy_from_slice(&positions[b * n..(b + 1) * n]);
+                    }
+                }
+
+                // --- FFN half: x = x + FFN(LN(x)), GELU fused into the
+                // first GEMM's epilogue; `proj` doubles as the
+                // down-projection output.
+                let rows = batch * n;
+                let rh = rows * h;
+                hx[..rh].copy_from_slice(&x[..rh]);
+                layer_norm(&mut hx[..rh], h, &layer.ln2_g, &layer.ln2_b);
+                let rf = rows * layer.ffn_size;
+                layer.w1.matmul_bias_gelu(&hx[..rh], rows, &layer.b1, exec, &mut a1[..rf]);
+                layer.w2.matmul_bias(&a1[..rf], rows, &layer.b2, exec, &mut proj[..rh]);
+                for (xv, av) in x[..rh].iter_mut().zip(proj[..rh].iter()) {
+                    *xv += av;
                 }
             }
 
-            // --- FFN half: x = x1 + FFN(LN(x1)), GELU fused into the
-            // first GEMM's epilogue.
-            let rows = batch * n;
-            let mut h2 = x1.clone();
-            layer_norm(&mut h2, h, &layer.ln2_g, &layer.ln2_b);
-            let mut a1 = vec![0f32; rows * layer.ffn_size];
-            layer.w1.matmul_bias_gelu(&h2, rows, &layer.b1, cfg, &mut a1);
-            let mut a2 = vec![0f32; rows * h];
-            layer.w2.matmul_bias(&a1, rows, &layer.b2, cfg, &mut a2);
-            x = x1;
-            for (xv, av) in x.iter_mut().zip(a2.iter()) {
-                *xv += av;
+            // --- pooler + classifier head from each example's CLS vector
+            // (row 0 of its block — pinned there by the extract layer).
+            layer_norm(&mut x[..batch * n * h], h, &self.final_g, &self.final_b);
+            for b in 0..batch {
+                cls[b * h..(b + 1) * h].copy_from_slice(&x[b * n * h..b * n * h + h]);
             }
+            self.pooler_w.matmul_bias_tanh(
+                &cls[..batch * h],
+                batch,
+                &self.pooler_b,
+                exec,
+                &mut pooled[..batch * h],
+            );
+            let base = logits_out.len();
+            logits_out.resize(base + batch * self.num_classes, 0.0);
+            self.head_w.matmul_bias(
+                &pooled[..batch * h],
+                batch,
+                &self.head_b,
+                exec,
+                &mut logits_out[base..],
+            );
         }
-
-        // --- pooler + classifier head from each example's CLS vector
-        // (row 0 of its block — pinned there by the extract layer).
-        layer_norm(&mut x, h, &self.final_g, &self.final_b);
-        let mut cls = vec![0f32; batch * h];
-        for b in 0..batch {
-            cls[b * h..(b + 1) * h].copy_from_slice(&x[b * n * h..b * n * h + h]);
-        }
-        let mut pooled = vec![0f32; batch * h];
-        self.pooler_w.matmul_bias_tanh(&cls, batch, &self.pooler_b, cfg, &mut pooled);
-        let mut logits = vec![0f32; batch * self.num_classes];
-        self.head_w.matmul_bias(&pooled, batch, &self.head_b, cfg, &mut logits);
-        Ok((logits, trace))
+        self.checkin_arena(arena);
+        Ok(())
     }
 }
 
@@ -474,17 +682,14 @@ impl CellExecutor for NativeModel {
         let mut r = 0;
         while r < batch {
             let chunk = NATIVE_EXEC_CHUNK.min(batch - r);
-            let (chunk_logits, chunk_trace) = self.forward_batch(
+            self.forward_batch(
                 &tokens[r * seq..(r + chunk) * seq],
                 &segments[r * seq..(r + chunk) * seq],
                 chunk,
                 seq,
-                want_trace,
+                &mut logits,
+                kept.as_mut(),
             )?;
-            logits.extend_from_slice(&chunk_logits);
-            if let (Some(acc), Some(tr)) = (kept.as_mut(), chunk_trace) {
-                acc.extend_from_slice(&tr);
-            }
             r += chunk;
         }
         Ok(ExecOutput { logits, num_classes: self.num_classes, kept })
@@ -498,77 +703,103 @@ impl CellExecutor for NativeModel {
                 .collect(),
         )
     }
+
+    fn memory_stats(&self) -> Option<MemoryStats> {
+        Some(MemoryStats {
+            arena_peak_bytes: self.arena_peak.load(Ordering::Relaxed),
+            arena_buckets: self.arenas_planned.load(Ordering::Relaxed),
+            pool_threads: self.exec.lanes() as u64,
+            pool_jobs: self.exec.pool().jobs(),
+        })
+    }
 }
 
-/// Scratch for the extract layer's top-k selection: the score and index
-/// buffers persist across every (layer, example) of a forward pass instead
-/// of being reallocated per call.
-struct TopK {
-    scores: Vec<f32>,
-    order: Vec<usize>,
-}
-
-impl TopK {
-    fn with_capacity(cap: usize) -> TopK {
-        TopK { scores: Vec::with_capacity(cap), order: Vec::with_capacity(cap) }
+/// Indices of the `keep` highest-scored positions, in original (ascending)
+/// order, computed entirely in the arena's `scores`/`order` scratch (no
+/// allocation, no stable sort — stability is replaced by an explicit
+/// ascending-index tiebreak, which selects the identical set and order).
+///
+/// This is the enforcement site of the paper's §3.4 pinning invariant
+/// (the property `rust/tests` asserts is *established here*):
+/// * **CLS survives every extract layer**: position 0's score is
+///   overwritten with `BIG` = 1e6, above any attainable column sum
+///   (significance is bounded by `heads × seq`), so the classifier's
+///   readout vector can never be eliminated.
+/// * **PAD sinks below any real word**: masked positions score -1.0,
+///   strictly below every real column sum (those are ≥ 0), so a PAD
+///   survives only when `keep` exceeds the number of real tokens.
+/// * Ties (e.g. between PAD columns) resolve to the lowest original index
+///   — matching `jnp.argsort` in `model.py` exactly, which the
+///   golden-logit parity fixtures depend on.
+fn keep_indices<'a>(
+    sig: &[f32],
+    mask: &[f32],
+    keep: usize,
+    scores: &mut [f32],
+    order: &'a mut [i32],
+) -> &'a [i32] {
+    let n = sig.len();
+    let scores = &mut scores[..n];
+    for (i, &s) in sig.iter().enumerate() {
+        scores[i] = if mask[i] > 0.0 { s } else { -1.0 };
     }
-
-    /// Indices of the `keep` highest-scored positions, returned in
-    /// original (ascending) order.
-    ///
-    /// This is the enforcement site of the paper's §3.4 pinning invariant
-    /// (the property `rust/tests` asserts is *established here*):
-    /// * **CLS survives every extract layer**: position 0's score is
-    ///   overwritten with `BIG` = 1e6, above any attainable column sum
-    ///   (significance is bounded by `heads × seq`), so the classifier's
-    ///   readout vector can never be eliminated.
-    /// * **PAD sinks below any real word**: masked positions score -1.0,
-    ///   strictly below every real column sum (those are ≥ 0), so a PAD
-    ///   survives only when `keep` exceeds the number of real tokens.
-    /// * The sort is stable, so ties (e.g. between PAD columns) resolve to
-    ///   the lowest original index — matching `jnp.argsort` in `model.py`
-    ///   exactly, which the golden-logit parity fixtures depend on.
-    fn keep_indices(&mut self, sig: &[f32], mask: &[f32], keep: usize) -> &[usize] {
-        let n = sig.len();
-        self.scores.clear();
-        for (i, &s) in sig.iter().enumerate() {
-            self.scores.push(if mask[i] > 0.0 { s } else { -1.0 });
-        }
-        self.scores[0] = BIG;
-        self.order.clear();
-        self.order.extend(0..n);
-        let scores = &self.scores;
-        self.order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
-        self.order.truncate(keep);
-        self.order.sort_unstable();
-        &self.order
+    scores[0] = BIG;
+    let (order, _) = order.split_at_mut(n);
+    for (i, o) in order.iter_mut().enumerate() {
+        *o = i as i32;
     }
+    order.sort_unstable_by(|&a, &b| {
+        scores[b as usize]
+            .total_cmp(&scores[a as usize])
+            .then_with(|| a.cmp(&b))
+    });
+    let (kept, _) = order.split_at_mut(keep);
+    kept.sort_unstable();
+    kept
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn topk(sig: &[f32], mask: &[f32], keep: usize) -> Vec<i32> {
+        let mut scores = vec![0f32; sig.len()];
+        let mut order = vec![0i32; sig.len()];
+        keep_indices(sig, mask, keep, &mut scores, &mut order).to_vec()
+    }
+
     #[test]
     fn topk_pins_cls_and_sinks_pad() {
         // 6 positions, PADs at 4/5; keep 3 -> CLS + the two best real.
         let sig = vec![0.1, 2.0, 0.5, 1.5, 9.0, 9.0];
         let mask = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
-        let mut topk = TopK::with_capacity(sig.len());
-        assert_eq!(topk.keep_indices(&sig, &mask, 3), &[0, 1, 3]);
+        assert_eq!(topk(&sig, &mask, 3), vec![0, 1, 3]);
         // Keep beyond the real count: PAD ties resolve to ascending index.
-        assert_eq!(topk.keep_indices(&sig, &mask, 5), &[0, 1, 2, 3, 4]);
+        assert_eq!(topk(&sig, &mask, 5), vec![0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn topk_scratch_is_reusable_across_widths() {
-        let mut topk = TopK::with_capacity(8);
+        // The scratch persists across (layer, example) calls of shrinking
+        // width — exactly how the forward pass reuses the arena regions.
+        let mut scores = vec![f32::NAN; 8];
+        let mut order = vec![i32::MIN; 8];
         let sig = vec![0.0, 3.0, 1.0, 2.0];
         let mask = vec![1.0; 4];
-        assert_eq!(topk.keep_indices(&sig, &mask, 2), &[0, 1]);
-        // Narrower follow-up call (as after an extract layer) still works.
+        assert_eq!(keep_indices(&sig, &mask, 2, &mut scores, &mut order), &[0, 1]);
+        // Narrower follow-up call (as after an extract layer) still works,
+        // with the stale tail of the scratch ignored.
         let sig2 = vec![0.0, 0.5];
         let mask2 = vec![1.0; 2];
-        assert_eq!(topk.keep_indices(&sig2, &mask2, 1), &[0]);
+        assert_eq!(keep_indices(&sig2, &mask2, 1, &mut scores, &mut order), &[0]);
+    }
+
+    #[test]
+    fn topk_ties_resolve_to_lowest_index() {
+        // Equal real scores: the unstable sort's explicit tiebreak must
+        // reproduce the old stable sort's choice (lowest original index).
+        let sig = vec![0.0, 1.0, 1.0, 1.0, 1.0];
+        let mask = vec![1.0; 5];
+        assert_eq!(topk(&sig, &mask, 3), vec![0, 1, 2]);
     }
 }

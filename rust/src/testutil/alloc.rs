@@ -1,0 +1,93 @@
+//! Counting test allocator: a [`System`]-backed `GlobalAlloc` that tallies
+//! every allocation, so tests and benches can assert (or report) the heap
+//! traffic of a code path. Install it in a test/bench **binary** with:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: powerbert::testutil::alloc::CountingAlloc =
+//!     powerbert::testutil::alloc::CountingAlloc::new();
+//! ```
+//!
+//! `tests/alloc_steady_state.rs` uses it to prove the native forward pass
+//! performs **zero** steady-state heap allocations after a bucket's warmup
+//! call; `benches/native.rs` uses it for the allocation-bytes-per-call
+//! column of the kernels table. Counters are process-global (allocations
+//! from any thread count), which is exactly what a zero-allocation
+//! assertion wants: a pool worker allocating on the hot path must fail the
+//! test just like the calling thread would.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation counters at a point in time; subtract two snapshots to get
+/// the traffic of the code in between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// Allocation events (alloc, alloc_zeroed, realloc).
+    pub count: u64,
+    /// Bytes requested by those events.
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Counters accumulated since `earlier`.
+    pub fn since(&self, earlier: &AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            count: self.count.saturating_sub(earlier.count),
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+        }
+    }
+}
+
+/// Current process-wide counters. Meaningful only in binaries that
+/// installed [`CountingAlloc`] as the global allocator (otherwise both
+/// stay zero).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        count: ALLOCS.load(Ordering::Relaxed),
+        bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// The counting allocator. Delegates everything to [`System`]; the only
+/// overhead on the alloc path is two relaxed atomic adds.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> CountingAlloc {
+        CountingAlloc
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        CountingAlloc::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

@@ -2,7 +2,10 @@
 //! set): seeded random case generation with failure reporting. Shrinking is
 //! deliberately simple — on failure the harness re-runs the failing seed
 //! with progressively smaller size hints and reports the smallest failure.
+//! Plus [`alloc`]: a counting global allocator for zero-allocation
+//! regression tests and the bench's allocation-bytes columns.
 
+pub mod alloc;
 pub mod prop;
 
 /// Gate for PJRT/artifact-dependent integration tests: true when the AOT

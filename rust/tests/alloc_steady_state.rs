@@ -1,0 +1,82 @@
+//! Zero-steady-state-allocation regression test for the native forward
+//! pass: after a `(batch, seq)` bucket's first (warmup) call — which plans
+//! and allocates its scratch arena — `NativeModel::forward_into` must not
+//! touch the heap at all. This binary installs the counting allocator and
+//! deliberately contains a single `#[test]`, so no concurrent test can
+//! pollute the process-global counters during the measured window.
+
+use std::sync::Arc;
+
+use powerbert::runtime::{
+    default_root, ArtifactStore, KernelConfig, KernelExec, NativeModel, Registry, TestSplit,
+};
+use powerbert::testutil::{alloc, artifacts_available};
+
+#[global_allocator]
+static ALLOC: alloc::CountingAlloc = alloc::CountingAlloc::new();
+
+/// Steady-state calls per (model, kernel-config) case. More calls makes
+/// the assertion stronger: any per-call allocation multiplies.
+const STEADY_CALLS: usize = 6;
+
+#[test]
+fn forward_batch_is_allocation_free_after_warmup() {
+    if !artifacts_available() {
+        return;
+    }
+    let reg = Registry::scan(&default_root()).expect("registry");
+    let ds = reg.dataset("sst2").expect("sst2 bundle");
+    let split = TestSplit::load(&ds.test_npz()).expect("test split");
+    let seq = split.seq_len;
+    let store = ArtifactStore::new();
+
+    // Serial (the serving default) and pooled (2 lanes, mc small enough
+    // that the tiny bundle's GEMMs actually split) kernel configs; bert
+    // (no elimination) and power-default (extract layers + in-place
+    // compaction) variants. Every combination must go quiet after warmup.
+    for (label, kernel) in [
+        ("serial", KernelConfig { threads: 1, kc: 256, mc: 64 }),
+        ("pooled x2", KernelConfig { threads: 2, kc: 256, mc: 4 }),
+    ] {
+        let exec = Arc::new(KernelExec::new(kernel));
+        for vname in ["bert", "power-default"] {
+            let Some(meta) = ds.variant(vname) else { continue };
+            let art = store.fetch(meta).expect("host artifact");
+            let model = NativeModel::load(&art, exec.clone()).expect("native model");
+            // Two bucket shapes: a full execute-chunk and an odd tail.
+            for batch in [4usize, 3] {
+                let tokens = &split.tokens[..batch * seq];
+                let segments = &split.segments[..batch * seq];
+                let mut logits = Vec::new();
+                // Warmup: the first call per bucket may plan + allocate
+                // the arena (and grow `logits`); the second confirms the
+                // warm path before measurement starts.
+                for _ in 0..2 {
+                    logits.clear();
+                    model
+                        .forward_into(tokens, segments, batch, seq, &mut logits)
+                        .expect("warmup forward");
+                }
+                let warm = logits.clone();
+
+                let before = alloc::snapshot();
+                for _ in 0..STEADY_CALLS {
+                    logits.clear();
+                    model
+                        .forward_into(tokens, segments, batch, seq, &mut logits)
+                        .expect("steady forward");
+                }
+                let delta = alloc::snapshot().since(&before);
+                assert_eq!(
+                    delta.count, 0,
+                    "{vname} [{label}] batch {batch}: {} heap allocation(s) \
+                     ({} bytes) across {STEADY_CALLS} steady-state forward passes",
+                    delta.count, delta.bytes
+                );
+                // The allocation-free path must still produce the same
+                // logits as the warmup pass.
+                assert_eq!(warm, logits, "{vname} [{label}] batch {batch}: logits drifted");
+            }
+        }
+    }
+}

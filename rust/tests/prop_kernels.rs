@@ -2,11 +2,16 @@
 //! must agree with the naive reference on arbitrary shapes (including
 //! ragged non-multiple-of-block sizes), fused epilogues must equal
 //! epilogue-after-matmul, and every kernel must be bit-deterministic
-//! across thread counts. No artifacts required — these run everywhere.
+//! across thread counts **and dispatch mechanisms** — the persistent-pool
+//! path, the retired scoped-thread path and the serial path must agree
+//! bit-for-bit on any shape. Arena-style scratch reuse must leak nothing
+//! between calls. No artifacts required — these run everywhere.
 
-use powerbert::runtime::kernels::attention::masked_attention;
+use powerbert::runtime::kernels::attention::{
+    masked_attention, masked_attention_scoped, AttnScratchBuf,
+};
 use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm};
-use powerbert::runtime::kernels::{gelu, KernelConfig};
+use powerbert::runtime::kernels::{gelu, KernelConfig, KernelExec};
 use powerbert::testutil::prop::forall;
 use powerbert::util::prng::Rng;
 
@@ -35,15 +40,16 @@ fn blocked_matmul_matches_naive_reference() {
         let x = rand_f32(rng, n * k);
         let w = rand_f32(rng, k * m);
         let b = rand_f32(rng, m);
-        let cfg = rand_cfg(rng, k);
+        let exec = KernelExec::new(rand_cfg(rng, k));
         let packed = PackedGemm::pack(&w, k, m);
         let mut out = vec![0f32; n * m];
-        packed.matmul_bias(&x, n, &b, &cfg, &mut out);
+        packed.matmul_bias(&x, n, &b, &exec, &mut out);
         let want = matmul_bias_ref(&x, n, k, &w, m, &b);
         for (i, (got, want)) in out.iter().zip(want.iter()).enumerate() {
             assert!(
                 (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
-                "({n},{k},{m}) cfg {cfg:?} elem {i}: blocked {got} vs naive {want}"
+                "({n},{k},{m}) cfg {:?} elem {i}: blocked {got} vs naive {want}",
+                exec.config()
             );
         }
     });
@@ -65,7 +71,7 @@ fn identity_weight_is_exact() {
         }
         let packed = PackedGemm::pack(&w, k, k);
         let mut out = vec![0f32; n * k];
-        packed.matmul_bias(&x, n, &b, &rand_cfg(rng, k), &mut out);
+        packed.matmul_bias(&x, n, &b, &KernelExec::new(rand_cfg(rng, k)), &mut out);
         for i in 0..n {
             for c in 0..k {
                 assert_eq!(out[i * k + c], x[i * k + c] + b[c], "row {i} col {c}");
@@ -85,7 +91,7 @@ fn fused_gelu_equals_gelu_after_matmul() {
         let b = rand_f32(rng, m);
         let packed = PackedGemm::pack(&w, k, m);
         let mut fused = vec![0f32; n * m];
-        packed.matmul_bias_gelu(&x, n, &b, &rand_cfg(rng, k), &mut fused);
+        packed.matmul_bias_gelu(&x, n, &b, &KernelExec::new(rand_cfg(rng, k)), &mut fused);
         let want = matmul_bias_ref(&x, n, k, &w, m, &b);
         for (i, (got, want)) in fused.iter().zip(want.iter()).enumerate() {
             let want = gelu(*want);
@@ -98,8 +104,12 @@ fn fused_gelu_equals_gelu_after_matmul() {
 }
 
 #[test]
-fn gemm_is_bit_deterministic_across_thread_counts() {
-    forall("gemm threads bit-identical", 32, |rng, size| {
+fn gemm_pooled_scoped_and_serial_are_bit_identical() {
+    // The steady-state acceptance property: the persistent-pool dispatch
+    // must reproduce the per-call scoped-thread dispatch (the pre-refactor
+    // path, kept as `matmul_bias_scoped`) and the serial path bit-for-bit
+    // on ragged shapes, block sizes and thread counts.
+    forall("gemm pooled == scoped == serial", 32, |rng, size| {
         let n = 1 + rng.below(size as u64 + 8) as usize;
         let k = 1 + rng.below(48) as usize;
         let m = 1 + rng.below(48) as usize;
@@ -110,18 +120,23 @@ fn gemm_is_bit_deterministic_across_thread_counts() {
         let mc = 1 + rng.below(9) as usize;
         let packed = PackedGemm::pack(&w, k, m);
         let mut serial = vec![0f32; n * m];
-        packed.matmul_bias(&x, n, &b, &KernelConfig { threads: 1, kc, mc }, &mut serial);
+        let serial_exec = KernelExec::new(KernelConfig { threads: 1, kc, mc });
+        packed.matmul_bias(&x, n, &b, &serial_exec, &mut serial);
         for threads in [2usize, 4] {
-            let mut par = vec![0f32; n * m];
-            packed.matmul_bias(&x, n, &b, &KernelConfig { threads, kc, mc }, &mut par);
-            assert_eq!(serial, par, "threads={threads} kc={kc} mc={mc}");
+            let cfg = KernelConfig { threads, kc, mc };
+            let mut pooled = vec![0f32; n * m];
+            packed.matmul_bias(&x, n, &b, &KernelExec::new(cfg.clone()), &mut pooled);
+            assert_eq!(serial, pooled, "pooled: threads={threads} kc={kc} mc={mc}");
+            let mut scoped = vec![0f32; n * m];
+            packed.matmul_bias_scoped(&x, n, &b, &cfg, &mut scoped);
+            assert_eq!(serial, scoped, "scoped: threads={threads} kc={kc} mc={mc}");
         }
     });
 }
 
 #[test]
-fn attention_masks_pads_and_is_thread_deterministic() {
-    forall("attention mask + determinism", 24, |rng, size| {
+fn attention_masks_pads_and_matches_across_dispatch_paths() {
+    forall("attention mask + pooled == scoped == serial", 24, |rng, size| {
         let batch = 1 + rng.below(3) as usize;
         let n = 2 + (size % 9);
         let heads = 1 + rng.below(3) as usize;
@@ -141,8 +156,22 @@ fn attention_masks_pads_and_is_thread_deterministic() {
         }
         let mut ctx = vec![0f32; batch * n * h];
         let mut sig = vec![0f32; batch * n];
-        let cfg = KernelConfig::default();
-        masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx, &mut sig);
+        let exec1 = KernelExec::new(KernelConfig::default());
+        let mut buf1 = AttnScratchBuf::for_shape(batch, n, heads, d, 1);
+        masked_attention(
+            &q,
+            &k,
+            &v,
+            &mask,
+            batch,
+            n,
+            heads,
+            d,
+            &exec1,
+            buf1.scratch(),
+            &mut ctx,
+            &mut sig,
+        );
         for b in 0..batch {
             // PAD key columns receive (numerically) zero attention mass —
             // the significance the extract layer ranks by cannot resurrect
@@ -156,12 +185,108 @@ fn attention_masks_pads_and_is_thread_deterministic() {
             assert!((mass - want).abs() < 1e-3, "example {b}: mass {mass} vs {want}");
         }
         for threads in [2usize, 4] {
-            let mut ctx_t = vec![0f32; batch * n * h];
-            let mut sig_t = vec![0f32; batch * n];
             let cfg = KernelConfig::default().with_threads(threads);
-            masked_attention(&q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx_t, &mut sig_t);
-            assert_eq!(ctx, ctx_t, "ctx differs at threads={threads}");
-            assert_eq!(sig, sig_t, "sig differs at threads={threads}");
+            let exec = KernelExec::new(cfg.clone());
+            let mut buf = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
+            let mut ctx_p = vec![0f32; batch * n * h];
+            let mut sig_p = vec![0f32; batch * n];
+            masked_attention(
+                &q,
+                &k,
+                &v,
+                &mask,
+                batch,
+                n,
+                heads,
+                d,
+                &exec,
+                buf.scratch(),
+                &mut ctx_p,
+                &mut sig_p,
+            );
+            assert_eq!(ctx, ctx_p, "pooled ctx differs at threads={threads}");
+            assert_eq!(sig, sig_p, "pooled sig differs at threads={threads}");
+            let mut ctx_s = vec![0f32; batch * n * h];
+            let mut sig_s = vec![0f32; batch * n];
+            masked_attention_scoped(
+                &q, &k, &v, &mask, batch, n, heads, d, &cfg, &mut ctx_s, &mut sig_s,
+            );
+            assert_eq!(ctx, ctx_s, "scoped ctx differs at threads={threads}");
+            assert_eq!(sig, sig_s, "scoped sig differs at threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn attention_scratch_reuse_leaks_nothing_across_shapes() {
+    // Arena-style reuse: one scratch buffer serves a sequence of calls
+    // with different (batch, n, heads, d) — exactly how the forward pass
+    // reuses its arena regions across layers of shrinking width — with
+    // hostile garbage written between calls. Every call must match a
+    // fresh-scratch run bit-for-bit.
+    forall("attention scratch reuse is stateless", 24, |rng, size| {
+        let threads = 1 + rng.below(4) as usize;
+        let exec = KernelExec::new(KernelConfig::default().with_threads(threads));
+        // One shared buffer sized for the largest shape in the sequence.
+        let (max_batch, max_n, max_heads, max_d) = (3, 2 + size % 9, 3, 8);
+        let mut shared =
+            AttnScratchBuf::for_shape(max_batch, max_n, max_heads, max_d, exec.lanes());
+        for _ in 0..3 {
+            let batch = 1 + rng.below(max_batch as u64) as usize;
+            let n = 1 + rng.below(max_n as u64) as usize;
+            let heads = 1 + rng.below(max_heads as u64) as usize;
+            let d = 1 + rng.below(max_d as u64) as usize;
+            let h = heads * d;
+            let q = rand_f32(rng, batch * n * h);
+            let k = rand_f32(rng, batch * n * h);
+            let v = rand_f32(rng, batch * n * h);
+            let mut mask = vec![1f32; batch * n];
+            if n > 1 && rng.chance(0.5) {
+                mask[batch * n - 1] = 0.0;
+            }
+            // Poison the shared scratch, as a previous layer's leftovers
+            // would (the arena never zeroes between calls).
+            {
+                let s = shared.scratch();
+                s.ctx_heads.fill(f32::NAN);
+                s.sig_heads.fill(f32::INFINITY);
+                s.probs.fill(-1e30);
+            }
+            let mut ctx_shared = vec![f32::NAN; batch * n * h];
+            let mut sig_shared = vec![f32::NAN; batch * n];
+            masked_attention(
+                &q,
+                &k,
+                &v,
+                &mask,
+                batch,
+                n,
+                heads,
+                d,
+                &exec,
+                shared.scratch(),
+                &mut ctx_shared,
+                &mut sig_shared,
+            );
+            let mut fresh = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
+            let mut ctx_fresh = vec![0f32; batch * n * h];
+            let mut sig_fresh = vec![0f32; batch * n];
+            masked_attention(
+                &q,
+                &k,
+                &v,
+                &mask,
+                batch,
+                n,
+                heads,
+                d,
+                &exec,
+                fresh.scratch(),
+                &mut ctx_fresh,
+                &mut sig_fresh,
+            );
+            assert_eq!(ctx_shared, ctx_fresh, "reused scratch leaked into ctx");
+            assert_eq!(sig_shared, sig_fresh, "reused scratch leaked into sig");
         }
     });
 }
