@@ -1,14 +1,17 @@
 //! Native backend bench: the kernel layer and the end-to-end forward.
 //!
 //! Sections per dataset:
-//! 1. **kernels** — the blocked, packed `matmul_bias` against the naive
-//!    reference on the bundle's real GEMM shapes (QKV projection, FFN up,
-//!    FFN down), single-threaded, in GFLOP/s — old-vs-new for the exact
-//!    loops the forward pass runs, plus per-call allocation bytes (the
-//!    naive path allocates its output; the blocked path is
-//!    allocation-free);
-//! 2. **thread scaling** — the same blocked kernel on the FFN-up shape at
-//!    1/2/4 intra-op threads;
+//! 1. **kernels** — `matmul_bias` on the bundle's real GEMM shapes (QKV
+//!    projection, FFN up, FFN down), single-threaded, in GFLOP/s. Every
+//!    row is self-describing: dispatch path (serial / scoped / pooled),
+//!    weight precision (f32 / int8) and the ISA the kernel actually ran
+//!    on (`scalar` or `avx2+fma`, runtime-detected). Rows cover the naive
+//!    reference, the forced-scalar blocked oracle, the dispatched blocked
+//!    kernel (SIMD when built with `--features simd` on a capable host)
+//!    and the int8 quantized-weight kernel — plus per-call allocation
+//!    bytes (the blocked paths are allocation-free);
+//! 2. **thread scaling** — the dispatched kernel on the FFN-up shape at
+//!    1/2/4 intra-op threads, for both precisions;
 //! 3. **dispatch (small shape)** — serial vs per-call scoped spawns vs
 //!    the persistent pool on a batch=1, 64-row slice of the FFN-up shape:
 //!    the regime where spawn cost used to dominate. Reports p50 latency,
@@ -16,27 +19,97 @@
 //! 4. **bert vs power** — wall-clock speedup vs the retention config plus
 //!    the measured per-layer word-vector counts (the paper's Figure 1
 //!    quantity, counted by the executor rather than derived from
-//!    meta.json).
+//!    meta.json), at both weight precisions;
+//! 5. **serve** — closed-loop p50/p99 through the in-process coordinator
+//!    client on the native backend.
 //!
-//!   cargo bench --bench native [PB_BENCH_ITERS=40]
+//!   cargo bench --bench native [PB_BENCH_ITERS=40] -- [--json PATH]
+//!
+//! `--json PATH` additionally writes every row as a machine-readable
+//! snapshot (the committed `BENCH_native.json` at the repo root is one);
+//! the text tables are unchanged. The snapshot carries no timestamp so
+//! refreshes diff cleanly.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
 
 use powerbert::bench::{fmt_time, paper::measure, time_fn, BenchConfig, Table};
-use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm};
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
+use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm, PackedGemmI8};
 use powerbert::runtime::kernels::{thread_spawns, KernelConfig, KernelExec};
 use powerbert::runtime::{
-    default_root, ArtifactStore, BackendKind, Engine, Registry, TestSplit, VariantMeta,
+    active_isa, default_root, simd_active, ArtifactStore, BackendKind, Engine, Precision, Registry,
+    TestSplit, VariantMeta,
 };
 use powerbert::testutil::alloc;
+use powerbert::util::json::Json;
 use powerbert::util::prng::Rng;
+use powerbert::util::stats::Summary;
 
 // Count every heap allocation so the kernels table can report bytes/call
 // — the steady-state claim, measured rather than asserted.
 #[global_allocator]
 static ALLOC: alloc::CountingAlloc = alloc::CountingAlloc::new();
 
+/// Machine-readable snapshot accumulator, written when `--json PATH` is
+/// passed. Section vectors mirror the printed tables row for row.
+#[derive(Default)]
+struct Snapshot {
+    kernels: Vec<Json>,
+    thread_scaling: Vec<Json>,
+    dispatch: Vec<Json>,
+    end_to_end: Vec<Json>,
+    serve: Vec<Json>,
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+impl Snapshot {
+    fn write(self, path: &str, cfg: &BenchConfig) {
+        let root = jobj(vec![
+            ("bench", jstr("native")),
+            ("schema", Json::UInt(1)),
+            ("isa", jstr(active_isa())),
+            ("simd_active", Json::Bool(simd_active())),
+            ("measure_iters", Json::UInt(cfg.measure_iters as u64)),
+            ("warmup_iters", Json::UInt(cfg.warmup_iters as u64)),
+            ("kernels", Json::Arr(self.kernels)),
+            ("thread_scaling", Json::Arr(self.thread_scaling)),
+            ("dispatch", Json::Arr(self.dispatch)),
+            ("end_to_end", Json::Arr(self.end_to_end)),
+            ("serve", Json::Arr(self.serve)),
+        ]);
+        match std::fs::write(path, root.to_string_pretty() + "\n") {
+            Ok(()) => println!("\nwrote bench snapshot to {path}"),
+            Err(e) => eprintln!("--json {path}: {e}"),
+        }
+    }
+}
+
 fn main() {
     powerbert::util::log::init();
     let cfg = BenchConfig::from_env();
+    let mut json_path = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            json_path = args.next();
+            if json_path.is_none() {
+                eprintln!("--json requires a path");
+                std::process::exit(2);
+            }
+        }
+    }
     let registry = match Registry::scan(&default_root()) {
         Ok(r) => r,
         Err(e) => {
@@ -45,13 +118,18 @@ fn main() {
         }
     };
 
+    let mut snap = Snapshot::default();
     for (ds_name, ds) in &registry.datasets {
         if let Some(meta) = ds.variant("bert").or_else(|| ds.variants.values().next()) {
-            if let Err(e) = bench_kernels(ds_name, meta, &cfg) {
+            if let Err(e) = bench_kernels(ds_name, meta, &cfg, &mut snap) {
                 eprintln!("  ({ds_name} kernel bench failed: {e:#})");
             }
         }
-        bench_end_to_end(ds_name, ds, &cfg);
+        bench_end_to_end(ds_name, ds, &cfg, &mut snap);
+    }
+    bench_serve(&registry, &cfg, &mut snap);
+    if let Some(path) = json_path {
+        snap.write(&path, &cfg);
     }
 }
 
@@ -64,12 +142,61 @@ fn cost_of_call(f: &mut dyn FnMut()) -> (u64, u64) {
     (da.bytes, thread_spawns() - before_spawns)
 }
 
-/// Old-vs-new on the bundle's real GEMM shapes (plus per-call allocation
-/// bytes), thread scaling on the FFN-up shape, and the dispatch-path
-/// comparison on the small shape the spawn cost used to dominate. `rows`
-/// is a full batch at full width (8 × seq) — the shape the first encoder
-/// runs before elimination shrinks it.
-fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow::Result<()> {
+/// One kernel-table row: print + snapshot, self-describing
+/// (dispatch / precision / ISA), with GFLOP/s and alloc bytes/call.
+#[allow(clippy::too_many_arguments)]
+fn kernel_row(
+    table: &mut Table,
+    snap: &mut Snapshot,
+    ds_name: &str,
+    shape: (&str, usize, usize, usize),
+    path: &str,
+    dispatch: &str,
+    precision: &str,
+    isa: &str,
+    t: &Summary,
+    naive_p50: f64,
+    alloc_bytes: u64,
+) {
+    let (name, n, k, m) = shape;
+    let flops = (2 * n * k * m) as f64;
+    table.row(vec![
+        name.to_string(),
+        format!("{n} x {k} x {m}"),
+        format!("{path} [{dispatch}/{precision}/{isa}]"),
+        fmt_time(t.p50),
+        format!("{:.2}", flops / t.p50 / 1e9),
+        format!("{:.2}x", naive_p50 / t.p50),
+        alloc_bytes.to_string(),
+    ]);
+    snap.kernels.push(jobj(vec![
+        ("dataset", jstr(ds_name)),
+        ("shape", jstr(name)),
+        ("n", Json::UInt(n as u64)),
+        ("k", Json::UInt(k as u64)),
+        ("m", Json::UInt(m as u64)),
+        ("path", jstr(path)),
+        ("dispatch", jstr(dispatch)),
+        ("precision", jstr(precision)),
+        ("isa", jstr(isa)),
+        ("threads", Json::UInt(1)),
+        ("p50_s", Json::Num(t.p50)),
+        ("gflops", Json::Num(flops / t.p50 / 1e9)),
+        ("alloc_bytes_per_call", Json::UInt(alloc_bytes)),
+    ]));
+}
+
+/// Kernel sections: per-shape path comparison (naive / scalar oracle /
+/// dispatched f32 / dispatched int8), thread scaling per precision, and
+/// the dispatch-path comparison on the small shape. `rows` is a full
+/// batch at full width (8 × seq) — the shape the first encoder runs
+/// before elimination shrinks it.
+fn bench_kernels(
+    ds_name: &str,
+    meta: &VariantMeta,
+    cfg: &BenchConfig,
+    snap: &mut Snapshot,
+) -> anyhow::Result<()> {
     let store = ArtifactStore::new();
     let art = store.fetch(meta)?;
     let h = meta.hidden_size;
@@ -89,30 +216,52 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
     let shapes: [(&str, usize, usize, &[f32]); 3] =
         [("qkv proj", h, h, &wq), ("ffn up", h, ffn, &w1), ("ffn down", ffn, h, &w2)];
     let mut table = Table::new(
-        &format!("native kernels — {ds_name}: blocked+packed vs naive matmul_bias (1 thread)"),
+        &format!("native kernels — {ds_name}: matmul_bias paths (1 thread)"),
         &[
             "shape",
             "n x k x m",
-            "naive",
-            "blocked",
-            "GFLOP/s (naive -> blocked)",
-            "speedup",
-            "alloc B/call (naive -> blocked)",
+            "path [dispatch/precision/isa]",
+            "p50",
+            "GFLOP/s",
+            "vs naive",
+            "alloc B/call",
         ],
     );
     let single = KernelExec::new(KernelConfig::default().with_threads(1));
-    let mut ffn_speedup = None;
+    // Acceptance ratios on the FFN-up shape (blocked/naive, simd/scalar,
+    // int8/f32), reported below the table.
+    let mut ffn_ratios = None;
     for (name, k, m, w) in shapes {
         let x: Vec<f32> = (0..rows * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
         let bias: Vec<f32> = (0..m).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let shape = (name, rows, k, m);
+
         let naive = time_fn(cfg, || {
             std::hint::black_box(matmul_bias_ref(&x, rows, k, w, m, &bias));
         });
         let (naive_bytes, _) = cost_of_call(&mut || {
             std::hint::black_box(matmul_bias_ref(&x, rows, k, w, m, &bias));
         });
+        kernel_row(
+            &mut table, snap, ds_name, shape, "naive", "serial", "f32", "scalar", &naive,
+            naive.p50, naive_bytes,
+        );
+
         let packed = PackedGemm::pack(w, k, m);
         let mut out = vec![0f32; rows * m];
+        let scalar = time_fn(cfg, || {
+            packed.matmul_bias_scalar(&x, rows, &bias, single.config().kc, &mut out);
+            std::hint::black_box(&out);
+        });
+        let (scalar_bytes, _) = cost_of_call(&mut || {
+            packed.matmul_bias_scalar(&x, rows, &bias, single.config().kc, &mut out);
+            std::hint::black_box(&out);
+        });
+        kernel_row(
+            &mut table, snap, ds_name, shape, "blocked-scalar", "serial", "f32", "scalar",
+            &scalar, naive.p50, scalar_bytes,
+        );
+
         let blocked = time_fn(cfg, || {
             packed.matmul_bias(&x, rows, &bias, &single, &mut out);
             std::hint::black_box(&out);
@@ -121,59 +270,97 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
             packed.matmul_bias(&x, rows, &bias, &single, &mut out);
             std::hint::black_box(&out);
         });
-        let flops = (2 * rows * k * m) as f64;
-        let speedup = naive.p50 / blocked.p50;
+        kernel_row(
+            &mut table, snap, ds_name, shape, "blocked", "serial", "f32", active_isa(), &blocked,
+            naive.p50, blocked_bytes,
+        );
+
+        let qpacked = PackedGemmI8::pack(w, k, m);
+        let int8 = time_fn(cfg, || {
+            qpacked.matmul_bias(&x, rows, &bias, &single, &mut out);
+            std::hint::black_box(&out);
+        });
+        let (int8_bytes, _) = cost_of_call(&mut || {
+            qpacked.matmul_bias(&x, rows, &bias, &single, &mut out);
+            std::hint::black_box(&out);
+        });
+        kernel_row(
+            &mut table, snap, ds_name, shape, "blocked", "serial", "int8", active_isa(), &int8,
+            naive.p50, int8_bytes,
+        );
+
         if name == "ffn up" {
-            ffn_speedup = Some(speedup);
+            ffn_ratios = Some((naive.p50 / blocked.p50, scalar.p50 / blocked.p50, blocked.p50 / int8.p50));
         }
-        table.row(vec![
-            name.to_string(),
-            format!("{rows} x {k} x {m}"),
-            fmt_time(naive.p50),
-            fmt_time(blocked.p50),
-            format!("{:.2} -> {:.2}", flops / naive.p50 / 1e9, flops / blocked.p50 / 1e9),
-            format!("{speedup:.2}x"),
-            format!("{naive_bytes} -> {blocked_bytes}"),
-        ]);
     }
     table.print();
-    if let Some(s) = ffn_speedup {
-        // The acceptance number: single-thread blocked-vs-naive on the
-        // bundle's FFN shape.
-        println!("ffn-shape single-thread speedup (blocked vs naive): {s:.2}x");
+    if let Some((vs_naive, vs_scalar, int8_vs_f32)) = ffn_ratios {
+        // The acceptance numbers, single-threaded on the bundle's FFN
+        // shape: dispatched-vs-naive, dispatched-vs-scalar-oracle (the
+        // SIMD speedup when AVX2+FMA is active), int8-vs-f32.
+        println!("ffn-shape single-thread: blocked vs naive {vs_naive:.2}x");
+        println!(
+            "ffn-shape single-thread: dispatched ({}) vs scalar oracle {vs_scalar:.2}x",
+            active_isa()
+        );
+        println!("ffn-shape single-thread: int8 vs f32 (same dispatch) {int8_vs_f32:.2}x");
     }
 
     let mut scaling = Table::new(
-        &format!("native kernels — {ds_name}: blocked matmul thread scaling (ffn up shape)"),
-        &["threads", "p50", "GFLOP/s", "vs 1 thread"],
+        &format!("native kernels — {ds_name}: matmul thread scaling (ffn up shape)"),
+        &["precision", "threads", "dispatch", "p50", "GFLOP/s", "vs 1 thread"],
     );
     let x: Vec<f32> = (0..rows * h).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
     let bias: Vec<f32> = (0..ffn).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
-    let packed = PackedGemm::pack(&w1, h, ffn);
+    let fp = PackedGemm::pack(&w1, h, ffn);
+    let qp = PackedGemmI8::pack(&w1, h, ffn);
     let mut out = vec![0f32; rows * ffn];
     let flops = (2 * rows * h * ffn) as f64;
-    let mut base = None;
-    for threads in [1usize, 2, 4] {
-        // mc small enough that `rows` splits across every thread count.
-        let exec = KernelExec::new(KernelConfig { threads, kc: 256, mc: 16 });
-        let t = time_fn(cfg, || {
-            packed.matmul_bias(&x, rows, &bias, &exec, &mut out);
-            std::hint::black_box(&out);
-        });
-        if threads == 1 {
-            base = Some(t.p50);
+    for precision in [Precision::F32, Precision::Int8] {
+        let mut base = None;
+        for threads in [1usize, 2, 4] {
+            // mc small enough that `rows` splits across every thread count.
+            let exec =
+                KernelExec::new(KernelConfig { threads, kc: 256, mc: 16, precision });
+            let t = time_fn(cfg, || {
+                match precision {
+                    Precision::F32 => fp.matmul_bias(&x, rows, &bias, &exec, &mut out),
+                    Precision::Int8 => qp.matmul_bias(&x, rows, &bias, &exec, &mut out),
+                }
+                std::hint::black_box(&out);
+            });
+            if threads == 1 {
+                base = Some(t.p50);
+            }
+            let dispatch = if threads == 1 { "serial" } else { "pooled" };
+            let rel = base.map(|b| b / t.p50).unwrap_or(1.0);
+            scaling.row(vec![
+                precision.to_string(),
+                threads.to_string(),
+                dispatch.to_string(),
+                fmt_time(t.p50),
+                format!("{:.2}", flops / t.p50 / 1e9),
+                format!("{rel:.2}x"),
+            ]);
+            snap.thread_scaling.push(jobj(vec![
+                ("dataset", jstr(ds_name)),
+                ("shape", jstr("ffn up")),
+                ("n", Json::UInt(rows as u64)),
+                ("k", Json::UInt(h as u64)),
+                ("m", Json::UInt(ffn as u64)),
+                ("precision", jstr(precision.as_str())),
+                ("isa", jstr(active_isa())),
+                ("threads", Json::UInt(threads as u64)),
+                ("dispatch", jstr(dispatch)),
+                ("p50_s", Json::Num(t.p50)),
+                ("gflops", Json::Num(flops / t.p50 / 1e9)),
+                ("speedup_vs_1t", Json::Num(rel)),
+            ]));
         }
-        let rel = base.map(|b| format!("{:.2}x", b / t.p50)).unwrap_or_else(|| "-".into());
-        scaling.row(vec![
-            threads.to_string(),
-            fmt_time(t.p50),
-            format!("{:.2}", flops / t.p50 / 1e9),
-            rel,
-        ]);
     }
     scaling.print();
 
-    bench_dispatch(ds_name, &w1, h, ffn, cfg);
+    bench_dispatch(ds_name, &w1, h, ffn, cfg, snap);
     Ok(())
 }
 
@@ -182,7 +369,14 @@ fn bench_kernels(ds_name: &str, meta: &VariantMeta, cfg: &BenchConfig) -> anyhow
 /// GEMM, split at mc=16 so two lanes genuinely share the work. Serial vs
 /// per-call scoped spawns vs the persistent pool — the pooled line should
 /// sit at (or below) serial and clearly below scoped.
-fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchConfig) {
+fn bench_dispatch(
+    ds_name: &str,
+    w1: &[f32],
+    h: usize,
+    ffn: usize,
+    cfg: &BenchConfig,
+    snap: &mut Snapshot,
+) {
     const DISPATCH_ROWS: usize = 64; // batch=1 at a seq-64 bucket
     const DISPATCH_THREADS: usize = 2;
     let mut rng = Rng::new(0xD15F);
@@ -190,7 +384,8 @@ fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchCo
     let bias: Vec<f32> = (0..ffn).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
     let packed = PackedGemm::pack(w1, h, ffn);
     let mut out = vec![0f32; DISPATCH_ROWS * ffn];
-    let kcfg = KernelConfig { threads: DISPATCH_THREADS, kc: 256, mc: 16 };
+    let kcfg =
+        KernelConfig { threads: DISPATCH_THREADS, kc: 256, mc: 16, ..KernelConfig::default() };
     let serial_exec = KernelExec::new(kcfg.clone().with_threads(1));
     // Built once — the pool's workers are parked between calls, exactly
     // as an EngineWorker holds them for its lifetime.
@@ -199,10 +394,43 @@ fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchCo
     let mut table = Table::new(
         &format!(
             "native kernels — {ds_name}: dispatch on the small shape \
-             (batch=1, {DISPATCH_ROWS} rows x {h} x {ffn}, {DISPATCH_THREADS} threads)"
+             (batch=1, {DISPATCH_ROWS} rows x {h} x {ffn}, {DISPATCH_THREADS} threads, \
+             f32/{})",
+            active_isa()
         ),
         &["path", "p50", "alloc B/call", "spawns/call", "vs serial"],
     );
+
+    let mut dispatch_row = |table: &mut Table,
+                            snap: &mut Snapshot,
+                            label: &str,
+                            dispatch: &str,
+                            t: &Summary,
+                            bytes: u64,
+                            spawns: u64,
+                            serial_p50: f64| {
+        table.row(vec![
+            label.to_string(),
+            fmt_time(t.p50),
+            bytes.to_string(),
+            spawns.to_string(),
+            format!("{:.2}x", serial_p50 / t.p50),
+        ]);
+        snap.dispatch.push(jobj(vec![
+            ("dataset", jstr(ds_name)),
+            ("path", jstr(dispatch)),
+            ("precision", jstr("f32")),
+            ("isa", jstr(active_isa())),
+            (
+                "threads",
+                Json::UInt(if dispatch == "serial" { 1 } else { DISPATCH_THREADS as u64 }),
+            ),
+            ("p50_s", Json::Num(t.p50)),
+            ("alloc_bytes_per_call", Json::UInt(bytes)),
+            ("spawns_per_call", Json::UInt(spawns)),
+            ("vs_serial", Json::Num(serial_p50 / t.p50)),
+        ]));
+    };
 
     let serial = time_fn(cfg, || {
         packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &serial_exec, &mut out);
@@ -212,13 +440,11 @@ fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchCo
         packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &serial_exec, &mut out);
         std::hint::black_box(&out);
     });
-    table.row(vec![
-        "serial (1 thread)".into(),
-        fmt_time(serial.p50),
-        serial_bytes.to_string(),
-        serial_spawns.to_string(),
-        "1.00x".into(),
-    ]);
+    let serial_p50 = serial.p50;
+    dispatch_row(
+        &mut table, snap, "serial (1 thread)", "serial", &serial, serial_bytes, serial_spawns,
+        serial_p50,
+    );
 
     let scoped = time_fn(cfg, || {
         packed.matmul_bias_scoped(&x, DISPATCH_ROWS, &bias, &kcfg, &mut out);
@@ -228,13 +454,10 @@ fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchCo
         packed.matmul_bias_scoped(&x, DISPATCH_ROWS, &bias, &kcfg, &mut out);
         std::hint::black_box(&out);
     });
-    table.row(vec![
-        "scoped spawns (old)".into(),
-        fmt_time(scoped.p50),
-        scoped_bytes.to_string(),
-        scoped_spawns.to_string(),
-        format!("{:.2}x", serial.p50 / scoped.p50),
-    ]);
+    dispatch_row(
+        &mut table, snap, "scoped spawns (old)", "scoped", &scoped, scoped_bytes, scoped_spawns,
+        serial_p50,
+    );
 
     let pooled = time_fn(cfg, || {
         packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &pooled_exec, &mut out);
@@ -244,13 +467,10 @@ fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchCo
         packed.matmul_bias(&x, DISPATCH_ROWS, &bias, &pooled_exec, &mut out);
         std::hint::black_box(&out);
     });
-    table.row(vec![
-        "kernel pool (new)".into(),
-        fmt_time(pooled.p50),
-        pooled_bytes.to_string(),
-        pooled_spawns.to_string(),
-        format!("{:.2}x", serial.p50 / pooled.p50),
-    ]);
+    dispatch_row(
+        &mut table, snap, "kernel pool (new)", "pooled", &pooled, pooled_bytes, pooled_spawns,
+        serial_p50,
+    );
     table.print();
     println!(
         "small-shape dispatch: pooled spawns 0 threads/call vs scoped's \
@@ -258,9 +478,15 @@ fn bench_dispatch(ds_name: &str, w1: &[f32], h: usize, ffn: usize, cfg: &BenchCo
     );
 }
 
-/// bert vs power end-to-end on the native backend: metric, latency,
-/// speedup-vs-retention, measured word-vectors per layer, arena footprint.
-fn bench_end_to_end(ds_name: &str, ds: &powerbert::runtime::DatasetArtifacts, cfg: &BenchConfig) {
+/// bert vs power end-to-end on the native backend at both weight
+/// precisions: metric, latency, speedup-vs-retention, measured
+/// word-vectors per layer, arena footprint.
+fn bench_end_to_end(
+    ds_name: &str,
+    ds: &powerbert::runtime::DatasetArtifacts,
+    cfg: &BenchConfig,
+    snap: &mut Snapshot,
+) {
     let split = match TestSplit::load(&ds.test_npz()) {
         Ok(s) => s,
         Err(e) => {
@@ -268,65 +494,177 @@ fn bench_end_to_end(ds_name: &str, ds: &powerbert::runtime::DatasetArtifacts, cf
             return;
         }
     };
-    let mut engine = Engine::with_backend(BackendKind::Native).expect("native engine");
     let mut table = Table::new(
         &format!("native backend — {ds_name}: metric / latency / word-vectors per layer"),
-        &["variant", "metric", "batch", "p50", "speedup", "wv/layer (measured)", "arena peak"],
+        &[
+            "variant",
+            "precision/isa",
+            "metric",
+            "batch",
+            "p50",
+            "speedup",
+            "wv/layer (measured)",
+            "arena peak",
+        ],
     );
-    let mut bert_p50 = None;
-    for vname in ["bert", "power-default"] {
-        let Some(meta) = ds.variant(vname) else { continue };
-        let model = match engine.load(meta) {
-            Ok(m) => m,
-            Err(e) => {
-                eprintln!("  ({ds_name}/{vname} native load failed: {e:#})");
-                continue;
-            }
-        };
-        // Per-layer counts of one timed batch: snapshot the cumulative
-        // telemetry around a single infer.
-        let n = 8.min(split.n);
-        let seq = split.seq_len;
-        let before = model.layer_tokens().unwrap_or_default();
-        model
-            .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
-            .expect("infer");
-        let after = model.layer_tokens().unwrap_or_default();
-        let per_layer: Vec<u64> = after
-            .iter()
-            .zip(before.iter())
-            .map(|(a, b)| (a - b) / n as u64)
-            .collect();
+    for precision in [Precision::F32, Precision::Int8] {
+        let kernel = KernelConfig::default().with_precision(precision);
+        let mut engine = Engine::with_backend_config(BackendKind::Native, kernel)
+            .expect("native engine");
+        let mut bert_p50 = None;
+        for vname in ["bert", "power-default"] {
+            let Some(meta) = ds.variant(vname) else { continue };
+            let model = match engine.load(meta) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("  ({ds_name}/{vname} native load failed: {e:#})");
+                    continue;
+                }
+            };
+            // Per-layer counts of one timed batch: snapshot the cumulative
+            // telemetry around a single infer.
+            let n = 8.min(split.n);
+            let seq = split.seq_len;
+            let before = model.layer_tokens().unwrap_or_default();
+            model
+                .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+                .expect("infer");
+            let after = model.layer_tokens().unwrap_or_default();
+            let per_layer: Vec<u64> = after
+                .iter()
+                .zip(before.iter())
+                .map(|(a, b)| (a - b) / n as u64)
+                .collect();
 
-        let point = match measure(&mut engine, meta, &split, 32, cfg) {
-            Ok(p) => p,
-            Err(e) => {
-                eprintln!("  ({ds_name}/{vname} failed: {e:#})");
-                continue;
+            let point = match measure(&mut engine, meta, &split, 32, cfg) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("  ({ds_name}/{vname} failed: {e:#})");
+                    continue;
+                }
+            };
+            if vname == "bert" {
+                bert_p50 = Some(point.latency.p50);
             }
-        };
-        if vname == "bert" {
-            bert_p50 = Some(point.latency.p50);
+            let speedup = bert_p50
+                .map(|b| format!("{:.2}x", b / point.latency.p50))
+                .unwrap_or_else(|| "-".into());
+            let mem = model.memory_stats();
+            let (arena, tier) = mem
+                .map(|m| {
+                    let kib = m.arena_peak_bytes as f64 / 1024.0;
+                    (
+                        format!("{kib:.1} KiB / {} bucket(s)", m.arena_buckets),
+                        format!("{}/{}", m.precision, m.isa),
+                    )
+                })
+                .unwrap_or_else(|| ("-".into(), precision.to_string()));
+            table.row(vec![
+                vname.to_string(),
+                tier,
+                format!("{:.4}", point.metric),
+                point.batch.to_string(),
+                fmt_time(point.latency.p50),
+                speedup,
+                format!("{per_layer:?} (Σ {})", per_layer.iter().sum::<u64>()),
+                arena,
+            ]);
+            snap.end_to_end.push(jobj(vec![
+                ("dataset", jstr(ds_name)),
+                ("variant", jstr(vname)),
+                ("precision", jstr(precision.as_str())),
+                ("isa", jstr(active_isa())),
+                ("metric", Json::Num(point.metric)),
+                ("batch", Json::UInt(point.batch as u64)),
+                ("p50_s", Json::Num(point.latency.p50)),
+                ("p99_s", Json::Num(point.latency.p99)),
+                ("examples_per_sec", Json::Num(point.examples_per_sec)),
+                (
+                    "arena_peak_bytes",
+                    Json::UInt(mem.map(|m| m.arena_peak_bytes).unwrap_or(0)),
+                ),
+                (
+                    "arena_buckets",
+                    Json::UInt(mem.map(|m| m.arena_buckets).unwrap_or(0)),
+                ),
+                (
+                    "wv_per_layer",
+                    Json::Arr(per_layer.iter().map(|&v| Json::UInt(v)).collect()),
+                ),
+            ]));
         }
-        let speedup = bert_p50
-            .map(|b| format!("{:.2}x", b / point.latency.p50))
-            .unwrap_or_else(|| "-".into());
-        let arena = model
-            .memory_stats()
-            .map(|m| {
-                let kib = m.arena_peak_bytes as f64 / 1024.0;
-                format!("{kib:.1} KiB / {} bucket(s)", m.arena_buckets)
-            })
-            .unwrap_or_else(|| "-".into());
+    }
+    if !table.rows.is_empty() {
+        table.print();
+    }
+}
+
+/// Closed-loop serve latency through the in-process coordinator client:
+/// one coordinator (native backend, fixed power-default routing), one
+/// blocking client issuing single requests — the per-request p50/p99 a
+/// v1 caller would see, minus the TCP hop.
+fn bench_serve(registry: &Registry, cfg: &BenchConfig, snap: &mut Snapshot) {
+    if registry.datasets.is_empty() {
+        return;
+    }
+    let c = match Coordinator::start(Config {
+        policy: Policy::Fixed("power-default".into()),
+        batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+        workers: 1,
+        backend: BackendKind::Native,
+        ..Config::default()
+    }) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("SKIP serve bench: {e:#}");
+            return;
+        }
+    };
+    let client = c.client();
+    let vocab = client.tokenizer().vocab.clone();
+    let mut table = Table::new(
+        "native serve — closed-loop coordinator client (workers=1, power-default)",
+        &["dataset", "requests", "p50", "p99", "req/s"],
+    );
+    for ds_name in registry.datasets.keys() {
+        let mut gen = powerbert::workload::WorkloadGen::new(&vocab, 11);
+        let requests = (cfg.measure_iters * 2).max(40);
+        let mut latencies = Vec::with_capacity(requests);
+        let mut ok = true;
+        for i in 0..requests + cfg.warmup_iters {
+            let (text, _label) = gen.sentence(12);
+            let t0 = Instant::now();
+            if client
+                .classify(ds_name, Input::Text { a: text, b: None }, Sla::default())
+                .is_err()
+            {
+                ok = false;
+                break;
+            }
+            if i >= cfg.warmup_iters {
+                latencies.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        if !ok || latencies.is_empty() {
+            eprintln!("  (serve bench on {ds_name} failed)");
+            continue;
+        }
+        let s = Summary::of(&latencies);
         table.row(vec![
-            vname.to_string(),
-            format!("{:.4}", point.metric),
-            point.batch.to_string(),
-            fmt_time(point.latency.p50),
-            speedup,
-            format!("{per_layer:?} (Σ {})", per_layer.iter().sum::<u64>()),
-            arena,
+            ds_name.clone(),
+            latencies.len().to_string(),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            format!("{:.1}", 1.0 / s.p50),
         ]);
+        snap.serve.push(jobj(vec![
+            ("dataset", jstr(ds_name)),
+            ("variant", jstr("power-default")),
+            ("requests", Json::UInt(latencies.len() as u64)),
+            ("p50_s", Json::Num(s.p50)),
+            ("p99_s", Json::Num(s.p99)),
+            ("throughput_rps", Json::Num(1.0 / s.p50)),
+        ]));
     }
     if !table.rows.is_empty() {
         table.print();

@@ -132,6 +132,12 @@ pub struct ServerInfo {
     /// `auto`). `auto` resolves per variant at load time on the server, so
     /// it is reported as-is rather than as a guessed resolution.
     pub backend: String,
+    /// Native weight precision the workers pack at ("f32" / "int8"); empty
+    /// when the server predates the field.
+    pub precision: String,
+    /// Instruction set the server's kernels dispatch to ("scalar" /
+    /// "avx2+fma"); empty when the server predates the field.
+    pub isa: String,
     pub datasets: Vec<String>,
     pub variants: BTreeMap<String, Vec<VariantInfo>>,
     pub seq_buckets: Vec<usize>,
@@ -168,6 +174,8 @@ impl ServerInfo {
             proto,
             server: j.get("server").and_then(Json::as_str).unwrap_or("").to_string(),
             backend: j.get("backend").and_then(Json::as_str).unwrap_or("").to_string(),
+            precision: j.get("precision").and_then(Json::as_str).unwrap_or("").to_string(),
+            isa: j.get("isa").and_then(Json::as_str).unwrap_or("").to_string(),
             datasets,
             variants,
             seq_buckets: j
@@ -572,6 +580,7 @@ mod tests {
                 "variants":{"sst2":[{"variant":"bert","kind":"bert","metric":"accuracy",
                   "dev_metric":0.91,"seq_len":64,"num_classes":2,
                   "aggregate_word_vectors":768}]},
+                "precision":"int8","isa":"avx2+fma",
                 "seq_buckets":[16,32],"max_connections":256}"#,
         )
         .unwrap();
@@ -580,6 +589,8 @@ mod tests {
         assert_eq!(info.datasets, vec!["sst2".to_string()]);
         assert_eq!(info.seq_buckets, vec![16, 32]);
         assert_eq!(info.max_connections, 256);
+        assert_eq!(info.precision, "int8");
+        assert_eq!(info.isa, "avx2+fma");
         let vs = &info.variants["sst2"];
         assert_eq!(vs[0].variant, "bert");
         assert_eq!(vs[0].dev_metric, Some(0.91));

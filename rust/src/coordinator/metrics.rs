@@ -97,6 +97,12 @@ pub struct WorkerStats {
     pub pool_threads: u64,
     /// Parallel kernel jobs dispatched to the pool since worker start.
     pub pool_jobs: u64,
+    /// Weight precision this worker's models were packed at ("f32" /
+    /// "int8"); empty until the first memory snapshot arrives.
+    pub precision: &'static str,
+    /// Instruction set the worker's kernels dispatch to ("scalar" /
+    /// "avx2+fma"); empty until the first memory snapshot arrives.
+    pub isa: &'static str,
 }
 
 /// Process-wide metrics hub.
@@ -164,6 +170,12 @@ impl MetricsHub {
         s.arena_buckets = s.arena_buckets.max(mem.arena_buckets);
         s.pool_threads = mem.pool_threads;
         s.pool_jobs = s.pool_jobs.max(mem.pool_jobs);
+        if !mem.precision.is_empty() {
+            s.precision = mem.precision;
+        }
+        if !mem.isa.is_empty() {
+            s.isa = mem.isa;
+        }
     }
 
     pub fn record_request(&self, key: &str, queue_us: u64, total_us: u64) {
@@ -250,6 +262,8 @@ impl MetricsHub {
                 m.insert("arena_buckets".to_string(), Json::UInt(w.arena_buckets));
                 m.insert("pool_threads".to_string(), Json::UInt(w.pool_threads));
                 m.insert("pool_jobs".to_string(), Json::UInt(w.pool_jobs));
+                m.insert("precision".to_string(), Json::Str(w.precision.to_string()));
+                m.insert("isa".to_string(), Json::Str(w.isa.to_string()));
                 Json::Obj(m)
             })
             .collect();
@@ -287,7 +301,8 @@ impl MetricsHub {
             for (i, w) in workers.iter().enumerate() {
                 out.push_str(&format!(
                     "worker {i}: {} batches, {} rows, busy {:.1}% of uptime, \
-                     arena peak {:.1} KiB over {} bucket(s), pool {} lane(s) / {} jobs\n",
+                     arena peak {:.1} KiB over {} bucket(s), pool {} lane(s) / {} jobs, \
+                     {} @ {}\n",
                     w.batches,
                     w.rows,
                     100.0 * (w.busy_us as f64 / 1e6) / uptime,
@@ -295,6 +310,8 @@ impl MetricsHub {
                     w.arena_buckets,
                     w.pool_threads,
                     w.pool_jobs,
+                    if w.precision.is_empty() { "f32" } else { w.precision },
+                    if w.isa.is_empty() { "scalar" } else { w.isa },
                 ));
             }
         }
@@ -363,6 +380,8 @@ mod tests {
                 arena_buckets: 1,
                 pool_threads: 4,
                 pool_jobs: 10,
+                precision: "f32",
+                isa: "scalar",
             },
         );
         // A smaller later snapshot must not shrink the peak; pool jobs
@@ -374,6 +393,8 @@ mod tests {
                 arena_buckets: 3,
                 pool_threads: 4,
                 pool_jobs: 25,
+                precision: "f32",
+                isa: "scalar",
             },
         );
         let w = h.worker_snapshot();
@@ -381,11 +402,15 @@ mod tests {
         assert_eq!(w[0].arena_buckets, 3);
         assert_eq!(w[0].pool_threads, 4);
         assert_eq!(w[0].pool_jobs, 25);
+        assert_eq!(w[0].precision, "f32");
+        assert_eq!(w[0].isa, "scalar");
         // Surfaced both in the human report and the structured stats.
         h.record_worker(0, 1, 10);
         assert!(h.report().contains("pool 4 lane(s)"));
         let json = h.to_json().to_string();
         assert!(json.contains("arena_peak_bytes"), "stats json lacks arena gauge: {json}");
+        assert!(json.contains("precision"), "stats json lacks precision: {json}");
+        assert!(json.contains("isa"), "stats json lacks isa: {json}");
     }
 
     #[test]

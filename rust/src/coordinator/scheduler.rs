@@ -157,6 +157,7 @@ pub struct Client {
     seq_buckets: Arc<Vec<usize>>,
     next_id: Arc<AtomicU64>,
     backend: BackendKind,
+    kernel: KernelConfig,
 }
 
 impl Client {
@@ -294,6 +295,13 @@ impl Client {
         self.backend
     }
 
+    /// Kernel config every pool worker runs with — the `hello` frame
+    /// advertises its precision (and the detected ISA) so clients can see
+    /// which operating point serves them.
+    pub fn kernel(&self) -> &KernelConfig {
+        &self.kernel
+    }
+
     /// Configured seq buckets for length-aware batching (ascending; empty
     /// when bucketing is off).
     pub fn seq_buckets(&self) -> &[usize] {
@@ -391,6 +399,7 @@ impl Coordinator {
                 seq_buckets: Arc::new(seq_buckets),
                 next_id: Arc::new(AtomicU64::new(1)),
                 backend,
+                kernel: cfg.kernel.clone(),
             }),
             registry,
             front: Some(front),

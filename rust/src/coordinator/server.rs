@@ -470,6 +470,16 @@ fn hello_payload(client: &Client, info: &ConnInfo) -> Json {
         Json::Str(format!("powerbert/{}", env!("CARGO_PKG_VERSION"))),
     );
     m.insert("backend".to_string(), Json::Str(client.backend().to_string()));
+    // The configured weight precision and the ISA the kernels dispatch to
+    // on this host — the operating point the native workers serve at.
+    m.insert(
+        "precision".to_string(),
+        Json::Str(client.kernel().precision.to_string()),
+    );
+    m.insert(
+        "isa".to_string(),
+        Json::Str(crate::runtime::kernels::active_isa().to_string()),
+    );
     m.insert("datasets".to_string(), Json::Arr(datasets));
     m.insert("variants".to_string(), Json::Obj(variants));
     m.insert(

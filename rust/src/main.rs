@@ -12,7 +12,9 @@
 use std::path::PathBuf;
 
 use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Policy, Server};
-use powerbert::runtime::{default_root, BackendKind, Engine, KernelConfig, Registry, TestSplit};
+use powerbert::runtime::{
+    default_root, BackendKind, Engine, KernelConfig, Precision, Registry, TestSplit,
+};
 use powerbert::util::cli::Args;
 use powerbert::eval::Metric;
 
@@ -33,6 +35,7 @@ fn main() {
     .opt("kernel-threads", None, "serve/eval: native kernel threads per op, sizing each worker's persistent kernel pool (0 = one per core; default $POWERBERT_KERNEL_THREADS or 1)")
     .opt("kernel-kc", None, "serve/eval: native kernel depth-block size (default $POWERBERT_KERNEL_KC or 256)")
     .opt("kernel-mc", None, "serve/eval: native kernel row-block size (default $POWERBERT_KERNEL_MC or 64)")
+    .opt("precision", None, "serve/eval: native weight precision (f32 | int8; default $POWERBERT_KERNEL_PRECISION or f32)")
     .opt("workers", Some("1"), "serve: executor pool size (one backend instance each)")
     .opt("seq-buckets", None, "serve: comma-separated seq buckets for length-aware batching (e.g. 16,32,64)")
     .opt("max-connections", None, "serve: concurrent connection cap (default 256)")
@@ -78,7 +81,7 @@ fn parse_backend(parsed: &powerbert::util::cli::Parsed) -> Result<BackendKind, S
 
 /// Kernel tuning: explicit `--kernel-*` flags override `$POWERBERT_KERNEL_*`
 /// env vars, which override the built-in defaults.
-fn parse_kernel(parsed: &powerbert::util::cli::Parsed) -> KernelConfig {
+fn parse_kernel(parsed: &powerbert::util::cli::Parsed) -> Result<KernelConfig, String> {
     let mut k = KernelConfig::from_env();
     if let Some(t) = parsed.get_usize("kernel-threads") {
         k.threads = t;
@@ -89,7 +92,11 @@ fn parse_kernel(parsed: &powerbert::util::cli::Parsed) -> KernelConfig {
     if let Some(mc) = parsed.get_usize("kernel-mc") {
         k.mc = mc.max(1);
     }
-    k
+    if let Some(raw) = parsed.get("precision") {
+        k.precision = Precision::parse(raw)
+            .ok_or_else(|| format!("--precision: expected f32|int8, got {raw:?}"))?;
+    }
+    Ok(k)
 }
 
 fn parse_policy(s: &str) -> Policy {
@@ -105,6 +112,13 @@ fn parse_policy(s: &str) -> Policy {
 fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
     let backend = match parse_backend(parsed) {
         Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let kernel = match parse_kernel(parsed) {
+        Ok(k) => k,
         Err(e) => {
             eprintln!("{e}");
             return 2;
@@ -126,7 +140,7 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
         preload: parsed.has("preload"),
         workers: parsed.get_usize("workers").unwrap_or(1).max(1),
         backend,
-        kernel: parse_kernel(parsed),
+        kernel,
         seq_buckets: match (parsed.get("seq-buckets"), parsed.get_usize_list("seq-buckets")) {
             (Some(raw), None) if !raw.trim().is_empty() => {
                 eprintln!("--seq-buckets: expected comma-separated integers, got {raw:?}");
@@ -231,7 +245,14 @@ fn cmd_eval(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
             return 2;
         }
     };
-    let mut engine = match Engine::with_backend_config(backend, parse_kernel(parsed)) {
+    let kernel = match parse_kernel(parsed) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut engine = match Engine::with_backend_config(backend, kernel) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("backend {backend}: {e:#}");

@@ -46,6 +46,11 @@
 //! execution chunk plans ~330 KiB; a BERT-base-scale export at (8, 128)
 //! plans tens of MiB — either way a constant per worker per bucket,
 //! instead of per-layer churn.
+//!
+//! The formula is precision-independent: under `--precision int8` the
+//! weight panels are quantized **at pack time** inside `PackedLinear`
+//! (resident model bytes shrink ~4×) while activations and every scratch
+//! region stay f32, so the arena needs no i8 slabs and no plan change.
 
 use super::kernels::KernelConfig;
 

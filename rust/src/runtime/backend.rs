@@ -125,6 +125,12 @@ pub struct MemoryStats {
     pub pool_threads: u64,
     /// Parallel kernel jobs dispatched to the pool since worker start.
     pub pool_jobs: u64,
+    /// Weight precision the executor's panels were packed at ("f32" /
+    /// "int8"); empty when the backend does not report one.
+    pub precision: &'static str,
+    /// Instruction set the kernels dispatched to ("scalar" / "avx2+fma");
+    /// empty when the backend does not report one.
+    pub isa: &'static str,
 }
 
 /// One variant loaded on one backend worker: executes rectangular

@@ -36,6 +36,18 @@
 //! [`masked_attention_scoped`]: the dispatch-cost baseline for
 //! `benches/native.rs` and the bit-exactness oracle for
 //! `tests/prop_kernels.rs`.
+//!
+//! # ISA dispatch
+//!
+//! With the `simd` feature on AVX2/FMA hardware, the per-`(example, head)`
+//! task body swaps to an AVX2 variant of [`attend_one`]: the q·k score
+//! dot and the context `p · v` accumulation run 8 lanes wide, while the
+//! softmax max/exp/normalize row stays scalar — it is `O(n)` against the
+//! two `O(n·d)` loops, and keeping it scalar keeps the probability mass
+//! identical to the oracle's. Dispatch sits *inside* the task body (below
+//! the serial/pooled/scoped split), so all three drivers remain
+//! bit-identical to each other at any thread count, and the whole kernel
+//! tracks the scalar oracle within the documented 1e-5.
 
 use super::pool::Shards;
 use super::{task_ranges, KernelConfig, KernelExec};
@@ -336,6 +348,38 @@ fn attend_one(
     sig_part: &mut [f32],
     probs: &mut [f32],
 ) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_active() {
+        // SAFETY: `simd_active()` checked avx2+fma on this CPU.
+        unsafe {
+            attend_one_avx2(
+                q, k, v, mask, b, a, n, h, d, ctx_out, ctx_stride, ctx_off, sig_part, probs,
+            )
+        };
+        return;
+    }
+    attend_one_scalar(q, k, v, mask, b, a, n, h, d, ctx_out, ctx_stride, ctx_off, sig_part, probs);
+}
+
+/// Scalar task body — the correctness oracle the AVX2 variant is measured
+/// against (same loop nest, one lane at a time).
+#[allow(clippy::too_many_arguments)]
+fn attend_one_scalar(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    b: usize,
+    a: usize,
+    n: usize,
+    h: usize,
+    d: usize,
+    ctx_out: &mut [f32],
+    ctx_stride: usize,
+    ctx_off: usize,
+    sig_part: &mut [f32],
+    probs: &mut [f32],
+) {
     let scale = 1.0 / (d as f32).sqrt();
     let base = b * n;
     let off = a * d;
@@ -372,6 +416,93 @@ fn attend_one(
             sig_part[jj] += qmask * p;
             let vj = &v[(base + jj) * h + off..(base + jj) * h + off + d];
             for t in 0..d {
+                crow[t] += p * vj[t];
+            }
+        }
+    }
+}
+
+/// AVX2/FMA task body: 8-lane q·k dot (FMA + horizontal sum, scalar
+/// remainder past `d - d % 8`) and 8-lane `p · v` context accumulation;
+/// the softmax max/exp/normalize row is shared verbatim with the scalar
+/// oracle. See the module's "ISA dispatch" section for the tolerance
+/// contract.
+///
+/// # Safety
+/// Requires AVX2 + FMA (guard with [`super::simd_active`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn attend_one_avx2(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    b: usize,
+    a: usize,
+    n: usize,
+    h: usize,
+    d: usize,
+    ctx_out: &mut [f32],
+    ctx_stride: usize,
+    ctx_off: usize,
+    sig_part: &mut [f32],
+    probs: &mut [f32],
+) {
+    use super::gemm::simd::hsum_ps;
+    use std::arch::x86_64::*;
+
+    let scale = 1.0 / (d as f32).sqrt();
+    let base = b * n;
+    let off = a * d;
+    let emask = &mask[base..base + n];
+    let dv = d - d % 8;
+    for i in 0..n {
+        let qi = &q[(base + i) * h + off..(base + i) * h + off + d];
+        let mut maxv = f32::NEG_INFINITY;
+        for jj in 0..n {
+            let kj = &k[(base + jj) * h + off..(base + jj) * h + off + d];
+            let mut acc = _mm256_setzero_ps();
+            let mut t = 0;
+            while t < dv {
+                acc = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(qi.as_ptr().add(t)),
+                    _mm256_loadu_ps(kj.as_ptr().add(t)),
+                    acc,
+                );
+                t += 8;
+            }
+            let mut dot = hsum_ps(acc);
+            for t in dv..d {
+                dot += qi[t] * kj[t];
+            }
+            let logit = if emask[jj] > 0.0 { dot * scale } else { NEG_INF };
+            probs[jj] = logit;
+            if logit > maxv {
+                maxv = logit;
+            }
+        }
+        let mut denom = 0f32;
+        for p in probs.iter_mut() {
+            *p = (*p - maxv).exp();
+            denom += *p;
+        }
+        let inv = 1.0 / denom;
+        let qmask = emask[i];
+        let crow = &mut ctx_out[i * ctx_stride + ctx_off..i * ctx_stride + ctx_off + d];
+        for jj in 0..n {
+            let p = probs[jj] * inv;
+            sig_part[jj] += qmask * p;
+            let vj = &v[(base + jj) * h + off..(base + jj) * h + off + d];
+            let pv = _mm256_set1_ps(p);
+            let mut t = 0;
+            while t < dv {
+                let c = _mm256_loadu_ps(crow.as_ptr().add(t));
+                let vjv = _mm256_loadu_ps(vj.as_ptr().add(t));
+                _mm256_storeu_ps(crow.as_mut_ptr().add(t), _mm256_fmadd_ps(pv, vjv, c));
+                t += 8;
+            }
+            for t in dv..d {
                 crow[t] += p * vj[t];
             }
         }

@@ -50,6 +50,75 @@ pub mod attention;
 pub mod gemm;
 pub mod pool;
 
+/// Numeric precision of the packed weight panels. Activations, biases and
+/// LayerNorm parameters are always f32 — [`Int8`](Precision::Int8) selects
+/// per-output-channel symmetric weight quantization at pack time (model
+/// load), with the i8×f32 dot rescaled per channel in the kernel epilogue.
+/// See `docs/ARCHITECTURE.md` § "Precision & ISA dispatch" for the
+/// quantization scheme and the tolerance contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full-precision packed panels — the golden-parity reference (1e-4).
+    #[default]
+    F32,
+    /// Per-output-channel symmetric int8 weight panels
+    /// (`scale_c = max|w[:, c]| / 127`), f32 activations.
+    Int8,
+}
+
+impl Precision {
+    /// Parse a CLI/env spelling. Accepts `f32`/`fp32` and `int8`/`i8`.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(Precision::F32),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling, as reported by `stats`/`hello` and the bench
+    /// tables.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Whether the vectorized (AVX2 + FMA) inner kernels are compiled in
+/// *and* supported by this CPU. `false` whenever the `simd` cargo feature
+/// is off, the target is not x86_64, or the CPU lacks AVX2/FMA — every
+/// kernel then runs the scalar path, which stays the correctness oracle.
+#[inline]
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// The instruction set the kernel inner loops dispatch to, as reported by
+/// `stats`/`hello` and the bench tables: `"avx2+fma"` when
+/// [`simd_active`], else `"scalar"`.
+pub fn active_isa() -> &'static str {
+    if simd_active() {
+        "avx2+fma"
+    } else {
+        "scalar"
+    }
+}
+
 /// Tuning knobs for the native microkernels, threaded from the CLI /
 /// coordinator [`Config`](crate::coordinator::Config) down to every kernel
 /// call. The defaults are safe on any machine; none of the knobs affect
@@ -76,11 +145,16 @@ pub struct KernelConfig {
     /// Row block: rows of `x` (the GEMM's `n` dimension) per parallel
     /// task, i.e. the granularity the GEMM splits work across threads at.
     pub mc: usize,
+    /// Weight-panel precision ([`Precision::F32`] default). Unlike the
+    /// blocking knobs this one **does** change results — within the
+    /// documented int8 tolerance — and it takes effect at model load
+    /// (panels are quantized while packing), not per call.
+    pub precision: Precision,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        KernelConfig { threads: 1, kc: 256, mc: 64 }
+        KernelConfig { threads: 1, kc: 256, mc: 64, precision: Precision::F32 }
     }
 }
 
@@ -101,12 +175,24 @@ impl KernelConfig {
         if let Some(mc) = var("POWERBERT_KERNEL_MC") {
             c.mc = mc.max(1);
         }
+        if let Some(p) = std::env::var("POWERBERT_KERNEL_PRECISION")
+            .ok()
+            .and_then(|v| Precision::parse(&v))
+        {
+            c.precision = p;
+        }
         c
     }
 
     /// Explicit thread count, for tests and benches.
     pub fn with_threads(mut self, threads: usize) -> KernelConfig {
         self.threads = threads;
+        self
+    }
+
+    /// Explicit weight-panel precision, for tests and benches.
+    pub fn with_precision(mut self, precision: Precision) -> KernelConfig {
+        self.precision = precision;
         self
     }
 
@@ -283,6 +369,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn precision_parses_and_reports() {
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("FP32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("I8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::Int8.to_string(), "int8");
+        assert_eq!(KernelConfig::default().precision, Precision::F32);
+        // Whatever the build/CPU, the reported ISA must be one of the two
+        // dispatchable kernels, and it must agree with `simd_active`.
+        assert_eq!(active_isa(), if simd_active() { "avx2+fma" } else { "scalar" });
     }
 
     #[test]

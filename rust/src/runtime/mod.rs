@@ -30,6 +30,6 @@ pub use backend::{
     BackendKind, CellExecutor, CellPlan, ExecOutput, LoadedModel, Logits, MemoryStats,
 };
 pub use engine::{ArtifactStore, Engine, EngineWorker, ModelArtifact, TestSplit};
-pub use kernels::{KernelConfig, KernelExec};
+pub use kernels::{active_isa, simd_active, KernelConfig, KernelExec, Precision};
 pub use native::{NativeBackend, NativeModel};
 pub use pjrt::PjrtBackend;

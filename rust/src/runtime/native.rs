@@ -57,8 +57,9 @@ use super::arena::{ArenaDims, ArenaPlan, ForwardArena};
 use super::backend::{CellExecutor, CellPlan, ExecOutput, LoadedModel, MemoryStats};
 use super::engine::ModelArtifact;
 use super::kernels::{
+    active_isa,
     attention::{masked_attention, AttnScratch},
-    gemm::PackedGemm,
+    gemm::PackedLinear,
     layer_norm, KernelConfig, KernelExec,
 };
 use crate::tokenizer::PAD_ID;
@@ -161,19 +162,19 @@ impl NativeBackend {
 /// One encoder layer's weights: projections packed for the blocked GEMM,
 /// biases and LayerNorm parameters raw.
 struct LayerWeights {
-    wq: PackedGemm,
+    wq: PackedLinear,
     bq: Vec<f32>,
-    wk: PackedGemm,
+    wk: PackedLinear,
     bk: Vec<f32>,
-    wv: PackedGemm,
+    wv: PackedLinear,
     bv: Vec<f32>,
-    wo: PackedGemm,
+    wo: PackedLinear,
     bo: Vec<f32>,
     ln1_g: Vec<f32>,
     ln1_b: Vec<f32>,
-    w1: PackedGemm,
+    w1: PackedLinear,
     b1: Vec<f32>,
-    w2: PackedGemm,
+    w2: PackedLinear,
     b2: Vec<f32>,
     ln2_g: Vec<f32>,
     ln2_b: Vec<f32>,
@@ -200,9 +201,9 @@ pub struct NativeModel {
     layers: Vec<LayerWeights>,
     final_g: Vec<f32>,
     final_b: Vec<f32>,
-    pooler_w: PackedGemm,
+    pooler_w: PackedLinear,
     pooler_b: Vec<f32>,
-    head_w: PackedGemm,
+    head_w: PackedLinear,
     head_b: Vec<f32>,
     /// Word-vectors processed per encoder (FFN width after extraction),
     /// accumulated across every executed row.
@@ -227,6 +228,9 @@ impl NativeModel {
         let meta = &art.meta;
         let hidden = meta.hidden_size;
         let heads = meta.num_heads;
+        // Weight precision is fixed at pack time: panels are quantized
+        // here (or kept f32); there is no per-call precision switch.
+        let precision = exec.config().precision;
         if hidden == 0 || heads == 0 {
             bail!(
                 "meta.json lacks hidden_size/num_heads (re-export with a current \
@@ -292,9 +296,10 @@ impl NativeModel {
                 expect(&name, &dims, want)?;
                 Ok(data)
             };
-            // Square [h, h] projection, packed for the blocked kernel.
-            let proj = |suffix: &str| -> Result<PackedGemm> {
-                Ok(PackedGemm::pack(&lw(suffix, &[hidden, hidden])?, hidden, hidden))
+            // Square [h, h] projection, packed (and, under `--precision
+            // int8`, per-channel quantized) for the blocked kernel.
+            let proj = |suffix: &str| -> Result<PackedLinear> {
+                Ok(PackedLinear::pack(&lw(suffix, &[hidden, hidden])?, hidden, hidden, precision))
             };
             let (w1_dims, w1) = w(&format!("layers/{jj}/w1"))?;
             if w1_dims.len() != 2 || w1_dims[0] != hidden {
@@ -312,9 +317,9 @@ impl NativeModel {
                 bo: lw("bo", &[hidden])?,
                 ln1_g: lw("ln1_g", &[hidden])?,
                 ln1_b: lw("ln1_b", &[hidden])?,
-                w1: PackedGemm::pack(&w1, hidden, ffn_size),
+                w1: PackedLinear::pack(&w1, hidden, ffn_size, precision),
                 b1: lw("b1", &[ffn_size])?,
-                w2: PackedGemm::pack(&lw("w2", &[ffn_size, hidden])?, ffn_size, hidden),
+                w2: PackedLinear::pack(&lw("w2", &[ffn_size, hidden])?, ffn_size, hidden, precision),
                 b2: lw("b2", &[hidden])?,
                 ln2_g: lw("ln2_g", &[hidden])?,
                 ln2_b: lw("ln2_b", &[hidden])?,
@@ -360,9 +365,9 @@ impl NativeModel {
             layers,
             final_g,
             final_b,
-            pooler_w: PackedGemm::pack(&pooler_w, hidden, hidden),
+            pooler_w: PackedLinear::pack(&pooler_w, hidden, hidden, precision),
             pooler_b,
-            head_w: PackedGemm::pack(&head_w, hidden, num_classes),
+            head_w: PackedLinear::pack(&head_w, hidden, num_classes, precision),
             head_b,
             layer_tokens: (0..n_layers).map(|_| AtomicU64::new(0)).collect(),
             arenas: Mutex::new(HashMap::new()),
@@ -710,6 +715,8 @@ impl CellExecutor for NativeModel {
             arena_buckets: self.arenas_planned.load(Ordering::Relaxed),
             pool_threads: self.exec.lanes() as u64,
             pool_jobs: self.exec.pool().jobs(),
+            precision: self.exec.config().precision.as_str(),
+            isa: active_isa(),
         })
     }
 }

@@ -35,8 +35,8 @@ fn forward_batch_is_allocation_free_after_warmup() {
     // (no elimination) and power-default (extract layers + in-place
     // compaction) variants. Every combination must go quiet after warmup.
     for (label, kernel) in [
-        ("serial", KernelConfig { threads: 1, kc: 256, mc: 64 }),
-        ("pooled x2", KernelConfig { threads: 2, kc: 256, mc: 4 }),
+        ("serial", KernelConfig { threads: 1, kc: 256, mc: 64, ..KernelConfig::default() }),
+        ("pooled x2", KernelConfig { threads: 2, kc: 256, mc: 4, ..KernelConfig::default() }),
     ] {
         let exec = Arc::new(KernelExec::new(kernel));
         for vname in ["bert", "power-default"] {

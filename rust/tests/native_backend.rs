@@ -9,7 +9,9 @@ use std::time::Duration;
 
 use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Sla};
 use powerbert::eval::Metric;
-use powerbert::runtime::{default_root, BackendKind, Engine, KernelConfig, Registry, TestSplit};
+use powerbert::runtime::{
+    default_root, BackendKind, Engine, KernelConfig, Precision, Registry, TestSplit,
+};
 use powerbert::testutil::{artifacts_available, prop::forall};
 use powerbert::tokenizer::{CLS_ID, PAD_ID, SEP_ID};
 use powerbert::util::npz;
@@ -35,7 +37,7 @@ fn golden_logit_parity() {
     let Some(reg) = registry() else { return };
     let mut checked = 0;
     for threads in [1usize, 2, 4] {
-        let kernel = KernelConfig { threads, kc: 256, mc: 16 };
+        let kernel = KernelConfig { threads, kc: 256, mc: 16, ..KernelConfig::default() };
         for ds in reg.datasets.values() {
             let golden_path = ds.dir.join("golden.npz");
             if !golden_path.exists() {
@@ -80,6 +82,103 @@ fn golden_logit_parity() {
                 );
                 checked += 1;
             }
+        }
+    }
+    assert!(checked > 0, "no golden fixtures — run `python -m compile.golden`");
+}
+
+/// Int8 parity contract: with every projection's weights quantized to
+/// per-output-channel symmetric int8 (`--precision int8`), the logits stay
+/// within 5e-3 of the python f32 golden (measured drift on the committed
+/// bundles is ~2e-4 — the 5e-3 gate leaves headroom for future bundles
+/// with wider weight columns), argmax decisions match the f32 path, and
+/// the kept-token traces are **identical** — elimination ranks by
+/// significance margins far larger than the quantization noise.
+#[test]
+fn int8_golden_parity_and_identical_elimination_traces() {
+    let Some(reg) = registry() else { return };
+    let int8_cfg = KernelConfig::default().with_precision(Precision::Int8);
+    let mut checked = 0;
+    for ds in reg.datasets.values() {
+        let golden_path = ds.dir.join("golden.npz");
+        if !golden_path.exists() {
+            continue;
+        }
+        let entries = npz::read_npz(&golden_path).expect("golden.npz");
+        let split = TestSplit::load(&ds.test_npz()).expect("test split");
+        let seq = split.seq_len;
+        let mut engine = Engine::with_backend_config(BackendKind::Native, int8_cfg.clone())
+            .expect("int8 engine");
+        let mut f32_engine = native_engine();
+        for e in &entries {
+            let Some(variant) = e.name.strip_suffix("/logits") else { continue };
+            let Some(meta) = ds.variant(variant) else { continue };
+            let nc = e.dims[1];
+            let golden = e.data.to_f32();
+            let model = engine.load(meta).expect("int8 load");
+            let mut max_diff = 0f32;
+            let mut argmax_flips = 0usize;
+            let mut i = 0;
+            while i < split.n {
+                let m = 32.min(split.n - i);
+                let l = model
+                    .infer(
+                        &split.tokens[i * seq..(i + m) * seq],
+                        &split.segments[i * seq..(i + m) * seq],
+                        m,
+                    )
+                    .expect("int8 infer");
+                for r in 0..m {
+                    let got = &l.values[r * nc..(r + 1) * nc];
+                    let want = &golden[(i + r) * nc..(i + r + 1) * nc];
+                    for (a, b) in got.iter().zip(want) {
+                        max_diff = max_diff.max((a - b).abs());
+                    }
+                    let am = |v: &[f32]| {
+                        v.iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .map(|(i, _)| i)
+                    };
+                    if am(got) != am(want) {
+                        argmax_flips += 1;
+                    }
+                }
+                i += m;
+            }
+            assert!(
+                max_diff < 5e-3,
+                "{}/{variant}: int8 logits deviate from the f32 golden by {max_diff}",
+                ds.name
+            );
+            assert_eq!(argmax_flips, 0, "{}/{variant}: int8 flipped decisions", ds.name);
+
+            // Elimination must be precision-invariant: the int8 model keeps
+            // exactly the same token positions as the f32 model.
+            if meta.retention.is_some() {
+                let f32_model = f32_engine.load(meta).expect("f32 load");
+                let rows = 8.min(split.n);
+                let (_, kept_q) = model
+                    .infer_with_trace(
+                        &split.tokens[..rows * seq],
+                        &split.segments[..rows * seq],
+                        rows,
+                    )
+                    .expect("int8 trace");
+                let (_, kept_f) = f32_model
+                    .infer_with_trace(
+                        &split.tokens[..rows * seq],
+                        &split.segments[..rows * seq],
+                        rows,
+                    )
+                    .expect("f32 trace");
+                assert_eq!(
+                    kept_q, kept_f,
+                    "{}/{variant}: int8 changed the kept-token trace",
+                    ds.name
+                );
+            }
+            checked += 1;
         }
     }
     assert!(checked > 0, "no golden fixtures — run `python -m compile.golden`");
@@ -252,7 +351,7 @@ fn native_classifies_test_split_end_to_end() {
 fn arena_and_pool_reuse_is_deterministic_across_buckets_and_variants() {
     let Some(reg) = registry() else { return };
     let Some(ds) = reg.dataset("sst2") else { return };
-    let kernel = KernelConfig { threads: 2, kc: 256, mc: 4 };
+    let kernel = KernelConfig { threads: 2, kc: 256, mc: 4, ..KernelConfig::default() };
     let split = TestSplit::load(&ds.test_npz()).expect("split");
     let seq = split.seq_len;
     let variants = ["bert", "power-default"];

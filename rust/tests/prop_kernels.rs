@@ -10,7 +10,7 @@
 use powerbert::runtime::kernels::attention::{
     masked_attention, masked_attention_scoped, AttnScratchBuf,
 };
-use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm};
+use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm, PackedGemmI8};
 use powerbert::runtime::kernels::{gelu, KernelConfig, KernelExec};
 use powerbert::testutil::prop::forall;
 use powerbert::util::prng::Rng;
@@ -26,6 +26,7 @@ fn rand_cfg(rng: &mut Rng, k: usize) -> KernelConfig {
         threads: 1 + rng.below(4) as usize,
         kc: 1 + rng.below(k as u64 + 7) as usize,
         mc: 1 + rng.below(9) as usize,
+        ..KernelConfig::default()
     }
 }
 
@@ -120,10 +121,10 @@ fn gemm_pooled_scoped_and_serial_are_bit_identical() {
         let mc = 1 + rng.below(9) as usize;
         let packed = PackedGemm::pack(&w, k, m);
         let mut serial = vec![0f32; n * m];
-        let serial_exec = KernelExec::new(KernelConfig { threads: 1, kc, mc });
+        let serial_exec = KernelExec::new(KernelConfig { threads: 1, kc, mc, ..KernelConfig::default() });
         packed.matmul_bias(&x, n, &b, &serial_exec, &mut serial);
         for threads in [2usize, 4] {
-            let cfg = KernelConfig { threads, kc, mc };
+            let cfg = KernelConfig { threads, kc, mc, ..KernelConfig::default() };
             let mut pooled = vec![0f32; n * m];
             packed.matmul_bias(&x, n, &b, &KernelExec::new(cfg.clone()), &mut pooled);
             assert_eq!(serial, pooled, "pooled: threads={threads} kc={kc} mc={mc}");
@@ -289,4 +290,180 @@ fn attention_scratch_reuse_leaks_nothing_across_shapes() {
             assert_eq!(sig_shared, sig_fresh, "reused scratch leaked into sig");
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Precision properties: the int8 weight path (per-output-channel symmetric
+// quantization) against the f32 path, on ragged shapes with remainder
+// rows/columns relative to the MR=4 / NR=8 tiles.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn int8_tracks_f32_within_per_channel_quantization_error() {
+    // Per-channel symmetric quantization rounds each weight to the nearest
+    // multiple of s_c = maxabs_c / 127, so every quantized weight is off by
+    // at most s_c/2 and row i / column c of the output drifts by at most
+    // 0.5 * s_c * sum_kk |x[i,kk]|. The property checks that analytic bound
+    // (plus f32 accumulation slack) — not a hand-tuned epsilon.
+    forall("int8 gemm within quantization bound", 48, |rng, size| {
+        let n = 1 + rng.below(size as u64 + 4) as usize;
+        let k = 1 + rng.below(48) as usize;
+        let m = 1 + rng.below(48) as usize;
+        let x = rand_f32(rng, n * k);
+        let w = rand_f32(rng, k * m);
+        let b = rand_f32(rng, m);
+        let exec = KernelExec::new(rand_cfg(rng, k));
+        let q = PackedGemmI8::pack(&w, k, m);
+        let mut qout = vec![0f32; n * m];
+        q.matmul_bias(&x, n, &b, &exec, &mut qout);
+        let want = matmul_bias_ref(&x, n, k, &w, m, &b);
+        // Recompute the per-column scale exactly as pack() derives it.
+        let scale: Vec<f32> = (0..m)
+            .map(|c| {
+                let maxabs = (0..k).map(|kk| w[kk * m + c].abs()).fold(0f32, f32::max);
+                if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 }
+            })
+            .collect();
+        for i in 0..n {
+            let xsum: f32 = x[i * k..(i + 1) * k].iter().map(|v| v.abs()).sum();
+            for c in 0..m {
+                let got = qout[i * m + c];
+                let f = want[i * m + c];
+                let bound = 0.5 * scale[c] * xsum + 1e-4 * (1.0 + f.abs());
+                assert!(
+                    (got - f).abs() <= bound,
+                    "({n},{k},{m}) row {i} col {c}: int8 {got} vs f32 {f} (bound {bound})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn int8_with_power_of_two_scales_is_bit_exact_and_thread_deterministic() {
+    // When every weight is an exact multiple of 2^-7 and each column's
+    // maxabs is pinned to 127 * 2^-7, quantization is lossless and the
+    // per-column rescale is a power of two — which commutes exactly with
+    // f32 rounding. The int8 path must then match the f32 path bit-for-bit
+    // on every dispatch mode and thread count, which also pins down the
+    // int8 writeback order (acc * scale + base, no re-association).
+    forall("int8 pow2 scales == f32 bitwise", 32, |rng, size| {
+        let n = 1 + rng.below(size as u64 + 4) as usize;
+        let k = 1 + rng.below(33) as usize;
+        let m = 1 + rng.below(33) as usize;
+        const S: f32 = 1.0 / 128.0;
+        let x = rand_f32(rng, n * k);
+        let b = rand_f32(rng, m);
+        let mut w = vec![0f32; k * m];
+        for kk in 0..k {
+            for c in 0..m {
+                let q = if kk == 0 {
+                    if c % 2 == 0 { 127 } else { -127 }
+                } else {
+                    (rng.below(255) as i64 - 127) as i32
+                };
+                w[kk * m + c] = q as f32 * S;
+            }
+        }
+        let fp = PackedGemm::pack(&w, k, m);
+        let qp = PackedGemmI8::pack(&w, k, m);
+        let kc = 1 + rng.below(k as u64 + 7) as usize;
+        let mc = 1 + rng.below(9) as usize;
+        let mut fout = vec![0f32; n * m];
+        let mut qout = vec![0f32; n * m];
+        for threads in [1usize, 2, 5] {
+            let exec = KernelExec::new(KernelConfig {
+                threads,
+                kc,
+                mc,
+                ..KernelConfig::default()
+            });
+            fout.fill(0.0);
+            qout.fill(0.0);
+            fp.matmul_bias_gelu(&x, n, &b, &exec, &mut fout);
+            qp.matmul_bias_gelu(&x, n, &b, &exec, &mut qout);
+            assert_eq!(
+                fout, qout,
+                "({n},{k},{m}) threads={threads} kc={kc} mc={mc}: int8 != f32"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// SIMD properties — compiled only under `--features simd` and skipped at
+// runtime on machines without AVX2+FMA. The dispatched kernel must track
+// the scalar oracle within 1e-5 and stay bit-deterministic across thread
+// counts (the ISA dispatch sits *below* the serial/pooled split, so
+// raggedness in the last row/column tile is handled identically per task).
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd_props {
+    use super::*;
+    use powerbert::runtime::simd_active;
+
+    #[test]
+    fn simd_matches_scalar_oracle_on_ragged_shapes() {
+        if !simd_active() {
+            return;
+        }
+        forall("simd gemm == scalar oracle", 48, |rng, size| {
+            let n = 1 + rng.below(size as u64 + 4) as usize;
+            let k = 1 + rng.below(64) as usize;
+            let m = 1 + rng.below(64) as usize;
+            let x = rand_f32(rng, n * k);
+            let w = rand_f32(rng, k * m);
+            let b = rand_f32(rng, m);
+            let cfg = rand_cfg(rng, k);
+            let packed = PackedGemm::pack(&w, k, m);
+            let mut simd = vec![0f32; n * m];
+            packed.matmul_bias(&x, n, &b, &KernelExec::new(cfg.clone()), &mut simd);
+            let mut scalar = vec![0f32; n * m];
+            packed.matmul_bias_scalar(&x, n, &b, cfg.kc, &mut scalar);
+            for (i, (got, want)) in simd.iter().zip(scalar.iter()).enumerate() {
+                assert!(
+                    (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                    "({n},{k},{m}) elem {i}: simd {got} vs scalar {want}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn simd_path_is_thread_deterministic() {
+        if !simd_active() {
+            return;
+        }
+        forall("simd pooled == serial bitwise", 32, |rng, size| {
+            let n = 1 + rng.below(size as u64 + 8) as usize;
+            let k = 1 + rng.below(48) as usize;
+            let m = 1 + rng.below(48) as usize;
+            let x = rand_f32(rng, n * k);
+            let w = rand_f32(rng, k * m);
+            let b = rand_f32(rng, m);
+            let kc = 1 + rng.below(k as u64 + 7) as usize;
+            let mc = 1 + rng.below(9) as usize;
+            let packed = PackedGemm::pack(&w, k, m);
+            let mut serial = vec![0f32; n * m];
+            let serial_exec = KernelExec::new(KernelConfig {
+                threads: 1,
+                kc,
+                mc,
+                ..KernelConfig::default()
+            });
+            packed.matmul_bias_gelu(&x, n, &b, &serial_exec, &mut serial);
+            for threads in [2usize, 4, 7] {
+                let exec = KernelExec::new(KernelConfig {
+                    threads,
+                    kc,
+                    mc,
+                    ..KernelConfig::default()
+                });
+                let mut pooled = vec![0f32; n * m];
+                packed.matmul_bias_gelu(&x, n, &b, &exec, &mut pooled);
+                assert_eq!(serial, pooled, "threads={threads} kc={kc} mc={mc}");
+            }
+        });
+    }
 }
