@@ -1,0 +1,258 @@
+//! Perf-regression diff between two `BENCH_native.json` snapshots: the
+//! committed baseline vs a freshly generated one. Used by the CI
+//! `perf-diff` job to fail a PR that quietly slows a named section down.
+//!
+//! Default mode compares only **machine-independent ratios** — numbers
+//! that survive a hardware change between the baseline's machine and the
+//! runner:
+//!
+//!   kernels         naive_p50 / row_p50 (speedup over the naive GEMM,
+//!                   recomputed within each file from its own naive rows)
+//!   dispatch        vs_serial, plus the deterministic `chosen` path
+//!   thread_scaling  speedup_vs_1t
+//!
+//! `--absolute` additionally compares raw p50 seconds in the `serve`,
+//! `end_to_end` and `serve_sweep` sections — only meaningful when both
+//! snapshots come from the same hardware.
+//!
+//! A section row regresses when its metric worsens by more than
+//! `--threshold` percent (default 25). Rows present in only one snapshot
+//! are reported but never fail the diff (sections grow across PRs).
+//! Exit code: 0 clean, 1 regressions found, 2 usage/parse errors.
+//!
+//!   cargo run --release --example bench_diff -- \
+//!       --old BENCH_native.json --new /tmp/BENCH_fresh.json
+
+use std::collections::BTreeMap;
+
+use powerbert::util::cli::Args;
+use powerbert::util::json::Json;
+
+/// One comparable row: identity key -> metric value.
+type Rows = BTreeMap<String, f64>;
+
+fn load(path: &str) -> Json {
+    match Json::parse_file(std::path::Path::new(path)) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn arr<'a>(root: &'a Json, section: &str) -> &'a [Json] {
+    root.get(section).and_then(Json::as_arr).unwrap_or(&[])
+}
+
+fn s<'a>(row: &'a Json, key: &str) -> &'a str {
+    row.get(key).and_then(Json::as_str).unwrap_or("?")
+}
+
+fn f(row: &Json, key: &str) -> Option<f64> {
+    row.get(key).and_then(Json::as_f64)
+}
+
+/// kernels section: per (dataset, shape, precision) the naive row's p50
+/// is the in-file baseline; every other row's metric is its speedup over
+/// that. Higher is better.
+fn kernel_ratios(root: &Json) -> Rows {
+    let rows = arr(root, "kernels");
+    let mut naive = BTreeMap::new();
+    for r in rows {
+        if s(r, "path") == "naive" {
+            if let Some(p50) = f(r, "p50_s") {
+                naive.insert(format!("{}/{}", s(r, "dataset"), s(r, "shape")), p50);
+            }
+        }
+    }
+    let mut out = Rows::new();
+    for r in rows {
+        if s(r, "path") == "naive" {
+            continue;
+        }
+        let base = naive.get(&format!("{}/{}", s(r, "dataset"), s(r, "shape")));
+        if let (Some(base), Some(p50)) = (base, f(r, "p50_s")) {
+            let key = format!(
+                "kernels {}/{} {} [{}/{}]",
+                s(r, "dataset"),
+                s(r, "shape"),
+                s(r, "path"),
+                s(r, "dispatch"),
+                s(r, "precision"),
+            );
+            out.insert(key, base / p50.max(1e-12));
+        }
+    }
+    out
+}
+
+/// dispatch section: vs_serial per (dataset, path). Higher is better.
+fn dispatch_ratios(root: &Json) -> Rows {
+    let mut out = Rows::new();
+    for r in arr(root, "dispatch") {
+        if let Some(v) = f(r, "vs_serial") {
+            out.insert(format!("dispatch {}/{}", s(r, "dataset"), s(r, "path")), v);
+        }
+    }
+    out
+}
+
+/// dispatch `chosen` path per (dataset, path) — deterministic given the
+/// shape and the default floors, so any mismatch is a semantic change,
+/// not noise.
+fn dispatch_chosen(root: &Json) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    for r in arr(root, "dispatch") {
+        if let Some(c) = r.get("chosen").and_then(Json::as_str) {
+            out.insert(format!("{}/{}", s(r, "dataset"), s(r, "path")), c.to_string());
+        }
+    }
+    out
+}
+
+/// thread_scaling: speedup_vs_1t per (dataset, precision, threads).
+/// Higher is better.
+fn scaling_ratios(root: &Json) -> Rows {
+    let mut out = Rows::new();
+    for r in arr(root, "thread_scaling") {
+        let threads = f(r, "threads").unwrap_or(0.0) as u64;
+        if let Some(v) = f(r, "speedup_vs_1t") {
+            out.insert(
+                format!(
+                    "thread_scaling {}/{}@{}t",
+                    s(r, "dataset"),
+                    s(r, "precision"),
+                    threads
+                ),
+                v,
+            );
+        }
+    }
+    out
+}
+
+/// Absolute p50 seconds of a section, keyed by the given identity fields.
+/// Lower is better.
+fn absolute_p50(root: &Json, section: &str, keys: &[&str]) -> Rows {
+    let mut out = Rows::new();
+    for r in arr(root, section) {
+        let id: Vec<String> = keys
+            .iter()
+            .map(|k| {
+                r.get(k)
+                    .map(|v| match v {
+                        Json::Str(s) => s.clone(),
+                        other => other.to_string(),
+                    })
+                    .unwrap_or_else(|| "?".into())
+            })
+            .collect();
+        if let Some(v) = f(r, "p50_s") {
+            out.insert(format!("{section} {}", id.join("/")), v);
+        }
+    }
+    out
+}
+
+/// Compare one section. `higher_is_better` flips the regression
+/// direction. Returns the number of regressions.
+fn compare(old: &Rows, new: &Rows, threshold_pct: f64, higher_is_better: bool) -> usize {
+    let mut regressions = 0;
+    for (key, old_v) in old {
+        let Some(new_v) = new.get(key) else {
+            println!("  ~ {key}: only in baseline (skipped)");
+            continue;
+        };
+        let change =
+            if higher_is_better { old_v / new_v.max(1e-12) } else { new_v / old_v.max(1e-12) };
+        let worse_pct = (change - 1.0) * 100.0;
+        if worse_pct > threshold_pct {
+            println!("  ✗ {key}: {old_v:.4} -> {new_v:.4} ({worse_pct:+.0}% worse)");
+            regressions += 1;
+        } else {
+            println!("  ✓ {key}: {old_v:.4} -> {new_v:.4} ({worse_pct:+.0}%)");
+        }
+    }
+    for key in new.keys() {
+        if !old.contains_key(key) {
+            println!("  + {key}: new row (no baseline)");
+        }
+    }
+    regressions
+}
+
+fn main() {
+    let args = Args::new("bench_diff", "perf-regression diff between two bench snapshots")
+        .opt("old", Some("BENCH_native.json"), "baseline snapshot (the committed one)")
+        .opt("new", None, "freshly generated snapshot to check")
+        .opt("threshold", Some("25"), "percent worsening that fails a row")
+        .flag("absolute", "also compare raw p50 seconds (same-hardware snapshots only)")
+        .parse()
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2)
+        });
+    let old_path = args.get("old").unwrap_or("BENCH_native.json").to_string();
+    let Some(new_path) = args.get("new").map(String::from) else {
+        eprintln!("--new is required");
+        std::process::exit(2);
+    };
+    let threshold = args.get_f64("threshold").unwrap_or(25.0);
+    let absolute = args.has("absolute");
+
+    let old = load(&old_path);
+    let new = load(&new_path);
+    println!(
+        "bench diff: {old_path} (schema {:?}) vs {new_path} (schema {:?}), threshold {threshold}%",
+        old.get("schema").and_then(Json::as_u64),
+        new.get("schema").and_then(Json::as_u64),
+    );
+
+    let mut regressions = 0;
+    println!("\nkernels (speedup over naive, higher is better):");
+    regressions += compare(&kernel_ratios(&old), &kernel_ratios(&new), threshold, true);
+    println!("\ndispatch (vs serial, higher is better):");
+    regressions += compare(&dispatch_ratios(&old), &dispatch_ratios(&new), threshold, true);
+    let new_chosen = dispatch_chosen(&new);
+    for (key, old_c) in dispatch_chosen(&old) {
+        if let Some(new_c) = new_chosen.get(&key) {
+            if *new_c != old_c {
+                println!("  ✗ dispatch {key}: chosen path changed {old_c} -> {new_c}");
+                regressions += 1;
+            }
+        }
+    }
+    println!("\nthread_scaling (speedup vs 1 thread, higher is better):");
+    regressions += compare(&scaling_ratios(&old), &scaling_ratios(&new), threshold, true);
+
+    if absolute {
+        println!("\nserve p50 (seconds, lower is better):");
+        regressions += compare(
+            &absolute_p50(&old, "serve", &["dataset", "variant"]),
+            &absolute_p50(&new, "serve", &["dataset", "variant"]),
+            threshold,
+            false,
+        );
+        println!("\nend_to_end p50 (seconds, lower is better):");
+        regressions += compare(
+            &absolute_p50(&old, "end_to_end", &["dataset", "variant", "precision"]),
+            &absolute_p50(&new, "end_to_end", &["dataset", "variant", "precision"]),
+            threshold,
+            false,
+        );
+        println!("\nserve_sweep p50 (seconds, lower is better):");
+        regressions += compare(
+            &absolute_p50(&old, "serve_sweep", &["edge", "conns_target"]),
+            &absolute_p50(&new, "serve_sweep", &["edge", "conns_target"]),
+            threshold,
+            false,
+        );
+    }
+
+    if regressions > 0 {
+        println!("\n{regressions} regression(s) beyond {threshold}%");
+        std::process::exit(1);
+    }
+    println!("\nno regressions beyond {threshold}%");
+}

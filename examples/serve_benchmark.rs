@@ -15,14 +15,33 @@
 //! run also validates correctness of both dialects against one server
 //! process.
 //!
+//! With `--sweep`, the run additionally holds a ladder of open
+//! connections (idle peers plus one measured pipelined client) against
+//! the selected `--edge` and reports reply p50/p99, accept-to-reply
+//! latency, and server fd pressure at each rung — the headline scaling
+//! claim of the epoll edge. `--json PATH` merges the sweep as a
+//! `serve_sweep` section into an existing bench snapshot
+//! (`BENCH_native.json`); all other sections of the file are preserved.
+//!
 //!   cargo run --release --example serve_benchmark [-- --secs 5 --depth 16]
+//!   cargo run --release --example serve_benchmark -- --edge epoll \
+//!       --sweep 100,1000,5000,10000 --json BENCH_native.json
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
 
 use powerbert::bench::wire::{closed_loop_v1, closed_loop_v2, WireRun};
 use powerbert::client::PowerClient;
-use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Input, Policy, Server, Sla};
+use powerbert::coordinator::{
+    BatchPolicy, Config, Coordinator, EdgeKind, Input, Policy, Server, Sla,
+};
 use powerbert::runtime::BackendKind;
 use powerbert::tokenizer::Vocab;
 use powerbert::util::cli::Args;
+use powerbert::util::epoll::fd_limit;
+use powerbert::util::json::Json;
+use powerbert::util::stats::Summary;
 use powerbert::workload::{LengthMix, WorkloadGen};
 
 fn print_row(variant: &str, name: &str, r: &WireRun) {
@@ -52,6 +71,20 @@ fn main() {
     .opt("workers", Some("1"), "executor pool size")
     .opt("backend", None, "inference backend (pjrt | native | auto)")
     .opt("seq-buckets", None, "comma-separated seq buckets (e.g. 16,32)")
+    .opt("edge", Some("threads"), "server connection edge (threads | epoll)")
+    .opt(
+        "sweep",
+        None,
+        "comma-separated open-connection counts to hold while measuring \
+         (e.g. 100,1000,5000,10000)",
+    )
+    .opt("sweep-secs", Some("2"), "measurement seconds per sweep rung")
+    .opt(
+        "json",
+        None,
+        "merge the sweep as a serve_sweep section into this snapshot file \
+         (e.g. BENCH_native.json)",
+    )
     .parse()
     .unwrap_or_else(|u| {
         eprintln!("{u}");
@@ -75,6 +108,19 @@ fn main() {
         }
         (_, list) => list.unwrap_or_default(),
     };
+    let edge = EdgeKind::parse(args.get("edge").unwrap_or("threads")).unwrap_or_else(|e| {
+        eprintln!("--edge: {e}");
+        std::process::exit(2)
+    });
+    let sweep = match (args.get("sweep"), args.get_usize_list("sweep")) {
+        (Some(raw), None) if !raw.trim().is_empty() => {
+            eprintln!("--sweep: expected comma-separated integers, got {raw:?}");
+            std::process::exit(2)
+        }
+        (_, list) => list.unwrap_or_default(),
+    };
+    let sweep_secs: f64 = args.get_f64("sweep-secs").unwrap_or(2.0);
+    let json_path = args.get("json").map(String::from);
 
     let mut coordinator = Coordinator::start(Config {
         datasets: vec![dataset.clone()],
@@ -93,8 +139,14 @@ fn main() {
         std::process::exit(1)
     });
 
+    // The default 256-connection cap is a serving safety net, not a bench
+    // limit: size it past the largest sweep rung so the edge itself is
+    // what gets measured.
+    let max_conns = sweep.iter().copied().max().unwrap_or(0).max(256) + 64;
     let server = Server::bind("127.0.0.1:0", coordinator.client())
         .expect("bind")
+        .with_edge(edge)
+        .with_max_connections(max_conns)
         .spawn()
         .expect("spawn");
     let addr = server.addr();
@@ -113,7 +165,8 @@ fn main() {
 
     println!(
         "closed-loop wire benchmark: {secs}s per client per variant, v2 depth={depth} \
-         ({backend} backend, {workers} worker(s))\n"
+         ({backend} backend, {workers} worker(s), {} edge)\n",
+        edge.as_str()
     );
     let warm_client = PowerClient::connect(addr).expect("warm connect");
     let mut rows = Vec::new();
@@ -147,10 +200,35 @@ fn main() {
         }
     }
 
+    if !sweep.is_empty() {
+        let sweep_variant = variants
+            .iter()
+            .find(|v| *v == "power-default")
+            .or_else(|| variants.first())
+            .cloned();
+        if let Some(variant) = sweep_variant {
+            let rows = connection_sweep(
+                addr, &dataset, &variant, edge, &sweep, sweep_secs, depth, &vocab, &warm_client,
+            );
+            if let Some(path) = &json_path {
+                merge_sweep(path, rows);
+            }
+        } else {
+            eprintln!("--sweep: no routable variant to measure against");
+        }
+    }
+
     match warm_client.stats() {
         Ok(s) => println!(
-            "\nserver stats: uptime {:.1}s  padding waste {:.2}x  connections {}/{}",
-            s.uptime_secs, s.padding_waste, s.connections_current, s.connections_max
+            "\nserver stats: uptime {:.1}s  padding waste {:.2}x  connections {}/{}  \
+             edge {}  fds {:?}/{:?}",
+            s.uptime_secs,
+            s.padding_waste,
+            s.connections_current,
+            s.connections_max,
+            s.edge,
+            s.fd_open,
+            s.fd_limit,
         ),
         Err(e) => println!("\nstats error: {e}"),
     }
@@ -160,4 +238,141 @@ fn main() {
 
     server.stop();
     coordinator.shutdown();
+}
+
+/// Hold a ladder of open connections and measure what the edge does under
+/// each rung: `conns - 1` idle peers (open socket, no traffic — exactly
+/// the load an event loop is supposed to make free) plus one pipelined v2
+/// client doing real work. Per rung: reply p50/p99 from the measured
+/// client, accept-to-reply latency (fresh `connect` + hello round trip,
+/// sampled while the rung is held), and the server's own fd pressure from
+/// `stats`.
+///
+/// Both socket ends live in this process, so each held connection costs
+/// ~2 fds locally; rungs are clamped to the process rlimit with headroom
+/// and the clamp is reported rather than silently applied.
+#[allow(clippy::too_many_arguments)]
+fn connection_sweep(
+    addr: SocketAddr,
+    dataset: &str,
+    variant: &str,
+    edge: EdgeKind,
+    rungs: &[usize],
+    secs: f64,
+    depth: usize,
+    vocab: &Vocab,
+    stats_client: &PowerClient,
+) -> Vec<Json> {
+    const FD_HEADROOM: u64 = 256;
+    const ACCEPT_SAMPLES: usize = 20;
+    let budget = fd_limit().map(|l| (l.saturating_sub(FD_HEADROOM) / 2) as usize);
+    let mix = LengthMix::default();
+    let mut rows = Vec::new();
+    println!(
+        "\nconnection sweep — {} edge, {secs}s measured per rung, depth {depth}:",
+        edge.as_str()
+    );
+    println!(
+        "{:>8} {:>8} {:>10} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "target", "held", "p50 ms", "p99 ms", "accept p50", "accept p99", "fd open", "req/s"
+    );
+    for &target in rungs {
+        let held_target = match budget {
+            Some(b) if target > b => {
+                eprintln!(
+                    "  (rung {target} clamped to {b}: process fd limit {:?} \
+                     covers both socket ends)",
+                    fd_limit()
+                );
+                b
+            }
+            _ => target,
+        };
+        // Idle peers. A connect that fails (kernel backlog, fd pressure)
+        // ends the rung at however many sockets actually opened.
+        let mut idle = Vec::with_capacity(held_target.saturating_sub(1));
+        for i in 0..held_target.saturating_sub(1) {
+            match TcpStream::connect(addr) {
+                Ok(s) => idle.push(s),
+                Err(e) => {
+                    eprintln!("  (rung {target}: connect {i} failed: {e}; holding {})", idle.len());
+                    break;
+                }
+            }
+        }
+        let held = idle.len() + 1;
+
+        // Accept-to-reply under load: a fresh connection is not accepted
+        // until the event loop gets to it, and its hello reply is the
+        // first write it ever sees.
+        let mut accept_s = Vec::with_capacity(ACCEPT_SAMPLES);
+        for _ in 0..ACCEPT_SAMPLES {
+            let t0 = Instant::now();
+            match PowerClient::connect(addr) {
+                Ok(c) => {
+                    accept_s.push(t0.elapsed().as_secs_f64());
+                    drop(c);
+                }
+                Err(e) => {
+                    eprintln!("  (rung {target}: accept sample failed: {e})");
+                    break;
+                }
+            }
+        }
+        let accept = if accept_s.is_empty() { Summary::of(&[0.0]) } else { Summary::of(&accept_s) };
+
+        let run = closed_loop_v2(addr, dataset, variant, secs, depth, &mix, vocab, 7 + held as u64);
+        let lat = run.latency_summary();
+        let (fd_open, fd_lim) = match stats_client.stats() {
+            Ok(s) => (s.fd_open, s.fd_limit),
+            Err(_) => (None, None),
+        };
+        println!(
+            "{target:>8} {held:>8} {:>10.2} {:>10.2} {:>9.2} ms {:>9.2} ms {:>10} {:>10.1}",
+            lat.p50,
+            lat.p99,
+            accept.p50 * 1e3,
+            accept.p99 * 1e3,
+            fd_open.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            run.throughput(),
+        );
+        let mut m = BTreeMap::new();
+        m.insert("edge".to_string(), Json::Str(edge.as_str().to_string()));
+        m.insert("dataset".to_string(), Json::Str(dataset.to_string()));
+        m.insert("variant".to_string(), Json::Str(variant.to_string()));
+        m.insert("conns_target".to_string(), Json::UInt(target as u64));
+        m.insert("conns_held".to_string(), Json::UInt(held as u64));
+        m.insert("depth".to_string(), Json::UInt(depth as u64));
+        m.insert("requests".to_string(), Json::UInt(run.done as u64));
+        m.insert("errors".to_string(), Json::UInt(run.errors as u64));
+        m.insert("p50_s".to_string(), Json::Num(lat.p50 / 1e3));
+        m.insert("p99_s".to_string(), Json::Num(lat.p99 / 1e3));
+        m.insert("accept_to_reply_p50_s".to_string(), Json::Num(accept.p50));
+        m.insert("accept_to_reply_p99_s".to_string(), Json::Num(accept.p99));
+        m.insert("fd_open".to_string(), fd_open.map(Json::UInt).unwrap_or(Json::Null));
+        m.insert("fd_limit".to_string(), fd_lim.map(Json::UInt).unwrap_or(Json::Null));
+        m.insert("throughput_rps".to_string(), Json::Num(run.throughput()));
+        rows.push(Json::Obj(m));
+        drop(idle);
+    }
+    rows
+}
+
+/// Merge the sweep rows into a bench snapshot as its `serve_sweep`
+/// section, preserving every other key (`benches/native.rs` owns the
+/// rest of the file and symmetrically preserves `serve_sweep` when it
+/// rewrites). A missing or unparsable file starts a minimal schema-2
+/// snapshot instead of failing the bench.
+fn merge_sweep(path: &str, rows: Vec<Json>) {
+    let mut root = match Json::parse_file(std::path::Path::new(path)) {
+        Ok(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    root.entry("bench".to_string()).or_insert_with(|| Json::Str("native".to_string()));
+    root.insert("schema".to_string(), Json::UInt(2));
+    root.insert("serve_sweep".to_string(), Json::Arr(rows));
+    match std::fs::write(path, Json::Obj(root).to_string_pretty() + "\n") {
+        Ok(()) => println!("merged serve_sweep into {path}"),
+        Err(e) => eprintln!("--json {path}: {e}"),
+    }
 }

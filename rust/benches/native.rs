@@ -76,9 +76,17 @@ fn jstr(s: &str) -> Json {
 
 impl Snapshot {
     fn write(self, path: &str, cfg: &BenchConfig) {
+        // `serve_sweep` is produced by the serve_benchmark example (it
+        // needs a real TCP edge and thousands of sockets), which merges
+        // its section into this same snapshot file. Rewriting the file
+        // here must not drop it.
+        let prior_sweep = Json::parse_file(std::path::Path::new(path))
+            .ok()
+            .and_then(|j| j.get("serve_sweep").cloned())
+            .unwrap_or(Json::Arr(Vec::new()));
         let root = jobj(vec![
             ("bench", jstr("native")),
-            ("schema", Json::UInt(1)),
+            ("schema", Json::UInt(2)),
             ("isa", jstr(active_isa())),
             ("simd_active", Json::Bool(simd_active())),
             ("measure_iters", Json::UInt(cfg.measure_iters as u64)),
@@ -88,6 +96,7 @@ impl Snapshot {
             ("dispatch", Json::Arr(self.dispatch)),
             ("end_to_end", Json::Arr(self.end_to_end)),
             ("serve", Json::Arr(self.serve)),
+            ("serve_sweep", prior_sweep),
         ]);
         match std::fs::write(path, root.to_string_pretty() + "\n") {
             Ok(()) => println!("\nwrote bench snapshot to {path}"),
@@ -319,9 +328,16 @@ fn bench_kernels(
     for precision in [Precision::F32, Precision::Int8] {
         let mut base = None;
         for threads in [1usize, 2, 4] {
-            // mc small enough that `rows` splits across every thread count.
-            let exec =
-                KernelExec::new(KernelConfig { threads, kc: 256, mc: 16, precision });
+            // mc small enough that `rows` splits across every thread count;
+            // the fallback floor is disabled so each row measures the path
+            // its label claims, not the dispatcher's pick.
+            let exec = KernelExec::new(KernelConfig {
+                threads,
+                kc: 256,
+                mc: 16,
+                precision,
+                min_parallel_flops: 0,
+            });
             let t = time_fn(cfg, || {
                 match precision {
                     Precision::F32 => fp.matmul_bias(&x, rows, &bias, &exec, &mut out),
@@ -384,12 +400,32 @@ fn bench_dispatch(
     let bias: Vec<f32> = (0..ffn).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
     let packed = PackedGemm::pack(w1, h, ffn);
     let mut out = vec![0f32; DISPATCH_ROWS * ffn];
-    let kcfg =
-        KernelConfig { threads: DISPATCH_THREADS, kc: 256, mc: 16, ..KernelConfig::default() };
+    // The floor is disabled on the measured configs: each row must time
+    // the path its label names even where production dispatch would skip
+    // it. What production *would* pick is the "chosen" column, computed
+    // against the default `min_parallel_flops` floors.
+    let kcfg = KernelConfig {
+        threads: DISPATCH_THREADS,
+        kc: 256,
+        mc: 16,
+        min_parallel_flops: 0,
+        ..KernelConfig::default()
+    };
     let serial_exec = KernelExec::new(kcfg.clone().with_threads(1));
     // Built once — the pool's workers are parked between calls, exactly
     // as an EngineWorker holds them for its lifetime.
     let pooled_exec = KernelExec::new(kcfg.clone());
+    let prod_cfg =
+        KernelConfig { threads: DISPATCH_THREADS, kc: 256, mc: 16, ..KernelConfig::default() };
+    let tasks = DISPATCH_ROWS.div_ceil(prod_cfg.mc.max(1));
+    let flops = powerbert::runtime::kernels::gemm_flops(DISPATCH_ROWS, h, ffn);
+    let pooled_chosen = KernelExec::new(prod_cfg.clone()).chosen_path(tasks, flops);
+    let scoped_chosen =
+        if powerbert::runtime::kernels::scoped_threads_for_work(&prod_cfg, tasks, flops) <= 1 {
+            "serial"
+        } else {
+            "scoped"
+        };
 
     let mut table = Table::new(
         &format!(
@@ -398,7 +434,7 @@ fn bench_dispatch(
              f32/{})",
             active_isa()
         ),
-        &["path", "p50", "alloc B/call", "spawns/call", "vs serial"],
+        &["path", "p50", "alloc B/call", "spawns/call", "vs serial", "chosen"],
     );
 
     let mut dispatch_row = |table: &mut Table,
@@ -408,17 +444,20 @@ fn bench_dispatch(
                             t: &Summary,
                             bytes: u64,
                             spawns: u64,
-                            serial_p50: f64| {
+                            serial_p50: f64,
+                            chosen: &str| {
         table.row(vec![
             label.to_string(),
             fmt_time(t.p50),
             bytes.to_string(),
             spawns.to_string(),
             format!("{:.2}x", serial_p50 / t.p50),
+            chosen.to_string(),
         ]);
         snap.dispatch.push(jobj(vec![
             ("dataset", jstr(ds_name)),
             ("path", jstr(dispatch)),
+            ("chosen", jstr(chosen)),
             ("precision", jstr("f32")),
             ("isa", jstr(active_isa())),
             (
@@ -443,7 +482,7 @@ fn bench_dispatch(
     let serial_p50 = serial.p50;
     dispatch_row(
         &mut table, snap, "serial (1 thread)", "serial", &serial, serial_bytes, serial_spawns,
-        serial_p50,
+        serial_p50, "serial",
     );
 
     let scoped = time_fn(cfg, || {
@@ -456,7 +495,7 @@ fn bench_dispatch(
     });
     dispatch_row(
         &mut table, snap, "scoped spawns (old)", "scoped", &scoped, scoped_bytes, scoped_spawns,
-        serial_p50,
+        serial_p50, scoped_chosen,
     );
 
     let pooled = time_fn(cfg, || {
@@ -469,12 +508,20 @@ fn bench_dispatch(
     });
     dispatch_row(
         &mut table, snap, "kernel pool (new)", "pooled", &pooled, pooled_bytes, pooled_spawns,
-        serial_p50,
+        serial_p50, pooled_chosen,
     );
     table.print();
     println!(
         "small-shape dispatch: pooled spawns 0 threads/call vs scoped's \
          per-call spawns — the pool pays its {DISPATCH_THREADS} spawns once at worker start"
+    );
+    println!(
+        "small-shape dispatch: production floors pick scoped={scoped_chosen} \
+         pooled={pooled_chosen} for this {:.2} MFLOP shape (min_parallel_flops={}, \
+         scoped floor={})",
+        flops as f64 / 1e6,
+        prod_cfg.min_parallel_flops,
+        powerbert::runtime::kernels::SCOPED_SPAWN_FLOPS,
     );
 }
 

@@ -145,6 +145,9 @@ pub struct ServerInfo {
     /// Requests the server allows in flight on one connection before it
     /// answers `overloaded`; the useful ceiling for pipeline depth.
     pub max_inflight_per_connection: usize,
+    /// Connection edge the server runs ("threads" / "epoll"); empty when
+    /// the server predates the field.
+    pub edge: String,
 }
 
 impl ServerInfo {
@@ -188,6 +191,7 @@ impl ServerInfo {
                 .get("max_inflight_per_connection")
                 .and_then(Json::as_usize)
                 .unwrap_or(0),
+            edge: j.get("edge").and_then(Json::as_str).unwrap_or("").to_string(),
         })
     }
 }
@@ -201,6 +205,20 @@ pub struct ServerStats {
     pub padding_waste: f64,
     pub connections_current: usize,
     pub connections_max: usize,
+    /// Connection edge the server runs ("threads" / "epoll").
+    pub edge: String,
+    /// Open fds of the server process vs its `RLIMIT_NOFILE` soft limit —
+    /// the fd-pressure gauge (None where the server has no procfs).
+    pub fd_open: Option<u64>,
+    pub fd_limit: Option<u64>,
+    /// Bytes buffered in the epoll edge's per-connection read/write
+    /// buffers (zero on the threads edge).
+    pub read_buffer_bytes: u64,
+    pub write_buffer_bytes: u64,
+    /// Cumulative partial-write stalls (EPOLLOUT registrations).
+    pub epollout_stalls: u64,
+    /// Connections currently read-paused by write backpressure.
+    pub reads_paused: u64,
     /// The complete stats object (per-variant histograms, workers, ...).
     pub raw: Json,
 }
@@ -428,11 +446,29 @@ impl PowerClient {
                 .and_then(Json::as_usize)
                 .unwrap_or(0)
         };
+        let cu64 = |k: &str| {
+            stats
+                .get("connections")
+                .and_then(|c| c.get(k))
+                .and_then(Json::as_u64)
+        };
         Ok(ServerStats {
             uptime_secs: f("uptime_secs"),
             padding_waste: f("padding_waste"),
             connections_current: conn("current"),
             connections_max: conn("max"),
+            edge: stats
+                .get("connections")
+                .and_then(|c| c.get("edge"))
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            fd_open: cu64("fd_open"),
+            fd_limit: cu64("fd_limit"),
+            read_buffer_bytes: cu64("read_buffer_bytes").unwrap_or(0),
+            write_buffer_bytes: cu64("write_buffer_bytes").unwrap_or(0),
+            epollout_stalls: cu64("epollout_stalls").unwrap_or(0),
+            reads_paused: cu64("reads_paused").unwrap_or(0),
             raw: stats.clone(),
         })
     }

@@ -1,0 +1,656 @@
+//! The event-driven serving edge: one thread, one `epoll` instance, every
+//! connection — the 10k-connection path.
+//!
+//! The threads edge (see [`super::server`]) spends three OS threads per
+//! connection; at 10,000 connections that is 30,000 stacks and a scheduler
+//! meltdown. This edge owns all sockets from a single loop:
+//!
+//! * **Accept** — the listener is nonblocking and level-triggered; each
+//!   wakeup accepts until `WouldBlock`, shedding over-capacity peers with
+//!   one best-effort error line (never blocking the loop on a slow peer).
+//! * **Read** — per-connection byte buffers accumulate partial lines;
+//!   frames are dispatched through the same [`super::server::handle_line`]
+//!   as the threads edge, so the dialects cannot diverge.
+//! * **Write** — replies append to a per-connection write buffer that is
+//!   flushed opportunistically; on a partial write the connection
+//!   registers `EPOLLOUT` interest and the loop finishes the flush when
+//!   the socket drains. A connection whose peer stops reading crosses the
+//!   buffer high-water mark and has its read interest masked off —
+//!   level-triggered epoll keeps the unread bytes queued in the kernel, so
+//!   intake resumes exactly where it paused once the peer drains below the
+//!   low-water mark.
+//! * **Completions** — executor workers deliver results through one shared
+//!   channel tagged `(connection token, request id)` and ring an eventfd
+//!   ([`ReplySink::Routed`]); the loop drains the channel on wakeup. Zero
+//!   pump threads for the whole edge.
+//!
+//! Backpressure is the same contract as the threads edge, enforced with
+//! buffers instead of blocked threads: `MAX_INFLIGHT_PER_CONNECTION` bounds
+//! submitted-but-unfinished work per connection, and the write-buffer
+//! high-water mark bounds completed-but-unread bytes.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::protocol::{self, ErrorCode};
+use super::request::{Response, ServeError};
+use super::server::{coded_err_json, handle_line, ConnInfo, Server, MAX_INFLIGHT_PER_CONNECTION};
+use crate::util::epoll::{self, EpollEvent, EPOLLIN, EPOLLOUT};
+use crate::util::json::Json;
+
+/// Which connection edge the server runs. Parsed from `--edge`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Thread-per-connection (reader + pump + writer). The portable,
+    /// proven fallback.
+    Threads,
+    /// Single-threaded epoll readiness loop owning every socket. Linux
+    /// only; `Server::run` fails with `Unsupported` elsewhere.
+    Epoll,
+}
+
+impl EdgeKind {
+    pub fn parse(s: &str) -> Result<EdgeKind, String> {
+        match s {
+            "threads" => Ok(EdgeKind::Threads),
+            "epoll" => Ok(EdgeKind::Epoll),
+            other => Err(format!("unknown edge {other:?} (want threads | epoll)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EdgeKind::Threads => "threads",
+            EdgeKind::Epoll => "epoll",
+        }
+    }
+}
+
+/// Edge-level gauges reported by the `stats` command. All counters are
+/// written by the event loop and read by whatever connection asks for
+/// stats; the threads edge leaves them at zero (its backpressure lives in
+/// blocked threads, not loop-owned buffers).
+#[derive(Default)]
+pub struct EdgeGauges {
+    /// Bytes currently buffered across all per-connection read buffers.
+    pub read_buffer_bytes: AtomicU64,
+    /// Bytes currently queued across all per-connection write buffers.
+    pub write_buffer_bytes: AtomicU64,
+    /// Cumulative count of partial-write stalls (transitions into
+    /// `EPOLLOUT` interest) — each one is a moment a peer read slower than
+    /// the server produced.
+    pub epollout_stalls: AtomicU64,
+    /// Connections whose read interest is currently masked off because
+    /// their write buffer crossed the high-water mark.
+    pub reads_paused: AtomicU64,
+}
+
+/// Pause reading a connection when its un-flushed replies exceed this.
+const WRITE_HIGH_WATER: usize = 256 * 1024;
+/// Resume reading once the backlog drains below this.
+const WRITE_LOW_WATER: usize = 64 * 1024;
+/// A single line (frame) longer than this is a protocol violation; the
+/// connection is closed with a structured error rather than letting one
+/// peer balloon the loop's memory.
+const MAX_LINE_BYTES: usize = 1024 * 1024;
+/// Grace period for the shutdown drain: in-flight work normally completes
+/// in milliseconds; this only bounds pathological cases.
+const DRAIN_GRACE_MS: u64 = 5_000;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_EVENTFD: u64 = 1;
+const TOKEN_FIRST_CONN: u64 = 2;
+
+/// Per-connection state owned by the loop. No locks anywhere: every field
+/// is touched only from the loop thread (executor workers reach the loop
+/// exclusively through the completion channel + eventfd).
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    /// Partial-line accumulation (bytes read, not yet newline-terminated).
+    read_buf: Vec<u8>,
+    /// Serialized replies not yet accepted by the socket.
+    write_buf: Vec<u8>,
+    /// How much of `write_buf` is already written (drained lazily to avoid
+    /// memmove per partial write).
+    write_pos: usize,
+    /// Requests submitted to the coordinator, not yet completed. Plain
+    /// usize — all mutation happens on the loop thread.
+    inflight: usize,
+    /// Interest mask currently registered with the epoll instance.
+    interest: u32,
+    /// True while the write buffer is above high water and `EPOLLIN` is
+    /// masked off.
+    reads_paused: bool,
+    /// Half-closed by us after a fatal protocol error: flush remaining
+    /// replies, then drop.
+    closing: bool,
+}
+
+impl Conn {
+    fn pending_write(&self) -> usize {
+        self.write_buf.len() - self.write_pos
+    }
+}
+
+/// Run the epoll edge until the server's stop flag is set, then drain:
+/// refuse new accepts with a `shutdown`-coded line, let in-flight requests
+/// complete and flush, and return. Non-Linux targets get `Unsupported` —
+/// callers fall back to `--edge threads`.
+pub fn run_epoll(server: &Server) -> std::io::Result<()> {
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = server;
+        Err(std::io::Error::new(
+            ErrorKind::Unsupported,
+            "--edge epoll requires Linux; use --edge threads",
+        ))
+    }
+    #[cfg(target_os = "linux")]
+    {
+        run_epoll_linux(server)
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn run_epoll_linux(server: &Server) -> std::io::Result<()> {
+    use std::os::unix::io::AsRawFd;
+
+    let ep = epoll::Epoll::new()?;
+    let wakeup = Arc::new(epoll::EventFd::new()?);
+    server.listener.set_nonblocking(true)?;
+    ep.add(server.listener.as_raw_fd(), TOKEN_LISTENER, EPOLLIN)?;
+    ep.add(wakeup.raw_fd(), TOKEN_EVENTFD, EPOLLIN)?;
+
+    let info = server.conn_info();
+    // One completion channel for the whole edge; the sender side is cloned
+    // into every submitted job's ReplySink::Routed.
+    let (done_tx, done_rx) = channel::<(u64, u64, Result<Response, ServeError>)>();
+    let wake_fn: Arc<dyn Fn() + Send + Sync> = {
+        let wakeup = wakeup.clone();
+        Arc::new(move || wakeup.wake())
+    };
+
+    let mut loop_state = Loop {
+        ep,
+        server,
+        info,
+        conns: HashMap::new(),
+        next_token: TOKEN_FIRST_CONN,
+        done_tx,
+        wake_fn,
+    };
+
+    let mut events = [EpollEvent::default(); 256];
+    loop {
+        if server.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let n = loop_state.ep.wait(&mut events, -1)?;
+        let mut accept_ready = false;
+        let mut completions_ready = false;
+        for ev in &events[..n] {
+            match ev.token() {
+                TOKEN_LISTENER => accept_ready = true,
+                TOKEN_EVENTFD => {
+                    wakeup.drain();
+                    completions_ready = true;
+                }
+                token => loop_state.handle_socket(token, ev.mask()),
+            }
+        }
+        // Completions before accepts: finishing existing work frees
+        // in-flight slots and shrinks buffers before taking on new peers.
+        if completions_ready {
+            loop_state.drain_completions(&done_rx);
+        }
+        if accept_ready {
+            loop_state.accept_ready();
+        }
+    }
+
+    loop_state.drain_on_stop(&done_rx);
+    Ok(())
+}
+
+#[cfg(target_os = "linux")]
+struct Loop<'a> {
+    ep: epoll::Epoll,
+    server: &'a Server,
+    info: Arc<ConnInfo>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    done_tx: Sender<(u64, u64, Result<Response, ServeError>)>,
+    wake_fn: Arc<dyn Fn() + Send + Sync>,
+}
+
+#[cfg(target_os = "linux")]
+impl Loop<'_> {
+    /// Accept until `WouldBlock`. Over-capacity and shutting-down peers
+    /// get one best-effort error line on the still-blocking-free socket
+    /// and are dropped without ever entering the connection map.
+    fn accept_ready(&mut self) {
+        loop {
+            let (stream, peer) = match self.server.listener.accept() {
+                Ok(pair) => pair,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    crate::warnln!("server", "accept failed: {e}");
+                    return;
+                }
+            };
+            if self.server.stop.load(Ordering::Relaxed) {
+                refuse(stream, ErrorCode::Shutdown, "server shutting down");
+                continue;
+            }
+            if self.conns.len() >= self.server.max_connections {
+                crate::warnln!(
+                    "server",
+                    "connection limit {} reached; shedding client",
+                    self.server.max_connections
+                );
+                refuse(
+                    stream,
+                    ErrorCode::Overloaded,
+                    "server at connection capacity; retry later",
+                );
+                continue;
+            }
+            if let Err(e) = stream.set_nonblocking(true) {
+                crate::warnln!("server", "set_nonblocking failed for {peer}: {e}");
+                continue;
+            }
+            let token = self.next_token;
+            self.next_token += 1;
+            use std::os::unix::io::AsRawFd;
+            if let Err(e) = self.ep.add(stream.as_raw_fd(), token, EPOLLIN) {
+                crate::warnln!("server", "epoll add failed for {peer}: {e}");
+                continue;
+            }
+            crate::debugln!("server", "connection from {peer}");
+            self.server.connections.fetch_add(1, Ordering::Relaxed);
+            self.conns.insert(
+                token,
+                Conn {
+                    stream,
+                    token,
+                    read_buf: Vec::new(),
+                    write_buf: Vec::new(),
+                    write_pos: 0,
+                    inflight: 0,
+                    interest: EPOLLIN,
+                    reads_paused: false,
+                    closing: false,
+                },
+            );
+        }
+    }
+
+    /// One readiness report for a connection socket.
+    fn handle_socket(&mut self, token: u64, mask: u32) {
+        if !self.conns.contains_key(&token) {
+            return; // stale event for a connection closed this round
+        }
+        if mask & (epoll::EPOLLERR | epoll::EPOLLHUP) != 0 {
+            self.close(token);
+            return;
+        }
+        if mask & EPOLLOUT != 0 && !self.flush(token) {
+            return; // peer gone mid-flush
+        }
+        if mask & (EPOLLIN | epoll::EPOLLRDHUP) != 0 {
+            self.read_ready(token);
+        }
+    }
+
+    /// Read until `WouldBlock`, dispatching every complete line. Level-
+    /// triggered interest means leftover bytes re-report readiness, so a
+    /// single bounded pass per wakeup keeps one chatty peer from starving
+    /// the rest of the loop.
+    fn read_ready(&mut self, token: u64) {
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            let conn = match self.conns.get_mut(&token) {
+                Some(c) if !c.reads_paused && !c.closing => c,
+                _ => return, // paused mid-line by its own replies, or gone
+            };
+            let n = match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    // Peer closed its write half. Any buffered partial
+                    // line is garbage by definition (no newline arrived);
+                    // in-flight work still completes and flushes below.
+                    // Flush recomputes interest (an EOF'd fd is readable
+                    // forever under level triggering — interest must drop
+                    // EPOLLIN or the loop spins).
+                    conn.closing = true;
+                    if self.flush(token) {
+                        self.close_if_drained(token);
+                    }
+                    return;
+                }
+                Ok(n) => n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close(token);
+                    return;
+                }
+            };
+            conn.read_buf.extend_from_slice(&tmp[..n]);
+            self.info.gauges.read_buffer_bytes.fetch_add(n as u64, Ordering::Relaxed);
+            if !self.dispatch_lines(token) {
+                return; // connection closed by a fatal frame
+            }
+        }
+    }
+
+    /// Split complete lines out of the read buffer and dispatch each.
+    /// Returns false if the connection was closed.
+    fn dispatch_lines(&mut self, token: u64) -> bool {
+        loop {
+            let conn = match self.conns.get_mut(&token) {
+                Some(c) => c,
+                None => return false,
+            };
+            let Some(nl) = conn.read_buf.iter().position(|&b| b == b'\n') else {
+                if conn.read_buf.len() > MAX_LINE_BYTES {
+                    // Mark closing *before* queueing the error so the
+                    // flush inside queue_frame recomputes interest with
+                    // EPOLLIN masked off (the unread kernel backlog would
+                    // otherwise re-report readiness forever).
+                    conn.closing = true;
+                    self.shed_read_buf(token);
+                    let frame = coded_err_json(
+                        ErrorCode::BadRequest,
+                        &format!("frame exceeds {MAX_LINE_BYTES} bytes"),
+                    );
+                    self.queue_frame(token, &frame);
+                    self.close_if_drained(token);
+                    return false;
+                }
+                return true;
+            };
+            let line_bytes: Vec<u8> = conn.read_buf.drain(..=nl).collect();
+            self.info
+                .gauges
+                .read_buffer_bytes
+                .fetch_sub(line_bytes.len() as u64, Ordering::Relaxed);
+            let line = String::from_utf8_lossy(&line_bytes);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+
+            // The edge's submit hook: bind validated requests to the
+            // routed sink. `inflight` is copied out and written back
+            // because the closure cannot borrow the map entry while
+            // `handle_line` also needs `&Client`.
+            let mut inflight = conn.inflight;
+            let replies = {
+                let client = &self.server.client;
+                let done_tx = &self.done_tx;
+                let wake_fn = &self.wake_fn;
+                let mut submit = |w: protocol::WireRequest| -> Option<Json> {
+                    if inflight >= MAX_INFLIGHT_PER_CONNECTION {
+                        return Some(protocol::error_frame(
+                            Some(w.id),
+                            ErrorCode::Overloaded,
+                            &format!(
+                                "more than {MAX_INFLIGHT_PER_CONNECTION} requests in flight on this connection"
+                            ),
+                        ));
+                    }
+                    inflight += 1;
+                    match client.submit_routed(
+                        &w.dataset,
+                        w.input,
+                        w.sla,
+                        w.id,
+                        token,
+                        done_tx.clone(),
+                        wake_fn.clone(),
+                    ) {
+                        Ok(()) => None,
+                        Err(e) => {
+                            inflight -= 1;
+                            Some(protocol::error_frame(
+                                Some(w.id),
+                                ErrorCode::from_serve(&e),
+                                &e.to_string(),
+                            ))
+                        }
+                    }
+                };
+                handle_line(line, client, &self.info, &mut submit)
+            };
+            if let Some(c) = self.conns.get_mut(&token) {
+                c.inflight = inflight;
+            }
+            for frame in replies {
+                self.queue_frame(token, &frame);
+            }
+            if !self.conns.contains_key(&token) {
+                return false;
+            }
+        }
+    }
+
+    /// Deliver completed requests to their connections' write buffers.
+    fn drain_completions(&mut self, done_rx: &Receiver<(u64, u64, Result<Response, ServeError>)>) {
+        while let Ok((token, id, result)) = done_rx.try_recv() {
+            let frame = match result {
+                Ok(r) => protocol::result_frame(id, &r),
+                Err(e) => {
+                    protocol::error_frame(Some(id), ErrorCode::from_serve(&e), &e.to_string())
+                }
+            };
+            let Some(conn) = self.conns.get_mut(&token) else {
+                continue; // connection closed while its request executed
+            };
+            conn.inflight -= 1;
+            self.queue_frame(token, &frame);
+            self.close_if_drained(token);
+        }
+    }
+
+    /// Append one serialized frame to a connection's write buffer, attempt
+    /// an opportunistic flush, and apply write-side backpressure.
+    fn queue_frame(&mut self, token: u64, frame: &Json) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let line = frame.to_string();
+        conn.write_buf.reserve(line.len() + 1);
+        conn.write_buf.extend_from_slice(line.as_bytes());
+        conn.write_buf.push(b'\n');
+        self.info
+            .gauges
+            .write_buffer_bytes
+            .fetch_add(line.len() as u64 + 1, Ordering::Relaxed);
+        self.flush(token);
+    }
+
+    /// Write as much buffered output as the socket accepts. Registers
+    /// `EPOLLOUT` on a partial write, drops it when drained, and toggles
+    /// read-pause at the high/low water marks. Returns false if the
+    /// connection was closed.
+    fn flush(&mut self, token: u64) -> bool {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return false;
+        };
+        while conn.write_pos < conn.write_buf.len() {
+            match conn.stream.write(&conn.write_buf[conn.write_pos..]) {
+                Ok(0) => {
+                    self.close(token);
+                    return false;
+                }
+                Ok(n) => {
+                    conn.write_pos += n;
+                    self.info
+                        .gauges
+                        .write_buffer_bytes
+                        .fetch_sub(n as u64, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close(token);
+                    return false;
+                }
+            }
+        }
+        // Compact once fully drained (cheap; avoids memmove per write).
+        if conn.write_pos == conn.write_buf.len() {
+            conn.write_buf.clear();
+            conn.write_pos = 0;
+        }
+
+        let pending = conn.pending_write();
+        let mut want = if conn.closing { 0 } else { EPOLLIN };
+        if pending > 0 {
+            want |= EPOLLOUT;
+        }
+        // Read-pause hysteresis: above high water stop reading (the peer
+        // is not consuming replies); below low water resume.
+        if !conn.closing {
+            if !conn.reads_paused && pending >= WRITE_HIGH_WATER {
+                conn.reads_paused = true;
+                self.info.gauges.reads_paused.fetch_add(1, Ordering::Relaxed);
+            } else if conn.reads_paused && pending <= WRITE_LOW_WATER {
+                conn.reads_paused = false;
+                self.info.gauges.reads_paused.fetch_sub(1, Ordering::Relaxed);
+            }
+            if conn.reads_paused {
+                want &= !EPOLLIN;
+            }
+        }
+        if want != conn.interest {
+            if want & EPOLLOUT != 0 && conn.interest & EPOLLOUT == 0 {
+                self.info.gauges.epollout_stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            use std::os::unix::io::AsRawFd;
+            let fd = conn.stream.as_raw_fd();
+            if self.ep.modify(fd, token, want).is_ok() {
+                if let Some(c) = self.conns.get_mut(&token) {
+                    c.interest = want;
+                }
+            }
+        }
+        true
+    }
+
+    /// A closing connection is dropped once nothing is owed to it: no
+    /// in-flight work and no un-flushed replies.
+    fn close_if_drained(&mut self, token: u64) {
+        if let Some(conn) = self.conns.get(&token) {
+            if conn.closing && conn.inflight == 0 && conn.pending_write() == 0 {
+                self.close(token);
+            }
+        }
+    }
+
+    fn shed_read_buf(&mut self, token: u64) {
+        if let Some(conn) = self.conns.get_mut(&token) {
+            self.info
+                .gauges
+                .read_buffer_bytes
+                .fetch_sub(conn.read_buf.len() as u64, Ordering::Relaxed);
+            conn.read_buf.clear();
+        }
+    }
+
+    /// Remove a connection: deregister, release gauge contributions, drop
+    /// the socket. Completions still in the channel for this token are
+    /// dropped on arrival (the map lookup misses) — same as the threads
+    /// edge dropping its tagged channel.
+    fn close(&mut self, token: u64) {
+        let Some(conn) = self.conns.remove(&token) else {
+            return;
+        };
+        use std::os::unix::io::AsRawFd;
+        let _ = self.ep.delete(conn.stream.as_raw_fd());
+        self.info
+            .gauges
+            .read_buffer_bytes
+            .fetch_sub(conn.read_buf.len() as u64, Ordering::Relaxed);
+        self.info
+            .gauges
+            .write_buffer_bytes
+            .fetch_sub(conn.pending_write() as u64, Ordering::Relaxed);
+        if conn.reads_paused {
+            self.info.gauges.reads_paused.fetch_sub(1, Ordering::Relaxed);
+        }
+        self.server.connections.fetch_sub(1, Ordering::Relaxed);
+        crate::debugln!("server", "connection {} closed", conn.token);
+    }
+
+    /// Shutdown drain: new accepts are refused with a `shutdown` code,
+    /// idle connections are closed immediately, busy ones stop reading but
+    /// keep flushing until their in-flight work completes — bounded by
+    /// [`DRAIN_GRACE_MS`] against pathological stalls.
+    fn drain_on_stop(&mut self, done_rx: &Receiver<(u64, u64, Result<Response, ServeError>)>) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            if let Some(c) = self.conns.get_mut(&token) {
+                c.closing = true;
+            }
+            self.shed_read_buf(token);
+            if self.flush(token) {
+                self.close_if_drained(token);
+            }
+        }
+        let deadline = Instant::now() + std::time::Duration::from_millis(DRAIN_GRACE_MS);
+        let mut events = [EpollEvent::default(); 64];
+        while !self.conns.is_empty() && Instant::now() < deadline {
+            self.drain_completions(done_rx);
+            let tokens: Vec<u64> = self.conns.keys().copied().collect();
+            for token in tokens {
+                if self.flush(token) {
+                    self.close_if_drained(token);
+                }
+            }
+            if self.conns.is_empty() {
+                break;
+            }
+            let _ = self.ep.wait(&mut events, 50);
+            // Refuse late dialers during the grace window too.
+            self.refuse_pending_accepts();
+        }
+        let leftover: Vec<u64> = self.conns.keys().copied().collect();
+        if !leftover.is_empty() {
+            crate::warnln!(
+                "server",
+                "drain grace expired with {} connections still busy",
+                leftover.len()
+            );
+            for token in leftover {
+                self.close(token);
+            }
+        }
+    }
+
+    fn refuse_pending_accepts(&mut self) {
+        loop {
+            match self.server.listener.accept() {
+                Ok((stream, _)) => refuse(stream, ErrorCode::Shutdown, "server shutting down"),
+                Err(_) => return,
+            }
+        }
+    }
+}
+
+/// One best-effort error line on a connection we will not keep. The socket
+/// is still in its freshly-accepted state; a single short write to a fresh
+/// socket's empty send buffer cannot block meaningfully.
+#[cfg(target_os = "linux")]
+fn refuse(mut stream: TcpStream, code: ErrorCode, msg: &str) {
+    let reply = coded_err_json(code, msg);
+    let _ = stream.write_all(reply.to_string().as_bytes());
+    let _ = stream.write_all(b"\n");
+}

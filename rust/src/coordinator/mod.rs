@@ -11,6 +11,7 @@
 //! a multiplexed TCP server with a v1 compat shim.
 
 pub mod batcher;
+pub mod edge;
 pub mod metrics;
 pub mod protocol;
 pub mod request;
@@ -19,6 +20,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batch, BatchKey, BatchPolicy, Batcher};
+pub use edge::{EdgeGauges, EdgeKind};
 pub use metrics::{MetricsHub, VariantStats, WorkerStats};
 pub use protocol::{ErrorCode, PROTOCOL_VERSION};
 pub use request::{Input, Request, Response, ServeError, Sla};

@@ -1,6 +1,7 @@
 //! Request/response types of the serving coordinator.
 
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// What the client wants classified.
@@ -113,6 +114,15 @@ pub enum ReplySink {
     /// Shared per-connection channel; results are tagged with the request
     /// id so the receiver can route frames without one thread per request.
     Tagged(Sender<(u64, Result<Response, ServeError>)>),
+    /// Shared per-*edge* channel: every connection of the event-loop edge
+    /// funnels into one channel, tagged with (connection token, request
+    /// id), and `wake` rings the loop's eventfd so a parked `epoll_wait`
+    /// notices the completion — the whole edge costs zero pump threads.
+    Routed {
+        conn: u64,
+        tx: Sender<(u64, u64, Result<Response, ServeError>)>,
+        wake: Arc<dyn Fn() + Send + Sync>,
+    },
 }
 
 impl ReplySink {
@@ -125,6 +135,10 @@ impl ReplySink {
             }
             ReplySink::Tagged(tx) => {
                 let _ = tx.send((id, result));
+            }
+            ReplySink::Routed { conn, tx, wake } => {
+                let _ = tx.send((*conn, id, result));
+                wake();
             }
         }
     }

@@ -189,6 +189,24 @@ impl Client {
         self.submit_with_sink(dataset, input, sla, id, ReplySink::Tagged(reply))
     }
 
+    /// Submit from the event-loop edge: completions are tagged with
+    /// `(connection token, request id)` on one edge-wide channel and
+    /// `wake` rings the loop's eventfd, so a single `epoll_wait` thread
+    /// serves every connection's completions with no pump thread at all.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_routed(
+        &self,
+        dataset: &str,
+        input: Input,
+        sla: Sla,
+        id: u64,
+        conn: u64,
+        reply: Sender<(u64, u64, Result<Response, ServeError>)>,
+        wake: Arc<dyn Fn() + Send + Sync>,
+    ) -> Result<(), ServeError> {
+        self.submit_with_sink(dataset, input, sla, id, ReplySink::Routed { conn, tx: reply, wake })
+    }
+
     fn submit_with_sink(
         &self,
         dataset: &str,

@@ -12,11 +12,21 @@
 //! `{"error":"<string>"}` out, handled synchronously exactly like the seed
 //! — so v1 scripts keep working against a v2 server unchanged.
 //!
-//! Per connection: the handler thread reads frames; v2 classifications are
-//! submitted with a shared tagged reply channel, and a single pump thread
-//! writes completions back as they finish — pipelining costs one thread,
-//! not one per in-flight request. A writer thread serializes all socket
-//! writes (v1 replies, v2 completions, command replies).
+//! Two interchangeable connection edges speak this protocol (selected with
+//! `--edge`, see [`super::edge::EdgeKind`]):
+//!
+//! * **threads** — per connection: the handler thread reads frames; v2
+//!   classifications are submitted with a shared tagged reply channel, and
+//!   a single pump thread writes completions back as they finish. A writer
+//!   thread serializes all socket writes. Three threads per connection —
+//!   simple and proven, but capped by thread cost in the hundreds.
+//! * **epoll** — one event loop owns every socket ([`super::edge`]),
+//!   scaling to tens of thousands of connections with zero per-connection
+//!   threads.
+//!
+//! Frame dispatch ([`handle_line`]) is shared: both edges parse the same
+//! dialects and hand validated requests to an edge-supplied submit hook,
+//! so protocol behavior cannot drift between them.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -26,6 +36,7 @@ use std::sync::mpsc::{channel, sync_channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::edge::{self, EdgeGauges, EdgeKind};
 use super::protocol::{self, ErrorCode, PROTOCOL_VERSION};
 use super::request::{Input, Response, ServeError, Sla};
 use super::scheduler::Client;
@@ -52,18 +63,23 @@ const WRITE_QUEUE_DEPTH: usize = 256;
 
 /// Serving front-end over a coordinator client.
 pub struct Server {
-    listener: TcpListener,
-    client: Client,
-    stop: Arc<AtomicBool>,
+    pub(crate) listener: TcpListener,
+    pub(crate) client: Client,
+    pub(crate) stop: Arc<AtomicBool>,
     pub connections: Arc<AtomicUsize>,
-    max_connections: usize,
+    pub(crate) max_connections: usize,
+    pub(crate) edge: EdgeKind,
+    pub(crate) gauges: Arc<EdgeGauges>,
 }
 
-/// Connection bookkeeping shared with every handler (current/max counts
-/// are reported by the v2 `stats` command).
-struct ConnInfo {
-    connections: Arc<AtomicUsize>,
-    max_connections: usize,
+/// Connection bookkeeping shared with every handler (current/max counts,
+/// edge identity and buffer/stall gauges are reported by the v2 `stats`
+/// command).
+pub(crate) struct ConnInfo {
+    pub(crate) connections: Arc<AtomicUsize>,
+    pub(crate) max_connections: usize,
+    pub(crate) edge: EdgeKind,
+    pub(crate) gauges: Arc<EdgeGauges>,
 }
 
 impl Server {
@@ -75,6 +91,8 @@ impl Server {
             stop: Arc::new(AtomicBool::new(false)),
             connections: Arc::new(AtomicUsize::new(0)),
             max_connections: DEFAULT_MAX_CONNECTIONS,
+            edge: EdgeKind::Threads,
+            gauges: Arc::new(EdgeGauges::default()),
         })
     }
 
@@ -86,6 +104,23 @@ impl Server {
         self
     }
 
+    /// Select the connection edge: `threads` (one reader + pump + writer
+    /// thread per connection, the proven fallback) or `epoll` (one event
+    /// loop owning every socket — the 10k-connection path; Linux only).
+    pub fn with_edge(mut self, edge: EdgeKind) -> Server {
+        self.edge = edge;
+        self
+    }
+
+    pub(crate) fn conn_info(&self) -> Arc<ConnInfo> {
+        Arc::new(ConnInfo {
+            connections: self.connections.clone(),
+            max_connections: self.max_connections,
+            edge: self.edge,
+            gauges: self.gauges.clone(),
+        })
+    }
+
     pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
         self.listener.local_addr()
     }
@@ -95,14 +130,26 @@ impl Server {
         self.stop.clone()
     }
 
-    /// Accept loop; returns when the stop flag is set (checked between
-    /// accepts — pair with a wake-up connection, see `Server::shutdown`).
+    /// Serve until the stop flag is set, on whichever edge was selected
+    /// with [`Server::with_edge`] (pair the flag with a wake-up connection,
+    /// see `Server::shutdown`).
     pub fn run(&self) -> std::io::Result<()> {
-        crate::info!("server", "listening on {}", self.listener.local_addr()?);
-        let info = Arc::new(ConnInfo {
-            connections: self.connections.clone(),
-            max_connections: self.max_connections,
-        });
+        crate::info!(
+            "server",
+            "listening on {} (edge: {})",
+            self.listener.local_addr()?,
+            self.edge.as_str()
+        );
+        match self.edge {
+            EdgeKind::Threads => self.run_threads(),
+            EdgeKind::Epoll => edge::run_epoll(self),
+        }
+    }
+
+    /// The thread-per-connection edge: blocking accept loop, one reader +
+    /// pump + writer thread per connection.
+    fn run_threads(&self) -> std::io::Result<()> {
+        let info = self.conn_info();
         for stream in self.listener.incoming() {
             if self.stop.load(Ordering::Relaxed) {
                 break;
@@ -258,12 +305,17 @@ fn handle_connection(
     });
 
     let reader = BufReader::new(stream);
+    // This edge's submit path: the shared dispatch in `handle_line` is
+    // edge-agnostic — it hands validated requests to this closure, which
+    // binds them to the per-connection tagged channel and in-flight count.
+    let mut submit =
+        |w: protocol::WireRequest| -> Option<Json> { submit_v2(&client, w, &done_tx, &inflight) };
     'conn: for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        for reply in handle_line(&line, &client, &info, &done_tx, &inflight) {
+        for reply in handle_line(&line, &client, &info, &mut submit) {
             if out_tx.send(reply.to_string()).is_err() {
                 break 'conn; // writer died (peer gone)
             }
@@ -290,7 +342,7 @@ fn err_json(msg: &str) -> Json {
 /// alongside. Used when the sender's dialect is unknowable (unparseable
 /// line, connection shed before any frame) — v1 scripts read the string,
 /// the typed client reads the code.
-fn coded_err_json(code: ErrorCode, msg: &str) -> Json {
+pub(crate) fn coded_err_json(code: ErrorCode, msg: &str) -> Json {
     let mut m = BTreeMap::new();
     m.insert("error".to_string(), Json::Str(msg.to_string()));
     m.insert("code".to_string(), Json::Str(code.as_str().to_string()));
@@ -343,13 +395,18 @@ fn submit_v2(
 
 /// Dispatch one input line. Returns the frames to write immediately —
 /// v2 classification successes return nothing here (they arrive through
-/// the tagged `done` channel in completion order).
-fn handle_line(
+/// the edge's completion channel in whatever order execution finishes).
+///
+/// Edge-agnostic: validated classification requests are handed to `submit`,
+/// which each edge binds to its own reply plumbing (tagged per-connection
+/// channel + atomic in-flight count on the threads edge; routed per-loop
+/// channel + plain counter on the epoll edge). `submit` returns an error
+/// frame to write immediately, or None on successful async submission.
+pub(crate) fn handle_line(
     line: &str,
     client: &Client,
     info: &ConnInfo,
-    done: &Sender<(u64, Result<Response, ServeError>)>,
-    inflight: &AtomicUsize,
+    submit: &mut dyn FnMut(protocol::WireRequest) -> Option<Json>,
 ) -> Vec<Json> {
     let req = match Json::parse(line) {
         Ok(j) => j,
@@ -373,10 +430,10 @@ fn handle_line(
         return vec![handle_v2_cmd(&req, client, info)];
     }
     if req.get("batch").is_some() {
-        return handle_v2_batch(&req, client, done, inflight);
+        return handle_v2_batch(&req, submit);
     }
     match protocol::parse_request(&req, false) {
-        Ok(w) => submit_v2(client, w, done, inflight).into_iter().collect(),
+        Ok(w) => submit(w).into_iter().collect(),
         Err(we) => vec![protocol::error_frame(we.id, we.code, &we.message)],
     }
 }
@@ -387,9 +444,7 @@ fn handle_line(
 /// with their own error frames; valid siblings still run.
 fn handle_v2_batch(
     req: &Json,
-    client: &Client,
-    done: &Sender<(u64, Result<Response, ServeError>)>,
-    inflight: &AtomicUsize,
+    submit: &mut dyn FnMut(protocol::WireRequest) -> Option<Json>,
 ) -> Vec<Json> {
     for key in req.as_obj().expect("batch frame is an object").keys() {
         if key != "v" && key != "batch" {
@@ -416,7 +471,7 @@ fn handle_v2_batch(
         }
     }
     for w in parsed {
-        if let Some(err) = submit_v2(client, w, done, inflight) {
+        if let Some(err) = submit(w) {
             replies.push(err);
         }
     }
@@ -494,7 +549,49 @@ fn hello_payload(client: &Client, info: &ConnInfo) -> Json {
         "max_inflight_per_connection".to_string(),
         Json::UInt(MAX_INFLIGHT_PER_CONNECTION as u64),
     );
+    m.insert("edge".to_string(), Json::Str(info.edge.as_str().to_string()));
     Json::Obj(m)
+}
+
+/// The `connections` object of the `stats` reply: live/max connection
+/// counts, the serving edge, process-wide fd pressure (open fds vs the
+/// `RLIMIT_NOFILE` soft limit — the resource 10k connections actually
+/// exhaust), and the epoll edge's buffer/stall gauges. The threads edge
+/// reports its gauges as zero: its backpressure lives in blocked threads
+/// and bounded channels, not in loop-owned buffers.
+fn connections_payload(info: &ConnInfo) -> Json {
+    let mut conns = BTreeMap::new();
+    conns.insert(
+        "current".to_string(),
+        Json::UInt(info.connections.load(Ordering::Relaxed) as u64),
+    );
+    conns.insert("max".to_string(), Json::UInt(info.max_connections as u64));
+    conns.insert("edge".to_string(), Json::Str(info.edge.as_str().to_string()));
+    conns.insert(
+        "fd_open".to_string(),
+        crate::util::epoll::open_fds().map(Json::UInt).unwrap_or(Json::Null),
+    );
+    conns.insert(
+        "fd_limit".to_string(),
+        crate::util::epoll::fd_limit().map(Json::UInt).unwrap_or(Json::Null),
+    );
+    conns.insert(
+        "read_buffer_bytes".to_string(),
+        Json::UInt(info.gauges.read_buffer_bytes.load(Ordering::Relaxed)),
+    );
+    conns.insert(
+        "write_buffer_bytes".to_string(),
+        Json::UInt(info.gauges.write_buffer_bytes.load(Ordering::Relaxed)),
+    );
+    conns.insert(
+        "epollout_stalls".to_string(),
+        Json::UInt(info.gauges.epollout_stalls.load(Ordering::Relaxed)),
+    );
+    conns.insert(
+        "reads_paused".to_string(),
+        Json::UInt(info.gauges.reads_paused.load(Ordering::Relaxed)),
+    );
+    Json::Obj(conns)
 }
 
 fn handle_v2_cmd(req: &Json, client: &Client, info: &ConnInfo) -> Json {
@@ -538,13 +635,7 @@ fn handle_v2_cmd(req: &Json, client: &Client, info: &ConnInfo) -> Json {
                     m
                 }
             };
-            let mut conns = BTreeMap::new();
-            conns.insert(
-                "current".to_string(),
-                Json::UInt(info.connections.load(Ordering::Relaxed) as u64),
-            );
-            conns.insert("max".to_string(), Json::UInt(info.max_connections as u64));
-            stats.insert("connections".to_string(), Json::Obj(conns));
+            stats.insert("connections".to_string(), connections_payload(info));
             reply.insert("stats".to_string(), Json::Obj(stats));
         }
         "variants" => {

@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Policy, Server};
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, EdgeKind, Policy, Server};
 use powerbert::runtime::{
     default_root, BackendKind, Engine, KernelConfig, Precision, Registry, TestSplit,
 };
@@ -39,6 +39,7 @@ fn main() {
     .opt("workers", Some("1"), "serve: executor pool size (one backend instance each)")
     .opt("seq-buckets", None, "serve: comma-separated seq buckets for length-aware batching (e.g. 16,32,64)")
     .opt("max-connections", None, "serve: concurrent connection cap (default 256)")
+    .opt("edge", Some("threads"), "serve: connection edge (threads = thread-per-connection fallback | epoll = event loop, Linux only)")
     .opt("dataset", None, "eval: dataset name")
     .opt("variant", Some("bert"), "eval: variant name")
     .opt("batch", Some("32"), "eval: batch size")
@@ -168,6 +169,13 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
     let server = match parsed.get_usize("max-connections") {
         Some(n) => server.with_max_connections(n),
         None => server,
+    };
+    let server = match EdgeKind::parse(parsed.get("edge").unwrap_or("threads")) {
+        Ok(edge) => server.with_edge(edge),
+        Err(e) => {
+            eprintln!("--edge: {e}");
+            return 2;
+        }
     };
 
     // SIGINT/SIGTERM: the handler only flips an atomic; this watcher turns

@@ -136,7 +136,9 @@ pub fn masked_attention(
     }
 
     let tasks = batch * heads;
-    let threads = exec.threads_for(tasks);
+    // Work-size dispatch, mirroring PackedGemm::run: small attention
+    // shapes run serial rather than paying the pool handoff per head.
+    let threads = exec.threads_for_work(tasks, super::attention_flops(batch, heads, n, d));
     if threads <= 1 {
         // Serial fast path — the serving default (`threads: 1`): write
         // each head's context stripe straight into `ctx` (heads touch
@@ -272,7 +274,10 @@ pub fn masked_attention_scoped(
     }
 
     let tasks = batch * heads;
-    let threads = cfg.effective_threads(tasks);
+    // Per-call spawns are floored harder than the pooled path — see
+    // SCOPED_SPAWN_FLOPS.
+    let threads =
+        super::scoped_threads_for_work(cfg, tasks, super::attention_flops(batch, heads, n, d));
     if threads <= 1 {
         ctx.fill(0.0);
         sig.fill(0.0);
@@ -588,7 +593,10 @@ mod tests {
             &mut sig1,
         );
         for threads in [2usize, 4, 5] {
-            let cfg = KernelConfig::default().with_threads(threads);
+            // Threshold off: the whole point is to exercise the parallel
+            // drivers on a deliberately tiny shape.
+            let cfg =
+                KernelConfig::default().with_threads(threads).with_min_parallel_flops(0);
             let exec = KernelExec::new(cfg.clone());
             let mut buf = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
             let mut ctx_t = vec![0f32; batch * n * h];
@@ -629,7 +637,8 @@ mod tests {
         let k = rand_vec(batch * n * h, 22);
         let v = rand_vec(batch * n * h, 23);
         let mask = vec![1f32; batch * n];
-        let exec = KernelExec::new(KernelConfig::default().with_threads(3));
+        let exec =
+            KernelExec::new(KernelConfig::default().with_threads(3).with_min_parallel_flops(0));
         let mut clean = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
         let mut ctx_a = vec![0f32; batch * n * h];
         let mut sig_a = vec![0f32; batch * n];

@@ -196,7 +196,9 @@ impl PackedGemm {
         // depend on the split, so any thread count is deterministic.
         let mc = cfg.mc.max(1);
         let tasks = n.div_ceil(mc);
-        let threads = exec.threads_for(tasks);
+        // Work-size dispatch: small shapes (quick-bundle cells are ~0.5
+        // MFLOP) fall back to serial rather than paying the pool handoff.
+        let threads = exec.threads_for_work(tasks, super::gemm_flops(n, k, m));
         if threads <= 1 {
             // Serial fast path — the serving default; untouched by the
             // pool machinery.
@@ -241,7 +243,10 @@ impl PackedGemm {
         }
         let mc = cfg.mc.max(1);
         let tasks = n.div_ceil(mc);
-        let threads = cfg.effective_threads(tasks);
+        // Scoped spawns cost ~1.4 MFLOP-equivalents each, so this path
+        // applies the higher SCOPED_SPAWN_FLOPS floor (the 0.29×-of-serial
+        // small-cell row in BENCH_native.json was exactly this driver).
+        let threads = super::scoped_threads_for_work(cfg, tasks, super::gemm_flops(n, k, m));
         if threads <= 1 {
             self.rows(x, n, bias, cfg.kc, Epilogue::None, out);
             return;
@@ -468,11 +473,12 @@ impl PackedGemmI8 {
             return;
         }
         // Identical closed-form row-chunk dispatch to the f32 kernel —
-        // see PackedGemm::run; only the inner kernel differs.
+        // see PackedGemm::run (including the small-shape serial fallback);
+        // only the inner kernel differs.
         let cfg = exec.config();
         let mc = cfg.mc.max(1);
         let tasks = n.div_ceil(mc);
-        let threads = exec.threads_for(tasks);
+        let threads = exec.threads_for_work(tasks, super::gemm_flops(n, k, m));
         if threads <= 1 {
             self.rows(x, n, bias, cfg.kc, ep, out);
             return;
@@ -1036,7 +1042,15 @@ mod tests {
             KernelExec::new(KernelConfig { threads: 1, kc: 4, mc: 3, ..KernelConfig::default() });
         packed.matmul_bias(&x, n, &b, &serial_exec, &mut serial);
         for threads in [2usize, 4, 7] {
-            let cfg = KernelConfig { threads, kc: 4, mc: 3, ..KernelConfig::default() };
+            // min_parallel_flops: 0 — this test exists to run the parallel
+            // drivers on a tiny shape, so the small-shape fallback is off.
+            let cfg = KernelConfig {
+                threads,
+                kc: 4,
+                mc: 3,
+                min_parallel_flops: 0,
+                ..KernelConfig::default()
+            };
             let mut pooled = vec![0f32; n * m];
             packed.matmul_bias(&x, n, &b, &KernelExec::new(cfg.clone()), &mut pooled);
             assert_eq!(serial, pooled, "pooled differs at threads={threads}");
@@ -1073,7 +1087,13 @@ mod tests {
         let packed = PackedGemm::pack(&w, k, m);
         let want = matmul_bias_ref(&x, n, k, &w, m, &b);
         for cfg in [
-            KernelConfig { threads: 4, kc: 256, mc: 0, ..KernelConfig::default() },
+            KernelConfig {
+                threads: 4,
+                kc: 256,
+                mc: 0,
+                min_parallel_flops: 0,
+                ..KernelConfig::default()
+            },
             KernelConfig { threads: 1, kc: 0, mc: 0, ..KernelConfig::default() },
         ] {
             let mut out = vec![0f32; n * m];
@@ -1166,6 +1186,7 @@ mod tests {
                 threads,
                 kc: 4,
                 mc: 2,
+                min_parallel_flops: 0,
                 ..KernelConfig::default()
             });
             let ft = PackedGemm::pack(&w, k, m);
@@ -1195,6 +1216,7 @@ mod tests {
                 threads,
                 kc: 4,
                 mc: 3,
+                min_parallel_flops: 0,
                 ..KernelConfig::default()
             });
             let mut pooled = vec![0f32; n * m];
@@ -1328,6 +1350,7 @@ mod tests {
                     threads,
                     kc: 4,
                     mc: 2,
+                    min_parallel_flops: 0,
                     ..KernelConfig::default()
                 });
                 let mut pooled = vec![0f32; n * m];

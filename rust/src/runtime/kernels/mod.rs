@@ -150,11 +150,30 @@ pub struct KernelConfig {
     /// documented int8 tolerance — and it takes effect at model load
     /// (panels are quantized while packing), not per call.
     pub precision: Precision,
+    /// Minimum kernel work (in floating-point operations: `2nkm` for a
+    /// GEMM, `4·batch·heads·n²·d` for attention) below which a parallel
+    /// exec runs the serial path anyway. Even the persistent pool's
+    /// park/wake handoff costs a few microseconds per lane — on the quick
+    /// bundles' small cells (~0.5 MFLOP) that is a measurable fraction of
+    /// the kernel itself, and on truly tiny cells it *dominates*
+    /// (`BENCH_native.json` measured the per-call-spawn scoped path at
+    /// 0.29× serial there). Like the blocking knobs this never changes
+    /// results, only which driver computes them. `0` disables the
+    /// fallback (always parallelize when `threads > 1`) — what the kernel
+    /// property tests set to keep exercising the parallel drivers on
+    /// deliberately tiny shapes.
+    pub min_parallel_flops: u64,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        KernelConfig { threads: 1, kc: 256, mc: 64, precision: Precision::F32 }
+        KernelConfig {
+            threads: 1,
+            kc: 256,
+            mc: 64,
+            precision: Precision::F32,
+            min_parallel_flops: 250_000,
+        }
     }
 }
 
@@ -181,6 +200,12 @@ impl KernelConfig {
         {
             c.precision = p;
         }
+        if let Some(f) = std::env::var("POWERBERT_KERNEL_MIN_PARALLEL_FLOPS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            c.min_parallel_flops = f;
+        }
         c
     }
 
@@ -193,6 +218,13 @@ impl KernelConfig {
     /// Explicit weight-panel precision, for tests and benches.
     pub fn with_precision(mut self, precision: Precision) -> KernelConfig {
         self.precision = precision;
+        self
+    }
+
+    /// Explicit small-shape serial-fallback threshold, for tests and
+    /// benches (`0` = always parallelize).
+    pub fn with_min_parallel_flops(mut self, flops: u64) -> KernelConfig {
+        self.min_parallel_flops = flops;
         self
     }
 
@@ -259,12 +291,70 @@ impl KernelExec {
     pub fn threads_for(&self, tasks: usize) -> usize {
         self.cfg.effective_threads(tasks).min(self.pool.size())
     }
+
+    /// [`KernelExec::threads_for`] plus the small-shape fallback: a call
+    /// totalling fewer than `min_parallel_flops` floating-point operations
+    /// runs serially even on a multi-threaded exec, because the pool
+    /// handoff would cost a measurable fraction of the kernel itself.
+    /// This is *the* dispatch decision of the pooled drivers; `1` means
+    /// the serial fast path runs.
+    pub fn threads_for_work(&self, tasks: usize, flops: u64) -> usize {
+        if self.cfg.min_parallel_flops > 0 && flops < self.cfg.min_parallel_flops {
+            return 1;
+        }
+        self.threads_for(tasks)
+    }
+
+    /// The driver [`KernelExec::threads_for_work`] will pick, as a bench/
+    /// stats label: `"serial"` or `"pooled"`.
+    pub fn chosen_path(&self, tasks: usize, flops: u64) -> &'static str {
+        if self.threads_for_work(tasks, flops) <= 1 {
+            "serial"
+        } else {
+            "pooled"
+        }
+    }
 }
 
 impl Default for KernelExec {
     fn default() -> Self {
         KernelExec::new(KernelConfig::default())
     }
+}
+
+/// Work floor for the *scoped* (per-call `thread::scope` spawn) drivers,
+/// composed with `min_parallel_flops` as a max. A spawned thread costs
+/// ~50µs of create/join on this class of hardware — ~1.4 MFLOP of serial
+/// GEMM at the measured ~27 GFLOP/s — so a scoped split below a few MFLOP
+/// is guaranteed negative (the 0.29×-of-serial row in `BENCH_native.json`
+/// that motivated the threshold). The pooled drivers don't use this floor:
+/// their handoff is orders of magnitude cheaper.
+pub const SCOPED_SPAWN_FLOPS: u64 = 4_000_000;
+
+/// Serial-vs-parallel decision for the scoped drivers: like
+/// [`KernelExec::threads_for_work`] but floored at [`SCOPED_SPAWN_FLOPS`].
+/// Public so the dispatch bench can report the path production would pick.
+pub fn scoped_threads_for_work(cfg: &KernelConfig, tasks: usize, flops: u64) -> usize {
+    let floor = cfg.min_parallel_flops.max(SCOPED_SPAWN_FLOPS);
+    if cfg.min_parallel_flops > 0 && flops < floor {
+        return 1;
+    }
+    cfg.effective_threads(tasks)
+}
+
+/// Total floating-point operations of an `[n, k] @ [k, m]` GEMM — the
+/// work estimate the dispatch threshold compares against.
+#[inline]
+pub fn gemm_flops(n: usize, k: usize, m: usize) -> u64 {
+    2 * n as u64 * k as u64 * m as u64
+}
+
+/// Work estimate for masked attention over `batch` examples of `n` rows:
+/// the two `[n, n] x [n, d]`-shaped products per (example, head), i.e.
+/// `4·batch·heads·n²·d` (softmax/masking are lower-order).
+#[inline]
+pub fn attention_flops(batch: usize, heads: usize, n: usize, d: usize) -> u64 {
+    4 * batch as u64 * heads as u64 * (n as u64 * n as u64) * d as u64
 }
 
 /// Cumulative OS threads spawned by the kernel layer (pool workers at

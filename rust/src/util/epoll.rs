@@ -1,0 +1,287 @@
+//! Readiness primitives for the event-driven serving edge: `epoll` and
+//! `eventfd`, declared directly against the platform libc (the libc crate
+//! is not vendored — same zero-dependency stance as [`super::signal`]).
+//!
+//! The surface is deliberately tiny: [`Epoll`] registers raw fds with a
+//! `u64` token and level-triggered interest, [`EventFd`] is the cross-
+//! thread wakeup the executor pool rings when a completion is ready for a
+//! connection the loop owns, and [`fd_limit`]/[`open_fds`] are the
+//! fd-pressure gauges the `stats` command reports. On non-Linux targets
+//! everything compiles but [`Epoll::new`] fails with `Unsupported` — the
+//! serving edge falls back to `--edge threads` there.
+
+#[cfg(target_os = "linux")]
+pub use linux::{Epoll, EventFd};
+
+/// Readable readiness (level-triggered).
+pub const EPOLLIN: u32 = 0x001;
+/// Writable readiness.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported, never needs registering).
+pub const EPOLLERR: u32 = 0x008;
+/// Peer hung up.
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer shut down its write half (reported on Linux ≥ 2.6.17).
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+/// One readiness notification: `events` is a mask of the `EPOLL*` bits,
+/// `data` the token the fd was registered with. Field order and the
+/// x86-64 packing quirk match the kernel ABI.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy, Default)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+impl EpollEvent {
+    /// Copy out the token (the struct may be packed; direct field refs of
+    /// packed structs are unaligned).
+    pub fn token(&self) -> u64 {
+        let d = self.data;
+        d
+    }
+
+    /// Copy out the readiness mask.
+    pub fn mask(&self) -> u32 {
+        let e = self.events;
+        e
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::EpollEvent;
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    // Declared against glibc/musl directly; all of these set errno, which
+    // `io::Error::last_os_error()` reads back.
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn close(fd: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EFD_CLOEXEC: i32 = 0o2000000;
+    const EFD_NONBLOCK: i32 = 0o4000;
+
+    /// An epoll instance. Interest is level-triggered: a readable fd keeps
+    /// reporting `EPOLLIN` until drained, so the loop can stop reading a
+    /// connection (backpressure) and pick the buffered bytes up later.
+    pub struct Epoll {
+        fd: RawFd,
+    }
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Epoll { fd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            let mut ev = EpollEvent { events: interest, data: token };
+            let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Register `fd` with the given interest mask and token.
+        pub fn add(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        /// Change a registered fd's interest mask.
+        pub fn modify(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        /// Deregister `fd`. Closing an fd deregisters it implicitly, but
+        /// only once every duplicate is closed — explicit removal keeps the
+        /// bookkeeping exact.
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Wait for readiness, filling `events`; `timeout_ms < 0` blocks
+        /// indefinitely. A signal interruption reports as zero events
+        /// rather than an error — callers loop anyway.
+        pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+            let n = unsafe {
+                epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(e);
+            }
+            Ok(n as usize)
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe { close(self.fd) };
+        }
+    }
+
+    /// A nonblocking eventfd: any thread may [`EventFd::wake`] it; the
+    /// event loop registers it for `EPOLLIN` and [`EventFd::drain`]s on
+    /// wakeup. The counter semantics collapse any number of wakes into one
+    /// readiness report — exactly the coalescing a completion pump wants.
+    pub struct EventFd {
+        fd: RawFd,
+    }
+
+    impl EventFd {
+        pub fn new() -> io::Result<EventFd> {
+            let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(EventFd { fd })
+        }
+
+        pub fn raw_fd(&self) -> RawFd {
+            self.fd
+        }
+
+        /// Ring the fd. Infallible by design: the only failure mode of a
+        /// nonblocking eventfd write is a saturated counter (EAGAIN), and
+        /// a saturated counter is already awake.
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            unsafe { write(self.fd, (&one as *const u64).cast(), 8) };
+        }
+
+        /// Reset the counter so the next `wake` reports readiness again.
+        pub fn drain(&self) {
+            let mut buf = [0u8; 8];
+            unsafe { read(self.fd, buf.as_mut_ptr(), 8) };
+        }
+    }
+
+    impl Drop for EventFd {
+        fn drop(&mut self) {
+            unsafe { close(self.fd) };
+        }
+    }
+
+    // eventfd writes/reads are plain syscalls on an owned fd.
+    unsafe impl Send for EventFd {}
+    unsafe impl Sync for EventFd {}
+}
+
+/// Soft limit on open fds (`RLIMIT_NOFILE`), the denominator of the
+/// fd-pressure gauge. `None` where the platform offers no answer.
+pub fn fd_limit() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        #[repr(C)]
+        struct Rlimit {
+            cur: u64,
+            max: u64,
+        }
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        }
+        const RLIMIT_NOFILE: i32 = 7;
+        let mut r = Rlimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut r) } == 0 {
+            return Some(r.cur);
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    None
+}
+
+/// Open fds of this process, counted from `/proc/self/fd`. `None` off
+/// Linux or when procfs is unavailable.
+pub fn open_fds() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        // The read_dir handle itself is one of the counted fds; subtract it.
+        std::fs::read_dir("/proc/self/fd")
+            .ok()
+            .map(|d| d.count().saturating_sub(1) as u64)
+    }
+    #[cfg(not(target_os = "linux"))]
+    None
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_wakes_epoll_and_coalesces() {
+        let ep = Epoll::new().expect("epoll");
+        let ef = EventFd::new().expect("eventfd");
+        ep.add(ef.raw_fd(), 42, EPOLLIN).expect("add");
+
+        let mut events = [EpollEvent::default(); 4];
+        // Nothing rung yet: a zero-timeout wait reports no readiness.
+        assert_eq!(ep.wait(&mut events, 0).expect("wait"), 0);
+
+        // Multiple wakes coalesce into one readiness report.
+        ef.wake();
+        ef.wake();
+        ef.wake();
+        let n = ep.wait(&mut events, 1000).expect("wait");
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token(), 42);
+        assert!(events[0].mask() & EPOLLIN != 0);
+
+        // Drained: readiness is gone until the next wake.
+        ef.drain();
+        assert_eq!(ep.wait(&mut events, 0).expect("wait"), 0);
+        ef.wake();
+        assert_eq!(ep.wait(&mut events, 1000).expect("wait"), 1);
+    }
+
+    #[test]
+    fn modify_and_delete_interest() {
+        let ep = Epoll::new().expect("epoll");
+        let ef = EventFd::new().expect("eventfd");
+        ep.add(ef.raw_fd(), 7, EPOLLIN).expect("add");
+        ef.wake();
+
+        // Interest masked off: a pending readable fd stops reporting.
+        ep.modify(ef.raw_fd(), 7, 0).expect("modify");
+        let mut events = [EpollEvent::default(); 4];
+        assert_eq!(ep.wait(&mut events, 0).expect("wait"), 0);
+
+        // Interest restored: level-triggered readiness reappears.
+        ep.modify(ef.raw_fd(), 7, EPOLLIN).expect("modify");
+        assert_eq!(ep.wait(&mut events, 1000).expect("wait"), 1);
+
+        ep.delete(ef.raw_fd()).expect("delete");
+        assert_eq!(ep.wait(&mut events, 0).expect("wait"), 0);
+    }
+
+    #[test]
+    fn fd_gauges_report() {
+        let limit = fd_limit().expect("rlimit on linux");
+        let open = open_fds().expect("procfs on linux");
+        assert!(limit > 0);
+        assert!(open > 0, "at least stdio is open");
+        assert!(open <= limit);
+    }
+}

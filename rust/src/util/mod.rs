@@ -3,6 +3,7 @@
 //! logging and npz/npy IO are implemented here.
 
 pub mod cli;
+pub mod epoll;
 pub mod json;
 pub mod log;
 pub mod npz;

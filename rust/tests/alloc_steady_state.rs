@@ -36,7 +36,10 @@ fn forward_batch_is_allocation_free_after_warmup() {
     // compaction) variants. Every combination must go quiet after warmup.
     for (label, kernel) in [
         ("serial", KernelConfig { threads: 1, kc: 256, mc: 64, ..KernelConfig::default() }),
-        ("pooled x2", KernelConfig { threads: 2, kc: 256, mc: 4, ..KernelConfig::default() }),
+        (
+            "pooled x2",
+            KernelConfig { threads: 2, kc: 256, mc: 4, min_parallel_flops: 0, ..KernelConfig::default() },
+        ),
     ] {
         let exec = Arc::new(KernelExec::new(kernel));
         for vname in ["bert", "power-default"] {

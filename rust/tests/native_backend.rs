@@ -37,7 +37,10 @@ fn golden_logit_parity() {
     let Some(reg) = registry() else { return };
     let mut checked = 0;
     for threads in [1usize, 2, 4] {
-        let kernel = KernelConfig { threads, kc: 256, mc: 16, ..KernelConfig::default() };
+        // min_parallel_flops: 0 — the tiny bundle's cells must keep
+        // splitting across the pool, not fall back to serial dispatch.
+        let kernel =
+            KernelConfig { threads, kc: 256, mc: 16, min_parallel_flops: 0, ..KernelConfig::default() };
         for ds in reg.datasets.values() {
             let golden_path = ds.dir.join("golden.npz");
             if !golden_path.exists() {
@@ -351,7 +354,8 @@ fn native_classifies_test_split_end_to_end() {
 fn arena_and_pool_reuse_is_deterministic_across_buckets_and_variants() {
     let Some(reg) = registry() else { return };
     let Some(ds) = reg.dataset("sst2") else { return };
-    let kernel = KernelConfig { threads: 2, kc: 256, mc: 4, ..KernelConfig::default() };
+    let kernel =
+        KernelConfig { threads: 2, kc: 256, mc: 4, min_parallel_flops: 0, ..KernelConfig::default() };
     let split = TestSplit::load(&ds.test_npz()).expect("split");
     let seq = split.seq_len;
     let variants = ["bert", "power-default"];

@@ -26,6 +26,9 @@ fn rand_cfg(rng: &mut Rng, k: usize) -> KernelConfig {
         threads: 1 + rng.below(4) as usize,
         kc: 1 + rng.below(k as u64 + 7) as usize,
         mc: 1 + rng.below(9) as usize,
+        // Property shapes are tiny; disable the small-shape serial fallback
+        // so the parallel drivers stay under test.
+        min_parallel_flops: 0,
         ..KernelConfig::default()
     }
 }
@@ -121,16 +124,76 @@ fn gemm_pooled_scoped_and_serial_are_bit_identical() {
         let mc = 1 + rng.below(9) as usize;
         let packed = PackedGemm::pack(&w, k, m);
         let mut serial = vec![0f32; n * m];
-        let serial_exec = KernelExec::new(KernelConfig { threads: 1, kc, mc, ..KernelConfig::default() });
+        let serial_exec = KernelExec::new(KernelConfig {
+            threads: 1,
+            kc,
+            mc,
+            min_parallel_flops: 0,
+            ..KernelConfig::default()
+        });
         packed.matmul_bias(&x, n, &b, &serial_exec, &mut serial);
         for threads in [2usize, 4] {
-            let cfg = KernelConfig { threads, kc, mc, ..KernelConfig::default() };
+            let cfg = KernelConfig { threads, kc, mc, min_parallel_flops: 0, ..KernelConfig::default() };
             let mut pooled = vec![0f32; n * m];
             packed.matmul_bias(&x, n, &b, &KernelExec::new(cfg.clone()), &mut pooled);
             assert_eq!(serial, pooled, "pooled: threads={threads} kc={kc} mc={mc}");
             let mut scoped = vec![0f32; n * m];
             packed.matmul_bias_scoped(&x, n, &b, &cfg, &mut scoped);
             assert_eq!(serial, scoped, "scoped: threads={threads} kc={kc} mc={mc}");
+        }
+    });
+}
+
+#[test]
+fn dispatch_threshold_changes_only_the_path_never_the_result() {
+    // The small-shape dispatch fix: `min_parallel_flops` may only decide
+    // *which* driver runs (serial vs pooled) — never what it computes.
+    // Sweep the threshold from "always parallel" through the default to
+    // "always serial" on random ragged shapes and demand bit-identical
+    // output from both the f32 and int8 GEMMs and from attention.
+    forall("dispatch threshold is result-invariant", 24, |rng, size| {
+        let n = 1 + rng.below(size as u64 + 8) as usize;
+        let k = 1 + rng.below(48) as usize;
+        let m = 1 + rng.below(48) as usize;
+        let x = rand_f32(rng, n * k);
+        let w = rand_f32(rng, k * m);
+        let b = rand_f32(rng, m);
+        let kc = 1 + rng.below(k as u64 + 7) as usize;
+        let mc = 1 + rng.below(9) as usize;
+        let threads = 2 + rng.below(3) as usize;
+        let packed = PackedGemm::pack(&w, k, m);
+        let qpacked = PackedGemmI8::pack(&w, k, m);
+        // Task granularity of the GEMM drivers: one task per mc-row block.
+        let tasks = n.div_ceil(mc);
+        let mut baseline: Option<(Vec<f32>, Vec<f32>)> = None;
+        let mut paths = Vec::new();
+        for floor in [0u64, KernelConfig::default().min_parallel_flops, u64::MAX] {
+            let exec = KernelExec::new(KernelConfig {
+                threads,
+                kc,
+                mc,
+                min_parallel_flops: floor,
+                ..KernelConfig::default()
+            });
+            paths.push(exec.chosen_path(tasks, powerbert::runtime::kernels::gemm_flops(n, k, m)));
+            let mut fout = vec![0f32; n * m];
+            packed.matmul_bias(&x, n, &b, &exec, &mut fout);
+            let mut qout = vec![0f32; n * m];
+            qpacked.matmul_bias(&x, n, &b, &exec, &mut qout);
+            match &baseline {
+                None => baseline = Some((fout, qout)),
+                Some((f0, q0)) => {
+                    assert_eq!(f0, &fout, "f32 drifted: floor={floor} paths={paths:?}");
+                    assert_eq!(q0, &qout, "int8 drifted: floor={floor} paths={paths:?}");
+                }
+            }
+        }
+        // Sanity on the path choice itself: an infinite floor always means
+        // serial, and a zero floor means pooled whenever there are at least
+        // two tasks to split (the clamp serializes single-task calls).
+        assert_eq!(paths[2], "serial", "u64::MAX floor must force serial");
+        if tasks >= 2 {
+            assert_eq!(paths[0], "pooled", "zero floor with {threads} threads must stay pooled");
         }
     });
 }
@@ -186,7 +249,7 @@ fn attention_masks_pads_and_matches_across_dispatch_paths() {
             assert!((mass - want).abs() < 1e-3, "example {b}: mass {mass} vs {want}");
         }
         for threads in [2usize, 4] {
-            let cfg = KernelConfig::default().with_threads(threads);
+            let cfg = KernelConfig::default().with_threads(threads).with_min_parallel_flops(0);
             let exec = KernelExec::new(cfg.clone());
             let mut buf = AttnScratchBuf::for_shape(batch, n, heads, d, exec.lanes());
             let mut ctx_p = vec![0f32; batch * n * h];
@@ -227,7 +290,8 @@ fn attention_scratch_reuse_leaks_nothing_across_shapes() {
     // fresh-scratch run bit-for-bit.
     forall("attention scratch reuse is stateless", 24, |rng, size| {
         let threads = 1 + rng.below(4) as usize;
-        let exec = KernelExec::new(KernelConfig::default().with_threads(threads));
+        let exec =
+            KernelExec::new(KernelConfig::default().with_threads(threads).with_min_parallel_flops(0));
         // One shared buffer sized for the largest shape in the sequence.
         let (max_batch, max_n, max_heads, max_d) = (3, 2 + size % 9, 3, 8);
         let mut shared =
@@ -376,6 +440,7 @@ fn int8_with_power_of_two_scales_is_bit_exact_and_thread_deterministic() {
                 threads,
                 kc,
                 mc,
+                min_parallel_flops: 0,
                 ..KernelConfig::default()
             });
             fout.fill(0.0);
@@ -450,6 +515,7 @@ mod simd_props {
                 threads: 1,
                 kc,
                 mc,
+                min_parallel_flops: 0,
                 ..KernelConfig::default()
             });
             packed.matmul_bias_gelu(&x, n, &b, &serial_exec, &mut serial);
@@ -458,6 +524,7 @@ mod simd_props {
                     threads,
                     kc,
                     mc,
+                    min_parallel_flops: 0,
                     ..KernelConfig::default()
                 });
                 let mut pooled = vec![0f32; n * m];

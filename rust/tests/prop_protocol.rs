@@ -1,13 +1,17 @@
 //! Property test: malformed, truncated, or otherwise hostile frames must
 //! always be answered with a structured JSON error — one reply line per
 //! offending line — and must never kill the connection loop: a valid
-//! request afterwards on the same socket still classifies.
+//! request afterwards on the same socket still classifies. The property
+//! runs against both connection edges (threads and, on Linux, epoll):
+//! frame dispatch is shared but the framing layer is not, and the epoll
+//! edge's incremental line parser sees exactly these hostile byte
+//! sequences.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
-use powerbert::coordinator::{BatchPolicy, Config, Coordinator, Policy, Server};
+use powerbert::coordinator::{BatchPolicy, Config, Coordinator, EdgeKind, Policy, Server};
 use powerbert::testutil::artifacts_available;
 use powerbert::testutil::prop::forall;
 use powerbert::util::json::Json;
@@ -66,11 +70,7 @@ fn assert_structured_error(line: &str) {
     assert!(ok, "error is neither v1 string nor v2 coded object: {line:?}");
 }
 
-#[test]
-fn hostile_frames_get_errors_and_never_kill_the_connection() {
-    if !artifacts_available() {
-        return;
-    }
+fn hostile_frames_on_edge(edge: EdgeKind) {
     let mut coordinator = Coordinator::start(Config {
         datasets: vec!["sst2".into()],
         policy: Policy::Fixed("bert".into()),
@@ -80,6 +80,7 @@ fn hostile_frames_get_errors_and_never_kill_the_connection() {
     .expect("coordinator");
     let server = Server::bind("127.0.0.1:0", coordinator.client())
         .expect("bind")
+        .with_edge(edge)
         .spawn()
         .expect("spawn");
     let addr = server.addr();
@@ -99,20 +100,36 @@ fn hostile_frames_get_errors_and_never_kill_the_connection() {
             writeln!(stream, "{hostile}").expect("write");
             line.clear();
             let n = reader.read_line(&mut line).expect("read");
-            assert!(n > 0, "connection closed after hostile frame {hostile:?}");
+            assert!(n > 0, "{edge:?}: connection closed after hostile frame {hostile:?}");
             assert_structured_error(&line);
         }
         // The connection loop must still serve real traffic.
         writeln!(stream, "{valid_v1}").expect("write valid");
         line.clear();
-        assert!(reader.read_line(&mut line).expect("read valid") > 0, "connection dead");
+        assert!(reader.read_line(&mut line).expect("read valid") > 0, "{edge:?}: connection dead");
         let j = Json::parse(line.trim()).expect("valid reply json");
         assert!(
             j.get("label").is_some(),
-            "valid request failed after hostile frames: {line}"
+            "{edge:?}: valid request failed after hostile frames: {line}"
         );
     });
 
     server.stop();
     coordinator.shutdown();
+}
+
+#[test]
+fn hostile_frames_get_errors_and_never_kill_the_connection() {
+    if !artifacts_available() {
+        return;
+    }
+    hostile_frames_on_edge(EdgeKind::Threads);
+}
+
+#[test]
+fn hostile_frames_get_errors_on_the_epoll_edge() {
+    if !artifacts_available() || !cfg!(target_os = "linux") {
+        return;
+    }
+    hostile_frames_on_edge(EdgeKind::Epoll);
 }
