@@ -10,6 +10,9 @@
 //!                   recomputed within each file from its own naive rows)
 //!   dispatch        vs_serial, plus the deterministic `chosen` path
 //!   thread_scaling  speedup_vs_1t
+//!   workers_sweep   speedup_vs_1w (coordinator throughput scaling)
+//!   adaptive        tokens_ratio_vs_fixed (deterministic given the
+//!                   committed artifacts — lower is better)
 //!
 //! `--absolute` additionally compares raw p50 seconds in the `serve`,
 //! `end_to_end` and `serve_sweep` sections — only meaningful when both
@@ -132,6 +135,34 @@ fn scaling_ratios(root: &Json) -> Rows {
     out
 }
 
+/// workers_sweep: speedup_vs_1w per (dataset, workers). Higher is better.
+fn workers_ratios(root: &Json) -> Rows {
+    let mut out = Rows::new();
+    for r in arr(root, "workers_sweep") {
+        let workers = f(r, "workers").unwrap_or(0.0) as u64;
+        if let Some(v) = f(r, "speedup_vs_1w") {
+            out.insert(format!("workers_sweep {}@{}w", s(r, "dataset"), workers), v);
+        }
+    }
+    out
+}
+
+/// adaptive: tokens_ratio_vs_fixed per (dataset, threshold). The ratio is
+/// deterministic given the committed artifacts, so any drift is a semantic
+/// change in the adaptive executor. Lower is better.
+fn adaptive_ratios(root: &Json) -> Rows {
+    let mut out = Rows::new();
+    for r in arr(root, "adaptive") {
+        if let (Some(t), Some(v)) = (f(r, "threshold"), f(r, "tokens_ratio_vs_fixed")) {
+            out.insert(
+                format!("adaptive {}/{}@t{t:.2}", s(r, "dataset"), s(r, "variant")),
+                v,
+            );
+        }
+    }
+    out
+}
+
 /// Absolute p50 seconds of a section, keyed by the given identity fields.
 /// Lower is better.
 fn absolute_p50(root: &Json, section: &str, keys: &[&str]) -> Rows {
@@ -225,6 +256,10 @@ fn main() {
     }
     println!("\nthread_scaling (speedup vs 1 thread, higher is better):");
     regressions += compare(&scaling_ratios(&old), &scaling_ratios(&new), threshold, true);
+    println!("\nworkers_sweep (speedup vs 1 worker, higher is better):");
+    regressions += compare(&workers_ratios(&old), &workers_ratios(&new), threshold, true);
+    println!("\nadaptive (tokens processed vs fixed schedule, lower is better):");
+    regressions += compare(&adaptive_ratios(&old), &adaptive_ratios(&new), threshold, false);
 
     if absolute {
         println!("\nserve p50 (seconds, lower is better):");

@@ -1,0 +1,243 @@
+"""Offline adaptive-retention calibration (committed pareto.json tables).
+
+Replicates the native runtime's adaptive executor (rust/src/runtime/
+adaptive.rs + native.rs) at batch size 1 — the composition-independent
+semantics: with one example per batch the batch-max rule degenerates to the
+example's own demanded k, so the sweep below is exactly what any serving
+batch composition is bounded by.
+
+For each threshold t the forward keeps, at encoder j,
+
+    keep_j = min(schedule[j], demanded_k(sig_j, mask_j, t))
+
+where demanded_k is the smallest k whose cumulative (descending) masked
+significance mass reaches t of the row's total — bit-identical decision
+rule to the Rust side (f32 scores, f64 accumulation, PAD excluded,
+degenerate rows demand 1). Selection then runs the unchanged CLS/PAD-pinned
+top-k (`keep_indices` tie-break: descending score, ascending index).
+
+The output is the schema-1 Pareto table the coordinator router loads:
+
+    {"schema": 1, "dataset": ..., "variant": ..., "metric": ...,
+     "examples": N, "points": [{"threshold", "metric", "mean_tokens",
+                                "est_latency_us"}, ...]}
+
+`est_latency_us` here is a deterministic linear-in-tokens estimate (the
+committed tables must not depend on the calibration machine); the Rust
+`eval --calibrate-pareto` path measures real wall time instead. Both are
+documented as relative numbers — the router's named tiers select on
+metric and mean_tokens only.
+
+Usage:
+    python -m compile.calibrate --dataset sst2 --variant power-default
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import layers as L
+from .config import BertConfig
+from .kernels import get_kernels
+from .model import BIG
+from .params_io import load_params
+
+DEFAULT_THRESHOLDS = (1.0, 0.98, 0.95, 0.9, 0.8, 0.6)
+
+# Deterministic latency model for the committed tables: a fixed per-request
+# overhead (embedding + pooler) plus a per-word-vector encoder cost. Units
+# are microseconds but only ratios are meaningful.
+LATENCY_BASE_US = 30.0
+LATENCY_PER_TOKEN_US = 1.5
+
+
+def demanded_k(sig: np.ndarray, mask: np.ndarray, threshold: float) -> int:
+    """Mirror of rust/src/runtime/adaptive.rs::demanded_k."""
+    n = int(sig.shape[0])
+    if n == 0:
+        return 1
+    if threshold >= 1.0:
+        return n
+    real = np.maximum(sig[mask > 0].astype(np.float32), np.float32(0.0))
+    total = float(np.sum(real, dtype=np.float64))
+    if real.size == 0 or total <= 0.0 or threshold <= 0.0:
+        return 1
+    desc = np.sort(real)[::-1]
+    target = float(np.float32(threshold)) * total
+    cum = np.cumsum(desc, dtype=np.float64)
+    hit = np.nonzero(cum >= target)[0]
+    if hit.size:
+        return int(hit[0]) + 1
+    return max(int(real.size), 1)
+
+
+def keep_index_set(sig: np.ndarray, mask: np.ndarray, keep: int) -> np.ndarray:
+    """Mirror of native.rs::keep_indices — CLS pinned on top, PAD sunk,
+    ties broken by ascending position, kept set in original order."""
+    scores = np.where(mask > 0, sig, np.float32(-1.0)).astype(np.float32)
+    scores[0] = np.float32(BIG)
+    order = np.argsort(-scores, kind="stable")
+    return np.sort(order[:keep])
+
+
+def forward_adaptive(
+    params,
+    cfg: BertConfig,
+    kernels,
+    tokens: np.ndarray,
+    segs: np.ndarray,
+    retention: Optional[Sequence[int]],
+    threshold: Optional[float],
+) -> Tuple[np.ndarray, int]:
+    """One example, eager (dynamic shapes) — returns (logits, tokens
+    processed: Σ over encoders of the surviving width after extraction)."""
+    import jax.numpy as jnp
+
+    mask = (tokens != 0).astype(np.float32)
+    x = L.embed(params, cfg, jnp.asarray(tokens), jnp.asarray(segs))
+    processed = 0
+    for j in range(cfg.num_layers):
+        layer = L.layer_at(params, cfg, j)
+        x1, sig = L.attn_half(layer, cfg, kernels, x, jnp.asarray(mask))
+        if retention is not None:
+            keep = max(int(retention[j]), 1)
+            if threshold is not None:
+                sig_np = np.asarray(sig, dtype=np.float32)
+                keep = min(keep, demanded_k(sig_np, mask, threshold))
+            if keep < x1.shape[0]:
+                idx = keep_index_set(np.asarray(sig, dtype=np.float32), mask, keep)
+                x1 = x1[jnp.asarray(idx)]
+                mask = mask[idx]
+        processed += int(x1.shape[0])
+        x = L.ffn_half(layer, cfg, kernels, x1)
+    logits = L.pool_and_classify(params, cfg, kernels, x)
+    return np.asarray(logits, dtype=np.float32), processed
+
+
+def metric_value(kind: str, logits: np.ndarray, labels: np.ndarray) -> float:
+    """Mirror of rust/src/eval/mod.rs (argmax: first strictly-greater wins,
+    which is np.argmax's first-occurrence rule)."""
+    pred = np.argmax(logits, axis=1)
+    lab = labels.astype(np.int64)
+    if kind == "accuracy":
+        return float(np.mean(pred == lab))
+    if kind == "matthews":
+        tp = float(np.sum((pred == 1) & (lab == 1)))
+        tn = float(np.sum((pred == 0) & (lab == 0)))
+        fp = float(np.sum((pred == 1) & (lab == 0)))
+        fn = float(np.sum((pred == 0) & (lab == 1)))
+        denom = np.sqrt((tp + fp) * (tp + fn) * (tn + fp) * (tn + fn))
+        return float((tp * tn - fp * fn) / denom) if denom > 0 else 0.0
+    raise ValueError(f"unsupported calibration metric {kind!r}")
+
+
+def effective_threshold(t: float) -> Optional[float]:
+    """Mirror of RetentionPolicy::threshold / infer_adaptive_at filtering:
+    only thresholds in the open interval (0, 1) leave the fixed path."""
+    return t if 0.0 < t < 1.0 else None
+
+
+def calibrate(artifact_dir: Path, thresholds: Sequence[float]):
+    meta = json.loads((artifact_dir / "meta.json").read_text())
+    params = load_params(str(artifact_dir / meta["weights"]))
+    data = np.load(artifact_dir.parent / "test.npz")
+    tokens, segs, labels = data["tokens"], data["segs"], data["labels"]
+    word = np.asarray(params["embed"]["word"])
+    w1 = np.asarray(params["layers"][0]["w1"])
+    pos = np.asarray(params["embed"]["pos"])
+    cfg = BertConfig(
+        vocab_size=word.shape[0],
+        hidden_size=meta["hidden_size"],
+        num_layers=meta["num_layers"],
+        num_heads=meta["num_heads"],
+        ffn_size=w1.shape[1],
+        max_len=pos.shape[0],
+        num_classes=meta["num_classes"],
+    )
+    kernels = get_kernels(use_pallas=False)
+    retention = meta.get("retention")
+    if retention is None:
+        raise SystemExit("calibration requires a PoWER variant (retention schedule)")
+
+    n = tokens.shape[0]
+    points = []
+    fixed_logits = None
+    report = []
+    for t in sorted(set(float(x) for x in thresholds), reverse=True):
+        logits = np.zeros((n, meta["num_classes"]), dtype=np.float32)
+        total_tokens = 0
+        for i in range(n):
+            logits[i], proc = forward_adaptive(
+                params, cfg, kernels, tokens[i], segs[i],
+                retention, effective_threshold(t),
+            )
+            total_tokens += proc
+        m = metric_value(meta["metric"], logits, labels)
+        mean_tokens = total_tokens / n
+        if fixed_logits is None:
+            fixed_logits = logits  # highest threshold first == fixed path
+        flips = int(np.sum(np.argmax(logits, 1) != np.argmax(fixed_logits, 1)))
+        margins = np.sort(logits, axis=1)
+        min_margin = float(np.min(margins[:, -1] - margins[:, -2]))
+        points.append({
+            "threshold": t,
+            "metric": m,
+            "mean_tokens": mean_tokens,
+            "est_latency_us": LATENCY_BASE_US + LATENCY_PER_TOKEN_US * mean_tokens,
+        })
+        report.append((t, m, mean_tokens, flips, min_margin))
+    doc = {
+        "schema": 1,
+        "dataset": meta["dataset"],
+        "variant": meta["variant"],
+        "metric": meta["metric"],
+        "examples": n,
+        "points": points,
+    }
+    return doc, report
+
+
+def select_balanced(points: List[dict]) -> dict:
+    """Mirror of ParetoTable::balanced for the printed summary."""
+    full = next((p for p in points if p["threshold"] >= 1.0), None)
+    floor = full["metric"] if full else max(p["metric"] for p in points)
+    ok = [p for p in points if p["metric"] >= floor]
+    return min(ok, key=lambda p: (p["mean_tokens"], -p["threshold"]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dataset", required=True)
+    ap.add_argument("--variant", default="power-default")
+    ap.add_argument("--artifacts", default=str(Path(__file__).resolve().parents[2] / "artifacts"))
+    ap.add_argument("--thresholds", default=",".join(str(t) for t in DEFAULT_THRESHOLDS))
+    ap.add_argument("--out", default=None, help="output path (default <variant dir>/pareto.json)")
+    args = ap.parse_args()
+
+    artifact_dir = Path(args.artifacts) / args.dataset / args.variant
+    thresholds = [float(t) for t in args.thresholds.split(",") if t.strip()]
+    doc, report = calibrate(artifact_dir, thresholds)
+
+    print(f"{doc['dataset']}/{doc['variant']} ({doc['metric']}, {doc['examples']} examples)")
+    print("  threshold   metric  mean_tokens  flips_vs_full  min_margin")
+    for t, m, mt, flips, margin in report:
+        print(f"  {t:9.3f}  {m:7.4f}  {mt:11.3f}  {flips:13d}  {margin:10.4f}")
+    bal = select_balanced(doc["points"])
+    fast = min(doc["points"], key=lambda p: (p["mean_tokens"], -p["metric"]))
+    print(f"  balanced -> threshold {bal['threshold']:.3f} "
+          f"(metric {bal['metric']:.4f}, {bal['mean_tokens']:.1f} tokens)")
+    print(f"  fastest  -> threshold {fast['threshold']:.3f} "
+          f"(metric {fast['metric']:.4f}, {fast['mean_tokens']:.1f} tokens)")
+
+    out = Path(args.out) if args.out else artifact_dir / "pareto.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

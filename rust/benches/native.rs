@@ -20,8 +20,16 @@
 //!    the measured per-layer word-vector counts (the paper's Figure 1
 //!    quantity, counted by the executor rather than derived from
 //!    meta.json), at both weight precisions;
-//! 5. **serve** — closed-loop p50/p99 through the in-process coordinator
-//!    client on the native backend.
+//! 5. **adaptive** — per-threshold mean word-vectors processed (batch-1
+//!    over the committed test split, the composition-independent number)
+//!    and batch-1 latency: the dial `eval --calibrate-pareto` calibrates.
+//!    The tokens ratio vs the fixed schedule is deterministic, so
+//!    `bench_diff` can hold it;
+//! 6. **serve** — closed-loop p50/p99 through the in-process coordinator
+//!    client on the native backend;
+//! 7. **workers sweep** — closed-loop throughput at 1/2/4 coordinator
+//!    workers, reported as speedup over 1 worker (the remaining snapshot
+//!    gap ROADMAP names).
 //!
 //!   cargo bench --bench native [PB_BENCH_ITERS=40] -- [--json PATH]
 //!
@@ -59,7 +67,9 @@ struct Snapshot {
     thread_scaling: Vec<Json>,
     dispatch: Vec<Json>,
     end_to_end: Vec<Json>,
+    adaptive: Vec<Json>,
     serve: Vec<Json>,
+    workers_sweep: Vec<Json>,
 }
 
 fn jobj(pairs: Vec<(&str, Json)>) -> Json {
@@ -86,7 +96,7 @@ impl Snapshot {
             .unwrap_or(Json::Arr(Vec::new()));
         let root = jobj(vec![
             ("bench", jstr("native")),
-            ("schema", Json::UInt(2)),
+            ("schema", Json::UInt(3)),
             ("isa", jstr(active_isa())),
             ("simd_active", Json::Bool(simd_active())),
             ("measure_iters", Json::UInt(cfg.measure_iters as u64)),
@@ -95,7 +105,9 @@ impl Snapshot {
             ("thread_scaling", Json::Arr(self.thread_scaling)),
             ("dispatch", Json::Arr(self.dispatch)),
             ("end_to_end", Json::Arr(self.end_to_end)),
+            ("adaptive", Json::Arr(self.adaptive)),
             ("serve", Json::Arr(self.serve)),
+            ("workers_sweep", Json::Arr(self.workers_sweep)),
             ("serve_sweep", prior_sweep),
         ]);
         match std::fs::write(path, root.to_string_pretty() + "\n") {
@@ -135,8 +147,10 @@ fn main() {
             }
         }
         bench_end_to_end(ds_name, ds, &cfg, &mut snap);
+        bench_adaptive(ds_name, ds, &cfg, &mut snap);
     }
     bench_serve(&registry, &cfg, &mut snap);
+    bench_workers_sweep(&registry, &cfg, &mut snap);
     if let Some(path) = json_path {
         snap.write(&path, &cfg);
     }
@@ -644,6 +658,188 @@ fn bench_end_to_end(
     if !table.rows.is_empty() {
         table.print();
     }
+}
+
+/// Closed-loop throughput at 1/2/4 coordinator workers on the first
+/// dataset (sst2 when present): `workers * 4` blocking client threads
+/// drive the pool flat out, and the row reports total req/s plus the
+/// speedup over the 1-worker row — the machine-independent ratio
+/// `bench_diff` preserves.
+fn bench_workers_sweep(registry: &Registry, cfg: &BenchConfig, snap: &mut Snapshot) {
+    let Some(ds_name) = registry
+        .datasets
+        .keys()
+        .find(|k| k.as_str() == "sst2")
+        .or_else(|| registry.datasets.keys().next())
+        .cloned()
+    else {
+        return;
+    };
+    let ds = ds_name.as_str();
+    let mut table = Table::new(
+        &format!("native serve — {ds}: closed-loop throughput vs workers (power-default)"),
+        &["workers", "clients", "requests", "req/s", "vs 1 worker"],
+    );
+    let mut base_rps = None;
+    for workers in [1usize, 2, 4] {
+        let c = match Coordinator::start(Config {
+            policy: Policy::Fixed("power-default".into()),
+            batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+            workers,
+            backend: BackendKind::Native,
+            ..Config::default()
+        }) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("SKIP workers sweep: {e:#}");
+                return;
+            }
+        };
+        let client = c.client();
+        let vocab = client.tokenizer().vocab.clone();
+        let clients = workers * 4;
+        let per_client = (cfg.measure_iters * 2).max(40);
+        // Warm the variant onto every worker before the timed window.
+        let mut warm = powerbert::workload::WorkloadGen::new(&vocab, 7);
+        for _ in 0..cfg.warmup_iters.max(4) {
+            let (text, _) = warm.sentence(12);
+            let _ = client.classify(ds, Input::Text { a: text, b: None }, Sla::default());
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..clients {
+                let client = client.clone();
+                let vocab = vocab.clone();
+                s.spawn(move || {
+                    let mut gen = powerbert::workload::WorkloadGen::new(&vocab, 17 + t as u64);
+                    for _ in 0..per_client {
+                        let (text, _) = gen.sentence(12);
+                        let _ =
+                            client.classify(ds, Input::Text { a: text, b: None }, Sla::default());
+                    }
+                });
+            }
+        });
+        let elapsed = t0.elapsed().as_secs_f64();
+        let total = (clients * per_client) as u64;
+        let rps = total as f64 / elapsed.max(1e-9);
+        if workers == 1 {
+            base_rps = Some(rps);
+        }
+        let rel = base_rps.map(|b| rps / b.max(1e-9)).unwrap_or(1.0);
+        table.row(vec![
+            workers.to_string(),
+            clients.to_string(),
+            total.to_string(),
+            format!("{rps:.1}"),
+            format!("{rel:.2}x"),
+        ]);
+        snap.workers_sweep.push(jobj(vec![
+            ("dataset", jstr(ds)),
+            ("variant", jstr("power-default")),
+            ("workers", Json::UInt(workers as u64)),
+            ("clients", Json::UInt(clients as u64)),
+            ("requests", Json::UInt(total)),
+            ("throughput_rps", Json::Num(rps)),
+            ("speedup_vs_1w", Json::Num(rel)),
+        ]));
+        drop(c);
+    }
+    table.print();
+}
+
+/// Adaptive retention sweep on power-default: per-threshold mean
+/// word-vectors processed and batch-1 latency. Batch-1 makes the tokens
+/// number composition-independent (the batch-max rule degenerates to the
+/// example's own demanded k), so the `tokens_ratio_vs_fixed` column is
+/// deterministic given the committed artifacts — `bench_diff` holds it.
+fn bench_adaptive(
+    ds_name: &str,
+    ds: &powerbert::runtime::DatasetArtifacts,
+    cfg: &BenchConfig,
+    snap: &mut Snapshot,
+) {
+    let Some(meta) = ds.variant("power-default") else { return };
+    let split = match TestSplit::load(&ds.test_npz()) {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut engine = match Engine::with_backend_config(BackendKind::Native, KernelConfig::default())
+    {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP adaptive bench: {e:#}");
+            return;
+        }
+    };
+    let model = match engine.load(meta) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("  ({ds_name}/power-default native load failed: {e:#})");
+            return;
+        }
+    };
+    if !model.supports_adaptive() {
+        return;
+    }
+    let n = split.n.min(64);
+    let seq = split.seq_len;
+    let mut table = Table::new(
+        &format!(
+            "native adaptive — {ds_name}/power-default: word-vectors vs threshold \
+             (batch=1, {n} examples)"
+        ),
+        &["threshold", "mean wv/example", "vs fixed", "p50/example"],
+    );
+    let mut fixed_mean = None;
+    for t in [1.0f32, 0.95, 0.8, 0.6] {
+        let thr = (t < 1.0).then_some(t);
+        let mut total = 0u64;
+        let mut ok = true;
+        for i in 0..n {
+            let rows = &split.tokens[i * seq..(i + 1) * seq];
+            let segs = &split.segments[i * seq..(i + 1) * seq];
+            match model.infer_adaptive_at(rows, segs, 1, seq, thr) {
+                Ok((_, Some(per_row))) => total += per_row.iter().sum::<u64>(),
+                Ok((_, None)) | Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            eprintln!("  ({ds_name} adaptive sweep failed at t={t})");
+            return;
+        }
+        let mean = total as f64 / n as f64;
+        if thr.is_none() {
+            fixed_mean = Some(mean);
+        }
+        let ratio = fixed_mean.map(|f| mean / f.max(1e-12)).unwrap_or(1.0);
+        let lat = time_fn(cfg, || {
+            std::hint::black_box(
+                model
+                    .infer_adaptive_at(&split.tokens[..seq], &split.segments[..seq], 1, seq, thr)
+                    .ok(),
+            );
+        });
+        table.row(vec![
+            if thr.is_none() { "fixed (1.0)".into() } else { format!("{t:.2}") },
+            format!("{mean:.1}"),
+            format!("{ratio:.3}x"),
+            fmt_time(lat.p50),
+        ]);
+        snap.adaptive.push(jobj(vec![
+            ("dataset", jstr(ds_name)),
+            ("variant", jstr("power-default")),
+            ("threshold", Json::Num(t as f64)),
+            ("examples", Json::UInt(n as u64)),
+            ("mean_tokens", Json::Num(mean)),
+            ("tokens_ratio_vs_fixed", Json::Num(ratio)),
+            ("p50_s", Json::Num(lat.p50)),
+        ]));
+    }
+    table.print();
 }
 
 /// Closed-loop serve latency through the in-process coordinator client:

@@ -94,6 +94,10 @@ pub struct VariantInfo {
     /// is faster at equal seq_len.
     pub aggregate_word_vectors: usize,
     pub retention: Option<Vec<usize>>,
+    /// Whether the variant carries a calibrated Pareto table — the named
+    /// compute tiers (`balanced`/`fast`) resolve to measured operating
+    /// points instead of degrading to the fixed schedule.
+    pub adaptive_calibrated: bool,
 }
 
 impl VariantInfo {
@@ -118,6 +122,10 @@ impl VariantInfo {
             retention: j.get("retention").and_then(Json::as_arr).map(|a| {
                 a.iter().filter_map(Json::as_usize).collect()
             }),
+            adaptive_calibrated: j
+                .get("adaptive_calibrated")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
         })
     }
 }
@@ -148,6 +156,9 @@ pub struct ServerInfo {
     /// Connection edge the server runs ("threads" / "epoll"); empty when
     /// the server predates the field.
     pub edge: String,
+    /// Whether the server understands the v2 `compute` field (per-request
+    /// adaptive retention); false when the server predates it.
+    pub adaptive: bool,
 }
 
 impl ServerInfo {
@@ -192,6 +203,7 @@ impl ServerInfo {
                 .and_then(Json::as_usize)
                 .unwrap_or(0),
             edge: j.get("edge").and_then(Json::as_str).unwrap_or("").to_string(),
+            adaptive: j.get("adaptive").and_then(Json::as_bool).unwrap_or(false),
         })
     }
 }
@@ -616,7 +628,7 @@ mod tests {
                 "variants":{"sst2":[{"variant":"bert","kind":"bert","metric":"accuracy",
                   "dev_metric":0.91,"seq_len":64,"num_classes":2,
                   "aggregate_word_vectors":768}]},
-                "precision":"int8","isa":"avx2+fma",
+                "precision":"int8","isa":"avx2+fma","adaptive":true,
                 "seq_buckets":[16,32],"max_connections":256}"#,
         )
         .unwrap();
@@ -627,10 +639,13 @@ mod tests {
         assert_eq!(info.max_connections, 256);
         assert_eq!(info.precision, "int8");
         assert_eq!(info.isa, "avx2+fma");
+        assert!(info.adaptive);
         let vs = &info.variants["sst2"];
         assert_eq!(vs[0].variant, "bert");
         assert_eq!(vs[0].dev_metric, Some(0.91));
         assert!(vs[0].retention.is_none());
+        // Absent flag (older server) parses as uncalibrated, not an error.
+        assert!(!vs[0].adaptive_calibrated);
     }
 
     #[test]

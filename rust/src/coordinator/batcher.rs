@@ -32,26 +32,50 @@ impl Default for BatchPolicy {
     }
 }
 
-/// What a batch queue is keyed by: one model variant at one seq bucket.
-/// Jobs under different keys never share a batch, so a flushed batch is
-/// homogeneous in both the executable it needs and its row length.
+/// What a batch queue is keyed by: one model variant at one seq bucket and
+/// one adaptive operating point. Jobs under different keys never share a
+/// batch, so a flushed batch is homogeneous in the executable it needs,
+/// its row length, *and* its retention threshold — under the batch-max
+/// execution rule a `fast` request co-batched with a `full` one would pay
+/// full compute, so they are kept apart instead.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BatchKey {
     /// "dataset/variant"
     pub variant: String,
     /// Row length the member jobs are encoded to.
     pub seq: usize,
+    /// Adaptive attention-mass threshold as raw bits (`f32::to_bits`) so
+    /// the key stays `Eq + Hash`; `None` = the fixed schedule.
+    pub threshold: Option<u32>,
 }
 
 impl BatchKey {
     pub fn new(variant: impl Into<String>, seq: usize) -> BatchKey {
-        BatchKey { variant: variant.into(), seq }
+        BatchKey { variant: variant.into(), seq, threshold: None }
+    }
+
+    /// Key for a specific adaptive operating point.
+    pub fn with_threshold(
+        variant: impl Into<String>,
+        seq: usize,
+        threshold: Option<f32>,
+    ) -> BatchKey {
+        BatchKey { variant: variant.into(), seq, threshold: threshold.map(f32::to_bits) }
+    }
+
+    /// The threshold back as a float (`None` = fixed schedule).
+    pub fn threshold_f32(&self) -> Option<f32> {
+        self.threshold.map(f32::from_bits)
     }
 }
 
 impl std::fmt::Display for BatchKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}@s{}", self.variant, self.seq)
+        write!(f, "{}@s{}", self.variant, self.seq)?;
+        if let Some(t) = self.threshold_f32() {
+            write!(f, "@t{t:.3}")?;
+        }
+        Ok(())
     }
 }
 
@@ -211,6 +235,8 @@ mod tests {
             segments: vec![0; 4],
             seq: 4,
             real_len: 3,
+            threshold: None,
+            compute: None,
             reply: ReplySink::Oneshot(tx),
         }
     }
@@ -291,6 +317,29 @@ mod tests {
         let rest = b.flush_due(now, true);
         assert_eq!(rest.len(), 1);
         assert_eq!(rest[0].key.seq, 64);
+    }
+
+    #[test]
+    fn operating_points_do_not_share_batches() {
+        // Same variant and seq bucket, different thresholds: a fast job
+        // must never ride (and pay for) a full-compute batch.
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        let fixed = BatchKey::with_threshold("k", 16, None);
+        let fast = BatchKey::with_threshold("k", 16, Some(0.6));
+        assert_eq!(fixed, BatchKey::new("k", 16));
+        assert_ne!(fixed, fast);
+        assert_eq!(fast.threshold_f32(), Some(0.6));
+        assert!(b.push(fixed.clone(), job(1), now).is_none());
+        assert!(b.push(fast.clone(), job(2), now).is_none());
+        let full = b.push(fixed.clone(), job(3), now).expect("fixed queue full");
+        assert_eq!(full.key, fixed);
+        assert_eq!(full.len(), 2);
+        assert_eq!(b.pending(), 1, "fast job still queued");
+        let rest = b.flush_due(now, true);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].key, fast);
+        assert_eq!(format!("{fast}"), "k@s16@t0.600");
     }
 
     #[test]

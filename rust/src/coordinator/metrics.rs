@@ -28,6 +28,16 @@ pub struct VariantStats {
     pub total: LatencyHistogram,
     /// Mean model-execution time per *batch*, by (batch, seq) cell.
     pub exec_by_cell: HashMap<(usize, usize), (u64 /*count*/, u64 /*sum_us*/)>,
+    /// Word-vectors actually processed across encoders (native backend
+    /// only; Σ per-row measurements). Under adaptive retention this is the
+    /// compute actually spent.
+    pub tokens_processed: u64,
+    /// Word-vectors the *fixed* schedule would have charged the same rows —
+    /// the denominator of the adaptive-savings ratio.
+    pub tokens_full: u64,
+    /// Operating-point histogram: resolved compute echo (`"full"`,
+    /// `"balanced@0.950"`, ...) -> requests served at it.
+    pub compute_points: BTreeMap<String, u64>,
 }
 
 impl VariantStats {
@@ -45,6 +55,16 @@ impl VariantStats {
             1.0
         } else {
             self.padded_tokens as f64 / self.real_tokens as f64
+        }
+    }
+
+    /// Fraction of fixed-schedule word-vectors actually processed (1.0 =
+    /// no adaptive savings; < 1.0 once adaptive requests land).
+    pub fn tokens_processed_ratio(&self) -> f64 {
+        if self.tokens_full == 0 {
+            1.0
+        } else {
+            self.tokens_processed as f64 / self.tokens_full as f64
         }
     }
 
@@ -103,6 +123,9 @@ pub struct WorkerStats {
     /// Instruction set the worker's kernels dispatch to ("scalar" /
     /// "avx2+fma"); empty until the first memory snapshot arrives.
     pub isa: &'static str,
+    /// Word-vectors this worker avoided processing thanks to adaptive
+    /// retention (fixed-schedule cost minus measured cost, summed).
+    pub tokens_saved: u64,
 }
 
 /// Process-wide metrics hub.
@@ -178,6 +201,27 @@ impl MetricsHub {
         }
     }
 
+    /// Record one request's adaptive-compute outcome: the operating point
+    /// that served it (`None` = fixed schedule, counted as `"full"`), the
+    /// word-vectors it actually paid and what the fixed schedule would
+    /// have charged.
+    pub fn record_adaptive(&self, key: &str, point: Option<&str>, processed: u64, full: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(key.to_string()).or_default();
+        s.tokens_processed += processed;
+        s.tokens_full += full;
+        *s.compute_points.entry(point.unwrap_or("full").to_string()).or_insert(0) += 1;
+    }
+
+    /// Credit word-vectors a pool worker skipped via adaptive retention.
+    pub fn record_worker_tokens_saved(&self, worker: usize, saved: u64) {
+        let mut w = self.workers.lock().unwrap();
+        if w.len() <= worker {
+            w.resize(worker + 1, WorkerStats::default());
+        }
+        w[worker].tokens_saved += saved;
+    }
+
     pub fn record_request(&self, key: &str, queue_us: u64, total_us: u64) {
         let mut m = self.inner.lock().unwrap();
         let s = m.entry(key.to_string()).or_default();
@@ -245,6 +289,18 @@ impl MetricsHub {
             v.insert("padding_waste".to_string(), Json::Num(s.padding_waste()));
             v.insert("real_tokens".to_string(), Json::UInt(s.real_tokens));
             v.insert("padded_tokens".to_string(), Json::UInt(s.padded_tokens));
+            v.insert("tokens_processed".to_string(), Json::UInt(s.tokens_processed));
+            v.insert("tokens_full".to_string(), Json::UInt(s.tokens_full));
+            v.insert(
+                "tokens_processed_ratio".to_string(),
+                Json::Num(s.tokens_processed_ratio()),
+            );
+            let points: BTreeMap<String, Json> = s
+                .compute_points
+                .iter()
+                .map(|(p, c)| (p.clone(), Json::UInt(*c)))
+                .collect();
+            v.insert("compute_points".to_string(), Json::Obj(points));
             v.insert("queue".to_string(), hist(&s.queue));
             v.insert("exec".to_string(), hist(&s.exec));
             v.insert("total".to_string(), hist(&s.total));
@@ -264,6 +320,7 @@ impl MetricsHub {
                 m.insert("pool_jobs".to_string(), Json::UInt(w.pool_jobs));
                 m.insert("precision".to_string(), Json::Str(w.precision.to_string()));
                 m.insert("isa".to_string(), Json::Str(w.isa.to_string()));
+                m.insert("tokens_saved".to_string(), Json::UInt(w.tokens_saved));
                 Json::Obj(m)
             })
             .collect();
@@ -294,6 +351,23 @@ impl MetricsHub {
                 s.total.quantile_us(0.5),
                 s.total.quantile_us(0.99),
             ));
+            if s.tokens_full > 0 {
+                out.push_str(&format!(
+                    "  adaptive: {} / {} word-vectors ({:.1}% of fixed schedule)",
+                    s.tokens_processed,
+                    s.tokens_full,
+                    100.0 * s.tokens_processed_ratio(),
+                ));
+                let points: Vec<String> = s
+                    .compute_points
+                    .iter()
+                    .map(|(p, c)| format!("{p}:{c}"))
+                    .collect();
+                if !points.is_empty() {
+                    out.push_str(&format!("  points [{}]", points.join(" ")));
+                }
+                out.push('\n');
+            }
         }
         let workers = self.worker_snapshot();
         if !workers.is_empty() {
@@ -313,6 +387,12 @@ impl MetricsHub {
                     if w.precision.is_empty() { "f32" } else { w.precision },
                     if w.isa.is_empty() { "scalar" } else { w.isa },
                 ));
+                if w.tokens_saved > 0 {
+                    out.push_str(&format!(
+                        "  worker {i} adaptive savings: {} word-vectors\n",
+                        w.tokens_saved
+                    ));
+                }
             }
         }
         out
@@ -411,6 +491,32 @@ mod tests {
         assert!(json.contains("arena_peak_bytes"), "stats json lacks arena gauge: {json}");
         assert!(json.contains("precision"), "stats json lacks precision: {json}");
         assert!(json.contains("isa"), "stats json lacks isa: {json}");
+    }
+
+    #[test]
+    fn adaptive_gauges_accumulate() {
+        let h = MetricsHub::new();
+        // Two balanced requests paying 80/104 each, one fixed at full cost.
+        h.record_adaptive("sst2/power-default", Some("balanced@0.950"), 80, 104);
+        h.record_adaptive("sst2/power-default", Some("balanced@0.950"), 80, 104);
+        h.record_adaptive("sst2/power-default", None, 104, 104);
+        let s = h.snapshot("sst2/power-default").unwrap();
+        assert_eq!(s.tokens_processed, 264);
+        assert_eq!(s.tokens_full, 312);
+        assert!((s.tokens_processed_ratio() - 264.0 / 312.0).abs() < 1e-9);
+        assert_eq!(s.compute_points.get("balanced@0.950"), Some(&2));
+        assert_eq!(s.compute_points.get("full"), Some(&1));
+        h.record_worker_tokens_saved(0, 48);
+        h.record_worker_tokens_saved(0, 2);
+        assert_eq!(h.worker_snapshot()[0].tokens_saved, 50);
+        // Surfaced in both outputs.
+        h.record_worker(0, 1, 10);
+        let rep = h.report();
+        assert!(rep.contains("adaptive"), "report lacks adaptive line: {rep}");
+        let json = h.to_json().to_string();
+        assert!(json.contains("tokens_processed_ratio"), "stats json: {json}");
+        assert!(json.contains("compute_points"), "stats json: {json}");
+        assert!(json.contains("tokens_saved"), "stats json: {json}");
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub use batcher::{Batch, BatchKey, BatchPolicy, Batcher};
 pub use edge::{EdgeGauges, EdgeKind};
 pub use metrics::{MetricsHub, VariantStats, WorkerStats};
 pub use protocol::{ErrorCode, PROTOCOL_VERSION};
-pub use request::{Input, Request, Response, ServeError, Sla};
+pub use request::{Compute, Input, Request, Response, ServeError, Sla};
 pub use router::{Policy, Router};
 pub use scheduler::{Client, Config, Coordinator};
 pub use server::{Server, ServerHandle, DEFAULT_MAX_CONNECTIONS, MAX_INFLIGHT_PER_CONNECTION};

@@ -8,7 +8,8 @@
 //!
 //! Client -> server:
 //!   {"v":2, "id":7, "dataset":"sst2", "text":"...", "text_b":"...",
-//!    "max_latency_ms":5.0, "min_metric":0.88, "variant":"power-default"}
+//!    "max_latency_ms":5.0, "min_metric":0.88, "variant":"power-default",
+//!    "compute":"balanced"}            // or "full" | "fast" | 0.9 (threshold)
 //!   {"v":2, "id":8, "dataset":"sst2", "tokens":[...], "segments":[...]}
 //!   {"v":2, "batch":[{...}, {...}]}              // entries as above, sans "v"
 //!   {"v":2, "id":1, "cmd":"hello" | "stats" | "variants"}
@@ -16,7 +17,8 @@
 //! Server -> client (ids echoed verbatim, completion may be out of order):
 //!   {"v":2, "id":7, "result":{"label":1, "scores":[...], "variant":"...",
 //!     "queue_us":120, "exec_us":900, "total_us":1080, "batch_size":4,
-//!     "seq_bucket":32}}
+//!     "seq_bucket":32, "tokens_processed":104, "compute":"balanced@0.950"}}
+//!     // tokens_processed/compute present only when measured/requested
 //!   {"v":2, "id":7, "error":{"code":"overloaded", "message":"..."}}
 //!   {"v":2, "id":1, "hello":{...}} / {"stats":{...}} / {"variants":[...]}
 //!
@@ -28,7 +30,7 @@
 
 use std::collections::BTreeMap;
 
-use super::request::{Input, Response, ServeError, Sla};
+use super::request::{Compute, Input, Response, ServeError, Sla};
 use crate::util::json::Json;
 
 /// Version advertised in the hello frame and stamped on every v2 frame.
@@ -164,6 +166,12 @@ pub fn response_payload(r: &Response) -> Json {
     m.insert("total_us".into(), Json::UInt(r.total_us));
     m.insert("batch_size".into(), Json::UInt(r.batch_size as u64));
     m.insert("seq_bucket".into(), Json::UInt(r.seq_bucket as u64));
+    if let Some(t) = r.tokens_processed {
+        m.insert("tokens_processed".into(), Json::UInt(t));
+    }
+    if let Some(c) = &r.compute {
+        m.insert("compute".into(), Json::Str(c.clone()));
+    }
     Json::Obj(m)
 }
 
@@ -193,6 +201,8 @@ pub fn response_from_payload(id: u64, j: &Json) -> Result<Response, String> {
         total_us: u("total_us"),
         batch_size: u("batch_size") as usize,
         seq_bucket: u("seq_bucket") as usize,
+        tokens_processed: j.get("tokens_processed").and_then(Json::as_u64),
+        compute: j.get("compute").and_then(Json::as_str).map(String::from),
     })
 }
 
@@ -237,6 +247,18 @@ pub fn request_frame(
     }
     if let Some(v) = &sla.variant {
         m.insert("variant".to_string(), Json::Str(v.clone()));
+    }
+    match sla.compute {
+        None => {}
+        Some(Compute::Threshold(t)) => {
+            m.insert("compute".to_string(), Json::Num(t));
+        }
+        Some(c) => {
+            // label() is Some for every named tier.
+            if let Some(l) = c.label() {
+                m.insert("compute".to_string(), Json::Str(l.to_string()));
+            }
+        }
     }
     Json::Obj(m)
 }
@@ -309,6 +331,7 @@ pub fn parse_request(j: &Json, in_batch: bool) -> Result<WireRequest, WireError>
                 | "max_latency_ms"
                 | "min_metric"
                 | "variant"
+                | "compute"
         ) || (!in_batch && key == "v");
         if !known {
             return fail(ErrorCode::BadRequest, format!("unknown field {key:?}"));
@@ -390,6 +413,36 @@ pub fn parse_request(j: &Json, in_batch: bool) -> Result<WireRequest, WireError>
                 None => return fail(ErrorCode::BadRequest, "variant must be a string".into()),
             },
         },
+        compute: match obj.get("compute") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                if let Some(s) = v.as_str() {
+                    match Compute::parse(s) {
+                        Some(c) => Some(c),
+                        None => {
+                            return fail(
+                                ErrorCode::BadRequest,
+                                format!("compute must be full|balanced|fast or a threshold, got {s:?}"),
+                            )
+                        }
+                    }
+                } else if let Some(t) = v.as_f64() {
+                    if t > 0.0 && t <= 1.0 {
+                        Some(Compute::Threshold(t))
+                    } else {
+                        return fail(
+                            ErrorCode::BadRequest,
+                            format!("compute threshold must be in (0, 1], got {t}"),
+                        );
+                    }
+                } else {
+                    return fail(
+                        ErrorCode::BadRequest,
+                        "compute must be a string tier or a numeric threshold".into(),
+                    );
+                }
+            }
+        },
     };
     Ok(WireRequest { id, dataset, input, sla })
 }
@@ -404,6 +457,7 @@ mod tests {
             max_latency_ms: Some(4.5),
             min_metric: None,
             variant: Some("power-default".into()),
+            compute: Some(Compute::Balanced),
         };
         let input = Input::Text { a: "pos_1 filler_2".into(), b: None };
         let j = request_frame(9007199254740993, "sst2", &input, &sla, true);
@@ -412,7 +466,36 @@ mod tests {
         assert_eq!(r.dataset, "sst2");
         assert_eq!(r.sla.max_latency_ms, Some(4.5));
         assert_eq!(r.sla.variant.as_deref(), Some("power-default"));
+        assert_eq!(r.sla.compute, Some(Compute::Balanced));
         assert!(matches!(r.input, Input::Text { .. }));
+    }
+
+    #[test]
+    fn compute_field_roundtrips_and_rejects_garbage() {
+        // Named tiers and numeric thresholds round-trip.
+        for (compute, expect) in [
+            (Compute::Full, Some(Compute::Full)),
+            (Compute::Fast, Some(Compute::Fast)),
+            (Compute::Threshold(0.9), Some(Compute::Threshold(0.9))),
+            (Compute::Threshold(1.0), Some(Compute::Threshold(1.0))),
+        ] {
+            let sla = Sla { compute: Some(compute), ..Default::default() };
+            let j = request_frame(1, "sst2", &Input::Text { a: "x".into(), b: None }, &sla, true);
+            let r = parse_request(&j, false).expect("parse");
+            assert_eq!(r.sla.compute, expect);
+        }
+        // Garbage tiers and out-of-range thresholds are bad_request.
+        for line in [
+            r#"{"v":2,"id":1,"dataset":"sst2","text":"x","compute":"turbo"}"#,
+            r#"{"v":2,"id":1,"dataset":"sst2","text":"x","compute":0.0}"#,
+            r#"{"v":2,"id":1,"dataset":"sst2","text":"x","compute":1.5}"#,
+            r#"{"v":2,"id":1,"dataset":"sst2","text":"x","compute":-0.2}"#,
+            r#"{"v":2,"id":1,"dataset":"sst2","text":"x","compute":[1]}"#,
+        ] {
+            let e = parse_request(&Json::parse(line).unwrap(), false).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{line}");
+            assert!(e.message.contains("compute"), "{line}: {}", e.message);
+        }
     }
 
     #[test]
@@ -525,6 +608,8 @@ mod tests {
             total_us: 1080,
             batch_size: 4,
             seq_bucket: 32,
+            tokens_processed: Some(104),
+            compute: Some("balanced@0.950".into()),
         };
         let frame = result_frame(r.id, &r);
         assert_eq!(frame.get("v").and_then(Json::as_u64), Some(PROTOCOL_VERSION));
@@ -534,6 +619,17 @@ mod tests {
         assert_eq!(back.label, 1);
         assert_eq!(back.scores, r.scores);
         assert_eq!(back.seq_bucket, 32);
+        assert_eq!(back.tokens_processed, Some(104));
+        assert_eq!(back.compute.as_deref(), Some("balanced@0.950"));
+        // Absent adaptive fields stay absent — v1-era replies parse as-is.
+        let bare = Response { tokens_processed: None, compute: None, ..r };
+        let frame = result_frame(bare.id, &bare);
+        let payload = frame.get("result").unwrap();
+        assert!(payload.get("tokens_processed").is_none());
+        assert!(payload.get("compute").is_none());
+        let back = response_from_payload(42, payload).unwrap();
+        assert_eq!(back.tokens_processed, None);
+        assert_eq!(back.compute, None);
     }
 
     #[test]

@@ -13,6 +13,46 @@ pub enum Input {
     Tokens { tokens: Vec<i32>, segments: Vec<i32> },
 }
 
+/// Requested adaptive-compute operating point (wire field `compute`).
+///
+/// Named tiers resolve against the serving variant's calibrated
+/// [`ParetoTable`](crate::runtime::adaptive::ParetoTable); an explicit
+/// threshold bypasses calibration. A variant without a table (or a
+/// non-adaptive backend) serves every tier at the fixed schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Compute {
+    /// The fixed compiled schedule — the default, and the parity anchor.
+    Full,
+    /// Cheapest calibrated point matching full-compute accuracy.
+    Balanced,
+    /// Minimum-tokens calibrated point, accuracy traded away.
+    Fast,
+    /// Explicit attention-mass threshold in (0, 1]; 1.0 = the schedule.
+    Threshold(f64),
+}
+
+impl Compute {
+    /// Parse the wire value: a named tier or a numeric threshold.
+    pub fn parse(s: &str) -> Option<Compute> {
+        match s {
+            "full" => Some(Compute::Full),
+            "balanced" => Some(Compute::Balanced),
+            "fast" => Some(Compute::Fast),
+            _ => None,
+        }
+    }
+
+    /// The wire label of a named tier (`Threshold` serializes as a number).
+    pub fn label(&self) -> Option<&'static str> {
+        match self {
+            Compute::Full => Some("full"),
+            Compute::Balanced => Some("balanced"),
+            Compute::Fast => Some("fast"),
+            Compute::Threshold(_) => None,
+        }
+    }
+}
+
 /// Per-request service-level objectives. The router uses these to pick a
 /// model variant: the paper's accuracy-vs-inference-time Pareto trade-off
 /// surfaced as a runtime policy.
@@ -24,6 +64,8 @@ pub struct Sla {
     pub min_metric: Option<f64>,
     /// Pin a specific variant (overrides the policy).
     pub variant: Option<String>,
+    /// Adaptive-compute operating point (None = `Full`).
+    pub compute: Option<Compute>,
 }
 
 /// A classification request submitted to the coordinator.
@@ -57,6 +99,14 @@ pub struct Response {
     /// Sequence bucket the batch executed at (== the variant's full
     /// `seq_len` when seq bucketing is off).
     pub seq_bucket: usize,
+    /// Word-vectors this example processed across encoders (native backend;
+    /// `None` when the backend does not measure it). Under adaptive
+    /// retention this is the per-request compute actually spent.
+    pub tokens_processed: Option<u64>,
+    /// Resolved operating point that served the request, echoed back —
+    /// e.g. `"full"`, `"balanced@0.950"`, `"threshold@0.900"`. `None`
+    /// when the request did not ask for adaptive compute.
+    pub compute: Option<String>,
 }
 
 /// Error returned when the coordinator cannot serve a request.
@@ -159,6 +209,13 @@ pub struct Job {
     /// True token count before bucket padding (`[CLS]`..`[SEP]` inclusive);
     /// the numerator of the padding-waste metric.
     pub real_len: usize,
+    /// Resolved adaptive threshold the router picked for this request
+    /// (`None` = fixed schedule). Part of the batch key: jobs at different
+    /// operating points never share a batch.
+    pub threshold: Option<f32>,
+    /// The resolved operating-point echo for the response (`compute`
+    /// field), fixed at routing time.
+    pub compute: Option<String>,
     pub reply: ReplySink,
 }
 

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use super::metrics::MetricsHub;
-use super::request::{ServeError, Sla};
+use super::request::{Compute, ServeError, Sla};
 use crate::runtime::VariantMeta;
 
 /// Routing policy when the request's SLA does not pin a variant.
@@ -122,6 +122,48 @@ impl Router {
             seq.min(meta.seq_len) as f64 / meta.seq_len as f64
         };
         meta.aggregate_word_vectors() as f64 * seq_ratio * self.prior_us_per_word_vector
+    }
+
+    /// Resolve a request's `compute` SLA to an adaptive operating point on
+    /// the chosen variant: `(threshold, echo)`, where `threshold = None`
+    /// executes the fixed schedule and `echo` is the resolved label sent
+    /// back on the wire (e.g. `"balanced@0.950"`).
+    ///
+    /// Named tiers come from the variant's calibrated Pareto table
+    /// (`pareto.json`); a variant without one serves every tier at the
+    /// fixed schedule (honest degradation — there is no measured frontier
+    /// to pick a point from). Explicit thresholds bypass calibration. A
+    /// resolved threshold ≥ 1.0 is the fixed schedule by definition.
+    pub fn operating_point(
+        meta: &VariantMeta,
+        compute: Option<&Compute>,
+    ) -> (Option<f32>, Option<String>) {
+        let c = match compute {
+            None => return (None, None),
+            Some(c) => c,
+        };
+        let clamp = |t: f64| -> Option<f32> {
+            (t > 0.0 && t < 1.0).then_some(t as f32)
+        };
+        match c {
+            Compute::Full => (None, Some("full".to_string())),
+            Compute::Threshold(t) => {
+                let th = clamp(*t);
+                (th, Some(format!("threshold@{:.3}", t.clamp(0.0, 1.0))))
+            }
+            Compute::Balanced | Compute::Fast => {
+                let point = meta.pareto.as_ref().and_then(|p| match c {
+                    Compute::Balanced => p.balanced(),
+                    _ => p.fastest(),
+                });
+                let label = c.label().unwrap_or("full");
+                match point {
+                    Some(p) => (clamp(p.threshold), Some(format!("{label}@{:.3}", p.threshold))),
+                    // No calibration: the tier degrades to the schedule.
+                    None => (None, Some(format!("{label}@schedule"))),
+                }
+            }
+        }
     }
 
     /// Pick the serving variant for (dataset, SLA).
@@ -242,6 +284,7 @@ mod tests {
             param_order: vec![],
             retention: Some(vec![agg / 6; 6]),
             dev_metric: Some(dev),
+            pareto: None,
             dir: PathBuf::from("/tmp"),
         }
     }
@@ -341,6 +384,39 @@ mod tests {
         // The ordering between variants is preserved under any prior.
         let cheap = meta("power-l0.001", "power", 0.85, 24);
         assert!(r.latency_estimate_us(&cheap) < native_est);
+    }
+
+    #[test]
+    fn operating_point_resolves_sla_tiers() {
+        use crate::runtime::adaptive::{ParetoPoint, ParetoTable};
+        let mut m = meta("power-default", "power", 0.895, 104);
+        // No table: named tiers degrade to the fixed schedule, explicit
+        // thresholds still work.
+        let (t, echo) = Router::operating_point(&m, Some(&Compute::Balanced));
+        assert_eq!(t, None);
+        assert_eq!(echo.as_deref(), Some("balanced@schedule"));
+        let (t, echo) = Router::operating_point(&m, Some(&Compute::Threshold(0.9)));
+        assert_eq!(t, Some(0.9f32));
+        assert_eq!(echo.as_deref(), Some("threshold@0.900"));
+        // With a calibrated table, balanced and fast pick *different*
+        // operating points — the SLA-differentiation contract.
+        m.pareto = Some(ParetoTable::new(vec![
+            ParetoPoint { threshold: 1.0, metric: 0.72, mean_tokens: 104.0, est_latency_us: 200.0 },
+            ParetoPoint { threshold: 0.95, metric: 0.72, mean_tokens: 80.0, est_latency_us: 160.0 },
+            ParetoPoint { threshold: 0.6, metric: 0.64, mean_tokens: 30.0, est_latency_us: 80.0 },
+        ]));
+        let (full_t, _) = Router::operating_point(&m, Some(&Compute::Full));
+        let (bal_t, bal_echo) = Router::operating_point(&m, Some(&Compute::Balanced));
+        let (fast_t, fast_echo) = Router::operating_point(&m, Some(&Compute::Fast));
+        assert_eq!(full_t, None);
+        assert_eq!(bal_t, Some(0.95f32));
+        assert_eq!(fast_t, Some(0.6f32));
+        assert_ne!(bal_t, fast_t);
+        assert_eq!(bal_echo.as_deref(), Some("balanced@0.950"));
+        assert_eq!(fast_echo.as_deref(), Some("fast@0.600"));
+        // Threshold 1.0 (and no compute at all) are the fixed schedule.
+        assert_eq!(Router::operating_point(&m, Some(&Compute::Threshold(1.0))).0, None);
+        assert_eq!(Router::operating_point(&m, None), (None, None));
     }
 
     #[test]

@@ -40,7 +40,9 @@ use super::batcher::{Batch, BatchKey, BatchPolicy, Batcher};
 use super::metrics::MetricsHub;
 use super::request::{Input, Job, ReplySink, Request, Response, ServeError, Sla};
 use super::router::{Policy, Router};
-use crate::runtime::{ArtifactStore, BackendKind, EngineWorker, KernelConfig, Registry};
+use crate::runtime::{
+    ArtifactStore, BackendKind, EngineWorker, KernelConfig, Registry, VariantMeta,
+};
 use crate::tokenizer::{Tokenizer, Vocab, PAD_ID};
 
 /// Coordinator configuration.
@@ -216,6 +218,11 @@ impl Client {
         reply: ReplySink,
     ) -> Result<(), ServeError> {
         let meta = self.router.route(dataset, &sla)?;
+        // Resolve the adaptive operating point once, at routing time: the
+        // threshold becomes part of the batch key (jobs at different
+        // points never share a batch) and the echo string rides back on
+        // the response unchanged.
+        let (threshold, compute) = Router::operating_point(&meta, sla.compute.as_ref());
         let (tokens, segments, seq, real_len) = match &input {
             Input::Text { a, b } => {
                 let need = self.tokenizer.true_len(a, b.as_deref());
@@ -275,6 +282,8 @@ impl Client {
             segments,
             seq,
             real_len,
+            threshold,
+            compute,
             reply,
         };
         match self.submit_tx.try_send(job) {
@@ -529,7 +538,11 @@ fn front_loop(
             .unwrap_or(Duration::from_millis(50));
         match submit_rx.recv_timeout(timeout) {
             Ok(job) => {
-                let key = BatchKey::new(format!("{}/{}", job.req.dataset, job.variant), job.seq);
+                let key = BatchKey::with_threshold(
+                    format!("{}/{}", job.req.dataset, job.variant),
+                    job.seq,
+                    job.threshold,
+                );
                 let now = Instant::now();
                 if let Some(b) = batcher.push(key, job, now) {
                     dispatch(b, &mut affinity);
@@ -595,6 +608,25 @@ fn worker_loop(
     crate::debugln!("executor", "worker {id} drained and stopped");
 }
 
+/// Word-vectors one example pays under the *fixed* retention schedule at a
+/// given seq bucket — mirrors the native layer loop (each encoder charges
+/// its post-extraction width) and is the baseline the adaptive tokens-saved
+/// gauges compare against.
+fn fixed_tokens_per_example(meta: &VariantMeta, seq: usize) -> u64 {
+    match &meta.retention {
+        Some(r) => {
+            let mut n = seq;
+            let mut total = 0u64;
+            for &k in r {
+                n = n.min(k.max(1));
+                total += n as u64;
+            }
+            total
+        }
+        None => (meta.num_layers * seq) as u64,
+    }
+}
+
 fn run_batch(
     worker: &mut EngineWorker,
     registry: &Registry,
@@ -633,7 +665,7 @@ fn run_batch(
         real_tokens += job.real_len;
     }
     let t_exec = Instant::now();
-    let result = model.infer_at(&tokens, &segments, n, seq);
+    let result = model.infer_adaptive_at(&tokens, &segments, n, seq, batch.key.threshold_f32());
     // Steady-state gauges (arena footprint, pool occupancy) for the
     // structured `stats` output — refreshed per batch so consumers see
     // memory reach its plateau.
@@ -641,16 +673,30 @@ fn run_batch(
         metrics.record_worker_memory(worker.id(), &mem);
     }
     match result {
-        Ok(logits) => {
+        Ok((logits, tokens_per_row)) => {
             let exec_us = t_exec.elapsed().as_micros() as u64;
             let cell = model.cell_for(n, seq).unwrap_or((n, seq));
             metrics.record_batch(&key, cell, n, real_tokens, exec_us);
             metrics.record_worker(worker.id(), n, exec_us);
+            // Adaptive gauges: what each row actually paid vs what the
+            // fixed schedule would have charged at this seq bucket.
+            let full_per_example = fixed_tokens_per_example(&meta, seq);
+            if let Some(per_row) = &tokens_per_row {
+                let saved: u64 = per_row
+                    .iter()
+                    .map(|&t| full_per_example.saturating_sub(t))
+                    .sum();
+                metrics.record_worker_tokens_saved(worker.id(), saved);
+            }
             let done = Instant::now();
             for (i, job) in batch.jobs.into_iter().enumerate() {
                 let total_us = done.duration_since(job.req.submitted).as_micros() as u64;
                 let queue_us = total_us.saturating_sub(exec_us);
                 metrics.record_request(&key, queue_us, total_us);
+                let tokens_processed = tokens_per_row.as_ref().and_then(|v| v.get(i)).copied();
+                if let Some(tp) = tokens_processed {
+                    metrics.record_adaptive(&key, job.compute.as_deref(), tp, full_per_example);
+                }
                 let resp = Response {
                     id: job.req.id,
                     label: logits.argmax(i),
@@ -661,6 +707,8 @@ fn run_batch(
                     total_us,
                     batch_size: n,
                     seq_bucket: cell.1,
+                    tokens_processed,
+                    compute: job.compute.clone(),
                 };
                 job.respond(Ok(resp));
             }

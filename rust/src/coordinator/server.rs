@@ -499,6 +499,13 @@ fn variant_payload(meta: &crate::runtime::VariantMeta) -> Json {
             Json::Arr(r.iter().map(|&x| Json::UInt(x as u64)).collect()),
         );
     }
+    // Whether this variant carries a calibrated Pareto table — i.e. the
+    // named compute tiers (`balanced`/`fast`) resolve to measured points
+    // rather than degrading to the fixed schedule.
+    m.insert(
+        "adaptive_calibrated".to_string(),
+        Json::Bool(meta.pareto.is_some()),
+    );
     Json::Obj(m)
 }
 
@@ -550,6 +557,11 @@ fn hello_payload(client: &Client, info: &ConnInfo) -> Json {
         Json::UInt(MAX_INFLIGHT_PER_CONNECTION as u64),
     );
     m.insert("edge".to_string(), Json::Str(info.edge.as_str().to_string()));
+    // Protocol capability: this server understands the v2 `compute` field
+    // (per-request adaptive retention). Whether a given variant actually
+    // adapts depends on its backend and calibration — see the per-variant
+    // `adaptive_calibrated` flag.
+    m.insert("adaptive".to_string(), Json::Bool(true));
     Json::Obj(m)
 }
 
@@ -711,6 +723,9 @@ fn handle_v1(req: &Json, client: &Client) -> Json {
         max_latency_ms: req.get("max_latency_ms").and_then(Json::as_f64),
         min_metric: req.get("min_metric").and_then(Json::as_f64),
         variant: req.get("variant").and_then(Json::as_str).map(String::from),
+        // v1 is frozen at the seed's behaviour: always the fixed schedule.
+        // Adaptive compute is a v2 feature (`compute` field).
+        compute: None,
     };
     match client.classify(&dataset, Input::Text { a: text, b: text_b }, sla) {
         Ok(r) => response_json(&r),
@@ -740,11 +755,17 @@ mod tests {
             total_us: 30,
             batch_size: 4,
             seq_bucket: 32,
+            tokens_processed: Some(88),
+            compute: Some("balanced@0.950".into()),
         };
         let j = response_json(&r);
         assert_eq!(j.get("label").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("scores").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.get("seq_bucket").unwrap().as_f64(), Some(32.0));
+        // The shared serializer flattens the adaptive fields into v1
+        // replies too — one serializer, no dialect drift.
+        assert_eq!(j.get("tokens_processed").unwrap().as_u64(), Some(88));
+        assert_eq!(j.get("compute").unwrap().as_str(), Some("balanced@0.950"));
         // v1 replies never carry a protocol version marker.
         assert!(j.get("v").is_none());
     }

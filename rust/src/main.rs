@@ -43,6 +43,9 @@ fn main() {
     .opt("dataset", None, "eval: dataset name")
     .opt("variant", Some("bert"), "eval: variant name")
     .opt("batch", Some("32"), "eval: batch size")
+    .opt("thresholds", None, "eval: comma-separated attention-mass thresholds for --calibrate-pareto (default 1.0,0.98,0.95,0.9,0.8,0.6)")
+    .opt("pareto-out", None, "eval: output path for the calibrated Pareto table (default <variant dir>/pareto.json)")
+    .flag("calibrate-pareto", "eval: sweep adaptive thresholds over the test split and write the accuracy-vs-tokens Pareto table the router serves SLAs from")
     .flag("preload", "serve: load all variants at startup");
 
     let parsed = match args.parse() {
@@ -282,6 +285,9 @@ fn cmd_eval(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
         }
     };
     let metric = Metric::parse(&meta.metric).unwrap_or(Metric::Accuracy);
+    if parsed.has("calibrate-pareto") {
+        return cmd_calibrate(parsed, meta, &model, &split, metric);
+    }
     let t0 = std::time::Instant::now();
     let mut outputs: Vec<f32> = Vec::new();
     let mut num_classes = meta.num_classes;
@@ -314,6 +320,119 @@ fn cmd_eval(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
         secs,
         split.n as f64 / secs
     );
+    0
+}
+
+/// `eval --calibrate-pareto`: sweep attention-mass thresholds over the
+/// committed test split and write the machine-readable Pareto table
+/// (`pareto.json`, schema 1) that the router maps request SLAs onto.
+///
+/// Each threshold runs at batch 1 so an example's executed kept-set is
+/// exactly its own demanded k — the table is independent of batch
+/// composition and reproducible run to run. `est_latency_us` is measured
+/// on the calibration machine (treat as relative); the router's named
+/// tiers select on metric and mean tokens only.
+fn cmd_calibrate(
+    parsed: &powerbert::util::cli::Parsed,
+    meta: &powerbert::runtime::VariantMeta,
+    model: &powerbert::runtime::LoadedModel,
+    split: &TestSplit,
+    metric: Metric,
+) -> i32 {
+    use powerbert::runtime::adaptive::{ParetoPoint, ParetoTable};
+    use powerbert::util::json::Json;
+
+    if !model.supports_adaptive() {
+        eprintln!(
+            "{}/{} cannot adapt: adaptive retention needs the native backend \
+             and a retention schedule (got backend {:?}, retention {})",
+            meta.dataset,
+            meta.variant,
+            model.backend_name(),
+            if meta.retention.is_some() { "present" } else { "absent" },
+        );
+        return 1;
+    }
+    let thresholds: Vec<f64> = match parsed.get("thresholds") {
+        None => vec![1.0, 0.98, 0.95, 0.9, 0.8, 0.6],
+        Some(raw) => {
+            let mut ts = Vec::new();
+            for part in raw.split(',') {
+                match part.trim().parse::<f64>() {
+                    Ok(t) if t > 0.0 && t <= 1.0 => ts.push(t),
+                    _ => {
+                        eprintln!("--thresholds: expected numbers in (0, 1], got {part:?}");
+                        return 2;
+                    }
+                }
+            }
+            ts
+        }
+    };
+    let seq = split.seq_len;
+    let mut points = Vec::with_capacity(thresholds.len());
+    for &t in &thresholds {
+        let thr = (t < 1.0).then_some(t as f32);
+        let mut outputs: Vec<f32> = Vec::with_capacity(split.n * meta.num_classes);
+        let mut num_classes = meta.num_classes;
+        let mut tokens_total: u64 = 0;
+        let t0 = std::time::Instant::now();
+        for i in 0..split.n {
+            let toks = &split.tokens[i * seq..(i + 1) * seq];
+            let segs = &split.segments[i * seq..(i + 1) * seq];
+            match model.infer_adaptive_at(toks, segs, 1, seq, thr) {
+                Ok((l, per_row)) => {
+                    num_classes = l.num_classes;
+                    outputs.extend_from_slice(&l.values);
+                    tokens_total += per_row.and_then(|v| v.first().copied()).unwrap_or(0);
+                }
+                Err(e) => {
+                    eprintln!("infer at threshold {t}: {e:#}");
+                    return 1;
+                }
+            }
+        }
+        let us = t0.elapsed().as_micros() as f64;
+        let m = metric.compute(&outputs, num_classes, &split.labels);
+        let mean_tokens = tokens_total as f64 / split.n as f64;
+        println!(
+            "threshold {t:.3}: {} = {m:.4}, mean tokens {mean_tokens:.1}, \
+             {:.0} us/example",
+            meta.metric,
+            us / split.n as f64,
+        );
+        points.push(ParetoPoint {
+            threshold: t,
+            metric: m,
+            mean_tokens,
+            est_latency_us: us / split.n as f64,
+        });
+    }
+    let table = ParetoTable::new(points);
+    if let (Some(full), Some(bal), Some(fast)) = (table.full(), table.balanced(), table.fastest()) {
+        println!(
+            "operating points: full={:.3} balanced={:.3} ({:.1} vs {:.1} tokens) fast={:.3}",
+            full.threshold, bal.threshold, bal.mean_tokens, full.mean_tokens, fast.threshold,
+        );
+    }
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("schema".to_string(), Json::UInt(1));
+    doc.insert("dataset".to_string(), Json::Str(meta.dataset.clone()));
+    doc.insert("variant".to_string(), Json::Str(meta.variant.clone()));
+    doc.insert("metric".to_string(), Json::Str(meta.metric.clone()));
+    doc.insert("examples".to_string(), Json::UInt(split.n as u64));
+    doc.insert("points".to_string(), table.points_json());
+    let out = parsed
+        .get("pareto-out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| meta.dir.join("pareto.json"));
+    let mut body = Json::Obj(doc).to_string();
+    body.push('\n');
+    if let Err(e) = std::fs::write(&out, body) {
+        eprintln!("write {}: {e}", out.display());
+        return 1;
+    }
+    println!("wrote {} ({} points)", out.display(), table.points.len());
     0
 }
 

@@ -1,0 +1,303 @@
+//! Adaptive compute: per-request dynamic retention.
+//!
+//! PoWER-BERT compiles one retention schedule per variant. The native
+//! backend, however, already computes per-example attention-column
+//! significance at every encoder — the same signal the schedule was
+//! derived from offline. This module turns that signal into a *runtime*
+//! dial (the TR-BERT / Latency-Adjustable-Transformer scenario):
+//!
+//! * [`RetentionPolicy`] — `Fixed` replays the compiled schedule;
+//!   `AttentionMass { threshold }` lets each example demand the smallest
+//!   kept-set whose cumulative significance mass reaches `threshold` of
+//!   its row's total mass ([`demanded_k`]).
+//! * **Batch-max execution rule** — the batch executes at the *maximum*
+//!   demanded k across its examples, clamped to the compiled schedule as
+//!   a ceiling. Uniform GEMM shapes are preserved (no ragged batches),
+//!   the CLS/PAD pinning invariant is enforced unchanged by
+//!   `keep_indices`, and — because adaptive widths never exceed the
+//!   schedule — every preplanned `ForwardArena` slab stays valid.
+//! * [`ParetoTable`] — the machine-readable output of the offline
+//!   calibration pass (`eval --calibrate-pareto`): threshold → dev
+//!   metric, mean tokens processed, estimated latency. The coordinator
+//!   router loads `pareto.json` from the variant's artifact directory
+//!   and maps request SLAs (`compute: "full" | "balanced" | "fast"` or
+//!   an explicit threshold) to an operating point on that frontier.
+//!
+//! A threshold ≥ 1.0 is *defined* as the fixed schedule: the executor
+//! short-circuits to the non-adaptive code path, so `threshold: 1.0`
+//! reproduces fixed-schedule logits bit for bit (no float summation
+//! order divergence — asserted by `rust/tests/adaptive.rs`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// How a native cell picks each encoder's kept-set size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RetentionPolicy {
+    /// The variant's compiled retention schedule, exactly.
+    Fixed,
+    /// Per-example demanded k from cumulative attention mass, clamped to
+    /// the compiled schedule; the batch runs at the per-batch max.
+    AttentionMass { threshold: f32 },
+}
+
+impl RetentionPolicy {
+    /// The effective significance threshold: `None` means the fixed
+    /// schedule (including `AttentionMass` at threshold ≥ 1.0, which is
+    /// defined to be the schedule — see the module docs).
+    pub fn threshold(&self) -> Option<f32> {
+        match *self {
+            RetentionPolicy::Fixed => None,
+            RetentionPolicy::AttentionMass { threshold } if threshold >= 1.0 => None,
+            RetentionPolicy::AttentionMass { threshold } => Some(threshold.max(0.0)),
+        }
+    }
+}
+
+/// Smallest k whose cumulative significance mass reaches `threshold` of
+/// the row's total mass, over the real (non-PAD) positions of one
+/// example at the current width `n = sig.len()`.
+///
+/// `scratch` must hold at least `n` floats (the caller's top-k score
+/// region — this function is on the zero-allocation steady-state path).
+/// Mass is taken from the raw significance scores: PAD positions
+/// (mask == 0) contribute nothing and are never demanded. The result is
+/// in `1..=n`; degenerate rows (no mass) demand 1 (CLS survives). The
+/// caller still clamps to the compiled schedule and pins CLS/PAD via
+/// `keep_indices` — this function only sizes the kept set.
+pub fn demanded_k(sig: &[f32], mask: &[f32], threshold: f32, scratch: &mut [f32]) -> usize {
+    let n = sig.len();
+    debug_assert_eq!(mask.len(), n);
+    debug_assert!(scratch.len() >= n);
+    if n == 0 {
+        return 1;
+    }
+    if threshold >= 1.0 {
+        return n;
+    }
+    let mut real = 0usize;
+    let mut total = 0f64;
+    for i in 0..n {
+        if mask[i] > 0.0 {
+            let s = sig[i].max(0.0);
+            scratch[real] = s;
+            real += 1;
+            total += s as f64;
+        }
+    }
+    if real == 0 || total <= 0.0 || threshold <= 0.0 {
+        return 1;
+    }
+    scratch[..real].sort_unstable_by(|a, b| b.total_cmp(a));
+    let target = threshold as f64 * total;
+    let mut cum = 0f64;
+    for (k, &s) in scratch[..real].iter().enumerate() {
+        cum += s as f64;
+        if cum >= target {
+            return k + 1;
+        }
+    }
+    real.max(1)
+}
+
+/// One calibrated operating point: a threshold and what it buys.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    /// Attention-mass threshold (1.0 = the fixed schedule).
+    pub threshold: f64,
+    /// Dev-set metric at this threshold (the variant's `metric` kind).
+    pub metric: f64,
+    /// Mean word-vectors processed per example (Σ over encoders).
+    pub mean_tokens: f64,
+    /// Mean measured latency per example during calibration, µs. A
+    /// calibration-machine number — treat as relative, not absolute.
+    pub est_latency_us: f64,
+}
+
+/// The accuracy–latency frontier emitted by `eval --calibrate-pareto`
+/// and loaded by the router from `<variant dir>/pareto.json`.
+///
+/// Wire format (machine-readable, schema 1):
+/// ```json
+/// {"schema": 1, "dataset": "sst2", "variant": "power-default",
+///  "metric": "accuracy", "examples": 128,
+///  "points": [{"threshold": 1.0, "metric": 0.7266,
+///              "mean_tokens": 104.0, "est_latency_us": 180.0}, ...]}
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParetoTable {
+    /// Points sorted by descending threshold (full compute first).
+    pub points: Vec<ParetoPoint>,
+}
+
+impl ParetoTable {
+    pub fn new(mut points: Vec<ParetoPoint>) -> ParetoTable {
+        points.sort_by(|a, b| b.threshold.total_cmp(&a.threshold));
+        ParetoTable { points }
+    }
+
+    /// Parse the `points` list out of a calibration JSON document.
+    pub fn from_json(j: &Json) -> Result<ParetoTable> {
+        let arr = j
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("pareto table has no points array"))?;
+        let mut points = Vec::with_capacity(arr.len());
+        for p in arr {
+            let f = |k: &str| {
+                p.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("pareto point missing {k:?}"))
+            };
+            points.push(ParetoPoint {
+                threshold: f("threshold")?,
+                metric: f("metric")?,
+                mean_tokens: f("mean_tokens")?,
+                est_latency_us: f("est_latency_us")?,
+            });
+        }
+        Ok(ParetoTable::new(points))
+    }
+
+    pub fn load(path: &Path) -> Result<ParetoTable> {
+        let j = Json::parse_file(path).with_context(|| format!("read {}", path.display()))?;
+        ParetoTable::from_json(&j).with_context(|| format!("parse {}", path.display()))
+    }
+
+    /// The points list as JSON (the caller wraps it with dataset/variant
+    /// identity fields).
+    pub fn points_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("threshold".to_string(), Json::Num(p.threshold));
+                    m.insert("metric".to_string(), Json::Num(p.metric));
+                    m.insert("mean_tokens".to_string(), Json::Num(p.mean_tokens));
+                    m.insert("est_latency_us".to_string(), Json::Num(p.est_latency_us));
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
+
+    /// The full-compute reference point (threshold ≥ 1.0), if calibrated.
+    pub fn full(&self) -> Option<&ParetoPoint> {
+        self.points.iter().find(|p| p.threshold >= 1.0)
+    }
+
+    /// Cheapest point that matches full-compute accuracy: minimum mean
+    /// tokens among points whose metric is ≥ the full point's (absent a
+    /// full point, ≥ the best metric in the table).
+    pub fn balanced(&self) -> Option<&ParetoPoint> {
+        let floor = self
+            .full()
+            .map(|p| p.metric)
+            .or_else(|| self.points.iter().map(|p| p.metric).max_by(f64::total_cmp))?;
+        self.points
+            .iter()
+            .filter(|p| p.metric >= floor)
+            .min_by(|a, b| {
+                a.mean_tokens
+                    .total_cmp(&b.mean_tokens)
+                    // Tie on tokens -> prefer the higher (safer) threshold.
+                    .then(b.threshold.total_cmp(&a.threshold))
+            })
+    }
+
+    /// Minimum-tokens point, accuracy be damned — the `"fast"` SLA.
+    pub fn fastest(&self) -> Option<&ParetoPoint> {
+        self.points.iter().min_by(|a, b| {
+            a.mean_tokens.total_cmp(&b.mean_tokens).then(b.metric.total_cmp(&a.metric))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_threshold_clamps_and_short_circuits() {
+        assert_eq!(RetentionPolicy::Fixed.threshold(), None);
+        assert_eq!(RetentionPolicy::AttentionMass { threshold: 1.0 }.threshold(), None);
+        assert_eq!(RetentionPolicy::AttentionMass { threshold: 1.5 }.threshold(), None);
+        assert_eq!(
+            RetentionPolicy::AttentionMass { threshold: 0.9 }.threshold(),
+            Some(0.9)
+        );
+    }
+
+    #[test]
+    fn demanded_k_concentrated_vs_uniform_mass() {
+        let mut scratch = [0f32; 8];
+        // One dominant position: tiny k satisfies a high threshold.
+        let sig = [10.0, 0.1, 0.1, 0.1];
+        let mask = [1.0f32; 4];
+        assert_eq!(demanded_k(&sig, &mask, 0.9, &mut scratch), 1);
+        // Uniform mass: k scales with the threshold.
+        let sig = [1.0f32; 4];
+        assert_eq!(demanded_k(&sig, &mask, 0.5, &mut scratch), 2);
+        assert_eq!(demanded_k(&sig, &mask, 0.75, &mut scratch), 3);
+    }
+
+    #[test]
+    fn demanded_k_ignores_pad_and_handles_degenerates() {
+        let mut scratch = [0f32; 8];
+        let sig = [1.0, 5.0, 3.0, 9.0];
+        let mask = [1.0, 1.0, 0.0, 0.0]; // last two are PAD
+        // PAD mass excluded: total = 6, top real = 5 -> k=1 at 0.8 of 6? 5 < 4.8 is false -> 1
+        assert_eq!(demanded_k(&sig, &mask, 0.8, &mut scratch), 1);
+        assert_eq!(demanded_k(&sig, &mask, 0.9, &mut scratch), 2);
+        // All PAD / zero mass / nonpositive threshold -> 1 (CLS survives).
+        assert_eq!(demanded_k(&sig, &[0.0; 4], 0.5, &mut scratch), 1);
+        assert_eq!(demanded_k(&[0.0; 4], &mask, 0.5, &mut scratch), 1);
+        assert_eq!(demanded_k(&sig, &mask, 0.0, &mut scratch), 1);
+        // Threshold >= 1.0 demands full width.
+        assert_eq!(demanded_k(&sig, &mask, 1.0, &mut scratch), 4);
+    }
+
+    #[test]
+    fn demanded_k_is_monotone_in_threshold() {
+        let mut scratch = [0f32; 16];
+        let sig = [3.0, 0.5, 2.0, 0.1, 1.0, 0.7, 0.2, 0.9];
+        let mask = [1.0f32; 8];
+        let mut last = 0usize;
+        for t in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let k = demanded_k(&sig, &mask, t, &mut scratch);
+            assert!(k >= last, "k not monotone at threshold {t}");
+            assert!(k >= 1 && k <= 8);
+            last = k;
+        }
+    }
+
+    #[test]
+    fn pareto_selection_rules() {
+        let table = ParetoTable::new(vec![
+            ParetoPoint { threshold: 1.0, metric: 0.72, mean_tokens: 104.0, est_latency_us: 200.0 },
+            ParetoPoint { threshold: 0.95, metric: 0.72, mean_tokens: 80.0, est_latency_us: 160.0 },
+            ParetoPoint { threshold: 0.8, metric: 0.70, mean_tokens: 50.0, est_latency_us: 110.0 },
+            ParetoPoint { threshold: 0.5, metric: 0.61, mean_tokens: 20.0, est_latency_us: 60.0 },
+        ]);
+        assert_eq!(table.full().unwrap().threshold, 1.0);
+        // balanced: equal accuracy to full, fewer tokens.
+        assert_eq!(table.balanced().unwrap().threshold, 0.95);
+        assert_eq!(table.fastest().unwrap().threshold, 0.5);
+        // Round-trip through JSON.
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("points".to_string(), table.points_json());
+        let back = ParetoTable::from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back, table);
+    }
+
+    #[test]
+    fn pareto_empty_and_missing_points() {
+        let t = ParetoTable::default();
+        assert!(t.full().is_none() && t.balanced().is_none() && t.fastest().is_none());
+        assert!(ParetoTable::from_json(&Json::Obj(Default::default())).is_err());
+    }
+}

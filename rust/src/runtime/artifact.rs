@@ -44,6 +44,10 @@ pub struct VariantMeta {
     /// PoWER retention configuration (absent for non-PoWER variants).
     pub retention: Option<Vec<usize>>,
     pub dev_metric: Option<f64>,
+    /// Calibrated accuracy–latency frontier (`<dir>/pareto.json`, emitted
+    /// by `eval --calibrate-pareto`; absent until a variant is calibrated).
+    /// The router maps request SLAs to adaptive operating points from it.
+    pub pareto: Option<crate::runtime::adaptive::ParetoTable>,
     pub dir: PathBuf,
 }
 
@@ -108,6 +112,22 @@ impl VariantMeta {
             param_order,
             retention,
             dev_metric: j.get("dev_metric").and_then(Json::as_f64),
+            pareto: {
+                let p = dir.join("pareto.json");
+                if p.exists() {
+                    match crate::runtime::adaptive::ParetoTable::load(&p) {
+                        Ok(t) => Some(t),
+                        Err(e) => {
+                            // A malformed table must not take the variant
+                            // down — it only disables adaptive routing.
+                            crate::warnln!("registry", "ignoring {}: {e:#}", p.display());
+                            None
+                        }
+                    }
+                } else {
+                    None
+                }
+            },
             dir: dir.to_path_buf(),
         })
     }

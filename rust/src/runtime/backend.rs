@@ -108,6 +108,11 @@ pub struct ExecOutput {
     /// when the executor can trace elimination (native power variants and
     /// PJRT debug bundles).
     pub kept: Option<Vec<i32>>,
+    /// Word-vectors processed per batch row (Σ over encoder layers of the
+    /// post-extraction width — the paper's aggregate word-vector count,
+    /// per example). Native backend only; the adaptive retention path
+    /// makes this vary with the input.
+    pub tokens_per_row: Option<Vec<u64>>,
 }
 
 /// Steady-state memory/dispatch counters of one loaded model's executor
@@ -137,7 +142,12 @@ pub struct MemoryStats {
 /// (batch, seq) token grids. Deliberately not `Send` — PJRT state is
 /// thread-pinned, and workers own their models.
 pub trait CellExecutor {
-    /// Execute `tokens`/`segments` of shape [batch, seq].
+    /// Execute `tokens`/`segments` of shape [batch, seq]. `threshold`, when
+    /// active (`0 < t < 1`), selects per-example adaptive retention
+    /// ([`adaptive`](super::adaptive)): each extract layer keeps the batch
+    /// max of the demanded kept-set sizes, with the compiled schedule as a
+    /// ceiling. Backends without adaptive support ignore it (they execute
+    /// the fixed schedule).
     fn execute(
         &self,
         tokens: &[i32],
@@ -145,6 +155,7 @@ pub trait CellExecutor {
         batch: usize,
         seq: usize,
         want_trace: bool,
+        threshold: Option<f32>,
     ) -> Result<ExecOutput>;
 
     /// Cumulative word-vectors processed per encoder layer since load
@@ -367,10 +378,10 @@ impl LoadedModel {
             )
         })?;
         let out = if n == bucket && seq == seq_bucket {
-            self.exec.execute(tokens, segments, bucket, seq_bucket, false)?
+            self.exec.execute(tokens, segments, bucket, seq_bucket, false, None)?
         } else {
             let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
-            self.exec.execute(&t, &s, bucket, seq_bucket, false)?
+            self.exec.execute(&t, &s, bucket, seq_bucket, false, None)?
         };
         let nc = out.num_classes;
         if out.logits.len() < n * nc {
@@ -382,6 +393,67 @@ impl LoadedModel {
         Ok(Logits { values: out.logits[..n * nc].to_vec(), batch: n, num_classes: nc })
     }
 
+    /// Whether this model can execute per-request adaptive retention: the
+    /// native executor with a retention schedule (the schedule is the
+    /// adaptive ceiling, so a variant without one has nothing to adapt).
+    pub fn supports_adaptive(&self) -> bool {
+        self.backend == "native" && self.meta.retention.is_some()
+    }
+
+    /// [`infer_at`](Self::infer_at) with an optional attention-mass
+    /// threshold (see [`adaptive`](super::adaptive)). Returns the logits
+    /// plus, when the backend measures it, the per-row word-vectors
+    /// processed (sliced to the real `n` rows). `None`, a threshold ≥ 1.0
+    /// or a non-adaptive backend all execute the fixed schedule —
+    /// bit-for-bit the same logits as [`infer_at`](Self::infer_at).
+    pub fn infer_adaptive_at(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        n: usize,
+        seq: usize,
+        threshold: Option<f32>,
+    ) -> Result<(Logits, Option<Vec<u64>>)> {
+        if n == 0 {
+            bail!("infer: empty batch");
+        }
+        if tokens.len() != n * seq || segments.len() != n * seq {
+            bail!("infer: expected {}x{} tokens, got {}", n, seq, tokens.len());
+        }
+        let threshold = threshold.filter(|&t| t > 0.0 && t < 1.0);
+        let (bucket, seq_bucket) = self.cell_for(n, seq).ok_or_else(|| {
+            anyhow!(
+                "infer: batch of {n} rows at seq {seq} fits no executable cell of {}/{} \
+                 (max batch {}, seq buckets {:?}) — split the batch upstream",
+                self.meta.dataset,
+                self.meta.variant,
+                self.max_batch(),
+                self.seq_buckets(),
+            )
+        })?;
+        let out = if n == bucket && seq == seq_bucket {
+            self.exec.execute(tokens, segments, bucket, seq_bucket, false, threshold)?
+        } else {
+            let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
+            self.exec.execute(&t, &s, bucket, seq_bucket, false, threshold)?
+        };
+        let nc = out.num_classes;
+        if out.logits.len() < n * nc {
+            bail!(
+                "backend returned {} logits for a {bucket}x{nc} batch",
+                out.logits.len()
+            );
+        }
+        let tokens_per_row = out.tokens_per_row.map(|mut t| {
+            t.truncate(n);
+            t
+        });
+        Ok((
+            Logits { values: out.logits[..n * nc].to_vec(), batch: n, num_classes: nc },
+            tokens_per_row,
+        ))
+    }
+
     /// Forward pass plus the kept-positions trace [n, L, N] (i32, rows
     /// right-padded with -1). Served natively for any variant with a
     /// retention config, and by PJRT debug bundles (2-tuple graphs).
@@ -391,6 +463,21 @@ impl LoadedModel {
         segments: &[i32],
         n: usize,
     ) -> Result<(Logits, Vec<i32>)> {
+        self.infer_with_trace_adaptive(tokens, segments, n, None)
+    }
+
+    /// [`infer_with_trace`](Self::infer_with_trace) under an optional
+    /// adaptive attention-mass threshold — the debug window the property
+    /// tests use to assert that adaptive kept-sets stay bounded by the
+    /// schedule and that CLS/PAD pinning holds at any threshold.
+    pub fn infer_with_trace_adaptive(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        n: usize,
+        threshold: Option<f32>,
+    ) -> Result<(Logits, Vec<i32>)> {
+        let threshold = threshold.filter(|&t| t > 0.0 && t < 1.0);
         let seq = self.meta.seq_len;
         if tokens.len() != n * seq || segments.len() != n * seq {
             bail!("infer_with_trace: expected {}x{} tokens, got {}", n, seq, tokens.len());
@@ -402,10 +489,10 @@ impl LoadedModel {
             )
         })?;
         let out = if n == bucket && seq == seq_bucket {
-            self.exec.execute(tokens, segments, bucket, seq_bucket, true)?
+            self.exec.execute(tokens, segments, bucket, seq_bucket, true, threshold)?
         } else {
             let (t, s) = pad_rows(tokens, segments, n, seq, bucket, seq_bucket);
-            self.exec.execute(&t, &s, bucket, seq_bucket, true)?
+            self.exec.execute(&t, &s, bucket, seq_bucket, true, threshold)?
         };
         let kept = out.kept.ok_or_else(|| {
             anyhow!(

@@ -16,6 +16,7 @@
 //! retention schedule, so the per-request hot path neither spawns threads
 //! nor allocates after warmup.
 
+pub mod adaptive;
 pub mod arena;
 pub mod artifact;
 pub mod backend;
@@ -24,6 +25,7 @@ pub mod kernels;
 pub mod native;
 pub mod pjrt;
 
+pub use adaptive::{demanded_k, ParetoPoint, ParetoTable, RetentionPolicy};
 pub use arena::{ArenaDims, ArenaPlan, ForwardArena};
 pub use artifact::{default_root, DatasetArtifacts, Registry, VariantMeta};
 pub use backend::{

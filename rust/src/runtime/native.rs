@@ -437,7 +437,8 @@ impl NativeModel {
         seq: usize,
         logits_out: &mut Vec<f32>,
     ) -> Result<()> {
-        self.forward_batch(tokens, segments, batch, seq, logits_out, None)
+        self.forward_batch(tokens, segments, batch, seq, logits_out, None, None)?;
+        Ok(())
     }
 
     /// Forward `batch` examples of `seq` tokens through batch-level kernel
@@ -454,6 +455,21 @@ impl NativeModel {
     /// row index never exceeds source row index when `keep < n`, so
     /// ascending copies never clobber unread rows), and the arena's live
     /// region shrinks layer by layer with elimination.
+    ///
+    /// When `threshold` carries an active attention-mass threshold
+    /// (`0 < t < 1`), each extract layer keeps the **batch max** of the
+    /// per-example demanded kept-set sizes
+    /// ([`demanded_k`](super::adaptive::demanded_k)), clamped to the
+    /// schedule entry as a ceiling — the arena plan and the uniform GEMM
+    /// shapes stay valid because the adaptive width never exceeds the
+    /// planned one, and the CLS/PAD pinning of [`keep_indices`] is
+    /// untouched (adaptive only changes *how many* survive, never *which*
+    /// ranking selects them). A threshold at or above 1.0 must be mapped
+    /// to `None` by the caller; this function additionally filters it, so
+    /// the fixed path is taken bit-for-bit. Returns the per-example
+    /// word-vectors processed (Σ over layers of the post-extraction
+    /// width — uniform across the rows of one call).
+    #[allow(clippy::too_many_arguments)]
     fn forward_batch(
         &self,
         tokens: &[i32],
@@ -462,7 +478,9 @@ impl NativeModel {
         seq: usize,
         logits_out: &mut Vec<f32>,
         mut trace_out: Option<&mut Vec<i32>>,
-    ) -> Result<()> {
+        threshold: Option<f32>,
+    ) -> Result<u64> {
+        let threshold = threshold.filter(|&t| t > 0.0 && t < 1.0);
         let h = self.hidden;
         let heads = self.heads;
         let d = h / heads;
@@ -492,6 +510,7 @@ impl NativeModel {
         }
 
         let mut arena = self.checkout_arena(batch, seq);
+        let mut tokens_per_example: u64 = 0;
         {
             let super::arena::Regions {
                 x,
@@ -592,7 +611,25 @@ impl NativeModel {
                 if let Some(keep) = self.retention.as_ref().and_then(|r| r.get(j)).copied() {
                     // Guard a malformed manifest: at least CLS always survives
                     // (derive_retention clamps to >= 1 on the export side).
-                    let keep = keep.max(1);
+                    let mut keep = keep.max(1);
+                    if let Some(t) = threshold {
+                        // Adaptive retention: the batch executes at the max
+                        // per-example demanded kept-set size, with the
+                        // schedule entry as a ceiling (so the arena plan —
+                        // sized from the schedule — stays an upper bound).
+                        // demanded_k borrows the top-k score scratch; it is
+                        // fully consumed before keep_indices reuses it.
+                        let mut demanded = 1usize;
+                        for b in 0..batch {
+                            demanded = demanded.max(super::adaptive::demanded_k(
+                                &sig[b * n..(b + 1) * n],
+                                &mask[b * n..(b + 1) * n],
+                                t,
+                                &mut topk_scores[..],
+                            ));
+                        }
+                        keep = keep.min(demanded);
+                    }
                     if keep < n {
                         for b in 0..batch {
                             let kept = keep_indices(
@@ -619,6 +656,7 @@ impl NativeModel {
                     }
                 }
                 self.layer_tokens[j].fetch_add((batch * n) as u64, Ordering::Relaxed);
+                tokens_per_example += n as u64;
                 if let Some(tr) = trace_out.as_deref_mut() {
                     for b in 0..batch {
                         let row = trace_base + (b * n_layers + j) * seq;
@@ -665,7 +703,7 @@ impl NativeModel {
             );
         }
         self.checkin_arena(arena);
-        Ok(())
+        Ok(tokens_per_example)
     }
 }
 
@@ -677,6 +715,7 @@ impl CellExecutor for NativeModel {
         batch: usize,
         seq: usize,
         want_trace: bool,
+        threshold: Option<f32>,
     ) -> Result<ExecOutput> {
         if tokens.len() != batch * seq || segments.len() != batch * seq {
             bail!("native execute: expected {batch}x{seq} tokens, got {}", tokens.len());
@@ -684,20 +723,30 @@ impl CellExecutor for NativeModel {
         let n_layers = self.layers.len();
         let mut logits = Vec::with_capacity(batch * self.num_classes);
         let mut kept = want_trace.then(|| Vec::with_capacity(batch * n_layers * seq));
+        let mut tokens_per_row = Vec::with_capacity(batch);
         let mut r = 0;
         while r < batch {
             let chunk = NATIVE_EXEC_CHUNK.min(batch - r);
-            self.forward_batch(
+            let per_example = self.forward_batch(
                 &tokens[r * seq..(r + chunk) * seq],
                 &segments[r * seq..(r + chunk) * seq],
                 chunk,
                 seq,
                 &mut logits,
                 kept.as_mut(),
+                threshold,
             )?;
+            // Uniform within a chunk (the batch-max execution rule), so
+            // every row of the chunk reports the chunk's width sum.
+            tokens_per_row.extend(std::iter::repeat(per_example).take(chunk));
             r += chunk;
         }
-        Ok(ExecOutput { logits, num_classes: self.num_classes, kept })
+        Ok(ExecOutput {
+            logits,
+            num_classes: self.num_classes,
+            kept,
+            tokens_per_row: Some(tokens_per_row),
+        })
     }
 
     fn layer_tokens(&self) -> Option<Vec<u64>> {

@@ -94,6 +94,10 @@ impl CellExecutor for PjrtModel {
         batch: usize,
         seq: usize,
         _want_trace: bool,
+        // Adaptive retention is a native-backend capability: the compiled
+        // HLO bakes its schedule in, so the threshold is ignored here and
+        // the scheduler falls back to fixed-schedule execution.
+        _threshold: Option<f32>,
     ) -> Result<ExecOutput> {
         let exe = self
             .compiled
@@ -125,6 +129,6 @@ impl CellExecutor for PjrtModel {
         if logits.is_empty() || logits.len() % batch != 0 {
             bail!("logits of {} values for batch {batch}", logits.len());
         }
-        Ok(ExecOutput { num_classes: logits.len() / batch, logits, kept })
+        Ok(ExecOutput { num_classes: logits.len() / batch, logits, kept, tokens_per_row: None })
     }
 }

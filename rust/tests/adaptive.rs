@@ -1,0 +1,483 @@
+//! Adaptive-compute correctness over the committed artifacts: the
+//! fixed-schedule parity anchor (threshold ≥ 1.0 is bit-for-bit the
+//! compiled schedule), the safety invariants of per-request dynamic
+//! retention (kept-sets bounded by the schedule, CLS pinned, PADs never
+//! demanded), the calibrated Pareto contract (a conservative threshold
+//! flips zero argmax decisions on the committed goldens; at least one
+//! point buys strictly fewer tokens at full-compute accuracy), and the
+//! SLA router resolving named compute tiers to *different* operating
+//! points — in process and over both TCP edges.
+
+use std::panic::AssertUnwindSafe;
+use std::time::Duration;
+
+use powerbert::client::PowerClient;
+use powerbert::coordinator::{
+    BatchPolicy, Compute, Config, Coordinator, EdgeKind, Input, Policy, Server, Sla,
+};
+use powerbert::runtime::{default_root, BackendKind, Engine, ParetoTable, Registry, TestSplit};
+use powerbert::testutil::{artifacts_available, prop::forall};
+use powerbert::tokenizer::PAD_ID;
+use powerbert::util::json::Json;
+use powerbert::workload::WorkloadGen;
+
+fn registry() -> Option<Registry> {
+    if !artifacts_available() {
+        return None;
+    }
+    Registry::scan(&default_root()).ok()
+}
+
+fn native_engine() -> Engine {
+    Engine::with_backend(BackendKind::Native).expect("native engine")
+}
+
+/// The highest calibrated threshold strictly below 1.0 — the conservative
+/// operating point the zero-flip acceptance gate runs at. Points are
+/// sorted by descending threshold, so the first sub-1.0 entry is it.
+fn conservative_threshold(table: &ParetoTable) -> Option<f64> {
+    table.points.iter().map(|p| p.threshold).find(|&t| t < 1.0)
+}
+
+/// A threshold at or above 1.0 is *defined* as the fixed schedule: the
+/// executor must short-circuit to the non-adaptive path, so the logits are
+/// bit-for-bit identical to `infer` — no float summation-order divergence
+/// — and the per-row telemetry reports exactly the schedule's aggregate.
+#[test]
+fn threshold_at_or_above_one_is_bitwise_fixed_schedule() {
+    let Some(reg) = registry() else { return };
+    let mut checked = 0;
+    for ds in reg.datasets.values() {
+        let Some(meta) = ds.variant("power-default") else { continue };
+        let agg: u64 = meta.retention.as_ref().expect("retention").iter().sum::<usize>() as u64;
+        let split = TestSplit::load(&ds.test_npz()).expect("split");
+        let seq = split.seq_len;
+        let mut engine = native_engine();
+        let model = engine.load(meta).expect("load");
+        assert!(model.supports_adaptive(), "{}: native + retention must adapt", ds.name);
+        let n = 16.min(split.n);
+        let fixed = model
+            .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+            .expect("fixed infer");
+        for t in [1.0f32, 1.5] {
+            let (l, per_row) = model
+                .infer_adaptive_at(&split.tokens[..n * seq], &split.segments[..n * seq], n, seq, Some(t))
+                .expect("adaptive infer");
+            assert_eq!(l.values, fixed.values, "{}: t={t} diverged from the schedule", ds.name);
+            let per_row = per_row.expect("native telemetry");
+            assert_eq!(per_row.len(), n);
+            assert!(
+                per_row.iter().all(|&p| p == agg),
+                "{}: fixed-path rows must process exactly {agg} word-vectors, got {per_row:?}",
+                ds.name
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked > 0, "no power-default bundles committed");
+}
+
+/// Safety property of the adaptive executor, at any threshold: every
+/// encoder's kept-set stays bounded by the compiled schedule (so arena
+/// plans stay valid), CLS survives every elimination, kept positions stay
+/// ordered and nested across encoders, and PAD positions are never
+/// demanded (batch-1 — the composition-independent case). The per-row
+/// tokens telemetry must agree with the trace exactly.
+#[test]
+fn adaptive_kept_sets_bounded_by_schedule_cls_pinned_pads_sunk() {
+    let Some(reg) = registry() else { return };
+    for ds in reg.datasets.values() {
+        let Some(meta) = ds.variant("power-default") else { continue };
+        let retention = meta.retention.clone().expect("retention");
+        let split = TestSplit::load(&ds.test_npz()).expect("split");
+        let seq = split.seq_len;
+        let mut engine = native_engine();
+        let model = AssertUnwindSafe(engine.load(meta).expect("load"));
+        let split = AssertUnwindSafe(split);
+        let retention = AssertUnwindSafe(retention);
+        let name = format!("adaptive trace [{}]", ds.name);
+        forall(&name, 32, move |rng, _size| {
+            let i = rng.below(split.n as u64) as usize;
+            let t = 0.05 + 0.9 * rng.f64() as f32;
+            let tokens = &split.tokens[i * seq..(i + 1) * seq];
+            let segs = &split.segments[i * seq..(i + 1) * seq];
+            let real_len = tokens.iter().filter(|&&tok| tok != PAD_ID).count();
+            let (logits, kept) = model
+                .infer_with_trace_adaptive(tokens, segs, 1, Some(t))
+                .expect("trace");
+            assert!(logits.values.iter().all(|v| v.is_finite()));
+            let mut prev: Option<Vec<i32>> = None;
+            let mut trace_total = 0u64;
+            for (j, &sched) in retention.iter().enumerate() {
+                let row = &kept[j * seq..(j + 1) * seq];
+                let survivors: Vec<i32> = row.iter().copied().filter(|&p| p >= 0).collect();
+                assert!(
+                    !survivors.is_empty() && survivors.len() <= sched,
+                    "encoder {j}: {} survivors at t={t}, schedule ceiling {sched}",
+                    survivors.len()
+                );
+                assert_eq!(survivors[0], 0, "encoder {j}: CLS eliminated at t={t}");
+                assert!(survivors.windows(2).all(|w| w[0] < w[1]), "encoder {j}: order");
+                assert!(
+                    survivors.iter().all(|&p| (p as usize) < real_len),
+                    "encoder {j}: PAD position kept at t={t} (real len {real_len}): {survivors:?}"
+                );
+                if let Some(prev) = &prev {
+                    assert!(
+                        survivors.iter().all(|p| prev.contains(p)),
+                        "encoder {j}: kept-set not nested in encoder {}'s", j - 1
+                    );
+                }
+                trace_total += survivors.len() as u64;
+                prev = Some(survivors);
+            }
+            let (_, per_row) = model
+                .infer_adaptive_at(tokens, segs, 1, seq, Some(t))
+                .expect("adaptive infer");
+            assert_eq!(
+                per_row.expect("telemetry")[0],
+                trace_total,
+                "tokens telemetry disagrees with the kept-positions trace at t={t}"
+            );
+        });
+    }
+}
+
+/// The zero-flip acceptance gate: at the *conservative* calibrated
+/// threshold (the highest sub-1.0 point of the committed `pareto.json`),
+/// batch-1 adaptive execution reproduces every fixed-schedule argmax
+/// decision on the committed test split of both datasets — while
+/// processing strictly fewer word-vectors in aggregate.
+#[test]
+fn conservative_calibrated_threshold_flips_no_argmax_decisions() {
+    let Some(reg) = registry() else { return };
+    let mut checked = 0;
+    for ds in reg.datasets.values() {
+        let Some(meta) = ds.variant("power-default") else { continue };
+        let Some(table) = &meta.pareto else { continue };
+        let t = conservative_threshold(table).expect("a sub-1.0 calibrated point") as f32;
+        let split = TestSplit::load(&ds.test_npz()).expect("split");
+        let seq = split.seq_len;
+        let mut engine = native_engine();
+        let model = engine.load(meta).expect("load");
+        let mut flips = 0usize;
+        let mut adaptive_tokens = 0u64;
+        let mut fixed_tokens = 0u64;
+        for i in 0..split.n {
+            let tokens = &split.tokens[i * seq..(i + 1) * seq];
+            let segs = &split.segments[i * seq..(i + 1) * seq];
+            let fixed = model.infer_at(tokens, segs, 1, seq).expect("fixed");
+            let (l, per_row) = model
+                .infer_adaptive_at(tokens, segs, 1, seq, Some(t))
+                .expect("adaptive");
+            if l.argmax(0) != fixed.argmax(0) {
+                flips += 1;
+            }
+            adaptive_tokens += per_row.expect("telemetry")[0];
+            fixed_tokens += meta.retention.as_ref().unwrap().iter().sum::<usize>() as u64;
+        }
+        assert_eq!(
+            flips, 0,
+            "{}: conservative threshold {t} flipped argmax decisions",
+            ds.name
+        );
+        assert!(
+            adaptive_tokens < fixed_tokens,
+            "{}: threshold {t} saved nothing ({adaptive_tokens} vs {fixed_tokens})",
+            ds.name
+        );
+        checked += 1;
+    }
+    assert!(checked >= 2, "expected committed pareto.json for sst2 and cola");
+}
+
+/// The committed frontier itself: every table has a full-compute anchor
+/// and at least one point with *strictly* fewer mean tokens at a metric no
+/// worse than full compute — the Pareto acceptance criterion. `balanced`
+/// and `fastest` must resolve to genuinely different operating points.
+#[test]
+fn committed_pareto_tables_trade_tokens_without_losing_accuracy() {
+    let Some(reg) = registry() else { return };
+    let mut checked = 0;
+    for ds in reg.datasets.values() {
+        let Some(meta) = ds.variant("power-default") else { continue };
+        let Some(table) = &meta.pareto else { continue };
+        let full = table.full().expect("full-compute anchor point");
+        let balanced = table.balanced().expect("balanced point");
+        assert!(
+            balanced.metric >= full.metric && balanced.mean_tokens < full.mean_tokens,
+            "{}: no calibrated point beats full compute at equal accuracy \
+             (balanced {balanced:?} vs full {full:?})",
+            ds.name
+        );
+        let fastest = table.fastest().expect("fastest point");
+        assert!(fastest.mean_tokens <= balanced.mean_tokens);
+        assert!(
+            table
+                .points
+                .windows(2)
+                .all(|w| w[0].threshold > w[1].threshold),
+            "{}: thresholds not strictly descending",
+            ds.name
+        );
+        checked += 1;
+    }
+    assert!(checked >= 2, "expected committed pareto.json for sst2 and cola");
+}
+
+/// The router maps SLA compute tiers to *different* operating points: the
+/// echoes name distinct thresholds from the calibrated table, an explicit
+/// threshold bypasses calibration, and per-request tokens-processed
+/// telemetry shows cheaper tiers genuinely doing less work.
+#[test]
+fn router_resolves_sla_tiers_to_distinct_operating_points() {
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let meta = ds.variant("power-default").expect("power-default");
+    let table = meta.pareto.as_ref().expect("committed pareto.json");
+    let split = TestSplit::load(&ds.test_npz()).expect("split");
+    let seq = split.seq_len;
+
+    let c = Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy: Policy::Fixed("power-default".into()),
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        workers: 1,
+        backend: BackendKind::Native,
+        ..Config::default()
+    })
+    .expect("coordinator");
+    let client = c.client();
+
+    // The committed rows make the token sums deterministic; 16 examples is
+    // plenty to separate tiers whose dev-set means differ by >20 tokens.
+    let n = 16.min(split.n);
+    let ask = |compute: Option<Compute>| -> (u64, Option<String>) {
+        let mut total = 0u64;
+        let mut echo = None;
+        for i in 0..n {
+            let r = client
+                .classify(
+                    "sst2",
+                    Input::Tokens {
+                        tokens: split.tokens[i * seq..(i + 1) * seq].to_vec(),
+                        segments: split.segments[i * seq..(i + 1) * seq].to_vec(),
+                    },
+                    Sla { compute, ..Sla::default() },
+                )
+                .expect("classify");
+            assert_eq!(r.variant, "power-default");
+            total += r.tokens_processed.expect("native tokens telemetry");
+            echo = r.compute;
+        }
+        (total, echo)
+    };
+
+    let (full_tokens, full_echo) = ask(Some(Compute::Full));
+    let (bal_tokens, bal_echo) = ask(Some(Compute::Balanced));
+    let (fast_tokens, fast_echo) = ask(Some(Compute::Fast));
+    let (thr_tokens, thr_echo) = ask(Some(Compute::Threshold(0.9)));
+    let (default_tokens, default_echo) = ask(None);
+
+    assert_eq!(full_echo.as_deref(), Some("full"));
+    let bal_point = table.balanced().expect("balanced point");
+    let fast_point = table.fastest().expect("fastest point");
+    assert_eq!(
+        bal_echo.as_deref(),
+        Some(format!("balanced@{:.3}", bal_point.threshold).as_str()),
+        "balanced must resolve against the calibrated table"
+    );
+    assert_eq!(
+        fast_echo.as_deref(),
+        Some(format!("fast@{:.3}", fast_point.threshold).as_str())
+    );
+    assert_ne!(bal_echo, fast_echo, "tiers collapsed to one operating point");
+    assert_eq!(thr_echo.as_deref(), Some("threshold@0.900"));
+    assert_eq!(default_echo, None, "no compute asked, nothing echoed");
+
+    // Full compute processes the schedule exactly; cheaper tiers strictly
+    // less. (fast ≤ balanced holds by a wide margin on the committed rows
+    // — their dev-set means differ by >20 word-vectors per example.)
+    let agg: u64 = meta.retention.as_ref().unwrap().iter().sum::<usize>() as u64;
+    assert_eq!(full_tokens, agg * n as u64);
+    assert_eq!(default_tokens, full_tokens, "default must be full compute");
+    assert!(bal_tokens < full_tokens, "balanced saved nothing");
+    assert!(fast_tokens <= bal_tokens, "fast costlier than balanced");
+    assert!(thr_tokens < full_tokens);
+}
+
+/// Long-sequence bucketing through the full router/batcher path: the
+/// power-long variant (seq_len 256, compiled {32, 64} sub-buckets) serves
+/// short requests at the 32-wide cell, mid-length ones at 64, and
+/// over-64-token requests at its full width — and adaptive compute rides
+/// along on every bucket.
+#[test]
+fn long_sequence_buckets_route_through_batcher_and_serve_adaptive() {
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let Some(meta) = ds.variant("power-long") else {
+        eprintln!("note: no power-long bundle committed — long-seq bucketing not exercised");
+        return;
+    };
+    assert_eq!(meta.seq_len, 256, "power-long must be the long-sequence cell");
+    let agg: u64 = meta.retention.as_ref().expect("retention").iter().sum::<usize>() as u64;
+
+    let c = Coordinator::start(Config {
+        datasets: vec!["sst2".into()],
+        policy: Policy::Fixed("power-default".into()),
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        workers: 1,
+        backend: BackendKind::Native,
+        seq_buckets: vec![32, 64],
+        ..Config::default()
+    })
+    .expect("coordinator");
+    let client = c.client();
+    let vocab = client.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 11);
+
+    let sla = |compute| Sla {
+        variant: Some("power-long".into()),
+        compute,
+        ..Sla::default()
+    };
+    // word counts straddle the bucket boundaries: ~10 tokens -> 32,
+    // ~50 -> 64, ~120 -> full 256.
+    for (words, want_bucket) in [(8usize, 32usize), (48, 64), (120, 256)] {
+        let (text, _) = gen.sentence(words);
+        let r = client
+            .classify("sst2", Input::Text { a: text.clone(), b: None }, sla(None))
+            .expect("classify");
+        assert_eq!(r.variant, "power-long");
+        assert_eq!(
+            r.seq_bucket, want_bucket,
+            "{words}-word request routed to bucket {}", r.seq_bucket
+        );
+        let full = r.tokens_processed.expect("native tokens telemetry");
+        assert_eq!(full, agg, "fixed schedule processes the aggregate at every bucket");
+
+        // Adaptive compute composes with bucketing: same input, fast tier,
+        // same bucket, at most the schedule's word-vectors.
+        let r2 = client
+            .classify(
+                "sst2",
+                Input::Text { a: text, b: None },
+                sla(Some(Compute::Fast)),
+            )
+            .expect("classify fast");
+        assert_eq!(r2.seq_bucket, want_bucket);
+        let fast = r2.tokens_processed.expect("telemetry");
+        assert!(
+            fast <= full && fast >= meta.retention.as_ref().unwrap().len() as u64,
+            "fast tier processed {fast} of {full}"
+        );
+    }
+}
+
+/// The edges this platform can run (epoll is Linux-only by construction).
+fn edges() -> Vec<EdgeKind> {
+    let mut v = vec![EdgeKind::Threads];
+    if cfg!(target_os = "linux") {
+        v.push(EdgeKind::Epoll);
+    }
+    v
+}
+
+/// End-to-end adaptive serving over both TCP edges: the hello frame
+/// advertises the capability and the calibrated variant, per-request
+/// compute resolves on the wire with tokens-processed echoed back, and
+/// the stats surface the operating-point histogram plus worker
+/// tokens-saved counters.
+#[test]
+fn adaptive_serving_over_both_edges_reports_savings() {
+    if !artifacts_available() {
+        return;
+    }
+    for edge in edges() {
+        let coordinator = Coordinator::start(Config {
+            datasets: vec!["sst2".into()],
+            policy: Policy::Fixed("power-default".into()),
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            backend: BackendKind::Native,
+            ..Config::default()
+        })
+        .expect("coordinator");
+        let server = Server::bind("127.0.0.1:0", coordinator.client())
+            .expect("bind")
+            .with_edge(edge)
+            .spawn()
+            .expect("spawn");
+        let client = PowerClient::connect(server.addr()).expect("connect");
+
+        let info = client.hello();
+        assert!(info.adaptive, "{edge:?}: hello must advertise adaptive compute");
+        let v = info.variants["sst2"]
+            .iter()
+            .find(|v| v.variant == "power-default")
+            .expect("power-default advertised");
+        assert!(
+            v.adaptive_calibrated,
+            "{edge:?}: committed pareto.json must surface as adaptive_calibrated"
+        );
+
+        let vocab = coordinator.tokenizer().vocab.clone();
+        let (text, _) = WorkloadGen::new(&vocab, 13).sentence(12);
+        let full = client
+            .classify(
+                "sst2",
+                Input::Text { a: text.clone(), b: None },
+                Sla { compute: Some(Compute::Full), ..Sla::default() },
+            )
+            .expect("full classify");
+        let fast = client
+            .classify(
+                "sst2",
+                Input::Text { a: text, b: None },
+                Sla { compute: Some(Compute::Fast), ..Sla::default() },
+            )
+            .expect("fast classify");
+        assert_eq!(full.compute.as_deref(), Some("full"), "{edge:?}");
+        let fast_echo = fast.compute.clone().unwrap_or_default();
+        assert!(fast_echo.starts_with("fast@"), "{edge:?}: echo {fast_echo:?}");
+        let (full_t, fast_t) = (
+            full.tokens_processed.expect("telemetry"),
+            fast.tokens_processed.expect("telemetry"),
+        );
+        assert!(
+            fast_t < full_t,
+            "{edge:?}: fast tier saved nothing ({fast_t} vs {full_t})"
+        );
+
+        // Stats: the operating-point histogram counts both requests and
+        // the adaptive savings ratio dips below the fixed schedule.
+        let stats = client.stats().expect("stats");
+        let vstats = stats
+            .raw
+            .get("variants")
+            .and_then(|v| v.get("sst2/power-default"))
+            .unwrap_or_else(|| panic!("{edge:?}: stats lack sst2/power-default: {}", stats.raw));
+        let points = vstats
+            .get("compute_points")
+            .and_then(Json::as_obj)
+            .unwrap_or_else(|| panic!("{edge:?}: no compute_points histogram"));
+        assert_eq!(points.get("full").and_then(Json::as_u64), Some(1), "{edge:?}");
+        assert_eq!(points.get(&fast_echo).and_then(Json::as_u64), Some(1), "{edge:?}");
+        let ratio = vstats
+            .get("tokens_processed_ratio")
+            .and_then(Json::as_f64)
+            .expect("tokens_processed_ratio");
+        assert!(ratio < 1.0, "{edge:?}: adaptive traffic must pull the ratio under 1.0");
+        let workers = stats.raw.get("workers").and_then(Json::as_arr).expect("workers");
+        let saved: u64 = workers
+            .iter()
+            .filter_map(|w| w.get("tokens_saved").and_then(Json::as_u64))
+            .sum();
+        assert_eq!(
+            saved,
+            full_t - fast_t,
+            "{edge:?}: per-worker tokens-saved must account for the fast request"
+        );
+        server.stop();
+    }
+}

@@ -28,6 +28,8 @@ fn job_at(id: u64, seq: usize) -> Job {
         segments: vec![0; seq],
         seq,
         real_len: seq.saturating_sub(1).max(1),
+        threshold: None,
+        compute: None,
         reply: ReplySink::Oneshot(tx),
     }
 }

@@ -98,6 +98,7 @@ fn meta(variant: &str, kind: &str, dev: f64, agg: usize) -> VariantMeta {
         param_order: vec![],
         retention: Some(vec![agg / 6; 6]),
         dev_metric: Some(dev),
+        pareto: None,
         dir: PathBuf::from("/tmp"),
     }
 }
