@@ -1,0 +1,153 @@
+//! Rollout walkthrough: signed artifact repository + zero-downtime model
+//! swap, driven end to end over the real wire path.
+//!
+//!   cargo run --release --example rollout
+//!
+//! The example copies the committed artifacts into a scratch root, signs
+//! the manifest in-process (the Rust half of `python -m compile.sign`),
+//! self-hosts a `--require-signed` serving stack over it, and then walks
+//! the rollout lifecycle: hello capabilities, hot `add-variant`, a tamper
+//! + refused reload, and recovery — printing what the repository reports
+//! at each step.
+//!
+//! Requires `make artifacts` (at minimum the sst2 dataset).
+
+use std::path::{Path, PathBuf};
+
+use powerbert::client::{PowerClient, RepoInfo};
+use powerbert::coordinator::{Config, Coordinator, Input, Policy, Server, ServerHandle, Sla};
+use powerbert::runtime::Manifest;
+use powerbert::util::ed25519;
+use powerbert::util::hash::to_hex;
+use powerbert::workload::WorkloadGen;
+
+/// Demo signing seed — a real deployment generates one with
+/// `python -m compile.sign artifacts --gen-key` and keeps it off the box.
+const SEED: [u8; 32] = [7u8; 32];
+
+fn copy_tree(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).expect("create scratch dir");
+    for entry in std::fs::read_dir(src).expect("read artifacts") {
+        let entry = entry.expect("dir entry");
+        let to = dst.join(entry.file_name());
+        if entry.path().is_dir() {
+            copy_tree(&entry.path(), &to);
+        } else {
+            std::fs::copy(entry.path(), &to).expect("copy artifact file");
+        }
+    }
+}
+
+/// Digest + sign the scratch root at `revision` and publish the trusted key.
+fn sign(root: &Path, revision: u64) {
+    let mut m = Manifest::build(root, revision).expect("digest artifacts");
+    m.sign_with(&SEED).expect("sign manifest");
+    m.write(root).expect("write index.json");
+    std::fs::write(root.join("signing.pub"), format!("{}\n", to_hex(&ed25519::public_key(&SEED))))
+        .expect("write signing.pub");
+}
+
+fn repo_line(tag: &str, r: &RepoInfo) {
+    println!(
+        "  [{tag}] revision {} generation {} signed={} verified_files={} excluded={:?} datasets={:?}",
+        r.revision, r.generation, r.signed, r.verified_files, r.excluded, r.datasets
+    );
+}
+
+fn main() {
+    powerbert::util::log::init();
+    let src = powerbert::runtime::default_root();
+    if !src.join("vocab.json").exists() {
+        eprintln!("no artifacts at {} — run `make artifacts` first", src.display());
+        std::process::exit(1);
+    }
+
+    // Scratch root: vocab + the bert baseline only. power-default arrives
+    // later, as the rollout.
+    let root: PathBuf =
+        std::env::temp_dir().join(format!("powerbert-rollout-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).expect("scratch root");
+    std::fs::copy(src.join("vocab.json"), root.join("vocab.json")).expect("copy vocab");
+    copy_tree(&src.join("sst2").join("bert"), &root.join("sst2").join("bert"));
+    sign(&root, 1);
+    println!("== scratch repository at {} (revision 1, signed) ==", root.display());
+
+    // Self-host over the scratch root. --require-signed: an unsigned or
+    // tampered bundle refuses to serve at all.
+    let coordinator = Coordinator::start(Config {
+        artifacts: root.clone(),
+        policy: Policy::FastestAboveMetric,
+        require_signed: true,
+        ..Config::default()
+    })
+    .expect("coordinator");
+    let server: ServerHandle =
+        Server::bind("127.0.0.1:0", coordinator.client()).expect("bind").spawn().expect("spawn");
+    let client = PowerClient::connect(server.addr()).expect("connect");
+
+    let hello = client.fetch_hello().expect("hello");
+    repo_line("hello", &hello.repo.clone().expect("repo capability"));
+    println!("  variants: {:?}", hello.variants.get("sst2").map(|v| v.len()).unwrap_or(0));
+
+    let vocab = coordinator.tokenizer().vocab.clone();
+    let mut gen = WorkloadGen::new(&vocab, 42);
+    let (text, _) = gen.sentence(14);
+    let r = client
+        .classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default())
+        .expect("classify");
+    println!("  baseline serves: label={} via {} in {}us", r.label, r.variant, r.total_us);
+
+    // -- The rollout: drop power-default into the live root, re-sign at
+    // revision 2, and announce it. In-flight requests finish on the old
+    // snapshot; the swap happens off the hot path.
+    println!("\n== add-variant: sst2/power-default at revision 2 ==");
+    copy_tree(&src.join("sst2").join("power-default"), &root.join("sst2").join("power-default"));
+    sign(&root, 2);
+    let info = client.add_variant("sst2", "power-default").expect("add-variant");
+    repo_line("add-variant", &info);
+    let r = client
+        .classify(
+            "sst2",
+            Input::Text { a: text.clone(), b: None },
+            Sla { variant: Some("power-default".into()), ..Default::default() },
+        )
+        .expect("classify on rolled-out variant");
+    println!("  rolled-out variant serves: label={} via {} in {}us", r.label, r.variant, r.total_us);
+
+    // -- Tamper drill: flip one byte in the baseline weights. The next
+    // reload hashes everything, refuses the dataset, names the file and
+    // digests — and serving of everything else continues.
+    println!("\n== tamper drill: one flipped byte in sst2/bert/weights.npz ==");
+    let weights = root.join("sst2").join("bert").join("weights.npz");
+    let mut bytes = std::fs::read(&weights).expect("read weights");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&weights, &bytes).expect("write tampered weights");
+    match client.reload() {
+        Ok(info) => repo_line("reload", &info),
+        Err(e) => println!("  reload refused: {e}"),
+    }
+    match client.classify("sst2", Input::Text { a: text.clone(), b: None }, Sla::default()) {
+        Ok(r) => println!("  post-tamper classify unexpectedly served via {}", r.variant),
+        Err(e) => println!("  post-tamper classify refused (dataset excluded): {e}"),
+    }
+
+    // -- Recovery: restore the honest bytes and reload.
+    println!("\n== recovery: restore the weights and reload ==");
+    bytes[mid] ^= 0x01;
+    std::fs::write(&weights, &bytes).expect("restore weights");
+    let info = client.reload().expect("reload after restore");
+    repo_line("reload", &info);
+    let r = client
+        .classify("sst2", Input::Text { a: text, b: None }, Sla::default())
+        .expect("classify after recovery");
+    println!("  healthy again: label={} via {}", r.label, r.variant);
+
+    drop(client);
+    let mut server = server;
+    server.stop();
+    coordinator.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+    println!("\nclean shutdown");
+}

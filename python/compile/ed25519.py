@@ -1,0 +1,169 @@
+"""Pure-python ed25519 (RFC 8032) for artifact-manifest signing.
+
+Mirrors ``rust/src/util/ed25519.rs``: the exporter signs the manifest at
+``python -m compile.sign`` time and the Rust server verifies on every
+load. Standard library only (``hashlib`` for SHA-512 + bigints) — the
+build container is offline.
+
+Not constant-time; intended for artifact signing where the committed dev
+key is not a secret. Deployments supply their own seed file.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+P = 2**255 - 19
+L = 2**252 + 27742317777372353535851937790883648493
+D = (-121665 * pow(121666, P - 2, P)) % P
+SQRT_M1 = pow(2, (P - 1) // 4, P)
+
+# Base point: y = 4/5, x recovered with the even root.
+_BY = (4 * pow(5, P - 2, P)) % P
+
+
+def _recover_x(y: int, sign: int) -> int | None:
+    x2 = (y * y - 1) * pow(D * y * y + 1, P - 2, P) % P
+    if x2 == 0:
+        return None if sign else 0
+    x = pow(x2, (P + 3) // 8, P)
+    if (x * x - x2) % P != 0:
+        x = x * SQRT_M1 % P
+    if (x * x - x2) % P != 0:
+        return None
+    if x & 1 != sign:
+        x = P - x
+    return x
+
+
+_BX = _recover_x(_BY, 0)
+BASE = (_BX, _BY, 1, _BX * _BY % P)
+IDENTITY = (0, 1, 1, 0)
+
+
+def _add(p, q):
+    x1, y1, z1, t1 = p
+    x2, y2, z2, t2 = q
+    a = (y1 - x1) * (y2 - x2) % P
+    b = (y1 + x1) * (y2 + x2) % P
+    c = 2 * t1 * t2 * D % P
+    d = 2 * z1 * z2 % P
+    e, f, g, h = b - a, d - c, d + c, b + a
+    return (e * f % P, g * h % P, f * g % P, e * h % P)
+
+
+def _scalar_mul(point, s: int):
+    r = IDENTITY
+    while s:
+        if s & 1:
+            r = _add(r, point)
+        point = _add(point, point)
+        s >>= 1
+    return r
+
+
+def _compress(point) -> bytes:
+    x, y, z, _ = point
+    zi = pow(z, P - 2, P)
+    x, y = x * zi % P, y * zi % P
+    return (y | ((x & 1) << 255)).to_bytes(32, "little")
+
+
+def _decompress(b: bytes):
+    if len(b) != 32:
+        return None
+    enc = int.from_bytes(b, "little")
+    y = enc & ((1 << 255) - 1)
+    if y >= P:
+        return None
+    x = _recover_x(y, enc >> 255)
+    if x is None:
+        return None
+    return (x, y, 1, x * y % P)
+
+
+def _expand(seed: bytes):
+    h = hashlib.sha512(seed).digest()
+    a = int.from_bytes(h[:32], "little")
+    a &= (1 << 254) - 8
+    a |= 1 << 254
+    return a, h[32:]
+
+
+def public_key(seed: bytes) -> bytes:
+    """32-byte public key for a 32-byte seed."""
+    if len(seed) != 32:
+        raise ValueError(f"seed must be 32 bytes, got {len(seed)}")
+    a, _ = _expand(seed)
+    return _compress(_scalar_mul(BASE, a))
+
+
+def sign(seed: bytes, msg: bytes) -> bytes:
+    """64-byte signature R || S over ``msg``."""
+    a, prefix = _expand(seed)
+    pub = _compress(_scalar_mul(BASE, a))
+    r = int.from_bytes(hashlib.sha512(prefix + msg).digest(), "little") % L
+    r_enc = _compress(_scalar_mul(BASE, r))
+    k = int.from_bytes(hashlib.sha512(r_enc + pub + msg).digest(), "little") % L
+    s = (r + k * a) % L
+    return r_enc + s.to_bytes(32, "little")
+
+
+def verify(public: bytes, msg: bytes, sig: bytes) -> bool:
+    """True iff ``sig`` is a valid signature over ``msg`` by ``public``."""
+    if len(sig) != 64 or len(public) != 32:
+        return False
+    r_enc, s_bytes = sig[:32], sig[32:]
+    s = int.from_bytes(s_bytes, "little")
+    if s >= L:
+        return False
+    a = _decompress(public)
+    r = _decompress(r_enc)
+    if a is None or r is None:
+        return False
+    k = int.from_bytes(hashlib.sha512(r_enc + public + msg).digest(), "little") % L
+    lhs = _compress(_scalar_mul(BASE, s))
+    rhs = _compress(_add(r, _scalar_mul(a, k)))
+    return lhs == rhs
+
+
+def _self_test() -> None:
+    # RFC 8032 section 7.1, TEST 1-3.
+    vectors = [
+        (
+            "9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60",
+            "d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a",
+            b"",
+            "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e06522490155"
+            "5fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b",
+        ),
+        (
+            "4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb",
+            "3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c",
+            b"\x72",
+            "92a009a9f0d4cab8720e820b5f642540a2b27b5416503f8fb3762223ebdb69da"
+            "085ac1e43e15996e458f3613d0f11d8c387b2eaeb4302aeeb00d291612bb0c00",
+        ),
+        (
+            "c5aa8df43f9f837bedb7442f31dcb7b166d38535076f094b85ce3a2e0b4458f7",
+            "fc51cd8e6218a1a38da47ed00230f0580816ed13ba3303ac5deb911548908025",
+            b"\xaf\x82",
+            "6291d657deec24024827e69c3abe01a30ce548a284743a445e3680d7db5ac3ac"
+            "18ff9b538d16f290ae67f760984dc6594a7c15e9716ed28dc027beceea1ec40a",
+        ),
+    ]
+    for seed_hex, pub_hex, msg, sig_hex in vectors:
+        seed = bytes.fromhex(seed_hex)
+        assert public_key(seed).hex() == pub_hex
+        sig = sign(seed, msg)
+        assert sig.hex() == sig_hex
+        assert verify(bytes.fromhex(pub_hex), msg, sig)
+        assert not verify(bytes.fromhex(pub_hex), msg + b"x", sig)
+    bad = bytearray(sign(bytes.fromhex(vectors[0][0]), b"m"))
+    bad[3] ^= 1
+    assert not verify(bytes.fromhex(vectors[0][1]), b"m", bytes(bad))
+    print("ed25519 self-test ok")
+
+
+if __name__ == "__main__":
+    _self_test()

@@ -474,6 +474,14 @@ class Pipeline:
 
     def write_index(self):
         index: Dict[str, Dict] = {"profile": self.prof.name, "datasets": {}}
+        # Preserve the manifest revision across rebuilds; the stale digest
+        # map and signature are dropped (re-stamped by compile.sign below).
+        idx_p = os.path.join(ART, "index.json")
+        if os.path.exists(idx_p):
+            with open(idx_p) as f:
+                prev = json.load(f)
+            if "revision" in prev:
+                index["revision"] = prev["revision"]
         for ds in sorted(os.listdir(ART)):
             ds_dir = os.path.join(ART, ds)
             if not os.path.isdir(ds_dir) or ds == "analysis":
@@ -565,6 +573,12 @@ def main():
     # by rust/tests/native_backend.rs).
     from . import golden
     golden.main(ART)
+
+    # Stamp per-file digests + manifest signature so the Rust serving side
+    # verifies the bundle at load (skipped when no key has been generated).
+    if os.path.exists(os.path.join(ART, "signing.key")):
+        from . import sign
+        sign.main([ART])
     log("done")
 
 

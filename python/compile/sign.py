@@ -1,0 +1,210 @@
+"""Stamp and sign the artifact manifest (``artifacts/index.json``).
+
+Walks the artifact root, records a sha256 digest + size for every file,
+and signs the canonical manifest bytes with ed25519 so the Rust serving
+side (``runtime::repo``) can refuse tampered or truncated bundles at
+load time.
+
+The signature covers the *canonical bytes*, not the JSON text::
+
+    powerbert-manifest-v1\\n
+    revision <N>\\n
+    <relpath> <sha256hex> <size>\\n      # one line per file, byte order
+
+which is exactly what ``Manifest::signing_bytes`` produces in Rust —
+the JSON formatting itself is never load-bearing.
+
+Usage::
+
+    python -m compile.sign artifacts --gen-key      # once: create keypair
+    python -m compile.sign artifacts                # digest + sign (rev+1)
+    python -m compile.sign artifacts --revision 7   # explicit revision
+    python -m compile.sign artifacts --verify       # re-hash + check sig
+
+Run from ``python/``. Depends only on the standard library (hashlib) and
+the vendored ``compile.ed25519``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import secrets
+import sys
+from pathlib import Path
+
+from . import ed25519
+
+DOMAIN = "powerbert-manifest-v1"
+
+
+def manifest_skips(name: str) -> bool:
+    """Root-level names the manifest never covers (mirrors Rust)."""
+    return (
+        name == "index.json"
+        or name.startswith("signing.")
+        or name == "analysis"
+        or name == "__pycache__"
+        or name.startswith(".")
+    )
+
+
+def walk_files(root: Path) -> dict[str, dict]:
+    """Digest every artifact file under ``root``, '/'-separated relpaths."""
+    files: dict[str, dict] = {}
+
+    def recurse(dirpath: Path, rel: str) -> None:
+        for entry in sorted(dirpath.iterdir(), key=lambda p: p.name):
+            name = entry.name
+            if rel == "" and manifest_skips(name):
+                continue
+            if name.startswith(".") or name == "__pycache__":
+                continue
+            sub = f"{rel}/{name}" if rel else name
+            if entry.is_dir():
+                recurse(entry, sub)
+            else:
+                h = hashlib.sha256()
+                with entry.open("rb") as f:
+                    for chunk in iter(lambda: f.read(1 << 20), b""):
+                        h.update(chunk)
+                files[sub] = {
+                    "sha256": h.hexdigest(),
+                    "size": entry.stat().st_size,
+                }
+
+    recurse(root, "")
+    return files
+
+
+def signing_bytes(revision: int, files: dict[str, dict]) -> bytes:
+    lines = [f"{DOMAIN}\n", f"revision {revision}\n"]
+    # Byte order, matching Rust's BTreeMap iteration over the relpaths.
+    for rel in sorted(files, key=lambda s: s.encode()):
+        fd = files[rel]
+        lines.append(f"{rel} {fd['sha256']} {fd['size']}\n")
+    return "".join(lines).encode()
+
+
+def load_manifest(root: Path) -> dict:
+    path = root / "index.json"
+    if not path.exists():
+        return {}
+    return json.loads(path.read_text())
+
+
+def write_manifest(root: Path, doc: dict) -> None:
+    path = root / "index.json"
+    path.write_text(json.dumps(doc, indent=1, sort_keys=False) + "\n")
+
+
+def read_seed(path: Path) -> bytes:
+    seed = bytes.fromhex(path.read_text().strip())
+    if len(seed) != 32:
+        raise SystemExit(f"{path}: expected a 32-byte hex seed, got {len(seed)} bytes")
+    return seed
+
+
+def cmd_gen_key(root: Path) -> int:
+    key_path = root / "signing.key"
+    pub_path = root / "signing.pub"
+    if key_path.exists():
+        print(f"refusing to overwrite existing {key_path}", file=sys.stderr)
+        return 1
+    seed = secrets.token_bytes(32)
+    key_path.write_text(seed.hex() + "\n")
+    pub_path.write_text(ed25519.public_key(seed).hex() + "\n")
+    print(f"wrote {key_path} and {pub_path}")
+    return 0
+
+
+def cmd_verify(root: Path) -> int:
+    doc = load_manifest(root)
+    files = doc.get("files")
+    if not isinstance(files, dict):
+        print("manifest has no files map (unsigned legacy bundle)", file=sys.stderr)
+        return 1
+    disk = walk_files(root)
+    bad = 0
+    for rel, fd in sorted(files.items()):
+        got = disk.get(rel)
+        if got is None:
+            print(f"MISSING {rel}", file=sys.stderr)
+            bad += 1
+        elif got["sha256"] != fd["sha256"] or got["size"] != fd["size"]:
+            print(
+                f"MISMATCH {rel}: expected sha256 {fd['sha256']} ({fd['size']} bytes), "
+                f"actual sha256 {got['sha256']} ({got['size']} bytes)",
+                file=sys.stderr,
+            )
+            bad += 1
+    for rel in sorted(set(disk) - set(files)):
+        print(f"UNLISTED {rel}", file=sys.stderr)
+        bad += 1
+    sig = doc.get("signature")
+    if sig is None:
+        print("manifest is not signed", file=sys.stderr)
+        bad += 1
+    else:
+        msg = signing_bytes(int(doc.get("revision", 0)), files)
+        ok = ed25519.verify(
+            bytes.fromhex(sig["public_key"]), msg, bytes.fromhex(sig["signature"])
+        )
+        if not ok:
+            print("SIGNATURE does not verify", file=sys.stderr)
+            bad += 1
+    if bad:
+        print(f"verify FAILED ({bad} problems)", file=sys.stderr)
+        return 1
+    print(f"verify OK: revision {doc.get('revision', 0)}, {len(files)} files, signed")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m compile.sign", description=__doc__.split("\n", 1)[0]
+    )
+    ap.add_argument("root", nargs="?", default="artifacts", help="artifact root")
+    ap.add_argument("--revision", type=int, help="manifest revision (default: previous + 1)")
+    ap.add_argument("--key", help="ed25519 seed file (default <root>/signing.key)")
+    ap.add_argument("--gen-key", action="store_true", help="generate a keypair and exit")
+    ap.add_argument("--verify", action="store_true", help="check digests + signature, no write")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root)
+    if not root.is_dir():
+        print(f"{root}: not a directory", file=sys.stderr)
+        return 2
+    if args.gen_key:
+        return cmd_gen_key(root)
+    if args.verify:
+        return cmd_verify(root)
+
+    key_path = Path(args.key) if args.key else root / "signing.key"
+    if not key_path.exists():
+        print(
+            f"{key_path}: no signing key (run --gen-key first, or pass --key)",
+            file=sys.stderr,
+        )
+        return 2
+    seed = read_seed(key_path)
+
+    doc = load_manifest(root)
+    revision = args.revision if args.revision is not None else int(doc.get("revision", 0)) + 1
+    files = walk_files(root)
+    doc["revision"] = revision
+    doc["files"] = {rel: files[rel] for rel in sorted(files, key=lambda s: s.encode())}
+    sig = ed25519.sign(seed, signing_bytes(revision, files))
+    doc["signature"] = {
+        "algorithm": "ed25519",
+        "public_key": ed25519.public_key(seed).hex(),
+        "signature": sig.hex(),
+    }
+    write_manifest(root, doc)
+    print(f"signed {root / 'index.json'}: revision {revision}, {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

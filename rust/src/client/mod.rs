@@ -130,6 +130,43 @@ impl VariantInfo {
     }
 }
 
+/// Artifact-repository status as advertised in the `hello`/`stats` frames
+/// and echoed by the admin commands (`reload`, `add-variant`).
+#[derive(Debug, Clone, Default)]
+pub struct RepoInfo {
+    /// Manifest revision of the live snapshot (0 = unmanaged bundle).
+    pub revision: u64,
+    /// Monotonic swap counter; bumps on every successful hot reload.
+    pub generation: u64,
+    /// Whether the manifest signature verified against the trusted key.
+    pub signed: bool,
+    /// Manifest-listed files that hashed clean at the last verification.
+    pub verified_files: u64,
+    /// Datasets excluded because a file of theirs failed verification.
+    pub excluded: Vec<String>,
+    /// Datasets the live snapshot serves (present on admin replies).
+    pub datasets: Vec<String>,
+}
+
+impl RepoInfo {
+    fn parse(j: &Json) -> RepoInfo {
+        let strs = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        RepoInfo {
+            revision: j.get("revision").and_then(Json::as_u64).unwrap_or(0),
+            generation: j.get("generation").and_then(Json::as_u64).unwrap_or(0),
+            signed: j.get("signed").and_then(Json::as_bool).unwrap_or(false),
+            verified_files: j.get("verified_files").and_then(Json::as_u64).unwrap_or(0),
+            excluded: strs("excluded"),
+            datasets: strs("datasets"),
+        }
+    }
+}
+
 /// Server capabilities from the hello frame: everything needed to pick a
 /// dataset, variant, and SLA without out-of-band knowledge.
 #[derive(Debug, Clone)]
@@ -159,6 +196,9 @@ pub struct ServerInfo {
     /// Whether the server understands the v2 `compute` field (per-request
     /// adaptive retention); false when the server predates it.
     pub adaptive: bool,
+    /// Artifact-repository status (revision, signature, exclusions);
+    /// `None` when the server predates the repo capability.
+    pub repo: Option<RepoInfo>,
 }
 
 impl ServerInfo {
@@ -204,6 +244,7 @@ impl ServerInfo {
                 .unwrap_or(0),
             edge: j.get("edge").and_then(Json::as_str).unwrap_or("").to_string(),
             adaptive: j.get("adaptive").and_then(Json::as_bool).unwrap_or(false),
+            repo: j.get("repo").map(RepoInfo::parse),
         })
     }
 }
@@ -497,10 +538,58 @@ impl PowerClient {
             .collect()
     }
 
+    /// Re-fetch the server's capabilities with a live `hello` command.
+    /// Unlike [`PowerClient::hello`] (captured once at connect), this
+    /// reflects hot reloads that happened since.
+    pub fn fetch_hello(&self) -> Result<ServerInfo, ClientError> {
+        let frame = self.command("hello", None)?;
+        ServerInfo::parse(
+            frame
+                .get("hello")
+                .ok_or_else(|| ClientError::Protocol("hello reply has no hello payload".into()))?,
+        )
+    }
+
+    /// Ask the server to re-verify its artifact root and atomically swap
+    /// in the new snapshot (`cmd:"reload"`). Blocks until the verify +
+    /// swap completes; in-flight requests finish on the old snapshot.
+    pub fn reload(&self) -> Result<RepoInfo, ClientError> {
+        let frame = self.admin_command("reload", None, None)?;
+        frame
+            .get("reload")
+            .map(RepoInfo::parse)
+            .ok_or_else(|| ClientError::Protocol("reload reply has no payload".into()))
+    }
+
+    /// Reload and confirm that `dataset/variant` is served afterwards
+    /// (`cmd:"add-variant"`) — the hot path for dropping a new exported
+    /// bundle into the artifact root of a running server.
+    pub fn add_variant(&self, dataset: &str, variant: &str) -> Result<RepoInfo, ClientError> {
+        let frame = self.admin_command("add-variant", Some(dataset), Some(variant))?;
+        frame
+            .get("add_variant")
+            .map(RepoInfo::parse)
+            .ok_or_else(|| ClientError::Protocol("add-variant reply has no payload".into()))
+    }
+
     fn command(&self, cmd: &str, dataset: Option<&str>) -> Result<Json, ClientError> {
+        self.roundtrip(|id| protocol::cmd_frame(id, cmd, dataset))
+    }
+
+    fn admin_command(
+        &self,
+        cmd: &str,
+        dataset: Option<&str>,
+        variant: Option<&str>,
+    ) -> Result<Json, ClientError> {
+        self.roundtrip(|id| protocol::admin_frame(id, cmd, dataset, variant))
+    }
+
+    /// Send one command frame and block for its routed reply.
+    fn roundtrip(&self, build: impl FnOnce(u64) -> Json) -> Result<Json, ClientError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let rx = self.register(id)?;
-        let frame = protocol::cmd_frame(id, cmd, dataset);
+        let frame = build(id);
         if let Err(e) = self.send_line(&frame.to_string()) {
             self.unregister(id);
             return Err(e);

@@ -47,11 +47,15 @@ pub struct BatchKey {
     /// Adaptive attention-mass threshold as raw bits (`f32::to_bits`) so
     /// the key stays `Eq + Hash`; `None` = the fixed schedule.
     pub threshold: Option<u32>,
+    /// Repository snapshot generation the member jobs were routed under
+    /// (0 = unversioned). Keying on it means a batch never mixes weights
+    /// from before and after a hot reload, even for the same variant name.
+    pub rev: u64,
 }
 
 impl BatchKey {
     pub fn new(variant: impl Into<String>, seq: usize) -> BatchKey {
-        BatchKey { variant: variant.into(), seq, threshold: None }
+        BatchKey { variant: variant.into(), seq, threshold: None, rev: 0 }
     }
 
     /// Key for a specific adaptive operating point.
@@ -60,7 +64,17 @@ impl BatchKey {
         seq: usize,
         threshold: Option<f32>,
     ) -> BatchKey {
-        BatchKey { variant: variant.into(), seq, threshold: threshold.map(f32::to_bits) }
+        BatchKey { variant: variant.into(), seq, threshold: threshold.map(f32::to_bits), rev: 0 }
+    }
+
+    /// Key pinned to a repository snapshot generation.
+    pub fn with_revision(
+        variant: impl Into<String>,
+        seq: usize,
+        threshold: Option<f32>,
+        rev: u64,
+    ) -> BatchKey {
+        BatchKey { variant: variant.into(), seq, threshold: threshold.map(f32::to_bits), rev }
     }
 
     /// The threshold back as a float (`None` = fixed schedule).
@@ -74,6 +88,9 @@ impl std::fmt::Display for BatchKey {
         write!(f, "{}@s{}", self.variant, self.seq)?;
         if let Some(t) = self.threshold_f32() {
             write!(f, "@t{t:.3}")?;
+        }
+        if self.rev > 0 {
+            write!(f, "@g{}", self.rev)?;
         }
         Ok(())
     }
@@ -237,6 +254,7 @@ mod tests {
             real_len: 3,
             threshold: None,
             compute: None,
+            snap: None,
             reply: ReplySink::Oneshot(tx),
         }
     }
@@ -340,6 +358,24 @@ mod tests {
         assert_eq!(rest.len(), 1);
         assert_eq!(rest[0].key, fast);
         assert_eq!(format!("{fast}"), "k@s16@t0.600");
+    }
+
+    #[test]
+    fn snapshot_generations_do_not_share_batches() {
+        // Same variant/seq/threshold before and after a hot reload: jobs
+        // routed under different repository generations must never share a
+        // batch (they may point at different weights).
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        let old = BatchKey::with_revision("k", 16, None, 1);
+        let new = BatchKey::with_revision("k", 16, None, 2);
+        assert_ne!(old, new);
+        assert_eq!(format!("{new}"), "k@s16@g2");
+        assert!(b.push(old.clone(), job(1), now).is_none());
+        assert!(b.push(new.clone(), job(2), now).is_none());
+        let full = b.push(old.clone(), job(3), now).expect("old-generation queue full");
+        assert_eq!(full.key, old);
+        assert_eq!(b.pending(), 1, "new-generation job still queued");
     }
 
     #[test]

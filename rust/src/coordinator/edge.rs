@@ -39,6 +39,7 @@ use std::time::Instant;
 
 use super::protocol::{self, ErrorCode};
 use super::request::{Response, ServeError};
+use super::scheduler::AdminCmd;
 use super::server::{coded_err_json, handle_line, ConnInfo, Server, MAX_INFLIGHT_PER_CONNECTION};
 use crate::util::epoll::{self, EpollEvent, EPOLLIN, EPOLLOUT};
 use crate::util::json::Json;
@@ -171,6 +172,9 @@ fn run_epoll_linux(server: &Server) -> std::io::Result<()> {
     // One completion channel for the whole edge; the sender side is cloned
     // into every submitted job's ReplySink::Routed.
     let (done_tx, done_rx) = channel::<(u64, u64, Result<Response, ServeError>)>();
+    // Admin replies (reload/add-variant) arrive pre-framed from the
+    // coordinator's admin thread, tagged with the connection token.
+    let (admin_tx, admin_rx) = channel::<(u64, Json)>();
     let wake_fn: Arc<dyn Fn() + Send + Sync> = {
         let wakeup = wakeup.clone();
         Arc::new(move || wakeup.wake())
@@ -183,6 +187,7 @@ fn run_epoll_linux(server: &Server) -> std::io::Result<()> {
         conns: HashMap::new(),
         next_token: TOKEN_FIRST_CONN,
         done_tx,
+        admin_tx,
         wake_fn,
     };
 
@@ -208,13 +213,14 @@ fn run_epoll_linux(server: &Server) -> std::io::Result<()> {
         // in-flight slots and shrinks buffers before taking on new peers.
         if completions_ready {
             loop_state.drain_completions(&done_rx);
+            loop_state.drain_admin(&admin_rx);
         }
         if accept_ready {
             loop_state.accept_ready();
         }
     }
 
-    loop_state.drain_on_stop(&done_rx);
+    loop_state.drain_on_stop(&done_rx, &admin_rx);
     Ok(())
 }
 
@@ -226,6 +232,7 @@ struct Loop<'a> {
     conns: HashMap<u64, Conn>,
     next_token: u64,
     done_tx: Sender<(u64, u64, Result<Response, ServeError>)>,
+    admin_tx: Sender<(u64, Json)>,
     wake_fn: Arc<dyn Fn() + Send + Sync>,
 }
 
@@ -388,16 +395,19 @@ impl Loop<'_> {
             }
 
             // The edge's submit hook: bind validated requests to the
-            // routed sink. `inflight` is copied out and written back
-            // because the closure cannot borrow the map entry while
-            // `handle_line` also needs `&Client`.
-            let mut inflight = conn.inflight;
+            // routed sink. `inflight` is copied out (into a Cell both the
+            // submit and admin hooks can bump) and written back because
+            // the closures cannot borrow the map entry while `handle_line`
+            // also needs `&Client`.
+            let inflight = std::cell::Cell::new(conn.inflight);
             let replies = {
                 let client = &self.server.client;
                 let done_tx = &self.done_tx;
+                let admin_tx = &self.admin_tx;
                 let wake_fn = &self.wake_fn;
+                let inflight = &inflight;
                 let mut submit = |w: protocol::WireRequest| -> Option<Json> {
-                    if inflight >= MAX_INFLIGHT_PER_CONNECTION {
+                    if inflight.get() >= MAX_INFLIGHT_PER_CONNECTION {
                         return Some(protocol::error_frame(
                             Some(w.id),
                             ErrorCode::Overloaded,
@@ -406,7 +416,7 @@ impl Loop<'_> {
                             ),
                         ));
                     }
-                    inflight += 1;
+                    inflight.set(inflight.get() + 1);
                     match client.submit_routed(
                         &w.dataset,
                         w.input,
@@ -418,7 +428,7 @@ impl Loop<'_> {
                     ) {
                         Ok(()) => None,
                         Err(e) => {
-                            inflight -= 1;
+                            inflight.set(inflight.get() - 1);
                             Some(protocol::error_frame(
                                 Some(w.id),
                                 ErrorCode::from_serve(&e),
@@ -427,10 +437,34 @@ impl Loop<'_> {
                         }
                     }
                 };
-                handle_line(line, client, &self.info, &mut submit)
+                // The admin hook: hand the command to the coordinator's
+                // admin thread; the reply frame comes back through the
+                // edge's admin channel tagged with this token. Counted as
+                // in-flight so a closing connection drains its pending
+                // admin reply exactly like a pending classification.
+                let mut admin = |id: u64, cmd: AdminCmd| -> Option<Json> {
+                    let tx = admin_tx.clone();
+                    let wake = wake_fn.clone();
+                    let reply = Box::new(move |frame: Json| {
+                        let _ = tx.send((token, frame));
+                        wake();
+                    });
+                    match client.submit_admin(id, cmd, reply) {
+                        Ok(()) => {
+                            inflight.set(inflight.get() + 1);
+                            None
+                        }
+                        Err(e) => Some(protocol::error_frame(
+                            Some(id),
+                            ErrorCode::from_serve(&e),
+                            &e.to_string(),
+                        )),
+                    }
+                };
+                handle_line(line, client, &self.info, &mut submit, &mut admin)
             };
             if let Some(c) = self.conns.get_mut(&token) {
-                c.inflight = inflight;
+                c.inflight = inflight.get();
             }
             for frame in replies {
                 self.queue_frame(token, &frame);
@@ -452,6 +486,19 @@ impl Loop<'_> {
             };
             let Some(conn) = self.conns.get_mut(&token) else {
                 continue; // connection closed while its request executed
+            };
+            conn.inflight -= 1;
+            self.queue_frame(token, &frame);
+            self.close_if_drained(token);
+        }
+    }
+
+    /// Deliver admin replies (already-framed reload/add-variant results)
+    /// to their connections' write buffers.
+    fn drain_admin(&mut self, admin_rx: &Receiver<(u64, Json)>) {
+        while let Ok((token, frame)) = admin_rx.try_recv() {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                continue; // connection closed while the reload ran
             };
             conn.inflight -= 1;
             self.queue_frame(token, &frame);
@@ -594,7 +641,11 @@ impl Loop<'_> {
     /// idle connections are closed immediately, busy ones stop reading but
     /// keep flushing until their in-flight work completes — bounded by
     /// [`DRAIN_GRACE_MS`] against pathological stalls.
-    fn drain_on_stop(&mut self, done_rx: &Receiver<(u64, u64, Result<Response, ServeError>)>) {
+    fn drain_on_stop(
+        &mut self,
+        done_rx: &Receiver<(u64, u64, Result<Response, ServeError>)>,
+        admin_rx: &Receiver<(u64, Json)>,
+    ) {
         let tokens: Vec<u64> = self.conns.keys().copied().collect();
         for token in tokens {
             if let Some(c) = self.conns.get_mut(&token) {
@@ -609,6 +660,7 @@ impl Loop<'_> {
         let mut events = [EpollEvent::default(); 64];
         while !self.conns.is_empty() && Instant::now() < deadline {
             self.drain_completions(done_rx);
+            self.drain_admin(admin_rx);
             let tokens: Vec<u64> = self.conns.keys().copied().collect();
             for token in tokens {
                 if self.flush(token) {

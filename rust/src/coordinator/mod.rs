@@ -25,5 +25,5 @@ pub use metrics::{MetricsHub, VariantStats, WorkerStats};
 pub use protocol::{ErrorCode, PROTOCOL_VERSION};
 pub use request::{Compute, Input, Request, Response, ServeError, Sla};
 pub use router::{Policy, Router};
-pub use scheduler::{Client, Config, Coordinator};
+pub use scheduler::{AdminCmd, Client, Config, Coordinator};
 pub use server::{Server, ServerHandle, DEFAULT_MAX_CONNECTIONS, MAX_INFLIGHT_PER_CONNECTION};

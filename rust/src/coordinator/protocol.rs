@@ -13,6 +13,8 @@
 //!   {"v":2, "id":8, "dataset":"sst2", "tokens":[...], "segments":[...]}
 //!   {"v":2, "batch":[{...}, {...}]}              // entries as above, sans "v"
 //!   {"v":2, "id":1, "cmd":"hello" | "stats" | "variants"}
+//!   {"v":2, "id":1, "cmd":"reload"}                       // admin: re-verify + hot-swap
+//!   {"v":2, "id":1, "cmd":"add-variant", "dataset":"sst2", "variant":"power-long"}
 //!
 //! Server -> client (ids echoed verbatim, completion may be out of order):
 //!   {"v":2, "id":7, "result":{"label":1, "scores":[...], "variant":"...",
@@ -55,6 +57,9 @@ pub enum ErrorCode {
     Shutdown,
     /// Model execution failed.
     ExecFailed,
+    /// Artifact verification failed — a reload/add-variant found a digest
+    /// or signature mismatch and refused to swap the snapshot.
+    VerifyFailed,
     /// Unrecognized wire code (forward compatibility).
     Other,
 }
@@ -70,6 +75,7 @@ impl ErrorCode {
             ErrorCode::UnknownVariant => "unknown_variant",
             ErrorCode::Shutdown => "shutdown",
             ErrorCode::ExecFailed => "exec_failed",
+            ErrorCode::VerifyFailed => "verify_failed",
             ErrorCode::Other => "other",
         }
     }
@@ -84,6 +90,7 @@ impl ErrorCode {
             "unknown_variant" => ErrorCode::UnknownVariant,
             "shutdown" => ErrorCode::Shutdown,
             "exec_failed" => ErrorCode::ExecFailed,
+            "verify_failed" => ErrorCode::VerifyFailed,
             _ => ErrorCode::Other,
         }
     }
@@ -125,7 +132,8 @@ pub struct WireRequest {
     pub sla: Sla,
 }
 
-fn frame(id: Option<u64>) -> BTreeMap<String, Json> {
+/// The common `{"v":2, "id":...}` frame skeleton every reply builds on.
+pub fn frame(id: Option<u64>) -> BTreeMap<String, Json> {
     let mut m = BTreeMap::new();
     m.insert("v".to_string(), Json::UInt(PROTOCOL_VERSION));
     if let Some(id) = id {
@@ -272,10 +280,19 @@ pub fn batch_frame(entries: Vec<Json>) -> Json {
 
 /// `{"v":2,"id":...,"cmd":...}` (+ optional dataset for `variants`).
 pub fn cmd_frame(id: u64, cmd: &str, dataset: Option<&str>) -> Json {
+    admin_frame(id, cmd, dataset, None)
+}
+
+/// Command frame with admin operands: `cmd:"add-variant"` names the
+/// dataset/variant to adopt, `cmd:"reload"` carries neither.
+pub fn admin_frame(id: u64, cmd: &str, dataset: Option<&str>, variant: Option<&str>) -> Json {
     let mut m = frame(Some(id));
     m.insert("cmd".to_string(), Json::Str(cmd.to_string()));
     if let Some(d) = dataset {
         m.insert("dataset".to_string(), Json::Str(d.to_string()));
+    }
+    if let Some(v) = variant {
+        m.insert("variant".to_string(), Json::Str(v.to_string()));
     }
     Json::Obj(m)
 }
@@ -573,6 +590,7 @@ mod tests {
             ErrorCode::UnknownVariant,
             ErrorCode::Shutdown,
             ErrorCode::ExecFailed,
+            ErrorCode::VerifyFailed,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), code);
         }

@@ -216,6 +216,12 @@ pub struct Job {
     /// The resolved operating-point echo for the response (`compute`
     /// field), fixed at routing time.
     pub compute: Option<String>,
+    /// Repository snapshot pinned at routing time: the batch executor
+    /// resolves metadata and weights through it, so a concurrent hot
+    /// reload cannot change what this job runs against mid-flight.
+    /// `None` only for legacy in-process construction (unit tests); the
+    /// executor then falls back to its startup registry and store.
+    pub snap: Option<Arc<crate::runtime::RepoSnapshot>>,
     pub reply: ReplySink,
 }
 

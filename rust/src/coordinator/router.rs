@@ -166,22 +166,56 @@ impl Router {
         }
     }
 
-    /// Pick the serving variant for (dataset, SLA).
+    /// Pick the serving variant for (dataset, SLA) from the router's own
+    /// startup tables.
     pub fn route(&self, dataset: &str, sla: &Sla) -> Result<VariantMeta, ServeError> {
         let d = self
             .datasets
             .get(dataset)
             .ok_or_else(|| ServeError::UnknownDataset(dataset.to_string()))?;
+        self.select(&d.variants, d.baseline_metric, dataset, sla)
+    }
+
+    /// Pick the serving variant from a repository snapshot's registry
+    /// instead of the startup tables — this is what the serving path uses,
+    /// so a hot-swapped bundle (new variants, changed dev metrics) routes
+    /// correctly without rebuilding the router. Policy, latency priors and
+    /// online latency measurements still come from `self`.
+    pub fn route_in(
+        &self,
+        registry: &crate::runtime::Registry,
+        dataset: &str,
+        sla: &Sla,
+    ) -> Result<VariantMeta, ServeError> {
+        let ds = registry
+            .dataset(dataset)
+            .ok_or_else(|| ServeError::UnknownDataset(dataset.to_string()))?;
+        // Same baseline rule as `add_variant`: the last bert/albert variant
+        // (in name order) with a dev metric.
+        let mut baseline = None;
+        for m in ds.variants.values() {
+            if m.kind == "bert" || m.kind == "albert" {
+                baseline = m.dev_metric.or(baseline);
+            }
+        }
+        self.select(&ds.variants, baseline, dataset, sla)
+    }
+
+    fn select(
+        &self,
+        variants: &BTreeMap<String, VariantMeta>,
+        baseline_metric: Option<f64>,
+        dataset: &str,
+        sla: &Sla,
+    ) -> Result<VariantMeta, ServeError> {
         if let Some(v) = &sla.variant {
-            return d
-                .variants
+            return variants
                 .get(v)
                 .cloned()
                 .ok_or_else(|| ServeError::UnknownVariant(v.clone()));
         }
         // Candidates: anything with a dev metric; exclude debug artifacts.
-        let mut cands: Vec<&VariantMeta> = d
-            .variants
+        let mut cands: Vec<&VariantMeta> = variants
             .values()
             .filter(|m| !m.variant.ends_with("-debug"))
             .collect();
@@ -191,8 +225,7 @@ impl Router {
         let metric_of = |m: &VariantMeta| m.dev_metric.unwrap_or(0.0);
 
         let chosen = match (&self.policy, sla.max_latency_ms, sla.min_metric) {
-            (Policy::Fixed(name), _, _) => d
-                .variants
+            (Policy::Fixed(name), _, _) => variants
                 .get(name)
                 .ok_or_else(|| ServeError::UnknownVariant(name.clone()))?,
             (_, Some(budget_ms), _) => {
@@ -238,7 +271,7 @@ impl Router {
             (Policy::FastestAboveMetric, None, None) => {
                 // Default floor: within 1% (absolute) of baseline — the
                 // paper's Table-2 operating point.
-                let floor = d.baseline_metric.map(|b| b - 0.01).unwrap_or(0.0);
+                let floor = baseline_metric.map(|b| b - 0.01).unwrap_or(0.0);
                 let mut ok: Vec<&VariantMeta> =
                     cands.iter().filter(|m| metric_of(m) >= floor).copied().collect();
                 if ok.is_empty() {
@@ -285,6 +318,7 @@ mod tests {
             retention: Some(vec![agg / 6; 6]),
             dev_metric: Some(dev),
             pareto: None,
+            weights_check: None,
             dir: PathBuf::from("/tmp"),
         }
     }
@@ -417,6 +451,38 @@ mod tests {
         // Threshold 1.0 (and no compute at all) are the fixed schedule.
         assert_eq!(Router::operating_point(&m, Some(&Compute::Threshold(1.0))).0, None);
         assert_eq!(Router::operating_point(&m, None), (None, None));
+    }
+
+    #[test]
+    fn route_in_reads_the_snapshot_registry_not_startup_tables() {
+        use crate::runtime::{DatasetArtifacts, Registry};
+        // Empty router tables; all variants arrive via the registry — the
+        // hot-reload path, where a swapped-in bundle must route without
+        // rebuilding the router.
+        let r = Router::new(Policy::FastestAboveMetric, Arc::new(MetricsHub::new()));
+        let mut variants = BTreeMap::new();
+        for m in [meta("bert", "bert", 0.90, 192), meta("power-default", "power", 0.895, 60)] {
+            variants.insert(m.variant.clone(), m);
+        }
+        let mut datasets = BTreeMap::new();
+        datasets.insert(
+            "sst2".to_string(),
+            DatasetArtifacts {
+                name: "sst2".into(),
+                dir: PathBuf::from("/tmp"),
+                variants,
+                test_check: None,
+            },
+        );
+        let reg = Registry { root: PathBuf::from("/tmp"), datasets };
+        // Baseline (bert 0.90) - 1% floor -> cheapest above = power-default.
+        let picked = r.route_in(&reg, "sst2", &Sla::default()).unwrap();
+        assert_eq!(picked.variant, "power-default");
+        assert!(r.route("sst2", &Sla::default()).is_err(), "startup tables are empty");
+        assert!(matches!(
+            r.route_in(&reg, "nope", &Sla::default()),
+            Err(ServeError::UnknownDataset(_))
+        ));
     }
 
     #[test]

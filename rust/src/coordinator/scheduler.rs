@@ -41,9 +41,11 @@ use super::metrics::MetricsHub;
 use super::request::{Input, Job, ReplySink, Request, Response, ServeError, Sla};
 use super::router::{Policy, Router};
 use crate::runtime::{
-    ArtifactStore, BackendKind, EngineWorker, KernelConfig, Registry, VariantMeta,
+    ArtifactStore, BackendKind, EngineWorker, KernelConfig, Registry, Repo, RepoPolicy,
+    VariantMeta,
 };
 use crate::tokenizer::{Tokenizer, Vocab, PAD_ID};
+use crate::util::json::Json;
 
 /// Coordinator configuration.
 pub struct Config {
@@ -80,6 +82,12 @@ pub struct Config {
     /// [16, 32, 64]). Requests encode to the smallest bucket that fits
     /// their true token count; empty = off (every request at full seq_len).
     pub seq_buckets: Vec<usize>,
+    /// Refuse to serve unless the artifact manifest is signed by the
+    /// trusted key and every file on disk is digest-covered.
+    pub require_signed: bool,
+    /// Trusted ed25519 public key (hex file). Defaults to
+    /// `<artifacts>/signing.pub` when present.
+    pub trusted_key: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -96,6 +104,8 @@ impl Default for Config {
             backend: BackendKind::from_env(),
             kernel: KernelConfig::from_env(),
             seq_buckets: Vec::new(),
+            require_signed: false,
+            trusted_key: None,
         }
     }
 }
@@ -103,6 +113,26 @@ impl Default for Config {
 enum ExecMsg {
     Run(Batch),
     Preload(String, String), // dataset, variant
+}
+
+/// Administrative commands (protocol v2 `cmd:reload` / `cmd:add-variant`):
+/// executed on a dedicated thread, off the request hot path, serialized so
+/// two concurrent rollouts cannot interleave their verify+swap.
+#[derive(Debug, Clone)]
+pub enum AdminCmd {
+    /// Re-read + verify the artifacts root and atomically swap the
+    /// repository snapshot (zero-downtime rollout).
+    Reload,
+    /// Reload, then confirm the named variant is now served.
+    AddVariant { dataset: String, variant: String },
+}
+
+/// An admin command plus the completion callback that delivers its reply
+/// frame back to the connection that asked.
+pub struct AdminJob {
+    pub cmd: AdminCmd,
+    pub id: u64,
+    pub reply: Box<dyn FnOnce(Json) + Send>,
 }
 
 /// Smallest configured seq bucket that fits `need` tokens; buckets at or
@@ -153,6 +183,8 @@ impl Affinity {
 #[derive(Clone)]
 pub struct Client {
     submit_tx: SyncSender<Job>,
+    admin_tx: Sender<AdminJob>,
+    repo: Arc<Repo>,
     router: Router,
     tokenizer: Tokenizer,
     metrics: Arc<MetricsHub>,
@@ -217,7 +249,11 @@ impl Client {
         id: u64,
         reply: ReplySink,
     ) -> Result<(), ServeError> {
-        let meta = self.router.route(dataset, &sla)?;
+        // Pin the repository snapshot FIRST: routing, batching and
+        // execution of this request all resolve against the same snapshot
+        // even if a hot reload swaps a new one in mid-flight.
+        let snap = self.repo.snapshot();
+        let meta = self.router.route_in(&snap.registry, dataset, &sla)?;
         // Resolve the adaptive operating point once, at routing time: the
         // threshold becomes part of the batch key (jobs at different
         // points never share a batch) and the echo string rides back on
@@ -284,6 +320,7 @@ impl Client {
             real_len,
             threshold,
             compute,
+            snap: Some(snap),
             reply,
         };
         match self.submit_tx.try_send(job) {
@@ -302,6 +339,25 @@ impl Client {
     ) -> Result<Response, ServeError> {
         let rx = self.submit(dataset, input, sla)?;
         rx.recv().map_err(|_| ServeError::Shutdown)?
+    }
+
+    /// Enqueue an admin command (reload / add-variant). `reply` receives
+    /// the complete v2 reply frame once the rollout finished (or failed) —
+    /// the admin thread does the verify + swap off the request hot path.
+    pub fn submit_admin(
+        &self,
+        id: u64,
+        cmd: AdminCmd,
+        reply: Box<dyn FnOnce(Json) + Send>,
+    ) -> Result<(), ServeError> {
+        self.admin_tx
+            .send(AdminJob { cmd, id, reply })
+            .map_err(|_| ServeError::Shutdown)
+    }
+
+    /// The artifact repository (current snapshot, revision, policy).
+    pub fn repo(&self) -> &Arc<Repo> {
+        &self.repo
     }
 
     pub fn router(&self) -> &Router {
@@ -340,13 +396,27 @@ impl Client {
 pub struct Coordinator {
     client: Option<Client>,
     registry: Registry,
+    repo: Arc<Repo>,
     front: Option<JoinHandle<()>>,
+    admin: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
     pub fn start(cfg: Config) -> Result<Coordinator, String> {
-        let registry = Registry::scan(&cfg.artifacts)?;
+        // Open the artifact repository: manifest verified, every listed
+        // file streaming-hashed, datasets with failures excluded. The
+        // startup snapshot's registry drives everything below.
+        let repo = Arc::new(Repo::open(
+            &cfg.artifacts,
+            RepoPolicy {
+                require_signed: cfg.require_signed,
+                trusted_key: cfg.trusted_key.clone(),
+                datasets: cfg.datasets.clone(),
+            },
+        )?);
+        let snapshot = repo.snapshot();
+        let registry = snapshot.registry.clone();
         let vocab = Arc::new(Vocab::load(&registry.vocab_path())?);
         let tokenizer = Tokenizer::new(vocab);
         let metrics = Arc::new(MetricsHub::new());
@@ -370,7 +440,9 @@ impl Coordinator {
         // Executor pool: each worker thread owns its PJRT client (not Send
         // -> created on the worker thread); host artifacts are shared.
         let n_workers = cfg.workers.max(1);
-        let store = Arc::new(ArtifactStore::new());
+        // Workers share the *startup snapshot's* store, so preloads land in
+        // the store a later reload carries unchanged variants over from.
+        let store = snapshot.store.clone();
         let mut exec_txs: Vec<SyncSender<ExecMsg>> = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
         let backend = cfg.backend;
@@ -417,9 +489,26 @@ impl Coordinator {
             .spawn(move || front_loop(submit_rx, exec_txs, affinity, batch_policy, bucket_caps))
             .map_err(|e| e.to_string())?;
 
+        // Admin thread: executes reload/add-variant commands one at a time
+        // (two concurrent rollouts must not interleave verify + swap), off
+        // the request path. Exits when the last Client clone drops.
+        let (admin_tx, admin_rx) = std::sync::mpsc::channel::<AdminJob>();
+        let admin_repo = repo.clone();
+        let admin = std::thread::Builder::new()
+            .name("pb-admin".into())
+            .spawn(move || {
+                while let Ok(job) = admin_rx.recv() {
+                    let frame = run_admin(&admin_repo, job.id, &job.cmd);
+                    (job.reply)(frame);
+                }
+            })
+            .map_err(|e| e.to_string())?;
+
         Ok(Coordinator {
             client: Some(Client {
                 submit_tx,
+                admin_tx,
+                repo: repo.clone(),
                 router,
                 tokenizer,
                 metrics,
@@ -429,7 +518,9 @@ impl Coordinator {
                 kernel: cfg.kernel.clone(),
             }),
             registry,
+            repo,
             front: Some(front),
+            admin: Some(admin),
             workers,
         })
     }
@@ -449,6 +540,11 @@ impl Coordinator {
 
     pub fn registry(&self) -> &Registry {
         &self.registry
+    }
+
+    /// The artifact repository behind this coordinator.
+    pub fn repo(&self) -> &Arc<Repo> {
+        &self.repo
     }
 
     pub fn tokenizer(&self) -> &Tokenizer {
@@ -484,6 +580,11 @@ impl Coordinator {
             let _ = h.join();
         }
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // The admin channel closed with the last Client clone above (server
+        // threads hold clones too — callers drop the server first).
+        if let Some(h) = self.admin.take() {
             let _ = h.join();
         }
     }
@@ -538,10 +639,11 @@ fn front_loop(
             .unwrap_or(Duration::from_millis(50));
         match submit_rx.recv_timeout(timeout) {
             Ok(job) => {
-                let key = BatchKey::with_threshold(
+                let key = BatchKey::with_revision(
                     format!("{}/{}", job.req.dataset, job.variant),
                     job.seq,
                     job.threshold,
+                    job.snap.as_ref().map(|s| s.generation).unwrap_or(0),
                 );
                 let now = Instant::now();
                 if let Some(b) = batcher.push(key, job, now) {
@@ -627,6 +729,70 @@ fn fixed_tokens_per_example(meta: &VariantMeta, seq: usize) -> u64 {
     }
 }
 
+/// Execute one admin command against the repository and build the full
+/// protocol-v2 reply frame. Runs on the dedicated admin thread.
+fn run_admin(repo: &Arc<Repo>, id: u64, cmd: &AdminCmd) -> Json {
+    use super::protocol::{error_frame, frame, ErrorCode};
+    let snap = match repo.reload() {
+        Ok(s) => s,
+        Err(e) => {
+            crate::warnln!("admin", "reload refused: {e}");
+            return error_frame(Some(id), ErrorCode::VerifyFailed, &e);
+        }
+    };
+    let summary = |snap: &crate::runtime::RepoSnapshot| {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("revision".to_string(), Json::UInt(snap.revision));
+        o.insert("generation".to_string(), Json::UInt(snap.generation));
+        o.insert(
+            "datasets".to_string(),
+            Json::Arr(
+                snap.registry.datasets.keys().map(|k| Json::Str(k.clone())).collect(),
+            ),
+        );
+        o.insert(
+            "excluded".to_string(),
+            Json::Arr(
+                snap.excluded_datasets.iter().map(|d| Json::Str(d.clone())).collect(),
+            ),
+        );
+        Json::Obj(o)
+    };
+    match cmd {
+        AdminCmd::Reload => {
+            let mut f = frame(Some(id));
+            f.insert("reload".to_string(), summary(&snap));
+            Json::Obj(f)
+        }
+        AdminCmd::AddVariant { dataset, variant } => {
+            let present = snap
+                .registry
+                .dataset(dataset)
+                .is_some_and(|d| d.variant(variant).is_some());
+            if !present {
+                // The reload itself succeeded (and was swapped in); report
+                // why the requested variant still is not served.
+                let detail = snap
+                    .failures
+                    .iter()
+                    .find(|f| f.path.starts_with(&format!("{dataset}/")))
+                    .map(|f| f.error.clone());
+                return match detail {
+                    Some(d) => error_frame(Some(id), ErrorCode::VerifyFailed, &d),
+                    None => error_frame(
+                        Some(id),
+                        ErrorCode::UnknownVariant,
+                        &format!("variant {dataset}/{variant} not found after reload"),
+                    ),
+                };
+            }
+            let mut f = frame(Some(id));
+            f.insert("add_variant".to_string(), summary(&snap));
+            Json::Obj(f)
+        }
+    }
+}
+
 fn run_batch(
     worker: &mut EngineWorker,
     registry: &Registry,
@@ -636,7 +802,16 @@ fn run_batch(
     let key = batch.key.variant.clone();
     let seq = batch.key.seq;
     let (ds, variant) = key.split_once('/').unwrap_or((key.as_str(), ""));
-    let meta = match registry.dataset(ds).and_then(|d| d.variant(variant)) {
+    // Resolve metadata + host artifacts through the snapshot the batch's
+    // jobs pinned at routing time (batches are keyed by snapshot
+    // generation, so every job in the batch pinned the same one). The
+    // `None` fallback serves legacy in-process tests.
+    let snap = batch.jobs.first().and_then(|j| j.snap.clone());
+    let (reg, store) = match &snap {
+        Some(s) => (&s.registry, s.store.clone()),
+        None => (registry, worker.store().clone()),
+    };
+    let meta = match reg.dataset(ds).and_then(|d| d.variant(variant)) {
         Some(m) => m.clone(),
         None => {
             for job in batch.jobs {
@@ -645,7 +820,7 @@ fn run_batch(
             return;
         }
     };
-    let model = match worker.load(&meta) {
+    let model = match worker.load_from(&store, &meta) {
         Ok(m) => m,
         Err(e) => {
             metrics.record_error(&key);

@@ -39,7 +39,7 @@ use std::thread::JoinHandle;
 use super::edge::{self, EdgeGauges, EdgeKind};
 use super::protocol::{self, ErrorCode, PROTOCOL_VERSION};
 use super::request::{Input, Response, ServeError, Sla};
-use super::scheduler::Client;
+use super::scheduler::{AdminCmd, Client};
 use crate::util::json::Json;
 
 /// Default bound on concurrent connections: each connection holds a small
@@ -310,12 +310,33 @@ fn handle_connection(
     // binds them to the per-connection tagged channel and in-flight count.
     let mut submit =
         |w: protocol::WireRequest| -> Option<Json> { submit_v2(&client, w, &done_tx, &inflight) };
+    // Admin path: reload/add-variant run on the coordinator's admin
+    // thread; the reply callback feeds the frame straight into this
+    // connection's writer queue whenever the verify + swap finishes. The
+    // callback's `out_tx` clone keeps the writer alive through the drain
+    // below, so a reply can't be lost to a racing disconnect of ours.
+    let admin_client = client.clone();
+    let admin_out = out_tx.clone();
+    let mut admin = move |id: u64, cmd: AdminCmd| -> Option<Json> {
+        let out = admin_out.clone();
+        let reply = Box::new(move |frame: Json| {
+            let _ = out.send(frame.to_string());
+        });
+        match admin_client.submit_admin(id, cmd, reply) {
+            Ok(()) => None,
+            Err(e) => Some(protocol::error_frame(
+                Some(id),
+                ErrorCode::from_serve(&e),
+                &e.to_string(),
+            )),
+        }
+    };
     'conn: for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        for reply in handle_line(&line, &client, &info, &mut submit) {
+        for reply in handle_line(&line, &client, &info, &mut submit, &mut admin) {
             if out_tx.send(reply.to_string()).is_err() {
                 break 'conn; // writer died (peer gone)
             }
@@ -324,6 +345,7 @@ fn handle_connection(
     // Graceful per-connection drain: jobs still in flight hold their own
     // clones of `done_tx`, so the pump keeps delivering until the last one
     // completes, then the writer flushes and both exit.
+    drop(admin);
     drop(done_tx);
     drop(out_tx);
     let _ = pump.join();
@@ -402,11 +424,15 @@ fn submit_v2(
 /// channel + atomic in-flight count on the threads edge; routed per-loop
 /// channel + plain counter on the epoll edge). `submit` returns an error
 /// frame to write immediately, or None on successful async submission.
+/// Admin commands (`reload`/`add-variant`) go through `admin` the same
+/// way: the edge enqueues them on the coordinator's admin thread and
+/// delivers the reply whenever the verify + swap completes.
 pub(crate) fn handle_line(
     line: &str,
     client: &Client,
     info: &ConnInfo,
     submit: &mut dyn FnMut(protocol::WireRequest) -> Option<Json>,
+    admin: &mut dyn FnMut(u64, AdminCmd) -> Option<Json>,
 ) -> Vec<Json> {
     let req = match Json::parse(line) {
         Ok(j) => j,
@@ -427,7 +453,7 @@ pub(crate) fn handle_line(
         )];
     }
     if req.get("cmd").is_some() {
-        return vec![handle_v2_cmd(&req, client, info)];
+        return handle_v2_cmd(&req, client, info, admin).into_iter().collect();
     }
     if req.get("batch").is_some() {
         return handle_v2_batch(&req, submit);
@@ -516,13 +542,17 @@ fn variant_payload(meta: &crate::runtime::VariantMeta) -> Json {
 /// because it resolves pjrt-vs-native lazily per variant at load time — a
 /// single "resolved" value here would be a guess, not a fact.
 fn hello_payload(client: &Client, info: &ConnInfo) -> Json {
+    // Everything dataset/variant-shaped is read from the current
+    // repository snapshot, not from tables captured at startup — after a
+    // hot reload, `hello` describes what the server serves *now*.
+    let snap = client.repo().snapshot();
     let mut variants = BTreeMap::new();
     let mut datasets = Vec::new();
-    for ds in client.router().datasets() {
-        datasets.push(Json::Str(ds.to_string()));
+    for (name, ds) in &snap.registry.datasets {
+        datasets.push(Json::Str(name.clone()));
         variants.insert(
-            ds.to_string(),
-            Json::Arr(client.router().variants(ds).into_iter().map(variant_payload).collect()),
+            name.clone(),
+            Json::Arr(ds.variants.values().map(variant_payload).collect()),
         );
     }
     let mut m = BTreeMap::new();
@@ -562,7 +592,35 @@ fn hello_payload(client: &Client, info: &ConnInfo) -> Json {
     // adapts depends on its backend and calibration — see the per-variant
     // `adaptive_calibrated` flag.
     m.insert("adaptive".to_string(), Json::Bool(true));
+    // Repository capability: manifest revision / swap generation /
+    // signature status, plus the admin commands this server accepts.
+    m.insert("repo".to_string(), repo_payload(&snap));
     Json::Obj(m)
+}
+
+/// The `repo` object of the `hello` and `stats` replies: which manifest
+/// revision is live, how many times the snapshot has been swapped, and
+/// what the last verification pass concluded.
+fn repo_payload(snap: &crate::runtime::RepoSnapshot) -> Json {
+    let mut r = BTreeMap::new();
+    r.insert("revision".to_string(), Json::UInt(snap.revision));
+    r.insert("generation".to_string(), Json::UInt(snap.generation));
+    r.insert("signed".to_string(), Json::Bool(snap.signed));
+    r.insert(
+        "verified_files".to_string(),
+        Json::UInt(snap.verified_files as u64),
+    );
+    r.insert(
+        "excluded".to_string(),
+        Json::Arr(snap.excluded_datasets.iter().map(|d| Json::Str(d.clone())).collect()),
+    );
+    r.insert(
+        "commands".to_string(),
+        Json::Arr(
+            ["reload", "add-variant"].iter().map(|c| Json::Str(c.to_string())).collect(),
+        ),
+    );
+    Json::Obj(r)
 }
 
 /// The `connections` object of the `stats` reply: live/max connection
@@ -606,29 +664,43 @@ fn connections_payload(info: &ConnInfo) -> Json {
     Json::Obj(conns)
 }
 
-fn handle_v2_cmd(req: &Json, client: &Client, info: &ConnInfo) -> Json {
+/// Dispatch one v2 `cmd` frame. Returns the frame to write immediately,
+/// or `None` when the command was handed to the admin thread and its
+/// reply will arrive asynchronously through the edge's plumbing.
+fn handle_v2_cmd(
+    req: &Json,
+    client: &Client,
+    info: &ConnInfo,
+    admin: &mut dyn FnMut(u64, AdminCmd) -> Option<Json>,
+) -> Option<Json> {
     let Some(id) = req.get("id").and_then(Json::as_u64) else {
-        return protocol::error_frame(
+        return Some(protocol::error_frame(
             None,
             ErrorCode::BadRequest,
             "cmd frames require a non-negative integer id",
-        );
+        ));
     };
     let Some(cmd) = req.get("cmd").and_then(Json::as_str) else {
-        return protocol::error_frame(Some(id), ErrorCode::BadRequest, "cmd must be a string");
+        return Some(protocol::error_frame(
+            Some(id),
+            ErrorCode::BadRequest,
+            "cmd must be a string",
+        ));
     };
     // Strictness is per command: `dataset` means something only to
-    // `variants` — on hello/stats it would be silently ignored, which is
-    // the exact failure mode v2 strictness exists to prevent.
+    // `variants` and `add-variant` — on hello/stats it would be silently
+    // ignored, which is the exact failure mode v2 strictness exists to
+    // prevent.
     for key in req.as_obj().expect("cmd frame is an object").keys() {
         let known = matches!(key.as_str(), "v" | "id" | "cmd")
-            || (cmd == "variants" && key == "dataset");
+            || (cmd == "variants" && key == "dataset")
+            || (cmd == "add-variant" && matches!(key.as_str(), "dataset" | "variant"));
         if !known {
-            return protocol::error_frame(
+            return Some(protocol::error_frame(
                 Some(id),
                 ErrorCode::BadRequest,
                 &format!("unknown field {key:?} in {cmd:?} cmd frame"),
-            );
+            ));
         }
     }
     let mut reply = BTreeMap::new();
@@ -648,40 +720,65 @@ fn handle_v2_cmd(req: &Json, client: &Client, info: &ConnInfo) -> Json {
                 }
             };
             stats.insert("connections".to_string(), connections_payload(info));
+            stats.insert("repo".to_string(), repo_payload(&client.repo().snapshot()));
             reply.insert("stats".to_string(), Json::Obj(stats));
         }
         "variants" => {
             let Some(ds) = req.get("dataset").and_then(Json::as_str) else {
-                return protocol::error_frame(
+                return Some(protocol::error_frame(
                     Some(id),
                     ErrorCode::BadRequest,
                     "variants requires a dataset",
-                );
+                ));
             };
             // An unknown dataset is a structured error, not an empty list
             // (an empty list is what a real dataset with nothing routable
-            // would return).
-            if !client.router().datasets().contains(&ds) {
-                return protocol::error_frame(
+            // would return). Resolved against the current repository
+            // snapshot, so a hot-added dataset is visible immediately.
+            let snap = client.repo().snapshot();
+            let Some(d) = snap.registry.dataset(ds) else {
+                return Some(protocol::error_frame(
                     Some(id),
                     ErrorCode::UnknownDataset,
                     &format!("unknown dataset {ds:?}"),
-                );
-            }
+                ));
+            };
             reply.insert(
                 "variants".to_string(),
-                Json::Arr(client.router().variants(ds).into_iter().map(variant_payload).collect()),
+                Json::Arr(d.variants.values().map(variant_payload).collect()),
             );
         }
+        "reload" => return admin(id, AdminCmd::Reload),
+        "add-variant" => {
+            let field = |k: &str| -> Result<String, Json> {
+                match req.get(k).and_then(Json::as_str) {
+                    Some(s) => Ok(s.to_string()),
+                    None => Err(protocol::error_frame(
+                        Some(id),
+                        ErrorCode::BadRequest,
+                        &format!("add-variant requires a string {k}"),
+                    )),
+                }
+            };
+            let dataset = match field("dataset") {
+                Ok(d) => d,
+                Err(e) => return Some(e),
+            };
+            let variant = match field("variant") {
+                Ok(v) => v,
+                Err(e) => return Some(e),
+            };
+            return admin(id, AdminCmd::AddVariant { dataset, variant });
+        }
         other => {
-            return protocol::error_frame(
+            return Some(protocol::error_frame(
                 Some(id),
                 ErrorCode::UnknownCmd,
                 &format!("unknown cmd {other:?}"),
-            )
+            ))
         }
     }
-    Json::Obj(reply)
+    Some(Json::Obj(reply))
 }
 
 /// The legacy v1 dialect, unchanged from the seed: synchronous, one reply

@@ -8,12 +8,16 @@
 //!             protocol message (structured JSON).
 //!   eval      run a dataset's test split through a variant, print metrics
 //!   info      list artifacts / variants / retention configs
+//!   verify    hash every manifest-listed artifact against its recorded
+//!             digest (and check the signature); nonzero exit on any
+//!             mismatch — the CI tamper smoke and the pre-deploy check
 
 use std::path::PathBuf;
 
 use powerbert::coordinator::{BatchPolicy, Config, Coordinator, EdgeKind, Policy, Server};
 use powerbert::runtime::{
-    default_root, BackendKind, Engine, KernelConfig, Precision, Registry, TestSplit,
+    default_root, BackendKind, Engine, KernelConfig, Precision, Registry, Repo, RepoPolicy,
+    TestSplit,
 };
 use powerbert::util::cli::Args;
 use powerbert::eval::Metric;
@@ -24,7 +28,7 @@ fn main() {
         "powerbert",
         "PoWER-BERT serving coordinator (ICML 2020 reproduction)",
     )
-    .positional("command", "serve | eval | info")
+    .positional("command", "serve | eval | info | verify")
     .opt("artifacts", None, "artifacts directory (default: ./artifacts)")
     .opt("addr", Some("127.0.0.1:7878"), "serve: listen address")
     .opt("datasets", None, "serve: comma-separated dataset allowlist")
@@ -46,7 +50,9 @@ fn main() {
     .opt("thresholds", None, "eval: comma-separated attention-mass thresholds for --calibrate-pareto (default 1.0,0.98,0.95,0.9,0.8,0.6)")
     .opt("pareto-out", None, "eval: output path for the calibrated Pareto table (default <variant dir>/pareto.json)")
     .flag("calibrate-pareto", "eval: sweep adaptive thresholds over the test split and write the accuracy-vs-tokens Pareto table the router serves SLAs from")
-    .flag("preload", "serve: load all variants at startup");
+    .flag("preload", "serve: load all variants at startup")
+    .opt("trusted-key", None, "serve/verify: path to the trusted ed25519 public key (default <artifacts>/signing.pub)")
+    .flag("require-signed", "serve/verify: refuse artifacts unless the manifest signature verifies and covers every file on disk");
 
     let parsed = match args.parse() {
         Ok(p) => p,
@@ -65,8 +71,9 @@ fn main() {
         "serve" => cmd_serve(&parsed, root),
         "eval" => cmd_eval(&parsed, root),
         "info" => cmd_info(root),
+        "verify" => cmd_verify(&parsed, root),
         other => {
-            eprintln!("unknown command {other:?} (expected serve|eval|info)");
+            eprintln!("unknown command {other:?} (expected serve|eval|info|verify)");
             2
         }
     };
@@ -152,6 +159,8 @@ fn cmd_serve(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
             }
             (_, list) => list.unwrap_or_default(),
         },
+        require_signed: parsed.has("require-signed"),
+        trusted_key: parsed.get("trusted-key").map(PathBuf::from),
         ..Config::default()
     };
     let mut coordinator = match Coordinator::start(cfg) {
@@ -434,6 +443,47 @@ fn cmd_calibrate(
     }
     println!("wrote {} ({} points)", out.display(), table.points.len());
     0
+}
+
+/// `verify`: open the artifact repository exactly like `serve` would
+/// (hash every manifest-listed file, check the signature) and report the
+/// outcome. Exit 0 only when everything verified and nothing was excluded.
+fn cmd_verify(parsed: &powerbert::util::cli::Parsed, root: PathBuf) -> i32 {
+    let policy = RepoPolicy {
+        require_signed: parsed.has("require-signed"),
+        trusted_key: parsed.get("trusted-key").map(PathBuf::from),
+        datasets: Vec::new(),
+    };
+    let repo = match Repo::open(&root, policy) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("verify failed: {e}");
+            return 1;
+        }
+    };
+    let snap = repo.snapshot();
+    println!(
+        "artifacts root: {} (revision {}, {})",
+        root.display(),
+        snap.revision,
+        if snap.signed { "signed" } else { "unsigned" },
+    );
+    println!("verified files: {}", snap.verified_files);
+    for f in &snap.failures {
+        eprintln!("FAILED {}: {}", f.path, f.error);
+    }
+    for d in &snap.excluded_datasets {
+        eprintln!("EXCLUDED dataset {d}");
+    }
+    println!(
+        "datasets served: {:?}",
+        snap.registry.datasets.keys().collect::<Vec<_>>()
+    );
+    if snap.failures.is_empty() && snap.excluded_datasets.is_empty() {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_info(root: PathBuf) -> i32 {

@@ -15,6 +15,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use super::repo::Checks;
+use crate::util::hash::ExpectedDigest;
 use crate::util::json::Json;
 
 /// Parsed `meta.json` of one model variant.
@@ -48,11 +50,26 @@ pub struct VariantMeta {
     /// by `eval --calibrate-pareto`; absent until a variant is calibrated).
     /// The router maps request SLAs to adaptive operating points from it.
     pub pareto: Option<crate::runtime::adaptive::ParetoTable>,
+    /// Manifest digest of the weights file, when the bundle ships a signed
+    /// repository manifest: the engine streaming-hashes `weights.npz` as it
+    /// loads and refuses on mismatch. `None` = legacy bundle, unchecked.
+    pub weights_check: Option<ExpectedDigest>,
     pub dir: PathBuf,
 }
 
 impl VariantMeta {
     pub fn parse(dir: &Path) -> Result<VariantMeta, String> {
+        VariantMeta::parse_with(dir, None)
+    }
+
+    /// Parse `meta.json` with optional repository digest [`Checks`]:
+    /// `meta.json` and `pareto.json` are verified here (a mismatch refuses
+    /// the variant, naming the file and both digests) and the weights
+    /// digest is attached for the engine to verify at load time.
+    pub fn parse_with(dir: &Path, checks: Option<&Checks>) -> Result<VariantMeta, String> {
+        if let Some(c) = checks {
+            c.verify(&dir.join("meta.json"))?;
+        }
         let j = Json::parse_file(&dir.join("meta.json")).map_err(|e| e.to_string())?;
         let mut hlo = BTreeMap::new();
         if let Some(o) = j.get("hlo").and_then(Json::as_obj) {
@@ -91,6 +108,9 @@ impl VariantMeta {
             .and_then(Json::as_arr)
             .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
             .unwrap_or_default();
+        let weights =
+            j.get("weights").and_then(Json::as_str).unwrap_or("weights.npz").to_string();
+        let weights_check = checks.and_then(|c| c.expected(&dir.join(&weights)));
         Ok(VariantMeta {
             dataset: j.str_at("dataset").map_err(|e| e.to_string())?.to_string(),
             variant: j.str_at("variant").map_err(|e| e.to_string())?.to_string(),
@@ -108,18 +128,25 @@ impl VariantMeta {
                 .unwrap_or_default(),
             hlo,
             grid,
-            weights: j.get("weights").and_then(Json::as_str).unwrap_or("weights.npz").to_string(),
+            weights,
             param_order,
             retention,
             dev_metric: j.get("dev_metric").and_then(Json::as_f64),
             pareto: {
                 let p = dir.join("pareto.json");
                 if p.exists() {
+                    // A *tampered* table is a refusal (digest named in the
+                    // error) — routing on attacker-chosen operating points
+                    // is worse than not serving the variant.
+                    if let Some(c) = checks {
+                        c.verify(&p)?;
+                    }
                     match crate::runtime::adaptive::ParetoTable::load(&p) {
                         Ok(t) => Some(t),
                         Err(e) => {
-                            // A malformed table must not take the variant
-                            // down — it only disables adaptive routing.
+                            // A merely *malformed* table must not take the
+                            // variant down — it only disables adaptive
+                            // routing.
                             crate::warnln!("registry", "ignoring {}: {e:#}", p.display());
                             None
                         }
@@ -128,6 +155,7 @@ impl VariantMeta {
                     None
                 }
             },
+            weights_check,
             dir: dir.to_path_buf(),
         })
     }
@@ -190,6 +218,8 @@ pub struct DatasetArtifacts {
     pub name: String,
     pub dir: PathBuf,
     pub variants: BTreeMap<String, VariantMeta>,
+    /// Manifest digest of `test.npz` (verified as the split loads).
+    pub test_check: Option<ExpectedDigest>,
 }
 
 impl DatasetArtifacts {
@@ -211,7 +241,15 @@ pub struct Registry {
 
 impl Registry {
     /// Scan `root` for datasets and variants (ignores incomplete dirs).
+    /// Digest checks come from `<root>/index.json` automatically when it
+    /// carries a `files` manifest; a corrupt manifest fails the scan.
     pub fn scan(root: &Path) -> Result<Registry, String> {
+        let checks = Checks::load(root)?;
+        Registry::scan_with(root, checks.as_ref())
+    }
+
+    /// Scan with explicit digest checks (`None` = unchecked legacy scan).
+    pub fn scan_with(root: &Path, checks: Option<&Checks>) -> Result<Registry, String> {
         if !root.is_dir() {
             return Err(format!("artifacts directory {} not found — run `make artifacts`", root.display()));
         }
@@ -227,7 +265,7 @@ impl Registry {
             for v in std::fs::read_dir(&path).map_err(|e| e.to_string())? {
                 let vdir = v.map_err(|e| e.to_string())?.path();
                 if vdir.is_dir() && vdir.join("meta.json").exists() {
-                    match VariantMeta::parse(&vdir) {
+                    match VariantMeta::parse_with(&vdir, checks) {
                         Ok(m) => {
                             variants.insert(m.variant.clone(), m);
                         }
@@ -238,7 +276,11 @@ impl Registry {
                 }
             }
             if !variants.is_empty() {
-                datasets.insert(name.clone(), DatasetArtifacts { name, dir: path, variants });
+                let test_check = checks.and_then(|c| c.expected(&path.join("test.npz")));
+                datasets.insert(
+                    name.clone(),
+                    DatasetArtifacts { name, dir: path, variants, test_check },
+                );
             }
         }
         Ok(Registry { root: root.to_path_buf(), datasets })

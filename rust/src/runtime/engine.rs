@@ -39,8 +39,11 @@ pub struct ModelArtifact {
 impl ModelArtifact {
     fn load(meta: &VariantMeta) -> Result<ModelArtifact> {
         // Weights -> host tensors, reordered to match the lowered module's
-        // parameter order from meta.json.
-        let entries = npz::read_npz(&meta.weights_path())
+        // parameter order from meta.json. When the bundle ships a signed
+        // manifest, the npz bytes are streaming-hashed as they are read
+        // and refused on digest mismatch (the error names the file and
+        // both digests) — tampered weights never reach a worker.
+        let entries = npz::read_npz_checked(&meta.weights_path(), meta.weights_check.as_ref())
             .with_context(|| format!("read {}", meta.weights_path().display()))?;
         let mut by_name: HashMap<String, npz::NpzEntry> =
             entries.into_iter().map(|e| (e.name.clone(), e)).collect();
@@ -132,6 +135,18 @@ impl ArtifactStore {
         v.sort();
         v
     }
+
+    /// Already-loaded artifact for a `dataset/variant` key, if any.
+    pub fn cached(&self, key: &str) -> Option<Arc<ModelArtifact>> {
+        self.models.lock().unwrap().get(key).cloned()
+    }
+
+    /// Adopt a host artifact loaded elsewhere — the repository carry-over
+    /// path moves unchanged variants from the old snapshot's store into
+    /// the new one without re-reading their weights.
+    pub fn adopt(&self, key: String, art: Arc<ModelArtifact>) {
+        self.models.lock().unwrap().insert(key, art);
+    }
 }
 
 /// One worker of the execution pool: resolves the configured backend into
@@ -151,7 +166,12 @@ pub struct EngineWorker {
     /// kernel pool it can never dispatch to.
     native: Option<NativeBackend>,
     store: Arc<ArtifactStore>,
-    models: HashMap<String, Arc<LoadedModel>>,
+    /// `key -> (host artifact, backend model)`. The artifact `Arc` is the
+    /// cache tag: after a repository snapshot swap the store hands out a
+    /// *different* `Arc` for a changed variant, which misses `ptr_eq` and
+    /// forces a rebuild — workers re-pin on their next batch boundary
+    /// without any explicit invalidation message.
+    models: HashMap<String, (Arc<ModelArtifact>, Arc<LoadedModel>)>,
 }
 
 impl EngineWorker {
@@ -243,13 +263,28 @@ impl EngineWorker {
     }
 
     /// Load a variant on this worker's backend: compile + upload (pjrt) or
-    /// bind the weights into the pure-Rust forward pass (native).
+    /// bind the weights into the pure-Rust forward pass (native). Uses the
+    /// worker's own construction-time store.
     pub fn load(&mut self, meta: &VariantMeta) -> Result<Arc<LoadedModel>> {
+        let store = self.store.clone();
+        self.load_from(&store, meta)
+    }
+
+    /// Load a variant resolving host artifacts through an explicit store —
+    /// the batch path passes the store pinned by the job's repository
+    /// snapshot, so a hot-swap re-pins this worker at its next batch.
+    pub fn load_from(
+        &mut self,
+        store: &Arc<ArtifactStore>,
+        meta: &VariantMeta,
+    ) -> Result<Arc<LoadedModel>> {
         let key = ArtifactStore::key(&meta.dataset, &meta.variant);
-        if let Some(m) = self.models.get(&key) {
-            return Ok(m.clone());
+        let art = store.fetch(meta)?;
+        if let Some((cached_art, model)) = self.models.get(&key) {
+            if Arc::ptr_eq(cached_art, &art) {
+                return Ok(model.clone());
+            }
         }
-        let art = self.store.fetch(meta)?;
         let t0 = std::time::Instant::now();
         let model = match self.kind {
             BackendKind::Native => self.native_backend().load(&art)?,
@@ -300,12 +335,12 @@ impl EngineWorker {
             model.cells().len(),
             t0.elapsed().as_secs_f64()
         );
-        self.models.insert(key, model.clone());
+        self.models.insert(key, (art, model.clone()));
         Ok(model)
     }
 
     pub fn get(&self, dataset: &str, variant: &str) -> Option<Arc<LoadedModel>> {
-        self.models.get(&ArtifactStore::key(dataset, variant)).cloned()
+        self.models.get(&ArtifactStore::key(dataset, variant)).map(|(_, m)| m.clone())
     }
 
     pub fn loaded(&self) -> Vec<String> {
@@ -379,7 +414,17 @@ pub struct TestSplit {
 
 impl TestSplit {
     pub fn load(path: &Path) -> Result<TestSplit> {
-        let entries = npz::read_npz(path)?;
+        TestSplit::load_checked(path, None)
+    }
+
+    /// Load with an optional repository digest: the npz bytes are hashed
+    /// as they stream in and refused on mismatch (see
+    /// [`DatasetArtifacts::test_check`](super::DatasetArtifacts)).
+    pub fn load_checked(
+        path: &Path,
+        check: Option<&crate::util::hash::ExpectedDigest>,
+    ) -> Result<TestSplit> {
+        let entries = npz::read_npz_checked(path, check)?;
         let mut tokens = None;
         let mut segments = None;
         let mut labels = None;

@@ -24,10 +24,12 @@ pub mod engine;
 pub mod kernels;
 pub mod native;
 pub mod pjrt;
+pub mod repo;
 
 pub use adaptive::{demanded_k, ParetoPoint, ParetoTable, RetentionPolicy};
 pub use arena::{ArenaDims, ArenaPlan, ForwardArena};
 pub use artifact::{default_root, DatasetArtifacts, Registry, VariantMeta};
+pub use repo::{Checks, FileDigest, FileStatus, Manifest, Repo, RepoPolicy, RepoSnapshot};
 pub use backend::{
     BackendKind, CellExecutor, CellPlan, ExecOutput, LoadedModel, Logits, MemoryStats,
 };

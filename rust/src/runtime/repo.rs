@@ -1,0 +1,737 @@
+//! Signed artifact repository + zero-downtime rollout snapshots.
+//!
+//! `artifacts/index.json` doubles as the repository **manifest**: alongside
+//! the exporter's `profile`/`datasets` keys it may carry a `revision`
+//! counter, a `files` map of per-file sha256 digests + sizes, and an
+//! ed25519 `signature` over a canonical serialization of those digests
+//! (`python -m compile.sign` stamps all three at export time; the
+//! committed dev keypair lives at `artifacts/signing.key[.pub]`).
+//!
+//! [`Repo`] owns the serving side: [`Repo::open`] builds an immutable
+//! [`RepoSnapshot`] — manifest verified, every listed file streaming-hashed,
+//! datasets with a failing file excluded, registry scanned with digest
+//! [`Checks`] attached so weights are re-verified as they load — and
+//! [`Repo::reload`] builds a *new* snapshot off the hot path, then swaps it
+//! in atomically. In-flight requests pin their snapshot `Arc` at routing
+//! time and complete against the old store; new requests route to the new
+//! one. A failed reload leaves the current snapshot untouched (that is the
+//! zero-downtime contract: verification failures never take serving down).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::artifact::Registry;
+use super::engine::ArtifactStore;
+use crate::util::ed25519;
+use crate::util::hash::{self, ExpectedDigest};
+use crate::util::json::Json;
+
+/// Domain-separation prefix of the canonical signing bytes. Bumping the
+/// manifest schema bumps this string, invalidating old signatures.
+pub const MANIFEST_DOMAIN: &str = "powerbert-manifest-v1";
+
+/// Files the manifest never covers: the manifest itself, the signing
+/// keypair next to it, derived analysis output, and editor/VCS droppings.
+pub fn manifest_skips(name: &str) -> bool {
+    name == "index.json"
+        || name.starts_with("signing.")
+        || name == "analysis"
+        || name == "__pycache__"
+        || name.starts_with('.')
+}
+
+/// Digest record of one artifact file, as stored in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileDigest {
+    pub sha256: String,
+    pub size: u64,
+}
+
+/// The manifest's `signature` block (all fields lowercase hex).
+#[derive(Debug, Clone)]
+pub struct Signature {
+    pub algorithm: String,
+    pub public_key: String,
+    pub signature: String,
+}
+
+/// Parsed `index.json`. `extra` preserves the exporter's keys (`profile`,
+/// `datasets`, ...) verbatim so re-signing never loses them.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub revision: u64,
+    /// '/'-separated root-relative path -> digest. `None` for legacy
+    /// manifests that predate the repository layer (nothing is checked).
+    pub files: Option<BTreeMap<String, FileDigest>>,
+    pub signature: Option<Signature>,
+    pub extra: BTreeMap<String, Json>,
+}
+
+impl Manifest {
+    /// Parse `<root>/index.json`. `Ok(None)` when the file does not exist
+    /// (unmanaged bundle); `Err` when it exists but cannot be parsed — a
+    /// corrupt manifest must read as tampering, not as "no checks".
+    pub fn load(root: &Path) -> Result<Option<Manifest>, String> {
+        let path = root.join("index.json");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let j = Json::parse_file(&path)
+            .map_err(|e| format!("manifest {}: {e}", path.display()))?;
+        Manifest::from_json(&j).map(Some).map_err(|e| format!("manifest {}: {e}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest, String> {
+        let obj = j.as_obj().ok_or("not a JSON object")?;
+        let revision = j.get("revision").and_then(Json::as_u64).unwrap_or(0);
+        let files = match j.get("files") {
+            None => None,
+            Some(f) => {
+                let fo = f.as_obj().ok_or("\"files\" is not an object")?;
+                let mut map = BTreeMap::new();
+                for (rel, entry) in fo {
+                    let sha256 = entry
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("files[{rel}] missing sha256"))?
+                        .to_string();
+                    let size = entry
+                        .get("size")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| format!("files[{rel}] missing size"))?;
+                    map.insert(rel.clone(), FileDigest { sha256, size });
+                }
+                Some(map)
+            }
+        };
+        let signature = match j.get("signature") {
+            None => None,
+            Some(s) => Some(Signature {
+                algorithm: s
+                    .get("algorithm")
+                    .and_then(Json::as_str)
+                    .unwrap_or("ed25519")
+                    .to_string(),
+                public_key: s
+                    .get("public_key")
+                    .and_then(Json::as_str)
+                    .ok_or("signature missing public_key")?
+                    .to_string(),
+                signature: s
+                    .get("signature")
+                    .and_then(Json::as_str)
+                    .ok_or("signature missing signature")?
+                    .to_string(),
+            }),
+        };
+        let extra = obj
+            .iter()
+            .filter(|(k, _)| !matches!(k.as_str(), "revision" | "files" | "signature"))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        Ok(Manifest { revision, files, signature, extra })
+    }
+
+    /// Canonical bytes the signature covers: a domain line, the revision,
+    /// then one `<relpath> <sha256> <size>` line per file in byte order.
+    /// Both the Rust verifier and `python -m compile.sign` produce exactly
+    /// these bytes, so the JSON formatting itself is never load-bearing.
+    pub fn signing_bytes(revision: u64, files: &BTreeMap<String, FileDigest>) -> Vec<u8> {
+        let mut out = format!("{MANIFEST_DOMAIN}\nrevision {revision}\n").into_bytes();
+        for (rel, fd) in files {
+            out.extend_from_slice(format!("{rel} {} {}\n", fd.sha256, fd.size).as_bytes());
+        }
+        out
+    }
+
+    /// Verify the manifest signature. When `trusted` is given, the
+    /// manifest's embedded key must equal it (an attacker who re-signs with
+    /// their own key must not pass); otherwise the embedded key verifies
+    /// only internal consistency. Returns the key that verified.
+    pub fn verify_signature(&self, trusted: Option<&[u8; 32]>) -> Result<[u8; 32], String> {
+        let sig = self.signature.as_ref().ok_or("manifest is not signed")?;
+        let files = self.files.as_ref().ok_or("signed manifest has no files map")?;
+        if sig.algorithm != "ed25519" {
+            return Err(format!("unsupported signature algorithm {}", sig.algorithm));
+        }
+        let key = parse_key(&sig.public_key, "manifest public_key")?;
+        if let Some(t) = trusted {
+            if *t != key {
+                return Err(format!(
+                    "manifest public key {} does not match the trusted key {}",
+                    sig.public_key,
+                    hash::to_hex(t)
+                ));
+            }
+        }
+        let raw = hash::from_hex(&sig.signature)
+            .map_err(|e| format!("manifest signature: {e}"))?;
+        let sig64: [u8; 64] =
+            raw.try_into().map_err(|_| "manifest signature is not 64 bytes".to_string())?;
+        let msg = Manifest::signing_bytes(self.revision, files);
+        ed25519::verify(&key, &msg, &sig64)
+            .map_err(|e| format!("manifest signature invalid: {e}"))?;
+        Ok(key)
+    }
+
+    /// Digest every file under `root` (skipping [`manifest_skips`] names at
+    /// any depth) into a fresh manifest — the Rust half of what
+    /// `python -m compile.sign` does, used by tests and the rollout example.
+    pub fn build(root: &Path, revision: u64) -> Result<Manifest, String> {
+        let extra = match Manifest::load(root)? {
+            Some(m) => m.extra,
+            None => BTreeMap::new(),
+        };
+        let mut files = BTreeMap::new();
+        walk(root, &mut PathBuf::new(), &mut files)?;
+        Ok(Manifest { revision, files: Some(files), signature: None, extra })
+    }
+
+    /// Sign with a 32-byte ed25519 seed (replaces any prior signature).
+    pub fn sign_with(&mut self, seed: &[u8; 32]) -> Result<(), String> {
+        let files = self.files.as_ref().ok_or("cannot sign a manifest with no files map")?;
+        let msg = Manifest::signing_bytes(self.revision, files);
+        self.signature = Some(Signature {
+            algorithm: "ed25519".to_string(),
+            public_key: hash::to_hex(&ed25519::public_key(seed)),
+            signature: hash::to_hex(&ed25519::sign(seed, &msg)),
+        });
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = self.extra.clone();
+        obj.insert("revision".to_string(), Json::UInt(self.revision));
+        if let Some(files) = &self.files {
+            let mut fo = BTreeMap::new();
+            for (rel, fd) in files {
+                let mut e = BTreeMap::new();
+                e.insert("sha256".to_string(), Json::Str(fd.sha256.clone()));
+                e.insert("size".to_string(), Json::UInt(fd.size));
+                fo.insert(rel.clone(), Json::Obj(e));
+            }
+            obj.insert("files".to_string(), Json::Obj(fo));
+        }
+        if let Some(sig) = &self.signature {
+            let mut s = BTreeMap::new();
+            s.insert("algorithm".to_string(), Json::Str(sig.algorithm.clone()));
+            s.insert("public_key".to_string(), Json::Str(sig.public_key.clone()));
+            s.insert("signature".to_string(), Json::Str(sig.signature.clone()));
+            obj.insert("signature".to_string(), Json::Obj(s));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Write `<root>/index.json` (pretty-printed, trailing newline).
+    pub fn write(&self, root: &Path) -> Result<(), String> {
+        let path = root.join("index.json");
+        let text = format!("{}\n", self.to_json().to_string_pretty());
+        std::fs::write(&path, text).map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+fn walk(
+    root: &Path,
+    rel: &mut PathBuf,
+    out: &mut BTreeMap<String, FileDigest>,
+) -> Result<(), String> {
+    let dir = root.join(&*rel);
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .map_err(|e| format!("read dir {}: {e}", dir.display()))?
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().to_string();
+        if rel.as_os_str().is_empty() && manifest_skips(&name) {
+            continue;
+        }
+        if name.starts_with('.') || name == "__pycache__" {
+            continue;
+        }
+        rel.push(&name);
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, rel, out)?;
+        } else {
+            let (sha256, size) = hash::hash_file(&path)
+                .map_err(|e| format!("hash {}: {e}", path.display()))?;
+            out.insert(rel_str(rel), FileDigest { sha256, size });
+        }
+        rel.pop();
+    }
+    Ok(())
+}
+
+/// '/'-separated form of a relative path (manifest keys are
+/// platform-independent).
+fn rel_str(rel: &Path) -> String {
+    rel.iter().map(|c| c.to_string_lossy()).collect::<Vec<_>>().join("/")
+}
+
+fn parse_key(hex: &str, what: &str) -> Result<[u8; 32], String> {
+    let raw = hash::from_hex(hex.trim()).map_err(|e| format!("{what}: {e}"))?;
+    raw.try_into().map_err(|_| format!("{what} is not 32 bytes"))
+}
+
+/// Read an ed25519 key (public or seed) from a hex file.
+pub fn read_key_file(path: &Path) -> Result<[u8; 32], String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read key {}: {e}", path.display()))?;
+    parse_key(&text, &format!("key {}", path.display()))
+}
+
+/// Digest lookups handed to the artifact loaders: a loader that reads a
+/// manifest-listed file checks it against the recorded digest *as it
+/// loads* (the npz path streams bytes through [`hash::HashingReader`], so
+/// nothing is buffered twice).
+#[derive(Debug, Clone)]
+pub struct Checks {
+    root: PathBuf,
+    files: Arc<BTreeMap<String, FileDigest>>,
+}
+
+impl Checks {
+    /// Checks for `<root>/index.json`, or `None` when the manifest is
+    /// missing or carries no `files` map (legacy bundle: nothing checked).
+    pub fn load(root: &Path) -> Result<Option<Checks>, String> {
+        Ok(Manifest::load(root)?.and_then(|m| Checks::from_manifest(root, &m)))
+    }
+
+    pub fn from_manifest(root: &Path, manifest: &Manifest) -> Option<Checks> {
+        manifest.files.clone().map(|files| Checks {
+            root: root.to_path_buf(),
+            files: Arc::new(files),
+        })
+    }
+
+    fn rel_of(&self, path: &Path) -> Option<String> {
+        path.strip_prefix(&self.root).ok().map(rel_str)
+    }
+
+    /// The manifest record for an absolute path under the artifacts root,
+    /// or `None` when the file is not listed (loaders then read unchecked —
+    /// `--require-signed` closes that gap with a coverage check instead).
+    pub fn expected(&self, path: &Path) -> Option<ExpectedDigest> {
+        let rel = self.rel_of(path)?;
+        self.files.get(&rel).map(|fd| ExpectedDigest {
+            name: rel,
+            sha256: fd.sha256.clone(),
+            size: fd.size,
+        })
+    }
+
+    /// Streaming-hash `path` and compare against its manifest record.
+    /// `Ok(())` when the file is unlisted.
+    pub fn verify(&self, path: &Path) -> Result<(), String> {
+        let Some(exp) = self.expected(path) else { return Ok(()) };
+        let (sha, size) =
+            hash::hash_file(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        exp.check(&sha, size)
+    }
+}
+
+/// One verification failure: the offending manifest path plus the digest
+/// mismatch detail (expected/actual).
+#[derive(Debug, Clone)]
+pub struct FileStatus {
+    pub path: String,
+    pub error: String,
+}
+
+/// Policy knobs for [`Repo::open`] (CLI: `--require-signed`,
+/// `--trusted-key`, `--datasets`).
+#[derive(Debug, Clone, Default)]
+pub struct RepoPolicy {
+    /// Refuse to serve unless the manifest is signed by the trusted key
+    /// and every file on disk is covered by a verified digest.
+    pub require_signed: bool,
+    /// Path of a hex ed25519 public key; defaults to `<root>/signing.pub`.
+    /// The manifest's embedded key must match — never trusted on its own.
+    pub trusted_key: Option<PathBuf>,
+    /// Dataset allowlist (empty = serve everything that verifies).
+    pub datasets: Vec<String>,
+}
+
+/// One immutable, verified view of the artifacts root. Jobs pin the `Arc`
+/// at routing time; workers resolve metadata and weights through it, so a
+/// concurrent [`Repo::reload`] never mixes two revisions inside one batch.
+pub struct RepoSnapshot {
+    /// Manifest revision (0 for unmanaged bundles).
+    pub revision: u64,
+    /// Monotonic swap counter (1 = startup snapshot). Unlike `revision`
+    /// this is guaranteed to change on every successful reload.
+    pub generation: u64,
+    /// True when the manifest signature verified against the trusted key.
+    pub signed: bool,
+    /// Number of manifest-listed files that hashed clean.
+    pub verified_files: usize,
+    /// Per-file verification failures (the datasets they belong to are
+    /// excluded from `registry`).
+    pub failures: Vec<FileStatus>,
+    /// Datasets dropped because one of their files failed verification.
+    pub excluded_datasets: Vec<String>,
+    pub registry: Registry,
+    pub store: Arc<ArtifactStore>,
+    files: Option<BTreeMap<String, FileDigest>>,
+}
+
+/// Digest entries under `<dataset>/<variant>/`, for carry-over comparison
+/// between snapshots.
+fn variant_entries(
+    files: &Option<BTreeMap<String, FileDigest>>,
+    dataset: &str,
+    variant: &str,
+) -> Vec<(String, FileDigest)> {
+    let prefix = format!("{dataset}/{variant}/");
+    files
+        .as_ref()
+        .map(|files| {
+            files
+                .iter()
+                .filter(|(rel, _)| rel.starts_with(&prefix))
+                .map(|(rel, fd)| (rel.clone(), fd.clone()))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// The live repository: current snapshot + atomic swap.
+pub struct Repo {
+    root: PathBuf,
+    policy: RepoPolicy,
+    current: Mutex<Arc<RepoSnapshot>>,
+    generation: AtomicU64,
+}
+
+impl Repo {
+    /// Open the repository and build + verify the startup snapshot.
+    pub fn open(root: &Path, policy: RepoPolicy) -> Result<Repo, String> {
+        let snap = build_snapshot(root, &policy, 1, None)?;
+        Ok(Repo {
+            root: root.to_path_buf(),
+            policy,
+            current: Mutex::new(Arc::new(snap)),
+            generation: AtomicU64::new(1),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn policy(&self) -> &RepoPolicy {
+        &self.policy
+    }
+
+    /// The current snapshot (cheap: one lock + `Arc` clone).
+    pub fn snapshot(&self) -> Arc<RepoSnapshot> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Re-read the root, verify, and atomically swap the snapshot in.
+    /// Unchanged variants (identical digest sets) carry their loaded host
+    /// artifacts over, so a reload only re-reads what actually changed.
+    /// On error the current snapshot stays — serving is never interrupted
+    /// by a failed rollout.
+    pub fn reload(&self) -> Result<Arc<RepoSnapshot>, String> {
+        let prev = self.snapshot();
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let snap = Arc::new(build_snapshot(&self.root, &self.policy, generation, Some(&prev))?);
+        crate::info!(
+            "repo",
+            "swapped in revision {} (generation {}, {} datasets, {} excluded)",
+            snap.revision,
+            snap.generation,
+            snap.registry.datasets.len(),
+            snap.excluded_datasets.len()
+        );
+        *self.current.lock().unwrap() = snap.clone();
+        Ok(snap)
+    }
+}
+
+fn build_snapshot(
+    root: &Path,
+    policy: &RepoPolicy,
+    generation: u64,
+    prev: Option<&RepoSnapshot>,
+) -> Result<RepoSnapshot, String> {
+    let manifest = Manifest::load(root)?;
+
+    // Trusted key: explicit path wins, else `<root>/signing.pub` if present.
+    let trusted = match &policy.trusted_key {
+        Some(p) => Some(read_key_file(p)?),
+        None => {
+            let p = root.join("signing.pub");
+            if p.exists() { Some(read_key_file(&p)?) } else { None }
+        }
+    };
+
+    // Signature gate. A *present but invalid* signature is always fatal —
+    // that is tampering, not a legacy bundle. `--require-signed` further
+    // demands that a valid signature exists at all.
+    let mut signed = false;
+    if let Some(m) = &manifest {
+        if m.signature.is_some() {
+            m.verify_signature(trusted.as_ref())?;
+            signed = true;
+        }
+    }
+    if policy.require_signed {
+        if !signed {
+            return Err(format!(
+                "--require-signed: {} has no valid manifest signature (run `python -m compile.sign`)",
+                root.join("index.json").display()
+            ));
+        }
+        if trusted.is_none() {
+            return Err(
+                "--require-signed: no trusted key (pass --trusted-key or add signing.pub)".into(),
+            );
+        }
+    }
+
+    let files = manifest.as_ref().and_then(|m| m.files.clone());
+
+    // `--require-signed` coverage: every file on disk must be listed, or an
+    // attacker could smuggle in unverified extras next to signed ones.
+    if policy.require_signed {
+        let listed = files.as_ref().expect("signature verified implies files");
+        let mut on_disk = BTreeMap::new();
+        walk_names(root, &mut PathBuf::new(), &mut on_disk)?;
+        for rel in on_disk.keys() {
+            if !listed.contains_key(rel) {
+                return Err(format!(
+                    "--require-signed: {rel} exists on disk but is not covered by the signed manifest"
+                ));
+            }
+        }
+    }
+
+    // Streaming-hash every listed file. Failures under `<dataset>/...`
+    // exclude that dataset; a failure on a shared root file (vocab.json)
+    // is fatal because every dataset depends on it.
+    let mut failures = Vec::new();
+    let mut verified_files = 0usize;
+    let mut bad_datasets: Vec<String> = Vec::new();
+    if let Some(files) = &files {
+        for (rel, fd) in files {
+            let path = root.join(rel.replace('/', std::path::MAIN_SEPARATOR_STR));
+            let exp =
+                ExpectedDigest { name: rel.clone(), sha256: fd.sha256.clone(), size: fd.size };
+            let res = match hash::hash_file(&path) {
+                Ok((sha, size)) => exp.check(&sha, size),
+                Err(e) => Err(format!("missing or unreadable {rel}: {e}")),
+            };
+            match res {
+                Ok(()) => verified_files += 1,
+                Err(error) => {
+                    crate::warnln!("repo", "verification failed: {error}");
+                    match rel.split_once('/') {
+                        Some((ds, _)) => {
+                            if !bad_datasets.iter().any(|d| d == ds) {
+                                bad_datasets.push(ds.to_string());
+                            }
+                        }
+                        None => {
+                            return Err(format!(
+                                "verification failed for shared artifact: {error}"
+                            ))
+                        }
+                    }
+                    failures.push(FileStatus { path: rel.clone(), error });
+                }
+            }
+        }
+    }
+
+    let checks = match (&manifest, &files) {
+        (Some(m), Some(_)) => Checks::from_manifest(root, m),
+        _ => None,
+    };
+    let mut registry = Registry::scan_with(root, checks.as_ref())?;
+
+    let mut excluded_datasets = Vec::new();
+    for ds in &bad_datasets {
+        if registry.datasets.remove(ds).is_some() || files_mention_dataset(&files, ds) {
+            excluded_datasets.push(ds.clone());
+        }
+    }
+    if !policy.datasets.is_empty() {
+        registry.datasets.retain(|name, _| policy.datasets.iter().any(|d| d == name));
+    }
+
+    // Carry over host artifacts whose digest sets are unchanged — the swap
+    // then only re-reads weights that actually changed on disk.
+    let store = Arc::new(ArtifactStore::new());
+    if let Some(prev) = prev {
+        for ds in registry.datasets.values() {
+            for v in ds.variants.keys() {
+                let old = variant_entries(&prev.files, &ds.name, v);
+                let new = variant_entries(&files, &ds.name, v);
+                if !new.is_empty() && old == new {
+                    let key = ArtifactStore::key(&ds.name, v);
+                    if let Some(art) = prev.store.cached(&key) {
+                        store.adopt(key, art);
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(RepoSnapshot {
+        revision: manifest.as_ref().map(|m| m.revision).unwrap_or(0),
+        generation,
+        signed,
+        verified_files,
+        failures,
+        excluded_datasets,
+        registry,
+        store,
+        files,
+    })
+}
+
+fn files_mention_dataset(files: &Option<BTreeMap<String, FileDigest>>, ds: &str) -> bool {
+    let prefix = format!("{ds}/");
+    files
+        .as_ref()
+        .is_some_and(|f| f.keys().any(|rel| rel.starts_with(&prefix)))
+}
+
+fn walk_names(
+    root: &Path,
+    rel: &mut PathBuf,
+    out: &mut BTreeMap<String, ()>,
+) -> Result<(), String> {
+    let dir = root.join(&*rel);
+    for entry in std::fs::read_dir(&dir).map_err(|e| format!("read dir {}: {e}", dir.display()))? {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if rel.as_os_str().is_empty() && manifest_skips(&name) {
+            continue;
+        }
+        if name.starts_with('.') || name == "__pycache__" {
+            continue;
+        }
+        rel.push(&name);
+        if entry.path().is_dir() {
+            walk_names(root, rel, out)?;
+        } else {
+            out.insert(rel_str(rel), ());
+        }
+        rel.pop();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // RFC 8032 TEST 1 seed — a fixed dev key for unit fixtures.
+    const SEED: [u8; 32] = seed();
+
+    const fn seed() -> [u8; 32] {
+        let mut s = [0u8; 32];
+        let hex = *b"9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60";
+        let mut i = 0;
+        while i < 32 {
+            s[i] = hexval(hex[2 * i]) * 16 + hexval(hex[2 * i + 1]);
+            i += 1;
+        }
+        s
+    }
+
+    const fn hexval(c: u8) -> u8 {
+        if c.is_ascii_digit() {
+            c - b'0'
+        } else {
+            c - b'a' + 10
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pb-repo-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn signing_bytes_are_canonical() {
+        let mut files = BTreeMap::new();
+        files.insert("b/x".to_string(), FileDigest { sha256: "aa".into(), size: 2 });
+        files.insert("a".to_string(), FileDigest { sha256: "ff".into(), size: 1 });
+        let bytes = Manifest::signing_bytes(7, &files);
+        assert_eq!(
+            String::from_utf8(bytes).unwrap(),
+            "powerbert-manifest-v1\nrevision 7\na ff 1\nb/x aa 2\n"
+        );
+    }
+
+    #[test]
+    fn build_sign_write_load_verify_roundtrip() {
+        let root = tmpdir("roundtrip");
+        std::fs::write(root.join("vocab.json"), b"{}").unwrap();
+        std::fs::create_dir_all(root.join("ds/v")).unwrap();
+        std::fs::write(root.join("ds/v/meta.json"), b"{\"x\":1}").unwrap();
+        let mut m = Manifest::build(&root, 3).unwrap();
+        m.sign_with(&SEED).unwrap();
+        m.write(&root).unwrap();
+
+        let loaded = Manifest::load(&root).unwrap().unwrap();
+        assert_eq!(loaded.revision, 3);
+        let files = loaded.files.as_ref().unwrap();
+        assert_eq!(files.len(), 2);
+        assert!(files.contains_key("vocab.json"));
+        assert!(files.contains_key("ds/v/meta.json"));
+        let trusted = ed25519::public_key(&SEED);
+        loaded.verify_signature(Some(&trusted)).unwrap();
+        // Wrong trusted key must refuse even though the embedded key verifies.
+        let wrong = [9u8; 32];
+        assert!(loaded.verify_signature(Some(&wrong)).unwrap_err().contains("trusted key"));
+    }
+
+    #[test]
+    fn checks_name_the_offending_file_and_digests() {
+        let root = tmpdir("checks");
+        std::fs::write(root.join("vocab.json"), b"{}").unwrap();
+        std::fs::create_dir_all(root.join("ds")).unwrap();
+        std::fs::write(root.join("ds/payload.bin"), b"hello world").unwrap();
+        let m = Manifest::build(&root, 1).unwrap();
+        m.write(&root).unwrap();
+
+        let checks = Checks::load(&root).unwrap().unwrap();
+        checks.verify(&root.join("ds/payload.bin")).unwrap();
+        checks.verify(&root.join("unlisted.txt")).unwrap(); // unlisted = unchecked
+
+        // Flip one byte; the error must name the file and both digests.
+        let want = m.files.as_ref().unwrap()["ds/payload.bin"].sha256.clone();
+        std::fs::write(root.join("ds/payload.bin"), b"hellp world").unwrap();
+        let err = checks.verify(&root.join("ds/payload.bin")).unwrap_err();
+        assert!(err.contains("ds/payload.bin"), "{err}");
+        assert!(err.contains(&want), "{err}");
+        assert!(err.contains("expected sha256"), "{err}");
+    }
+
+    #[test]
+    fn tampered_manifest_signature_is_fatal() {
+        let root = tmpdir("sigtamper");
+        std::fs::write(root.join("vocab.json"), b"{}").unwrap();
+        let mut m = Manifest::build(&root, 1).unwrap();
+        m.sign_with(&SEED).unwrap();
+        // Mutate a digest after signing: signature no longer covers it.
+        m.files.as_mut().unwrap().insert(
+            "vocab.json".to_string(),
+            FileDigest { sha256: "0".repeat(64), size: 2 },
+        );
+        m.write(&root).unwrap();
+        let loaded = Manifest::load(&root).unwrap().unwrap();
+        let err = loaded.verify_signature(None).unwrap_err();
+        assert!(err.contains("signature invalid"), "{err}");
+    }
+}

@@ -1,0 +1,552 @@
+//! Dependency-free ed25519 (RFC 8032) — the signature over the artifact
+//! repository manifest (`runtime/repo.rs`).
+//!
+//! Scope: artifact-manifest signing and verification only. The
+//! implementation favours obvious correctness over speed — field
+//! exponentiation and scalar reduction are plain square-and-multiply and
+//! binary long division — and is **not constant-time**. That is the right
+//! trade-off here: verification hashes public data, and the committed dev
+//! signing key is not a secret (deployments supply their own key to
+//! `python -m compile.sign` and pass the public half via `--trusted-key`).
+//! Pinned by the RFC 8032 test vectors below; the Python exporter
+//! (`python/compile/ed25519.py`) implements the same scheme and the two
+//! are cross-checked in CI by verifying the python-signed committed
+//! manifest here.
+
+use crate::util::hash::sha512;
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------------
+// Field arithmetic mod p = 2^255 - 19, radix-51 limbs.
+// ---------------------------------------------------------------------------
+
+const MASK51: u64 = (1 << 51) - 1;
+
+/// `p - 2` (inversion exponent), little-endian bytes.
+const PM2: [u8; 32] = {
+    let mut e = [0xffu8; 32];
+    e[0] = 0xeb;
+    e[31] = 0x7f;
+    e
+};
+/// `(p - 5) / 8 = 2^252 - 3` (square-root exponent), little-endian bytes.
+const P58: [u8; 32] = {
+    let mut e = [0xffu8; 32];
+    e[0] = 0xfd;
+    e[31] = 0x0f;
+    e
+};
+/// `(p - 1) / 4 = 2^253 - 5`: `2^((p-1)/4)` is a square root of -1.
+const PM14: [u8; 32] = {
+    let mut e = [0xffu8; 32];
+    e[0] = 0xfb;
+    e[31] = 0x1f;
+    e
+};
+
+#[derive(Clone, Copy, Debug)]
+struct Fe([u64; 5]);
+
+impl Fe {
+    const ZERO: Fe = Fe([0; 5]);
+    const ONE: Fe = Fe([1, 0, 0, 0, 0]);
+
+    fn from_u64(v: u64) -> Fe {
+        Fe([v & MASK51, v >> 51, 0, 0, 0])
+    }
+
+    /// Little-endian 32 bytes; bit 255 ignored (it carries the point's
+    /// x-sign in the encoding).
+    fn from_bytes(b: &[u8; 32]) -> Fe {
+        let le = |r: std::ops::Range<usize>| {
+            let mut v = [0u8; 8];
+            v.copy_from_slice(&b[r]);
+            u64::from_le_bytes(v)
+        };
+        Fe([
+            le(0..8) & MASK51,
+            (le(6..14) >> 3) & MASK51,
+            (le(12..20) >> 6) & MASK51,
+            (le(19..27) >> 1) & MASK51,
+            (le(24..32) >> 12) & MASK51,
+        ])
+    }
+
+    fn carry(mut self) -> Fe {
+        let f = &mut self.0;
+        for i in 0..4 {
+            let c = f[i] >> 51;
+            f[i] &= MASK51;
+            f[i + 1] += c;
+        }
+        let c = f[4] >> 51;
+        f[4] &= MASK51;
+        f[0] += 19 * c;
+        self
+    }
+
+    /// Fully reduced canonical little-endian encoding.
+    fn to_bytes(self) -> [u8; 32] {
+        let mut f = self.carry().carry().0;
+        // f < 2p here; subtract p when f >= p by adding 19 and checking
+        // the carry off bit 255.
+        let mut q = (f[0] + 19) >> 51;
+        for limb in f.iter().take(5).skip(1) {
+            q = (limb + q) >> 51;
+        }
+        f[0] += 19 * q;
+        for i in 0..4 {
+            let c = f[i] >> 51;
+            f[i] &= MASK51;
+            f[i + 1] += c;
+        }
+        f[4] &= MASK51;
+        let mut out = [0u8; 32];
+        let words = [
+            f[0] | (f[1] << 51),
+            (f[1] >> 13) | (f[2] << 38),
+            (f[2] >> 26) | (f[3] << 25),
+            (f[3] >> 39) | (f[4] << 12),
+        ];
+        for (i, w) in words.iter().enumerate() {
+            out[8 * i..8 * i + 8].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    fn add(self, o: Fe) -> Fe {
+        let mut f = self.0;
+        for i in 0..5 {
+            f[i] += o.0[i];
+        }
+        Fe(f).carry()
+    }
+
+    fn sub(self, o: Fe) -> Fe {
+        // self + 2p - o keeps every limb non-negative.
+        const TWO_P: [u64; 5] = [
+            0xfffffffffffda,
+            0xffffffffffffe,
+            0xffffffffffffe,
+            0xffffffffffffe,
+            0xffffffffffffe,
+        ];
+        let mut f = self.0;
+        for i in 0..5 {
+            f[i] = f[i] + TWO_P[i] - o.0[i];
+        }
+        Fe(f).carry()
+    }
+
+    fn neg(self) -> Fe {
+        Fe::ZERO.sub(self)
+    }
+
+    fn mul(self, o: Fe) -> Fe {
+        let a: Vec<u128> = self.0.iter().map(|&x| x as u128).collect();
+        let b: Vec<u128> = o.0.iter().map(|&x| x as u128).collect();
+        let mut t = [0u128; 5];
+        t[0] = a[0] * b[0] + 19 * (a[1] * b[4] + a[2] * b[3] + a[3] * b[2] + a[4] * b[1]);
+        t[1] = a[0] * b[1] + a[1] * b[0] + 19 * (a[2] * b[4] + a[3] * b[3] + a[4] * b[2]);
+        t[2] = a[0] * b[2] + a[1] * b[1] + a[2] * b[0] + 19 * (a[3] * b[4] + a[4] * b[3]);
+        t[3] = a[0] * b[3] + a[1] * b[2] + a[2] * b[1] + a[3] * b[0] + 19 * (a[4] * b[4]);
+        t[4] = a[0] * b[4] + a[1] * b[3] + a[2] * b[2] + a[3] * b[1] + a[4] * b[0];
+        let mut r = [0u64; 5];
+        let mut c: u128 = 0;
+        for i in 0..5 {
+            let v = t[i] + c;
+            r[i] = (v as u64) & MASK51;
+            c = v >> 51;
+        }
+        r[0] += 19 * (c as u64);
+        Fe(r).carry()
+    }
+
+    fn square(self) -> Fe {
+        self.mul(self)
+    }
+
+    fn pow(self, e: &[u8; 32]) -> Fe {
+        let mut r = Fe::ONE;
+        for i in (0..256).rev() {
+            r = r.square();
+            if (e[i / 8] >> (i % 8)) & 1 == 1 {
+                r = r.mul(self);
+            }
+        }
+        r
+    }
+
+    fn invert(self) -> Fe {
+        self.pow(&PM2)
+    }
+
+    fn is_negative(self) -> bool {
+        self.to_bytes()[0] & 1 == 1
+    }
+
+    fn is_zero(self) -> bool {
+        self.to_bytes() == [0u8; 32]
+    }
+
+    fn eq(self, o: Fe) -> bool {
+        self.to_bytes() == o.to_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Curve points: extended twisted Edwards coordinates (X, Y, Z, T).
+// ---------------------------------------------------------------------------
+
+struct Consts {
+    d: Fe,
+    d2: Fe,
+    sqrtm1: Fe,
+    base: Point,
+}
+
+fn consts() -> &'static Consts {
+    static C: OnceLock<Consts> = OnceLock::new();
+    C.get_or_init(|| {
+        // d = -121665 / 121666 mod p.
+        let d = Fe::from_u64(121665).neg().mul(Fe::from_u64(121666).invert());
+        let sqrtm1 = Fe::from_u64(2).pow(&PM14);
+        // Base point: y = 4/5, x recovered with even ("positive") sign.
+        let y = Fe::from_u64(4).mul(Fe::from_u64(5).invert());
+        let base = decompress_with(&y.to_bytes(), d, sqrtm1)
+            .expect("ed25519 base point must decompress");
+        Consts { d, d2: d.add(d), sqrtm1, base }
+    })
+}
+
+#[derive(Clone, Copy)]
+struct Point {
+    x: Fe,
+    y: Fe,
+    z: Fe,
+    t: Fe,
+}
+
+impl Point {
+    const IDENTITY: Point = Point { x: Fe::ZERO, y: Fe::ONE, z: Fe::ONE, t: Fe::ZERO };
+
+    /// add-2008-hwcd-3 (complete for a = -1 twisted Edwards).
+    fn add(&self, q: &Point) -> Point {
+        let a = self.y.sub(self.x).mul(q.y.sub(q.x));
+        let b = self.y.add(self.x).mul(q.y.add(q.x));
+        let c = self.t.mul(q.t).mul(consts().d2);
+        let zz = self.z.mul(q.z);
+        let d = zz.add(zz);
+        let e = b.sub(a);
+        let f = d.sub(c);
+        let g = d.add(c);
+        let h = b.add(a);
+        Point { x: e.mul(f), y: g.mul(h), z: f.mul(g), t: e.mul(h) }
+    }
+
+    fn double(&self) -> Point {
+        let a = self.x.square();
+        let b = self.y.square();
+        let c2 = self.z.square();
+        let c = c2.add(c2);
+        let h = a.add(b);
+        let e = h.sub(self.x.add(self.y).square());
+        let g = a.sub(b);
+        let f = c.add(g);
+        Point { x: e.mul(f), y: g.mul(h), z: f.mul(g), t: e.mul(h) }
+    }
+
+    /// Double-and-add over the 256-bit little-endian scalar.
+    fn scalar_mul(&self, scalar: &[u8; 32]) -> Point {
+        let mut r = Point::IDENTITY;
+        for i in (0..256).rev() {
+            r = r.double();
+            if (scalar[i / 8] >> (i % 8)) & 1 == 1 {
+                r = r.add(self);
+            }
+        }
+        r
+    }
+
+    fn compress(&self) -> [u8; 32] {
+        let zi = self.z.invert();
+        let x = self.x.mul(zi);
+        let y = self.y.mul(zi);
+        let mut b = y.to_bytes();
+        b[31] |= (x.is_negative() as u8) << 7;
+        b
+    }
+}
+
+fn decompress_with(b: &[u8; 32], d: Fe, sqrtm1: Fe) -> Option<Point> {
+    let sign = (b[31] >> 7) == 1;
+    let y = Fe::from_bytes(b);
+    let y2 = y.square();
+    let u = y2.sub(Fe::ONE);
+    let v = y2.mul(d).add(Fe::ONE);
+    // Candidate root: x = u * v^3 * (u * v^7)^((p-5)/8).
+    let v3 = v.square().mul(v);
+    let v7 = v3.square().mul(v);
+    let mut x = u.mul(v7).pow(&P58).mul(u).mul(v3);
+    let vxx = v.mul(x.square());
+    if !vxx.eq(u) {
+        if vxx.eq(u.neg()) {
+            x = x.mul(sqrtm1);
+        } else {
+            return None;
+        }
+    }
+    if x.is_zero() && sign {
+        return None;
+    }
+    if x.is_negative() != sign {
+        x = x.neg();
+    }
+    Some(Point { x, y, z: Fe::ONE, t: x.mul(y) })
+}
+
+fn decompress(b: &[u8; 32]) -> Option<Point> {
+    let c = consts();
+    decompress_with(b, c.d, c.sqrtm1)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar arithmetic mod L = 2^252 + 27742317777372353535851937790883648493.
+// ---------------------------------------------------------------------------
+
+const L: [u64; 4] = [0x5812631a5cf5d3ed, 0x14def9dea2f79cd6, 0, 0x1000000000000000];
+
+fn u256_cmp(a: &[u64; 4], b: &[u64; 4]) -> std::cmp::Ordering {
+    for i in (0..4).rev() {
+        match a[i].cmp(&b[i]) {
+            std::cmp::Ordering::Equal => {}
+            ord => return ord,
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+fn u256_sub(a: &mut [u64; 4], b: &[u64; 4]) {
+    let mut borrow = 0u64;
+    for i in 0..4 {
+        let (v, b1) = a[i].overflowing_sub(b[i]);
+        let (v, b2) = v.overflowing_sub(borrow);
+        a[i] = v;
+        borrow = (b1 | b2) as u64;
+    }
+}
+
+/// 512-bit little-endian limbs mod L via binary long division: r stays
+/// `< L < 2^253`, so the shift never overflows 256 bits.
+fn mod_l(wide: &[u64; 8]) -> [u64; 4] {
+    let mut r = [0u64; 4];
+    for i in (0..512).rev() {
+        let mut carry = (wide[i / 64] >> (i % 64)) & 1;
+        for limb in r.iter_mut() {
+            let top = *limb >> 63;
+            *limb = (*limb << 1) | carry;
+            carry = top;
+        }
+        if u256_cmp(&r, &L) != std::cmp::Ordering::Less {
+            u256_sub(&mut r, &L);
+        }
+    }
+    r
+}
+
+fn limbs_from_le(bytes: &[u8]) -> Vec<u64> {
+    bytes
+        .chunks(8)
+        .map(|c| {
+            let mut v = [0u8; 8];
+            v[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(v)
+        })
+        .collect()
+}
+
+fn limbs_to_le32(limbs: &[u64; 4]) -> [u8; 32] {
+    let mut out = [0u8; 32];
+    for (i, l) in limbs.iter().enumerate() {
+        out[8 * i..8 * i + 8].copy_from_slice(&l.to_le_bytes());
+    }
+    out
+}
+
+/// 64-byte little-endian value reduced mod L.
+fn sc_reduce(h: &[u8; 64]) -> [u8; 32] {
+    let limbs = limbs_from_le(h);
+    let wide: [u64; 8] = limbs.try_into().unwrap();
+    limbs_to_le32(&mod_l(&wide))
+}
+
+/// `(a * b + c) mod L` over 32-byte little-endian scalars.
+fn sc_muladd(a: &[u8; 32], b: &[u8; 32], c: &[u8; 32]) -> [u8; 32] {
+    let al = limbs_from_le(a);
+    let bl = limbs_from_le(b);
+    let mut wide = [0u64; 8];
+    for (i, &x) in al.iter().enumerate() {
+        let mut carry = 0u128;
+        for (j, &y) in bl.iter().enumerate() {
+            let t = wide[i + j] as u128 + x as u128 * y as u128 + carry;
+            wide[i + j] = t as u64;
+            carry = t >> 64;
+        }
+        wide[i + 4] = carry as u64;
+    }
+    let cl = limbs_from_le(c);
+    let mut carry = 0u128;
+    for i in 0..8 {
+        let t = wide[i] as u128 + cl.get(i).copied().unwrap_or(0) as u128 + carry;
+        wide[i] = t as u64;
+        carry = t >> 64;
+    }
+    limbs_to_le32(&mod_l(&wide))
+}
+
+fn sc_in_range(s: &[u8; 32]) -> bool {
+    let limbs: [u64; 4] = limbs_from_le(s).try_into().unwrap();
+    u256_cmp(&limbs, &L) == std::cmp::Ordering::Less
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// Secret scalar + prefix from the 32-byte seed (RFC 8032 §5.1.5).
+fn expand_seed(seed: &[u8; 32]) -> ([u8; 32], [u8; 32]) {
+    let h = sha512(seed);
+    let mut a = [0u8; 32];
+    a.copy_from_slice(&h[..32]);
+    a[0] &= 248;
+    a[31] &= 127;
+    a[31] |= 64;
+    let mut prefix = [0u8; 32];
+    prefix.copy_from_slice(&h[32..]);
+    (a, prefix)
+}
+
+/// Public key for a 32-byte seed.
+pub fn public_key(seed: &[u8; 32]) -> [u8; 32] {
+    let (a, _) = expand_seed(seed);
+    consts().base.scalar_mul(&a).compress()
+}
+
+/// Sign `msg` with the 32-byte seed; returns the 64-byte signature `R || S`.
+pub fn sign(seed: &[u8; 32], msg: &[u8]) -> [u8; 64] {
+    let (a, prefix) = expand_seed(seed);
+    let a_pub = consts().base.scalar_mul(&a).compress();
+    let mut h = crate::util::hash::Sha512::new();
+    h.update(&prefix);
+    h.update(msg);
+    let r = sc_reduce(&h.finalize());
+    let r_point = consts().base.scalar_mul(&r).compress();
+    let mut h = crate::util::hash::Sha512::new();
+    h.update(&r_point);
+    h.update(&a_pub);
+    h.update(msg);
+    let k = sc_reduce(&h.finalize());
+    let s = sc_muladd(&k, &a, &r);
+    let mut sig = [0u8; 64];
+    sig[..32].copy_from_slice(&r_point);
+    sig[32..].copy_from_slice(&s);
+    sig
+}
+
+/// Verify a 64-byte signature over `msg` against a 32-byte public key.
+pub fn verify(public: &[u8; 32], msg: &[u8], sig: &[u8; 64]) -> Result<(), String> {
+    let mut r_bytes = [0u8; 32];
+    r_bytes.copy_from_slice(&sig[..32]);
+    let mut s = [0u8; 32];
+    s.copy_from_slice(&sig[32..]);
+    if !sc_in_range(&s) {
+        return Err("signature scalar S out of range".into());
+    }
+    let a = decompress(public).ok_or("public key is not a valid curve point")?;
+    let r = decompress(&r_bytes).ok_or("signature R is not a valid curve point")?;
+    let mut h = crate::util::hash::Sha512::new();
+    h.update(&r_bytes);
+    h.update(public);
+    h.update(msg);
+    let k = sc_reduce(&h.finalize());
+    // Unbatched RFC 8032 check: [S]B == R + [k]A, compared in affine
+    // encoding.
+    let lhs = consts().base.scalar_mul(&s).compress();
+    let rhs = r.add(&a.scalar_mul(&k)).compress();
+    if lhs == rhs {
+        Ok(())
+    } else {
+        Err("signature does not verify".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hash::{from_hex, to_hex};
+
+    fn seed32(hex: &str) -> [u8; 32] {
+        from_hex(hex).unwrap().try_into().unwrap()
+    }
+
+    // RFC 8032 §7.1 TEST 1–3.
+    const V1_SEED: &str = "9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60";
+    const V1_PUB: &str = "d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a";
+    const V1_SIG: &str = "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e065224901555fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b";
+    const V2_SEED: &str = "4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb";
+    const V2_PUB: &str = "3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c";
+    const V2_SIG: &str = "92a009a9f0d4cab8720e820b5f642540a2b27b5416503f8fb3762223ebdb69da085ac1e43e15996e458f3613d0f11d8c387b2eaeb4302aeeb00d291612bb0c00";
+    const V3_SEED: &str = "c5aa8df43f9f837bedb7442f31dcb7b166d38535076f094b85ce3a2e0b4458f7";
+    const V3_PUB: &str = "fc51cd8e6218a1a38da47ed00230f0580816ed13ba3303ac5deb911548908025";
+    const V3_SIG: &str = "6291d657deec24024827e69c3abe01a30ce548a284743a445e3680d7db5ac3ac18ff9b538d16f290ae67f760984dc6594a7c15e9716ed28dc027beceea1ec40a";
+
+    #[test]
+    fn rfc8032_vectors() {
+        for (seed, pk, msg, sig) in [
+            (V1_SEED, V1_PUB, &b""[..], V1_SIG),
+            (V2_SEED, V2_PUB, &b"\x72"[..], V2_SIG),
+            (V3_SEED, V3_PUB, &b"\xaf\x82"[..], V3_SIG),
+        ] {
+            let seed = seed32(seed);
+            assert_eq!(to_hex(&public_key(&seed)), pk);
+            let s = sign(&seed, msg);
+            assert_eq!(to_hex(&s), sig);
+            let pk: [u8; 32] = from_hex(pk).unwrap().try_into().unwrap();
+            verify(&pk, msg, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn tampering_fails_verification() {
+        let seed = seed32(V3_SEED);
+        let pk = public_key(&seed);
+        let msg = b"artifact manifest revision 7";
+        let sig = sign(&seed, msg);
+        verify(&pk, msg, &sig).unwrap();
+        // Flip one bit anywhere in the signature.
+        for i in [0usize, 17, 31, 32, 48, 63] {
+            let mut bad = sig;
+            bad[i] ^= 1;
+            assert!(verify(&pk, msg, &bad).is_err(), "bit flip at byte {i} accepted");
+        }
+        // Flip one bit in the message.
+        let mut bad_msg = msg.to_vec();
+        bad_msg[3] ^= 0x20;
+        assert!(verify(&pk, &bad_msg, &sig).is_err());
+        // Wrong key.
+        let other = public_key(&seed32(V1_SEED));
+        assert!(verify(&other, msg, &sig).is_err());
+    }
+
+    #[test]
+    fn sign_verify_roundtrip_misc_seeds() {
+        for i in 0u8..4 {
+            let mut seed = [i; 32];
+            seed[0] = i.wrapping_mul(37).wrapping_add(1);
+            let pk = public_key(&seed);
+            let msg = vec![i; 100 + i as usize * 13];
+            let sig = sign(&seed, &msg);
+            verify(&pk, &msg, &sig).unwrap();
+        }
+    }
+}

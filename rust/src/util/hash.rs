@@ -1,0 +1,563 @@
+//! Dependency-free SHA-256 / SHA-512 with a streaming [`HashingReader`].
+//!
+//! The artifact repository (`runtime/repo.rs`) digests every bundle file
+//! as it loads — `weights.npz` is hashed *while* it is read into the
+//! parse buffer, never buffered twice — and the manifest signature
+//! (`util/ed25519.rs`) hashes with SHA-512 per RFC 8032. Like
+//! `util/npz.rs` and `util/json.rs`, this module vendors the primitive
+//! instead of pulling a crate: the container builds offline.
+//!
+//! The round constants are not embedded as literal tables (80 u64
+//! magic numbers are exactly the kind of thing that rots silently);
+//! they are derived at first use from their FIPS 180-4 definition —
+//! the fractional bits of the square/cube roots of the first primes —
+//! using exact integer root extraction, then pinned by known-answer
+//! tests against the published vectors.
+
+use std::cmp::Ordering;
+use std::io::{self, Read};
+use std::path::Path;
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------------
+// FIPS 180-4 constant derivation: frac(p^(1/root)) to `bits` bits, exact.
+// ---------------------------------------------------------------------------
+
+fn primes(n: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(n);
+    let mut cand = 2u64;
+    while out.len() < n {
+        if out.iter().all(|p| cand % p != 0) {
+            out.push(cand);
+        }
+        cand += 1;
+    }
+    out
+}
+
+/// Little-endian limb multiply (schoolbook; operands are tiny).
+fn mul_limbs(a: &[u64], b: &[u64]) -> Vec<u64> {
+    let mut out = vec![0u64; a.len() + b.len()];
+    for (i, &x) in a.iter().enumerate() {
+        let mut carry = 0u128;
+        for (j, &y) in b.iter().enumerate() {
+            let t = out[i + j] as u128 + x as u128 * y as u128 + carry;
+            out[i + j] = t as u64;
+            carry = t >> 64;
+        }
+        out[i + b.len()] = carry as u64;
+    }
+    out
+}
+
+fn cmp_limbs(a: &[u64], b: &[u64]) -> Ordering {
+    let hi = a.len().max(b.len());
+    for i in (0..hi).rev() {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        match x.cmp(&y) {
+            Ordering::Equal => {}
+            ord => return ord,
+        }
+    }
+    Ordering::Equal
+}
+
+/// `floor(prime^(1/root) * 2^bits)` truncated to the low 64 bits, i.e.
+/// the first `bits` fractional bits of the root (the integer part falls
+/// off the top). Exact integer binary search — no floating point.
+fn root_frac(prime: u64, root: u32, bits: u32) -> u64 {
+    let shift = (root * bits) as usize;
+    let mut target = vec![0u64; shift / 64 + 2];
+    let v = (prime as u128) << (shift % 64);
+    target[shift / 64] |= v as u64;
+    target[shift / 64 + 1] |= (v >> 64) as u64;
+    let mut y: u128 = 0;
+    for bit in (0..=(bits + 4)).rev() {
+        let cand = y | (1u128 << bit);
+        let limbs = [cand as u64, (cand >> 64) as u64];
+        let mut pow: Vec<u64> = vec![1];
+        for _ in 0..root {
+            pow = mul_limbs(&pow, &limbs);
+        }
+        if cmp_limbs(&pow, &target) != Ordering::Greater {
+            y = cand;
+        }
+    }
+    y as u64
+}
+
+fn k256() -> &'static [u32; 64] {
+    static K: OnceLock<[u32; 64]> = OnceLock::new();
+    K.get_or_init(|| {
+        let ps = primes(64);
+        let mut k = [0u32; 64];
+        for (i, &p) in ps.iter().enumerate() {
+            k[i] = root_frac(p, 3, 32) as u32;
+        }
+        k
+    })
+}
+
+fn h256() -> &'static [u32; 8] {
+    static H: OnceLock<[u32; 8]> = OnceLock::new();
+    H.get_or_init(|| {
+        let ps = primes(8);
+        let mut h = [0u32; 8];
+        for (i, &p) in ps.iter().enumerate() {
+            h[i] = root_frac(p, 2, 32) as u32;
+        }
+        h
+    })
+}
+
+fn k512() -> &'static [u64; 80] {
+    static K: OnceLock<[u64; 80]> = OnceLock::new();
+    K.get_or_init(|| {
+        let ps = primes(80);
+        let mut k = [0u64; 80];
+        for (i, &p) in ps.iter().enumerate() {
+            k[i] = root_frac(p, 3, 64);
+        }
+        k
+    })
+}
+
+fn h512() -> &'static [u64; 8] {
+    static H: OnceLock<[u64; 8]> = OnceLock::new();
+    H.get_or_init(|| {
+        let ps = primes(8);
+        let mut h = [0u64; 8];
+        for (i, &p) in ps.iter().enumerate() {
+            h[i] = root_frac(p, 2, 64);
+        }
+        h
+    })
+}
+
+// ---------------------------------------------------------------------------
+// SHA-256
+// ---------------------------------------------------------------------------
+
+/// Incremental SHA-256.
+#[derive(Clone)]
+pub struct Sha256 {
+    state: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Self {
+        Sha256 { state: *h256(), buf: [0; 64], buf_len: 0, total: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = data.len().min(64 - self.buf_len);
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let (block, rest) = data.split_at(64);
+            self.compress(block.try_into().unwrap());
+            data = rest;
+        }
+        self.buf[..data.len()].copy_from_slice(data);
+        self.buf_len = data.len();
+    }
+
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bits = self.total.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // Length is excluded from `total` accounting by going through
+        // update: total no longer matters once `bits` is latched.
+        let mut block = self.buf;
+        block[56..64].copy_from_slice(&bits.to_be_bytes());
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, w) in self.state.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let k = k256();
+        let mut w = [0u32; 64];
+        for (i, c) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes(c.try_into().unwrap());
+        }
+        for t in 16..64 {
+            let s0 = w[t - 15].rotate_right(7) ^ w[t - 15].rotate_right(18) ^ (w[t - 15] >> 3);
+            let s1 = w[t - 2].rotate_right(17) ^ w[t - 2].rotate_right(19) ^ (w[t - 2] >> 10);
+            w[t] = w[t - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[t - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for t in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(k[t])
+                .wrapping_add(w[t]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        for (s, v) in self.state.iter_mut().zip([a, b, c, d, e, f, g, h]) {
+            *s = s.wrapping_add(v);
+        }
+    }
+}
+
+/// One-shot SHA-256.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// One-shot SHA-256, lowercase hex.
+pub fn sha256_hex(data: &[u8]) -> String {
+    to_hex(&sha256(data))
+}
+
+// ---------------------------------------------------------------------------
+// SHA-512
+// ---------------------------------------------------------------------------
+
+/// Incremental SHA-512 (the hash inside ed25519 per RFC 8032).
+#[derive(Clone)]
+pub struct Sha512 {
+    state: [u64; 8],
+    buf: [u8; 128],
+    buf_len: usize,
+    total: u128,
+}
+
+impl Default for Sha512 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha512 {
+    pub fn new() -> Self {
+        Sha512 { state: *h512(), buf: [0; 128], buf_len: 0, total: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u128);
+        if self.buf_len > 0 {
+            let take = data.len().min(128 - self.buf_len);
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 128 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 128 {
+            let (block, rest) = data.split_at(128);
+            self.compress(block.try_into().unwrap());
+            data = rest;
+        }
+        self.buf[..data.len()].copy_from_slice(data);
+        self.buf_len = data.len();
+    }
+
+    pub fn finalize(mut self) -> [u8; 64] {
+        let bits = self.total.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 112 {
+            self.update(&[0]);
+        }
+        let mut block = self.buf;
+        block[112..128].copy_from_slice(&bits.to_be_bytes());
+        self.compress(&block);
+        let mut out = [0u8; 64];
+        for (i, w) in self.state.iter().enumerate() {
+            out[8 * i..8 * i + 8].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 128]) {
+        let k = k512();
+        let mut w = [0u64; 80];
+        for (i, c) in block.chunks_exact(8).enumerate() {
+            w[i] = u64::from_be_bytes(c.try_into().unwrap());
+        }
+        for t in 16..80 {
+            let s0 = w[t - 15].rotate_right(1) ^ w[t - 15].rotate_right(8) ^ (w[t - 15] >> 7);
+            let s1 = w[t - 2].rotate_right(19) ^ w[t - 2].rotate_right(61) ^ (w[t - 2] >> 6);
+            w[t] = w[t - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[t - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for t in 0..80 {
+            let s1 = e.rotate_right(14) ^ e.rotate_right(18) ^ e.rotate_right(41);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(k[t])
+                .wrapping_add(w[t]);
+            let s0 = a.rotate_right(28) ^ a.rotate_right(34) ^ a.rotate_right(39);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        for (s, v) in self.state.iter_mut().zip([a, b, c, d, e, f, g, h]) {
+            *s = s.wrapping_add(v);
+        }
+    }
+}
+
+/// One-shot SHA-512.
+pub fn sha512(data: &[u8]) -> [u8; 64] {
+    let mut h = Sha512::new();
+    h.update(data);
+    h.finalize()
+}
+
+// ---------------------------------------------------------------------------
+// Hex
+// ---------------------------------------------------------------------------
+
+/// Lowercase hex encoding.
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Hex decoding (case-insensitive; even length required).
+pub fn from_hex(s: &str) -> Result<Vec<u8>, String> {
+    if s.len() % 2 != 0 {
+        return Err(format!("odd-length hex string ({} chars)", s.len()));
+    }
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16);
+        let lo = (pair[1] as char).to_digit(16);
+        match (hi, lo) {
+            (Some(h), Some(l)) => out.push(((h << 4) | l) as u8),
+            _ => return Err(format!("invalid hex byte {:?}", pair)),
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Streaming-hash reader
+// ---------------------------------------------------------------------------
+
+/// A reader that SHA-256-digests every byte as it passes through, so a
+/// file is hashed in the same pass that loads it — never buffered twice.
+pub struct HashingReader<R: Read> {
+    inner: R,
+    hasher: Sha256,
+    count: u64,
+}
+
+impl<R: Read> HashingReader<R> {
+    pub fn new(inner: R) -> Self {
+        HashingReader { inner, hasher: Sha256::new(), count: 0 }
+    }
+
+    /// Digest (lowercase hex) and byte count of everything read so far.
+    pub fn finalize(self) -> (String, u64) {
+        (to_hex(&self.hasher.finalize()), self.count)
+    }
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.hasher.update(&buf[..n]);
+        self.count += n as u64;
+        Ok(n)
+    }
+}
+
+/// Expected digest of one artifact file, as recorded by the repository
+/// manifest. `name` is the manifest-relative path — every mismatch error
+/// names the offending file plus both digests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpectedDigest {
+    pub name: String,
+    pub sha256: String,
+    pub size: u64,
+}
+
+impl ExpectedDigest {
+    /// Compare an observed digest/size against the manifest record.
+    pub fn check(&self, got_sha256: &str, got_size: u64) -> Result<(), String> {
+        if got_size != self.size {
+            return Err(format!(
+                "digest mismatch for {}: expected {} bytes (sha256 {}), got {} bytes",
+                self.name, self.size, self.sha256, got_size
+            ));
+        }
+        if got_sha256 != self.sha256 {
+            return Err(format!(
+                "digest mismatch for {}: expected sha256 {}, actual sha256 {}",
+                self.name, self.sha256, got_sha256
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Streaming digest of a file in fixed-size chunks (no whole-file buffer):
+/// `(sha256 hex, size in bytes)`.
+pub fn hash_file(path: &Path) -> io::Result<(String, u64)> {
+    let mut r = HashingReader::new(std::fs::File::open(path)?);
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+    }
+    Ok(r.finalize())
+}
+
+/// Read a whole file through the hashing reader: one buffer, digested as
+/// it fills. Returns `(bytes, sha256 hex, size)`.
+pub fn read_file_hashed(path: &Path) -> io::Result<(Vec<u8>, String, u64)> {
+    let f = std::fs::File::open(path)?;
+    let hint = f.metadata().map(|m| m.len() as usize).unwrap_or(0);
+    let mut r = HashingReader::new(f);
+    let mut buf = Vec::with_capacity(hint.min(1 << 30));
+    r.read_to_end(&mut buf)?;
+    let (hex, size) = r.finalize();
+    Ok((buf, hex, size))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_constants_match_fips() {
+        assert_eq!(k256()[0], 0x428a2f98);
+        assert_eq!(k256()[63], 0xc67178f2);
+        assert_eq!(h256()[0], 0x6a09e667);
+        assert_eq!(h256()[7], 0x5be0cd19);
+        assert_eq!(k512()[0], 0x428a2f98d728ae22);
+        assert_eq!(k512()[79], 0x6c44198c4a475817);
+        assert_eq!(h512()[0], 0x6a09e667f3bcc908);
+    }
+
+    #[test]
+    fn sha256_known_answers() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // One million 'a's, streamed in awkward chunk sizes.
+        let mut h = Sha256::new();
+        let chunk = [b'a'; 997];
+        let mut left = 1_000_000usize;
+        while left > 0 {
+            let n = left.min(chunk.len());
+            h.update(&chunk[..n]);
+            left -= n;
+        }
+        assert_eq!(
+            to_hex(&h.finalize()),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn sha512_known_answers() {
+        assert_eq!(
+            to_hex(&sha512(b"abc")),
+            "ddaf35a193617abacc417349ae20413112e6fa4e89a97ea20a9eeee64b55d39a\
+             2192992a274fc1a836ba3c23a3feebbd454d4423643ce80e2a9ac94fa54ca49f"
+                .replace(char::is_whitespace, "")
+        );
+        assert_eq!(
+            to_hex(&sha512(b"")),
+            "cf83e1357eefb8bdf1542850d66d8007d620e4050b5715dc83f4a921d36ce9ce\
+             47d0d13c5d85f2b0ff8318d2877eec2f63b931bd47417a81a538327af927da3e"
+                .replace(char::is_whitespace, "")
+        );
+    }
+
+    #[test]
+    fn hex_roundtrip_and_errors() {
+        assert_eq!(from_hex("00ff10").unwrap(), vec![0, 255, 16]);
+        assert_eq!(to_hex(&[0, 255, 16]), "00ff10");
+        assert!(from_hex("0").is_err());
+        assert!(from_hex("zz").is_err());
+    }
+
+    #[test]
+    fn hashing_reader_matches_one_shot() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 7 + 3) as u8).collect();
+        let mut r = HashingReader::new(&data[..]);
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        let (hex, n) = r.finalize();
+        assert_eq!(out, data);
+        assert_eq!(n, data.len() as u64);
+        assert_eq!(hex, sha256_hex(&data));
+    }
+}

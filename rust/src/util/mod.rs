@@ -3,7 +3,9 @@
 //! logging and npz/npy IO are implemented here.
 
 pub mod cli;
+pub mod ed25519;
 pub mod epoll;
+pub mod hash;
 pub mod json;
 pub mod log;
 pub mod npz;

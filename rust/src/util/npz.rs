@@ -65,24 +65,26 @@ pub struct NpzEntry {
     pub data: NpyData,
 }
 
+/// Bounds-checked slice at `off..off+len` — hostile offsets near
+/// `usize::MAX` must error, not overflow in the index arithmetic.
+fn rd_slice<'a>(b: &'a [u8], off: usize, len: usize) -> Result<&'a [u8]> {
+    off.checked_add(len)
+        .and_then(|end| b.get(off..end))
+        .ok_or_else(|| anyhow!("npz: truncated at offset {off}"))
+}
+
 fn rd_u16(b: &[u8], off: usize) -> Result<u16> {
-    let s = b
-        .get(off..off + 2)
-        .ok_or_else(|| anyhow!("npz: truncated at offset {off}"))?;
+    let s = rd_slice(b, off, 2)?;
     Ok(u16::from_le_bytes([s[0], s[1]]))
 }
 
 fn rd_u32(b: &[u8], off: usize) -> Result<u32> {
-    let s = b
-        .get(off..off + 4)
-        .ok_or_else(|| anyhow!("npz: truncated at offset {off}"))?;
+    let s = rd_slice(b, off, 4)?;
     Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
 }
 
 fn rd_u64(b: &[u8], off: usize) -> Result<u64> {
-    let s = b
-        .get(off..off + 8)
-        .ok_or_else(|| anyhow!("npz: truncated at offset {off}"))?;
+    let s = rd_slice(b, off, 8)?;
     Ok(u64::from_le_bytes([
         s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
     ]))
@@ -98,11 +100,36 @@ fn rfind_sig(b: &[u8], sig: [u8; 4]) -> Option<usize> {
 
 /// Read every array of an uncompressed npz archive.
 pub fn read_npz(path: &Path) -> Result<Vec<NpzEntry>> {
-    let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    read_npz_checked(path, None)
+}
+
+/// Read an npz archive, digesting the bytes *as they stream in* when the
+/// repository manifest supplies an expected digest: the same buffer the
+/// parser consumes is hashed while it fills (via
+/// [`crate::util::hash::HashingReader`]) — never buffered twice. A
+/// size or sha256 mismatch refuses the archive before any parsing,
+/// naming the offending file and both digests.
+pub fn read_npz_checked(
+    path: &Path,
+    expected: Option<&crate::util::hash::ExpectedDigest>,
+) -> Result<Vec<NpzEntry>> {
+    let bytes = match expected {
+        None => std::fs::read(path).with_context(|| format!("read {}", path.display()))?,
+        Some(exp) => {
+            let (bytes, digest, size) = crate::util::hash::read_file_hashed(path)
+                .with_context(|| format!("read {}", path.display()))?;
+            exp.check(&digest, size).map_err(|e| anyhow!(e))?;
+            bytes
+        }
+    };
     parse_npz(&bytes).with_context(|| format!("parse {}", path.display()))
 }
 
-fn parse_npz(b: &[u8]) -> Result<Vec<NpzEntry>> {
+/// Parse an in-memory uncompressed npz archive. Public so hostile-bytes
+/// property tests can drive the parser without touching the filesystem;
+/// any malformed input must produce an error, never a panic or a partial
+/// result.
+pub fn parse_npz(b: &[u8]) -> Result<Vec<NpzEntry>> {
     // End-of-central-directory record -> central directory walk. The EOCD
     // comment is empty for numpy archives, so the record sits at the tail;
     // scanning backwards also tolerates a short trailing comment.
@@ -118,8 +145,18 @@ fn parse_npz(b: &[u8]) -> Result<Vec<NpzEntry>> {
         cd_off = rd_u64(b, eocd64 + 48)?;
     }
 
-    let mut entries = Vec::with_capacity(n_entries as usize);
-    let mut pos = cd_off as usize;
+    // A central-directory entry is at least 46 bytes, so a claimed count
+    // beyond len/46 is hostile — reject it instead of trusting it with a
+    // Vec::with_capacity (a zip64 count is attacker-controlled 64 bits).
+    if n_entries > (b.len() / 46 + 1) as u64 {
+        bail!(
+            "npz: central directory claims {n_entries} entries but the archive \
+             holds {} bytes",
+            b.len()
+        );
+    }
+    let mut entries = Vec::new();
+    let mut pos = usize::try_from(cd_off).map_err(|_| anyhow!("npz: central directory offset {cd_off} out of range"))?;
     for _ in 0..n_entries {
         if rd_u32(b, pos)? != 0x0201_4b50 {
             bail!("npz: bad central-directory signature at {pos}");
@@ -130,9 +167,8 @@ fn parse_npz(b: &[u8]) -> Result<Vec<NpzEntry>> {
         let extra_len = rd_u16(b, pos + 30)? as usize;
         let comment_len = rd_u16(b, pos + 32)? as usize;
         let mut lho = rd_u32(b, pos + 42)? as u64;
-        let name_bytes = b
-            .get(pos + 46..pos + 46 + name_len)
-            .ok_or_else(|| anyhow!("npz: truncated member name"))?;
+        let name_bytes =
+            rd_slice(b, pos + 46, name_len).context("npz: truncated member name")?;
         let name = String::from_utf8_lossy(name_bytes).to_string();
         // Zip64 extra field (id 0x0001): 64-bit values for exactly those
         // header fields that saturated, in usize/csize/offset order.
@@ -168,16 +204,18 @@ fn parse_npz(b: &[u8]) -> Result<Vec<NpzEntry>> {
         }
         // Local header gives the data offset (its name/extra lengths can
         // differ from the central copy).
-        let l = lho as usize;
+        let l = usize::try_from(lho)
+            .map_err(|_| anyhow!("npz: local header offset {lho} out of range"))?;
         if rd_u32(b, l)? != 0x0403_4b50 {
             bail!("npz: bad local-header signature for {name:?}");
         }
         let l_name = rd_u16(b, l + 26)? as usize;
         let l_extra = rd_u16(b, l + 28)? as usize;
         let data_off = l + 30 + l_name + l_extra;
-        let data = b
-            .get(data_off..data_off + usize_ as usize)
-            .ok_or_else(|| anyhow!("npz: member {name:?} data out of bounds"))?;
+        let member_len = usize::try_from(usize_)
+            .map_err(|_| anyhow!("npz: member {name:?} claims {usize_} bytes"))?;
+        let data = rd_slice(b, data_off, member_len)
+            .map_err(|_| anyhow!("npz: member {name:?} data out of bounds"))?;
         let (dims, payload) = parse_npy(data).with_context(|| format!("npz member {name:?}"))?;
         entries.push(NpzEntry {
             name: name.strip_suffix(".npy").unwrap_or(&name).to_string(),
@@ -200,8 +238,9 @@ fn parse_npy(b: &[u8]) -> Result<(Vec<usize>, NpyData)> {
         2 | 3 => (rd_u32(b, 8)? as usize, 12),
         v => bail!("unsupported npy version {v}"),
     };
-    let header = b
-        .get(header_start..header_start + header_len)
+    let header = header_start
+        .checked_add(header_len)
+        .and_then(|end| b.get(header_start..end))
         .ok_or_else(|| anyhow!("npy: truncated header"))?;
     let header = std::str::from_utf8(header).context("npy header not utf-8")?;
     let descr = dict_str_value(header, "descr")
@@ -210,7 +249,12 @@ fn parse_npy(b: &[u8]) -> Result<(Vec<usize>, NpyData)> {
         bail!("npy: fortran_order arrays are not supported");
     }
     let dims = parse_shape(header)?;
-    let count: usize = dims.iter().product();
+    // Hostile shapes like (usize::MAX, 2) must not overflow the element
+    // count (debug panic / silent wrap in release).
+    let count: usize = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow!("npy: shape {dims:?} overflows the element count"))?;
     let data = &b[header_start + header_len..];
     let payload = match descr.as_str() {
         "<f4" => NpyData::F32(read_scalars(data, count, f32::from_le_bytes)?),
@@ -256,7 +300,9 @@ fn read_scalars<T, const W: usize>(
     count: usize,
     decode: fn([u8; W]) -> T,
 ) -> Result<Vec<T>> {
-    let need = count * W;
+    let need = count
+        .checked_mul(W)
+        .ok_or_else(|| anyhow!("npy: {count} elements of width {W} overflow"))?;
     let data = data
         .get(..need)
         .ok_or_else(|| anyhow!("npy: payload holds {} bytes, need {need}", data.len()))?;

@@ -1,0 +1,246 @@
+//! Hostile-bytes property tests for the pure-Rust npz reader and the
+//! digest-checked artifact load path (satellite of the signed-repository
+//! PR): random byte flips, truncations, splices and pure garbage must
+//! always come back as a structured error — never a panic, never a
+//! partially-parsed archive with inconsistent shapes — and the checked
+//! reader must name the offending file plus both digests before any
+//! parsing happens.
+//!
+//! No committed artifacts required: archives are hand-rolled in memory
+//! with the same minimal stored-zip writer the unit tests use.
+
+use powerbert::testutil::prop::forall;
+use powerbert::util::hash::{sha256_hex, ExpectedDigest};
+use powerbert::util::npz::{parse_npz, read_npz_checked, NpzEntry};
+use powerbert::util::prng::Rng;
+
+/// Hand-roll a stored (method 0) zip holding the given npy members.
+/// Mirrors what `np.savez` emits minus the CRC (the reader trusts the
+/// manifest digest, not zip CRCs).
+fn fake_npz(members: &[(&str, Vec<u8>)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut locals = Vec::new();
+    for (name, npy) in members {
+        locals.push(out.len() as u32);
+        let name_b = name.as_bytes();
+        out.extend_from_slice(&0x0403_4b50u32.to_le_bytes());
+        out.extend_from_slice(&[20, 0, 0, 0, 0, 0, 0, 0, 0, 0]); // ver/flags/method/time/date
+        out.extend_from_slice(&0u32.to_le_bytes()); // crc
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes()); // csize
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes()); // usize
+        out.extend_from_slice(&(name_b.len() as u16).to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        out.extend_from_slice(name_b);
+        out.extend_from_slice(npy);
+    }
+    let cd_off = out.len();
+    for ((name, npy), lho) in members.iter().zip(&locals) {
+        let name_b = name.as_bytes();
+        out.extend_from_slice(&0x0201_4b50u32.to_le_bytes());
+        out.extend_from_slice(&[20, 0, 20, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        out.extend_from_slice(&0u32.to_le_bytes()); // crc
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(name_b.len() as u16).to_le_bytes());
+        out.extend_from_slice(&[0u8; 8]); // extra/comment/disk/int attrs
+        out.extend_from_slice(&0u32.to_le_bytes()); // ext attrs
+        out.extend_from_slice(&lho.to_le_bytes());
+        out.extend_from_slice(name_b);
+    }
+    let cd_size = out.len() - cd_off;
+    out.extend_from_slice(&0x0605_4b50u32.to_le_bytes());
+    out.extend_from_slice(&[0, 0, 0, 0]); // disk numbers
+    out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(cd_size as u32).to_le_bytes());
+    out.extend_from_slice(&(cd_off as u32).to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes()); // comment len
+    out
+}
+
+fn fake_npy_f32(dims: &[usize], values: &[f32]) -> Vec<u8> {
+    let shape = dims.iter().map(|d| format!("{d},")).collect::<Vec<_>>().join(" ");
+    let mut header =
+        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': ({shape}), }}");
+    while (header.len() + 11) % 16 != 0 {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut out = Vec::new();
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// A seeded valid archive with 1..=3 members of random small shapes.
+fn random_archive(rng: &mut Rng, size: usize) -> Vec<u8> {
+    let n_members = 1 + rng.below(3) as usize;
+    let mut members = Vec::new();
+    let names = ["weights.npy", "bias.npy", "embed/word.npy"];
+    for (i, name) in names.iter().take(n_members).enumerate() {
+        let rows = 1 + rng.below(size as u64 + 1) as usize;
+        let cols = 1 + rng.below(8) as usize;
+        let values: Vec<f32> = (0..rows * cols)
+            .map(|j| (i * 100 + j) as f32 * 0.25)
+            .collect();
+        members.push((*name, fake_npy_f32(&[rows, cols], &values)));
+    }
+    fake_npz(&members)
+}
+
+/// Whatever the parser returns, it must be self-consistent: every entry's
+/// element count matches its claimed shape. A mutation may legitimately
+/// still parse (flips in npy padding or zip comment space are benign), but
+/// it must never yield a shape/payload mismatch.
+fn assert_consistent(entries: &[NpzEntry]) {
+    for e in entries {
+        let count: usize = e.dims.iter().product();
+        assert_eq!(
+            e.data.len(),
+            count,
+            "entry {:?}: {} elements but shape {:?}",
+            e.name,
+            e.data.len(),
+            e.dims
+        );
+    }
+}
+
+#[test]
+fn random_byte_flips_never_panic_or_desync() {
+    forall("npz survives byte flips", 300, |rng, size| {
+        let mut bytes = random_archive(rng, size);
+        let flips = 1 + rng.below(4) as usize;
+        for _ in 0..flips {
+            let at = rng.below(bytes.len() as u64) as usize;
+            let bit = 1u8 << rng.below(8);
+            bytes[at] ^= bit;
+        }
+        // Err is fine; Ok must be internally consistent. Panic fails the
+        // property via forall's catch_unwind.
+        if let Ok(entries) = parse_npz(&bytes) {
+            assert_consistent(&entries);
+        }
+    });
+}
+
+#[test]
+fn truncation_at_any_offset_never_panics() {
+    forall("npz survives truncation", 300, |rng, size| {
+        let bytes = random_archive(rng, size);
+        let cut = rng.below(bytes.len() as u64 + 1) as usize;
+        if let Ok(entries) = parse_npz(&bytes[..cut]) {
+            assert_consistent(&entries);
+        }
+        // Truncating anywhere before the EOCD tail must fail: the reader
+        // anchors on the end-of-central-directory record.
+        if bytes.len() - cut >= 22 {
+            assert!(parse_npz(&bytes[..cut]).is_err(), "EOCD gone but parse succeeded");
+        }
+    });
+}
+
+#[test]
+fn spliced_and_garbage_bytes_never_panic() {
+    forall("npz survives splices", 200, |rng, size| {
+        let a = random_archive(rng, size);
+        let b = random_archive(rng, size.max(2) - 1);
+        // Random splice of two valid archives.
+        let cut_a = rng.below(a.len() as u64) as usize;
+        let cut_b = rng.below(b.len() as u64) as usize;
+        let mut spliced = a[..cut_a].to_vec();
+        spliced.extend_from_slice(&b[cut_b..]);
+        if let Ok(entries) = parse_npz(&spliced) {
+            assert_consistent(&entries);
+        }
+        // Pure noise of the same length.
+        let noise: Vec<u8> = (0..a.len()).map(|_| rng.below(256) as u8).collect();
+        if let Ok(entries) = parse_npz(&noise) {
+            assert_consistent(&entries);
+        }
+    });
+}
+
+#[test]
+fn wrong_shape_claims_are_rejected_not_misread() {
+    // Shape claims more elements than the payload carries: rewrite the
+    // dict literal inside the (ASCII) header, leaving the payload alone.
+    let mut npy = fake_npy_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+    let header_len = u16::from_le_bytes([npy[8], npy[9]]) as usize;
+    let hdr = std::str::from_utf8(&npy[10..10 + header_len]).unwrap().to_string();
+    let grown = hdr.replacen("(2, 2,)", "(9, 9,)", 1);
+    assert_ne!(hdr, grown, "shape literal not found in header");
+    npy.splice(10..10 + header_len, grown.into_bytes());
+    let err = parse_npz(&fake_npz(&[("w.npy", npy)])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("w.npy"), "error must name the member: {msg}");
+
+    // Overflow-bait shape must error, not wrap the element count.
+    let huge = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({}, 16,), }}\n",
+        usize::MAX
+    );
+    let mut bait = Vec::new();
+    bait.extend_from_slice(b"\x93NUMPY\x01\x00");
+    bait.extend_from_slice(&(huge.len() as u16).to_le_bytes());
+    bait.extend_from_slice(huge.as_bytes());
+    assert!(parse_npz(&fake_npz(&[("w.npy", bait)])).is_err());
+}
+
+#[test]
+fn checked_read_names_file_and_digests_on_tamper() {
+    let dir = std::env::temp_dir().join(format!("pb-npz-hostile-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("weights.npz");
+
+    let npy = fake_npy_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    let good = fake_npz(&[("w.npy", npy)]);
+    let expected = ExpectedDigest {
+        name: "sst2/bert/weights.npz".into(),
+        sha256: sha256_hex(&good),
+        size: good.len() as u64,
+    };
+
+    // Pristine bytes pass the digest gate and parse.
+    std::fs::write(&path, &good).unwrap();
+    let entries = read_npz_checked(&path, Some(&expected)).unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].dims, vec![2, 3]);
+
+    // One flipped bit anywhere: refused before parsing, naming the file
+    // and both digests.
+    let mut rng = Rng::new(0x7A3B);
+    for _ in 0..16 {
+        let mut bad = good.clone();
+        let at = rng.below(bad.len() as u64) as usize;
+        bad[at] ^= 1u8 << rng.below(8);
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_npz_checked(&path, Some(&expected)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("digest mismatch for sst2/bert/weights.npz"),
+            "must name the offending file: {msg}"
+        );
+        assert!(
+            msg.contains(&expected.sha256),
+            "must show the expected digest: {msg}"
+        );
+        assert!(msg.contains(&sha256_hex(&bad)), "must show the actual digest: {msg}");
+    }
+
+    // Truncation: size mismatch reported with both sizes.
+    std::fs::write(&path, &good[..good.len() - 7]).unwrap();
+    let err = read_npz_checked(&path, Some(&expected)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("digest mismatch for sst2/bert/weights.npz"), "{msg}");
+    assert!(
+        msg.contains(&format!("expected {} bytes", good.len())),
+        "must show the expected size: {msg}"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

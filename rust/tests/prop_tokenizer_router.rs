@@ -99,6 +99,7 @@ fn meta(variant: &str, kind: &str, dev: f64, agg: usize) -> VariantMeta {
         retention: Some(vec![agg / 6; 6]),
         dev_metric: Some(dev),
         pareto: None,
+        weights_check: None,
         dir: PathBuf::from("/tmp"),
     }
 }

@@ -1,0 +1,361 @@
+//! Zero-downtime rollout, end to end, on **both** connection edges:
+//! sustained pipelined v2 traffic while the artifact repository is
+//! hot-swapped underneath the serving stack. The contract under test —
+//! no request in flight across the swap ever fails or drops, every
+//! response matches exactly one snapshot's logits (old before the swap,
+//! new after, never a mix), and `hello`/`stats`/admin replies advertise
+//! the new manifest revision. Plus the capability-parity and
+//! refuse-tampered-dataset satellites.
+//!
+//! Needs the committed artifacts (real weights drive real logits); each
+//! test builds its own signed tmp root by copying variants out of them,
+//! so the committed bundle itself is never mutated.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use powerbert::client::PowerClient;
+use powerbert::coordinator::{
+    BatchPolicy, Config, Coordinator, EdgeKind, ErrorCode, Input, Policy, Server, ServerHandle,
+    Sla,
+};
+use powerbert::runtime::{default_root, Manifest, VariantMeta};
+use powerbert::testutil::artifacts_available;
+use powerbert::util::ed25519;
+use powerbert::util::hash::to_hex;
+use powerbert::util::json::Json;
+use powerbert::workload::WorkloadGen;
+
+// RFC 8032 TEST 1 seed — fixed dev key for the tmp fixtures.
+const SEED: [u8; 32] = seed();
+
+const fn seed() -> [u8; 32] {
+    let mut s = [0u8; 32];
+    let hex = *b"9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60";
+    let mut i = 0;
+    while i < 32 {
+        s[i] = hexval(hex[2 * i]) * 16 + hexval(hex[2 * i + 1]);
+        i += 1;
+    }
+    s
+}
+
+const fn hexval(c: u8) -> u8 {
+    if c.is_ascii_digit() {
+        c - b'0'
+    } else {
+        c - b'a' + 10
+    }
+}
+
+fn edges() -> Vec<EdgeKind> {
+    let mut v = vec![EdgeKind::Threads];
+    if cfg!(target_os = "linux") {
+        v.push(EdgeKind::Epoll);
+    }
+    v
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pb-rollout-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Copy a committed variant dir into the fixture under a new variant name
+/// (meta.json's `variant` field rewritten to match the directory).
+fn copy_variant(src: &Path, dst: &Path, variant: &str) {
+    let _ = std::fs::remove_dir_all(dst);
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        if entry.path().is_file() {
+            std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+        }
+    }
+    let meta_path = dst.join("meta.json");
+    let Json::Obj(mut m) = Json::parse_file(&meta_path).unwrap() else {
+        panic!("meta.json is not an object");
+    };
+    m.insert("variant".to_string(), Json::Str(variant.to_string()));
+    std::fs::write(&meta_path, Json::Obj(m).to_string()).unwrap();
+}
+
+/// Digest + sign the fixture at `revision` with the dev key, publishing
+/// the trusted key as `<root>/signing.pub`.
+fn sign_root(root: &Path, revision: u64) {
+    let mut m = Manifest::build(root, revision).unwrap();
+    m.sign_with(&SEED).unwrap();
+    m.write(root).unwrap();
+    std::fs::write(root.join("signing.pub"), format!("{}\n", to_hex(&ed25519::public_key(&SEED))))
+        .unwrap();
+}
+
+/// A signed tmp artifacts root holding the given (dataset, committed
+/// variant, fixture variant) copies plus the shared vocab.
+fn setup_root(tag: &str, variants: &[(&str, &str, &str)]) -> PathBuf {
+    let src = default_root();
+    let root = tmpdir(tag);
+    std::fs::copy(src.join("vocab.json"), root.join("vocab.json")).unwrap();
+    for (ds, from, to) in variants {
+        copy_variant(&src.join(ds).join(from), &root.join(ds).join(to), to);
+    }
+    sign_root(&root, 1);
+    root
+}
+
+struct Stack {
+    server: ServerHandle,
+    coordinator: Coordinator,
+}
+
+fn serve(root: &Path, edge: EdgeKind) -> Stack {
+    let coordinator = Coordinator::start(Config {
+        artifacts: root.to_path_buf(),
+        policy: Policy::Fixed("swap".into()),
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        preload: true,
+        require_signed: true,
+        ..Config::default()
+    })
+    .expect("coordinator over signed fixture");
+    let server = Server::bind("127.0.0.1:0", coordinator.client())
+        .expect("bind")
+        .with_edge(edge)
+        .spawn()
+        .expect("spawn");
+    Stack { server, coordinator }
+}
+
+fn close(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-4)
+}
+
+#[test]
+fn hot_reload_under_pipelined_load_drops_nothing() {
+    if !artifacts_available() {
+        return;
+    }
+    let src = default_root();
+    for edge in edges() {
+        let root = setup_root(&format!("swap-{edge:?}"), &[("sst2", "bert", "swap")]);
+        let stack = serve(&root, edge);
+        let client = PowerClient::connect(stack.server.addr()).expect("client");
+
+        let repo = client.fetch_hello().expect("hello").repo.expect("repo capability");
+        assert_eq!(repo.revision, 1, "{edge:?}");
+        assert!(repo.signed, "{edge:?}: fixture is signed");
+
+        let vocab = stack.coordinator.tokenizer().vocab.clone();
+        let (text, _) = WorkloadGen::new(&vocab, 11).sentence(12);
+        let input = || Input::Text { a: text.clone(), b: None };
+        let old = client.classify("sst2", input(), Sla::default()).expect("warm classify").scores;
+
+        // Sustained pipelined traffic on its own connection: bursts of 16
+        // in-flight requests, every reply awaited — any dropped or failed
+        // request across the swap fails the test.
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = stack.server.addr();
+        let gen_stop = stop.clone();
+        let gen_text = text.clone();
+        let loadgen = std::thread::spawn(move || {
+            let c = PowerClient::connect(addr).expect("loadgen connect");
+            let mut scores = Vec::new();
+            while !gen_stop.load(Ordering::Relaxed) {
+                let tickets: Vec<_> = (0..16)
+                    .map(|_| {
+                        c.submit(
+                            "sst2",
+                            Input::Text { a: gen_text.clone(), b: None },
+                            Sla::default(),
+                        )
+                        .expect("submit during swap")
+                    })
+                    .collect();
+                for t in tickets {
+                    let r = t.wait().expect("in-flight request failed across the swap");
+                    assert_eq!(r.variant, "swap");
+                    scores.push(r.scores);
+                }
+            }
+            scores
+        });
+        std::thread::sleep(Duration::from_millis(30));
+
+        // The rollout: different weights under the same variant name, a
+        // re-signed manifest at revision 2, then the admin reload.
+        copy_variant(&src.join("sst2").join("power-default"), &root.join("sst2").join("swap"), "swap");
+        sign_root(&root, 2);
+        let info = client.reload().expect("hot reload");
+        assert_eq!(info.revision, 2, "{edge:?}");
+        assert!(info.excluded.is_empty(), "{edge:?}: {:?}", info.excluded);
+        assert!(info.datasets.iter().any(|d| d == "sst2"), "{edge:?}: {:?}", info.datasets);
+
+        std::thread::sleep(Duration::from_millis(30));
+        stop.store(true, Ordering::Relaxed);
+        let observed = loadgen.join().expect("loadgen");
+        assert!(!observed.is_empty(), "{edge:?}: loadgen produced no traffic");
+
+        let new = client.classify("sst2", input(), Sla::default()).expect("post-swap classify").scores;
+        assert!(
+            !close(&old, &new),
+            "{edge:?}: bert and power-default weights must give different logits"
+        );
+
+        // Every response under load matches exactly one snapshot, and the
+        // sequence is monotone: once the new logits appear, the old ones
+        // never do again (requests pin their snapshot at routing time).
+        let mut seen_new = false;
+        for (i, s) in observed.iter().enumerate() {
+            if close(s, &new) {
+                seen_new = true;
+            } else if close(s, &old) {
+                assert!(!seen_new, "{edge:?}: old-snapshot logits after the swap (response {i})");
+            } else {
+                panic!("{edge:?}: response {i} matches neither snapshot's logits");
+            }
+        }
+
+        // The new revision is advertised everywhere.
+        let h = client.fetch_hello().expect("hello after swap");
+        let repo2 = h.repo.expect("repo capability");
+        assert_eq!(repo2.revision, 2, "{edge:?}");
+        assert!(repo2.generation >= 2, "{edge:?}: generation must bump on swap");
+        let stats = client.stats().expect("stats");
+        assert_eq!(
+            stats.raw.get("repo").and_then(|r| r.get("revision")).and_then(Json::as_u64),
+            Some(2),
+            "{edge:?}: stats must carry the new revision"
+        );
+
+        drop(client);
+        drop(stack);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+#[test]
+fn capabilities_match_the_manifest_after_add_variant() {
+    if !artifacts_available() {
+        return;
+    }
+    let src = default_root();
+    let root = setup_root("addvar", &[("sst2", "bert", "swap")]);
+    let stack = serve(&root, EdgeKind::Threads);
+    let client = PowerClient::connect(stack.server.addr()).expect("client");
+
+    let names = |info: &powerbert::client::ServerInfo| -> Vec<String> {
+        let mut v: Vec<String> = info
+            .variants
+            .get("sst2")
+            .map(|l| l.iter().map(|m| m.variant.clone()).collect())
+            .unwrap_or_default();
+        v.sort();
+        v
+    };
+    assert_eq!(names(client.hello()), vec!["swap".to_string()]);
+
+    // Roll out a second variant and announce it.
+    copy_variant(
+        &src.join("sst2").join("power-long"),
+        &root.join("sst2").join("power-long"),
+        "power-long",
+    );
+    sign_root(&root, 2);
+    let info = client.add_variant("sst2", "power-long").expect("add-variant");
+    assert_eq!(info.revision, 2);
+
+    // The live hello must exactly mirror the post-reload manifest: both
+    // variants, with metadata matching the on-disk meta.json field for
+    // field (capability parity — no stale or invented caps).
+    let h = client.fetch_hello().expect("fetch_hello");
+    assert_eq!(h.datasets, vec!["sst2".to_string()]);
+    assert_eq!(names(&h), vec!["power-long".to_string(), "swap".to_string()]);
+    let meta = VariantMeta::parse(&root.join("sst2").join("power-long")).unwrap();
+    let adv = h.variants["sst2"].iter().find(|v| v.variant == "power-long").unwrap();
+    assert_eq!(adv.kind, meta.kind);
+    assert_eq!(adv.seq_len, meta.seq_len);
+    assert_eq!(adv.num_classes, meta.num_classes);
+    assert_eq!(adv.dev_metric, meta.dev_metric);
+    assert_eq!(adv.retention, meta.retention);
+    assert_eq!(adv.aggregate_word_vectors, meta.aggregate_word_vectors());
+    assert_eq!(adv.adaptive_calibrated, meta.pareto.is_some());
+
+    // The connect-time hello is a snapshot; the live fetch is the truth.
+    assert_eq!(names(client.hello()), vec!["swap".to_string()]);
+
+    // And the added variant actually serves when requested by name.
+    let vocab = stack.coordinator.tokenizer().vocab.clone();
+    let (text, _) = WorkloadGen::new(&vocab, 13).sentence(10);
+    let r = client
+        .classify(
+            "sst2",
+            Input::Text { a: text, b: None },
+            Sla { variant: Some("power-long".into()), ..Default::default() },
+        )
+        .expect("classify on the added variant");
+    assert_eq!(r.variant, "power-long");
+
+    // Asking for a variant the manifest does not carry is a structured
+    // refusal, not a wedged admin thread.
+    let err = client.add_variant("sst2", "no-such-variant").unwrap_err();
+    assert_eq!(err.code(), Some(ErrorCode::UnknownVariant), "{err}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn tampered_dataset_is_refused_while_others_keep_serving() {
+    if !artifacts_available() {
+        return;
+    }
+    let root = setup_root(
+        "tamper",
+        &[("sst2", "bert", "swap"), ("cola", "bert", "swap")],
+    );
+    let stack = serve(&root, EdgeKind::Threads);
+    let client = PowerClient::connect(stack.server.addr()).expect("client");
+
+    let vocab = stack.coordinator.tokenizer().vocab.clone();
+    let (text, _) = WorkloadGen::new(&vocab, 17).sentence(10);
+    let input = || Input::Text { a: text.clone(), b: None };
+    client.classify("sst2", input(), Sla::default()).expect("sst2 pre-tamper");
+    client.classify("cola", input(), Sla::default()).expect("cola pre-tamper");
+
+    // Flip one byte in sst2's weights. The signature still verifies (it
+    // covers the manifest, not the disk), so the reload goes through —
+    // with the tampered dataset excluded and everything else serving.
+    let weights = root.join("sst2").join("swap").join("weights.npz");
+    let mut bytes = std::fs::read(&weights).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&weights, bytes).unwrap();
+
+    let info = client.reload().expect("dataset-scoped tamper must not fail the rollout");
+    assert_eq!(info.excluded, vec!["sst2".to_string()]);
+    assert_eq!(info.datasets, vec!["cola".to_string()]);
+
+    // The healthy dataset keeps serving; the tampered one is refused.
+    client.classify("cola", input(), Sla::default()).expect("cola post-tamper");
+    let err = client.classify("sst2", input(), Sla::default()).unwrap_err();
+    assert_eq!(err.code(), Some(ErrorCode::UnknownDataset), "{err}");
+
+    // add-variant on the tampered dataset surfaces the digest failure.
+    let err = client.add_variant("sst2", "swap").unwrap_err();
+    assert_eq!(err.code(), Some(ErrorCode::VerifyFailed), "{err}");
+    assert!(
+        err.to_string().contains("digest mismatch for sst2/swap/weights.npz"),
+        "refusal must name the offending file and digests: {err}"
+    );
+
+    // hello reflects the exclusion.
+    let h = client.fetch_hello().expect("hello");
+    assert_eq!(h.datasets, vec!["cola".to_string()]);
+    let repo = h.repo.expect("repo capability");
+    assert_eq!(repo.excluded, vec!["sst2".to_string()]);
+
+    let _ = std::fs::remove_dir_all(&root);
+}

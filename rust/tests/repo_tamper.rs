@@ -1,0 +1,292 @@
+//! Tamper matrix for the signed artifact repository: for every file class
+//! the manifest covers (weights.npz, meta.json, golden.npz, pareto.json,
+//! test.npz, the shared vocab, the manifest itself) flip one byte and
+//! prove the load is refused with the offending path and both digests
+//! named — dataset-scoped failures exclude only that dataset while the
+//! rest keep serving, shared/root failures are fatal, and a failed reload
+//! never replaces the serving snapshot.
+//!
+//! Entirely self-contained: fixtures are built and signed in a tmpdir with
+//! the Rust half of the signer (`Manifest::build` / `sign_with`), so no
+//! committed artifacts are needed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use powerbert::runtime::{Manifest, Repo, RepoPolicy};
+use powerbert::util::ed25519;
+use powerbert::util::hash::to_hex;
+
+// RFC 8032 TEST 1 seed — fixed dev key for fixtures.
+const SEED: [u8; 32] = seed();
+
+const fn seed() -> [u8; 32] {
+    let mut s = [0u8; 32];
+    let hex = *b"9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60";
+    let mut i = 0;
+    while i < 32 {
+        s[i] = hexval(hex[2 * i]) * 16 + hexval(hex[2 * i + 1]);
+        i += 1;
+    }
+    s
+}
+
+const fn hexval(c: u8) -> u8 {
+    if c.is_ascii_digit() {
+        c - b'0'
+    } else {
+        c - b'a' + 10
+    }
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pb-tamper-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_variant(root: &Path, ds: &str, variant: &str) {
+    let dir = root.join(ds).join(variant);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("model.b1.hlo.txt"), "HloModule x").unwrap();
+    std::fs::write(dir.join("weights.npz"), format!("weights-of-{ds}-{variant}")).unwrap();
+    // A syntactically malformed pareto table only disables adaptive
+    // routing — its *digest* is still covered by the manifest, which is
+    // what the matrix exercises.
+    std::fs::write(dir.join("pareto.json"), format!("{{\"stub\": \"{ds}\"}}")).unwrap();
+    std::fs::write(
+        dir.join("meta.json"),
+        format!(
+            r#"{{"dataset": "{ds}", "variant": "{variant}", "kind": "power",
+                "metric": "accuracy", "seq_len": 32, "num_layers": 6,
+                "num_classes": 2, "batch_sizes": [1],
+                "hlo": {{"1": "model.b1.hlo.txt"}},
+                "weights": "weights.npz", "param_order": ["embed/word"],
+                "retention": [20, 10, 5, 5, 5, 5], "dev_metric": 0.9}}"#
+        ),
+    )
+    .unwrap();
+}
+
+/// Two datasets, one variant each, signed at `revision` with the dev key
+/// (trusted key published as `<root>/signing.pub`).
+fn fixture(name: &str, revision: u64) -> PathBuf {
+    let root = tmpdir(name);
+    std::fs::write(root.join("vocab.json"), r#"{"words": ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "a"], "families": {}}"#).unwrap();
+    for ds in ["sst2", "cola"] {
+        write_variant(&root, ds, "bert");
+        std::fs::write(root.join(ds).join("test.npz"), format!("test-split-{ds}")).unwrap();
+        std::fs::write(root.join(ds).join("golden.npz"), format!("golden-logits-{ds}")).unwrap();
+    }
+    sign(&root, revision);
+    std::fs::write(root.join("signing.pub"), format!("{}\n", to_hex(&ed25519::public_key(&SEED))))
+        .unwrap();
+    root
+}
+
+fn sign(root: &Path, revision: u64) {
+    let mut m = Manifest::build(root, revision).unwrap();
+    m.sign_with(&SEED).unwrap();
+    m.write(root).unwrap();
+}
+
+/// Flip one bit in the middle of `path`.
+fn flip_byte(path: &Path) {
+    let mut bytes = std::fs::read(path).unwrap();
+    let at = bytes.len() / 2;
+    bytes[at] ^= 0x10;
+    std::fs::write(path, bytes).unwrap();
+}
+
+fn manifest_sha(root: &Path, rel: &str) -> String {
+    let m = Manifest::load(root).unwrap().unwrap();
+    m.files.as_ref().unwrap()[rel].sha256.clone()
+}
+
+#[test]
+fn pristine_fixture_verifies_clean() {
+    let root = fixture("pristine", 3);
+    let repo = Repo::open(&root, RepoPolicy { require_signed: true, ..Default::default() })
+        .expect("pristine fixture must open");
+    let snap = repo.snapshot();
+    assert_eq!(snap.revision, 3);
+    assert_eq!(snap.generation, 1);
+    assert!(snap.signed, "signature must verify against signing.pub");
+    assert!(snap.failures.is_empty(), "{:?}", snap.failures);
+    assert!(snap.excluded_datasets.is_empty());
+    // vocab + 2 datasets x (meta, weights, pareto, hlo, test, golden).
+    assert_eq!(snap.verified_files, 1 + 2 * 6);
+    assert!(snap.registry.dataset("sst2").is_some());
+    assert!(snap.registry.dataset("cola").is_some());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn every_tampered_file_class_names_path_and_digests() {
+    // One fixture per file class the manifest covers inside a dataset.
+    let matrix = [
+        ("weights", "sst2/bert/weights.npz"),
+        ("meta", "sst2/bert/meta.json"),
+        ("pareto", "sst2/bert/pareto.json"),
+        ("golden", "sst2/golden.npz"),
+        ("testsplit", "sst2/test.npz"),
+    ];
+    for (tag, rel) in matrix {
+        let root = fixture(&format!("matrix-{tag}"), 1);
+        let expected_sha = manifest_sha(&root, rel);
+        flip_byte(&root.join(rel));
+
+        let repo = Repo::open(&root, RepoPolicy::default())
+            .unwrap_or_else(|e| panic!("{rel}: dataset-scoped tamper must not be fatal: {e}"));
+        let snap = repo.snapshot();
+
+        // Only the tampered dataset is excluded; the other keeps serving.
+        assert_eq!(snap.excluded_datasets, vec!["sst2".to_string()], "{rel}");
+        assert!(snap.registry.dataset("sst2").is_none(), "{rel}: sst2 must not serve");
+        assert!(snap.registry.dataset("cola").is_some(), "{rel}: cola must keep serving");
+
+        // The refusal names the offending path and both digests.
+        let hit = snap
+            .failures
+            .iter()
+            .find(|f| f.path == rel)
+            .unwrap_or_else(|| panic!("{rel}: no failure recorded: {:?}", snap.failures));
+        assert!(
+            hit.error.contains(&format!("digest mismatch for {rel}")),
+            "{rel}: {}",
+            hit.error
+        );
+        assert!(hit.error.contains(&expected_sha), "{rel}: expected digest missing: {}", hit.error);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+#[test]
+fn missing_file_is_refused_like_tampered() {
+    let root = fixture("missing", 1);
+    std::fs::remove_file(root.join("sst2/bert/weights.npz")).unwrap();
+    let repo = Repo::open(&root, RepoPolicy::default()).unwrap();
+    let snap = repo.snapshot();
+    assert_eq!(snap.excluded_datasets, vec!["sst2".to_string()]);
+    let hit = snap.failures.iter().find(|f| f.path == "sst2/bert/weights.npz").unwrap();
+    assert!(hit.error.contains("missing or unreadable"), "{}", hit.error);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn shared_root_file_tamper_is_fatal() {
+    let root = fixture("sharedroot", 1);
+    flip_byte(&root.join("vocab.json"));
+    let err = Repo::open(&root, RepoPolicy::default()).unwrap_err();
+    assert!(err.contains("vocab.json"), "must name the shared file: {err}");
+    assert!(err.contains("digest mismatch"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn manifest_tamper_is_always_fatal() {
+    // A digest rewritten after signing: the signature no longer covers the
+    // files map — tampering, not a legacy bundle.
+    let root = fixture("manifest-digest", 1);
+    let text = std::fs::read_to_string(root.join("index.json")).unwrap();
+    let sha = manifest_sha(&root, "sst2/bert/weights.npz");
+    let forged = text.replacen(&sha, &format!("{}{}", &"0".repeat(63), "1"), 1);
+    assert_ne!(text, forged);
+    std::fs::write(root.join("index.json"), forged).unwrap();
+    let err = Repo::open(&root, RepoPolicy::default()).unwrap_err();
+    assert!(err.contains("signature"), "digest rewrite must break the signature: {err}");
+
+    // A manifest that no longer parses reads as tampering too.
+    let root2 = fixture("manifest-parse", 1);
+    std::fs::write(root2.join("index.json"), "{ not json").unwrap();
+    let err2 = Repo::open(&root2, RepoPolicy::default()).unwrap_err();
+    assert!(err2.contains("index.json"), "{err2}");
+
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&root2);
+}
+
+#[test]
+fn require_signed_demands_signature_key_match_and_coverage() {
+    // Unsigned bundle: open() works relaxed, refuses under require_signed.
+    let root = tmpdir("unsigned");
+    std::fs::write(root.join("vocab.json"), "{}").unwrap();
+    write_variant(&root, "sst2", "bert");
+    let m = Manifest::build(&root, 1).unwrap();
+    m.write(&root).unwrap(); // digests, no signature
+    assert!(Repo::open(&root, RepoPolicy::default()).is_ok());
+    let err = Repo::open(&root, RepoPolicy { require_signed: true, ..Default::default() })
+        .unwrap_err();
+    assert!(err.contains("require-signed"), "{err}");
+
+    // Signed by an *untrusted* key: the embedded key must not self-certify.
+    let root2 = fixture("wrongkey", 1);
+    let other = [7u8; 32];
+    let mut m2 = Manifest::build(&root2, 1).unwrap();
+    m2.sign_with(&other).unwrap();
+    m2.write(&root2).unwrap();
+    let err2 = Repo::open(&root2, RepoPolicy { require_signed: true, ..Default::default() })
+        .unwrap_err();
+    assert!(err2.contains("trusted key"), "{err2}");
+
+    // Valid signature but an unlisted extra on disk: coverage gap refused.
+    let root3 = fixture("coverage", 1);
+    std::fs::write(root3.join("sst2/smuggled.bin"), "extra").unwrap();
+    let err3 = Repo::open(&root3, RepoPolicy { require_signed: true, ..Default::default() })
+        .unwrap_err();
+    assert!(err3.contains("smuggled.bin"), "{err3}");
+    assert!(err3.contains("not covered"), "{err3}");
+
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&root2);
+    let _ = std::fs::remove_dir_all(&root3);
+}
+
+#[test]
+fn failed_reload_keeps_the_serving_snapshot() {
+    let root = fixture("reload", 1);
+    let repo = Repo::open(&root, RepoPolicy::default()).unwrap();
+    assert_eq!(repo.snapshot().generation, 1);
+
+    // Fatal tamper (shared root file, manifest digest now stale): reload
+    // errors, snapshot unchanged. The signature itself still verifies —
+    // it covers the files map, not the disk — so only the digest check
+    // can fail here.
+    let vocab = std::fs::read(root.join("vocab.json")).unwrap();
+    flip_byte(&root.join("vocab.json"));
+    repo.reload().unwrap_err();
+    let snap = repo.snapshot();
+    assert_eq!(snap.generation, 1, "failed reload must not swap");
+    assert_eq!(snap.revision, 1);
+    assert!(snap.registry.dataset("sst2").is_some());
+
+    // Dataset-scoped tamper: reload succeeds, tampered dataset excluded,
+    // the rest carried forward, generation and revision bumped.
+    std::fs::write(root.join("vocab.json"), &vocab).unwrap();
+    flip_byte(&root.join("sst2/bert/weights.npz"));
+    sign_keeping_stale_digest(&root, 3, "sst2/bert/weights.npz");
+    let snap3 = repo.reload().unwrap();
+    // The swap counter is monotonic; a failed attempt may burn a number,
+    // so only the strict increase is contractual.
+    assert!(snap3.generation > 1, "generation must advance: {}", snap3.generation);
+    assert_eq!(snap3.revision, 3);
+    assert_eq!(snap3.excluded_datasets, vec!["sst2".to_string()]);
+    assert!(snap3.registry.dataset("cola").is_some());
+    assert!(repo.snapshot().registry.dataset("sst2").is_none());
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Re-sign the root at `revision`, but keep the *previous* manifest's
+/// digest for `stale_rel` — simulating a publisher whose bundle was
+/// corrupted after digesting (the signature is honest, the file is not).
+fn sign_keeping_stale_digest(root: &Path, revision: u64, stale_rel: &str) {
+    let prev = Manifest::load(root).unwrap().unwrap();
+    let stale = prev.files.as_ref().unwrap()[stale_rel].clone();
+    let mut m = Manifest::build(root, revision).unwrap();
+    let files: &mut BTreeMap<_, _> = m.files.as_mut().unwrap();
+    files.insert(stale_rel.to_string(), stale);
+    m.sign_with(&SEED).unwrap();
+    m.write(root).unwrap();
+}
