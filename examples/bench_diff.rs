@@ -13,6 +13,11 @@
 //!   workers_sweep   speedup_vs_1w (coordinator throughput scaling)
 //!   adaptive        tokens_ratio_vs_fixed (deterministic given the
 //!                   committed artifacts — lower is better)
+//!   ragged          speedup_vs_padded (ragged vs padded execution of the
+//!                   same batch — higher is better), plus a hard floor:
+//!                   a schema-4 snapshot must show ≥ 1.3x on at least one
+//!                   threshold-0.6 mixed-demand batch (the tentpole
+//!                   acceptance ratio)
 //!
 //! `--absolute` additionally compares raw p50 seconds in the `serve`,
 //! `end_to_end` and `serve_sweep` sections — only meaningful when both
@@ -163,6 +168,49 @@ fn adaptive_ratios(root: &Json) -> Rows {
     out
 }
 
+/// ragged: speedup_vs_padded per (dataset, variant, threshold, batch).
+/// Higher is better — the ratio measures ghost work the ragged path
+/// eliminated on the identical batch.
+fn ragged_ratios(root: &Json) -> Rows {
+    let mut out = Rows::new();
+    for r in arr(root, "ragged") {
+        if let (Some(t), Some(b), Some(v)) =
+            (f(r, "threshold"), f(r, "batch"), f(r, "speedup_vs_padded"))
+        {
+            out.insert(
+                format!("ragged {}/{}@t{t:.2}b{}", s(r, "dataset"), s(r, "variant"), b as u64),
+                v,
+            );
+        }
+    }
+    out
+}
+
+/// The tentpole acceptance floor: a schema-4 snapshot must contain at
+/// least one threshold-0.6 ragged row at ≥ `floor` speedup over padded.
+/// Returns the number of gate failures (0 or 1); pre-schema-4 snapshots
+/// are exempt (the section did not exist yet).
+fn ragged_gate(root: &Json, floor: f64) -> usize {
+    if root.get("schema").and_then(Json::as_u64).unwrap_or(0) < 4 {
+        return 0;
+    }
+    let best = arr(root, "ragged")
+        .iter()
+        .filter(|r| f(r, "threshold").map(|t| (t - 0.6).abs() < 1e-6).unwrap_or(false))
+        .filter_map(|r| f(r, "speedup_vs_padded"))
+        .fold(f64::NEG_INFINITY, f64::max);
+    if best >= floor {
+        println!("  ✓ ragged gate: best t=0.60 speedup {best:.2}x >= {floor:.2}x");
+        0
+    } else if best.is_finite() {
+        println!("  ✗ ragged gate: best t=0.60 speedup {best:.2}x < {floor:.2}x");
+        1
+    } else {
+        println!("  ✗ ragged gate: schema-4 snapshot has no threshold-0.6 ragged rows");
+        1
+    }
+}
+
 /// Absolute p50 seconds of a section, keyed by the given identity fields.
 /// Lower is better.
 fn absolute_p50(root: &Json, section: &str, keys: &[&str]) -> Rows {
@@ -260,6 +308,9 @@ fn main() {
     regressions += compare(&workers_ratios(&old), &workers_ratios(&new), threshold, true);
     println!("\nadaptive (tokens processed vs fixed schedule, lower is better):");
     regressions += compare(&adaptive_ratios(&old), &adaptive_ratios(&new), threshold, false);
+    println!("\nragged (speedup vs padded execution, higher is better):");
+    regressions += compare(&ragged_ratios(&old), &ragged_ratios(&new), threshold, true);
+    regressions += ragged_gate(&new, 1.3);
 
     if absolute {
         println!("\nserve p50 (seconds, lower is better):");

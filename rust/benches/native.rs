@@ -25,9 +25,13 @@
 //!    and batch-1 latency: the dial `eval --calibrate-pareto` calibrates.
 //!    The tokens ratio vs the fixed schedule is deterministic, so
 //!    `bench_diff` can hold it;
-//! 6. **serve** — closed-loop p50/p99 through the in-process coordinator
+//! 6. **ragged** — padded vs ragged execution on the same mixed-demand
+//!    batch of committed examples (thresholds 0.6/0.8/0.95, batch 8/32,
+//!    power-default plus the seq-256 power-long bundle where present):
+//!    the speedup column is the acceptance ratio `perf-diff` gates;
+//! 7. **serve** — closed-loop p50/p99 through the in-process coordinator
 //!    client on the native backend;
-//! 7. **workers sweep** — closed-loop throughput at 1/2/4 coordinator
+//! 8. **workers sweep** — closed-loop throughput at 1/2/4 coordinator
 //!    workers, reported as speedup over 1 worker (the remaining snapshot
 //!    gap ROADMAP names).
 //!
@@ -68,6 +72,7 @@ struct Snapshot {
     dispatch: Vec<Json>,
     end_to_end: Vec<Json>,
     adaptive: Vec<Json>,
+    ragged: Vec<Json>,
     serve: Vec<Json>,
     workers_sweep: Vec<Json>,
 }
@@ -96,7 +101,7 @@ impl Snapshot {
             .unwrap_or(Json::Arr(Vec::new()));
         let root = jobj(vec![
             ("bench", jstr("native")),
-            ("schema", Json::UInt(3)),
+            ("schema", Json::UInt(4)),
             ("isa", jstr(active_isa())),
             ("simd_active", Json::Bool(simd_active())),
             ("measure_iters", Json::UInt(cfg.measure_iters as u64)),
@@ -106,6 +111,7 @@ impl Snapshot {
             ("dispatch", Json::Arr(self.dispatch)),
             ("end_to_end", Json::Arr(self.end_to_end)),
             ("adaptive", Json::Arr(self.adaptive)),
+            ("ragged", Json::Arr(self.ragged)),
             ("serve", Json::Arr(self.serve)),
             ("workers_sweep", Json::Arr(self.workers_sweep)),
             ("serve_sweep", prior_sweep),
@@ -148,6 +154,7 @@ fn main() {
         }
         bench_end_to_end(ds_name, ds, &cfg, &mut snap);
         bench_adaptive(ds_name, ds, &cfg, &mut snap);
+        bench_ragged(ds_name, ds, &cfg, &mut snap);
     }
     bench_serve(&registry, &cfg, &mut snap);
     bench_workers_sweep(&registry, &cfg, &mut snap);
@@ -351,6 +358,7 @@ fn bench_kernels(
                 mc: 16,
                 precision,
                 min_parallel_flops: 0,
+                ..KernelConfig::default()
             });
             let t = time_fn(cfg, || {
                 match precision {
@@ -840,6 +848,98 @@ fn bench_adaptive(
         ]));
     }
     table.print();
+}
+
+/// Padded vs ragged execution on the same mixed-demand batch: the first
+/// `batch` committed test examples (their natural length mix is the
+/// demand mix), two engines differing only in the `ragged` flag, timed on
+/// identical inputs at each threshold. The `speedup_vs_padded` column is
+/// the acceptance ratio `perf-diff` gates (≥ 1.3x at threshold 0.6):
+/// ragged compute is Σ kept tokens, padded compute is batch × the widest
+/// example's demand, so the gap *is* the eliminated ghost work. Covers
+/// power-default on every dataset plus the seq-256 power-long bundle.
+fn bench_ragged(
+    ds_name: &str,
+    ds: &powerbert::runtime::DatasetArtifacts,
+    cfg: &BenchConfig,
+    snap: &mut Snapshot,
+) {
+    let split = match TestSplit::load(&ds.test_npz()) {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    for vname in ["power-default", "power-long"] {
+        let Some(meta) = ds.variant(vname) else { continue };
+        let engine_with = |ragged: bool| {
+            Engine::with_backend_config(
+                BackendKind::Native,
+                KernelConfig::default().with_ragged(ragged),
+            )
+        };
+        let (mut ragged_eng, mut padded_eng) = match (engine_with(true), engine_with(false)) {
+            (Ok(r), Ok(p)) => (r, p),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("SKIP ragged bench: {e:#}");
+                return;
+            }
+        };
+        let (ragged, padded) = match (ragged_eng.load(meta), padded_eng.load(meta)) {
+            (Ok(r), Ok(p)) => (r, p),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("  ({ds_name}/{vname} native load failed: {e:#})");
+                continue;
+            }
+        };
+        if !ragged.supports_adaptive() {
+            continue;
+        }
+        let seq = split.seq_len;
+        let mut table = Table::new(
+            &format!("native ragged — {ds_name}/{vname}: padded vs ragged (seq {seq}, f32)"),
+            &["threshold", "batch", "padded p50", "ragged p50", "speedup"],
+        );
+        for t in [0.6f32, 0.8, 0.95] {
+            for batch in [8usize, 32] {
+                let n = batch.min(split.n);
+                if n == 0 {
+                    continue;
+                }
+                let toks = &split.tokens[..n * seq];
+                let segs = &split.segments[..n * seq];
+                // Same committed rows, same threshold — only the
+                // execution shape differs.
+                let pad = time_fn(cfg, || {
+                    let r = padded.infer_adaptive_at(toks, segs, n, seq, Some(t));
+                    std::hint::black_box(r.ok());
+                });
+                let rag = time_fn(cfg, || {
+                    let r = ragged.infer_adaptive_at(toks, segs, n, seq, Some(t));
+                    std::hint::black_box(r.ok());
+                });
+                let speedup = pad.p50 / rag.p50.max(1e-12);
+                table.row(vec![
+                    format!("{t:.2}"),
+                    n.to_string(),
+                    fmt_time(pad.p50),
+                    fmt_time(rag.p50),
+                    format!("{speedup:.2}x"),
+                ]);
+                snap.ragged.push(jobj(vec![
+                    ("dataset", jstr(ds_name)),
+                    ("variant", jstr(vname)),
+                    ("precision", jstr("f32")),
+                    ("isa", jstr(active_isa())),
+                    ("threshold", Json::Num(t as f64)),
+                    ("batch", Json::UInt(n as u64)),
+                    ("seq", Json::UInt(split.seq_len as u64)),
+                    ("padded_p50_s", Json::Num(pad.p50)),
+                    ("ragged_p50_s", Json::Num(rag.p50)),
+                    ("speedup_vs_padded", Json::Num(speedup)),
+                ]));
+            }
+        }
+        table.print();
+    }
 }
 
 /// Closed-loop serve latency through the in-process coordinator client:

@@ -183,6 +183,10 @@ pub struct ServerInfo {
     /// Instruction set the server's kernels dispatch to ("scalar" /
     /// "avx2+fma"); empty when the server predates the field.
     pub isa: String,
+    /// Whether native workers execute the ragged per-example path (compute
+    /// = Σ kept tokens rather than the padded batch-max rectangle); false
+    /// when the server predates the field or runs `--ragged off`.
+    pub ragged: bool,
     pub datasets: Vec<String>,
     pub variants: BTreeMap<String, Vec<VariantInfo>>,
     pub seq_buckets: Vec<usize>,
@@ -230,6 +234,7 @@ impl ServerInfo {
             backend: j.get("backend").and_then(Json::as_str).unwrap_or("").to_string(),
             precision: j.get("precision").and_then(Json::as_str).unwrap_or("").to_string(),
             isa: j.get("isa").and_then(Json::as_str).unwrap_or("").to_string(),
+            ragged: j.get("ragged").and_then(Json::as_bool).unwrap_or(false),
             datasets,
             variants,
             seq_buckets: j
@@ -717,7 +722,7 @@ mod tests {
                 "variants":{"sst2":[{"variant":"bert","kind":"bert","metric":"accuracy",
                   "dev_metric":0.91,"seq_len":64,"num_classes":2,
                   "aggregate_word_vectors":768}]},
-                "precision":"int8","isa":"avx2+fma","adaptive":true,
+                "precision":"int8","isa":"avx2+fma","adaptive":true,"ragged":true,
                 "seq_buckets":[16,32],"max_connections":256}"#,
         )
         .unwrap();
@@ -729,6 +734,7 @@ mod tests {
         assert_eq!(info.precision, "int8");
         assert_eq!(info.isa, "avx2+fma");
         assert!(info.adaptive);
+        assert!(info.ragged);
         let vs = &info.variants["sst2"];
         assert_eq!(vs[0].variant, "bert");
         assert_eq!(vs[0].dev_metric, Some(0.91));

@@ -35,9 +35,12 @@ impl Default for BatchPolicy {
 /// What a batch queue is keyed by: one model variant at one seq bucket and
 /// one adaptive operating point. Jobs under different keys never share a
 /// batch, so a flushed batch is homogeneous in the executable it needs,
-/// its row length, *and* its retention threshold — under the batch-max
-/// execution rule a `fast` request co-batched with a `full` one would pay
-/// full compute, so they are kept apart instead.
+/// its row length, *and* its retention threshold — the threshold is a
+/// batch-level execution parameter (one retention decision per extract
+/// layer), so a `fast` request co-batched with a `full` one would execute
+/// at the full operating point; they are kept apart instead. Under ragged
+/// execution a homogeneous fast-tier batch then really does pay only its
+/// own Σ kept word-vectors.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BatchKey {
     /// "dataset/variant"
@@ -125,12 +128,22 @@ pub struct Batcher {
     /// Per-variant max batch override (largest compiled bucket) — shared by
     /// every seq bucket of the variant.
     bucket_caps: HashMap<String, usize>,
+    /// Calibrated kept-token cost ratio per (variant, threshold-bits):
+    /// the fraction of full-schedule word-vectors a batch at that
+    /// operating point actually processes (`pareto.json` tokens ratios).
+    cost_ratios: HashMap<String, HashMap<Option<u32>, f64>>,
     pending: usize,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
-        Batcher { policy, queues: HashMap::new(), bucket_caps: HashMap::new(), pending: 0 }
+        Batcher {
+            policy,
+            queues: HashMap::new(),
+            bucket_caps: HashMap::new(),
+            cost_ratios: HashMap::new(),
+            pending: 0,
+        }
     }
 
     /// Register the largest compiled bucket for a variant key, capping its
@@ -139,17 +152,42 @@ impl Batcher {
         self.bucket_caps.insert(key.to_string(), cap);
     }
 
+    /// Seed the calibrated kept-token cost ratio for one adaptive
+    /// operating point of a variant (from its `pareto.json`). Queues at
+    /// that threshold flush at a row capacity scaled by the inverse ratio:
+    /// batch cost is priced as predicted total kept tokens, not rows ×
+    /// seq, so under ragged execution a fast-tier batch fills to the same
+    /// predicted token cost a full-schedule batch would.
+    pub fn set_cost_ratio(&mut self, key: &str, threshold: Option<f32>, ratio: f64) {
+        self.cost_ratios
+            .entry(key.to_string())
+            .or_default()
+            .insert(threshold.map(f32::to_bits), ratio);
+    }
+
     pub fn pending(&self) -> usize {
         self.pending
     }
 
     fn max_batch_for(&self, key: &BatchKey) -> usize {
-        self.bucket_caps
+        let cap = self
+            .bucket_caps
             .get(&key.variant)
             .copied()
-            .unwrap_or(self.policy.max_batch)
-            .min(self.policy.max_batch)
-            .max(1)
+            .unwrap_or(self.policy.max_batch);
+        // Token-cost capacity: a queue whose operating point keeps only
+        // `ratio` of the word-vectors can take `1/ratio` times the rows
+        // for the same predicted kept-token cost. The policy cap stays a
+        // hard row ceiling (arena slabs are planned per batch row).
+        let ratio = self
+            .cost_ratios
+            .get(&key.variant)
+            .and_then(|m| m.get(&key.threshold))
+            .copied()
+            .unwrap_or(1.0)
+            .clamp(f64::MIN_POSITIVE, 1.0);
+        let scaled = ((cap as f64 / ratio) as usize).max(cap);
+        scaled.min(self.policy.max_batch).max(1)
     }
 
     /// Add a job; returns a batch immediately if the queue reached capacity.
@@ -376,6 +414,38 @@ mod tests {
         let full = b.push(old.clone(), job(3), now).expect("old-generation queue full");
         assert_eq!(full.key, old);
         assert_eq!(b.pending(), 1, "new-generation job still queued");
+    }
+
+    #[test]
+    fn cost_ratio_scales_fast_tier_capacity_not_fixed_schedule() {
+        // Fast tier keeps 25% of the word-vectors: four times the rows fit
+        // the same predicted kept-token cost, so the fast queue flushes at
+        // 8 while the fixed-schedule queue still flushes at the bucket cap.
+        let mut b = Batcher::new(BatchPolicy { max_batch: 32, max_wait: Duration::from_secs(10) });
+        b.set_bucket_cap("k", 2);
+        b.set_cost_ratio("k", Some(0.6), 0.25);
+        let now = Instant::now();
+        let fixed = BatchKey::with_threshold("k", 16, None);
+        let fast = BatchKey::with_threshold("k", 16, Some(0.6));
+        assert!(b.push(fixed.clone(), job(1), now).is_none());
+        let full = b.push(fixed, job(2), now).expect("fixed flushes at bucket cap");
+        assert_eq!(full.len(), 2);
+        for i in 0..7 {
+            assert!(b.push(fast.clone(), job(10 + i), now).is_none(), "job {i} queued");
+        }
+        let batch = b.push(fast, job(17), now).expect("fast flushes at scaled cap");
+        assert_eq!(batch.len(), 8);
+        // The policy max stays a hard row ceiling even at extreme ratios.
+        b.set_cost_ratio("k", Some(0.4), 0.001);
+        let tiny = BatchKey::with_threshold("k", 16, Some(0.4));
+        let mut flushed = None;
+        for i in 0..32 {
+            flushed = b.push(tiny.clone(), job(100 + i), now);
+            if flushed.is_some() {
+                break;
+            }
+        }
+        assert_eq!(flushed.expect("policy cap flush").len(), 32);
     }
 
     #[test]

@@ -126,6 +126,27 @@ pub struct WorkerStats {
     /// Word-vectors this worker avoided processing thanks to adaptive
     /// retention (fixed-schedule cost minus measured cost, summed).
     pub tokens_saved: u64,
+    /// Word-vector·layer counts the worker's examples themselves demanded
+    /// (each at its own adaptive width) — the FLOP-proxy denominator of
+    /// [`WorkerStats::eliminated_waste_ratio`].
+    pub tokens_kept: u64,
+    /// Ghost rows a rectangular batch-max execution adds on top of
+    /// `tokens_kept`: the waste ragged execution eliminates (or the
+    /// padded oracle incurs).
+    pub tokens_ghost: u64,
+}
+
+impl WorkerStats {
+    /// Ghost-token FLOPs per kept-token FLOP (token counts proxy FLOPs):
+    /// 0.0 means compute equals tokens kept; under the padded oracle with
+    /// adaptive thresholds it reports the batch-max overhead instead.
+    pub fn eliminated_waste_ratio(&self) -> f64 {
+        if self.tokens_kept == 0 {
+            0.0
+        } else {
+            self.tokens_ghost as f64 / self.tokens_kept as f64
+        }
+    }
 }
 
 /// Process-wide metrics hub.
@@ -199,6 +220,8 @@ impl MetricsHub {
         if !mem.isa.is_empty() {
             s.isa = mem.isa;
         }
+        s.tokens_kept = s.tokens_kept.max(mem.tokens_kept);
+        s.tokens_ghost = s.tokens_ghost.max(mem.tokens_ghost);
     }
 
     /// Record one request's adaptive-compute outcome: the operating point
@@ -321,6 +344,12 @@ impl MetricsHub {
                 m.insert("precision".to_string(), Json::Str(w.precision.to_string()));
                 m.insert("isa".to_string(), Json::Str(w.isa.to_string()));
                 m.insert("tokens_saved".to_string(), Json::UInt(w.tokens_saved));
+                m.insert("tokens_kept".to_string(), Json::UInt(w.tokens_kept));
+                m.insert("tokens_ghost".to_string(), Json::UInt(w.tokens_ghost));
+                m.insert(
+                    "eliminated_waste_ratio".to_string(),
+                    Json::Num(w.eliminated_waste_ratio()),
+                );
                 Json::Obj(m)
             })
             .collect();
@@ -393,6 +422,15 @@ impl MetricsHub {
                         w.tokens_saved
                     ));
                 }
+                if w.tokens_kept > 0 {
+                    out.push_str(&format!(
+                        "  worker {i} ragged: {} kept / {} ghost word-vectors \
+                         (eliminated waste {:.3}x)\n",
+                        w.tokens_kept,
+                        w.tokens_ghost,
+                        w.eliminated_waste_ratio(),
+                    ));
+                }
             }
         }
         out
@@ -462,6 +500,8 @@ mod tests {
                 pool_jobs: 10,
                 precision: "f32",
                 isa: "scalar",
+                tokens_kept: 100,
+                tokens_ghost: 20,
             },
         );
         // A smaller later snapshot must not shrink the peak; pool jobs
@@ -475,6 +515,8 @@ mod tests {
                 pool_jobs: 25,
                 precision: "f32",
                 isa: "scalar",
+                tokens_kept: 300,
+                tokens_ghost: 60,
             },
         );
         let w = h.worker_snapshot();
@@ -484,6 +526,9 @@ mod tests {
         assert_eq!(w[0].pool_jobs, 25);
         assert_eq!(w[0].precision, "f32");
         assert_eq!(w[0].isa, "scalar");
+        assert_eq!(w[0].tokens_kept, 300);
+        assert_eq!(w[0].tokens_ghost, 60);
+        assert!((w[0].eliminated_waste_ratio() - 0.2).abs() < 1e-9);
         // Surfaced both in the human report and the structured stats.
         h.record_worker(0, 1, 10);
         assert!(h.report().contains("pool 4 lane(s)"));
@@ -491,6 +536,10 @@ mod tests {
         assert!(json.contains("arena_peak_bytes"), "stats json lacks arena gauge: {json}");
         assert!(json.contains("precision"), "stats json lacks precision: {json}");
         assert!(json.contains("isa"), "stats json lacks isa: {json}");
+        assert!(
+            json.contains("eliminated_waste_ratio"),
+            "stats json lacks waste ratio: {json}"
+        );
     }
 
     #[test]

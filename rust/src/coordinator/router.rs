@@ -124,6 +124,46 @@ impl Router {
         meta.aggregate_word_vectors() as f64 * seq_ratio * self.prior_us_per_word_vector
     }
 
+    /// [`latency_estimate_cell_us`](Self::latency_estimate_cell_us) for a
+    /// batch executing at an adaptive `threshold`. The batcher groups by
+    /// threshold (`BatchKey`), but measured cell times are keyed by
+    /// `(batch, seq)` only — dominated by full-schedule traffic, they
+    /// over-estimate a fast-tier batch. This scales the cell estimate by
+    /// the variant's calibrated tokens ratio at the threshold
+    /// ([`ParetoTable::tokens_ratio_at`](crate::runtime::adaptive::ParetoTable::tokens_ratio_at)
+    /// — compute ∝ word-vectors processed, and under ragged execution the
+    /// batch really does pay Σ kept rather than the rectangle), so SLA
+    /// admission doesn't turn away fast-tier work it had room for. An
+    /// uncalibrated variant or an inactive threshold prices at the plain
+    /// cell estimate.
+    pub fn latency_estimate_cell_at_us(
+        &self,
+        meta: &VariantMeta,
+        batch: usize,
+        seq: usize,
+        threshold: Option<f32>,
+    ) -> f64 {
+        let base = self.latency_estimate_cell_us(meta, batch, seq);
+        let ratio = threshold
+            .filter(|&t| t > 0.0 && t < 1.0)
+            .and_then(|t| meta.pareto.as_ref()?.tokens_ratio_at(t as f64))
+            .unwrap_or(1.0);
+        base * ratio
+    }
+
+    /// [`latency_estimate_us`](Self::latency_estimate_us) priced at the
+    /// operating point the request's `compute` SLA would resolve to *on
+    /// this variant*. This is what `select` compares against a latency
+    /// budget: a `fast`-tier request really will execute at its calibrated
+    /// threshold (and, under ragged execution, really will pay only Σ kept
+    /// word-vectors), so admission must not turn it away on the
+    /// full-schedule price.
+    pub fn latency_estimate_sla_us(&self, meta: &VariantMeta, sla: &Sla) -> f64 {
+        let (threshold, _) = Router::operating_point(meta, sla.compute.as_ref());
+        let bucket = meta.batch_sizes.iter().max().copied().unwrap_or(1);
+        self.latency_estimate_cell_at_us(meta, bucket, meta.seq_len, threshold)
+    }
+
     /// Resolve a request's `compute` SLA to an adaptive operating point on
     /// the chosen variant: `(threshold, echo)`, where `threshold = None`
     /// executes the fixed schedule and `echo` is the resolved label sent
@@ -236,14 +276,14 @@ impl Router {
                 });
                 cands
                     .iter()
-                    .find(|m| self.latency_estimate_us(m) <= budget_ms * 1000.0)
+                    .find(|m| self.latency_estimate_sla_us(m, sla) <= budget_ms * 1000.0)
                     .copied()
                     .unwrap_or_else(|| {
                         *cands
                             .iter()
                             .min_by(|a, b| {
-                                self.latency_estimate_us(a)
-                                    .partial_cmp(&self.latency_estimate_us(b))
+                                self.latency_estimate_sla_us(a, sla)
+                                    .partial_cmp(&self.latency_estimate_sla_us(b, sla))
                                     .unwrap()
                             })
                             .unwrap()
@@ -261,8 +301,8 @@ impl Router {
                         .unwrap()
                 } else {
                     ok.sort_by(|a, b| {
-                        self.latency_estimate_us(a)
-                            .partial_cmp(&self.latency_estimate_us(b))
+                        self.latency_estimate_sla_us(a, sla)
+                            .partial_cmp(&self.latency_estimate_sla_us(b, sla))
                             .unwrap()
                     });
                     ok[0]
@@ -278,8 +318,8 @@ impl Router {
                     ok = cands.clone();
                 }
                 ok.sort_by(|a, b| {
-                    self.latency_estimate_us(a)
-                        .partial_cmp(&self.latency_estimate_us(b))
+                    self.latency_estimate_sla_us(a, sla)
+                        .partial_cmp(&self.latency_estimate_sla_us(b, sla))
                         .unwrap()
                 });
                 ok[0]
@@ -418,6 +458,73 @@ mod tests {
         // The ordering between variants is preserved under any prior.
         let cheap = meta("power-l0.001", "power", 0.85, 24);
         assert!(r.latency_estimate_us(&cheap) < native_est);
+    }
+
+    #[test]
+    fn threshold_scales_cell_estimate_by_calibrated_tokens_ratio() {
+        use crate::runtime::adaptive::{ParetoPoint, ParetoTable};
+        let hub = Arc::new(MetricsHub::new());
+        let r = Router::new(Policy::BestUnderLatency, hub.clone());
+        let mut m = meta("power-default", "power", 0.895, 104);
+        m.pareto = Some(ParetoTable::new(vec![
+            ParetoPoint { threshold: 1.0, metric: 0.72, mean_tokens: 104.0, est_latency_us: 200.0 },
+            ParetoPoint { threshold: 0.95, metric: 0.72, mean_tokens: 80.0, est_latency_us: 160.0 },
+            ParetoPoint { threshold: 0.6, metric: 0.64, mean_tokens: 30.0, est_latency_us: 80.0 },
+        ]));
+        let full = r.latency_estimate_cell_at_us(&m, 8, 32, None);
+        assert!((full - r.latency_estimate_cell_us(&m, 8, 32)).abs() < 1e-9);
+        // A fast-tier batch prices at its calibrated tokens fraction, not
+        // at the full-schedule rectangle.
+        let fast = r.latency_estimate_cell_at_us(&m, 8, 32, Some(0.6));
+        assert!((fast - full * 30.0 / 104.0).abs() < 1e-9, "{fast} vs {full}");
+        let bal = r.latency_estimate_cell_at_us(&m, 8, 32, Some(0.95));
+        assert!(fast < bal && bal < full);
+        // Measurements of the cell still anchor the base estimate.
+        hub.record_batch("sst2/power-default", (8, 32), 8, 8 * 10, 1000);
+        let fast_measured = r.latency_estimate_cell_at_us(&m, 8, 32, Some(0.6));
+        assert!((fast_measured - 1000.0 * 30.0 / 104.0).abs() < 1e-9);
+        // Uncalibrated variants and inactive thresholds are unscaled.
+        m.pareto = None;
+        assert!(
+            (r.latency_estimate_cell_at_us(&m, 8, 32, Some(0.6))
+                - r.latency_estimate_cell_us(&m, 8, 32))
+            .abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn fast_tier_sla_admits_variant_rejected_at_full_schedule() {
+        use crate::runtime::adaptive::{ParetoPoint, ParetoTable};
+        let mut r = Router::new(Policy::BestUnderLatency, Arc::new(MetricsHub::new()));
+        r.set_latency_prior(
+            crate::runtime::BackendKind::Pjrt.latency_prior_us_per_word_vector(),
+        );
+        let mut bert = meta("bert", "bert", 0.90, 192);
+        bert.pareto = Some(ParetoTable::new(vec![
+            ParetoPoint {
+                threshold: 1.0,
+                metric: 0.90,
+                mean_tokens: 192.0,
+                est_latency_us: 4800.0,
+            },
+            ParetoPoint { threshold: 0.6, metric: 0.89, mean_tokens: 30.0, est_latency_us: 750.0 },
+        ]));
+        r.add_variant(bert);
+        r.add_variant(meta("power-l0.001", "power", 0.85, 24));
+        // Full schedule: 192 word-vectors x 25us = 4.8ms, over the 1ms
+        // budget — a schedule-priced request settles for the cheap variant.
+        let sla = Sla { max_latency_ms: Some(1.0), ..Default::default() };
+        assert_eq!(r.route("sst2", &sla).unwrap().variant, "power-l0.001");
+        // The same budget at the fast tier resolves bert to threshold 0.6
+        // (30/192 of the tokens -> 750us), which fits: admission now prices
+        // the operating point the batch will actually execute at.
+        let sla = Sla {
+            max_latency_ms: Some(1.0),
+            compute: Some(Compute::Fast),
+            ..Default::default()
+        };
+        assert_eq!(r.route("sst2", &sla).unwrap().variant, "bert");
     }
 
     #[test]

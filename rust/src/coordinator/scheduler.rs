@@ -478,15 +478,33 @@ impl Coordinator {
         // Front thread: seq-bucketed dynamic batcher + dispatch.
         let batch_policy = cfg.batch.clone();
         let mut bucket_caps: Vec<(String, usize)> = Vec::new();
+        // Calibrated kept-token cost ratios per (variant, threshold), from
+        // each variant's pareto table: named SLA tiers resolve to exactly
+        // these thresholds, so the batcher can price those queues as
+        // predicted total kept tokens instead of rows × seq.
+        let mut cost_ratios: Vec<(String, f32, f64)> = Vec::new();
         for (dsname, ds) in &registry.datasets {
             for meta in ds.variants.values() {
+                let key = format!("{}/{}", dsname, meta.variant);
                 let cap = meta.batch_sizes.iter().max().copied().unwrap_or(1);
-                bucket_caps.push((format!("{}/{}", dsname, meta.variant), cap));
+                bucket_caps.push((key.clone(), cap));
+                if let Some(pareto) = &meta.pareto {
+                    for p in &pareto.points {
+                        if p.threshold <= 0.0 || p.threshold >= 1.0 {
+                            continue;
+                        }
+                        if let Some(r) = pareto.tokens_ratio_at(p.threshold) {
+                            cost_ratios.push((key.clone(), p.threshold as f32, r));
+                        }
+                    }
+                }
             }
         }
         let front = std::thread::Builder::new()
             .name("pb-front".into())
-            .spawn(move || front_loop(submit_rx, exec_txs, affinity, batch_policy, bucket_caps))
+            .spawn(move || {
+                front_loop(submit_rx, exec_txs, affinity, batch_policy, bucket_caps, cost_ratios)
+            })
             .map_err(|e| e.to_string())?;
 
         // Admin thread: executes reload/add-variant commands one at a time
@@ -602,10 +620,14 @@ fn front_loop(
     mut affinity: Affinity,
     policy: BatchPolicy,
     bucket_caps: Vec<(String, usize)>,
+    cost_ratios: Vec<(String, f32, f64)>,
 ) {
     let mut batcher = Batcher::new(policy);
     for (k, cap) in bucket_caps {
         batcher.set_bucket_cap(&k, cap);
+    }
+    for (k, threshold, ratio) in cost_ratios {
+        batcher.set_cost_ratio(&k, Some(threshold), ratio);
     }
     // A dead worker (exited thread, e.g. PJRT init failure) must not wedge
     // the pool: its variants are evicted from the affinity map and re-pinned

@@ -572,6 +572,10 @@ fn hello_payload(client: &Client, info: &ConnInfo) -> Json {
         "isa".to_string(),
         Json::Str(crate::runtime::kernels::active_isa().to_string()),
     );
+    // Execution-shape capability: whether native workers run the ragged
+    // per-example path (compute = Σ kept tokens) or the padded batch-max
+    // oracle (`--ragged off`).
+    m.insert("ragged".to_string(), Json::Bool(client.kernel().ragged));
     m.insert("datasets".to_string(), Json::Arr(datasets));
     m.insert("variants".to_string(), Json::Obj(variants));
     m.insert(

@@ -40,6 +40,7 @@ fn main() {
     .opt("kernel-kc", None, "serve/eval: native kernel depth-block size (default $POWERBERT_KERNEL_KC or 256)")
     .opt("kernel-mc", None, "serve/eval: native kernel row-block size (default $POWERBERT_KERNEL_MC or 64)")
     .opt("precision", None, "serve/eval: native weight precision (f32 | int8; default $POWERBERT_KERNEL_PRECISION or f32)")
+    .opt("ragged", None, "serve/eval: ragged per-example execution (on = compute \u{3a3} kept tokens | off = padded batch-max oracle; default $POWERBERT_KERNEL_RAGGED or on)")
     .opt("workers", Some("1"), "serve: executor pool size (one backend instance each)")
     .opt("seq-buckets", None, "serve: comma-separated seq buckets for length-aware batching (e.g. 16,32,64)")
     .opt("max-connections", None, "serve: concurrent connection cap (default 256)")
@@ -106,6 +107,13 @@ fn parse_kernel(parsed: &powerbert::util::cli::Parsed) -> Result<KernelConfig, S
     if let Some(raw) = parsed.get("precision") {
         k.precision = Precision::parse(raw)
             .ok_or_else(|| format!("--precision: expected f32|int8, got {raw:?}"))?;
+    }
+    if let Some(raw) = parsed.get("ragged") {
+        k.ragged = match raw.to_ascii_lowercase().as_str() {
+            "on" | "1" | "true" | "yes" => true,
+            "off" | "0" | "false" | "no" => false,
+            _ => return Err(format!("--ragged: expected on|off, got {raw:?}")),
+        };
     }
     Ok(k)
 }

@@ -10,12 +10,14 @@
 //!   `AttentionMass { threshold }` lets each example demand the smallest
 //!   kept-set whose cumulative significance mass reaches `threshold` of
 //!   its row's total mass ([`demanded_k`]).
-//! * **Batch-max execution rule** — the batch executes at the *maximum*
-//!   demanded k across its examples, clamped to the compiled schedule as
-//!   a ceiling. Uniform GEMM shapes are preserved (no ragged batches),
-//!   the CLS/PAD pinning invariant is enforced unchanged by
-//!   `keep_indices`, and — because adaptive widths never exceed the
-//!   schedule — every preplanned `ForwardArena` slab stays valid.
+//! * **Execution rule** — the default *ragged* path gives every example
+//!   exactly its demanded k (clamped to the compiled schedule as a
+//!   ceiling), so compute equals tokens kept; the padded oracle
+//!   (`--ragged off`) instead executes the whole batch at the *maximum*
+//!   demanded k, keeping the batch rectangular. Either way the CLS/PAD
+//!   pinning invariant is enforced unchanged by `keep_indices`, and —
+//!   because adaptive widths never exceed the schedule — every
+//!   preplanned `ForwardArena` slab stays valid.
 //! * [`ParetoTable`] — the machine-readable output of the offline
 //!   calibration pass (`eval --calibrate-pareto`): threshold → dev
 //!   metric, mean tokens processed, estimated latency. The coordinator
@@ -215,6 +217,37 @@ impl ParetoTable {
             a.mean_tokens.total_cmp(&b.mean_tokens).then(b.metric.total_cmp(&a.metric))
         })
     }
+
+    /// Calibrated fraction of full-schedule word-vectors a batch at
+    /// `threshold` actually processes: `mean_tokens(point) /
+    /// mean_tokens(full)`, in `(0, 1]`. The point is resolved
+    /// conservatively — the smallest calibrated threshold **at or above**
+    /// the requested one (more tokens than a lower point would predict),
+    /// falling back to the nearest below when the request exceeds every
+    /// calibrated point. `None` when the table lacks a usable full
+    /// reference, a threshold ≥ 1.0 is the full schedule by definition
+    /// (ratio 1.0). This is what seeds the router's per-threshold latency
+    /// prior so SLA routing doesn't price a fast-tier batch at
+    /// full-schedule cost.
+    pub fn tokens_ratio_at(&self, threshold: f64) -> Option<f64> {
+        let full = self.full().filter(|p| p.mean_tokens > 0.0)?;
+        if threshold >= 1.0 {
+            return Some(1.0);
+        }
+        // Points are sorted by descending threshold: the last one still at
+        // or above the request is the tightest conservative match.
+        let point = self
+            .points
+            .iter()
+            .filter(|p| p.threshold >= threshold)
+            .min_by(|a, b| a.threshold.total_cmp(&b.threshold))
+            .or_else(|| {
+                self.points
+                    .iter()
+                    .max_by(|a, b| a.threshold.total_cmp(&b.threshold))
+            })?;
+        Some((point.mean_tokens / full.mean_tokens).clamp(f64::MIN_POSITIVE, 1.0))
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +325,34 @@ mod tests {
         m.insert("points".to_string(), table.points_json());
         let back = ParetoTable::from_json(&Json::Obj(m)).unwrap();
         assert_eq!(back, table);
+    }
+
+    #[test]
+    fn tokens_ratio_scales_with_threshold() {
+        let table = ParetoTable::new(vec![
+            ParetoPoint { threshold: 1.0, metric: 0.72, mean_tokens: 104.0, est_latency_us: 200.0 },
+            ParetoPoint { threshold: 0.95, metric: 0.72, mean_tokens: 80.0, est_latency_us: 160.0 },
+            ParetoPoint { threshold: 0.6, metric: 0.64, mean_tokens: 30.0, est_latency_us: 80.0 },
+        ]);
+        // Exact calibrated points resolve to their own ratios.
+        assert!((table.tokens_ratio_at(0.95).unwrap() - 80.0 / 104.0).abs() < 1e-12);
+        assert!((table.tokens_ratio_at(0.6).unwrap() - 30.0 / 104.0).abs() < 1e-12);
+        // Between points: conservative — the tighter (higher) threshold's
+        // ratio, never the cheaper one below.
+        assert!((table.tokens_ratio_at(0.7).unwrap() - 80.0 / 104.0).abs() < 1e-12);
+        // At or above 1.0 is the full schedule.
+        assert_eq!(table.tokens_ratio_at(1.0), Some(1.0));
+        // Below every sub-full point: the cheapest calibrated point is
+        // still the conservative at-or-above match.
+        assert!((table.tokens_ratio_at(0.1).unwrap() - 30.0 / 104.0).abs() < 1e-12);
+        // No full reference -> no ratio.
+        let nofull = ParetoTable::new(vec![ParetoPoint {
+            threshold: 0.5,
+            metric: 0.6,
+            mean_tokens: 20.0,
+            est_latency_us: 50.0,
+        }]);
+        assert_eq!(nofull.tokens_ratio_at(0.5), None);
     }
 
     #[test]

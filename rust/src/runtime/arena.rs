@@ -37,7 +37,8 @@
 //!      + B·H·S (or S serial)     per-head significance partials
 //!      + L·S                     per-lane softmax rows
 //!      + 2·B·h + S               pooler tails + top-k scores
-//! i32s = B·S + S                 surviving positions + top-k order
+//! i32s = B·S + S + (B + 1)      surviving positions + top-k order
+//!                                + ragged row offsets
 //! peak_bytes = 4 · (f32s + i32s)
 //! ```
 //!
@@ -46,6 +47,20 @@
 //! execution chunk plans ~330 KiB; a BERT-base-scale export at (8, 128)
 //! plans tens of MiB — either way a constant per worker per bucket,
 //! instead of per-layer churn.
+//!
+//! # Sum-of-kept bound (ragged execution)
+//!
+//! The same plan serves both the padded and the **ragged** forward path.
+//! Under ragged execution (see `docs/ARCHITECTURE.md` § "Ragged
+//! execution") layer `j`'s live rows are `Σ_b kept_{b,j}` — each
+//! example's *own* width, compacted to a row-offset ragged layout in the
+//! `row_offsets` region. Every per-example width is clamped by the
+//! schedule (`kept_{b,j} ≤ min(n_{j-1}, max(retention[j], 1))`), so the
+//! sum-of-kept occupancy is bounded by `B · n_j` per layer and `B · P ·
+//! F` for the FFN region — the rectangular plan above is exactly the
+//! ragged path's worst case (realized when every example demands the
+//! full schedule width), and shrinks below it whenever adaptive
+//! thresholds let examples drop word-vectors early.
 //!
 //! The formula is precision-independent: under `--precision int8` the
 //! weight panels are quantized **at pack time** inside `PackedLinear`
@@ -93,6 +108,7 @@ pub struct ArenaPlan {
     // i32 regions, in carve order.
     positions: usize,
     topk_order: usize,
+    row_offsets: usize,
 }
 
 impl ArenaPlan {
@@ -149,6 +165,8 @@ impl ArenaPlan {
             topk_scores: seq,
             positions: rows,
             topk_order: seq,
+            // Ragged prefix-sum row offsets: batch + 1 entries.
+            row_offsets: batch + 1,
         }
     }
 
@@ -174,7 +192,7 @@ impl ArenaPlan {
 
     /// Total i32 elements in the slab.
     pub fn i32_len(&self) -> usize {
-        self.positions + self.topk_order
+        self.positions + self.topk_order + self.row_offsets
     }
 
     /// The bucket's steady-state footprint: what one warm arena holds
@@ -216,6 +234,10 @@ pub struct Regions<'a> {
     /// Original positions of surviving word-vectors `[B*S]`.
     pub positions: &'a mut [i32],
     pub topk_order: &'a mut [i32],
+    /// Ragged prefix-sum row offsets `[B + 1]`: example `b` owns rows
+    /// `row_offsets[b] .. row_offsets[b+1]` of the live `x` prefix
+    /// (ragged path only; the padded path leaves it untouched).
+    pub row_offsets: &'a mut [i32],
 }
 
 /// One `(batch, seq)` bucket's reusable scratch slab. Created on a
@@ -266,7 +288,8 @@ impl ForwardArena {
         let (topk_scores, _s) = s.split_at_mut(p.topk_scores);
         let si = self.i32s.as_mut_slice();
         let (positions, si) = si.split_at_mut(p.positions);
-        let (topk_order, _si) = si.split_at_mut(p.topk_order);
+        let (topk_order, si) = si.split_at_mut(p.topk_order);
+        let (row_offsets, _si) = si.split_at_mut(p.row_offsets);
         Regions {
             x,
             mask,
@@ -286,6 +309,7 @@ impl ForwardArena {
             topk_scores,
             positions,
             topk_order,
+            row_offsets,
         }
     }
 
@@ -370,9 +394,11 @@ mod tests {
         .iter()
         .sum();
         assert_eq!(total, f32_len);
-        assert_eq!(r.positions.len() + r.topk_order.len(), i32_len);
+        assert_eq!(r.positions.len() + r.topk_order.len() + r.row_offsets.len(), i32_len);
         assert_eq!(r.x.len(), 3 * 16 * 8);
         assert_eq!(r.attn_probs.len(), 2 * 16);
+        // Ragged prefix-sum offsets: one entry per example plus the total.
+        assert_eq!(r.row_offsets.len(), 3 + 1);
     }
 
     #[test]

@@ -136,6 +136,13 @@ pub struct MemoryStats {
     /// Instruction set the kernels dispatched to ("scalar" / "avx2+fma");
     /// empty when the backend does not report one.
     pub isa: &'static str,
+    /// Word-vector·layer counts the examples themselves demanded (each at
+    /// its own adaptive width) since load — token counts proxy FLOPs.
+    pub tokens_kept: u64,
+    /// Ghost rows a rectangular batch-max execution adds on top of
+    /// `tokens_kept`: waste the ragged path eliminates (or the padded
+    /// path incurs). `eliminated_waste_ratio = tokens_ghost / tokens_kept`.
+    pub tokens_ghost: u64,
 }
 
 /// One variant loaded on one backend worker: executes rectangular

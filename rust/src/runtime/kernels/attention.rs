@@ -157,7 +157,7 @@ pub fn masked_attention(
             for a in 0..heads {
                 head_sig.fill(0.0);
                 let off = a * d;
-                attend_one(q, k, v, mask, b, a, n, h, d, ctx_ex, h, off, head_sig, probs);
+                attend_one(q, k, v, mask, b * n, a, n, h, d, ctx_ex, h, off, head_sig, probs);
                 for (sv, &pv) in sig[b * n..(b + 1) * n].iter_mut().zip(head_sig.iter()) {
                     *sv += pv;
                 }
@@ -196,7 +196,7 @@ pub fn masked_attention(
             let (b, a) = (task / heads, task % heads);
             let ctx_part = unsafe { ctx_shards.slice(task * nd, nd) };
             let sig_part = unsafe { sig_shards.slice(task * n, n) };
-            attend_one(q, k, v, mask, b, a, n, h, d, ctx_part, d, 0, sig_part, probs);
+            attend_one(q, k, v, mask, b * n, a, n, h, d, ctx_part, d, 0, sig_part, probs);
         }
     });
 
@@ -205,6 +205,178 @@ pub fn masked_attention(
     let ctx_heads = &scratch.ctx_heads[..tasks * nd];
     let sig_heads = &scratch.sig_heads[..tasks * n];
     merge_head_slabs(ctx_heads, sig_heads, batch, n, heads, d, ctx, sig);
+}
+
+/// Ragged masked attention: the same kernel over a row-offset ragged
+/// batch. Example `b` owns absolute rows `offsets[b] .. offsets[b+1]` of
+/// `q`/`k`/`v`/`mask`/`ctx`/`sig` (see
+/// [`RaggedRows`](super::gemm::RaggedRows)); its attention runs over its
+/// own `n_b` rows only, so eliminated word-vectors cost nothing — the
+/// task list is per-example `(row-range, head)` pairs and no task ever
+/// touches another example's (or a ghost) row.
+///
+/// Determinism contract: identical to [`masked_attention`] — tasks write
+/// private slabs at prefix-sum offsets (`Σ` over preceding `(example,
+/// head)` pairs of `n_b·d`), the merge interleaves them in ascending
+/// `(example, head)` order, and the serial path folds in the same
+/// association. When every `n_b` equals `n` the slab offsets, chunking
+/// and fold order degenerate to exactly the rectangular driver's, so a
+/// uniform-width ragged call is **bit-identical** to [`masked_attention`]
+/// on the same rows.
+///
+/// Scratch capacity (asserted): serial — `sig_heads`/`probs` at least
+/// `max_b n_b`; pooled — `ctx_heads >= total_rows * heads * d`,
+/// `sig_heads >= total_rows * heads`, `probs >= chunks * max_b n_b`. The
+/// rectangular arena regions (sized at `batch * seq`) are always enough,
+/// since `total_rows <= batch * seq`.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_attention_ragged(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    offsets: &[i32],
+    heads: usize,
+    d: usize,
+    exec: &KernelExec,
+    scratch: AttnScratch<'_>,
+    ctx: &mut [f32],
+    sig: &mut [f32],
+) {
+    let h = heads * d;
+    assert!(offsets.len() >= 2, "ragged attention: offsets needs batch + 1 entries");
+    assert_eq!(offsets[0], 0, "ragged attention: offsets must start at 0");
+    let batch = offsets.len() - 1;
+    let rows = *offsets.last().unwrap() as usize;
+    assert_eq!(q.len(), rows * h, "ragged attention: q is not [total_rows, h]");
+    assert_eq!(k.len(), rows * h, "ragged attention: k is not [total_rows, h]");
+    assert_eq!(v.len(), rows * h, "ragged attention: v is not [total_rows, h]");
+    assert_eq!(mask.len(), rows, "ragged attention: mask is not [total_rows]");
+    assert_eq!(ctx.len(), rows * h, "ragged attention: ctx is not [total_rows, h]");
+    assert_eq!(sig.len(), rows, "ragged attention: sig is not [total_rows]");
+    if rows == 0 {
+        return;
+    }
+    let max_n = (0..batch)
+        .map(|b| (offsets[b + 1] - offsets[b]) as usize)
+        .max()
+        .unwrap_or(0);
+
+    let tasks = batch * heads;
+    let threads =
+        exec.threads_for_work(tasks, super::ragged_attention_flops(offsets, heads, d));
+    if threads <= 1 {
+        assert!(scratch.probs.len() >= max_n, "ragged attention scratch: probs < max width");
+        assert!(
+            scratch.sig_heads.len() >= max_n,
+            "ragged attention scratch: sig_heads < max width"
+        );
+        ctx.fill(0.0);
+        sig.fill(0.0);
+        let probs = &mut scratch.probs[..max_n];
+        let head_sig = &mut scratch.sig_heads[..max_n];
+        for b in 0..batch {
+            let base = offsets[b] as usize;
+            let n_b = offsets[b + 1] as usize - base;
+            if n_b == 0 {
+                continue;
+            }
+            let ctx_ex = &mut ctx[base * h..(base + n_b) * h];
+            for a in 0..heads {
+                head_sig[..n_b].fill(0.0);
+                let off = a * d;
+                attend_one(
+                    q,
+                    k,
+                    v,
+                    mask,
+                    base,
+                    a,
+                    n_b,
+                    h,
+                    d,
+                    ctx_ex,
+                    h,
+                    off,
+                    &mut head_sig[..n_b],
+                    &mut probs[..n_b],
+                );
+                for (sv, &pv) in sig[base..base + n_b].iter_mut().zip(head_sig.iter()) {
+                    *sv += pv;
+                }
+            }
+        }
+        return;
+    }
+
+    // Pooled path: task t = b*heads + a owns a private [n_b, d] context
+    // slab and [n_b] significance partial at the ragged prefix-sum offset
+    // (offsets[b]*heads + a*n_b) — pairwise disjoint across tasks, and
+    // equal to the rectangular task*n_b*d layout when widths are uniform.
+    let per = tasks.div_ceil(threads);
+    let chunks = tasks.div_ceil(per);
+    assert!(
+        scratch.ctx_heads.len() >= rows * h,
+        "ragged attention scratch: ctx_heads too small"
+    );
+    assert!(
+        scratch.sig_heads.len() >= rows * heads,
+        "ragged attention scratch: sig_heads too small"
+    );
+    assert!(
+        scratch.probs.len() >= chunks * max_n,
+        "ragged attention scratch: probs < chunks * max width"
+    );
+    let ctx_heads = &mut scratch.ctx_heads[..rows * h];
+    let sig_heads = &mut scratch.sig_heads[..rows * heads];
+    ctx_heads.fill(0.0);
+    sig_heads.fill(0.0);
+    let ctx_shards = Shards::new(ctx_heads);
+    let sig_shards = Shards::new(sig_heads);
+    let probs_shards = Shards::new(&mut scratch.probs[..chunks * max_n]);
+    exec.pool().run(chunks, &|t| {
+        let t0 = t * per;
+        let t1 = ((t + 1) * per).min(tasks);
+        // SAFETY: chunk t exclusively owns tasks [t0, t1) — ragged slab
+        // ranges are pairwise disjoint across tasks — and probs lane t.
+        let probs = unsafe { probs_shards.slice(t * max_n, max_n) };
+        for task in t0..t1 {
+            let (b, a) = (task / heads, task % heads);
+            let base = offsets[b] as usize;
+            let n_b = offsets[b + 1] as usize - base;
+            if n_b == 0 {
+                continue;
+            }
+            let slab = base * heads + a * n_b;
+            let ctx_part = unsafe { ctx_shards.slice(slab * d, n_b * d) };
+            let sig_part = unsafe { sig_shards.slice(slab, n_b) };
+            let probs_b = &mut probs[..n_b];
+            attend_one(q, k, v, mask, base, a, n_b, h, d, ctx_part, d, 0, sig_part, probs_b);
+        }
+    });
+
+    // Serial merge in fixed ascending (example, head) order — the ragged
+    // counterpart of `merge_head_slabs`.
+    let ctx_heads = &scratch.ctx_heads[..rows * h];
+    let sig_heads = &scratch.sig_heads[..rows * heads];
+    sig.fill(0.0);
+    for b in 0..batch {
+        let base = offsets[b] as usize;
+        let n_b = offsets[b + 1] as usize - base;
+        for a in 0..heads {
+            let slab = base * heads + a * n_b;
+            let part = &ctx_heads[slab * d..(slab + n_b) * d];
+            let off = a * d;
+            for i in 0..n_b {
+                ctx[(base + i) * h + off..(base + i) * h + off + d]
+                    .copy_from_slice(&part[i * d..(i + 1) * d]);
+            }
+            let spart = &sig_heads[slab..slab + n_b];
+            for (sv, &pv) in sig[base..base + n_b].iter_mut().zip(spart) {
+                *sv += pv;
+            }
+        }
+    }
 }
 
 /// The fixed-order merge shared by the pooled and scoped drivers:
@@ -288,7 +460,22 @@ pub fn masked_attention_scoped(
             for a in 0..heads {
                 head_sig.fill(0.0);
                 let off = a * d;
-                attend_one(q, k, v, mask, b, a, n, h, d, ctx_ex, h, off, &mut head_sig, &mut probs);
+                attend_one(
+                    q,
+                    k,
+                    v,
+                    mask,
+                    b * n,
+                    a,
+                    n,
+                    h,
+                    d,
+                    ctx_ex,
+                    h,
+                    off,
+                    &mut head_sig,
+                    &mut probs,
+                );
                 for (sv, &pv) in sig[b * n..(b + 1) * n].iter_mut().zip(head_sig.iter()) {
                     *sv += pv;
                 }
@@ -302,7 +489,7 @@ pub fn masked_attention_scoped(
     let mut sig_heads = vec![0f32; tasks * n];
     let run_task = |t: usize, ctx_part: &mut [f32], sig_part: &mut [f32], probs: &mut [f32]| {
         let (b, a) = (t / heads, t % heads);
-        attend_one(q, k, v, mask, b, a, n, h, d, ctx_part, d, 0, sig_part, probs);
+        attend_one(q, k, v, mask, b * n, a, n, h, d, ctx_part, d, 0, sig_part, probs);
     };
     let ranges = task_ranges(tasks, threads);
     super::note_spawns(ranges.len() as u64);
@@ -330,19 +517,22 @@ pub fn masked_attention_scoped(
 }
 
 /// One `(example, head)` task: softmax over the example's keys for every
-/// query row. The head's context goes to `ctx_out` — `n` rows of
-/// `ctx_stride` floats, this head's `d`-wide stripe starting at `ctx_off`
-/// (a private `[n, d]` slab has stride `d`, offset 0; in-place writing
-/// into a full `[n, h]` block has stride `h`, offset `a * d`).
-/// Significance column sums are **accumulated** into `sig_part` (`[n]`,
-/// caller-zeroed); `probs` is an `[n]` scratch row.
+/// query row. The example's rows start at absolute row `base` of
+/// `q`/`k`/`v`/`mask` — `b * n` for a rectangular batch, the example's
+/// ragged row offset for [`masked_attention_ragged`] — and span `n` rows.
+/// The head's context goes to `ctx_out` — `n` rows of `ctx_stride`
+/// floats, this head's `d`-wide stripe starting at `ctx_off` (a private
+/// `[n, d]` slab has stride `d`, offset 0; in-place writing into a full
+/// `[n, h]` block has stride `h`, offset `a * d`). Significance column
+/// sums are **accumulated** into `sig_part` (`[n]`, caller-zeroed);
+/// `probs` is an `[n]` scratch row.
 #[allow(clippy::too_many_arguments)]
 fn attend_one(
     q: &[f32],
     k: &[f32],
     v: &[f32],
     mask: &[f32],
-    b: usize,
+    base: usize,
     a: usize,
     n: usize,
     h: usize,
@@ -358,12 +548,14 @@ fn attend_one(
         // SAFETY: `simd_active()` checked avx2+fma on this CPU.
         unsafe {
             attend_one_avx2(
-                q, k, v, mask, b, a, n, h, d, ctx_out, ctx_stride, ctx_off, sig_part, probs,
+                q, k, v, mask, base, a, n, h, d, ctx_out, ctx_stride, ctx_off, sig_part, probs,
             )
         };
         return;
     }
-    attend_one_scalar(q, k, v, mask, b, a, n, h, d, ctx_out, ctx_stride, ctx_off, sig_part, probs);
+    attend_one_scalar(
+        q, k, v, mask, base, a, n, h, d, ctx_out, ctx_stride, ctx_off, sig_part, probs,
+    );
 }
 
 /// Scalar task body — the correctness oracle the AVX2 variant is measured
@@ -374,7 +566,7 @@ fn attend_one_scalar(
     k: &[f32],
     v: &[f32],
     mask: &[f32],
-    b: usize,
+    base: usize,
     a: usize,
     n: usize,
     h: usize,
@@ -386,7 +578,6 @@ fn attend_one_scalar(
     probs: &mut [f32],
 ) {
     let scale = 1.0 / (d as f32).sqrt();
-    let base = b * n;
     let off = a * d;
     let emask = &mask[base..base + n];
     for i in 0..n {
@@ -443,7 +634,7 @@ unsafe fn attend_one_avx2(
     k: &[f32],
     v: &[f32],
     mask: &[f32],
-    b: usize,
+    base: usize,
     a: usize,
     n: usize,
     h: usize,
@@ -458,7 +649,6 @@ unsafe fn attend_one_avx2(
     use std::arch::x86_64::*;
 
     let scale = 1.0 / (d as f32).sqrt();
-    let base = b * n;
     let off = a * d;
     let emask = &mask[base..base + n];
     let dv = d - d % 8;

@@ -662,6 +662,110 @@ impl PackedLinear {
             PackedLinear::Int8(g) => g.matmul_bias_tanh(x, n, bias, exec, out),
         }
     }
+
+    /// Ragged driver: `out = x @ w + bias` over the **concatenated kept
+    /// rows** of a ragged batch — one GEMM per projection, whatever the
+    /// per-example widths. The packed microkernels are oblivious to
+    /// example boundaries (rows are data-parallel), so the whole ragged
+    /// batch runs as a single `[Σ kept_b, k]` GEMM: elimination shrinks
+    /// the GEMM's *row count exactly*, and a ragged call is bit-identical
+    /// to the padded call on the same row content (same mc chunking over
+    /// the same total row count).
+    pub fn matmul_bias_ragged(
+        &self,
+        x: RaggedRows<'_>,
+        bias: &[f32],
+        exec: &KernelExec,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.width(), self.k(), "ragged matmul: row width != k");
+        self.matmul_bias(x.data(), x.total_rows(), bias, exec, out);
+    }
+
+    /// Ragged driver with the fused GELU epilogue — the FFN's first half
+    /// over concatenated kept rows.
+    pub fn matmul_bias_gelu_ragged(
+        &self,
+        x: RaggedRows<'_>,
+        bias: &[f32],
+        exec: &KernelExec,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.width(), self.k(), "ragged matmul: row width != k");
+        self.matmul_bias_gelu(x.data(), x.total_rows(), bias, exec, out);
+    }
+}
+
+/// Row-offset ragged view over a batch of per-example row blocks: one
+/// contiguous `[total_rows, width]` buffer plus `examples + 1` prefix-sum
+/// row offsets — example `b` owns rows `offsets[b] .. offsets[b+1]`.
+///
+/// This is the activation layout of the native backend's ragged execution
+/// path (see `docs/ARCHITECTURE.md` § "Ragged execution"): after each
+/// extract layer every example is compacted to its *own* kept width, so
+/// `total_rows = Σ kept_b` and the GEMM/attention work is exactly the
+/// tokens kept — no ghost rows padded up to a per-batch maximum.
+///
+/// Offsets are `i32` (the arena's integer slab element) — `total_rows` is
+/// bounded by `batch × seq ≤ 64 × 512`, far inside range.
+#[derive(Clone, Copy)]
+pub struct RaggedRows<'a> {
+    data: &'a [f32],
+    offsets: &'a [i32],
+    width: usize,
+}
+
+impl<'a> RaggedRows<'a> {
+    /// View `data` as `offsets.len() - 1` examples of `width`-wide rows.
+    /// Panics unless offsets start at 0, are non-decreasing, and
+    /// `data.len() == offsets.last() * width`.
+    pub fn new(data: &'a [f32], offsets: &'a [i32], width: usize) -> RaggedRows<'a> {
+        assert!(offsets.len() >= 2, "ragged: offsets needs >= 2 entries (batch + 1)");
+        assert_eq!(offsets[0], 0, "ragged: offsets must start at 0");
+        assert!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "ragged: offsets must be non-decreasing"
+        );
+        let total = *offsets.last().unwrap() as usize;
+        assert_eq!(data.len(), total * width, "ragged: data is not [total_rows, width]");
+        RaggedRows { data, offsets, width }
+    }
+
+    /// Number of examples (`offsets.len() - 1`).
+    pub fn examples(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total concatenated rows (`Σ kept_b` — the ragged GEMM's `n`).
+    pub fn total_rows(&self) -> usize {
+        *self.offsets.last().unwrap() as usize
+    }
+
+    /// Row width (the GEMM's `k`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Row range of example `b`.
+    pub fn rows(&self, b: usize) -> std::ops::Range<usize> {
+        self.offsets[b] as usize..self.offsets[b + 1] as usize
+    }
+
+    /// Example `b`'s rows as a contiguous `[kept_b, width]` slice.
+    pub fn example(&self, b: usize) -> &'a [f32] {
+        let r = self.rows(b);
+        &self.data[r.start * self.width..r.end * self.width]
+    }
+
+    /// The whole concatenated `[total_rows, width]` buffer.
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// The prefix-sum row-offset table (`examples + 1` entries).
+    pub fn offsets(&self) -> &'a [i32] {
+        self.offsets
+    }
 }
 
 /// The naive reference `x [n, k] @ w [k, m] + b [m]` (row-major) — the

@@ -163,6 +163,17 @@ pub struct KernelConfig {
     /// property tests set to keep exercising the parallel drivers on
     /// deliberately tiny shapes.
     pub min_parallel_flops: u64,
+    /// Ragged per-example batch execution (default **on**). When set, the
+    /// native forward compacts every example to its *own* demanded width
+    /// at each extract layer (row-offset ragged layout, see
+    /// `docs/ARCHITECTURE.md` § "Ragged execution") instead of executing
+    /// the whole batch at the per-batch maximum width — compute equals
+    /// tokens kept. Under a fixed retention schedule (no adaptive
+    /// threshold) all widths coincide and the ragged path is bit-identical
+    /// to the padded one; under an active threshold each example's result
+    /// equals a batch-of-one padded run of that example. `false` restores
+    /// the padded batch-max oracle (`--ragged off`).
+    pub ragged: bool,
 }
 
 impl Default for KernelConfig {
@@ -173,6 +184,7 @@ impl Default for KernelConfig {
             mc: 64,
             precision: Precision::F32,
             min_parallel_flops: 250_000,
+            ragged: true,
         }
     }
 }
@@ -206,6 +218,13 @@ impl KernelConfig {
         {
             c.min_parallel_flops = f;
         }
+        if let Ok(v) = std::env::var("POWERBERT_KERNEL_RAGGED") {
+            match v.trim().to_ascii_lowercase().as_str() {
+                "0" | "off" | "false" | "no" => c.ragged = false,
+                "1" | "on" | "true" | "yes" => c.ragged = true,
+                _ => {}
+            }
+        }
         c
     }
 
@@ -225,6 +244,13 @@ impl KernelConfig {
     /// benches (`0` = always parallelize).
     pub fn with_min_parallel_flops(mut self, flops: u64) -> KernelConfig {
         self.min_parallel_flops = flops;
+        self
+    }
+
+    /// Explicit ragged-execution toggle, for tests, benches and the
+    /// `--ragged on|off` CLI flag (`true` is the default).
+    pub fn with_ragged(mut self, ragged: bool) -> KernelConfig {
+        self.ragged = ragged;
         self
     }
 
@@ -355,6 +381,19 @@ pub fn gemm_flops(n: usize, k: usize, m: usize) -> u64 {
 #[inline]
 pub fn attention_flops(batch: usize, heads: usize, n: usize, d: usize) -> u64 {
     4 * batch as u64 * heads as u64 * (n as u64 * n as u64) * d as u64
+}
+
+/// [`attention_flops`] for a ragged batch: per-example widths `n_b` come
+/// from the row-offset table, so the estimate is `Σ_b 4·heads·n_b²·d` —
+/// the exact work the ragged driver performs (no ghost rows).
+#[inline]
+pub fn ragged_attention_flops(offsets: &[i32], heads: usize, d: usize) -> u64 {
+    let mut total = 0u64;
+    for w in offsets.windows(2) {
+        let n_b = (w[1] - w[0]) as u64;
+        total += n_b * n_b;
+    }
+    4 * heads as u64 * total * d as u64
 }
 
 /// Cumulative OS threads spawned by the kernel layer (pool workers at

@@ -43,6 +43,23 @@
 //!   compacted in place, so the arena's live region shrinks layer by
 //!   layer exactly as elimination does.
 //!
+//! # Ragged per-example execution
+//!
+//! Two forward paths share the arena and the kernels:
+//!
+//! * [`NativeModel::forward_batch`] — the **padded oracle**: every extract
+//!   layer keeps one width for the whole batch (under an adaptive
+//!   threshold, the batch max of the per-example demanded widths), so the
+//!   batch stays rectangular. Bit-exact, golden-pinned, selectable with
+//!   `--ragged off`.
+//! * `forward_batch_ragged` — the **default**: each example compacts to
+//!   its *own* demanded width at every extract layer, held in a
+//!   row-offset ragged layout, so GEMM rows and attention tasks equal
+//!   Σ kept_b instead of batch · max_b kept_b. Under a fixed schedule the
+//!   two paths are bit-identical (`tests/ragged.rs`); under an active
+//!   threshold the ragged path does strictly less work on mixed-demand
+//!   batches (`benches/native.rs::bench_ragged`).
+//!
 //! See `benches/native.rs` for the measured kernel, dispatch and
 //! allocation numbers, and `docs/ARCHITECTURE.md` for the cost model and
 //! the per-bucket peak-bytes formula.
@@ -58,8 +75,8 @@ use super::backend::{CellExecutor, CellPlan, ExecOutput, LoadedModel, MemoryStat
 use super::engine::ModelArtifact;
 use super::kernels::{
     active_isa,
-    attention::{masked_attention, AttnScratch},
-    gemm::PackedLinear,
+    attention::{masked_attention, masked_attention_ragged, AttnScratch},
+    gemm::{PackedLinear, RaggedRows},
     layer_norm, KernelConfig, KernelExec,
 };
 use crate::tokenizer::PAD_ID;
@@ -218,6 +235,15 @@ pub struct NativeModel {
     arena_peak: AtomicU64,
     /// Arenas materialized (≈ distinct buckets served).
     arenas_planned: AtomicU64,
+    /// Word-vector·layer counts the examples themselves demanded (each
+    /// example at its own width) vs the **ghost** rows a rectangular
+    /// batch-max execution adds on top. Token counts proxy FLOPs (the
+    /// per-row layer cost is width-independent to first order);
+    /// `eliminated_waste_ratio = ghost / kept` in the worker stats. Both
+    /// paths account identically, so the ratio reports the waste the
+    /// ragged path eliminates (or the padded path incurs).
+    tokens_kept: AtomicU64,
+    tokens_ghost: AtomicU64,
 }
 
 impl NativeModel {
@@ -373,6 +399,8 @@ impl NativeModel {
             arenas: Mutex::new(HashMap::new()),
             arena_peak: AtomicU64::new(0),
             arenas_planned: AtomicU64::new(0),
+            tokens_kept: AtomicU64::new(0),
+            tokens_ghost: AtomicU64::new(0),
         })
     }
 
@@ -428,7 +456,9 @@ impl NativeModel {
     /// entry point: after a `(batch, seq)` bucket's first call (which
     /// plans and allocates its arena) this performs zero heap allocations,
     /// provided `logits_out` has capacity (`tests/alloc_steady_state.rs`
-    /// pins this with a counting allocator).
+    /// pins this with a counting allocator, on both execution paths).
+    /// Dispatches to the ragged path unless the kernel config says
+    /// `--ragged off`.
     pub fn forward_into(
         &self,
         tokens: &[i32],
@@ -437,8 +467,91 @@ impl NativeModel {
         seq: usize,
         logits_out: &mut Vec<f32>,
     ) -> Result<()> {
-        self.forward_batch(tokens, segments, batch, seq, logits_out, None, None)?;
+        if self.exec.config().ragged {
+            self.forward_batch_ragged(tokens, segments, batch, seq, logits_out, None, None, None)?;
+        } else {
+            self.forward_batch(tokens, segments, batch, seq, logits_out, None, None)?;
+        }
         Ok(())
+    }
+
+    /// Shape and id validation shared by both forward paths. Every
+    /// fallible step happens here, before the arena checkout, so an error
+    /// can never strand a bucket's slab outside the cache.
+    fn validate_call(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<()> {
+        if seq > self.max_pos {
+            bail!("seq {seq} exceeds position table {}", self.max_pos);
+        }
+        if tokens.len() != batch * seq || segments.len() != batch * seq {
+            bail!("native forward: expected {batch}x{seq} tokens, got {}", tokens.len());
+        }
+        for (&tok, &seg) in tokens.iter().zip(segments.iter()) {
+            if tok < 0 || tok as usize >= self.vocab {
+                bail!("token id {tok} outside vocab of {}", self.vocab);
+            }
+            if seg < 0 || seg as usize >= self.type_vocab {
+                bail!("segment id {seg} outside type vocab of {}", self.type_vocab);
+            }
+        }
+        Ok(())
+    }
+
+    /// Embedding lookup + mask + original positions + embedding LayerNorm,
+    /// identical for both execution paths (the ragged layout starts
+    /// uniform — PAD rows included — and only diverges from the padded one
+    /// at the first extract layer). Arena regions arrive dirty: every row
+    /// is fully written here (the factorized path zeroes before
+    /// accumulating).
+    fn embed(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        batch: usize,
+        seq: usize,
+        x: &mut [f32],
+        mask: &mut [f32],
+        positions: &mut [i32],
+    ) {
+        let h = self.hidden;
+        for b in 0..batch {
+            for i in 0..seq {
+                let idx = b * seq + i;
+                let tok = tokens[idx];
+                let seg = segments[idx];
+                mask[idx] = if tok == PAD_ID { 0.0 } else { 1.0 };
+                positions[idx] = i as i32;
+                let row = &mut x[idx * h..(idx + 1) * h];
+                match &self.word_proj {
+                    None => {
+                        let wrow = &self.word[tok as usize * h..(tok as usize + 1) * h];
+                        row.copy_from_slice(wrow);
+                    }
+                    Some((e, proj_w)) => {
+                        // Factorized embedding: word[tok] (E) @ proj (E x H).
+                        row.fill(0.0);
+                        let wrow = &self.word[tok as usize * e..(tok as usize + 1) * e];
+                        for (kk, &wv) in wrow.iter().enumerate() {
+                            let prow = &proj_w[kk * h..(kk + 1) * h];
+                            for (c, &pv) in prow.iter().enumerate() {
+                                row[c] += wv * pv;
+                            }
+                        }
+                    }
+                }
+                let prow = &self.pos[i * h..(i + 1) * h];
+                let trow = &self.type_[seg as usize * h..(seg as usize + 1) * h];
+                for c in 0..h {
+                    row[c] += prow[c] + trow[c];
+                }
+            }
+        }
+        layer_norm(&mut x[..batch * seq * h], h, &self.embed_ln_g, &self.embed_ln_b);
     }
 
     /// Forward `batch` examples of `seq` tokens through batch-level kernel
@@ -486,23 +599,7 @@ impl NativeModel {
         let d = h / heads;
         let n_layers = self.layers.len();
         let exec = &*self.exec;
-        if seq > self.max_pos {
-            bail!("seq {seq} exceeds position table {}", self.max_pos);
-        }
-        if tokens.len() != batch * seq || segments.len() != batch * seq {
-            bail!("native forward: expected {batch}x{seq} tokens, got {}", tokens.len());
-        }
-        // Validate ids before checking out the arena: the only fallible
-        // steps happen up front, so an error can never strand a bucket's
-        // slab outside the cache.
-        for (&tok, &seg) in tokens.iter().zip(segments.iter()) {
-            if tok < 0 || tok as usize >= self.vocab {
-                bail!("token id {tok} outside vocab of {}", self.vocab);
-            }
-            if seg < 0 || seg as usize >= self.type_vocab {
-                bail!("segment id {seg} outside type vocab of {}", self.type_vocab);
-            }
-        }
+        self.validate_call(tokens, segments, batch, seq)?;
 
         let trace_base = trace_out.as_deref().map_or(0, |t| t.len());
         if let Some(tr) = trace_out.as_deref_mut() {
@@ -511,6 +608,8 @@ impl NativeModel {
 
         let mut arena = self.checkout_arena(batch, seq);
         let mut tokens_per_example: u64 = 0;
+        let mut kept_acc: u64 = 0;
+        let mut ghost_acc: u64 = 0;
         {
             let super::arena::Regions {
                 x,
@@ -531,44 +630,18 @@ impl NativeModel {
                 topk_scores,
                 positions,
                 topk_order,
+                row_offsets,
             } = arena.regions();
 
-            // Embedding lookup + mask + original positions. Arena regions
-            // arrive dirty: every row is fully written here (the
-            // factorized path zeroes before accumulating).
-            for b in 0..batch {
-                for i in 0..seq {
-                    let idx = b * seq + i;
-                    let tok = tokens[idx];
-                    let seg = segments[idx];
-                    mask[idx] = if tok == PAD_ID { 0.0 } else { 1.0 };
-                    positions[idx] = i as i32;
-                    let row = &mut x[idx * h..(idx + 1) * h];
-                    match &self.word_proj {
-                        None => {
-                            let wrow = &self.word[tok as usize * h..(tok as usize + 1) * h];
-                            row.copy_from_slice(wrow);
-                        }
-                        Some((e, proj_w)) => {
-                            // Factorized embedding: word[tok] (E) @ proj (E x H).
-                            row.fill(0.0);
-                            let wrow = &self.word[tok as usize * e..(tok as usize + 1) * e];
-                            for (kk, &wv) in wrow.iter().enumerate() {
-                                let prow = &proj_w[kk * h..(kk + 1) * h];
-                                for (c, &pv) in prow.iter().enumerate() {
-                                    row[c] += wv * pv;
-                                }
-                            }
-                        }
-                    }
-                    let prow = &self.pos[i * h..(i + 1) * h];
-                    let trow = &self.type_[seg as usize * h..(seg as usize + 1) * h];
-                    for c in 0..h {
-                        row[c] += prow[c] + trow[c];
-                    }
-                }
+            self.embed(tokens, segments, batch, seq, x, mask, positions);
+
+            // The padded path repurposes the (otherwise idle) ragged
+            // offset region as per-example ideal-width scratch: under an
+            // adaptive threshold it tracks what a ragged execution would
+            // have kept, feeding the ghost-row accounting below.
+            for w in row_offsets[..batch].iter_mut() {
+                *w = seq as i32;
             }
-            layer_norm(&mut x[..batch * seq * h], h, &self.embed_ln_g, &self.embed_ln_b);
 
             // Surviving word-vectors per example — uniform across the batch.
             let mut n = seq;
@@ -621,12 +694,18 @@ impl NativeModel {
                         // fully consumed before keep_indices reuses it.
                         let mut demanded = 1usize;
                         for b in 0..batch {
-                            demanded = demanded.max(super::adaptive::demanded_k(
+                            let d_b = super::adaptive::demanded_k(
                                 &sig[b * n..(b + 1) * n],
                                 &mask[b * n..(b + 1) * n],
                                 t,
                                 &mut topk_scores[..],
-                            ));
+                            );
+                            demanded = demanded.max(d_b);
+                            // Per-example ideal width: what this example
+                            // alone would keep (ghost accounting only —
+                            // execution still uses the batch max).
+                            let ideal = (row_offsets[b] as usize).min(keep.min(d_b.max(1)));
+                            row_offsets[b] = ideal as i32;
                         }
                         keep = keep.min(demanded);
                     }
@@ -657,6 +736,18 @@ impl NativeModel {
                 }
                 self.layer_tokens[j].fetch_add((batch * n) as u64, Ordering::Relaxed);
                 tokens_per_example += n as u64;
+                let kept: u64 = if threshold.is_some() {
+                    row_offsets[..batch]
+                        .iter()
+                        .map(|&w| (w as usize).min(n) as u64)
+                        .sum()
+                } else {
+                    // Fixed schedule: every example demands the schedule
+                    // width, so the rectangular batch carries no ghosts.
+                    (batch * n) as u64
+                };
+                kept_acc += kept;
+                ghost_acc += (batch * n) as u64 - kept;
                 if let Some(tr) = trace_out.as_deref_mut() {
                     for b in 0..batch {
                         let row = trace_base + (b * n_layers + j) * seq;
@@ -702,8 +793,253 @@ impl NativeModel {
                 &mut logits_out[base..],
             );
         }
+        self.tokens_kept.fetch_add(kept_acc, Ordering::Relaxed);
+        self.tokens_ghost.fetch_add(ghost_acc, Ordering::Relaxed);
         self.checkin_arena(arena);
         Ok(tokens_per_example)
+    }
+
+    /// Ragged forward: the default path. Where [`Self::forward_batch`]
+    /// executes every example at the batch-max width, this one compacts
+    /// each example to its **own** demanded width at every extract layer,
+    /// holding the batch in a row-offset ragged layout — one contiguous
+    /// `[Σ kept_b, hidden]` prefix of the arena's `x` region plus a
+    /// `batch + 1` prefix-sum offset table (see `docs/ARCHITECTURE.md`
+    /// § "Ragged execution"):
+    ///
+    /// * every projection stays **one** GEMM over the concatenated live
+    ///   rows ([`PackedLinear::matmul_bias_ragged`]) — elimination shrinks
+    ///   the row count to Σ kept_b instead of `batch · max_b kept_b`;
+    /// * attention runs per-(example, head) tasks over the offset table
+    ///   ([`masked_attention_ragged`]) with the fixed ascending merge, so
+    ///   results stay bit-identical for any thread count;
+    /// * survivors compact **in place** in one ascending interleaved
+    ///   pass: `dst = new_off[b] + slot ≤ src = old_off[b] + src_i`
+    ///   always (`new_off[b] ≤ old_off[b]`, kept indices ascend), so no
+    ///   copy clobbers an unread source row, and the offset table
+    ///   rewrites itself in the same pass (`off[b]` is read before it is
+    ///   overwritten).
+    ///
+    /// Under a fixed schedule (no threshold) every example keeps the same
+    /// count and this path is **bit-identical** to the padded oracle —
+    /// same GEMM row blocks, same attention task slabs, same merge order
+    /// (`tests/ragged.rs` pins zero argmax flips on the committed
+    /// goldens). Under an active threshold each example's rows match a
+    /// batch-of-one padded run of that example
+    /// (`tests/prop_kernels.rs`).
+    ///
+    /// When `per_row` is given, appends each example's processed
+    /// word-vector count (Σ over layers of its *own* post-extraction
+    /// width). Returns the batch total of the same.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_batch_ragged(
+        &self,
+        tokens: &[i32],
+        segments: &[i32],
+        batch: usize,
+        seq: usize,
+        logits_out: &mut Vec<f32>,
+        mut trace_out: Option<&mut Vec<i32>>,
+        threshold: Option<f32>,
+        mut per_row: Option<&mut Vec<u64>>,
+    ) -> Result<u64> {
+        let threshold = threshold.filter(|&t| t > 0.0 && t < 1.0);
+        let h = self.hidden;
+        let heads = self.heads;
+        let d = h / heads;
+        let n_layers = self.layers.len();
+        let exec = &*self.exec;
+        self.validate_call(tokens, segments, batch, seq)?;
+
+        let trace_base = trace_out.as_deref().map_or(0, |t| t.len());
+        if let Some(tr) = trace_out.as_deref_mut() {
+            tr.resize(trace_base + batch * n_layers * seq, -1);
+        }
+        let per_row_base = per_row.as_deref().map_or(0, |p| p.len());
+        if let Some(pr) = per_row.as_deref_mut() {
+            pr.resize(per_row_base + batch, 0);
+        }
+
+        let mut arena = self.checkout_arena(batch, seq);
+        let mut tokens_total: u64 = 0;
+        let mut kept_acc: u64 = 0;
+        let mut ghost_acc: u64 = 0;
+        {
+            let super::arena::Regions {
+                x,
+                mask,
+                sig,
+                hx,
+                q,
+                k,
+                v,
+                ctx,
+                proj,
+                a1,
+                attn_ctx,
+                attn_sig,
+                attn_probs,
+                cls,
+                pooled,
+                topk_scores,
+                positions,
+                topk_order,
+                row_offsets,
+            } = arena.regions();
+
+            self.embed(tokens, segments, batch, seq, x, mask, positions);
+            // The layout starts uniform — PAD rows included, exactly like
+            // the padded path — so fixed-schedule runs stay bit-identical
+            // and the per-layer token telemetry matches the oracle.
+            for (b, off) in row_offsets[..batch + 1].iter_mut().enumerate() {
+                *off = (b * seq) as i32;
+            }
+
+            for (j, layer) in self.layers.iter().enumerate() {
+                let total = row_offsets[batch] as usize;
+                let rh = total * h;
+                // --- attention half over the concatenated live rows.
+                hx[..rh].copy_from_slice(&x[..rh]);
+                layer_norm(&mut hx[..rh], h, &layer.ln1_g, &layer.ln1_b);
+                let hx_r = RaggedRows::new(&hx[..rh], &row_offsets[..batch + 1], h);
+                layer.wq.matmul_bias_ragged(hx_r, &layer.bq, exec, &mut q[..rh]);
+                layer.wk.matmul_bias_ragged(hx_r, &layer.bk, exec, &mut k[..rh]);
+                layer.wv.matmul_bias_ragged(hx_r, &layer.bv, exec, &mut v[..rh]);
+
+                let scratch = AttnScratch {
+                    ctx_heads: &mut attn_ctx[..],
+                    sig_heads: &mut attn_sig[..],
+                    probs: &mut attn_probs[..],
+                };
+                masked_attention_ragged(
+                    &q[..rh],
+                    &k[..rh],
+                    &v[..rh],
+                    &mask[..total],
+                    &row_offsets[..batch + 1],
+                    heads,
+                    d,
+                    exec,
+                    scratch,
+                    &mut ctx[..rh],
+                    &mut sig[..total],
+                );
+                let ctx_r = RaggedRows::new(&ctx[..rh], &row_offsets[..batch + 1], h);
+                layer.wo.matmul_bias_ragged(ctx_r, &layer.bo, exec, &mut proj[..rh]);
+                for (xv, pv) in x[..rh].iter_mut().zip(proj[..rh].iter()) {
+                    *xv += pv;
+                }
+
+                // --- extract layer, per-example widths: one ascending
+                // interleaved pass compacts survivors and rewrites the
+                // offset table in place.
+                let schedule_keep = self.retention.as_ref().and_then(|r| r.get(j)).copied();
+                let mut dst_base = 0usize;
+                let mut max_width = 0usize;
+                for b in 0..batch {
+                    let src_base = row_offsets[b] as usize;
+                    let n_b = row_offsets[b + 1] as usize - src_base;
+                    let mut keep_b = n_b;
+                    if let Some(keep) = schedule_keep {
+                        let mut want = keep.max(1);
+                        if let Some(t) = threshold {
+                            let d_b = super::adaptive::demanded_k(
+                                &sig[src_base..src_base + n_b],
+                                &mask[src_base..src_base + n_b],
+                                t,
+                                &mut topk_scores[..],
+                            );
+                            want = want.min(d_b.max(1));
+                        }
+                        keep_b = want.min(n_b);
+                    }
+                    if keep_b < n_b {
+                        let kept = keep_indices(
+                            &sig[src_base..src_base + n_b],
+                            &mask[src_base..src_base + n_b],
+                            keep_b,
+                            &mut topk_scores[..],
+                            &mut topk_order[..],
+                        );
+                        for (slot, &src_i) in kept.iter().enumerate() {
+                            let dst = dst_base + slot;
+                            let src = src_base + src_i as usize;
+                            if dst != src {
+                                x.copy_within(src * h..(src + 1) * h, dst * h);
+                                mask[dst] = mask[src];
+                                positions[dst] = positions[src];
+                            }
+                        }
+                    } else if dst_base != src_base {
+                        // This example keeps all its rows but earlier
+                        // examples shrank: shift the whole block left.
+                        x.copy_within(src_base * h..(src_base + n_b) * h, dst_base * h);
+                        mask.copy_within(src_base..src_base + n_b, dst_base);
+                        positions.copy_within(src_base..src_base + n_b, dst_base);
+                    }
+                    row_offsets[b] = dst_base as i32;
+                    if let Some(tr) = trace_out.as_deref_mut() {
+                        let row = trace_base + (b * n_layers + j) * seq;
+                        tr[row..row + keep_b]
+                            .copy_from_slice(&positions[dst_base..dst_base + keep_b]);
+                    }
+                    if let Some(pr) = per_row.as_deref_mut() {
+                        pr[per_row_base + b] += keep_b as u64;
+                    }
+                    dst_base += keep_b;
+                    max_width = max_width.max(keep_b);
+                }
+                row_offsets[batch] = dst_base as i32;
+                self.layer_tokens[j].fetch_add(dst_base as u64, Ordering::Relaxed);
+                tokens_total += dst_base as u64;
+                kept_acc += dst_base as u64;
+                ghost_acc += (batch * max_width) as u64 - dst_base as u64;
+
+                // --- FFN half over the (possibly narrower) live rows.
+                let total = row_offsets[batch] as usize;
+                let rh = total * h;
+                hx[..rh].copy_from_slice(&x[..rh]);
+                layer_norm(&mut hx[..rh], h, &layer.ln2_g, &layer.ln2_b);
+                let rf = total * layer.ffn_size;
+                let hx_r = RaggedRows::new(&hx[..rh], &row_offsets[..batch + 1], h);
+                layer.w1.matmul_bias_gelu_ragged(hx_r, &layer.b1, exec, &mut a1[..rf]);
+                let a1_r = RaggedRows::new(&a1[..rf], &row_offsets[..batch + 1], layer.ffn_size);
+                layer.w2.matmul_bias_ragged(a1_r, &layer.b2, exec, &mut proj[..rh]);
+                for (xv, av) in x[..rh].iter_mut().zip(proj[..rh].iter()) {
+                    *xv += av;
+                }
+            }
+
+            // --- pooler + classifier head from each example's CLS vector
+            // (row 0 of its ragged block — pinned there by the extract
+            // layer).
+            let total = row_offsets[batch] as usize;
+            layer_norm(&mut x[..total * h], h, &self.final_g, &self.final_b);
+            for b in 0..batch {
+                let off = row_offsets[b] as usize;
+                cls[b * h..(b + 1) * h].copy_from_slice(&x[off * h..off * h + h]);
+            }
+            self.pooler_w.matmul_bias_tanh(
+                &cls[..batch * h],
+                batch,
+                &self.pooler_b,
+                exec,
+                &mut pooled[..batch * h],
+            );
+            let base = logits_out.len();
+            logits_out.resize(base + batch * self.num_classes, 0.0);
+            self.head_w.matmul_bias(
+                &pooled[..batch * h],
+                batch,
+                &self.head_b,
+                exec,
+                &mut logits_out[base..],
+            );
+        }
+        self.tokens_kept.fetch_add(kept_acc, Ordering::Relaxed);
+        self.tokens_ghost.fetch_add(ghost_acc, Ordering::Relaxed);
+        self.checkin_arena(arena);
+        Ok(tokens_total)
     }
 }
 
@@ -721,24 +1057,39 @@ impl CellExecutor for NativeModel {
             bail!("native execute: expected {batch}x{seq} tokens, got {}", tokens.len());
         }
         let n_layers = self.layers.len();
+        let ragged = self.exec.config().ragged;
         let mut logits = Vec::with_capacity(batch * self.num_classes);
         let mut kept = want_trace.then(|| Vec::with_capacity(batch * n_layers * seq));
         let mut tokens_per_row = Vec::with_capacity(batch);
         let mut r = 0;
         while r < batch {
             let chunk = NATIVE_EXEC_CHUNK.min(batch - r);
-            let per_example = self.forward_batch(
-                &tokens[r * seq..(r + chunk) * seq],
-                &segments[r * seq..(r + chunk) * seq],
-                chunk,
-                seq,
-                &mut logits,
-                kept.as_mut(),
-                threshold,
-            )?;
-            // Uniform within a chunk (the batch-max execution rule), so
-            // every row of the chunk reports the chunk's width sum.
-            tokens_per_row.extend(std::iter::repeat(per_example).take(chunk));
+            if ragged {
+                // The ragged path reports each row's own width sum.
+                self.forward_batch_ragged(
+                    &tokens[r * seq..(r + chunk) * seq],
+                    &segments[r * seq..(r + chunk) * seq],
+                    chunk,
+                    seq,
+                    &mut logits,
+                    kept.as_mut(),
+                    threshold,
+                    Some(&mut tokens_per_row),
+                )?;
+            } else {
+                let per_example = self.forward_batch(
+                    &tokens[r * seq..(r + chunk) * seq],
+                    &segments[r * seq..(r + chunk) * seq],
+                    chunk,
+                    seq,
+                    &mut logits,
+                    kept.as_mut(),
+                    threshold,
+                )?;
+                // Uniform within a chunk (the batch-max execution rule),
+                // so every row of the chunk reports the chunk's width sum.
+                tokens_per_row.extend(std::iter::repeat(per_example).take(chunk));
+            }
             r += chunk;
         }
         Ok(ExecOutput {
@@ -766,6 +1117,8 @@ impl CellExecutor for NativeModel {
             pool_jobs: self.exec.pool().jobs(),
             precision: self.exec.config().precision.as_str(),
             isa: active_isa(),
+            tokens_kept: self.tokens_kept.load(Ordering::Relaxed),
+            tokens_ghost: self.tokens_ghost.load(Ordering::Relaxed),
         })
     }
 }

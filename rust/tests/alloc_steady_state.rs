@@ -1,8 +1,10 @@
 //! Zero-steady-state-allocation regression test for the native forward
 //! pass: after a `(batch, seq)` bucket's first (warmup) call — which plans
 //! and allocates its scratch arena — `NativeModel::forward_into` must not
-//! touch the heap at all. This binary installs the counting allocator and
-//! deliberately contains a single `#[test]`, so no concurrent test can
+//! touch the heap at all, on either execution path (ragged per-example
+//! and the padded batch-max oracle). This binary installs the counting
+//! allocator and deliberately contains a single `#[test]`, so no
+//! concurrent test can
 //! pollute the process-global counters during the measured window.
 
 use std::sync::Arc;
@@ -33,11 +35,18 @@ fn forward_batch_is_allocation_free_after_warmup() {
     // Serial (the serving default) and pooled (2 lanes, mc small enough
     // that the tiny bundle's GEMMs actually split) kernel configs; bert
     // (no elimination) and power-default (extract layers + in-place
-    // compaction) variants. Every combination must go quiet after warmup.
+    // compaction) variants. `KernelConfig::default()` runs the ragged
+    // per-example path (row-offset arenas, ragged survivor compaction);
+    // the explicit `ragged: false` case pins the padded batch-max oracle.
+    // Every combination must go quiet after warmup.
     for (label, kernel) in [
-        ("serial", KernelConfig { threads: 1, kc: 256, mc: 64, ..KernelConfig::default() }),
+        ("serial ragged", KernelConfig { threads: 1, kc: 256, mc: 64, ..KernelConfig::default() }),
         (
-            "pooled x2",
+            "serial padded",
+            KernelConfig { threads: 1, kc: 256, mc: 64, ragged: false, ..KernelConfig::default() },
+        ),
+        (
+            "pooled x2 ragged",
             KernelConfig { threads: 2, kc: 256, mc: 4, min_parallel_flops: 0, ..KernelConfig::default() },
         ),
     ] {

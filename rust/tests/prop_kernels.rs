@@ -8,9 +8,11 @@
 //! between calls. No artifacts required — these run everywhere.
 
 use powerbert::runtime::kernels::attention::{
-    masked_attention, masked_attention_scoped, AttnScratchBuf,
+    masked_attention, masked_attention_ragged, masked_attention_scoped, AttnScratchBuf,
 };
-use powerbert::runtime::kernels::gemm::{matmul_bias_ref, PackedGemm, PackedGemmI8};
+use powerbert::runtime::kernels::gemm::{
+    matmul_bias_ref, PackedGemm, PackedGemmI8, PackedLinear, RaggedRows,
+};
 use powerbert::runtime::kernels::{gelu, KernelConfig, KernelExec};
 use powerbert::testutil::prop::forall;
 use powerbert::util::prng::Rng;
@@ -352,6 +354,166 @@ fn attention_scratch_reuse_leaks_nothing_across_shapes() {
             );
             assert_eq!(ctx_shared, ctx_fresh, "reused scratch leaked into ctx");
             assert_eq!(sig_shared, sig_fresh, "reused scratch leaked into sig");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Ragged execution properties: one ragged call over the concatenated kept
+// rows must match running each example as its own padded batch-of-one —
+// the tentpole's parity contract, over ragged offsets including empty and
+// singleton examples, at every thread count and both precisions.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ragged_gemm_matches_per_example_padded_oracle() {
+    forall("ragged gemm == per-example padded", 32, |rng, size| {
+        let batch = 1 + rng.below(4) as usize;
+        let k = 1 + rng.below(32) as usize;
+        let m = 1 + rng.below(32) as usize;
+        // Per-example kept widths, 0 (fully eliminated) upward.
+        let mut offsets = vec![0i32];
+        for _ in 0..batch {
+            let n_b = rng.below(size as u64 % 7 + 5) as usize;
+            offsets.push(offsets.last().unwrap() + n_b as i32);
+        }
+        let total = *offsets.last().unwrap() as usize;
+        let x = rand_f32(rng, total * k);
+        let w = rand_f32(rng, k * m);
+        let b = rand_f32(rng, m);
+        let cfg = rand_cfg(rng, k);
+        for lin in [
+            PackedLinear::F32(PackedGemm::pack(&w, k, m)),
+            PackedLinear::Int8(PackedGemmI8::pack(&w, k, m)),
+        ] {
+            for threads in [1usize, 2, 4] {
+                let exec = KernelExec::new(cfg.clone().with_threads(threads));
+                let mut got = vec![f32::NAN; total * m];
+                lin.matmul_bias_ragged(RaggedRows::new(&x, &offsets, k), &b, &exec, &mut got);
+                let mut want = vec![f32::NAN; total * m];
+                for e in 0..batch {
+                    let r = offsets[e] as usize..offsets[e + 1] as usize;
+                    if r.is_empty() {
+                        continue;
+                    }
+                    lin.matmul_bias(
+                        &x[r.start * k..r.end * k],
+                        r.len(),
+                        &b,
+                        &exec,
+                        &mut want[r.start * m..r.end * m],
+                    );
+                }
+                for (i, (g, o)) in got.iter().zip(want.iter()).enumerate() {
+                    assert!(
+                        (g - o).abs() <= 1e-5 * (1.0 + o.abs()),
+                        "offsets {offsets:?} ({k},{m}) threads={threads} elem {i}: \
+                         ragged {g} vs padded {o}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn ragged_attention_matches_per_example_padded_oracle() {
+    forall("ragged attention == per-example padded", 24, |rng, size| {
+        let batch = 1 + rng.below(4) as usize;
+        let heads = 1 + rng.below(3) as usize;
+        let d = 1 + rng.below(8) as usize;
+        let h = heads * d;
+        let max_n = 2 + (size % 9);
+        // Widths cover the degenerate shapes elimination produces: empty,
+        // CLS-only singletons, and arbitrary in-between.
+        let mut offsets = vec![0i32];
+        let mut widths = Vec::new();
+        for e in 0..batch {
+            let n_b = match e % 3 {
+                0 => rng.below(max_n as u64 + 1) as usize,
+                1 => 1,
+                _ => 1 + rng.below(max_n as u64) as usize,
+            };
+            widths.push(n_b);
+            offsets.push(offsets.last().unwrap() + n_b as i32);
+        }
+        let total = *offsets.last().unwrap() as usize;
+        let q = rand_f32(rng, total * h);
+        let kk = rand_f32(rng, total * h);
+        let v = rand_f32(rng, total * h);
+        // Random PAD rows (rows kept before the first extract layer can
+        // still be PAD); the leading row of each example stays real (CLS).
+        let mut mask = vec![1f32; total];
+        for mv in mask.iter_mut() {
+            if rng.chance(0.2) {
+                *mv = 0.0;
+            }
+        }
+        for e in 0..batch {
+            if widths[e] > 0 {
+                mask[offsets[e] as usize] = 1.0;
+            }
+        }
+        for threads in [1usize, 2, 4] {
+            let exec = KernelExec::new(
+                KernelConfig::default().with_threads(threads).with_min_parallel_flops(0),
+            );
+            let mut buf = AttnScratchBuf::for_shape(batch, max_n, heads, d, exec.lanes());
+            let mut ctx = vec![f32::NAN; total * h];
+            let mut sig = vec![f32::NAN; total];
+            masked_attention_ragged(
+                &q,
+                &kk,
+                &v,
+                &mask,
+                &offsets,
+                heads,
+                d,
+                &exec,
+                buf.scratch(),
+                &mut ctx,
+                &mut sig,
+            );
+            for e in 0..batch {
+                let r = offsets[e] as usize..offsets[e + 1] as usize;
+                if r.is_empty() {
+                    continue;
+                }
+                let n_b = r.len();
+                let mut fresh = AttnScratchBuf::for_shape(1, n_b, heads, d, exec.lanes());
+                let mut ctx_e = vec![0f32; n_b * h];
+                let mut sig_e = vec![0f32; n_b];
+                masked_attention(
+                    &q[r.start * h..r.end * h],
+                    &kk[r.start * h..r.end * h],
+                    &v[r.start * h..r.end * h],
+                    &mask[r.clone()],
+                    1,
+                    n_b,
+                    heads,
+                    d,
+                    &exec,
+                    fresh.scratch(),
+                    &mut ctx_e,
+                    &mut sig_e,
+                );
+                for (i, (g, o)) in
+                    ctx[r.start * h..r.end * h].iter().zip(ctx_e.iter()).enumerate()
+                {
+                    assert!(
+                        (g - o).abs() <= 1e-5 * (1.0 + o.abs()),
+                        "ctx: widths {widths:?} example {e} threads={threads} elem {i}: \
+                         ragged {g} vs padded {o}"
+                    );
+                }
+                for (i, (g, o)) in sig[r.clone()].iter().zip(sig_e.iter()).enumerate() {
+                    assert!(
+                        (g - o).abs() <= 1e-5 * (1.0 + o.abs()),
+                        "sig: widths {widths:?} example {e} threads={threads} elem {i}: \
+                         ragged {g} vs padded {o}"
+                    );
+                }
+            }
         }
     });
 }

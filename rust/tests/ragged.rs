@@ -1,0 +1,206 @@
+//! Ragged execution end-to-end: the per-example row-offset path must be
+//! indistinguishable from the padded batch-max oracle on the committed
+//! golden bundles. Three contracts, each over both weight precisions:
+//!
+//! 1. **Fixed schedule** — every example keeps the same width at every
+//!    encoder, so the ragged forward degenerates to the padded one and the
+//!    logits are *bit-for-bit* identical (same GEMM calls on the same
+//!    contiguous buffer, same attention task order).
+//! 2. **Active threshold** — a ragged example inside a mixed batch equals
+//!    a padded batch-of-one run of that example: zero argmax flips and
+//!    identical per-row `tokens_processed` telemetry.
+//! 3. **Waste accounting** — fixed-schedule traffic reports zero ghost
+//!    rows; heterogeneous adaptive batches report the rectangular waste
+//!    the ragged path eliminated.
+
+use powerbert::runtime::{
+    default_root, BackendKind, Engine, KernelConfig, Precision, Registry, TestSplit,
+};
+use powerbert::testutil::artifacts_available;
+
+fn registry() -> Option<Registry> {
+    if !artifacts_available() {
+        return None;
+    }
+    Registry::scan(&default_root()).ok()
+}
+
+fn engine(precision: Precision, ragged: bool) -> Engine {
+    let cfg = KernelConfig::default().with_precision(precision).with_ragged(ragged);
+    Engine::with_backend_config(BackendKind::Native, cfg).expect("native engine")
+}
+
+/// Contract 1: with no adaptive threshold every example keeps exactly the
+/// compiled schedule width, so ragged and padded execution are the same
+/// sequence of kernel calls on the same buffers — bit-identical logits,
+/// for both the plain encoder (`bert`) and the eliminating one
+/// (`power-default`), at both precisions.
+#[test]
+fn fixed_schedule_is_bitwise_identical_to_padded() {
+    let Some(reg) = registry() else { return };
+    let mut checked = 0;
+    for precision in [Precision::F32, Precision::Int8] {
+        for ds in reg.datasets.values() {
+            let split = TestSplit::load(&ds.test_npz()).expect("split");
+            let seq = split.seq_len;
+            let n = 16.min(split.n);
+            for vname in ["bert", "power-default"] {
+                let Some(meta) = ds.variant(vname) else { continue };
+                let mut er = engine(precision, true);
+                let mut ep = engine(precision, false);
+                let ragged = er.load(meta).expect("load ragged");
+                let padded = ep.load(meta).expect("load padded");
+                let lr = ragged
+                    .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+                    .expect("ragged infer");
+                let lp = padded
+                    .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+                    .expect("padded infer");
+                assert_eq!(
+                    lr.values, lp.values,
+                    "{}/{vname} [{precision}]: fixed-schedule ragged diverged from padded",
+                    ds.name
+                );
+                // Fixed-schedule telemetry: identical word-vector counts.
+                if ragged.supports_adaptive() {
+                    let (_, pr) = ragged
+                        .infer_adaptive_at(
+                            &split.tokens[..n * seq],
+                            &split.segments[..n * seq],
+                            n,
+                            seq,
+                            None,
+                        )
+                        .expect("ragged telemetry");
+                    let (_, pp) = padded
+                        .infer_adaptive_at(
+                            &split.tokens[..n * seq],
+                            &split.segments[..n * seq],
+                            n,
+                            seq,
+                            None,
+                        )
+                        .expect("padded telemetry");
+                    assert_eq!(
+                        pr, pp,
+                        "{}/{vname} [{precision}]: tokens_processed telemetry diverged",
+                        ds.name
+                    );
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0, "no committed bundles to check");
+}
+
+/// Contract 2: under an active threshold, each example of a mixed ragged
+/// batch must reproduce the padded batch-of-one oracle for that example —
+/// zero argmax flips on the committed goldens and exactly the same
+/// per-row word-vector counts (the demanded widths are a function of the
+/// example's own attention mass, not of its batch neighbours).
+#[test]
+fn adaptive_ragged_batch_matches_padded_batch_of_one_oracle() {
+    let Some(reg) = registry() else { return };
+    let mut checked = 0;
+    for precision in [Precision::F32, Precision::Int8] {
+        for ds in reg.datasets.values() {
+            let Some(meta) = ds.variant("power-default") else { continue };
+            let agg: u64 = meta.retention.as_ref().expect("retention").iter().sum::<usize>() as u64;
+            let split = TestSplit::load(&ds.test_npz()).expect("split");
+            let seq = split.seq_len;
+            let n = 16.min(split.n);
+            let mut er = engine(precision, true);
+            let mut ep = engine(precision, false);
+            let ragged = er.load(meta).expect("load ragged");
+            let padded = ep.load(meta).expect("load padded");
+            for t in [0.6f32, 0.95] {
+                let (lr, pr) = ragged
+                    .infer_adaptive_at(
+                        &split.tokens[..n * seq],
+                        &split.segments[..n * seq],
+                        n,
+                        seq,
+                        Some(t),
+                    )
+                    .expect("ragged batched");
+                let pr = pr.expect("native telemetry");
+                assert_eq!(pr.len(), n);
+                let mut total = 0u64;
+                for i in 0..n {
+                    let toks = &split.tokens[i * seq..(i + 1) * seq];
+                    let segs = &split.segments[i * seq..(i + 1) * seq];
+                    let (lo, po) = padded
+                        .infer_adaptive_at(toks, segs, 1, seq, Some(t))
+                        .expect("padded batch-of-one");
+                    assert_eq!(
+                        lr.argmax(i),
+                        lo.argmax(0),
+                        "{} [{precision}] t={t}: example {i} flipped argmax vs the padded oracle",
+                        ds.name
+                    );
+                    assert_eq!(
+                        pr[i],
+                        po.expect("telemetry")[0],
+                        "{} [{precision}] t={t}: example {i} processed different word-vectors",
+                        ds.name
+                    );
+                    total += pr[i];
+                }
+                assert!(
+                    total <= agg * n as u64,
+                    "{} [{precision}] t={t}: adaptive exceeded the schedule",
+                    ds.name
+                );
+                if t < 0.9 {
+                    assert!(
+                        total < agg * n as u64,
+                        "{} [{precision}] t={t}: aggressive threshold saved nothing",
+                        ds.name
+                    );
+                }
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "no committed power-default bundles");
+}
+
+/// Contract 3: the waste counters behind `eliminated_waste_ratio`. A
+/// ragged worker that only ever ran the fixed schedule has zero ghost
+/// rows (no rectangular waste to eliminate); once a heterogeneous
+/// adaptive batch runs, the ghost counter must record the batch-max rows
+/// the ragged path did *not* execute.
+#[test]
+fn waste_counters_account_eliminated_ghost_rows() {
+    let Some(reg) = registry() else { return };
+    let Some(ds) = reg.dataset("sst2") else { return };
+    let meta = ds.variant("power-default").expect("power-default");
+    let split = TestSplit::load(&ds.test_npz()).expect("split");
+    let seq = split.seq_len;
+    let n = 8.min(split.n);
+    let mut er = engine(Precision::F32, true);
+    let ragged = er.load(meta).expect("load");
+
+    ragged
+        .infer(&split.tokens[..n * seq], &split.segments[..n * seq], n)
+        .expect("fixed infer");
+    let fixed = ragged.memory_stats().expect("native stats");
+    assert!(fixed.tokens_kept > 0, "fixed schedule must count kept word-vectors");
+    assert_eq!(fixed.tokens_ghost, 0, "fixed schedule has no rectangular waste");
+
+    let (_, per_row) = ragged
+        .infer_adaptive_at(&split.tokens[..n * seq], &split.segments[..n * seq], n, seq, Some(0.6))
+        .expect("adaptive infer");
+    let per_row = per_row.expect("telemetry");
+    let adaptive = ragged.memory_stats().expect("native stats");
+    assert!(adaptive.tokens_kept > fixed.tokens_kept, "adaptive batch must add kept rows");
+    // Unequal per-example totals imply at least one encoder ran unequal
+    // widths, i.e. a rectangular execution would have padded ghost rows.
+    if per_row.iter().any(|&p| p != per_row[0]) {
+        assert!(
+            adaptive.tokens_ghost > 0,
+            "heterogeneous batch must record eliminated ghost rows: {per_row:?}"
+        );
+    }
+}
